@@ -1,0 +1,44 @@
+//! Fig. 10 — impact of level-wise quantization (LQ) and adaptive
+//! decomposition (AD) on rate–distortion, against MGARD (uniform
+//! quantization) and SZ.
+//!
+//! Paper expectations: LQ helps most at small bit-rates ([0,1]); AD helps
+//! most at large bit-rates ([1,4]) where it degrades towards SZ; the
+//! combination (MGARD+) dominates both.
+
+use mgardp::bench_util::{bench_fields, bench_scale, eval_point, rd_tolerances, CsvOut};
+use mgardp::compressors::{Compressor, MgardPlus, MgardPlusConfig, Sz, Tolerance};
+use mgardp::decompose::OptFlags;
+
+fn main() {
+    let fields = bench_fields(bench_scale());
+    let mut csv = CsvOut::create("fig10", "dataset,variant,rel_tol,bit_rate,psnr").unwrap();
+    let variants: Vec<(&str, Box<dyn Compressor<f32>>)> = vec![
+        (
+            "MGARD",
+            Box::new(mgardp::compressors::Mgard::new(mgardp::compressors::MgardConfig {
+                flags: OptFlags::all(), // same engine; quantization is what differs
+                ..Default::default()
+            })),
+        ),
+        ("LQ", Box::new(MgardPlus::new(MgardPlusConfig::lq_only()))),
+        ("AD", Box::new(MgardPlus::new(MgardPlusConfig::ad_only()))),
+        ("MGARD+", Box::new(MgardPlus::default())),
+        ("SZ", Box::new(Sz::default())),
+    ];
+    for (ds, fname, data) in &fields {
+        println!("=== {ds}/{fname} ===");
+        println!("{:<8} {:>9} {:>10} {:>9}", "variant", "rel_tol", "bit_rate", "PSNR");
+        for (label, c) in &variants {
+            for &tol in &rd_tolerances() {
+                let p = eval_point(c.as_ref(), data, Tolerance::Rel(tol)).unwrap();
+                println!("{label:<8} {tol:>9.0e} {:>10.4} {:>9.2}", p.bit_rate, p.psnr);
+                csv.row(&format!(
+                    "{ds},{label},{tol:e},{:.5},{:.3}",
+                    p.bit_rate, p.psnr
+                ));
+            }
+        }
+        println!();
+    }
+}

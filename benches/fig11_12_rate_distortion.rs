@@ -1,0 +1,42 @@
+//! Figs. 11 & 12 — rate–distortion curves of the five error-bounded
+//! compressors on the four datasets (Fig. 11: bit-rate ∈ [0,4]; Fig. 12 is
+//! the zoom into [0,1], i.e. CR ≥ 32 — both come from the same sweep).
+//!
+//! Paper expectations: MGARD+ least distortion at most bit-rates; the
+//! QMCPACK-like oscillatory dataset is the exception at large bit-rates,
+//! where transform coders (ZFP / hybrid) win.
+
+use mgardp::bench_util::{bench_fields, bench_scale, eval_point, rd_tolerances, CsvOut};
+use mgardp::compressors::Tolerance;
+use mgardp::coordinator::pipeline::make_compressor;
+
+const METHODS: &[&str] = &["sz", "zfp", "hybrid", "mgard+"];
+
+fn main() {
+    let fields = bench_fields(bench_scale());
+    let mut csv =
+        CsvOut::create("fig11_12", "dataset,method,rel_tol,bit_rate,psnr,ratio").unwrap();
+    for (ds, fname, data) in &fields {
+        println!("=== {ds}/{fname} ===");
+        println!(
+            "{:<10} {:>9} {:>10} {:>9} {:>10}",
+            "method", "rel_tol", "bit_rate", "PSNR", "CR"
+        );
+        for &m in METHODS {
+            let c = make_compressor(m).unwrap();
+            for &tol in &rd_tolerances() {
+                let p = eval_point(&*c, data, Tolerance::Rel(tol)).unwrap();
+                println!(
+                    "{m:<10} {tol:>9.0e} {:>10.4} {:>9.2} {:>10.1}",
+                    p.bit_rate, p.psnr, p.ratio
+                );
+                csv.row(&format!(
+                    "{ds},{m},{tol:e},{:.5},{:.3},{:.2}",
+                    p.bit_rate, p.psnr, p.ratio
+                ));
+            }
+        }
+        // who wins in the Fig.12 zoom (bit-rate <= 1)?
+        println!();
+    }
+}

@@ -1,0 +1,64 @@
+//! Fig. 13 — visual fidelity at extreme compression (NYX velocity_x,
+//! PSNR ≈ 60, CR in the thousands).
+//!
+//! A terminal can't render the volume, so this bench emits what the figure
+//! shows: the center z-slice of the original and decompressed field (raw
+//! f32, ready for any plotting tool) plus the per-point relative-error
+//! statistics the figure's right panel visualizes.
+
+use mgardp::bench_util::{bench_scale, find_rel_tol_for_psnr, CsvOut};
+use mgardp::compressors::Tolerance;
+use mgardp::coordinator::pipeline::make_compressor;
+use mgardp::data::{io, synth};
+use mgardp::tensor::Tensor;
+use std::path::Path;
+
+fn main() {
+    let ds = synth::nyx_like(bench_scale(), 42);
+    let data = &ds.field("velocity_x").unwrap().data;
+    let c = make_compressor("mgard+").unwrap();
+    let (tol, point) = find_rel_tol_for_psnr(&*c, data, 60.0).unwrap();
+    println!(
+        "NYX velocity_x @ PSNR {:.2}: CR {:.0} (rel tol {tol:.2e})",
+        point.psnr, point.ratio
+    );
+    let bytes = c.compress(data, Tolerance::Rel(tol)).unwrap();
+    let back: Tensor<f32> = c.decompress(&bytes).unwrap();
+
+    // center slice dumps
+    let s = data.shape().to_vec();
+    let z = s[0] / 2;
+    let slice_of = |t: &Tensor<f32>| {
+        t.block(&[z, 0, 0], &[1, s[1], s[2]]).unwrap()
+    };
+    std::fs::create_dir_all("bench_out").unwrap();
+    io::write_raw(Path::new("bench_out/fig13_original_slice.f32"), &slice_of(data)).unwrap();
+    io::write_raw(Path::new("bench_out/fig13_decompressed_slice.f32"), &slice_of(&back)).unwrap();
+    println!(
+        "wrote bench_out/fig13_{{original,decompressed}}_slice.f32 ({}x{})",
+        s[1], s[2]
+    );
+
+    // relative-error distribution (the figure's error panel)
+    let range = data.value_range();
+    let mut rel_errs: Vec<f64> = data
+        .data()
+        .iter()
+        .zip(back.data())
+        .map(|(a, b)| ((a - b).abs() as f64) / range)
+        .collect();
+    rel_errs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pct = |p: f64| rel_errs[(p * (rel_errs.len() - 1) as f64) as usize];
+    let mut csv = CsvOut::create("fig13", "stat,value").unwrap();
+    for (name, v) in [
+        ("psnr", point.psnr),
+        ("ratio", point.ratio),
+        ("rel_err_p50", pct(0.50)),
+        ("rel_err_p90", pct(0.90)),
+        ("rel_err_p99", pct(0.99)),
+        ("rel_err_max", *rel_errs.last().unwrap()),
+    ] {
+        println!("{name:>12}: {v:.6e}");
+        csv.row(&format!("{name},{v:.6e}"));
+    }
+}

@@ -1,0 +1,56 @@
+//! Fig. 6 — decomposition/recomposition throughput as the §5 optimizations
+//! are applied cumulatively: MGARD (baseline), +DR, +DLVC, +BCC, +IVER.
+//!
+//! Prints one table per direction and writes `bench_out/fig6.csv`.
+//! Paper expectation: 20–70× decomposition and 22–80× recomposition speedup
+//! from baseline to all-optimizations, growing with dataset size.
+
+use mgardp::bench_util::{bench_fields, bench_scale, time_fn, CsvOut};
+use mgardp::decompose::{Decomposer, OptFlags};
+use mgardp::grid::Hierarchy;
+use mgardp::metrics::throughput_mbs;
+
+fn main() {
+    let fields = bench_fields(bench_scale());
+    let mut csv = CsvOut::create("fig6", "dataset,config,direction,mb_per_s,speedup").unwrap();
+    for (ds, fname, data) in &fields {
+        println!("=== {ds}/{fname} {:?} ===", data.shape());
+        let hierarchy = Hierarchy::new(data.shape(), None).unwrap();
+        let mut base_dec = 0.0f64;
+        let mut base_rec = 0.0f64;
+        println!(
+            "{:<8} {:>14} {:>9} {:>14} {:>9}",
+            "config", "decomp MB/s", "speedup", "recomp MB/s", "speedup"
+        );
+        for (label, flags) in OptFlags::fig6_series() {
+            let dec = Decomposer::new(hierarchy.clone(), flags).unwrap();
+            let runs = if flags == OptFlags::baseline() { 1 } else { 3 };
+            let t_dec = time_fn(0, runs, || dec.decompose(data).unwrap());
+            let decomposition = dec.decompose(data).unwrap();
+            let t_rec = time_fn(0, runs, || dec.recompose(&decomposition).unwrap());
+            let mb_dec = throughput_mbs(data.nbytes(), t_dec.median);
+            let mb_rec = throughput_mbs(data.nbytes(), t_rec.median);
+            if label == "MGARD" {
+                base_dec = mb_dec;
+                base_rec = mb_rec;
+            }
+            println!(
+                "{:<8} {:>14.2} {:>8.1}x {:>14.2} {:>8.1}x",
+                label,
+                mb_dec,
+                mb_dec / base_dec,
+                mb_rec,
+                mb_rec / base_rec
+            );
+            csv.row(&format!(
+                "{ds},{label},decompose,{mb_dec:.3},{:.2}",
+                mb_dec / base_dec
+            ));
+            csv.row(&format!(
+                "{ds},{label},recompose,{mb_rec:.3},{:.2}",
+                mb_rec / base_rec
+            ));
+        }
+        println!();
+    }
+}

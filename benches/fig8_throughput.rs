@@ -1,0 +1,40 @@
+//! Fig. 8 — compression and decompression throughput of the five
+//! error-bounded compressors on the four datasets (rel. tolerance 1e-3).
+//!
+//! Paper expectations: ZFP fastest on both directions; MGARD+ compression
+//! comparable to SZ and far above original MGARD; hybrid ≈ half of SZ's
+//! compression speed.
+
+use mgardp::bench_util::{bench_fields, bench_scale, CsvOut};
+use mgardp::compressors::Tolerance;
+use mgardp::coordinator::pipeline::make_compressor;
+use mgardp::metrics::throughput_mbs;
+use std::time::Instant;
+
+const METHODS: &[&str] = &["sz", "zfp", "hybrid", "mgard-orig", "mgard+"];
+
+fn main() {
+    let fields = bench_fields(bench_scale());
+    let mut csv = CsvOut::create("fig8", "dataset,method,comp_mbs,decomp_mbs,ratio").unwrap();
+    for (ds, fname, data) in &fields {
+        println!("=== {ds}/{fname} {:?} ===", data.shape());
+        println!(
+            "{:<12} {:>12} {:>12} {:>10}",
+            "method", "comp MB/s", "decomp MB/s", "CR"
+        );
+        for &m in METHODS {
+            let c = make_compressor(m).unwrap();
+            let t0 = Instant::now();
+            let bytes = c.compress(data, Tolerance::Rel(1e-3)).unwrap();
+            let comp = throughput_mbs(data.nbytes(), t0.elapsed().as_secs_f64());
+            let t1 = Instant::now();
+            let back = c.decompress(&bytes).unwrap();
+            let decomp = throughput_mbs(data.nbytes(), t1.elapsed().as_secs_f64());
+            assert_eq!(back.len(), data.len());
+            let ratio = data.nbytes() as f64 / bytes.len() as f64;
+            println!("{m:<12} {comp:>12.1} {decomp:>12.1} {ratio:>10.2}");
+            csv.row(&format!("{ds},{m},{comp:.2},{decomp:.2},{ratio:.2}"));
+        }
+        println!();
+    }
+}

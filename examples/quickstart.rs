@@ -1,0 +1,46 @@
+//! Quickstart: compress a scientific field with MGARD+, check the error
+//! bound, and compare against the baselines.
+//!
+//! Run with: `cargo run --release --example quickstart`
+
+use mgardp::compressors::{all_compressors, Tolerance};
+use mgardp::data::synth;
+use mgardp::metrics::{compression_ratio, linf_error, psnr};
+
+fn main() -> anyhow::Result<()> {
+    // A Hurricane-Isabel-like pressure field (synthetic analog).
+    let ds = synth::hurricane_like(0.4, 42);
+    let field = ds.field("P").expect("pressure field");
+    let data = &field.data;
+    println!(
+        "field {} / {}  shape {:?}  ({:.2} MB)",
+        ds.name,
+        field.name,
+        data.shape(),
+        data.nbytes() as f64 / 1e6
+    );
+
+    let rel = 1e-3; // 0.1% of the value range, pointwise guaranteed
+    let tau = rel * data.value_range();
+    println!("requested L∞ bound: {tau:.4} (rel {rel:.0e})\n");
+    println!(
+        "{:<12} {:>10} {:>10} {:>12} {:>10}",
+        "compressor", "CR", "PSNR", "max error", "bound ok"
+    );
+    for c in all_compressors::<f32>() {
+        let bytes = c.compress(data, Tolerance::Rel(rel))?;
+        let back = c.decompress(&bytes)?;
+        let err = linf_error(data.data(), back.data());
+        println!(
+            "{:<12} {:>10.2} {:>10.2} {:>12.5} {:>10}",
+            c.name(),
+            compression_ratio(data.nbytes(), bytes.len()),
+            psnr(data.data(), back.data()),
+            err,
+            if err <= tau { "yes" } else { "NO" },
+        );
+        assert!(err <= tau, "{} violated the error bound!", c.name());
+    }
+    println!("\nall compressors honoured the requested bound");
+    Ok(())
+}

@@ -1,0 +1,49 @@
+//! The three-layer bridge in isolation: run the AOT-compiled (JAX + Pallas →
+//! HLO text → PJRT) multilevel level step from Rust and time it against the
+//! native engine.
+//!
+//! Run with: `make artifacts && cargo run --release --example xla_backend`
+
+use mgardp::bench_util::time_fn;
+use mgardp::data::synth;
+use mgardp::decompose::{Decomposer, OptFlags};
+use mgardp::grid::Hierarchy;
+use mgardp::metrics::{linf_error, throughput_mbs};
+use mgardp::runtime::{artifacts_dir, XlaLevelStep, XlaRuntime};
+
+fn main() -> anyhow::Result<()> {
+    let dir = artifacts_dir();
+    let rt = XlaRuntime::cpu()?;
+    println!("PJRT platform: {}", rt.platform());
+    for n in [17usize, 33] {
+        if !XlaLevelStep::available(&dir, n) {
+            println!("n={n}: artifacts missing (run `make artifacts`), skipping");
+            continue;
+        }
+        let step = XlaLevelStep::load(&rt, &dir, n)?;
+        let u = synth::smooth_test_field(&[n, n, n]);
+
+        // native single step via a depth-1 hierarchy
+        let h = Hierarchy::new(&[n, n, n], Some(1))?;
+        let native = Decomposer::new(h, OptFlags::all())?;
+
+        let (xc, xs) = step.decompose(&u)?;
+        let nd = native.decompose(&u)?;
+        let cerr = linf_error(xc.data(), nd.coarse.data());
+        let serr = linf_error(&xs, &nd.coeffs[0]);
+
+        let t_xla = time_fn(1, 5, || step.decompose(&u).unwrap());
+        let t_native = time_fn(1, 5, || native.decompose(&u).unwrap());
+        println!(
+            "n={n}: agree (coarse {cerr:.1e}, stream {serr:.1e}); \
+             XLA {:.1} MB/s vs native {:.1} MB/s",
+            throughput_mbs(u.nbytes(), t_xla.median),
+            throughput_mbs(u.nbytes(), t_native.median),
+        );
+        // round trip through the artifact pair
+        let back = step.recompose(&xc, &xs)?;
+        let rt_err = linf_error(u.data(), back.data());
+        println!("      round-trip L∞ {rt_err:.2e}");
+    }
+    Ok(())
+}

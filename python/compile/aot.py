@@ -1,0 +1,69 @@
+"""AOT lowering: JAX model -> HLO text artifacts for the Rust runtime.
+
+Interchange is HLO *text*, not `.serialize()`: jax >= 0.5 emits
+HloModuleProtos with 64-bit instruction ids which the `xla` crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage: python -m compile.aot --out-dir ../artifacts [--sizes 17,33]
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_level_step(n: int, out_dir: str) -> None:
+    m = (n + 1) // 2
+    u = jax.ShapeDtypeStruct((n, n, n), jnp.float32)
+    coarse = jax.ShapeDtypeStruct((m, m, m), jnp.float32)
+    resid = jax.ShapeDtypeStruct((n, n, n), jnp.float32)
+
+    dec = jax.jit(model.decompose_level_tuple).lower(u)
+    path = os.path.join(out_dir, f"decompose_level_n{n}.hlo.txt")
+    with open(path, "w") as f:
+        f.write(to_hlo_text(dec))
+    print(f"wrote {path}")
+
+    rec = jax.jit(model.recompose_level_tuple).lower(coarse, resid)
+    path = os.path.join(out_dir, f"recompose_level_n{n}.hlo.txt")
+    with open(path, "w") as f:
+        f.write(to_hlo_text(rec))
+    print(f"wrote {path}")
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out-dir", default="../artifacts")
+    parser.add_argument(
+        "--sizes",
+        default="17,33",
+        help="comma-separated level grid sizes (each 2^k+1)",
+    )
+    args = parser.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    for n in (int(s) for s in args.sizes.split(",")):
+        assert n >= 5 and (n - 1) & (n - 2) == 0 or True  # sizes checked below
+        m = n - 1
+        assert m & (m - 1) == 0 and n >= 5, f"size {n} must be 2^k + 1"
+        lower_level_step(n, args.out_dir)
+    # stamp for make
+    with open(os.path.join(args.out_dir, ".stamp"), "w") as f:
+        f.write("ok\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+"""Layer-1 kernels (Pallas) and their pure-jnp oracle (`ref`)."""
+
+from . import ref, stencils  # noqa: F401

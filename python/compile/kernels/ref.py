@@ -1,0 +1,174 @@
+"""Pure-jnp reference (oracle) for the multilevel level-step kernels.
+
+This mirrors, op for op, the Rust `decompose::contiguous` engine's h-free
+formulation (the IVER form, §5.4 of the paper):
+
+* multilinear interpolation prediction field (coefficient computation),
+* generalized direct load vector, Lemma 1: interior stencil
+  (1/12, 1/2, 5/6, 1/2, 1/12), boundary rows (5/12, 1/2, 1/12),
+* coarse mass matrix tridiag(1/3, 4/3, 1/3) with 2/3 corners, Thomas solve.
+
+pytest checks the Pallas kernels against these functions; the Rust
+integration test checks the AOT artifact against the native engine, closing
+the three-layer loop.
+"""
+
+import itertools
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def interp_pred_field(u):
+    """Multilinear interpolation prediction at coefficient nodes.
+
+    Returns `p` of u's shape with p[x] = interpolant of the nodal (all-even)
+    corners for coefficient nodes (any odd index), and 0 at nodal nodes.
+    Every dimension must have odd length >= 5 (all dims active).
+    """
+    d = u.ndim
+    p = jnp.zeros_like(u)
+    axes = list(range(d))
+    for r in range(1, d + 1):
+        for subset in itertools.combinations(axes, r):
+            corners = []
+            for signs in itertools.product((0, 1), repeat=r):
+                idx = []
+                for ax in range(d):
+                    if ax in subset:
+                        s = signs[subset.index(ax)]
+                        idx.append(slice(0, -2, 2) if s == 0 else slice(2, None, 2))
+                    else:
+                        idx.append(slice(0, None, 2))
+                corners.append(u[tuple(idx)])
+            pred = sum(corners) / len(corners)
+            target = tuple(
+                slice(1, None, 2) if ax in subset else slice(0, None, 2)
+                for ax in range(d)
+            )
+            p = p.at[target].set(pred)
+    return p
+
+
+def coeff_mask(shape, dtype):
+    """1.0 at coefficient nodes (any odd index), 0.0 at nodal nodes."""
+    d = len(shape)
+    nodal = None
+    for ax in range(d):
+        iota = jnp.arange(shape[ax]) % 2 == 0
+        iota = iota.reshape((1,) * ax + (-1,) + (1,) * (d - ax - 1))
+        nodal = iota if nodal is None else (nodal & iota)
+    return jnp.where(nodal, 0.0, 1.0).astype(dtype)
+
+
+def residual_field(u):
+    """(I - Π) Q_l u: residuals at coefficient nodes, zero at nodal nodes."""
+    p = interp_pred_field(u)
+    mask = coeff_mask(u.shape, u.dtype)
+    return (u - p) * mask
+
+
+def load_sweep0(c):
+    """Direct load vector along axis 0 (Lemma 1), halving it: n -> (n+1)/2."""
+    n = c.shape[0]
+    assert n % 2 == 1 and n >= 5
+    first = (5.0 / 12.0) * c[0] + 0.5 * c[1] + (1.0 / 12.0) * c[2]
+    last = (1.0 / 12.0) * c[n - 3] + 0.5 * c[n - 2] + (5.0 / 12.0) * c[n - 1]
+    interior = (
+        (1.0 / 12.0) * c[0 : n - 4 : 2]
+        + 0.5 * c[1 : n - 3 : 2]
+        + (5.0 / 6.0) * c[2 : n - 2 : 2]
+        + 0.5 * c[3 : n - 1 : 2]
+        + (1.0 / 12.0) * c[4::2]
+    )
+    return jnp.concatenate([first[None], interior, last[None]], axis=0)
+
+
+def _thomas_aux(m, dtype):
+    """Precomputed forward-sweep coefficients for the coarse mass matrix."""
+    e = 1.0 / 3.0
+    cp = np.zeros(m)
+    inv = np.zeros(m)
+    denom = 2.0 / 3.0
+    inv[0] = 1.0 / denom
+    cp[0] = e / denom
+    for i in range(1, m):
+        dd = 2.0 / 3.0 if i == m - 1 else 4.0 / 3.0
+        denom = dd - e * cp[i - 1]
+        inv[i] = 1.0 / denom
+        cp[i] = e / denom
+    return jnp.asarray(cp, dtype), jnp.asarray(inv, dtype), jnp.asarray(e, dtype)
+
+
+def mass_solve0(f):
+    """Thomas solve of the coarse mass system along axis 0.
+
+    Unrolled over the (static, small) row count rather than `lax.scan`:
+    the artifact consumer is xla_extension 0.5.1, whose while-loop handling
+    of scans miscompiled at some shapes; straight-line HLO round-trips
+    reliably and fuses just as well.
+    """
+    m = f.shape[0]
+    cp, inv, e = _thomas_aux(m, f.dtype)
+    ys = [f[0] * inv[0]]
+    for i in range(1, m):
+        ys.append((f[i] - e * ys[-1]) * inv[i])
+    xs = [None] * m
+    xs[m - 1] = ys[m - 1]
+    for i in range(m - 2, -1, -1):
+        xs[i] = ys[i] - cp[i] * xs[i + 1]
+    return jnp.stack(xs, axis=0)
+
+
+def correction(e_field):
+    """Q_{l-1}(I-Π)Q_l u from the multilevel component (h-free form)."""
+    d = e_field.ndim
+    w = e_field
+    # sweep the last (contiguous) axis first, then the rest in order — the
+    # same order as the Rust IVER fast path, so artifacts match bit-tightly
+    for ax in [d - 1] + list(range(d - 1)):
+        w = jnp.moveaxis(load_sweep0(jnp.moveaxis(w, ax, 0)), 0, ax)
+    for ax in range(d):
+        w = jnp.moveaxis(mass_solve0(jnp.moveaxis(w, ax, 0)), 0, ax)
+    return w
+
+
+def decompose_level(u):
+    """One level step: u on n^d -> (coarse Q_{l-1}u on m^d, residual field).
+
+    The residual field holds the level's multilevel coefficients at
+    coefficient nodes and exact zeros at nodal nodes.
+    """
+    r = residual_field(u)
+    w = correction(r)
+    nodal = u[tuple(slice(0, None, 2) for _ in range(u.ndim))]
+    return nodal + w, r
+
+
+def recompose_level(coarse, resid):
+    """Inverse of :func:`decompose_level`."""
+    w = correction(resid)
+    nodal = coarse - w
+    u = jnp.asarray(resid)
+    u = u.at[tuple(slice(0, None, 2) for _ in range(u.ndim))].set(nodal)
+    p = interp_pred_field(u)
+    mask = coeff_mask(u.shape, u.dtype)
+    return u + p * mask
+
+
+# convenience jitted versions for tests
+decompose_level_jit = jax.jit(decompose_level)
+recompose_level_jit = jax.jit(recompose_level)
+
+
+@partial(jax.jit, static_argnames=("levels",))
+def decompose_multi(u, levels):
+    """Multiple level steps (shapes must stay >= 5 at every step)."""
+    outs = []
+    cur = u
+    for _ in range(levels):
+        cur, r = decompose_level(cur)
+        outs.append(r)
+    return cur, tuple(outs)

@@ -1,0 +1,92 @@
+"""Layer-1 Pallas kernels: the stencil hot-spots of the multilevel method.
+
+Two kernels cover the level step's memory-bound work:
+
+* :func:`interp_pred_field` — the coefficient-computation stencil
+  (multilinear prediction at every coefficient node; §5.1's sliding-window
+  update in kernel form), and
+* :func:`load_sweep0` — the generalized direct load vector (DLVC, Lemma 1)
+  applied along the leading axis for *all* trailing columns at once — the
+  batched correction computation (BCC, §5.3) expressed as a vectorized
+  Pallas block.
+
+The Thomas solve stays in Layer-2 (a `lax.scan`): it is a sequential
+recurrence, not a stencil, and XLA fuses it fine.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper optimizes
+for CPU caches; on TPU the analogous resource is VMEM. The BlockSpecs here
+use one block for the level grids the artifacts ship (17³/33³ f32 ≈
+0.02–0.14 MB, far under the ~16 MB VMEM budget); the `grid`-tiled variant
+for larger levels would tile the trailing (batch) axis exactly like §5.3
+tiles columns. `interpret=True` is mandatory: real TPU lowering emits a
+Mosaic custom-call the CPU PJRT client cannot execute.
+"""
+
+import itertools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _interp_kernel(u_ref, o_ref):
+    u = u_ref[...]
+    d = u.ndim
+    p = jnp.zeros_like(u)
+    axes = list(range(d))
+    for r in range(1, d + 1):
+        for subset in itertools.combinations(axes, r):
+            corners = []
+            for signs in itertools.product((0, 1), repeat=r):
+                idx = []
+                for ax in range(d):
+                    if ax in subset:
+                        s = signs[subset.index(ax)]
+                        idx.append(slice(0, -2, 2) if s == 0 else slice(2, None, 2))
+                    else:
+                        idx.append(slice(0, None, 2))
+                corners.append(u[tuple(idx)])
+            pred = sum(corners) / len(corners)
+            target = tuple(
+                slice(1, None, 2) if ax in subset else slice(0, None, 2)
+                for ax in range(d)
+            )
+            p = p.at[target].set(pred)
+    o_ref[...] = p
+
+
+def interp_pred_field(u):
+    """Pallas kernel: multilinear prediction field (0 at nodal nodes)."""
+    return pl.pallas_call(
+        _interp_kernel,
+        out_shape=jax.ShapeDtypeStruct(u.shape, u.dtype),
+        interpret=True,
+    )(u)
+
+
+def _load_sweep0_kernel(c_ref, o_ref):
+    c = c_ref[...]
+    n = c.shape[0]
+    first = (5.0 / 12.0) * c[0] + 0.5 * c[1] + (1.0 / 12.0) * c[2]
+    last = (1.0 / 12.0) * c[n - 3] + 0.5 * c[n - 2] + (5.0 / 12.0) * c[n - 1]
+    interior = (
+        (1.0 / 12.0) * c[0 : n - 4 : 2]
+        + 0.5 * c[1 : n - 3 : 2]
+        + (5.0 / 6.0) * c[2 : n - 2 : 2]
+        + 0.5 * c[3 : n - 1 : 2]
+        + (1.0 / 12.0) * c[4::2]
+    )
+    o_ref[...] = jnp.concatenate([first[None], interior, last[None]], axis=0)
+
+
+def load_sweep0(c):
+    """Pallas kernel: direct load vector along axis 0, batched over trailing
+    axes (n -> (n+1)/2)."""
+    n = c.shape[0]
+    assert n % 2 == 1 and n >= 5, f"leading axis must be odd >= 5, got {n}"
+    m = (n + 1) // 2
+    return pl.pallas_call(
+        _load_sweep0_kernel,
+        out_shape=jax.ShapeDtypeStruct((m,) + c.shape[1:], c.dtype),
+        interpret=True,
+    )(c)

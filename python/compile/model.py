@@ -1,0 +1,68 @@
+"""Layer-2 JAX model: one multilevel level step built from the Layer-1
+Pallas kernels.
+
+`decompose_level` / `recompose_level` implement exactly the contract the
+Rust runtime backend (`rust/src/runtime/backend.rs`) expects:
+
+* `decompose_level(u[n,n,n]) -> (coarse[m,m,m], resid[n,n,n])` with
+  `m = (n+1)/2`; `resid` carries the multilevel coefficients at
+  coefficient nodes and zeros at nodal nodes.
+* `recompose_level(coarse, resid) -> u` is its exact inverse.
+
+Everything is the h-free (IVER) formulation, so it matches the Rust
+`contiguous` engine bit-for-bit up to f32 rounding.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref, stencils
+
+
+def _correction(e_field):
+    """Load sweeps (Pallas, batched over trailing axes) + Thomas solves."""
+    d = e_field.ndim
+    w = e_field
+    # sweep the last (contiguous) axis first, then the rest in order — the
+    # same order as the Rust IVER fast path, so artifacts match bit-tightly
+    for ax in [d - 1] + list(range(d - 1)):
+        w = jnp.moveaxis(stencils.load_sweep0(jnp.moveaxis(w, ax, 0)), 0, ax)
+    for ax in range(d):
+        w = jnp.moveaxis(ref.mass_solve0(jnp.moveaxis(w, ax, 0)), 0, ax)
+    return w
+
+
+def decompose_level(u):
+    """One decomposition step (coefficient computation via Pallas)."""
+    p = stencils.interp_pred_field(u)
+    mask = ref.coeff_mask(u.shape, u.dtype)
+    resid = (u - p) * mask
+    w = _correction(resid)
+    nodal = u[tuple(slice(0, None, 2) for _ in range(u.ndim))]
+    return nodal + w, resid
+
+
+def recompose_level(coarse, resid):
+    """Exact inverse of :func:`decompose_level`."""
+    w = _correction(resid)
+    nodal = coarse - w
+    u = jnp.asarray(resid)
+    u = u.at[tuple(slice(0, None, 2) for _ in range(u.ndim))].set(nodal)
+    p = stencils.interp_pred_field(u)
+    mask = ref.coeff_mask(u.shape, u.dtype)
+    return u + p * mask
+
+
+def decompose_level_tuple(u):
+    """AOT entry point (tuple return, see gen_hlo recipe)."""
+    coarse, resid = decompose_level(u)
+    return (coarse, resid)
+
+
+def recompose_level_tuple(coarse, resid):
+    """AOT entry point."""
+    return (recompose_level(coarse, resid),)
+
+
+decompose_level_jit = jax.jit(decompose_level)
+recompose_level_jit = jax.jit(recompose_level)

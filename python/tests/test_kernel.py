@@ -1,0 +1,141 @@
+"""Layer-1 correctness: Pallas kernels vs the pure-jnp oracle.
+
+This is the core correctness signal of the compile path: every stencil the
+AOT artifacts embed is checked against `ref.py`, including hypothesis sweeps
+over shapes and dtypes.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref, stencils
+
+jax.config.update("jax_enable_x64", True)
+
+SIZES = st.sampled_from([5, 9, 17, 33])
+DTYPES = st.sampled_from([np.float32, np.float64])
+
+
+def rand(shape, dtype, seed):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.uniform(-1.0, 1.0, size=shape).astype(dtype))
+
+
+class TestInterpKernel:
+    @settings(max_examples=20, deadline=None)
+    @given(n0=SIZES, n1=SIZES, dtype=DTYPES, seed=st.integers(0, 2**31 - 1))
+    def test_2d_matches_ref(self, n0, n1, dtype, seed):
+        u = rand((n0, n1), dtype, seed)
+        got = stencils.interp_pred_field(u)
+        want = ref.interp_pred_field(u)
+        np.testing.assert_allclose(got, want, rtol=0, atol=1e-6)
+
+    @settings(max_examples=10, deadline=None)
+    @given(n=st.sampled_from([5, 9, 17]), dtype=DTYPES, seed=st.integers(0, 2**31 - 1))
+    def test_3d_matches_ref(self, n, dtype, seed):
+        u = rand((n, n, n), dtype, seed)
+        got = stencils.interp_pred_field(u)
+        want = ref.interp_pred_field(u)
+        np.testing.assert_allclose(got, want, rtol=0, atol=1e-6)
+
+    def test_zero_at_nodal_nodes(self):
+        u = rand((9, 9, 9), np.float64, 3)
+        p = stencils.interp_pred_field(u)
+        assert np.all(np.asarray(p)[::2, ::2, ::2] == 0.0)
+
+    def test_edge_node_formula(self):
+        # paper Eq. (2): edge node = mean of its two nodal neighbors
+        u = rand((5, 5, 5), np.float64, 4)
+        p = np.asarray(stencils.interp_pred_field(u))
+        expect = 0.5 * (u[0, 0, 0] + u[0, 0, 2])
+        np.testing.assert_allclose(p[0, 0, 1], expect, atol=1e-12)
+
+    def test_cube_node_formula(self):
+        # paper Eq. (2): cube node = mean of its eight nodal corners
+        u = np.asarray(rand((5, 5, 5), np.float64, 5))
+        p = np.asarray(stencils.interp_pred_field(jnp.asarray(u)))
+        corners = [
+            u[i, j, k] for i in (0, 2) for j in (0, 2) for k in (0, 2)
+        ]
+        np.testing.assert_allclose(p[1, 1, 1], np.mean(corners), atol=1e-12)
+
+    def test_linear_field_predicted_exactly(self):
+        n = 9
+        x = jnp.arange(n, dtype=jnp.float64)
+        u = x[:, None, None] * 2.0 + x[None, :, None] * 0.5 - x[None, None, :]
+        p = stencils.interp_pred_field(u)
+        mask = np.asarray(ref.coeff_mask(u.shape, u.dtype)) == 1.0
+        np.testing.assert_allclose(
+            np.asarray(p)[mask], np.asarray(u)[mask], atol=1e-10
+        )
+
+
+class TestLoadSweepKernel:
+    @settings(max_examples=20, deadline=None)
+    @given(
+        n=SIZES,
+        batch=st.integers(1, 12),
+        dtype=DTYPES,
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_batched_matches_ref(self, n, batch, dtype, seed):
+        c = rand((n, batch), dtype, seed)
+        got = stencils.load_sweep0(c)
+        want = ref.load_sweep0(c)
+        assert got.shape == ((n + 1) // 2, batch)
+        np.testing.assert_allclose(got, want, rtol=0, atol=1e-6)
+
+    @settings(max_examples=10, deadline=None)
+    @given(n=st.sampled_from([5, 9, 17]), seed=st.integers(0, 2**31 - 1))
+    def test_3d_batch_matches_ref(self, n, seed):
+        c = rand((n, n, n), np.float64, seed)
+        got = stencils.load_sweep0(c)
+        want = ref.load_sweep0(c)
+        np.testing.assert_allclose(got, want, atol=1e-12)
+
+    def test_lemma1_interior_weights(self):
+        # delta at an even (nodal-aligned) fine index 2i contributes 5/6 to
+        # coarse i and 1/12 to its neighbors
+        n = 9
+        c = jnp.zeros((n, 1), jnp.float64).at[4, 0].set(1.0)
+        f = np.asarray(stencils.load_sweep0(c))[:, 0]
+        np.testing.assert_allclose(f, [0, 1 / 12, 5 / 6, 1 / 12, 0], atol=1e-12)
+
+    def test_lemma1_odd_weights(self):
+        n = 9
+        c = jnp.zeros((n, 1), jnp.float64).at[3, 0].set(1.0)
+        f = np.asarray(stencils.load_sweep0(c))[:, 0]
+        np.testing.assert_allclose(f, [0, 0.5, 0.5, 0, 0], atol=1e-12)
+
+    def test_boundary_weights(self):
+        n = 5
+        c = jnp.zeros((n, 1), jnp.float64).at[0, 0].set(1.0)
+        f = np.asarray(stencils.load_sweep0(c))[:, 0]
+        np.testing.assert_allclose(f, [5 / 12, 1 / 12, 0], atol=1e-12)
+
+    def test_even_length_rejected(self):
+        with pytest.raises(AssertionError):
+            stencils.load_sweep0(jnp.zeros((8, 3)))
+
+
+class TestMassSolve:
+    @settings(max_examples=15, deadline=None)
+    @given(m=st.sampled_from([3, 5, 9, 17]), seed=st.integers(0, 2**31 - 1))
+    def test_solve_inverts_mass_matrix(self, m, seed):
+        x = rand((m, 4), np.float64, seed)
+        # multiply by the mass matrix
+        e, d_in, d_bd = 1 / 3, 4 / 3, 2 / 3
+        f = np.zeros_like(np.asarray(x))
+        xv = np.asarray(x)
+        for i in range(m):
+            dd = d_bd if i in (0, m - 1) else d_in
+            f[i] = dd * xv[i]
+            if i > 0:
+                f[i] += e * xv[i - 1]
+            if i + 1 < m:
+                f[i] += e * xv[i + 1]
+        got = ref.mass_solve0(jnp.asarray(f))
+        np.testing.assert_allclose(got, xv, atol=1e-10)

@@ -1,0 +1,229 @@
+//! Adaptive decomposition termination (§4.2).
+//!
+//! At each level the compressor asks: will the *next* prediction step be
+//! served better by the multilevel method's piecewise multilinear
+//! interpolation, or by the external compressor's Lorenzo predictor? Both
+//! are estimated from *original* data plus a penalty factor modelling the
+//! effect of working with reconstructed data (§4.2.2), on a 1-in-4ᵈ sample
+//! of 3ᵈ blocks (§4.2.3). When Lorenzo wins, decomposition terminates and
+//! the remaining coarse representation goes to the external compressor.
+
+mod penalty;
+
+pub use penalty::{interp_penalties, lorenzo_penalty_factor, correction_error_sd};
+
+use crate::tensor::Scalar;
+
+/// Estimated aggregate prediction errors for the two candidate predictors
+/// at one level (§4.2.3, Alg. 1 lines 5–9).
+#[derive(Clone, Copy, Debug)]
+pub struct PredictorEstimate {
+    /// Aggregate estimated Lorenzo error (Eq. 3).
+    pub lorenzo: f64,
+    /// Aggregate estimated multilinear-interpolation error (Eq. 4).
+    pub interp: f64,
+    /// Number of coefficient nodes sampled.
+    pub samples: usize,
+}
+
+impl PredictorEstimate {
+    /// Terminate the decomposition when Lorenzo is strictly better.
+    pub fn should_terminate(&self) -> bool {
+        self.samples > 0 && self.lorenzo < self.interp
+    }
+}
+
+/// d-dimensional Lorenzo prediction at `flat` from already-visited neighbors
+/// (all 2^d−1 sign-alternating corners of the trailing unit cube).
+#[inline]
+fn lorenzo_pred<T: Scalar>(data: &[T], flat: usize, strides: &[usize]) -> f64 {
+    let d = strides.len();
+    let mut acc = 0.0f64;
+    for mask in 1..(1usize << d) {
+        let mut off = flat;
+        for (k, &s) in strides.iter().enumerate() {
+            if mask & (1 << k) != 0 {
+                off -= s;
+            }
+        }
+        let sign = if mask.count_ones() % 2 == 1 { 1.0 } else { -1.0 };
+        acc += sign * data[off].to_f64();
+    }
+    acc
+}
+
+/// Multilinear interpolation prediction at a coefficient node with odd-dim
+/// strides `odd` (the nodal corners of its cell).
+#[inline]
+fn interp_pred<T: Scalar>(data: &[T], flat: usize, odd: &[usize]) -> f64 {
+    let q = odd.len();
+    let mut acc = 0.0f64;
+    for mask in 0..(1usize << q) {
+        let mut off = flat;
+        for (b, &s) in odd.iter().enumerate() {
+            if mask & (1 << b) != 0 {
+                off += s;
+            } else {
+                off -= s;
+            }
+        }
+        acc += data[off].to_f64();
+    }
+    acc / (1usize << q) as f64
+}
+
+/// Estimate both predictors' errors on a contiguous level array of `shape`
+/// under level tolerance `tau0`, sampling one out of `sample_stride` blocks
+/// along each dimension (the paper samples 1-in-4).
+pub fn estimate_predictors<T: Scalar>(
+    data: &[T],
+    shape: &[usize],
+    tau0: f64,
+    sample_stride: usize,
+) -> PredictorEstimate {
+    let d = shape.len();
+    let strides = crate::tensor::strides_for(shape);
+    let active: Vec<bool> = shape.iter().map(|&n| n >= 5).collect();
+    let lorenzo_factor = lorenzo_penalty_factor(d) * tau0;
+    let interp_factors = interp_penalties(d);
+    let mut est = PredictorEstimate {
+        lorenzo: 0.0,
+        interp: 0.0,
+        samples: 0,
+    };
+    // iterate sampled 3^d block origins: block b starts at node 2b per dim
+    let nblocks: Vec<usize> = shape
+        .iter()
+        .map(|&n| if n >= 3 { (n - 1) / 2 } else { 1 })
+        .collect();
+    let mut block = vec![0usize; d];
+    loop {
+        // per-block: iterate the 3^d nodes; coefficient nodes have odd offset
+        let mut offs = vec![0usize; d];
+        'nodes: loop {
+            let mut flat = 0usize;
+            let mut odd: Vec<usize> = Vec::with_capacity(d);
+            let mut boundary_ok = true;
+            for k in 0..d {
+                let ix = 2 * block[k] + offs[k];
+                if ix >= shape[k] {
+                    boundary_ok = false;
+                    break;
+                }
+                flat += ix * strides[k];
+                if active[k] && offs[k] % 2 == 1 {
+                    odd.push(strides[k]);
+                }
+                if ix == 0 {
+                    // Lorenzo needs all trailing neighbors; skip domain edge
+                    boundary_ok = boundary_ok && false;
+                }
+            }
+            if boundary_ok && !odd.is_empty() {
+                let v = data[flat].to_f64();
+                let lp = lorenzo_pred(data, flat, &strides);
+                let ip = interp_pred(data, flat, &odd);
+                est.lorenzo += (lp - v).abs() + lorenzo_factor;
+                est.interp += (ip - v).abs() + interp_factors[odd.len()] * tau0;
+                est.samples += 1;
+            }
+            // advance node offset
+            for k in (0..d).rev() {
+                offs[k] += 1;
+                if offs[k] < 2 {
+                    continue 'nodes;
+                }
+                offs[k] = 0;
+            }
+            break;
+        }
+        // advance sampled block origin
+        let mut carry = true;
+        for k in (0..d).rev() {
+            if !carry {
+                break;
+            }
+            block[k] += sample_stride;
+            if block[k] < nblocks[k] {
+                carry = false;
+            } else {
+                block[k] = 0;
+            }
+        }
+        if carry {
+            break;
+        }
+    }
+    est
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::rng::Rng;
+    use crate::tensor::Tensor;
+
+    #[test]
+    fn lorenzo_pred_matches_paper_formula_3d() {
+        // pred = u110+u101+u011-u100-u010-u001+u000 for the corner offsets
+        let shape = [2usize, 2, 2];
+        let vals: Vec<f64> = vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0];
+        // index (i,j,k) -> val = data[4i+2j+k]
+        let t = Tensor::from_vec(&shape, vals).unwrap();
+        let strides = [4usize, 2, 1];
+        let pred = lorenzo_pred(t.data(), 7, &strides);
+        // u110=7, u101=6, u011=4, u100=5, u010=3, u001=2, u000=1
+        assert!((pred - (7.0 + 6.0 + 4.0 - 5.0 - 3.0 - 2.0 + 1.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn smooth_data_favours_interp_at_high_tolerance() {
+        // Very smooth field + large tau: Lorenzo's penalty dominates, so the
+        // multilevel interpolation should win (decomposition continues).
+        let shape = [33usize, 33, 33];
+        let t = Tensor::<f64>::from_fn(&shape, |ix| {
+            let x = ix[0] as f64 / 32.0;
+            let y = ix[1] as f64 / 32.0;
+            let z = ix[2] as f64 / 32.0;
+            (2.0 * x + y).sin() + (z - 0.3 * y).cos()
+        });
+        let est = estimate_predictors(t.data(), &shape, 0.05, 4);
+        assert!(est.samples > 0);
+        assert!(
+            !est.should_terminate(),
+            "interp should win on smooth data at high tol: {est:?}"
+        );
+    }
+
+    #[test]
+    fn rough_data_low_tolerance_favours_lorenzo() {
+        // White noise at tiny tolerance: the high-order Lorenzo predictor has
+        // no penalty to pay and both predict poorly, but interpolation's
+        // structural error is comparable; with tau -> 0 penalties vanish and
+        // the decision is driven by raw prediction error. Use a field with
+        // strong high-order structure where Lorenzo excels: a quadratic.
+        let shape = [17usize, 17, 17];
+        let t = Tensor::<f64>::from_fn(&shape, |ix| {
+            let x = ix[0] as f64;
+            let y = ix[1] as f64;
+            let z = ix[2] as f64;
+            x * x + y * y + z * z + x * y + 0.5 * y * z
+        });
+        let est = estimate_predictors(t.data(), &shape, 1e-9, 4);
+        assert!(est.samples > 0);
+        assert!(
+            est.should_terminate(),
+            "Lorenzo (2nd order) should beat linear interp on quadratics: {est:?}"
+        );
+    }
+
+    #[test]
+    fn sampling_stride_reduces_samples() {
+        let mut rng = Rng::new(4);
+        let shape = [33usize, 33];
+        let t = Tensor::<f64>::from_fn(&shape, |_| rng.uniform());
+        let dense = estimate_predictors(t.data(), &shape, 0.01, 1);
+        let sparse = estimate_predictors(t.data(), &shape, 0.01, 4);
+        assert!(sparse.samples < dense.samples);
+    }
+}

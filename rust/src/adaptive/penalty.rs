@@ -1,0 +1,191 @@
+//! Penalty factors (§4.2.2): the expected extra prediction error incurred by
+//! predicting from *reconstructed* rather than original data.
+//!
+//! All factors are expressed per unit tolerance (multiply by `τ_0`). They are
+//! computed once per dimensionality by deterministic Monte-Carlo, exactly as
+//! the paper derives them ("using the statistical method"), and cached:
+//!
+//! * Lorenzo: the prediction is a ±1 combination of `2^d − 1` reconstructed
+//!   neighbors, each with error `U(−τ,τ)`; the paper reports `E|·| = 1.22τ`
+//!   for 3-D, which our Monte-Carlo reproduces.
+//! * Multilinear interpolation: a nodal node's error is its own quantization
+//!   error `U(−τ,τ)` *plus* the correction error induced by quantized
+//!   coefficients, which is approximately Gaussian; the paper reports
+//!   `σ = 0.283τ` for 3-D. We *measure* σ by pushing uniform coefficient
+//!   errors through this implementation's actual correction operator, then
+//!   Monte-Carlo the per-category penalties (edge/plane/cube generalize to
+//!   categories `q = 1..=d`, the number of interpolated dimensions).
+
+use crate::data::rng::Rng;
+use crate::decompose::{contiguous, OptFlags};
+
+use std::sync::OnceLock;
+
+const MC_SAMPLES: usize = 400_000;
+
+/// `E|Σ_{i=1}^{2^d-1} U(-1,1)|` — the Lorenzo penalty factor for `d` dims
+/// (1.22 for 3-D, Table/§4.2.2 of the paper).
+pub fn lorenzo_penalty_factor(d: usize) -> f64 {
+    static CACHE: OnceLock<[f64; 5]> = OnceLock::new();
+    let cache = CACHE.get_or_init(|| {
+        let mut out = [0.0; 5];
+        for (dd, slot) in out.iter_mut().enumerate().skip(1) {
+            let k = (1usize << dd) - 1;
+            let mut rng = Rng::new(0x4C6F_7265 + dd as u64);
+            let mut acc = 0.0;
+            for _ in 0..MC_SAMPLES {
+                let mut s = 0.0;
+                for _ in 0..k {
+                    s += rng.uniform_in(-1.0, 1.0);
+                }
+                acc += s.abs();
+            }
+            *slot = acc / MC_SAMPLES as f64;
+        }
+        out
+    });
+    assert!((1..=4).contains(&d), "penalties support 1..=4 dims");
+    cache[d]
+}
+
+/// Standard deviation (per unit τ) of the correction values produced when
+/// the level's coefficient nodes carry `U(−τ,τ)` errors — measured through
+/// the actual correction operator of this crate (paper: `0.283τ` for 3-D).
+pub fn correction_error_sd(d: usize) -> f64 {
+    static CACHE: OnceLock<[f64; 5]> = OnceLock::new();
+    let cache = CACHE.get_or_init(|| {
+        let mut out = [0.0; 5];
+        for (dd, slot) in out.iter_mut().enumerate().skip(1) {
+            *slot = measure_correction_sd(dd);
+        }
+        out
+    });
+    assert!((1..=4).contains(&d));
+    cache[d]
+}
+
+fn measure_correction_sd(d: usize) -> f64 {
+    // grid large enough for the statistic to stabilize, small enough to be
+    // instant; the paper notes independence from the grid extent
+    let n = if d >= 4 { 9 } else { 17 };
+    let shape = vec![n; d];
+    let mut rng = Rng::new(0x5344_5344 + d as u64);
+    let mut acc2 = 0.0f64;
+    let mut count = 0usize;
+    for _ in 0..8 {
+        // coefficient-node errors uniform in (-1, 1); nodal zero
+        let mut e = vec![0.0f64; shape.iter().product()];
+        fill_coeff_noise(&mut e, &shape, &mut rng);
+        let corr = contiguous::correction_of_component(&e, &shape, OptFlags::all());
+        for v in corr {
+            acc2 += v * v;
+            count += 1;
+        }
+    }
+
+    (acc2 / count as f64).sqrt()
+}
+
+fn fill_coeff_noise(e: &mut [f64], shape: &[usize], rng: &mut Rng) {
+    let d = shape.len();
+    let mut idx = vec![0usize; d];
+    for item in e.iter_mut() {
+        let nodal = idx.iter().all(|&i| i % 2 == 0);
+        *item = if nodal { 0.0 } else { rng.uniform_in(-1.0, 1.0) };
+        for k in (0..d).rev() {
+            idx[k] += 1;
+            if idx[k] < shape[k] {
+                break;
+            }
+            idx[k] = 0;
+        }
+    }
+}
+
+/// Per-category interpolation penalty factors, indexed by `q` = number of
+/// interpolated dims (index 0 unused). For 3-D: `[_, edge, plane, cube]` ≈
+/// `[_, 0.369, 0.259, 0.182]` (paper §4.2.2).
+pub fn interp_penalties(d: usize) -> [f64; 5] {
+    static CACHE: OnceLock<[[f64; 5]; 5]> = OnceLock::new();
+    let cache = CACHE.get_or_init(|| {
+        let mut out = [[0.0; 5]; 5];
+        for dd in 1..=4 {
+            let sd = correction_error_sd(dd);
+            let mut rng = Rng::new(0x494E_5450 + dd as u64);
+            for q in 1..=dd {
+                let corners = 1usize << q;
+                let mut acc = 0.0;
+                for _ in 0..MC_SAMPLES {
+                    let mut s = 0.0;
+                    for _ in 0..corners {
+                        // nodal error = quantization U(-1,1) + correction N(0, sd)
+                        s += rng.uniform_in(-1.0, 1.0) + sd * rng.normal();
+                    }
+                    acc += (s / corners as f64).abs();
+                }
+                out[dd][q] = acc / MC_SAMPLES as f64;
+            }
+        }
+        out
+    });
+    assert!((1..=4).contains(&d));
+    cache[d]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lorenzo_3d_matches_paper() {
+        let f = lorenzo_penalty_factor(3);
+        assert!((f - 1.22).abs() < 0.02, "3-D Lorenzo penalty {f} vs paper 1.22");
+    }
+
+    #[test]
+    fn lorenzo_1d_exact_half() {
+        let f = lorenzo_penalty_factor(1);
+        assert!((f - 0.5).abs() < 0.01, "1-D E|U(-1,1)| = 0.5, got {f}");
+    }
+
+    #[test]
+    fn lorenzo_grows_with_dimension() {
+        assert!(lorenzo_penalty_factor(1) < lorenzo_penalty_factor(2));
+        assert!(lorenzo_penalty_factor(2) < lorenzo_penalty_factor(3));
+        assert!(lorenzo_penalty_factor(3) < lorenzo_penalty_factor(4));
+    }
+
+    #[test]
+    fn correction_sd_3d_near_paper() {
+        let sd = correction_error_sd(3);
+        // paper reports 0.283 for their operator; ours should be the same
+        // order (the grids and stencils match)
+        assert!(
+            (0.15..0.45).contains(&sd),
+            "3-D correction sd {sd} far from paper's 0.283"
+        );
+    }
+
+    #[test]
+    fn interp_penalties_3d_ordered_like_paper() {
+        let p = interp_penalties(3);
+        // edge > plane > cube (more corners average the noise down)
+        assert!(p[1] > p[2] && p[2] > p[3], "{p:?}");
+        // magnitudes near paper's 0.369 / 0.259 / 0.182
+        assert!((p[1] - 0.369).abs() < 0.06, "edge {}", p[1]);
+        assert!((p[2] - 0.259).abs() < 0.05, "plane {}", p[2]);
+        assert!((p[3] - 0.182).abs() < 0.04, "cube {}", p[3]);
+    }
+
+    #[test]
+    fn interp_penalty_below_lorenzo() {
+        // the paper's key observation: interpolation is less sensitive to
+        // reconstructed-data errors than Lorenzo
+        for d in 1..=4 {
+            let p = interp_penalties(d);
+            for q in 1..=d {
+                assert!(p[q] < lorenzo_penalty_factor(d));
+            }
+        }
+    }
+}

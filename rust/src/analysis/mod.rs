@@ -1,0 +1,7 @@
+//! Post-hoc scientific analysis on full or reduced representations
+//! (§6.2.2): iso-surface extraction and area measurement, the paper's
+//! mini-analysis for Tables 3/4 and Fig. 7.
+
+mod isosurface;
+
+pub use isosurface::{isosurface_area, isosurface_area_scaled};

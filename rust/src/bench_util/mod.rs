@@ -1,0 +1,201 @@
+//! Tiny benchmark harness for the `harness = false` bench targets.
+//!
+//! The offline vendor set has no criterion, so the benches use this: warmup,
+//! repeated timed runs, and robust summary statistics. All benches print both
+//! a human table and machine-readable `CSV` rows to `bench_out/`.
+
+use std::io::Write;
+use std::path::Path;
+use std::time::Instant;
+
+/// Summary statistics over repeated timed runs (seconds).
+#[derive(Clone, Copy, Debug)]
+pub struct Timing {
+    /// Median elapsed seconds.
+    pub median: f64,
+    /// Minimum elapsed seconds.
+    pub min: f64,
+    /// Mean elapsed seconds.
+    pub mean: f64,
+    /// Number of timed runs.
+    pub runs: usize,
+}
+
+/// Time `f` with `warmup` untimed and `runs` timed invocations.
+pub fn time_fn<R>(warmup: usize, runs: usize, mut f: impl FnMut() -> R) -> Timing {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut times = Vec::with_capacity(runs);
+    for _ in 0..runs.max(1) {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let min = times[0];
+    let median = times[times.len() / 2];
+    let mean = times.iter().sum::<f64>() / times.len() as f64;
+    Timing {
+        median,
+        min,
+        mean,
+        runs: times.len(),
+    }
+}
+
+/// CSV writer that creates `bench_out/<name>.csv` under the crate root.
+pub struct CsvOut {
+    file: std::fs::File,
+}
+
+impl CsvOut {
+    /// Create (truncate) `bench_out/<name>.csv` and write the header row.
+    pub fn create(name: &str, header: &str) -> std::io::Result<CsvOut> {
+        let dir = Path::new("bench_out");
+        std::fs::create_dir_all(dir)?;
+        let mut file = std::fs::File::create(dir.join(format!("{name}.csv")))?;
+        writeln!(file, "{header}")?;
+        Ok(CsvOut { file })
+    }
+
+    /// Append one CSV row.
+    pub fn row(&mut self, row: &str) {
+        writeln!(self.file, "{row}").expect("bench csv write");
+    }
+}
+
+/// Evaluate one (compressor, field, tolerance) point: compress, decompress,
+/// and report rate/distortion plus timings.
+pub fn eval_point(
+    compressor: &dyn crate::compressors::Compressor<f32>,
+    data: &crate::tensor::Tensor<f32>,
+    tol: crate::compressors::Tolerance,
+) -> crate::error::Result<EvalPoint> {
+    let t0 = Instant::now();
+    let bytes = compressor.compress(data, tol)?;
+    let comp_secs = t0.elapsed().as_secs_f64();
+    let t1 = Instant::now();
+    let back = compressor.decompress(&bytes)?;
+    let decomp_secs = t1.elapsed().as_secs_f64();
+    Ok(EvalPoint {
+        psnr: crate::metrics::psnr(data.data(), back.data()),
+        linf: crate::metrics::linf_error(data.data(), back.data()),
+        bit_rate: crate::metrics::bit_rate(bytes.len(), data.len()),
+        ratio: crate::metrics::compression_ratio(data.nbytes(), bytes.len()),
+        comp_mbs: crate::metrics::throughput_mbs(data.nbytes(), comp_secs),
+        decomp_mbs: crate::metrics::throughput_mbs(data.nbytes(), decomp_secs),
+        comp_bytes: bytes.len(),
+    })
+}
+
+/// Outcome of [`eval_point`].
+#[derive(Clone, Copy, Debug)]
+pub struct EvalPoint {
+    /// PSNR of the reconstruction (dB).
+    pub psnr: f64,
+    /// L∞ error of the reconstruction.
+    pub linf: f64,
+    /// Compressed bits per data point.
+    pub bit_rate: f64,
+    /// Compression ratio.
+    pub ratio: f64,
+    /// Compression throughput (MB/s).
+    pub comp_mbs: f64,
+    /// Decompression throughput (MB/s).
+    pub decomp_mbs: f64,
+    /// Compressed size in bytes.
+    pub comp_bytes: usize,
+}
+
+/// Binary-search the relative tolerance that lands PSNR near `target_db`
+/// (the Table 5 protocol: "tuning them to have almost the same distortion").
+pub fn find_rel_tol_for_psnr(
+    compressor: &dyn crate::compressors::Compressor<f32>,
+    data: &crate::tensor::Tensor<f32>,
+    target_db: f64,
+) -> crate::error::Result<(f64, EvalPoint)> {
+    let mut lo = 1e-7f64; // high PSNR
+    let mut hi = 0.3f64; // low PSNR
+    let mut best: Option<(f64, EvalPoint)> = None;
+    for _ in 0..12 {
+        let mid = (lo.ln() + hi.ln()).mul_add(0.5, 0.0).exp();
+        let p = eval_point(compressor, data, crate::compressors::Tolerance::Rel(mid))?;
+        let better = match &best {
+            None => true,
+            Some((_, b)) => (p.psnr - target_db).abs() < (b.psnr - target_db).abs(),
+        };
+        if better {
+            best = Some((mid, p));
+        }
+        if p.psnr > target_db {
+            lo = mid; // too accurate: loosen
+        } else {
+            hi = mid;
+        }
+        if (p.psnr - target_db).abs() < 0.35 {
+            break;
+        }
+    }
+    Ok(best.expect("at least one probe"))
+}
+
+/// The standard relative-tolerance sweep of the rate–distortion figures.
+pub fn rd_tolerances() -> Vec<f64> {
+    vec![3e-2, 1e-2, 3e-3, 1e-3, 3e-4, 1e-4, 3e-5, 1e-5]
+}
+
+/// True when the benches should shrink workloads (smoke mode for CI):
+/// set `MGARDP_BENCH_SMOKE=1`.
+pub fn smoke_mode() -> bool {
+    std::env::var("MGARDP_BENCH_SMOKE").map(|v| v == "1").unwrap_or(false)
+}
+
+/// Standard scale factor for dataset generators in benches: full size unless
+/// smoke mode is on. Override with `MGARDP_BENCH_SCALE`.
+pub fn bench_scale() -> f64 {
+    if let Ok(v) = std::env::var("MGARDP_BENCH_SCALE") {
+        if let Ok(s) = v.parse::<f64>() {
+            return s;
+        }
+    }
+    if smoke_mode() {
+        0.15
+    } else {
+        1.0
+    }
+}
+
+/// One representative field per dataset (the benches' standard workload;
+/// the paper runs all fields — one per dataset keeps the suite's wall-clock
+/// single-core friendly without changing any ordering).
+pub fn bench_fields(scale: f64) -> Vec<(String, String, crate::tensor::Tensor<f32>)> {
+    let mut out = Vec::new();
+    for ds in crate::data::synth::all_datasets(scale, 42) {
+        let f = &ds.fields[0];
+        out.push((ds.name.clone(), f.name.clone(), f.data.clone()));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timing_counts_runs() {
+        let t = time_fn(1, 5, || std::hint::black_box(2 + 2));
+        assert_eq!(t.runs, 5);
+        assert!(t.min <= t.median && t.median >= 0.0);
+    }
+
+    #[test]
+    fn timing_orders_stats() {
+        let mut n = 0u64;
+        let t = time_fn(0, 9, || {
+            n += 1;
+            std::thread::sleep(std::time::Duration::from_micros(50 * (n % 3)));
+        });
+        assert!(t.min <= t.mean + 1e-9);
+    }
+}

@@ -1,0 +1,179 @@
+//! Self-describing container format shared by all compressors.
+//!
+//! Layout: magic `MGRP`, version, method tag, dtype tag, ndim, dims
+//! (varints), absolute tolerance (f64), then a method-specific payload.
+
+use crate::encode::varint::{write_f64, write_u64, ByteReader};
+use crate::error::{Error, Result};
+use crate::tensor::Scalar;
+
+const MAGIC: &[u8; 4] = b"MGRP";
+const VERSION: u8 = 1;
+
+/// Compression method tag stored in the container.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Method {
+    /// Original multilevel compressor (uniform quantization).
+    Mgard = 1,
+    /// This paper's compressor (Alg. 1).
+    MgardPlus = 2,
+    /// Prediction-based baseline.
+    Sz = 3,
+    /// Transform-based baseline.
+    Zfp = 4,
+    /// SZ framework with transform predictor.
+    Hybrid = 5,
+}
+
+impl Method {
+    fn from_u8(v: u8) -> Result<Method> {
+        Ok(match v {
+            1 => Method::Mgard,
+            2 => Method::MgardPlus,
+            3 => Method::Sz,
+            4 => Method::Zfp,
+            5 => Method::Hybrid,
+            other => return Err(Error::UnsupportedFormat(format!("method tag {other}"))),
+        })
+    }
+}
+
+/// Parsed container header.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Header {
+    /// Which compressor wrote the container.
+    pub method: Method,
+    /// Scalar type tag (`Scalar::DTYPE_TAG`).
+    pub dtype: u8,
+    /// Original tensor shape.
+    pub shape: Vec<usize>,
+    /// Absolute L∞ tolerance used at compression time.
+    pub tau_abs: f64,
+}
+
+impl Header {
+    /// Serialize the header to the front of `out`.
+    pub fn write(&self, out: &mut Vec<u8>) {
+        out.extend_from_slice(MAGIC);
+        out.push(VERSION);
+        out.push(self.method as u8);
+        out.push(self.dtype);
+        write_u64(out, self.shape.len() as u64);
+        for &d in &self.shape {
+            write_u64(out, d as u64);
+        }
+        write_f64(out, self.tau_abs);
+    }
+
+    /// Parse a header, returning it and a reader positioned at the payload.
+    pub fn read(bytes: &[u8]) -> Result<(Header, ByteReader<'_>)> {
+        let mut r = ByteReader::new(bytes);
+        if r.bytes(4)? != MAGIC {
+            return Err(Error::UnsupportedFormat("bad magic".into()));
+        }
+        let version = r.u8()?;
+        if version != VERSION {
+            return Err(Error::UnsupportedFormat(format!(
+                "container version {version}, expected {VERSION}"
+            )));
+        }
+        let method = Method::from_u8(r.u8()?)?;
+        let dtype = r.u8()?;
+        let ndim = r.usize()?;
+        if ndim == 0 || ndim > 8 {
+            return Err(Error::corrupt(format!("implausible ndim {ndim}")));
+        }
+        let mut shape = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            shape.push(r.usize()?);
+        }
+        let tau_abs = r.f64()?;
+        Ok((
+            Header {
+                method,
+                dtype,
+                shape,
+                tau_abs,
+            },
+            r,
+        ))
+    }
+
+    /// Validate the header against the expected method and scalar type.
+    pub fn expect<T: Scalar>(&self, method: Method) -> Result<()> {
+        if self.method != method {
+            return Err(Error::UnsupportedFormat(format!(
+                "container written by {:?}, decompressor is {:?}",
+                self.method, method
+            )));
+        }
+        if self.dtype != T::DTYPE_TAG {
+            return Err(Error::UnsupportedFormat(format!(
+                "container dtype tag {} does not match requested scalar ({})",
+                self.dtype,
+                T::DTYPE_TAG
+            )));
+        }
+        Ok(())
+    }
+}
+
+/// Peek at the method tag without fully parsing.
+pub fn peek_method(bytes: &[u8]) -> Result<Method> {
+    let (h, _) = Header::read(bytes)?;
+    Ok(h.method)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn header_round_trip() {
+        let h = Header {
+            method: Method::MgardPlus,
+            dtype: 1,
+            shape: vec![100, 500, 500],
+            tau_abs: 1.5e-3,
+        };
+        let mut buf = Vec::new();
+        h.write(&mut buf);
+        buf.extend_from_slice(b"PAYLOAD");
+        let (back, mut r) = Header::read(&buf).unwrap();
+        assert_eq!(h, back);
+        assert_eq!(r.bytes(7).unwrap(), b"PAYLOAD");
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        assert!(Header::read(b"NOPE....").is_err());
+        assert!(Header::read(b"MG").is_err());
+    }
+
+    #[test]
+    fn method_dispatch_tags() {
+        for m in [
+            Method::Mgard,
+            Method::MgardPlus,
+            Method::Sz,
+            Method::Zfp,
+            Method::Hybrid,
+        ] {
+            assert_eq!(Method::from_u8(m as u8).unwrap(), m);
+        }
+        assert!(Method::from_u8(99).is_err());
+    }
+
+    #[test]
+    fn expect_checks_method_and_dtype() {
+        let h = Header {
+            method: Method::Sz,
+            dtype: 1,
+            shape: vec![4],
+            tau_abs: 0.1,
+        };
+        assert!(h.expect::<f32>(Method::Sz).is_ok());
+        assert!(h.expect::<f64>(Method::Sz).is_err());
+        assert!(h.expect::<f32>(Method::Zfp).is_err());
+    }
+}

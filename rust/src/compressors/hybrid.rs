@@ -1,0 +1,555 @@
+//! The hybrid prediction model [9]: ZFP's non-orthogonal transform embedded
+//! as a third per-block coding mode inside the SZ framework.
+//!
+//! Each 4ᵈ block selects among Lorenzo, block-local linear regression and
+//! transform coding by *actually trial-encoding* the transform candidate and
+//! estimating the entropy of the prediction candidates — the costly
+//! selection that makes the hybrid model's compression roughly half SZ's
+//! speed in Fig. 8 while improving the ratio on transform-friendly data.
+
+use super::format::{Header, Method};
+use super::zfp::{decode_block_f64, encode_block_f64, intprec};
+use super::{Compressor, Tolerance};
+use crate::encode::varint::{write_i64, write_section, write_u64, ByteReader};
+use crate::encode::{huffman_decode, huffman_encode, zstd_compress, zstd_decompress};
+use crate::encode::{BitReader, BitWriter};
+use crate::error::{Error, Result};
+use crate::tensor::{strides_for, Scalar, Tensor};
+
+const EDGE: usize = 4;
+
+/// Hybrid-model configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct HybridConfig {
+    /// Quantization radius for the prediction modes.
+    pub radius: i64,
+    /// zstd level of the final lossless stage.
+    pub zstd_level: i32,
+}
+
+impl Default for HybridConfig {
+    fn default() -> Self {
+        HybridConfig {
+            radius: 32768,
+            zstd_level: 3,
+        }
+    }
+}
+
+/// The hybrid compressor.
+#[derive(Clone, Debug, Default)]
+pub struct Hybrid {
+    cfg: HybridConfig,
+}
+
+impl Hybrid {
+    /// Build with an explicit configuration.
+    pub fn new(cfg: HybridConfig) -> Self {
+        Hybrid { cfg }
+    }
+}
+
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum Mode {
+    Lorenzo = 0,
+    Regression = 1,
+    Transform = 2,
+}
+
+impl Mode {
+    fn from_u8(v: u8) -> Result<Mode> {
+        Ok(match v {
+            0 => Mode::Lorenzo,
+            1 => Mode::Regression,
+            2 => Mode::Transform,
+            other => return Err(Error::corrupt(format!("hybrid mode {other}"))),
+        })
+    }
+}
+
+#[inline]
+fn lorenzo_pred<T: Scalar>(recon: &[T], idx: &[usize], strides: &[usize]) -> f64 {
+    let d = idx.len();
+    let mut acc = 0.0f64;
+    'mask: for mask in 1..(1usize << d) {
+        let mut off = 0usize;
+        for k in 0..d {
+            if mask & (1 << k) != 0 {
+                if idx[k] == 0 {
+                    continue 'mask;
+                }
+                off += (idx[k] - 1) * strides[k];
+            } else {
+                off += idx[k] * strides[k];
+            }
+        }
+        let sign = if mask.count_ones() % 2 == 1 { 1.0 } else { -1.0 };
+        acc += sign * recon[off].to_f64();
+    }
+    acc
+}
+
+fn fit_regression<T: Scalar>(
+    data: &[T],
+    strides: &[usize],
+    origin: &[usize],
+    bsize: &[usize],
+) -> Vec<f64> {
+    let d = bsize.len();
+    let n: usize = bsize.iter().product();
+    let centers: Vec<f64> = bsize.iter().map(|&b| (b as f64 - 1.0) / 2.0).collect();
+    let vars: Vec<f64> = bsize
+        .iter()
+        .map(|&b| {
+            let c = (b as f64 - 1.0) / 2.0;
+            (0..b).map(|i| (i as f64 - c).powi(2)).sum::<f64>() / b as f64
+        })
+        .collect();
+    let mut mean = 0.0f64;
+    let mut cov = vec![0.0f64; d];
+    let mut idx = vec![0usize; d];
+    for _ in 0..n {
+        let mut off = 0;
+        for k in 0..d {
+            off += (origin[k] + idx[k]) * strides[k];
+        }
+        let v = data[off].to_f64();
+        mean += v;
+        for k in 0..d {
+            cov[k] += (idx[k] as f64 - centers[k]) * v;
+        }
+        for k in (0..d).rev() {
+            idx[k] += 1;
+            if idx[k] < bsize[k] {
+                break;
+            }
+            idx[k] = 0;
+        }
+    }
+    mean /= n as f64;
+    let mut out = vec![0.0; d + 1];
+    for k in 0..d {
+        out[k + 1] = if vars[k] > 0.0 {
+            cov[k] / (n as f64 * vars[k])
+        } else {
+            0.0
+        };
+    }
+    out[0] = mean - (0..d).map(|k| out[k + 1] * centers[k]).sum::<f64>();
+    out
+}
+
+fn reg_tau(tau: f64, d: usize) -> f64 {
+    tau / (2.0 * (d as f64 + 1.0) * EDGE as f64)
+}
+
+/// Entropy-proxy cost (bits) of a quantization code.
+#[inline]
+fn code_cost(code: f64) -> f64 {
+    (code.abs() + 1.0).log2() + 2.0
+}
+
+impl<T: Scalar> Compressor<T> for Hybrid {
+    fn name(&self) -> &'static str {
+        "HybridModel"
+    }
+
+    fn compress(&self, data: &Tensor<T>, tol: Tolerance) -> Result<Vec<u8>> {
+        let tau = tol.absolute(data.value_range());
+        if tau <= 0.0 {
+            return Err(Error::invalid("tolerance must be positive"));
+        }
+        let shape = data.shape().to_vec();
+        let d = shape.len();
+        if d > 4 {
+            return Err(Error::invalid("hybrid model supports up to 4 dimensions"));
+        }
+        let strides = strides_for(&shape);
+        let src = data.data();
+        let radius = self.cfg.radius;
+        let prec = intprec::<T>();
+        let rt = reg_tau(tau, d);
+        let lorenzo_penalty = crate::adaptive::lorenzo_penalty_factor(d) * tau;
+        let mut recon = vec![T::ZERO; src.len()];
+
+        let nblocks: Vec<usize> = shape.iter().map(|&n| n.div_ceil(EDGE)).collect();
+        let total_blocks: usize = nblocks.iter().product();
+        let size = EDGE.pow(d as u32);
+
+        let mut symbols: Vec<u32> = Vec::new();
+        let mut literals: Vec<u8> = Vec::new();
+        let mut flags: Vec<u8> = Vec::with_capacity(total_blocks);
+        let mut reg_codes: Vec<u8> = Vec::new();
+        let mut tw = BitWriter::new(); // transform sub-stream
+
+        let mut bidx = vec![0usize; d];
+        let mut pt = vec![0usize; d];
+        let mut block = vec![0.0f64; size];
+        for _ in 0..total_blocks {
+            let origin: Vec<usize> = (0..d).map(|k| bidx[k] * EDGE).collect();
+            let bsize: Vec<usize> = (0..d).map(|k| EDGE.min(shape[k] - origin[k])).collect();
+            let bn: usize = bsize.iter().product();
+
+            // gather the block (edge replication for partial blocks)
+            {
+                let mut iidx = vec![0usize; d];
+                for item in block.iter_mut() {
+                    let mut off = 0;
+                    for k in 0..d {
+                        let x = (origin[k] + iidx[k]).min(shape[k] - 1);
+                        off += x * strides[k];
+                    }
+                    *item = src[off].to_f64();
+                    for k in (0..d).rev() {
+                        iidx[k] += 1;
+                        if iidx[k] < EDGE {
+                            break;
+                        }
+                        iidx[k] = 0;
+                    }
+                }
+            }
+
+            // --- candidate 1+2: prediction cost estimates ---
+            let coeffs = fit_regression(src, &strides, &origin, &bsize);
+            let qcoeffs: Vec<f64> = coeffs
+                .iter()
+                .map(|&c| (c / (2.0 * rt)).round() * 2.0 * rt)
+                .collect();
+            let mut cost_lor = 0.0f64;
+            let mut cost_reg = (d + 1) as f64 * 16.0; // coefficient overhead
+            {
+                let mut i = vec![0usize; d];
+                for _ in 0..bn {
+                    let mut off = 0;
+                    for k in 0..d {
+                        pt[k] = origin[k] + i[k];
+                        off += pt[k] * strides[k];
+                    }
+                    let v = src[off].to_f64();
+                    let lp = lorenzo_pred(src, &pt, &strides);
+                    cost_lor += code_cost(((lp - v).abs() + lorenzo_penalty) / (2.0 * tau));
+                    let rp = qcoeffs[0]
+                        + (0..d).map(|k| qcoeffs[k + 1] * i[k] as f64).sum::<f64>();
+                    cost_reg += code_cost((rp - v).abs() / (2.0 * tau));
+                    for k in (0..d).rev() {
+                        i[k] += 1;
+                        if i[k] < bsize[k] {
+                            break;
+                        }
+                        i[k] = 0;
+                    }
+                }
+            }
+            // --- candidate 3: trial transform encoding (the costly step) ---
+            let mut trial = BitWriter::new();
+            encode_block_f64(&block, d, tau, prec, &mut trial);
+            let trial_bits = trial.bit_len();
+            let cost_tr = trial_bits as f64;
+            let trial_bytes = trial.finish();
+
+            let mode = if cost_tr < cost_lor && cost_tr < cost_reg {
+                Mode::Transform
+            } else if cost_reg < cost_lor {
+                Mode::Regression
+            } else {
+                Mode::Lorenzo
+            };
+            flags.push(mode as u8);
+
+            match mode {
+                Mode::Transform => {
+                    // splice the trial encoding into the transform stream and
+                    // set recon from its decoded values (needed by later
+                    // Lorenzo predictions)
+                    let mut tr = BitReader::new(&trial_bytes);
+                    let dec = decode_block_f64(d, tau, prec, &mut tr)?;
+                    let mut tr2 = BitReader::new(&trial_bytes);
+                    for _ in 0..trial_bits {
+                        tw.write_bit(tr2.read_bit().expect("trial length"));
+                    }
+                    let mut iidx = vec![0usize; d];
+                    for &v in dec.iter() {
+                        let mut off = 0;
+                        let mut in_domain = true;
+                        for k in 0..d {
+                            let x = origin[k] + iidx[k];
+                            if x >= shape[k] {
+                                in_domain = false;
+                                break;
+                            }
+                            off += x * strides[k];
+                        }
+                        if in_domain {
+                            recon[off] = T::from_f64(v);
+                        }
+                        for k in (0..d).rev() {
+                            iidx[k] += 1;
+                            if iidx[k] < EDGE {
+                                break;
+                            }
+                            iidx[k] = 0;
+                        }
+                    }
+                }
+                Mode::Regression | Mode::Lorenzo => {
+                    if mode == Mode::Regression {
+                        for &c in &coeffs {
+                            write_i64(&mut reg_codes, (c / (2.0 * rt)).round() as i64);
+                        }
+                    }
+                    let mut i = vec![0usize; d];
+                    for _ in 0..bn {
+                        let mut off = 0;
+                        for k in 0..d {
+                            pt[k] = origin[k] + i[k];
+                            off += pt[k] * strides[k];
+                        }
+                        let v = src[off].to_f64();
+                        let pred = if mode == Mode::Regression {
+                            qcoeffs[0]
+                                + (0..d).map(|k| qcoeffs[k + 1] * i[k] as f64).sum::<f64>()
+                        } else {
+                            lorenzo_pred(&recon, &pt, &strides)
+                        };
+                        let code = ((v - pred) / (2.0 * tau)).round();
+                        let ok = code.is_finite() && code.abs() < (radius - 1) as f64;
+                        let mut stored = false;
+                        if ok {
+                            let rec_t = T::from_f64(pred + code * 2.0 * tau);
+                            if (rec_t.to_f64() - v).abs() <= tau {
+                                symbols.push((code as i64 + radius) as u32);
+                                recon[off] = rec_t;
+                                stored = true;
+                            }
+                        }
+                        if !stored {
+                            symbols.push(0);
+                            src[off].write_le(&mut literals);
+                            recon[off] = src[off];
+                        }
+                        for k in (0..d).rev() {
+                            i[k] += 1;
+                            if i[k] < bsize[k] {
+                                break;
+                            }
+                            i[k] = 0;
+                        }
+                    }
+                }
+            }
+
+            for k in (0..d).rev() {
+                bidx[k] += 1;
+                if bidx[k] < nblocks[k] {
+                    break;
+                }
+                bidx[k] = 0;
+            }
+        }
+
+        let mut payload = Vec::new();
+        write_section(&mut payload, &flags);
+        write_section(&mut payload, &reg_codes);
+        write_section(&mut payload, &huffman_encode(&symbols));
+        write_section(&mut payload, &literals);
+        write_section(&mut payload, &tw.finish());
+        let compressed = zstd_compress(&payload, self.cfg.zstd_level)?;
+
+        let mut out = Vec::with_capacity(compressed.len() + 64);
+        Header {
+            method: Method::Hybrid,
+            dtype: T::DTYPE_TAG,
+            shape,
+            tau_abs: tau,
+        }
+        .write(&mut out);
+        write_u64(&mut out, payload.len() as u64);
+        out.extend_from_slice(&compressed);
+        Ok(out)
+    }
+
+    fn decompress(&self, bytes: &[u8]) -> Result<Tensor<T>> {
+        let (header, mut r) = Header::read(bytes)?;
+        header.expect::<T>(Method::Hybrid)?;
+        let tau = header.tau_abs;
+        let shape = header.shape.clone();
+        let d = shape.len();
+        let strides = strides_for(&shape);
+        let n: usize = shape.iter().product();
+        let prec = intprec::<T>();
+        let rt = reg_tau(tau, d);
+        let radius = self.cfg.radius;
+
+        let payload_len = r.usize()?;
+        let payload = zstd_decompress(r.bytes(r.remaining())?, payload_len)?;
+        let mut pr = ByteReader::new(&payload);
+        let flags = pr.section()?.to_vec();
+        let reg_codes_raw = pr.section()?.to_vec();
+        let symbols = huffman_decode(pr.section()?)?;
+        let literals = pr.section()?.to_vec();
+        let transform_stream = pr.section()?.to_vec();
+
+        let nblocks: Vec<usize> = shape.iter().map(|&s| s.div_ceil(EDGE)).collect();
+        let total_blocks: usize = nblocks.iter().product();
+        if flags.len() != total_blocks {
+            return Err(Error::corrupt("hybrid flag stream size mismatch"));
+        }
+        let mut recon = vec![T::ZERO; n];
+        let mut reg_reader = ByteReader::new(&reg_codes_raw);
+        let mut tr = BitReader::new(&transform_stream);
+        let mut sym_pos = 0usize;
+        let mut lit_pos = 0usize;
+        let mut bidx = vec![0usize; d];
+        let mut pt = vec![0usize; d];
+        for b in 0..total_blocks {
+            let origin: Vec<usize> = (0..d).map(|k| bidx[k] * EDGE).collect();
+            let bsize: Vec<usize> = (0..d).map(|k| EDGE.min(shape[k] - origin[k])).collect();
+            let bn: usize = bsize.iter().product();
+            match Mode::from_u8(flags[b])? {
+                Mode::Transform => {
+                    let dec = decode_block_f64(d, tau, prec, &mut tr)?;
+                    let mut iidx = vec![0usize; d];
+                    for &v in dec.iter() {
+                        let mut off = 0;
+                        let mut in_domain = true;
+                        for k in 0..d {
+                            let x = origin[k] + iidx[k];
+                            if x >= shape[k] {
+                                in_domain = false;
+                                break;
+                            }
+                            off += x * strides[k];
+                        }
+                        if in_domain {
+                            recon[off] = T::from_f64(v);
+                        }
+                        for k in (0..d).rev() {
+                            iidx[k] += 1;
+                            if iidx[k] < EDGE {
+                                break;
+                            }
+                            iidx[k] = 0;
+                        }
+                    }
+                }
+                mode => {
+                    let mut qcoeffs = vec![0.0f64; d + 1];
+                    if mode == Mode::Regression {
+                        for qc in qcoeffs.iter_mut() {
+                            *qc = reg_reader.i64()? as f64 * 2.0 * rt;
+                        }
+                    }
+                    let mut i = vec![0usize; d];
+                    for _ in 0..bn {
+                        let mut off = 0;
+                        for k in 0..d {
+                            pt[k] = origin[k] + i[k];
+                            off += pt[k] * strides[k];
+                        }
+                        if sym_pos >= symbols.len() {
+                            return Err(Error::corrupt("hybrid symbol stream exhausted"));
+                        }
+                        let s = symbols[sym_pos];
+                        sym_pos += 1;
+                        if s == 0 {
+                            if lit_pos + T::BYTES > literals.len() {
+                                return Err(Error::corrupt("hybrid literal stream exhausted"));
+                            }
+                            recon[off] = T::read_le(&literals[lit_pos..]);
+                            lit_pos += T::BYTES;
+                        } else {
+                            let code = s as i64 - radius;
+                            let pred = if mode == Mode::Regression {
+                                qcoeffs[0]
+                                    + (0..d)
+                                        .map(|k| qcoeffs[k + 1] * i[k] as f64)
+                                        .sum::<f64>()
+                            } else {
+                                lorenzo_pred(&recon, &pt, &strides)
+                            };
+                            recon[off] = T::from_f64(pred + code as f64 * 2.0 * tau);
+                        }
+                        for k in (0..d).rev() {
+                            i[k] += 1;
+                            if i[k] < bsize[k] {
+                                break;
+                            }
+                            i[k] = 0;
+                        }
+                    }
+                }
+            }
+            for k in (0..d).rev() {
+                bidx[k] += 1;
+                if bidx[k] < nblocks[k] {
+                    break;
+                }
+                bidx[k] = 0;
+            }
+        }
+        Tensor::from_vec(&shape, recon)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::rng::Rng;
+    use crate::metrics::linf_error;
+
+    fn check_bound<T: Scalar>(t: &Tensor<T>, tau: f64) -> usize {
+        let h = Hybrid::default();
+        let bytes = h.compress(t, Tolerance::Abs(tau)).unwrap();
+        let back: Tensor<T> = h.decompress(&bytes).unwrap();
+        let err = linf_error(t.data(), back.data());
+        assert!(err <= tau * (1.0 + 1e-9), "L∞ {err} > τ {tau}");
+        bytes.len()
+    }
+
+    #[test]
+    fn smooth_3d_bounded() {
+        let t = crate::data::synth::smooth_test_field(&[20, 20, 20]);
+        let size = check_bound(&t, 1e-3);
+        assert!(size < t.nbytes() / 3);
+    }
+
+    #[test]
+    fn oscillatory_data_uses_transform_blocks() {
+        // high-frequency oscillation is where the transform should win
+        let t = Tensor::<f32>::from_fn(&[16, 16, 16], |ix| {
+            ((ix[0] as f32) * 2.1).sin() * ((ix[1] as f32) * 1.9).cos()
+                * ((ix[2] as f32) * 2.3).sin()
+        });
+        let h = Hybrid::default();
+        let bytes = h.compress(&t, Tolerance::Rel(1e-3)).unwrap();
+        let back: Tensor<f32> = h.decompress(&bytes).unwrap();
+        let tau = 1e-3 * t.value_range();
+        assert!(linf_error(t.data(), back.data()) <= tau * (1.0 + 1e-9));
+    }
+
+    #[test]
+    fn random_data_bounded() {
+        let mut rng = Rng::new(11);
+        let t = Tensor::<f32>::from_fn(&[13, 10], |_| rng.uniform_in(-1.0, 1.0) as f32);
+        check_bound(&t, 0.02);
+    }
+
+    #[test]
+    fn dims_1_through_4() {
+        for shape in [vec![30usize], vec![9, 11], vec![6, 7, 8], vec![5, 5, 5, 5]] {
+            let t = Tensor::<f32>::from_fn(&shape, |ix| {
+                (ix.iter().sum::<usize>() as f32 * 0.4).cos()
+            });
+            check_bound(&t, 1e-3);
+        }
+    }
+
+    #[test]
+    fn f64_support() {
+        let t = Tensor::<f64>::from_fn(&[9, 9, 9], |ix| {
+            ((ix[0] + 2 * ix[1]) as f64 * 0.21).sin() * 0.01
+        });
+        check_bound(&t, 1e-7);
+    }
+}

@@ -1,0 +1,222 @@
+//! The original multilevel compressor (MGARD, [11]): full decomposition plus
+//! *uniform* quantization across levels — the baseline that §4's techniques
+//! improve on (cyan curve in Fig. 10).
+
+use super::format::{Header, Method};
+use super::{Compressor, Tolerance};
+use crate::decompose::{Decomposer, Decomposition, OptFlags};
+use crate::encode::varint::{write_section, write_u64, ByteReader};
+use crate::encode::{huffman_decode, huffman_encode, zstd_compress, zstd_decompress};
+use crate::error::{Error, Result};
+use crate::grid::Hierarchy;
+use crate::quant::{dequantize, quantize, QuantStream, DEFAULT_C_LINF};
+use crate::tensor::{Scalar, Tensor};
+
+/// MGARD configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct MgardConfig {
+    /// Engine used for decomposition timing studies. The *compressed format*
+    /// is engine-independent; Fig. 8 benchmarks the original (baseline)
+    /// engine, which is the default here because this type *is* the original
+    /// MGARD.
+    pub flags: OptFlags,
+    /// L∞ constant for distributing the error budget.
+    pub c_linf: f64,
+    /// Cap on decomposition depth (None = as deep as possible).
+    pub max_levels: Option<usize>,
+    /// zstd level for the lossless stage.
+    pub zstd_level: i32,
+}
+
+impl Default for MgardConfig {
+    fn default() -> Self {
+        MgardConfig {
+            flags: OptFlags::baseline(),
+            c_linf: DEFAULT_C_LINF,
+            max_levels: None,
+            zstd_level: 3,
+        }
+    }
+}
+
+/// The original multilevel compressor.
+#[derive(Clone, Debug, Default)]
+pub struct Mgard {
+    cfg: MgardConfig,
+}
+
+impl Mgard {
+    /// Build with an explicit configuration.
+    pub fn new(cfg: MgardConfig) -> Self {
+        Mgard { cfg }
+    }
+
+    /// MGARD but running on the optimized engine (used by throughput benches
+    /// to separate algorithmic from format effects).
+    pub fn optimized_engine() -> Self {
+        Mgard::new(MgardConfig {
+            flags: OptFlags::all(),
+            ..MgardConfig::default()
+        })
+    }
+}
+
+impl<T: Scalar> Compressor<T> for Mgard {
+    fn name(&self) -> &'static str {
+        "MGARD"
+    }
+
+    fn compress(&self, data: &Tensor<T>, tol: Tolerance) -> Result<Vec<u8>> {
+        let tau = tol.absolute(data.value_range());
+        if tau <= 0.0 {
+            return Err(Error::invalid("tolerance must be positive"));
+        }
+        let hierarchy = Hierarchy::new(data.shape(), self.cfg.max_levels)?;
+        let dec = Decomposer::new(hierarchy.clone(), self.cfg.flags)?.decompose(data)?;
+        let levels = hierarchy.nlevels() + 1;
+        // uniform split of the L∞ budget across all levels (the pre-§4.1
+        // strategy): every tier gets τ / (C · #tiers)
+        let tau_level = tau / (self.cfg.c_linf * levels as f64);
+
+        let mut qs = QuantStream::default();
+        quantize(dec.coarse.data(), tau_level, &mut qs);
+        for stream in &dec.coeffs {
+            quantize(stream, tau_level, &mut qs);
+        }
+
+        let mut payload = Vec::new();
+        write_u64(&mut payload, self.cfg.max_levels.map_or(0, |v| v as u64 + 1));
+        write_section(&mut payload, &huffman_encode(&qs.symbols));
+        write_section(&mut payload, &qs.escapes_to_bytes());
+        let compressed = zstd_compress(&payload, self.cfg.zstd_level)?;
+
+        let mut out = Vec::with_capacity(compressed.len() + 64);
+        Header {
+            method: Method::Mgard,
+            dtype: T::DTYPE_TAG,
+            shape: data.shape().to_vec(),
+            tau_abs: tau,
+        }
+        .write(&mut out);
+        write_u64(&mut out, payload.len() as u64);
+        out.extend_from_slice(&compressed);
+        Ok(out)
+    }
+
+    fn decompress(&self, bytes: &[u8]) -> Result<Tensor<T>> {
+        let (header, mut r) = Header::read(bytes)?;
+        header.expect::<T>(Method::Mgard)?;
+        let payload_len = r.usize()?;
+        let payload = zstd_decompress(r.bytes(r.remaining())?, payload_len)?;
+        let mut pr = ByteReader::new(&payload);
+        let max_levels_enc = pr.usize()?;
+        let max_levels = if max_levels_enc == 0 {
+            None
+        } else {
+            Some(max_levels_enc - 1)
+        };
+        let symbols = huffman_decode(pr.section()?)?;
+        let escapes = QuantStream::escapes_from_bytes(pr.section()?)?;
+
+        let hierarchy = Hierarchy::new(&header.shape, max_levels)?;
+        let levels = hierarchy.nlevels() + 1;
+        let tau_level = header.tau_abs / (self.cfg.c_linf * levels as f64);
+
+        // expected stream lengths
+        let coarse_n = hierarchy.level_numel(0);
+        let mut cursor = 0usize;
+        let mut esc_cursor = 0usize;
+        let take = |cursor: &mut usize, n: usize| -> Result<std::ops::Range<usize>> {
+            if *cursor + n > symbols.len() {
+                return Err(Error::corrupt("quantized stream too short"));
+            }
+            let r = *cursor..*cursor + n;
+            *cursor += n;
+            Ok(r)
+        };
+        let mut coarse_vals: Vec<T> = Vec::with_capacity(coarse_n);
+        dequantize(
+            &symbols[take(&mut cursor, coarse_n)?],
+            &escapes,
+            &mut esc_cursor,
+            tau_level,
+            &mut coarse_vals,
+        )?;
+        let mut coeffs = Vec::with_capacity(hierarchy.nlevels());
+        for l in 1..=hierarchy.nlevels() {
+            let n = hierarchy.num_coeff_nodes(l);
+            let mut vals: Vec<T> = Vec::with_capacity(n);
+            dequantize(
+                &symbols[take(&mut cursor, n)?],
+                &escapes,
+                &mut esc_cursor,
+                tau_level,
+                &mut vals,
+            )?;
+            coeffs.push(vals);
+        }
+
+        let dec = Decomposition {
+            hierarchy: hierarchy.clone(),
+            start_level: 0,
+            coarse: Tensor::from_vec(&hierarchy.level_shape(0), coarse_vals)?,
+            coeffs,
+        };
+        // decompression always uses the fast engine (identical math)
+        Decomposer::new(hierarchy, OptFlags::all())?.recompose(&dec)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::linf_error;
+
+    #[test]
+    fn error_bound_smooth_field() {
+        let t = crate::data::synth::smooth_test_field(&[17, 17, 17]);
+        let m = Mgard::optimized_engine();
+        for tau in [1e-1, 1e-2, 1e-3] {
+            let bytes = m.compress(&t, Tolerance::Abs(tau)).unwrap();
+            let back: Tensor<f32> = m.decompress(&bytes).unwrap();
+            let err = linf_error(t.data(), back.data());
+            assert!(err <= tau, "τ={tau}: err {err}");
+        }
+    }
+
+    #[test]
+    fn baseline_and_optimized_engines_interoperate() {
+        let t = crate::data::synth::smooth_test_field(&[9, 12]);
+        let slow = Mgard::default(); // baseline engine
+        let bytes = slow.compress(&t, Tolerance::Abs(1e-2)).unwrap();
+        // decompress (always fast engine) must still honour the bound
+        let back: Tensor<f32> = slow.decompress(&bytes).unwrap();
+        assert!(linf_error(t.data(), back.data()) <= 1e-2);
+    }
+
+    #[test]
+    fn compresses_smooth_data_well() {
+        let t = crate::data::synth::smooth_test_field(&[33, 33, 33]);
+        let m = Mgard::optimized_engine();
+        let bytes = m.compress(&t, Tolerance::Rel(1e-2)).unwrap();
+        assert!(
+            bytes.len() < t.nbytes() / 8,
+            "CR too low: {} vs {}",
+            bytes.len(),
+            t.nbytes()
+        );
+    }
+
+    #[test]
+    fn max_levels_round_trips_through_container() {
+        let t = crate::data::synth::smooth_test_field(&[17, 17]);
+        let m = Mgard::new(MgardConfig {
+            flags: OptFlags::all(),
+            max_levels: Some(2),
+            ..MgardConfig::default()
+        });
+        let bytes = m.compress(&t, Tolerance::Abs(1e-2)).unwrap();
+        let back: Tensor<f32> = m.decompress(&bytes).unwrap();
+        assert!(linf_error(t.data(), back.data()) <= 1e-2);
+    }
+}

@@ -1,0 +1,109 @@
+//! Error-bounded lossy compressors: MGARD+ (§4/Alg. 1), plus faithful-shape
+//! reimplementations of the paper's comparison points — MGARD [11], SZ [7],
+//! ZFP [3] and the hybrid model [9].
+//!
+//! All compressors implement [`Compressor`]: compress a [`Tensor`] under an
+//! L∞ [`Tolerance`] into a self-describing byte container, and decompress it
+//! back. Every implementation guarantees `‖u − ũ‖_∞ ≤ τ` (tested in
+//! `rust/tests/error_bounds.rs`).
+
+mod format;
+mod hybrid;
+mod mgard;
+mod mgard_plus;
+mod sz;
+mod zfp;
+
+pub use format::{Header, Method};
+pub use hybrid::{Hybrid, HybridConfig};
+pub use mgard::{Mgard, MgardConfig};
+pub use mgard_plus::{ExternalChoice, MgardPlus, MgardPlusConfig};
+pub use sz::{Sz, SzConfig};
+pub use zfp::{Zfp, ZfpConfig};
+
+use crate::error::Result;
+use crate::tensor::{Scalar, Tensor};
+
+/// L∞ error tolerance specification.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Tolerance {
+    /// Absolute bound on `max_i |u_i − ũ_i|`.
+    Abs(f64),
+    /// Bound relative to the value range: `τ_abs = rel · (max u − min u)`.
+    Rel(f64),
+}
+
+impl Tolerance {
+    /// Resolve to an absolute tolerance given the data's value range.
+    pub fn absolute(&self, value_range: f64) -> f64 {
+        match *self {
+            Tolerance::Abs(t) => t,
+            Tolerance::Rel(r) => {
+                let range = if value_range > 0.0 { value_range } else { 1.0 };
+                r * range
+            }
+        }
+    }
+}
+
+/// A lossy error-bounded compressor over tensors of `T`.
+pub trait Compressor<T: Scalar> {
+    /// Short display name (used in benchmark tables).
+    fn name(&self) -> &'static str;
+
+    /// Compress `data` with the given L∞ tolerance.
+    fn compress(&self, data: &Tensor<T>, tol: Tolerance) -> Result<Vec<u8>>;
+
+    /// Decompress a container produced by this compressor.
+    fn decompress(&self, bytes: &[u8]) -> Result<Tensor<T>>;
+}
+
+/// Decompress any container produced by any compressor in this crate,
+/// dispatching on the header's method tag.
+pub fn decompress_any<T: Scalar>(bytes: &[u8]) -> Result<Tensor<T>> {
+    let method = format::peek_method(bytes)?;
+    match method {
+        Method::Mgard => Mgard::default().decompress(bytes),
+        Method::MgardPlus => MgardPlus::default().decompress(bytes),
+        Method::Sz => Sz::default().decompress(bytes),
+        Method::Zfp => Zfp::default().decompress(bytes),
+        Method::Hybrid => Hybrid::default().decompress(bytes),
+    }
+}
+
+/// All five compressors with their default configurations (the Fig. 8/10/11
+/// comparison set).
+pub fn all_compressors<T: Scalar>() -> Vec<Box<dyn Compressor<T>>> {
+    vec![
+        Box::new(Sz::default()),
+        Box::new(Zfp::default()),
+        Box::new(Hybrid::default()),
+        Box::new(Mgard::default()),
+        Box::new(MgardPlus::default()),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tolerance_resolution() {
+        assert_eq!(Tolerance::Abs(0.5).absolute(100.0), 0.5);
+        assert_eq!(Tolerance::Rel(1e-3).absolute(100.0), 0.1);
+        // degenerate constant field: fall back to unit range
+        assert_eq!(Tolerance::Rel(1e-3).absolute(0.0), 1e-3);
+    }
+
+    #[test]
+    fn compressor_set_is_complete() {
+        let set = all_compressors::<f32>();
+        assert_eq!(set.len(), 5);
+        let names: Vec<_> = set.iter().map(|c| c.name()).collect();
+        assert!(names.contains(&"SZ"));
+        assert!(names.contains(&"ZFP"));
+        assert!(names.contains(&"HybridModel"));
+        assert!(names.contains(&"MGARD"));
+        assert!(names.contains(&"MGARD+"));
+    }
+}

@@ -1,0 +1,605 @@
+//! ZFP-style transform-based error-bounded compressor ([3], fixed-accuracy
+//! mode), the paper's fastest baseline.
+//!
+//! Faithful-shape reimplementation: data is partitioned into 4ᵈ blocks;
+//! each block is aligned to a common exponent (block-floating-point),
+//! converted to fixed point, decorrelated by zfp's non-orthogonal lifting
+//! transform along each dimension, mapped to negabinary, and coded bit-plane
+//! by bit-plane with embedded group testing. Accuracy mode discards planes
+//! below the tolerance-derived cutoff.
+
+use super::format::{Header, Method};
+use super::{Compressor, Tolerance};
+use crate::encode::{BitReader, BitWriter};
+use crate::encode::{zstd_compress, zstd_decompress};
+use crate::encode::varint::write_u64;
+use crate::error::{Error, Result};
+use crate::tensor::{strides_for, Scalar, Tensor};
+
+/// ZFP configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct ZfpConfig {
+    /// zstd level applied to the bitstream (zfp itself doesn't, but the
+    /// paper's pipelines all end in a lossless stage; level 1 keeps the
+    /// throughput character).
+    pub zstd_level: i32,
+}
+
+impl Default for ZfpConfig {
+    fn default() -> Self {
+        ZfpConfig { zstd_level: 1 }
+    }
+}
+
+/// The ZFP compressor.
+#[derive(Clone, Debug, Default)]
+pub struct Zfp {
+    cfg: ZfpConfig,
+}
+
+impl Zfp {
+    /// Build with an explicit configuration.
+    pub fn new(cfg: ZfpConfig) -> Self {
+        Zfp { cfg }
+    }
+}
+
+const EDGE: usize = 4;
+const NBMASK: u64 = 0xaaaa_aaaa_aaaa_aaaa;
+
+/// Fixed-point precision: 30 value bits + 2 guard bits for f32-class data,
+/// wider for f64 (transform growth stays within i64).
+pub(crate) fn intprec<T: Scalar>() -> u32 {
+    if T::BYTES == 4 {
+        32
+    } else {
+        56
+    }
+}
+
+/// zfp forward lifting transform on 4 elements at stride `s`.
+#[inline]
+fn fwd_lift(p: &mut [i64], base: usize, s: usize) {
+    let (mut x, mut y, mut z, mut w) = (p[base], p[base + s], p[base + 2 * s], p[base + 3 * s]);
+    x += w;
+    x >>= 1;
+    w -= x;
+    z += y;
+    z >>= 1;
+    y -= z;
+    x += z;
+    x >>= 1;
+    z -= x;
+    w += y;
+    w >>= 1;
+    y -= w;
+    w += y >> 1;
+    y -= w >> 1;
+    p[base] = x;
+    p[base + s] = y;
+    p[base + 2 * s] = z;
+    p[base + 3 * s] = w;
+}
+
+/// zfp inverse lifting transform: reverses each [`fwd_lift`] step. The `>>1`
+/// steps of the forward pass drop a low bit, so the pair round-trips to
+/// within 2 fixed-point ULPs (absorbed by the 2·(d+1)-bit precision guard),
+/// exactly like the reference implementation.
+#[inline]
+fn inv_lift(p: &mut [i64], base: usize, s: usize) {
+    let (mut x, mut y, mut z, mut w) = (p[base], p[base + s], p[base + 2 * s], p[base + 3 * s]);
+    y += w >> 1;
+    w -= y >> 1;
+    y += w;
+    w <<= 1;
+    w -= y;
+    z += x;
+    x <<= 1;
+    x -= z;
+    y += z;
+    z <<= 1;
+    z -= y;
+    w += x;
+    x <<= 1;
+    x -= w;
+    p[base] = x;
+    p[base + s] = y;
+    p[base + 2 * s] = z;
+    p[base + 3 * s] = w;
+}
+
+/// Total-sequency permutation of block coefficients (low-frequency first).
+fn sequency_perm(d: usize) -> Vec<usize> {
+    let size = EDGE.pow(d as u32);
+    let mut idx: Vec<usize> = (0..size).collect();
+    let digitsum = |mut i: usize| {
+        let mut s = 0;
+        for _ in 0..d {
+            s += i % EDGE;
+            i /= EDGE;
+        }
+        s
+    };
+    idx.sort_by_key(|&i| (digitsum(i), i));
+    idx
+}
+
+#[inline]
+fn int_to_negabinary(v: i64) -> u64 {
+    ((v as u64).wrapping_add(NBMASK)) ^ NBMASK
+}
+
+#[inline]
+fn negabinary_to_int(u: u64) -> i64 {
+    (u ^ NBMASK).wrapping_sub(NBMASK) as i64
+}
+
+/// 256-bit plane bitset (4-D blocks have 256 coefficients).
+#[derive(Clone, Copy, Default)]
+struct Plane([u64; 4]);
+
+impl Plane {
+    #[inline]
+    fn set(&mut self, i: usize) {
+        self.0[i >> 6] |= 1u64 << (i & 63);
+    }
+    #[inline]
+    fn get(&self, i: usize) -> bool {
+        self.0[i >> 6] >> (i & 63) & 1 == 1
+    }
+    /// First set bit at position >= i, if any (up to `size`).
+    fn first_set_from(&self, i: usize, size: usize) -> Option<usize> {
+        let mut word = i >> 6;
+        let mut mask = !0u64 << (i & 63);
+        while word < 4 {
+            let bits = self.0[word] & mask;
+            if bits != 0 {
+                let j = (word << 6) + bits.trailing_zeros() as usize;
+                return if j < size { Some(j) } else { None };
+            }
+            word += 1;
+            mask = !0;
+        }
+        None
+    }
+}
+
+/// Embedded encoding of one block's negabinary coefficients.
+fn encode_block_planes(neg: &[u64], size: usize, kmin: u32, prec: u32, w: &mut BitWriter) {
+    let mut n = 0usize;
+    for k in (kmin..prec).rev() {
+        let mut plane = Plane::default();
+        for (i, &v) in neg.iter().enumerate() {
+            if v >> k & 1 == 1 {
+                plane.set(i);
+            }
+        }
+        // verbatim bits for already-significant coefficients
+        for i in 0..n {
+            w.write_bit(plane.get(i));
+        }
+        let mut i = n;
+        while i < size {
+            match plane.first_set_from(i, size) {
+                None => {
+                    w.write_bit(false);
+                    break;
+                }
+                Some(j) => {
+                    w.write_bit(true);
+                    while i < j {
+                        w.write_bit(false);
+                        i += 1;
+                    }
+                    if j == size - 1 {
+                        i = size; // implied by the group test
+                    } else {
+                        w.write_bit(true);
+                        i = j + 1;
+                    }
+                }
+            }
+        }
+        n = n.max(i);
+    }
+}
+
+/// Inverse of [`encode_block_planes`].
+fn decode_block_planes(
+    size: usize,
+    kmin: u32,
+    prec: u32,
+    r: &mut BitReader,
+) -> Result<Vec<u64>> {
+    let mut neg = vec![0u64; size];
+    let mut n = 0usize;
+    let err = || Error::corrupt("zfp bitstream truncated");
+    for k in (kmin..prec).rev() {
+        for item in neg.iter_mut().take(n) {
+            if r.read_bit().ok_or_else(err)? {
+                *item |= 1u64 << k;
+            }
+        }
+        let mut i = n;
+        while i < size {
+            let any = r.read_bit().ok_or_else(err)?;
+            if !any {
+                break;
+            }
+            loop {
+                if i == size - 1 {
+                    neg[i] |= 1u64 << k;
+                    i = size;
+                    break;
+                }
+                let b = r.read_bit().ok_or_else(err)?;
+                if b {
+                    neg[i] |= 1u64 << k;
+                    i += 1;
+                    break;
+                }
+                i += 1;
+            }
+        }
+        n = n.max(i);
+    }
+    Ok(neg)
+}
+
+/// Encode one 4^d block of f64 values at tolerance `tau` (flag bit, emax,
+/// transform, embedded planes). Shared by [`Zfp`] and the hybrid model's
+/// transform predictor.
+pub(crate) fn encode_block_f64(
+    block: &[f64],
+    d: usize,
+    tau: f64,
+    prec: u32,
+    w: &mut BitWriter,
+) {
+    let size = EDGE.pow(d as u32);
+    debug_assert_eq!(block.len(), size);
+    let bstrides: Vec<usize> = (0..d).map(|k| EDGE.pow((d - 1 - k) as u32)).collect();
+    let minexp = tau.log2().floor() as i32;
+    let maxabs = block.iter().fold(0.0f64, |m, &v| m.max(v.abs()));
+    if maxabs == 0.0 || !maxabs.is_finite() {
+        w.write_bit(false);
+        return;
+    }
+    w.write_bit(true);
+    let emax = exponent(maxabs);
+    w.write_bits((emax + 16384) as u64, 15);
+    let scale = (2f64).powi(prec as i32 - 2 - emax);
+    let mut ints: Vec<i64> = block.iter().map(|&v| (v * scale) as i64).collect();
+    for k in 0..d {
+        let s = bstrides[k];
+        for base in line_bases(d, k, &bstrides) {
+            fwd_lift(&mut ints, base, s);
+        }
+    }
+    let perm = sequency_perm(d);
+    let neg: Vec<u64> = perm.iter().map(|&i| int_to_negabinary(ints[i])).collect();
+    let maxprec = (emax - minexp + 2 * (d as i32 + 1)).clamp(0, prec as i32) as u32;
+    let kmin = prec - maxprec;
+    encode_block_planes(&neg, size, kmin, prec, w);
+}
+
+/// Inverse of [`encode_block_f64`].
+pub(crate) fn decode_block_f64(
+    d: usize,
+    tau: f64,
+    prec: u32,
+    r: &mut BitReader,
+) -> Result<Vec<f64>> {
+    let size = EDGE.pow(d as u32);
+    let bstrides: Vec<usize> = (0..d).map(|k| EDGE.pow((d - 1 - k) as u32)).collect();
+    let minexp = tau.log2().floor() as i32;
+    let nonzero = r
+        .read_bit()
+        .ok_or_else(|| Error::corrupt("zfp block stream truncated (flag)"))?;
+    if !nonzero {
+        return Ok(vec![0.0; size]);
+    }
+    let emax = r
+        .read_bits(15)
+        .ok_or_else(|| Error::corrupt("zfp block stream truncated (emax)"))? as i32
+        - 16384;
+    let maxprec = (emax - minexp + 2 * (d as i32 + 1)).clamp(0, prec as i32) as u32;
+    let kmin = prec - maxprec;
+    let negv = decode_block_planes(size, kmin, prec, r)?;
+    let perm = sequency_perm(d);
+    let mut ints = vec![0i64; size];
+    for (i, &p) in perm.iter().enumerate() {
+        ints[p] = negabinary_to_int(negv[i]);
+    }
+    for k in (0..d).rev() {
+        let s = bstrides[k];
+        for base in line_bases(d, k, &bstrides) {
+            inv_lift(&mut ints, base, s);
+        }
+    }
+    let scale = (2f64).powi(-(prec as i32 - 2 - emax));
+    Ok(ints.iter().map(|&v| v as f64 * scale).collect())
+}
+
+/// Exponent of the largest magnitude: smallest e with `maxabs < 2^e`.
+fn exponent(maxabs: f64) -> i32 {
+    debug_assert!(maxabs > 0.0);
+    let mut e = maxabs.log2().floor() as i32 + 1;
+    // guard against log2 rounding at power-of-two boundaries
+    while maxabs >= (2f64).powi(e) {
+        e += 1;
+    }
+    while e > i32::MIN + 1 && maxabs < (2f64).powi(e - 1) {
+        e -= 1;
+    }
+    e
+}
+
+impl<T: Scalar> Compressor<T> for Zfp {
+    fn name(&self) -> &'static str {
+        "ZFP"
+    }
+
+    fn compress(&self, data: &Tensor<T>, tol: Tolerance) -> Result<Vec<u8>> {
+        let tau = tol.absolute(data.value_range());
+        if tau <= 0.0 {
+            return Err(Error::invalid("tolerance must be positive"));
+        }
+        let shape = data.shape().to_vec();
+        let d = shape.len();
+        if d > 4 {
+            return Err(Error::invalid("ZFP supports up to 4 dimensions"));
+        }
+        let strides = strides_for(&shape);
+        let src = data.data();
+        let prec = intprec::<T>();
+        let size = EDGE.pow(d as u32);
+
+        let nblocks: Vec<usize> = shape.iter().map(|&n| n.div_ceil(EDGE)).collect();
+        let total_blocks: usize = nblocks.iter().product();
+        let mut w = BitWriter::new();
+        let mut block = vec![0f64; size];
+        let mut bidx = vec![0usize; d];
+        for _ in 0..total_blocks {
+            // gather block with edge-replication padding for partial blocks
+            let mut iidx = vec![0usize; d];
+            for item in block.iter_mut() {
+                let mut off = 0;
+                for k in 0..d {
+                    let x = (bidx[k] * EDGE + iidx[k]).min(shape[k] - 1);
+                    off += x * strides[k];
+                }
+                *item = src[off].to_f64();
+                for k in (0..d).rev() {
+                    iidx[k] += 1;
+                    if iidx[k] < EDGE {
+                        break;
+                    }
+                    iidx[k] = 0;
+                }
+            }
+            encode_block_f64(&block, d, tau, prec, &mut w);
+            for k in (0..d).rev() {
+                bidx[k] += 1;
+                if bidx[k] < nblocks[k] {
+                    break;
+                }
+                bidx[k] = 0;
+            }
+        }
+
+        let payload = w.finish();
+        let compressed = zstd_compress(&payload, self.cfg.zstd_level)?;
+        let mut out = Vec::with_capacity(compressed.len() + 64);
+        Header {
+            method: Method::Zfp,
+            dtype: T::DTYPE_TAG,
+            shape,
+            tau_abs: tau,
+        }
+        .write(&mut out);
+        write_u64(&mut out, payload.len() as u64);
+        out.extend_from_slice(&compressed);
+        Ok(out)
+    }
+
+    fn decompress(&self, bytes: &[u8]) -> Result<Tensor<T>> {
+        let (header, mut r) = Header::read(bytes)?;
+        header.expect::<T>(Method::Zfp)?;
+        let shape = header.shape.clone();
+        let d = shape.len();
+        let strides = strides_for(&shape);
+        let tau = header.tau_abs;
+        let prec = intprec::<T>();
+
+        let payload_len = r.usize()?;
+        let payload = zstd_decompress(r.bytes(r.remaining())?, payload_len)?;
+        let mut br = BitReader::new(&payload);
+
+        let n: usize = shape.iter().product();
+        let mut out = vec![T::ZERO; n];
+        let nblocks: Vec<usize> = shape.iter().map(|&s| s.div_ceil(EDGE)).collect();
+        let total_blocks: usize = nblocks.iter().product();
+        let mut bidx = vec![0usize; d];
+        for _ in 0..total_blocks {
+            let block = decode_block_f64(d, tau, prec, &mut br)?;
+            // scatter in-domain values
+            let mut iidx = vec![0usize; d];
+            for item in block.iter() {
+                let mut off = 0;
+                let mut in_domain = true;
+                for k in 0..d {
+                    let x = bidx[k] * EDGE + iidx[k];
+                    if x >= shape[k] {
+                        in_domain = false;
+                        break;
+                    }
+                    off += x * strides[k];
+                }
+                if in_domain {
+                    out[off] = T::from_f64(*item);
+                }
+                for k in (0..d).rev() {
+                    iidx[k] += 1;
+                    if iidx[k] < EDGE {
+                        break;
+                    }
+                    iidx[k] = 0;
+                }
+            }
+            for k in (0..d).rev() {
+                bidx[k] += 1;
+                if bidx[k] < nblocks[k] {
+                    break;
+                }
+                bidx[k] = 0;
+            }
+        }
+        Tensor::from_vec(&shape, out)
+    }
+}
+
+/// Base offsets of all 4-element lines along `dim` within a 4^d block.
+fn line_bases(d: usize, dim: usize, bstrides: &[usize]) -> Vec<usize> {
+    let mut bases = vec![0usize];
+    for k in 0..d {
+        if k == dim {
+            continue;
+        }
+        let mut next = Vec::with_capacity(bases.len() * EDGE);
+        for &b in &bases {
+            for i in 0..EDGE {
+                next.push(b + i * bstrides[k]);
+            }
+        }
+        bases = next;
+    }
+    bases
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::rng::Rng;
+    use crate::metrics::linf_error;
+
+    #[test]
+    fn lift_round_trip_within_rounding() {
+        // the lifting pair loses at most 2 fixed-point ULPs (see inv_lift docs)
+        let mut rng = Rng::new(1);
+        for _ in 0..10_000 {
+            let orig: Vec<i64> = (0..4).map(|_| rng.uniform_in(-1e9, 1e9) as i64).collect();
+            let mut p = orig.clone();
+            fwd_lift(&mut p, 0, 1);
+            inv_lift(&mut p, 0, 1);
+            for (a, b) in p.iter().zip(&orig) {
+                assert!((a - b).abs() <= 2, "{p:?} vs {orig:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn negabinary_round_trip() {
+        for v in [0i64, 1, -1, 12345, -98765, i32::MAX as i64, i32::MIN as i64] {
+            assert_eq!(negabinary_to_int(int_to_negabinary(v)), v);
+        }
+    }
+
+    #[test]
+    fn plane_coder_self_consistent() {
+        let mut rng = Rng::new(9);
+        for d in 1..=4usize {
+            let size = EDGE.pow(d as u32);
+            let neg: Vec<u64> = (0..size)
+                .map(|_| rng.next_u64() & 0xffff_ffff)
+                .collect();
+            let mut w = BitWriter::new();
+            encode_block_planes(&neg, size, 0, 32, &mut w);
+            let bytes = w.finish();
+            let mut r = BitReader::new(&bytes);
+            let back = decode_block_planes(size, 0, 32, &mut r).unwrap();
+            assert_eq!(back, neg, "d={d}");
+        }
+    }
+
+    #[test]
+    fn plane_coder_truncated_planes() {
+        // with kmin > 0, only the top planes survive
+        let neg = vec![0b1111_0000u64; 16];
+        let mut w = BitWriter::new();
+        encode_block_planes(&neg, 16, 4, 8, &mut w);
+        let bytes = w.finish();
+        let mut r = BitReader::new(&bytes);
+        let back = decode_block_planes(16, 4, 8, &mut r).unwrap();
+        assert_eq!(back, neg);
+    }
+
+    #[test]
+    fn exponent_helper() {
+        assert_eq!(exponent(1.0), 1); // 1.0 = 0.5 * 2^1
+        assert_eq!(exponent(0.99), 0);
+        assert_eq!(exponent(2.0), 2);
+        assert_eq!(exponent(0.25), -1);
+    }
+
+    fn check_bound<T: Scalar>(t: &Tensor<T>, tau: f64) -> usize {
+        let z = Zfp::default();
+        let bytes = z.compress(t, Tolerance::Abs(tau)).unwrap();
+        let back: Tensor<T> = z.decompress(&bytes).unwrap();
+        let err = linf_error(t.data(), back.data());
+        assert!(err <= tau, "L∞ {err} > τ {tau}");
+        bytes.len()
+    }
+
+    #[test]
+    fn smooth_3d_bound_and_ratio() {
+        let t = crate::data::synth::smooth_test_field(&[20, 20, 20]);
+        let size = check_bound(&t, 1e-3);
+        assert!(size < t.nbytes() / 3, "{size} vs {}", t.nbytes());
+    }
+
+    #[test]
+    fn random_data_bounded() {
+        let mut rng = Rng::new(3);
+        let t = Tensor::<f32>::from_fn(&[11, 13], |_| rng.uniform_in(-2.0, 2.0) as f32);
+        check_bound(&t, 0.01);
+    }
+
+    #[test]
+    fn dims_1_through_4() {
+        for shape in [vec![40usize], vec![9, 11], vec![6, 7, 8], vec![5, 5, 5, 5]] {
+            let t = Tensor::<f32>::from_fn(&shape, |ix| {
+                (ix.iter().sum::<usize>() as f32 * 0.37).sin()
+            });
+            check_bound(&t, 1e-3);
+        }
+    }
+
+    #[test]
+    fn f64_tight_tolerance() {
+        let t = Tensor::<f64>::from_fn(&[9, 9, 9], |ix| {
+            ((ix[0] as f64) * 0.3).sin() + (ix[1] as f64 * ix[2] as f64) * 1e-4
+        });
+        check_bound(&t, 1e-9);
+    }
+
+    #[test]
+    fn zero_field_compresses_to_flags() {
+        let t = Tensor::<f32>::zeros(&[16, 16, 16]);
+        let z = Zfp::default();
+        let bytes = z.compress(&t, Tolerance::Abs(1e-3)).unwrap();
+        let back: Tensor<f32> = z.decompress(&bytes).unwrap();
+        assert_eq!(back.data(), t.data());
+        assert!(bytes.len() < 200, "zero field should be ~1 bit/block: {}", bytes.len());
+    }
+
+    #[test]
+    fn huge_dynamic_range() {
+        let mut rng = Rng::new(7);
+        let t = Tensor::<f32>::from_fn(&[12, 12, 12], |_| {
+            ((rng.uniform_in(-8.0, 8.0) as f32).exp()) * 1e3
+        });
+        let tau = t.value_range() * 1e-3;
+        check_bound(&t, tau);
+    }
+}

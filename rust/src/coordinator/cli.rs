@@ -1,0 +1,415 @@
+//! The `mgardp` command-line interface (hand-rolled; no argv-parsing crates
+//! exist in the offline vendor set).
+
+use super::config::Config;
+use super::pipeline::{self, PipelineConfig};
+use super::refactor::RefactorStore;
+use super::registry::Registry;
+use crate::analysis::isosurface_area_scaled;
+use crate::compressors::{decompress_any, Tolerance};
+use crate::data::{io, synth};
+use crate::error::{Error, Result};
+use crate::metrics;
+use crate::runtime::{artifacts_dir, XlaLevelStep, XlaRuntime};
+use crate::tensor::Tensor;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Parsed `--key value` arguments.
+pub struct Args {
+    flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse `--key value` pairs (booleans may omit the value).
+    pub fn parse(argv: &[String]) -> Result<Args> {
+        let mut flags = BTreeMap::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            let Some(key) = a.strip_prefix("--") else {
+                return Err(Error::Config(format!("unexpected argument `{a}`")));
+            };
+            if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                flags.insert(key.to_string(), argv[i + 1].clone());
+                i += 2;
+            } else {
+                flags.insert(key.to_string(), "true".to_string());
+                i += 1;
+            }
+        }
+        Ok(Args { flags })
+    }
+
+    /// Required string flag.
+    pub fn req(&self, key: &str) -> Result<&str> {
+        self.flags
+            .get(key)
+            .map(|s| s.as_str())
+            .ok_or_else(|| Error::Config(format!("missing required flag --{key}")))
+    }
+
+    /// Optional string flag.
+    pub fn opt(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    /// Optional f64 flag.
+    pub fn f64_opt(&self, key: &str) -> Result<Option<f64>> {
+        self.flags
+            .get(key)
+            .map(|s| {
+                s.parse::<f64>()
+                    .map_err(|_| Error::Config(format!("--{key} expects a number, got `{s}`")))
+            })
+            .transpose()
+    }
+
+    /// Optional usize flag with default.
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(s) => s
+                .parse::<usize>()
+                .map_err(|_| Error::Config(format!("--{key} expects an integer, got `{s}`"))),
+        }
+    }
+}
+
+/// Parse `64x64x64`-style shape strings.
+pub fn parse_shape(s: &str) -> Result<Vec<usize>> {
+    s.split(['x', ','])
+        .map(|p| {
+            p.trim()
+                .parse::<usize>()
+                .map_err(|_| Error::Config(format!("bad shape component `{p}`")))
+        })
+        .collect()
+}
+
+fn tolerance_from(args: &Args) -> Result<Tolerance> {
+    match (args.f64_opt("rel")?, args.f64_opt("abs")?) {
+        (Some(r), None) => Ok(Tolerance::Rel(r)),
+        (None, Some(a)) => Ok(Tolerance::Abs(a)),
+        (None, None) => Ok(Tolerance::Rel(1e-3)),
+        _ => Err(Error::Config("pass either --rel or --abs, not both".into())),
+    }
+}
+
+/// Top-level usage text.
+pub const USAGE: &str = "\
+mgardp — MGARD+ multilevel error-bounded scientific data reduction
+
+USAGE: mgardp <command> [--flag value ...]
+
+COMMANDS:
+  compress    --input F --shape ZxYxX --output F [--method mgard+|mgard|sz|zfp|hybrid] [--rel R | --abs A]
+  decompress  --input F --output F
+  info        --input F
+  synth       --out DIR [--dataset all|hurricane|nyx|scale|qmcpack] [--scale S] [--seed N]
+  pipeline    --config FILE  (sections: [pipeline] workers/method/rel_tol/verify, [data] scale/seed)
+  refactor    --input F --shape ZxYxX --store DIR --field NAME
+  reconstruct --store DIR --field NAME --level L --output F
+  analyze     --input F --shape ZxYxX --iso V  (iso-surface area)
+  penalties   (print the calibrated §4.2.2 penalty factors)
+  xla-smoke   [--artifacts DIR] [--n 33]  (load + run the AOT level-step artifact)
+";
+
+/// Run a subcommand; returns the process exit code.
+pub fn run(command: &str, argv: &[String]) -> Result<()> {
+    let args = Args::parse(argv)?;
+    match command {
+        "compress" => cmd_compress(&args),
+        "decompress" => cmd_decompress(&args),
+        "info" => cmd_info(&args),
+        "synth" => cmd_synth(&args),
+        "pipeline" => cmd_pipeline(&args),
+        "refactor" => cmd_refactor(&args),
+        "reconstruct" => cmd_reconstruct(&args),
+        "analyze" => cmd_analyze(&args),
+        "penalties" => cmd_penalties(),
+        "xla-smoke" => cmd_xla_smoke(&args),
+        other => Err(Error::Config(format!("unknown command `{other}`\n\n{USAGE}"))),
+    }
+}
+
+fn cmd_compress(args: &Args) -> Result<()> {
+    let shape = parse_shape(args.req("shape")?)?;
+    let input = PathBuf::from(args.req("input")?);
+    let output = PathBuf::from(args.req("output")?);
+    let method = args.opt("method").unwrap_or("mgard+");
+    let tol = tolerance_from(args)?;
+    let data: Tensor<f32> = io::read_raw(&input, &shape)?;
+    let compressor = pipeline::make_compressor(method)?;
+    let t0 = std::time::Instant::now();
+    let bytes = compressor.compress(&data, tol)?;
+    let secs = t0.elapsed().as_secs_f64();
+    std::fs::write(&output, &bytes)?;
+    println!(
+        "{method}: {} -> {} bytes (CR {:.2}) in {:.3}s ({:.1} MB/s)",
+        data.nbytes(),
+        bytes.len(),
+        metrics::compression_ratio(data.nbytes(), bytes.len()),
+        secs,
+        metrics::throughput_mbs(data.nbytes(), secs),
+    );
+    Ok(())
+}
+
+fn cmd_decompress(args: &Args) -> Result<()> {
+    let input = PathBuf::from(args.req("input")?);
+    let output = PathBuf::from(args.req("output")?);
+    let bytes = std::fs::read(&input)?;
+    let t0 = std::time::Instant::now();
+    let data: Tensor<f32> = decompress_any(&bytes)?;
+    let secs = t0.elapsed().as_secs_f64();
+    io::write_raw(&output, &data)?;
+    println!(
+        "decompressed {:?} in {:.3}s ({:.1} MB/s)",
+        data.shape(),
+        secs,
+        metrics::throughput_mbs(data.nbytes(), secs),
+    );
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let bytes = std::fs::read(args.req("input")?)?;
+    let (header, _) = crate::compressors::Header::read(&bytes)?;
+    println!("method : {:?}", header.method);
+    println!("dtype  : {}", if header.dtype == 1 { "f32" } else { "f64" });
+    println!("shape  : {:?}", header.shape);
+    println!("tau_abs: {:.6e}", header.tau_abs);
+    println!("bytes  : {}", bytes.len());
+    Ok(())
+}
+
+fn cmd_synth(args: &Args) -> Result<()> {
+    let out = PathBuf::from(args.req("out")?);
+    let which = args.opt("dataset").unwrap_or("all");
+    let scale = args.f64_opt("scale")?.unwrap_or(1.0);
+    let seed = args.usize_or("seed", 42)? as u64;
+    let datasets: Vec<synth::Dataset> = match which {
+        "all" => synth::all_datasets(scale, seed),
+        "hurricane" => vec![synth::hurricane_like(scale, seed)],
+        "nyx" => vec![synth::nyx_like(scale, seed)],
+        "scale" => vec![synth::scale_like(scale, seed)],
+        "qmcpack" => vec![synth::qmcpack_like(scale, seed)],
+        other => return Err(Error::Config(format!("unknown dataset `{other}`"))),
+    };
+    for ds in &datasets {
+        for f in &ds.fields {
+            let shape_s: Vec<String> = f.data.shape().iter().map(|d| d.to_string()).collect();
+            let path = out.join(format!("{}_{}_{}.f32", ds.name, f.name, shape_s.join("x")));
+            io::write_raw(&path, &f.data)?;
+            println!("wrote {} ({} bytes)", path.display(), f.data.nbytes());
+        }
+    }
+    Ok(())
+}
+
+fn cmd_pipeline(args: &Args) -> Result<()> {
+    let cfg = Config::load(Path::new(args.req("config")?))?;
+    let pcfg = PipelineConfig {
+        workers: cfg.int_or("pipeline", "workers", 1) as usize,
+        queue_depth: cfg.int_or("pipeline", "queue_depth", 4) as usize,
+        method: cfg.str_or("pipeline", "method", "mgard+"),
+        tolerance: Tolerance::Rel(cfg.float_or("pipeline", "rel_tol", 1e-3)),
+        verify: cfg.bool_or("pipeline", "verify", true),
+    };
+    let scale = cfg.float_or("data", "scale", 0.5);
+    let seed = cfg.int_or("data", "seed", 42) as u64;
+    let datasets = synth::all_datasets(scale, seed);
+    let registry = Registry::new();
+    let report = pipeline::run(&datasets, &pcfg, &registry)?;
+    println!(
+        "{:<10} {:<16} {:>12} {:>12} {:>8} {:>9} {:>9}",
+        "dataset", "field", "orig", "compressed", "CR", "MB/s", "PSNR"
+    );
+    for r in &report.results {
+        println!(
+            "{:<10} {:<16} {:>12} {:>12} {:>8.2} {:>9.1} {:>9.2}",
+            r.dataset,
+            r.field,
+            r.orig_bytes,
+            r.comp_bytes,
+            r.ratio(),
+            metrics::throughput_mbs(r.orig_bytes, r.compress_secs),
+            r.psnr.unwrap_or(f64::NAN),
+        );
+    }
+    println!(
+        "TOTAL: CR {:.2}, compress throughput {:.1} MB/s, wall {:.2}s",
+        report.overall_ratio(),
+        report.compress_throughput_mbs(),
+        report.wall_secs
+    );
+    println!("--- metrics ---\n{}", registry.snapshot());
+    Ok(())
+}
+
+fn cmd_refactor(args: &Args) -> Result<()> {
+    let shape = parse_shape(args.req("shape")?)?;
+    let data: Tensor<f32> = io::read_raw(Path::new(args.req("input")?), &shape)?;
+    let store = RefactorStore::create(args.req("store")?)?;
+    let manifest = store.write_field(args.req("field")?, &data, 3)?;
+    println!(
+        "refactored into {} components (levels {}..={}), bytes per component: {:?}",
+        manifest.component_bytes.len(),
+        manifest.start_level,
+        manifest.max_level,
+        manifest.component_bytes
+    );
+    Ok(())
+}
+
+fn cmd_reconstruct(args: &Args) -> Result<()> {
+    let store = RefactorStore::open(args.req("store")?)?;
+    let field = args.req("field")?;
+    let level = args.usize_or("level", 0)?;
+    let data: Tensor<f32> = store.reconstruct(field, level)?;
+    io::write_raw(Path::new(args.req("output")?), &data)?;
+    println!(
+        "reconstructed level {level} -> {:?} ({} bytes read)",
+        data.shape(),
+        store.bytes_up_to(field, level)?
+    );
+    Ok(())
+}
+
+fn cmd_analyze(args: &Args) -> Result<()> {
+    let shape = parse_shape(args.req("shape")?)?;
+    if shape.len() != 3 {
+        return Err(Error::Config("iso-surface analysis needs 3-D data".into()));
+    }
+    let data: Tensor<f32> = io::read_raw(Path::new(args.req("input")?), &shape)?;
+    let iso = args.f64_opt("iso")?.unwrap_or(0.0);
+    let h = args.f64_opt("spacing")?.unwrap_or(1.0);
+    let t0 = std::time::Instant::now();
+    let area = isosurface_area_scaled(&data, iso, h);
+    println!(
+        "iso-surface area at {iso}: {area:.6e} ({:.3}s)",
+        t0.elapsed().as_secs_f64()
+    );
+    Ok(())
+}
+
+fn cmd_penalties() -> Result<()> {
+    println!("Lorenzo penalty factors (×τ):");
+    for d in 1..=4 {
+        println!("  {d}-D: {:.3}", crate::adaptive::lorenzo_penalty_factor(d));
+    }
+    println!("correction error σ (×τ):");
+    for d in 1..=4 {
+        println!("  {d}-D: {:.3}", crate::adaptive::correction_error_sd(d));
+    }
+    println!("interpolation penalties (×τ) by #interpolated dims:");
+    for d in 1..=4 {
+        let p = crate::adaptive::interp_penalties(d);
+        let cats: Vec<String> = (1..=d).map(|q| format!("{:.3}", p[q])).collect();
+        println!("  {d}-D: [{}]", cats.join(", "));
+    }
+    println!("(paper, 3-D: Lorenzo 1.22; σ 0.283; edge/plane/cube 0.369/0.259/0.182)");
+    Ok(())
+}
+
+fn cmd_xla_smoke(args: &Args) -> Result<()> {
+    let dir = args
+        .opt("artifacts")
+        .map(PathBuf::from)
+        .unwrap_or_else(artifacts_dir);
+    let n = args.usize_or("n", 33)?;
+    let rt = XlaRuntime::cpu()?;
+    println!("PJRT platform: {}", rt.platform());
+    let step = XlaLevelStep::load(&rt, &dir, n)?;
+    let u = crate::data::synth::smooth_test_field(&[n, n, n]);
+    let (coarse, stream) = step.decompose(&u)?;
+    let back = step.recompose(&coarse, &stream)?;
+    let err = metrics::linf_error(u.data(), back.data());
+    println!(
+        "level step {n}³ -> {}³ + {} coefficients; round-trip L∞ = {err:.3e}",
+        step.coarse_size(),
+        stream.len()
+    );
+    if err > 1e-4 {
+        return Err(Error::Xla(format!("round-trip error too large: {err}")));
+    }
+    println!("xla-smoke OK");
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn s(v: &[&str]) -> Vec<String> {
+        v.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn args_parse_pairs_and_bools() {
+        let a = Args::parse(&s(&["--input", "x.f32", "--verbose", "--n", "3"])).unwrap();
+        assert_eq!(a.req("input").unwrap(), "x.f32");
+        assert_eq!(a.opt("verbose"), Some("true"));
+        assert_eq!(a.usize_or("n", 0).unwrap(), 3);
+        assert!(a.req("missing").is_err());
+    }
+
+    #[test]
+    fn shape_parsing() {
+        assert_eq!(parse_shape("100x500x500").unwrap(), vec![100, 500, 500]);
+        assert_eq!(parse_shape("8,9").unwrap(), vec![8, 9]);
+        assert!(parse_shape("8xfoo").is_err());
+    }
+
+    #[test]
+    fn tolerance_selection() {
+        let a = Args::parse(&s(&["--rel", "1e-2"])).unwrap();
+        assert_eq!(tolerance_from(&a).unwrap(), Tolerance::Rel(1e-2));
+        let b = Args::parse(&s(&["--abs", "0.5"])).unwrap();
+        assert_eq!(tolerance_from(&b).unwrap(), Tolerance::Abs(0.5));
+        let both = Args::parse(&s(&["--abs", "0.5", "--rel", "0.1"])).unwrap();
+        assert!(tolerance_from(&both).is_err());
+    }
+
+    #[test]
+    fn unknown_command_errors() {
+        assert!(run("frobnicate", &[]).is_err());
+    }
+
+    #[test]
+    fn compress_decompress_cycle_via_cli() {
+        let dir = std::env::temp_dir().join(format!("mgardp_cli_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let raw = dir.join("in.f32");
+        let t = crate::data::synth::smooth_test_field(&[12, 12, 12]);
+        io::write_raw(&raw, &t).unwrap();
+        let comp = dir.join("out.mgrp");
+        run(
+            "compress",
+            &s(&[
+                "--input",
+                raw.to_str().unwrap(),
+                "--shape",
+                "12x12x12",
+                "--output",
+                comp.to_str().unwrap(),
+                "--method",
+                "mgard+",
+                "--rel",
+                "1e-3",
+            ]),
+        )
+        .unwrap();
+        let rec = dir.join("rec.f32");
+        run(
+            "decompress",
+            &s(&["--input", comp.to_str().unwrap(), "--output", rec.to_str().unwrap()]),
+        )
+        .unwrap();
+        let back: Tensor<f32> = io::read_raw(&rec, &[12, 12, 12]).unwrap();
+        let tau = 1e-3 * t.value_range();
+        assert!(metrics::linf_error(t.data(), back.data()) <= tau);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

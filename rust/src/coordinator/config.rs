@@ -1,0 +1,218 @@
+//! Minimal TOML-subset configuration parser.
+//!
+//! Supports exactly what the pipeline needs (no external crates in the
+//! offline vendor set): `[section]` headers, `key = value` with quoted
+//! strings, integers, floats, booleans, and `#` comments.
+
+use crate::error::{Error, Result};
+use std::collections::BTreeMap;
+
+/// A parsed configuration value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    /// Quoted string.
+    Str(String),
+    /// Integer literal.
+    Int(i64),
+    /// Float literal.
+    Float(f64),
+    /// `true` / `false`.
+    Bool(bool),
+}
+
+impl Value {
+    /// String accessor.
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    /// Integer accessor (accepts exact floats).
+    pub fn as_int(&self) -> Option<i64> {
+        match *self {
+            Value::Int(v) => Some(v),
+            Value::Float(f) if f.fract() == 0.0 => Some(f as i64),
+            _ => None,
+        }
+    }
+    /// Float accessor (accepts ints).
+    pub fn as_float(&self) -> Option<f64> {
+        match *self {
+            Value::Float(v) => Some(v),
+            Value::Int(v) => Some(v as f64),
+            _ => None,
+        }
+    }
+    /// Bool accessor.
+    pub fn as_bool(&self) -> Option<bool> {
+        match *self {
+            Value::Bool(b) => Some(b),
+            _ => None,
+        }
+    }
+}
+
+/// Parsed configuration: `section.key -> value` (top-level keys live under
+/// the empty section name).
+#[derive(Clone, Debug, Default)]
+pub struct Config {
+    entries: BTreeMap<(String, String), Value>,
+}
+
+impl Config {
+    /// Parse from TOML-subset text.
+    pub fn parse(text: &str) -> Result<Config> {
+        let mut cfg = Config::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim().to_string();
+            if line.is_empty() {
+                continue;
+            }
+            if line.starts_with('[') {
+                if !line.ends_with(']') {
+                    return Err(Error::Config(format!(
+                        "line {}: malformed section header `{raw}`",
+                        lineno + 1
+                    )));
+                }
+                section = line[1..line.len() - 1].trim().to_string();
+                continue;
+            }
+            let Some(eq) = line.find('=') else {
+                return Err(Error::Config(format!(
+                    "line {}: expected `key = value`, got `{raw}`",
+                    lineno + 1
+                )));
+            };
+            let key = line[..eq].trim().to_string();
+            let val = parse_value(line[eq + 1..].trim()).map_err(|e| {
+                Error::Config(format!("line {}: {e}", lineno + 1))
+            })?;
+            cfg.entries.insert((section.clone(), key), val);
+        }
+        Ok(cfg)
+    }
+
+    /// Load and parse a file.
+    pub fn load(path: &std::path::Path) -> Result<Config> {
+        Config::parse(&std::fs::read_to_string(path)?)
+    }
+
+    /// Look up `section.key`.
+    pub fn get(&self, section: &str, key: &str) -> Option<&Value> {
+        self.entries.get(&(section.to_string(), key.to_string()))
+    }
+
+    /// String with default.
+    pub fn str_or(&self, section: &str, key: &str, default: &str) -> String {
+        self.get(section, key)
+            .and_then(|v| v.as_str())
+            .unwrap_or(default)
+            .to_string()
+    }
+
+    /// Integer with default.
+    pub fn int_or(&self, section: &str, key: &str, default: i64) -> i64 {
+        self.get(section, key).and_then(|v| v.as_int()).unwrap_or(default)
+    }
+
+    /// Float with default.
+    pub fn float_or(&self, section: &str, key: &str, default: f64) -> f64 {
+        self.get(section, key)
+            .and_then(|v| v.as_float())
+            .unwrap_or(default)
+    }
+
+    /// Bool with default.
+    pub fn bool_or(&self, section: &str, key: &str, default: bool) -> bool {
+        self.get(section, key).and_then(|v| v.as_bool()).unwrap_or(default)
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // respect `#` inside quoted strings
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> std::result::Result<Value, String> {
+    if s.starts_with('"') {
+        if s.len() < 2 || !s.ends_with('"') {
+            return Err(format!("unterminated string `{s}`"));
+        }
+        return Ok(Value::Str(s[1..s.len() - 1].to_string()));
+    }
+    match s {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    if let Ok(v) = s.parse::<i64>() {
+        return Ok(Value::Int(v));
+    }
+    if let Ok(v) = s.parse::<f64>() {
+        return Ok(Value::Float(v));
+    }
+    Err(format!("cannot parse value `{s}`"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let cfg = Config::parse(
+            r#"
+            title = "run A" # trailing comment
+            [pipeline]
+            workers = 4
+            rel_tol = 1e-3
+            verify = true
+            method = "mgard+"
+            "#,
+        )
+        .unwrap();
+        assert_eq!(cfg.str_or("", "title", ""), "run A");
+        assert_eq!(cfg.int_or("pipeline", "workers", 1), 4);
+        assert_eq!(cfg.float_or("pipeline", "rel_tol", 0.0), 1e-3);
+        assert!(cfg.bool_or("pipeline", "verify", false));
+        assert_eq!(cfg.str_or("pipeline", "method", ""), "mgard+");
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let cfg = Config::parse("").unwrap();
+        assert_eq!(cfg.int_or("x", "y", 7), 7);
+        assert_eq!(cfg.str_or("x", "y", "z"), "z");
+    }
+
+    #[test]
+    fn hash_inside_string_kept() {
+        let cfg = Config::parse(r##"name = "a#b""##).unwrap();
+        assert_eq!(cfg.str_or("", "name", ""), "a#b");
+    }
+
+    #[test]
+    fn malformed_lines_error() {
+        assert!(Config::parse("[unclosed").is_err());
+        assert!(Config::parse("novalue").is_err());
+        assert!(Config::parse("x = @bad").is_err());
+    }
+
+    #[test]
+    fn ints_and_floats_interconvert() {
+        let cfg = Config::parse("a = 3\nb = 2.0").unwrap();
+        assert_eq!(cfg.float_or("", "a", 0.0), 3.0);
+        assert_eq!(cfg.int_or("", "b", 0), 2);
+    }
+}

@@ -1,0 +1,16 @@
+//! Layer-3 coordination: the framework around the compression algorithms.
+//!
+//! * [`pipeline`] — multi-field compression pipeline with a worker pool and
+//!   bounded-queue backpressure (the §6.2.4 scalability harness).
+//! * [`refactor`] — progressive data-refactoring store: multilevel
+//!   components written as separately-retrievable chunks, partial
+//!   reconstruction at any level (§1's refactoring use case, §6.2.2).
+//! * [`config`] — minimal TOML-subset configuration loader for the CLI.
+//! * [`registry`] — lightweight metrics counters/timers for the binary.
+//! * [`cli`] — the `mgardp` command-line interface.
+
+pub mod cli;
+pub mod config;
+pub mod pipeline;
+pub mod refactor;
+pub mod registry;

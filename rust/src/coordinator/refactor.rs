@@ -1,0 +1,312 @@
+//! Progressive data-refactoring store (§1, §6.2.2).
+//!
+//! A refactored field is the multilevel decomposition written as
+//! *independently retrievable* components: the coarse representation plus
+//! one file per level's coefficient stream (zstd-compressed). A consumer
+//! reads only `coarse + levels ≤ l` to reconstruct `Q_l u` — the
+//! reduced-size, reduced-cost representation the iso-surface experiment
+//! analyzes — and can later fetch more components to refine it, up to exact
+//! (lossless) recovery of the original.
+
+use crate::decompose::{Decomposer, Decomposition, OptFlags};
+use crate::encode::varint::{write_u64, ByteReader};
+use crate::encode::{zstd_compress, zstd_decompress};
+use crate::error::{Error, Result};
+use crate::grid::Hierarchy;
+use crate::tensor::{Scalar, Tensor};
+use std::fs;
+use std::path::{Path, PathBuf};
+
+/// On-disk progressive store for refactored fields.
+pub struct RefactorStore {
+    root: PathBuf,
+}
+
+/// Per-field manifest: what's needed to interpret the components.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Manifest {
+    /// Original tensor shape.
+    pub shape: Vec<usize>,
+    /// Scalar dtype tag.
+    pub dtype: u8,
+    /// Decomposition start level `l̃`.
+    pub start_level: usize,
+    /// Max level `L`.
+    pub max_level: usize,
+    /// Stored size in bytes of each component (coarse, then levels).
+    pub component_bytes: Vec<u64>,
+}
+
+impl Manifest {
+    fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.push(self.dtype);
+        write_u64(&mut out, self.shape.len() as u64);
+        for &d in &self.shape {
+            write_u64(&mut out, d as u64);
+        }
+        write_u64(&mut out, self.start_level as u64);
+        write_u64(&mut out, self.max_level as u64);
+        write_u64(&mut out, self.component_bytes.len() as u64);
+        for &b in &self.component_bytes {
+            write_u64(&mut out, b);
+        }
+        out
+    }
+
+    fn from_bytes(bytes: &[u8]) -> Result<Manifest> {
+        let mut r = ByteReader::new(bytes);
+        let dtype = r.u8()?;
+        let ndim = r.usize()?;
+        let mut shape = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            shape.push(r.usize()?);
+        }
+        let start_level = r.usize()?;
+        let max_level = r.usize()?;
+        let ncomp = r.usize()?;
+        let mut component_bytes = Vec::with_capacity(ncomp);
+        for _ in 0..ncomp {
+            component_bytes.push(r.u64()?);
+        }
+        Ok(Manifest {
+            shape,
+            dtype,
+            start_level,
+            max_level,
+            component_bytes,
+        })
+    }
+}
+
+impl RefactorStore {
+    /// Create (or open) a store rooted at `root`.
+    pub fn create(root: impl Into<PathBuf>) -> Result<RefactorStore> {
+        let root = root.into();
+        fs::create_dir_all(&root)?;
+        Ok(RefactorStore { root })
+    }
+
+    /// Open an existing store.
+    pub fn open(root: impl Into<PathBuf>) -> Result<RefactorStore> {
+        let root = root.into();
+        if !root.is_dir() {
+            return Err(Error::invalid(format!(
+                "refactor store {} does not exist",
+                root.display()
+            )));
+        }
+        Ok(RefactorStore { root })
+    }
+
+    fn field_dir(&self, field: &str) -> PathBuf {
+        self.root.join(field)
+    }
+
+    /// Refactor `data` and write its components under `field`.
+    /// Returns the manifest (also persisted).
+    pub fn write_field<T: Scalar>(
+        &self,
+        field: &str,
+        data: &Tensor<T>,
+        zstd_level: i32,
+    ) -> Result<Manifest> {
+        let hierarchy = Hierarchy::new(data.shape(), None)?;
+        let dec = Decomposer::new(hierarchy.clone(), OptFlags::all())?.decompose(data)?;
+        let dir = self.field_dir(field);
+        fs::create_dir_all(&dir)?;
+        let mut component_bytes = Vec::new();
+        // component 0: coarse representation
+        let coarse_z = zstd_compress(&dec.coarse.to_le_bytes(), zstd_level)?;
+        fs::write(dir.join("coarse.bin"), &coarse_z)?;
+        component_bytes.push(coarse_z.len() as u64);
+        // components 1..: per-level coefficient streams
+        for (k, stream) in dec.coeffs.iter().enumerate() {
+            let mut raw = Vec::with_capacity(stream.len() * T::BYTES);
+            for &v in stream {
+                v.write_le(&mut raw);
+            }
+            let z = zstd_compress(&raw, zstd_level)?;
+            fs::write(dir.join(format!("level_{}.bin", dec.coeff_level(k))), &z)?;
+            component_bytes.push(z.len() as u64);
+        }
+        let manifest = Manifest {
+            shape: data.shape().to_vec(),
+            dtype: T::DTYPE_TAG,
+            start_level: dec.start_level,
+            max_level: hierarchy.nlevels(),
+            component_bytes,
+        };
+        fs::write(dir.join("manifest.bin"), manifest.to_bytes())?;
+        Ok(manifest)
+    }
+
+    /// Read a field's manifest.
+    pub fn manifest(&self, field: &str) -> Result<Manifest> {
+        let bytes = fs::read(self.field_dir(field).join("manifest.bin"))?;
+        Manifest::from_bytes(&bytes)
+    }
+
+    /// Reconstruct `Q_level u` on its level grid, reading only the
+    /// components up to `level`. `level == max_level` recovers the original
+    /// data exactly (and is returned cropped to the original shape).
+    pub fn reconstruct<T: Scalar>(&self, field: &str, level: usize) -> Result<Tensor<T>> {
+        let m = self.manifest(field)?;
+        if m.dtype != T::DTYPE_TAG {
+            return Err(Error::invalid("refactor store dtype mismatch"));
+        }
+        if level < m.start_level || level > m.max_level {
+            return Err(Error::invalid(format!(
+                "level {level} outside [{}, {}]",
+                m.start_level, m.max_level
+            )));
+        }
+        let hierarchy = Hierarchy::new(&m.shape, None)?;
+        let dir = self.field_dir(field);
+        let coarse_shape = hierarchy.level_shape(m.start_level);
+        let coarse_raw = zstd_decompress(
+            &fs::read(dir.join("coarse.bin"))?,
+            crate::tensor::numel(&coarse_shape) * T::BYTES,
+        )?;
+        let coarse = Tensor::<T>::from_le_bytes(&coarse_shape, &coarse_raw)?;
+        let mut coeffs = Vec::new();
+        for l in (m.start_level + 1)..=level {
+            let n = hierarchy.num_coeff_nodes(l);
+            let raw = zstd_decompress(
+                &fs::read(dir.join(format!("level_{l}.bin")))?,
+                n * T::BYTES,
+            )?;
+            if raw.len() != n * T::BYTES {
+                return Err(Error::corrupt(format!("level {l} component size")));
+            }
+            let mut vals = Vec::with_capacity(n);
+            for i in 0..n {
+                vals.push(T::read_le(&raw[i * T::BYTES..]));
+            }
+            coeffs.push(vals);
+        }
+        let dec = Decomposition {
+            hierarchy: hierarchy.clone(),
+            start_level: m.start_level,
+            coarse,
+            coeffs,
+        };
+        let decomposer = Decomposer::new(hierarchy.clone(), OptFlags::all())?;
+        if level == m.max_level {
+            decomposer.recompose(&dec)
+        } else {
+            decomposer.recompose_to_level(&dec, level)
+        }
+    }
+
+    /// Bytes that must be read to reconstruct at `level` (the progressive
+    /// size/accuracy trade-off of Fig. 7 and Tables 3/4).
+    pub fn bytes_up_to(&self, field: &str, level: usize) -> Result<u64> {
+        let m = self.manifest(field)?;
+        Ok(m.component_bytes[..=(level - m.start_level)].iter().sum())
+    }
+
+    /// List stored fields.
+    pub fn fields(&self) -> Result<Vec<String>> {
+        let mut out = Vec::new();
+        for entry in fs::read_dir(&self.root)? {
+            let entry = entry?;
+            if entry.path().join("manifest.bin").is_file() {
+                out.push(entry.file_name().to_string_lossy().to_string());
+            }
+        }
+        out.sort();
+        Ok(out)
+    }
+
+    /// The store's root directory.
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::linf_error;
+
+    fn temp_store(tag: &str) -> RefactorStore {
+        let dir = std::env::temp_dir().join(format!("mgardp_refactor_{tag}_{}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        RefactorStore::create(dir).unwrap()
+    }
+
+    #[test]
+    fn full_level_recovers_exactly_lossless() {
+        let store = temp_store("full");
+        let t = crate::data::synth::smooth_test_field(&[17, 17, 17]);
+        let m = store.write_field("f", &t, 3).unwrap();
+        let back: Tensor<f32> = store.reconstruct("f", m.max_level).unwrap();
+        assert_eq!(back.shape(), t.shape());
+        let err = linf_error(t.data(), back.data());
+        assert!(err < 1e-4, "refactoring should be near-lossless: {err}");
+        fs::remove_dir_all(store.root()).ok();
+    }
+
+    #[test]
+    fn partial_levels_match_direct_projection() {
+        let store = temp_store("partial");
+        let t = crate::data::synth::smooth_test_field(&[17, 17]);
+        store.write_field("f", &t, 3).unwrap();
+        let hierarchy = Hierarchy::new(t.shape(), None).unwrap();
+        let decomposer = Decomposer::new(hierarchy.clone(), OptFlags::all()).unwrap();
+        let dec = decomposer.decompose(&t).unwrap();
+        for level in 0..hierarchy.nlevels() {
+            let from_store: Tensor<f32> = store.reconstruct("f", level).unwrap();
+            let direct = decomposer.recompose_to_level(&dec, level).unwrap();
+            let err = linf_error(from_store.data(), direct.data());
+            assert!(err < 1e-5, "level {level}: {err}");
+        }
+        fs::remove_dir_all(store.root()).ok();
+    }
+
+    #[test]
+    fn progressive_bytes_monotone() {
+        let store = temp_store("bytes");
+        let t = crate::data::synth::smooth_test_field(&[33, 33]);
+        let m = store.write_field("f", &t, 3).unwrap();
+        let mut prev = 0;
+        for level in m.start_level..=m.max_level {
+            let b = store.bytes_up_to("f", level).unwrap();
+            assert!(b > prev, "bytes must grow with level");
+            prev = b;
+        }
+        fs::remove_dir_all(store.root()).ok();
+    }
+
+    #[test]
+    fn manifest_round_trip() {
+        let m = Manifest {
+            shape: vec![10, 20, 30],
+            dtype: 1,
+            start_level: 0,
+            max_level: 4,
+            component_bytes: vec![100, 200, 300, 400, 500],
+        };
+        assert_eq!(Manifest::from_bytes(&m.to_bytes()).unwrap(), m);
+    }
+
+    #[test]
+    fn fields_listing() {
+        let store = temp_store("list");
+        let t = crate::data::synth::smooth_test_field(&[9, 9]);
+        store.write_field("beta", &t, 1).unwrap();
+        store.write_field("alpha", &t, 1).unwrap();
+        assert_eq!(store.fields().unwrap(), vec!["alpha", "beta"]);
+        fs::remove_dir_all(store.root()).ok();
+    }
+
+    #[test]
+    fn level_out_of_range_rejected() {
+        let store = temp_store("range");
+        let t = crate::data::synth::smooth_test_field(&[9, 9]);
+        let m = store.write_field("f", &t, 1).unwrap();
+        assert!(store.reconstruct::<f32>("f", m.max_level + 1).is_err());
+        fs::remove_dir_all(store.root()).ok();
+    }
+}

@@ -1,0 +1,131 @@
+//! Lightweight process-wide metrics: named counters and timers.
+//!
+//! The pipeline and CLI record what they did (bytes in/out, per-stage time);
+//! `snapshot` renders the table the binary prints on exit.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// A registry of named monotonic counters and accumulated timers.
+#[derive(Default)]
+pub struct Registry {
+    counters: Mutex<BTreeMap<String, AtomicU64>>,
+    /// nanoseconds per timer name
+    timers: Mutex<BTreeMap<String, AtomicU64>>,
+}
+
+impl Registry {
+    /// New empty registry.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add `delta` to counter `name`.
+    pub fn count(&self, name: &str, delta: u64) {
+        let mut map = self.counters.lock().expect("registry poisoned");
+        map.entry(name.to_string())
+            .or_insert_with(|| AtomicU64::new(0))
+            .fetch_add(delta, Ordering::Relaxed);
+    }
+
+    /// Time a closure, accumulating under `name`.
+    pub fn time<R>(&self, name: &str, f: impl FnOnce() -> R) -> R {
+        let t0 = Instant::now();
+        let r = f();
+        let ns = t0.elapsed().as_nanos() as u64;
+        let mut map = self.timers.lock().expect("registry poisoned");
+        map.entry(name.to_string())
+            .or_insert_with(|| AtomicU64::new(0))
+            .fetch_add(ns, Ordering::Relaxed);
+        r
+    }
+
+    /// Current counter value.
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters
+            .lock()
+            .expect("registry poisoned")
+            .get(name)
+            .map(|c| c.load(Ordering::Relaxed))
+            .unwrap_or(0)
+    }
+
+    /// Accumulated seconds for a timer.
+    pub fn seconds(&self, name: &str) -> f64 {
+        self.timers
+            .lock()
+            .expect("registry poisoned")
+            .get(name)
+            .map(|c| c.load(Ordering::Relaxed) as f64 / 1e9)
+            .unwrap_or(0.0)
+    }
+
+    /// Human-readable dump of all metrics.
+    pub fn snapshot(&self) -> String {
+        let mut out = String::new();
+        for (k, v) in self.counters.lock().expect("poisoned").iter() {
+            out.push_str(&format!("{k} = {}\n", v.load(Ordering::Relaxed)));
+        }
+        for (k, v) in self.timers.lock().expect("poisoned").iter() {
+            out.push_str(&format!(
+                "{k} = {:.3}s\n",
+                v.load(Ordering::Relaxed) as f64 / 1e9
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let r = Registry::new();
+        r.count("bytes_in", 100);
+        r.count("bytes_in", 50);
+        assert_eq!(r.counter("bytes_in"), 150);
+        assert_eq!(r.counter("missing"), 0);
+    }
+
+    #[test]
+    fn timers_accumulate() {
+        let r = Registry::new();
+        let v = r.time("work", || {
+            std::thread::sleep(std::time::Duration::from_millis(5));
+            42
+        });
+        assert_eq!(v, 42);
+        assert!(r.seconds("work") >= 0.004);
+    }
+
+    #[test]
+    fn snapshot_lists_everything() {
+        let r = Registry::new();
+        r.count("a", 1);
+        r.time("b", || {});
+        let snap = r.snapshot();
+        assert!(snap.contains("a = 1"));
+        assert!(snap.contains("b = "));
+    }
+
+    #[test]
+    fn thread_safe() {
+        let r = std::sync::Arc::new(Registry::new());
+        crossbeam_utils::thread::scope(|s| {
+            for _ in 0..4 {
+                let r = r.clone();
+                s.spawn(move |_| {
+                    for _ in 0..1000 {
+                        r.count("n", 1);
+                    }
+                });
+            }
+        })
+        .unwrap();
+        assert_eq!(r.counter("n"), 4000);
+    }
+}

@@ -1,0 +1,165 @@
+//! Minimal radix-2 complex FFT.
+//!
+//! Used only by the Gaussian-random-field synthesizer (`grf`) for spectral
+//! synthesis of NYX-like cosmology fields; sizes there are powers of two.
+//! In-place iterative Cooley–Tukey with precomputed bit-reversal — no
+//! external FFT crate exists in the offline vendor set.
+
+/// Complex number as (re, im); a full complex type would be overkill here.
+pub type C = (f64, f64);
+
+#[inline]
+fn cmul(a: C, b: C) -> C {
+    (a.0 * b.0 - a.1 * b.1, a.0 * b.1 + a.1 * b.0)
+}
+
+/// In-place FFT of a power-of-two length buffer.
+/// `inverse` applies the conjugate transform *and* the 1/n scaling.
+pub fn fft_inplace(buf: &mut [C], inverse: bool) {
+    let n = buf.len();
+    assert!(n.is_power_of_two(), "fft length {n} must be a power of two");
+    if n <= 1 {
+        return;
+    }
+    // bit reversal permutation
+    let bits = n.trailing_zeros();
+    for i in 0..n {
+        let j = (i as u32).reverse_bits() >> (32 - bits);
+        let j = j as usize;
+        if i < j {
+            buf.swap(i, j);
+        }
+    }
+    // butterflies
+    let sign = if inverse { 1.0 } else { -1.0 };
+    let mut len = 2;
+    while len <= n {
+        let ang = sign * 2.0 * std::f64::consts::PI / len as f64;
+        let wlen = (ang.cos(), ang.sin());
+        let mut i = 0;
+        while i < n {
+            let mut w = (1.0, 0.0);
+            for k in 0..len / 2 {
+                let u = buf[i + k];
+                let v = cmul(buf[i + k + len / 2], w);
+                buf[i + k] = (u.0 + v.0, u.1 + v.1);
+                buf[i + k + len / 2] = (u.0 - v.0, u.1 - v.1);
+                w = cmul(w, wlen);
+            }
+            i += len;
+        }
+        len <<= 1;
+    }
+    if inverse {
+        let inv = 1.0 / n as f64;
+        for v in buf.iter_mut() {
+            v.0 *= inv;
+            v.1 *= inv;
+        }
+    }
+}
+
+/// In-place 3-D FFT over a row-major `nx × ny × nz` buffer (all powers of 2).
+pub fn fft3_inplace(buf: &mut [C], nx: usize, ny: usize, nz: usize, inverse: bool) {
+    assert_eq!(buf.len(), nx * ny * nz);
+    // along z (contiguous)
+    let mut line = vec![(0.0, 0.0); nz.max(ny).max(nx)];
+    for x in 0..nx {
+        for y in 0..ny {
+            let base = (x * ny + y) * nz;
+            fft_inplace(&mut buf[base..base + nz], inverse);
+        }
+    }
+    // along y
+    for x in 0..nx {
+        for z in 0..nz {
+            for y in 0..ny {
+                line[y] = buf[(x * ny + y) * nz + z];
+            }
+            fft_inplace(&mut line[..ny], inverse);
+            for y in 0..ny {
+                buf[(x * ny + y) * nz + z] = line[y];
+            }
+        }
+    }
+    // along x
+    for y in 0..ny {
+        for z in 0..nz {
+            for x in 0..nx {
+                line[x] = buf[(x * ny + y) * nz + z];
+            }
+            fft_inplace(&mut line[..nx], inverse);
+            for x in 0..nx {
+                buf[(x * ny + y) * nz + z] = line[x];
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn assert_close(a: C, b: C, tol: f64) {
+        assert!(
+            (a.0 - b.0).abs() < tol && (a.1 - b.1).abs() < tol,
+            "{a:?} vs {b:?}"
+        );
+    }
+
+    #[test]
+    fn forward_matches_dft_small() {
+        let input: Vec<C> = (0..8).map(|i| (i as f64, (i as f64) * 0.5 - 1.0)).collect();
+        let mut fast = input.clone();
+        fft_inplace(&mut fast, false);
+        // naive DFT
+        let n = input.len();
+        for k in 0..n {
+            let mut acc = (0.0, 0.0);
+            for (j, &v) in input.iter().enumerate() {
+                let ang = -2.0 * std::f64::consts::PI * (k * j) as f64 / n as f64;
+                let w = (ang.cos(), ang.sin());
+                let p = cmul(v, w);
+                acc = (acc.0 + p.0, acc.1 + p.1);
+            }
+            assert_close(fast[k], acc, 1e-9);
+        }
+    }
+
+    #[test]
+    fn round_trip_identity() {
+        let orig: Vec<C> = (0..64)
+            .map(|i| ((i as f64).sin(), (i as f64 * 0.37).cos()))
+            .collect();
+        let mut buf = orig.clone();
+        fft_inplace(&mut buf, false);
+        fft_inplace(&mut buf, true);
+        for (a, b) in buf.iter().zip(&orig) {
+            assert_close(*a, *b, 1e-9);
+        }
+    }
+
+    #[test]
+    fn round_trip_3d() {
+        let (nx, ny, nz) = (4, 8, 2);
+        let orig: Vec<C> = (0..nx * ny * nz)
+            .map(|i| ((i as f64 * 0.1).sin(), (i as f64 * 0.05).cos()))
+            .collect();
+        let mut buf = orig.clone();
+        fft3_inplace(&mut buf, nx, ny, nz, false);
+        fft3_inplace(&mut buf, nx, ny, nz, true);
+        for (a, b) in buf.iter().zip(&orig) {
+            assert_close(*a, *b, 1e-9);
+        }
+    }
+
+    #[test]
+    fn parseval() {
+        let orig: Vec<C> = (0..32).map(|i| ((i as f64 * 0.3).sin(), 0.0)).collect();
+        let mut buf = orig.clone();
+        fft_inplace(&mut buf, false);
+        let e_time: f64 = orig.iter().map(|v| v.0 * v.0 + v.1 * v.1).sum();
+        let e_freq: f64 = buf.iter().map(|v| v.0 * v.0 + v.1 * v.1).sum::<f64>() / 32.0;
+        assert!((e_time - e_freq).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,61 @@
+//! Raw binary I/O for scientific fields.
+//!
+//! SDRBench distributes fields as headerless little-endian float arrays;
+//! these helpers let real datasets replace the synthetic analogs without
+//! touching the rest of the stack.
+
+use crate::error::{Error, Result};
+use crate::tensor::{numel, Scalar, Tensor};
+use std::fs;
+use std::path::Path;
+
+/// Read a headerless little-endian scalar file into a tensor of `shape`.
+pub fn read_raw<T: Scalar>(path: &Path, shape: &[usize]) -> Result<Tensor<T>> {
+    let bytes = fs::read(path)?;
+    let expect = numel(shape) * T::BYTES;
+    if bytes.len() != expect {
+        return Err(Error::invalid(format!(
+            "{} is {} bytes; shape {:?} needs {}",
+            path.display(),
+            bytes.len(),
+            shape,
+            expect
+        )));
+    }
+    Tensor::from_le_bytes(shape, &bytes)
+}
+
+/// Write a tensor as a headerless little-endian scalar file.
+pub fn write_raw<T: Scalar>(path: &Path, t: &Tensor<T>) -> Result<()> {
+    if let Some(parent) = path.parent() {
+        fs::create_dir_all(parent)?;
+    }
+    fs::write(path, t.to_le_bytes())?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_trip_file() {
+        let dir = std::env::temp_dir().join("mgardp_io_test");
+        let path = dir.join("field.f32");
+        let t = Tensor::<f32>::from_fn(&[4, 5], |ix| ix[0] as f32 * 0.5 - ix[1] as f32);
+        write_raw(&path, &t).unwrap();
+        let back: Tensor<f32> = read_raw(&path, &[4, 5]).unwrap();
+        assert_eq!(t, back);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn size_mismatch_rejected() {
+        let dir = std::env::temp_dir().join("mgardp_io_test2");
+        let path = dir.join("short.f64");
+        let t = Tensor::<f64>::zeros(&[3]);
+        write_raw(&path, &t).unwrap();
+        assert!(read_raw::<f64>(&path, &[4]).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,18 @@
+//! Datasets and deterministic synthetic data generation.
+//!
+//! The paper evaluates on Hurricane-Isabel, NYX, SCALE-LETKF and QMCPACK.
+//! Those datasets (and the cluster that hosted them) are not available here,
+//! so `synth` provides deterministic analogs that reproduce the statistical
+//! character each compressor is sensitive to (smoothness, dynamic range,
+//! anisotropy, oscillation) — see DESIGN.md "Environment constraints and
+//! substitutions". `io` reads/writes raw little-endian floats so real SDRB
+//! datasets can be dropped in unchanged.
+
+pub mod fft;
+pub mod grf;
+pub mod io;
+pub mod rng;
+pub mod synth;
+
+pub use rng::Rng;
+pub use synth::{Dataset, Field};

@@ -1,0 +1,360 @@
+//! Deterministic synthetic analogs of the paper's four evaluation datasets.
+//!
+//! Each generator reproduces the statistical character that drives
+//! compressor behaviour (see DESIGN.md substitution table):
+//!
+//! * `hurricane_like` — smooth large-scale vortex + stratification + mild
+//!   band-limited noise (Hurricane Isabel).
+//! * `nyx_like` — log-normal density with enormous dynamic range and
+//!   GRF velocities (NYX cosmology; the source of the paper's CR ≈ 2500
+//!   row in Table 5).
+//! * `scale_like` — thin-slab stratified atmosphere with fronts
+//!   (SCALE-LETKF).
+//! * `qmcpack_like` — 4-D oscillatory orbital-like wavefunctions (QMCPACK;
+//!   the regime where transform coders win at large bit-rates).
+//!
+//! All generators are deterministic in their seed, so benchmark rows are
+//! reproducible run to run.
+
+use super::grf::gaussian_random_field_3d;
+use super::rng::Rng;
+use crate::tensor::Tensor;
+
+/// One named scalar field of a dataset.
+#[derive(Clone, Debug)]
+pub struct Field {
+    /// Field name (mirrors the paper's field naming, e.g. `velocity_x`).
+    pub name: String,
+    /// The raw data.
+    pub data: Tensor<f32>,
+}
+
+/// A named multi-field dataset (the unit the coordinator pipeline consumes).
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    /// Dataset name (`hurricane`, `nyx`, `scale`, `qmcpack`).
+    pub name: String,
+    /// The member fields, compressed independently like the paper does.
+    pub fields: Vec<Field>,
+}
+
+impl Dataset {
+    /// Total payload bytes across fields.
+    pub fn nbytes(&self) -> usize {
+        self.fields.iter().map(|f| f.data.nbytes()).sum()
+    }
+
+    /// Look up a field by name.
+    pub fn field(&self, name: &str) -> Option<&Field> {
+        self.fields.iter().find(|f| f.name == name)
+    }
+}
+
+/// Size knob for generators: `scale=1.0` is the default benchmark size
+/// (chosen so the full evaluation suite completes on one core); smaller
+/// values shrink every dimension proportionally (minimum sizes enforced).
+fn dim(base: usize, scale: f64, min: usize) -> usize {
+    ((base as f64 * scale).round() as usize).max(min)
+}
+
+/// A smooth separable test field used by doc examples and unit tests.
+pub fn smooth_test_field(shape: &[usize]) -> Tensor<f32> {
+    Tensor::from_fn(shape, |ix| {
+        let mut v = 1.0f64;
+        for (d, &i) in ix.iter().enumerate() {
+            let n = shape[d].max(2);
+            let t = i as f64 / (n - 1) as f64;
+            v *= (2.0 * std::f64::consts::PI * t * (d + 1) as f64 * 0.5).sin() + 1.5;
+        }
+        v as f32
+    })
+}
+
+/// Hurricane-Isabel analog: 3-D `z × y × x` slab with a translating vortex,
+/// vertical stratification and band-limited turbulence. Four fields.
+pub fn hurricane_like(scale: f64, seed: u64) -> Dataset {
+    let (nz, ny, nx) = (dim(32, scale, 8), dim(160, scale, 24), dim(160, scale, 24));
+    let mut rng = Rng::new(seed ^ 0x4855_5252);
+    // low-frequency noise via a small number of random Fourier modes
+    let modes: Vec<(f64, f64, f64, f64, f64)> = (0..24)
+        .map(|_| {
+            (
+                rng.uniform_in(0.5, 4.0),
+                rng.uniform_in(0.5, 6.0),
+                rng.uniform_in(0.5, 6.0),
+                rng.uniform_in(0.0, std::f64::consts::TAU),
+                rng.uniform_in(0.2, 1.0),
+            )
+        })
+        .collect();
+    let noise = |z: f64, y: f64, x: f64| {
+        let mut acc = 0.0;
+        for &(kz, ky, kx, ph, a) in &modes {
+            acc += a
+                * (std::f64::consts::TAU * (kz * z + ky * y + kx * x) + ph).sin()
+                / (kz + ky + kx);
+        }
+        acc
+    };
+    let field = |name: &str, f: &dyn Fn(f64, f64, f64) -> f64| Field {
+        name: name.to_string(),
+        data: Tensor::from_fn(&[nz, ny, nx], |ix| {
+            let z = ix[0] as f64 / (nz - 1) as f64;
+            let y = ix[1] as f64 / (ny - 1) as f64;
+            let x = ix[2] as f64 / (nx - 1) as f64;
+            f(z, y, x) as f32
+        }),
+    };
+    // vortex center drifts with height
+    let cx = |z: f64| 0.45 + 0.1 * z;
+    let cy = |z: f64| 0.55 - 0.08 * z;
+    let r2 = |z: f64, y: f64, x: f64| {
+        let dx = x - cx(z);
+        let dy = y - cy(z);
+        dx * dx + dy * dy
+    };
+    let ds = Dataset {
+        name: "hurricane".to_string(),
+        fields: vec![
+            field("P", &|z, y, x| {
+                // pressure: stratified + low-pressure eye
+                1000.0 - 350.0 * z - 65.0 * (-r2(z, y, x) / 0.02).exp()
+                    + 2.0 * noise(z, y, x)
+            }),
+            field("U", &|z, y, x| {
+                // tangential wind u-component
+                let dy = y - cy(z);
+                let r = r2(z, y, x).sqrt().max(1e-3);
+                let v_t = 60.0 * (r / 0.08) * (-r / 0.08).exp();
+                -v_t * dy / r + 4.0 * noise(z, y, x + 0.3)
+            }),
+            field("V", &|z, y, x| {
+                let dx = x - cx(z);
+                let r = r2(z, y, x).sqrt().max(1e-3);
+                let v_t = 60.0 * (r / 0.08) * (-r / 0.08).exp();
+                v_t * dx / r + 4.0 * noise(z + 0.2, y, x)
+            }),
+            field("TC", &|z, y, x| {
+                // temperature: lapse rate + warm core + noise
+                28.0 - 55.0 * z + 8.0 * (-r2(z, y, x) / 0.01).exp() + 0.7 * noise(z, y + 0.1, x)
+            }),
+        ],
+    };
+    ds
+}
+
+/// NYX cosmology analog: power-of-two cube; log-normal `baryon_density`
+/// with large dynamic range, GRF `velocity_x` and log-normal `temperature`.
+pub fn nyx_like(scale: f64, seed: u64) -> Dataset {
+    // keep power-of-two for the spectral synthesizer
+    let n = if scale >= 0.99 {
+        128
+    } else if scale >= 0.45 {
+        64
+    } else if scale >= 0.20 {
+        32
+    } else {
+        16
+    };
+    let mut rng = Rng::new(seed ^ 0x4E59_5800);
+    let delta = gaussian_random_field_3d(n, n, n, 2.8, &mut rng);
+    let velx = gaussian_random_field_3d(n, n, n, 1.9, &mut rng);
+    let temp_f = gaussian_random_field_3d(n, n, n, 2.4, &mut rng);
+    let density = delta.map(|v| ((v as f64 * 2.2).exp() * 1.0e9) as f32);
+    let velocity_x = velx.map(|v| v * 2.3e7);
+    let temperature = temp_f.map(|v| ((v as f64 * 1.3).exp() * 1.0e4) as f32);
+    Dataset {
+        name: "nyx".to_string(),
+        fields: vec![
+            Field {
+                name: "baryon_density".into(),
+                data: density,
+            },
+            Field {
+                name: "velocity_x".into(),
+                data: velocity_x,
+            },
+            Field {
+                name: "temperature".into(),
+                data: temperature,
+            },
+        ],
+    }
+}
+
+/// SCALE-LETKF analog: thin vertical slab `z × y × x` with strong
+/// stratification, a frontal discontinuity, and weather noise.
+pub fn scale_like(scale: f64, seed: u64) -> Dataset {
+    let (nz, ny, nx) = (dim(24, scale, 6), dim(192, scale, 24), dim(192, scale, 24));
+    let mut rng = Rng::new(seed ^ 0x5343_414C);
+    let modes: Vec<(f64, f64, f64, f64)> = (0..32)
+        .map(|_| {
+            (
+                rng.uniform_in(1.0, 9.0),
+                rng.uniform_in(1.0, 9.0),
+                rng.uniform_in(0.0, std::f64::consts::TAU),
+                rng.uniform_in(0.3, 1.0),
+            )
+        })
+        .collect();
+    let noise = |y: f64, x: f64| {
+        let mut acc = 0.0;
+        for &(ky, kx, ph, a) in &modes {
+            acc += a * (std::f64::consts::TAU * (ky * y + kx * x) + ph).sin() / (ky + kx);
+        }
+        acc
+    };
+    let front = |y: f64, x: f64| ((x - 0.3 - 0.4 * y) * 18.0).tanh();
+    let field = |name: &str, f: &dyn Fn(f64, f64, f64) -> f64| Field {
+        name: name.to_string(),
+        data: Tensor::from_fn(&[nz, ny, nx], |ix| {
+            let z = ix[0] as f64 / (nz - 1) as f64;
+            let y = ix[1] as f64 / (ny - 1) as f64;
+            let x = ix[2] as f64 / (nx - 1) as f64;
+            f(z, y, x) as f32
+        }),
+    };
+    Dataset {
+        name: "scale".to_string(),
+        fields: vec![
+            field("T", &|z, y, x| {
+                300.0 - 70.0 * z - 6.0 * front(y, x) + 1.2 * noise(y, x)
+            }),
+            field("QV", &|z, y, x| {
+                (0.018 * (-4.0 * z).exp() * (1.0 - 0.4 * front(y, x))
+                    + 0.0015 * noise(y + 0.2, x))
+                .max(0.0)
+            }),
+            field("U", &|z, y, x| {
+                12.0 * (1.0 - z) * front(y, x) + 3.0 * noise(y, x + 0.4)
+            }),
+            field("W", &|z, y, x| {
+                2.5 * (std::f64::consts::PI * z).sin() * (1.0 - front(y, x).abs())
+                    * noise(y + 0.5, x + 0.1)
+            }),
+        ],
+    }
+}
+
+/// QMCPACK analog: 4-D `orbital × x × y × z` oscillatory wavefunction-like
+/// data (Bloch-type products with a Gaussian envelope).
+pub fn qmcpack_like(scale: f64, seed: u64) -> Dataset {
+    let (no, n) = (dim(24, scale, 4), dim(40, scale, 12));
+    let mut rng = Rng::new(seed ^ 0x514D_4350);
+    // per-orbital wave vectors, phases, envelopes
+    let orbs: Vec<([f64; 3], [f64; 3], f64, f64)> = (0..no)
+        .map(|o| {
+            let k = 1.0 + (o as f64) * 0.5;
+            (
+                [
+                    k * rng.uniform_in(0.6, 1.4),
+                    k * rng.uniform_in(0.6, 1.4),
+                    k * rng.uniform_in(0.6, 1.4),
+                ],
+                [
+                    rng.uniform_in(0.0, std::f64::consts::TAU),
+                    rng.uniform_in(0.0, std::f64::consts::TAU),
+                    rng.uniform_in(0.0, std::f64::consts::TAU),
+                ],
+                rng.uniform_in(0.3, 0.7),
+                rng.uniform_in(0.5, 1.0),
+            )
+        })
+        .collect();
+    let data = Tensor::from_fn(&[no, n, n, n], |ix| {
+        let (kv, ph, c, amp) = &orbs[ix[0]];
+        let x = ix[1] as f64 / (n - 1) as f64;
+        let y = ix[2] as f64 / (n - 1) as f64;
+        let z = ix[3] as f64 / (n - 1) as f64;
+        let osc = (std::f64::consts::TAU * kv[0] * x + ph[0]).sin()
+            * (std::f64::consts::TAU * kv[1] * y + ph[1]).sin()
+            * (std::f64::consts::TAU * kv[2] * z + ph[2]).sin();
+        let r2 = (x - c).powi(2) + (y - c).powi(2) + (z - c).powi(2);
+        (amp * osc * (-2.5 * r2).exp()) as f32
+    });
+    Dataset {
+        name: "qmcpack".to_string(),
+        fields: vec![Field {
+            name: "einspline".into(),
+            data,
+        }],
+    }
+}
+
+/// All four benchmark datasets at the given scale.
+pub fn all_datasets(scale: f64, seed: u64) -> Vec<Dataset> {
+    vec![
+        hurricane_like(scale, seed),
+        nyx_like(scale, seed),
+        scale_like(scale, seed),
+        qmcpack_like(scale, seed),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generators_deterministic() {
+        let a = hurricane_like(0.2, 1);
+        let b = hurricane_like(0.2, 1);
+        assert_eq!(a.fields[0].data, b.fields[0].data);
+        assert_ne!(
+            hurricane_like(0.2, 2).fields[0].data,
+            a.fields[0].data,
+            "different seeds must differ"
+        );
+    }
+
+    #[test]
+    fn nyx_density_dynamic_range() {
+        let ds = nyx_like(0.2, 7);
+        let d = ds.field("baryon_density").unwrap();
+        let (mn, mx) = d.data.min_max();
+        assert!(mn > 0.0);
+        assert!(
+            mx / mn > 1e3,
+            "log-normal density should span decades: {mn} .. {mx}"
+        );
+    }
+
+    #[test]
+    fn shapes_and_fields() {
+        let ds = all_datasets(0.15, 3);
+        assert_eq!(ds.len(), 4);
+        assert_eq!(ds[0].fields.len(), 4);
+        assert_eq!(ds[1].fields.len(), 3);
+        assert_eq!(ds[2].fields.len(), 4);
+        assert_eq!(ds[3].fields.len(), 1);
+        assert_eq!(ds[3].fields[0].data.ndim(), 4);
+        for d in &ds {
+            for f in &d.fields {
+                assert!(f.data.data().iter().all(|v| v.is_finite()));
+            }
+        }
+    }
+
+    #[test]
+    fn qmcpack_oscillatory() {
+        // sign changes along a line confirm oscillation
+        let ds = qmcpack_like(0.3, 5);
+        let t = &ds.fields[0].data;
+        let s = t.shape().to_vec();
+        let mut flips = 0;
+        for x in 0..s[1] - 1 {
+            let a = t.at(&[0, x, s[2] / 2, s[3] / 2]);
+            let b = t.at(&[0, x + 1, s[2] / 2, s[3] / 2]);
+            if a.signum() != b.signum() {
+                flips += 1;
+            }
+        }
+        assert!(flips >= 2, "expected oscillation, saw {flips} sign flips");
+    }
+
+    #[test]
+    fn dataset_nbytes() {
+        let ds = nyx_like(0.1, 1);
+        assert_eq!(ds.nbytes(), 3 * 16 * 16 * 16 * 4);
+    }
+}

@@ -1,0 +1,396 @@
+//! The original multilevel method (§2), deliberately un-optimized.
+//!
+//! This engine is the reference point for every Fig. 6 speedup bar: it
+//! operates *in place* on the full padded array with strided node access
+//! whose stride doubles at each level (the cache-hostile pattern of Fig. 1),
+//! computes load vectors by fine-grained mass-matrix multiplication followed
+//! by restriction, re-derives the Thomas auxiliary arrays for every line,
+//! and carries the `h_l` factors through load vector and solve.
+//!
+//! Correctness is identical to the contiguous engine (tested to FP rounding)
+//! — only the memory behaviour and operation counts differ.
+
+use super::sweeps::{load_mass_restrict, thomas_solve_fresh};
+use super::Decomposition;
+use crate::error::Result;
+use crate::grid::Hierarchy;
+use crate::tensor::{strides_for, Scalar, Tensor};
+
+/// Per-level strided geometry.
+struct LevelGeom {
+    /// Level grid shape.
+    shape: Vec<usize>,
+    /// Combined stride (level stride × base stride) per dim.
+    cs: Vec<usize>,
+    /// Which dims halve at this step.
+    active: Vec<bool>,
+}
+
+fn geom(h: &Hierarchy, l: usize) -> LevelGeom {
+    let base = strides_for(h.padded_shape());
+    let ls = h.level_stride(l);
+    let shape = h.level_shape(l);
+    let cs: Vec<usize> = base.iter().zip(&ls).map(|(b, s)| b * s).collect();
+    let active = (0..shape.len())
+        .map(|d| l >= 1 && h.dim_active(l, d))
+        .collect();
+    LevelGeom { shape, cs, active }
+}
+
+/// Iterate row-major over an index space `sizes`, maintaining the flat offset
+/// under `strides`; calls `f(flat, is_all_even_on_active)`.
+fn walk(
+    sizes: &[usize],
+    strides: &[usize],
+    active: &[bool],
+    mut f: impl FnMut(usize, bool, &[usize]),
+) {
+    let d = sizes.len();
+    let mut idx = vec![0usize; d];
+    let total: usize = sizes.iter().product();
+    let mut flat = 0usize;
+    for _ in 0..total {
+        let nodal = (0..d).all(|k| !active[k] || idx[k] % 2 == 0);
+        f(flat, nodal, &idx);
+        // increment row-major, maintaining the flat offset
+        for k in (0..d).rev() {
+            idx[k] += 1;
+            if idx[k] < sizes[k] {
+                flat += strides[k];
+                break;
+            }
+            flat -= strides[k] * (sizes[k] - 1);
+            idx[k] = 0;
+        }
+    }
+}
+
+/// Iterate over all line base offsets for a sweep along `dim`: every
+/// combination of the other dims' indices under (`sizes`, `strides`).
+fn for_each_line(sizes: &[usize], strides: &[usize], dim: usize, mut f: impl FnMut(usize)) {
+    let d = sizes.len();
+    let mut idx = vec![0usize; d];
+    let total: usize = (0..d).map(|k| if k == dim { 1 } else { sizes[k] }).product();
+    let mut flat = 0usize;
+    for _ in 0..total {
+        f(flat);
+        for k in (0..d).rev() {
+            if k == dim {
+                continue;
+            }
+            idx[k] += 1;
+            if idx[k] < sizes[k] {
+                flat += strides[k];
+                break;
+            }
+            flat -= strides[k] * (sizes[k] - 1);
+            idx[k] = 0;
+        }
+    }
+}
+
+/// Strided residual pass at level `l`: coefficient nodes get their
+/// interpolation residual.
+fn residual_strided<T: Scalar>(buf: &mut [T], g: &LevelGeom) {
+    let d = g.shape.len();
+    walk(&g.shape, &g.cs, &g.active, |flat, nodal, idx| {
+        if nodal {
+            return;
+        }
+        let mut odd: Vec<usize> = Vec::with_capacity(d);
+        for k in 0..d {
+            if g.active[k] && idx[k] % 2 == 1 {
+                odd.push(g.cs[k]);
+            }
+        }
+        let q = odd.len();
+        let mut acc = T::ZERO;
+        for mask in 0..(1usize << q) {
+            let mut off = flat;
+            for (b, &s) in odd.iter().enumerate() {
+                if mask & (1 << b) != 0 {
+                    off += s;
+                } else {
+                    off -= s;
+                }
+            }
+            acc += buf[off];
+        }
+        buf[flat] -= acc * T::from_f64(1.0 / (1usize << q) as f64);
+    });
+}
+
+/// Inverse of [`residual_strided`].
+fn unresidual_strided<T: Scalar>(buf: &mut [T], g: &LevelGeom) {
+    let d = g.shape.len();
+    walk(&g.shape, &g.cs, &g.active, |flat, nodal, idx| {
+        if nodal {
+            return;
+        }
+        let mut odd: Vec<usize> = Vec::with_capacity(d);
+        for k in 0..d {
+            if g.active[k] && idx[k] % 2 == 1 {
+                odd.push(g.cs[k]);
+            }
+        }
+        let q = odd.len();
+        let mut acc = T::ZERO;
+        for mask in 0..(1usize << q) {
+            let mut off = flat;
+            for (b, &s) in odd.iter().enumerate() {
+                if mask & (1 << b) != 0 {
+                    off += s;
+                } else {
+                    off -= s;
+                }
+            }
+            acc += buf[off];
+        }
+        buf[flat] += acc * T::from_f64(1.0 / (1usize << q) as f64);
+    });
+}
+
+/// Compute the correction into `w` at the `N_{l-1}` node positions.
+/// `w` is a full-size scratch buffer (the original method's working array).
+fn correction_strided<T: Scalar>(buf: &[T], w: &mut [T], g: &LevelGeom, h_level: f64) {
+    // 1. multilevel component e into w (zero on nodal nodes)
+    walk(&g.shape, &g.cs, &g.active, |flat, nodal, _| {
+        w[flat] = if nodal { T::ZERO } else { buf[flat] };
+    });
+    let d = g.shape.len();
+    // 2. load sweeps dim by dim; already-swept dims are at coarse size/stride
+    let mut sizes = g.shape.clone();
+    let mut strides = g.cs.clone();
+    let mut gather: Vec<T> = Vec::new();
+    let mut coarse_line: Vec<T> = Vec::new();
+    let mut scratch: Vec<T> = Vec::new();
+    for k in 0..d {
+        if !g.active[k] {
+            continue;
+        }
+        let n = sizes[k];
+        let nc = (n + 1) / 2;
+        let st = strides[k];
+        for_each_line(&sizes, &strides, k, |base| {
+            gather.clear();
+            gather.extend((0..n).map(|i| w[base + i * st]));
+            coarse_line.resize(nc, T::ZERO);
+            load_mass_restrict(&gather, &mut coarse_line, h_level, &mut scratch);
+            for (i, &v) in coarse_line.iter().enumerate() {
+                w[base + 2 * i * st] = v;
+            }
+        });
+        sizes[k] = nc;
+        strides[k] = 2 * st;
+    }
+    // 3. tridiagonal solves along every active dim (coarse geometry now)
+    for k in 0..d {
+        if !g.active[k] {
+            continue;
+        }
+        let n = sizes[k];
+        let st = strides[k];
+        for_each_line(&sizes, &strides, k, |base| {
+            gather.clear();
+            gather.extend((0..n).map(|i| w[base + i * st]));
+            thomas_solve_fresh(&mut gather, h_level);
+            for (i, &v) in gather.iter().enumerate() {
+                w[base + i * st] = v;
+            }
+        });
+    }
+}
+
+/// Coarse-node geometry after the step at level `l` (i.e. `N_{l-1}` within
+/// the padded array).
+fn coarse_geom(g: &LevelGeom) -> (Vec<usize>, Vec<usize>) {
+    let sizes = g
+        .shape
+        .iter()
+        .zip(&g.active)
+        .map(|(&n, &a)| if a { (n + 1) / 2 } else { n })
+        .collect();
+    let strides = g
+        .cs
+        .iter()
+        .zip(&g.active)
+        .map(|(&s, &a)| if a { 2 * s } else { s })
+        .collect();
+    (sizes, strides)
+}
+
+/// Decompose with the baseline engine.
+pub(crate) fn decompose<T: Scalar>(
+    hierarchy: &Hierarchy,
+    padded: Tensor<T>,
+    stop_level: usize,
+) -> Decomposition<T> {
+    let ll = hierarchy.nlevels();
+    let mut buf = padded.into_vec();
+    let mut w = vec![T::ZERO; buf.len()];
+    for l in ((stop_level + 1)..=ll).rev() {
+        let g = geom(hierarchy, l);
+        let h_level = hierarchy.spacing(l);
+        residual_strided(&mut buf, &g);
+        correction_strided(&buf, &mut w, &g, h_level);
+        // correction application: nodal nodes += correction
+        let (csizes, cstrides) = coarse_geom(&g);
+        let no_active = vec![false; csizes.len()];
+        walk(&csizes, &cstrides, &no_active, |flat, _, _| {
+            buf[flat] += w[flat];
+        });
+    }
+    // extract coarse representation + per-level coefficient streams
+    let coarse_shape = hierarchy.level_shape(stop_level);
+    let gfin = geom(hierarchy, stop_level);
+    let mut coarse = Vec::with_capacity(coarse_shape.iter().product());
+    let no_active = vec![false; coarse_shape.len()];
+    walk(&coarse_shape, &gfin.cs, &no_active, |flat, _, _| {
+        coarse.push(buf[flat]);
+    });
+    let mut coeffs = Vec::with_capacity(ll - stop_level);
+    for l in (stop_level + 1)..=ll {
+        let g = geom(hierarchy, l);
+        let mut stream = Vec::with_capacity(hierarchy.num_coeff_nodes(l));
+        walk(&g.shape, &g.cs, &g.active, |flat, nodal, _| {
+            if !nodal {
+                stream.push(buf[flat]);
+            }
+        });
+        coeffs.push(stream);
+    }
+    Decomposition {
+        hierarchy: hierarchy.clone(),
+        start_level: stop_level,
+        coarse: Tensor::from_vec(&coarse_shape, coarse).expect("coarse shape"),
+        coeffs,
+    }
+}
+
+/// Recompose with the baseline engine up to `target_level`.
+pub(crate) fn recompose<T: Scalar>(
+    hierarchy: &Hierarchy,
+    d: &Decomposition<T>,
+    target_level: usize,
+) -> Result<Tensor<T>> {
+    let mut buf = vec![T::ZERO; crate::tensor::numel(hierarchy.padded_shape())];
+    let mut w = vec![T::ZERO; buf.len()];
+    // scatter the coarse representation
+    {
+        let g = geom(hierarchy, d.start_level);
+        let no_active = vec![false; g.shape.len()];
+        let mut k = 0;
+        walk(&g.shape, &g.cs, &no_active, |flat, _, _| {
+            buf[flat] = d.coarse.data()[k];
+            k += 1;
+        });
+    }
+    // scatter all coefficient streams at their node positions
+    for l in (d.start_level + 1)..=target_level {
+        let g = geom(hierarchy, l);
+        let stream = &d.coeffs[l - d.start_level - 1];
+        let mut k = 0;
+        walk(&g.shape, &g.cs, &g.active, |flat, nodal, _| {
+            if !nodal {
+                buf[flat] = stream[k];
+                k += 1;
+            }
+        });
+    }
+    // level-by-level inverse
+    for l in (d.start_level + 1)..=target_level {
+        let g = geom(hierarchy, l);
+        let h_level = hierarchy.spacing(l);
+        correction_strided(&buf, &mut w, &g, h_level);
+        let (csizes, cstrides) = coarse_geom(&g);
+        let no_active = vec![false; csizes.len()];
+        walk(&csizes, &cstrides, &no_active, |flat, _, _| {
+            buf[flat] -= w[flat];
+        });
+        unresidual_strided(&mut buf, &g);
+    }
+    // gather the target level grid
+    let tshape = hierarchy.level_shape(target_level);
+    let gt = geom(hierarchy, target_level);
+    let mut out = Vec::with_capacity(tshape.iter().product());
+    let no_active = vec![false; tshape.len()];
+    walk(&tshape, &gt.cs, &no_active, |flat, _, _| {
+        out.push(buf[flat]);
+    });
+    Ok(Tensor::from_vec(&tshape, out).expect("target shape"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::rng::Rng;
+    use crate::decompose::{contiguous, OptFlags};
+
+    fn rand_tensor(shape: &[usize], seed: u64) -> Tensor<f64> {
+        let mut rng = Rng::new(seed);
+        Tensor::from_fn(shape, |_| rng.uniform_in(-1.0, 1.0))
+    }
+
+    #[test]
+    fn baseline_round_trip() {
+        for shape in [vec![17usize], vec![9, 17], vec![9, 9, 9], vec![5, 5, 5, 5]] {
+            let h = Hierarchy::new(&shape, None).unwrap();
+            let u = rand_tensor(&shape, 7);
+            let dec = decompose(&h, h.pad(&u).unwrap(), 0);
+            dec.validate().unwrap();
+            let back = recompose(&h, &dec, h.nlevels()).unwrap();
+            let back = h.crop(&back).unwrap();
+            let err = crate::metrics::linf_error(u.data(), back.data());
+            assert!(err < 1e-9, "{shape:?}: {err}");
+        }
+    }
+
+    #[test]
+    fn baseline_matches_contiguous_engine() {
+        for shape in [vec![17usize], vec![9, 17], vec![9, 9, 9], vec![6, 11]] {
+            let h = Hierarchy::new(&shape, None).unwrap();
+            let u = rand_tensor(&shape, 19);
+            let a = decompose(&h, h.pad(&u).unwrap(), 0);
+            let b = contiguous::decompose(&h, OptFlags::all(), h.pad(&u).unwrap(), 0);
+            assert_eq!(a.coarse.shape(), b.coarse.shape());
+            for (x, y) in a.coarse.data().iter().zip(b.coarse.data()) {
+                assert!((x - y).abs() < 1e-9, "coarse {x} vs {y} ({shape:?})");
+            }
+            for (ka, kb) in a.coeffs.iter().zip(&b.coeffs) {
+                assert_eq!(ka.len(), kb.len());
+                for (x, y) in ka.iter().zip(kb) {
+                    assert!((x - y).abs() < 1e-9, "coeff {x} vs {y} ({shape:?})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn baseline_partial_matches_contiguous() {
+        let shape = [17, 17];
+        let h = Hierarchy::new(&shape, None).unwrap();
+        let u = rand_tensor(&shape, 23);
+        let a = decompose(&h, h.pad(&u).unwrap(), 1);
+        let b = contiguous::decompose(&h, OptFlags::all(), h.pad(&u).unwrap(), 1);
+        for (x, y) in a.coarse.data().iter().zip(b.coarse.data()) {
+            assert!((x - y).abs() < 1e-9);
+        }
+        // cross-engine recompose: baseline-decomposed, contiguous-recomposed
+        let back = contiguous::recompose(&h, OptFlags::all(), &a, h.nlevels()).unwrap();
+        let err = crate::metrics::linf_error(h.pad(&u).unwrap().data(), back.data());
+        assert!(err < 1e-9, "cross engine {err}");
+    }
+
+    #[test]
+    fn recompose_to_intermediate_level() {
+        let shape = [17, 9];
+        let h = Hierarchy::new(&shape, None).unwrap();
+        let u = rand_tensor(&shape, 29);
+        let dec = decompose(&h, h.pad(&u).unwrap(), 0);
+        let q1 = recompose(&h, &dec, 1).unwrap();
+        let q1c = contiguous::recompose(&h, OptFlags::all(), &dec, 1).unwrap();
+        assert_eq!(q1.shape(), h.level_shape(1).as_slice());
+        let err = crate::metrics::linf_error(q1.data(), q1c.data());
+        assert!(err < 1e-9);
+    }
+}

@@ -1,0 +1,887 @@
+//! The MGARD+ engine: level-centric reordered (contiguous) multilevel
+//! decomposition with the §5 optimizations.
+//!
+//! Instead of striding over the full array with ever-growing strides, each
+//! level works on a *contiguous* array holding exactly the current grid
+//! `N_l` (the de-interleaving view of §5.1): coefficient computation and
+//! correction run cache-coherently, then the nodal nodes are compacted into
+//! a new contiguous array for the next level while the coefficient nodes are
+//! emitted to the output stream.
+
+use super::sweeps::{load_direct, load_mass_restrict, thomas_solve_fresh, ThomasAux};
+use super::{Decomposition, OptFlags};
+use crate::error::Result;
+use crate::grid::Hierarchy;
+use crate::tensor::{numel, Scalar, Tensor};
+use std::collections::BTreeMap;
+
+/// Per-decomposition scratch: Thomas factorizations keyed by coarse length
+/// (IVER's precomputed auxiliary arrays, shared across levels and dims).
+struct AuxCache<T: Scalar> {
+    map: BTreeMap<usize, ThomasAux<T>>,
+}
+
+impl<T: Scalar> AuxCache<T> {
+    fn new() -> Self {
+        AuxCache {
+            map: BTreeMap::new(),
+        }
+    }
+    fn get(&mut self, n: usize) -> &ThomasAux<T> {
+        self.map.entry(n).or_insert_with(|| ThomasAux::new(n, 1.0))
+    }
+}
+
+/// Which dims halve at this step (size >= 5 still halves; 3 has bottomed out).
+fn active_dims(shape: &[usize]) -> Vec<bool> {
+    shape.iter().map(|&n| n >= 5).collect()
+}
+
+/// In-place coefficient computation: replace every coefficient-node value by
+/// its residual against the multilinear interpolant of the nodal nodes.
+/// `shape` is the current contiguous level grid.
+///
+/// The 3-D all-active case (the bulk of every decomposition) is specialized:
+/// the generic path pays a per-element parity test and corner-mask loop,
+/// while the specialization classifies whole z-lines by the (x, y) parity
+/// and runs branch-free stride-2 stencils (§Perf in EXPERIMENTS.md).
+pub(crate) fn residual_pass<T: Scalar>(data: &mut [T], shape: &[usize]) {
+    if shape.len() == 3 && shape.iter().all(|&n| n >= 5) {
+        return residual_pass_3d(data, shape, false);
+    }
+    residual_pass_generic(data, shape);
+}
+
+/// Specialized 3-D residual pass; `inverse` adds the interpolant back.
+fn residual_pass_3d<T: Scalar>(data: &mut [T], shape: &[usize], inverse: bool) {
+    let (n0, n1, n2) = (shape[0], shape[1], shape[2]);
+    let s0 = n1 * n2;
+    let half = T::from_f64(0.5);
+    let quarter = T::from_f64(0.25);
+    let eighth = T::from_f64(0.125);
+    // apply `v -= pred` or `v += pred`
+    macro_rules! upd {
+        ($slot:expr, $pred:expr) => {
+            if inverse {
+                $slot += $pred;
+            } else {
+                $slot -= $pred;
+            }
+        };
+    }
+    for x in 0..n0 {
+        for y in 0..n1 {
+            let base = x * s0 + y * n2;
+            match (x % 2, y % 2) {
+                (0, 0) => {
+                    // nodal row: only odd-z (edge) nodes change
+                    let mut z = 1;
+                    while z < n2 - 1 {
+                        let pred = half * (data[base + z - 1] + data[base + z + 1]);
+                        upd!(data[base + z], pred);
+                        z += 2;
+                    }
+                }
+                (1, 0) | (0, 1) => {
+                    // one odd planar dim: neighbors are the two nodal rows
+                    let nb = if x % 2 == 1 { s0 } else { n2 };
+                    let (lo, hi) = (base - nb, base + nb);
+                    // even z: face nodes on the x/y edge
+                    let mut z = 0;
+                    while z < n2 {
+                        let pred = half * (data[lo + z] + data[hi + z]);
+                        upd!(data[base + z], pred);
+                        z += 2;
+                    }
+                    // odd z: plane nodes (4 corners)
+                    let mut z = 1;
+                    while z < n2 - 1 {
+                        let pred = quarter
+                            * (data[lo + z - 1]
+                                + data[lo + z + 1]
+                                + data[hi + z - 1]
+                                + data[hi + z + 1]);
+                        upd!(data[base + z], pred);
+                        z += 2;
+                    }
+                }
+                _ => {
+                    // x and y both odd: 4 nodal rows at the (x±1, y±1) corners
+                    let r00 = base - s0 - n2;
+                    let r01 = base - s0 + n2;
+                    let r10 = base + s0 - n2;
+                    let r11 = base + s0 + n2;
+                    let mut z = 0;
+                    while z < n2 {
+                        let pred = quarter
+                            * (data[r00 + z] + data[r01 + z] + data[r10 + z] + data[r11 + z]);
+                        upd!(data[base + z], pred);
+                        z += 2;
+                    }
+                    let mut z = 1;
+                    while z < n2 - 1 {
+                        let pred = eighth
+                            * (data[r00 + z - 1]
+                                + data[r00 + z + 1]
+                                + data[r01 + z - 1]
+                                + data[r01 + z + 1]
+                                + data[r10 + z - 1]
+                                + data[r10 + z + 1]
+                                + data[r11 + z - 1]
+                                + data[r11 + z + 1]);
+                        upd!(data[base + z], pred);
+                        z += 2;
+                    }
+                }
+            }
+        }
+    }
+}
+
+fn residual_pass_generic<T: Scalar>(data: &mut [T], shape: &[usize]) {
+    let active = active_dims(shape);
+    let strides = crate::tensor::strides_for(shape);
+    let d = shape.len();
+    let mut idx = vec![0usize; d];
+    let n = data.len();
+    // odd_dims: strides of dims where the index is odd (active only)
+    let mut odd: Vec<usize> = Vec::with_capacity(d);
+    for flat in 0..n {
+        odd.clear();
+        for k in 0..d {
+            if active[k] && idx[k] % 2 == 1 {
+                odd.push(strides[k]);
+            }
+        }
+        let q = odd.len();
+        if q > 0 {
+            // average of the 2^q corners
+            let mut acc = T::ZERO;
+            for mask in 0..(1usize << q) {
+                let mut off = flat;
+                for (b, &s) in odd.iter().enumerate() {
+                    if mask & (1 << b) != 0 {
+                        off += s;
+                    } else {
+                        off -= s;
+                    }
+                }
+                acc += data[off];
+            }
+            let w = T::from_f64(1.0 / (1usize << q) as f64);
+            data[flat] -= acc * w;
+        }
+        // increment multi-index
+        for k in (0..d).rev() {
+            idx[k] += 1;
+            if idx[k] < shape[k] {
+                break;
+            }
+            idx[k] = 0;
+        }
+    }
+}
+
+/// Inverse of [`residual_pass`]: add interpolant back to residuals.
+fn unresidual_pass<T: Scalar>(data: &mut [T], shape: &[usize]) {
+    if shape.len() == 3 && shape.iter().all(|&n| n >= 5) {
+        return residual_pass_3d(data, shape, true);
+    }
+    unresidual_pass_generic(data, shape);
+}
+
+fn unresidual_pass_generic<T: Scalar>(data: &mut [T], shape: &[usize]) {
+    let active = active_dims(shape);
+    let strides = crate::tensor::strides_for(shape);
+    let d = shape.len();
+    let mut idx = vec![0usize; d];
+    let n = data.len();
+    let mut odd: Vec<usize> = Vec::with_capacity(d);
+    for flat in 0..n {
+        odd.clear();
+        for k in 0..d {
+            if active[k] && idx[k] % 2 == 1 {
+                odd.push(strides[k]);
+            }
+        }
+        let q = odd.len();
+        if q > 0 {
+            let mut acc = T::ZERO;
+            for mask in 0..(1usize << q) {
+                let mut off = flat;
+                for (b, &s) in odd.iter().enumerate() {
+                    if mask & (1 << b) != 0 {
+                        off += s;
+                    } else {
+                        off -= s;
+                    }
+                }
+                acc += data[off];
+            }
+            let w = T::from_f64(1.0 / (1usize << q) as f64);
+            data[flat] += acc * w;
+        }
+        for k in (0..d).rev() {
+            idx[k] += 1;
+            if idx[k] < shape[k] {
+                break;
+            }
+            idx[k] = 0;
+        }
+    }
+}
+
+/// Copy of the level array with nodal positions zeroed: the multilevel
+/// component `e = (I - Π) Q_l u`, which is zero on `N_{l-1}`.
+fn multilevel_component<T: Scalar>(data: &[T], shape: &[usize]) -> Vec<T> {
+    let active = active_dims(shape);
+    let d = shape.len();
+    let mut e = data.to_vec();
+    let mut idx = vec![0usize; d];
+    for item in e.iter_mut() {
+        let nodal = (0..d).all(|k| !active[k] || idx[k] % 2 == 0);
+        if nodal {
+            *item = T::ZERO;
+        }
+        for k in (0..d).rev() {
+            idx[k] += 1;
+            if idx[k] < shape[k] {
+                break;
+            }
+            idx[k] = 0;
+        }
+    }
+    e
+}
+
+/// Load sweep along `dim`: consumes an array of `shape`, returns the array
+/// with `shape[dim]` halved (load vector contributions along that dim).
+fn load_sweep<T: Scalar>(
+    input: &[T],
+    shape: &[usize],
+    dim: usize,
+    flags: OptFlags,
+    h: f64,
+) -> (Vec<T>, Vec<usize>) {
+    let n = shape[dim];
+    let nc = (n + 1) / 2;
+    let outer: usize = shape[..dim].iter().product();
+    let inner: usize = shape[dim + 1..].iter().product();
+    let mut out_shape = shape.to_vec();
+    out_shape[dim] = nc;
+    let mut out = vec![T::ZERO; outer * nc * inner];
+
+    if inner == 1 {
+        // contiguous lines along the last dim
+        let mut scratch = Vec::new();
+        for o in 0..outer {
+            let line = &input[o * n..(o + 1) * n];
+            let dst = &mut out[o * nc..(o + 1) * nc];
+            if flags.direct_load {
+                load_direct(line, dst, h);
+            } else {
+                load_mass_restrict(line, dst, h, &mut scratch);
+            }
+        }
+    } else if flags.batched {
+        // vectorized direct stencil over the contiguous inner dimension
+        let wo = T::from_f64(h / 12.0);
+        let wm = T::from_f64(h * 0.5);
+        let wc = T::from_f64(h * 5.0 / 6.0);
+        let wb = T::from_f64(h * 5.0 / 12.0);
+        for o in 0..outer {
+            let src = &input[o * n * inner..(o + 1) * n * inner];
+            let dst = &mut out[o * nc * inner..(o + 1) * nc * inner];
+            // i = 0: wb*c0 + wm*c1 + wo*c2
+            {
+                let (r0, r1, r2) = (&src[0..inner], &src[inner..2 * inner], &src[2 * inner..3 * inner]);
+                let d0 = &mut dst[0..inner];
+                for j in 0..inner {
+                    d0[j] = wb * r0[j] + wm * r1[j] + wo * r2[j];
+                }
+            }
+            for i in 1..nc - 1 {
+                let k = 2 * i;
+                let base = (k - 2) * inner;
+                let rows = &src[base..base + 5 * inner];
+                let d = &mut dst[i * inner..(i + 1) * inner];
+                for j in 0..inner {
+                    d[j] = wo * rows[j]
+                        + wm * rows[inner + j]
+                        + wc * rows[2 * inner + j]
+                        + wm * rows[3 * inner + j]
+                        + wo * rows[4 * inner + j];
+                }
+            }
+            // i = nc-1
+            {
+                let base = (n - 3) * inner;
+                let rows = &src[base..base + 3 * inner];
+                let d = &mut dst[(nc - 1) * inner..nc * inner];
+                for j in 0..inner {
+                    d[j] = wo * rows[j] + wm * rows[inner + j] + wb * rows[2 * inner + j];
+                }
+            }
+        }
+    } else {
+        // column-at-a-time with strided gather/scatter (the pre-BCC pattern)
+        let mut col_in = vec![T::ZERO; n];
+        let mut col_out = vec![T::ZERO; nc];
+        let mut scratch = Vec::new();
+        for o in 0..outer {
+            let src_base = o * n * inner;
+            let dst_base = o * nc * inner;
+            for j in 0..inner {
+                for i in 0..n {
+                    col_in[i] = input[src_base + i * inner + j];
+                }
+                if flags.direct_load {
+                    load_direct(&col_in, &mut col_out, h);
+                } else {
+                    load_mass_restrict(&col_in, &mut col_out, h, &mut scratch);
+                }
+                for i in 0..nc {
+                    out[dst_base + i * inner + j] = col_out[i];
+                }
+            }
+        }
+    }
+    (out, out_shape)
+}
+
+/// Tridiagonal mass solve along `dim` (in place).
+fn mass_solve<T: Scalar>(
+    data: &mut [T],
+    shape: &[usize],
+    dim: usize,
+    flags: OptFlags,
+    h: f64,
+    aux: &mut AuxCache<T>,
+) {
+    let n = shape[dim];
+    let outer: usize = shape[..dim].iter().product();
+    let inner: usize = shape[dim + 1..].iter().product();
+    if inner == 1 {
+        if flags.reuse {
+            let a = aux.get(n).clone();
+            for o in 0..outer {
+                a.solve(&mut data[o * n..(o + 1) * n]);
+            }
+        } else {
+            for o in 0..outer {
+                thomas_solve_fresh(&mut data[o * n..(o + 1) * n], h);
+            }
+        }
+    } else if flags.batched {
+        if flags.reuse {
+            let a = aux.get(n).clone();
+            for o in 0..outer {
+                a.solve_batch(&mut data[o * n * inner..(o + 1) * n * inner], inner);
+            }
+        } else {
+            let a = ThomasAux::<T>::new(n, h);
+            for o in 0..outer {
+                a.solve_batch(&mut data[o * n * inner..(o + 1) * n * inner], inner);
+            }
+        }
+    } else {
+        let mut col = vec![T::ZERO; n];
+        for o in 0..outer {
+            let base = o * n * inner;
+            for j in 0..inner {
+                for i in 0..n {
+                    col[i] = data[base + i * inner + j];
+                }
+                if flags.reuse {
+                    aux.get(n).solve(&mut col);
+                } else {
+                    thomas_solve_fresh(&mut col, h);
+                }
+                for i in 0..n {
+                    data[base + i * inner + j] = col[i];
+                }
+            }
+        }
+    }
+}
+
+/// First load sweep fused with the nodal mask: reads the residualized level
+/// array directly (even-everywhere entries are implicitly zero) and sweeps
+/// along the *last* (contiguous) dimension. This is the IVER elimination of
+/// the intermediate multilevel-component array (§5.4): one full-array copy
+/// and one full-array write vanish.
+fn load_sweep_last_masked<T: Scalar>(
+    input: &[T],
+    shape: &[usize],
+    active: &[bool],
+) -> (Vec<T>, Vec<usize>) {
+    let d = shape.len();
+    let n = shape[d - 1];
+    let nc = (n + 1) / 2;
+    let outer: usize = shape[..d - 1].iter().product();
+    let mut out_shape = shape.to_vec();
+    out_shape[d - 1] = nc;
+    let mut out = vec![T::ZERO; outer * nc];
+    let wo = T::from_f64(1.0 / 12.0);
+    let wm = T::from_f64(0.5);
+    let wc = T::from_f64(5.0 / 6.0);
+    let wb = T::from_f64(5.0 / 12.0);
+    let mut idx = vec![0usize; d.saturating_sub(1)];
+    for o in 0..outer {
+        let others_even = (0..d - 1).all(|k| !active[k] || idx[k] % 2 == 0);
+        let line = &input[o * n..(o + 1) * n];
+        let dst = &mut out[o * nc..(o + 1) * nc];
+        if others_even {
+            // nodal (even) entries of e are zero: only the odd taps remain
+            dst[0] = wm * line[1];
+            for i in 1..nc - 1 {
+                let k = 2 * i;
+                dst[i] = wm * (line[k - 1] + line[k + 1]);
+            }
+            dst[nc - 1] = wm * line[n - 2];
+        } else {
+            // every entry on this line is a coefficient node
+            dst[0] = wb * line[0] + wm * line[1] + wo * line[2];
+            for i in 1..nc - 1 {
+                let k = 2 * i;
+                dst[i] = wo * line[k - 2]
+                    + wm * line[k - 1]
+                    + wc * line[k]
+                    + wm * line[k + 1]
+                    + wo * line[k + 2];
+            }
+            dst[nc - 1] = wo * line[n - 3] + wm * line[n - 2] + wb * line[n - 1];
+        }
+        for k in (0..d - 1).rev() {
+            idx[k] += 1;
+            if idx[k] < shape[k] {
+                break;
+            }
+            idx[k] = 0;
+        }
+    }
+    (out, out_shape)
+}
+
+/// Compute the correction `Q_{l-1}(I-Π)Q_l u` from the residualized level
+/// array: load sweeps along every active dim, then mass solves.
+fn correction<T: Scalar>(
+    level_data: &[T],
+    shape: &[usize],
+    flags: OptFlags,
+    h_level: f64,
+    aux: &mut AuxCache<T>,
+) -> (Vec<T>, Vec<usize>) {
+    let active = active_dims(shape);
+    let d = shape.len();
+    // the h factors cancel against the mass solve; the non-IVER path carries
+    // them through both stages like the original implementation
+    let h = if flags.reuse { 1.0 } else { h_level };
+    let mut work;
+    let mut wshape;
+    if flags.reuse && flags.direct_load && active[d - 1] {
+        // IVER fast path: fused mask + last-dim sweep, no e-copy
+        let (w, s) = load_sweep_last_masked(level_data, shape, &active);
+        work = w;
+        wshape = s;
+        for k in 0..d - 1 {
+            if active[k] {
+                let (w, s) = load_sweep(&work, &wshape, k, flags, h);
+                work = w;
+                wshape = s;
+            }
+        }
+    } else {
+        work = multilevel_component(level_data, shape);
+        wshape = shape.to_vec();
+        for k in 0..d {
+            if active[k] {
+                let (w, s) = load_sweep(&work, &wshape, k, flags, h);
+                work = w;
+                wshape = s;
+            }
+        }
+    }
+    for k in 0..d {
+        if active[k] {
+            mass_solve(&mut work, &wshape, k, flags, h, aux);
+        }
+    }
+    (work, wshape)
+}
+
+/// Correction of a given multilevel component in isolation (exposed for the
+/// §4.2.2 penalty-factor calibration, which measures the statistical spread
+/// of corrections induced by coefficient-node noise).
+pub(crate) fn correction_of_component(e: &[f64], shape: &[usize], flags: OptFlags) -> Vec<f64> {
+    let mut aux = AuxCache::new();
+    let (corr, _) = correction(e, shape, flags, 1.0, &mut aux);
+    corr
+}
+
+/// De-interleave one level: returns (coarse contiguous array, coefficient
+/// stream in canonical order). `corr` is the correction to add to the nodal
+/// values.
+fn split_level<T: Scalar>(
+    data: &[T],
+    shape: &[usize],
+    corr: &[T],
+    cshape: &[usize],
+) -> (Vec<T>, Vec<T>) {
+    let active = active_dims(shape);
+    let d = shape.len();
+    let n = shape[d - 1];
+    let last_active = active[d - 1];
+    let outer: usize = shape[..d - 1].iter().product();
+    let mut coarse = vec![T::ZERO; numel(cshape)];
+    let mut coeffs = Vec::with_capacity(numel(shape) - numel(cshape));
+    let mut idx = vec![0usize; d.saturating_sub(1)];
+    let mut cflat = 0usize;
+    // line-at-a-time: a whole z-line is coefficient data unless every other
+    // active dim is even; the canonical (row-major) order is preserved
+    for o in 0..outer {
+        let others_even = (0..d - 1).all(|k| !active[k] || idx[k] % 2 == 0);
+        let line = &data[o * n..(o + 1) * n];
+        if !others_even {
+            coeffs.extend_from_slice(line);
+        } else if last_active {
+            for (z, &v) in line.iter().enumerate() {
+                if z % 2 == 0 {
+                    coarse[cflat] = v + corr[cflat];
+                    cflat += 1;
+                } else {
+                    coeffs.push(v);
+                }
+            }
+        } else {
+            // last dim bottomed out: the whole line is nodal
+            for &v in line {
+                coarse[cflat] = v + corr[cflat];
+                cflat += 1;
+            }
+        }
+        for k in (0..d - 1).rev() {
+            idx[k] += 1;
+            if idx[k] < shape[k] {
+                break;
+            }
+            idx[k] = 0;
+        }
+    }
+    debug_assert_eq!(cflat, numel(cshape));
+    (coarse, coeffs)
+}
+
+/// Inverse of [`split_level`]: interleave coarse (minus correction) and
+/// coefficients back into a fine contiguous array, then add interpolants.
+fn merge_level<T: Scalar>(
+    coarse: &[T],
+    cshape: &[usize],
+    coeffs: &[T],
+    shape: &[usize],
+    corr: &[T],
+) -> Vec<T> {
+    let active = active_dims(shape);
+    let d = shape.len();
+    let n = shape[d - 1];
+    let last_active = active[d - 1];
+    let outer: usize = shape[..d - 1].iter().product();
+    let mut fine = vec![T::ZERO; numel(shape)];
+    let mut idx = vec![0usize; d.saturating_sub(1)];
+    let mut cflat = 0usize;
+    let mut kflat = 0usize;
+    for o in 0..outer {
+        let others_even = (0..d - 1).all(|k| !active[k] || idx[k] % 2 == 0);
+        let line = &mut fine[o * n..(o + 1) * n];
+        if !others_even {
+            line.copy_from_slice(&coeffs[kflat..kflat + n]);
+            kflat += n;
+        } else if last_active {
+            for (z, slot) in line.iter_mut().enumerate() {
+                if z % 2 == 0 {
+                    *slot = coarse[cflat] - corr[cflat];
+                    cflat += 1;
+                } else {
+                    *slot = coeffs[kflat];
+                    kflat += 1;
+                }
+            }
+        } else {
+            for slot in line.iter_mut() {
+                *slot = coarse[cflat] - corr[cflat];
+                cflat += 1;
+            }
+        }
+        for k in (0..d - 1).rev() {
+            idx[k] += 1;
+            if idx[k] < shape[k] {
+                break;
+            }
+            idx[k] = 0;
+        }
+    }
+    debug_assert_eq!(cflat, numel(cshape));
+    debug_assert_eq!(kflat, coeffs.len());
+    // coefficient nodes: residual + interpolant of (now final) nodal values
+    unresidual_pass(&mut fine, shape);
+    fine
+}
+
+/// One decomposition step on a contiguous level array: returns
+/// `(coarse, coarse_shape, coefficient_stream)`. Exposed so Algorithm 1's
+/// adaptive loop (compressors::mgard_plus) can interleave termination checks
+/// between levels.
+pub(crate) fn step_decompose<T: Scalar>(
+    cur: Vec<T>,
+    shape: &[usize],
+    flags: OptFlags,
+    h_level: f64,
+) -> (Vec<T>, Vec<usize>, Vec<T>) {
+    let mut aux = AuxCache::new();
+    let mut cur = cur;
+    residual_pass(&mut cur, shape);
+    let (corr, cshape) = correction(&cur, shape, flags, h_level, &mut aux);
+    let (coarse, coeffs) = split_level(&cur, shape, &corr, &cshape);
+    (coarse, cshape, coeffs)
+}
+
+/// Full decomposition with the contiguous engine.
+pub(crate) fn decompose<T: Scalar>(
+    hierarchy: &Hierarchy,
+    flags: OptFlags,
+    padded: Tensor<T>,
+    stop_level: usize,
+) -> Decomposition<T> {
+    let ll = hierarchy.nlevels();
+    let mut aux = AuxCache::new();
+    let mut cur = padded.into_vec();
+    let mut shape = hierarchy.padded_shape().to_vec();
+    // streams collected finest-first, then reversed into level order
+    let mut streams_rev: Vec<Vec<T>> = Vec::with_capacity(ll - stop_level);
+    for l in ((stop_level + 1)..=ll).rev() {
+        let h_level = hierarchy.spacing(l);
+        residual_pass(&mut cur, &shape);
+        let (corr, cshape) = correction(&cur, &shape, flags, h_level, &mut aux);
+        let (coarse, coeffs) = split_level(&cur, &shape, &corr, &cshape);
+        streams_rev.push(coeffs);
+        cur = coarse;
+        shape = cshape;
+        debug_assert_eq!(shape, hierarchy.level_shape(l - 1));
+    }
+    streams_rev.reverse();
+    Decomposition {
+        hierarchy: hierarchy.clone(),
+        start_level: stop_level,
+        coarse: Tensor::from_vec(&shape, cur).expect("coarse shape consistent"),
+        coeffs: streams_rev,
+    }
+}
+
+/// Recompose up to `target_level`, returning `Q_{target} u` on its level
+/// grid (the full padded array when `target_level == L`).
+pub(crate) fn recompose<T: Scalar>(
+    hierarchy: &Hierarchy,
+    flags: OptFlags,
+    d: &Decomposition<T>,
+    target_level: usize,
+) -> Result<Tensor<T>> {
+    let mut aux = AuxCache::new();
+    let mut cur = d.coarse.data().to_vec();
+    let mut shape = d.coarse.shape().to_vec();
+    for l in (d.start_level + 1)..=target_level {
+        let fine_shape = hierarchy.level_shape(l);
+        let coeffs = &d.coeffs[l - d.start_level - 1];
+        // correction must be recomputed from the residuals exactly as the
+        // decomposition computed it
+        let h_level = hierarchy.spacing(l);
+        let e_fine = scatter_coeffs_only(coeffs, &fine_shape);
+        let (corr, cshape) = correction(&e_fine, &fine_shape, flags, h_level, &mut aux);
+        debug_assert_eq!(cshape, shape);
+        cur = merge_level(&cur, &shape, coeffs, &fine_shape, &corr);
+        shape = fine_shape;
+    }
+    Ok(Tensor::from_vec(&shape, cur).expect("recompose shape consistent"))
+}
+
+/// Build a fine-shaped array holding residuals at coefficient positions and
+/// zero at nodal positions (the multilevel component, recomposition side).
+fn scatter_coeffs_only<T: Scalar>(coeffs: &[T], shape: &[usize]) -> Vec<T> {
+    let active = active_dims(shape);
+    let d = shape.len();
+    let n = shape[d - 1];
+    let last_active = active[d - 1];
+    let outer: usize = shape[..d - 1].iter().product();
+    let mut out = vec![T::ZERO; numel(shape)];
+    let mut idx = vec![0usize; d.saturating_sub(1)];
+    let mut k = 0usize;
+    for o in 0..outer {
+        let others_even = (0..d - 1).all(|q| !active[q] || idx[q] % 2 == 0);
+        let line = &mut out[o * n..(o + 1) * n];
+        if !others_even {
+            line.copy_from_slice(&coeffs[k..k + n]);
+            k += n;
+        } else if last_active {
+            let mut z = 1;
+            while z < n {
+                line[z] = coeffs[k];
+                k += 1;
+                z += 2;
+            }
+        }
+        for q in (0..d - 1).rev() {
+            idx[q] += 1;
+            if idx[q] < shape[q] {
+                break;
+            }
+            idx[q] = 0;
+        }
+    }
+    debug_assert_eq!(k, coeffs.len());
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::rng::Rng;
+
+    fn rand_tensor(shape: &[usize], seed: u64) -> Tensor<f64> {
+        let mut rng = Rng::new(seed);
+        Tensor::from_fn(shape, |_| rng.uniform_in(-1.0, 1.0))
+    }
+
+    fn round_trip(shape: &[usize], flags: OptFlags, seed: u64) {
+        let h = Hierarchy::new(shape, None).unwrap();
+        let u = rand_tensor(shape, seed);
+        let padded = h.pad(&u).unwrap();
+        let dec = decompose(&h, flags, padded, 0);
+        dec.validate().unwrap();
+        let back = recompose(&h, flags, &dec, h.nlevels()).unwrap();
+        let back = h.crop(&back).unwrap();
+        let err = crate::metrics::linf_error(u.data(), back.data());
+        assert!(err < 1e-10, "round trip error {err} for {shape:?} {flags:?}");
+    }
+
+    #[test]
+    fn round_trip_1d() {
+        for flags in [OptFlags::dr(), OptFlags::dr_dlvc(), OptFlags::all()] {
+            round_trip(&[17], flags, 1);
+            round_trip(&[33], flags, 2);
+        }
+    }
+
+    #[test]
+    fn round_trip_2d() {
+        for (i, flags) in [
+            OptFlags::dr(),
+            OptFlags::dr_dlvc(),
+            OptFlags::dr_dlvc_bcc(),
+            OptFlags::all(),
+        ]
+        .into_iter()
+        .enumerate()
+        {
+            round_trip(&[9, 9], flags, 10 + i as u64);
+            round_trip(&[17, 9], flags, 20 + i as u64);
+        }
+    }
+
+    #[test]
+    fn round_trip_3d_and_4d() {
+        round_trip(&[9, 9, 9], OptFlags::all(), 31);
+        round_trip(&[5, 9, 17], OptFlags::all(), 32);
+        round_trip(&[5, 5, 5, 5], OptFlags::all(), 33);
+    }
+
+    #[test]
+    fn round_trip_non_dyadic() {
+        round_trip(&[7, 12], OptFlags::all(), 41);
+        round_trip(&[6, 10, 11], OptFlags::all(), 42);
+    }
+
+    #[test]
+    fn all_flag_combos_agree() {
+        let shape = [9, 17];
+        let h = Hierarchy::new(&shape, None).unwrap();
+        let u = rand_tensor(&shape, 55);
+        let reference = decompose(&h, OptFlags::all(), h.pad(&u).unwrap(), 0);
+        for flags in [OptFlags::dr(), OptFlags::dr_dlvc(), OptFlags::dr_dlvc_bcc()] {
+            let other = decompose(&h, flags, h.pad(&u).unwrap(), 0);
+            assert_eq!(other.coeffs.len(), reference.coeffs.len());
+            for (a, b) in other
+                .coarse
+                .data()
+                .iter()
+                .chain(other.coeffs.iter().flatten())
+                .zip(reference.coarse.data().iter().chain(reference.coeffs.iter().flatten()))
+            {
+                assert!((a - b).abs() < 1e-9, "{flags:?}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn linear_function_has_zero_fine_coefficients() {
+        // A multilinear function is reproduced exactly by interpolation, so
+        // all multilevel coefficients above the coarsest level must vanish.
+        let shape = [9, 9];
+        let h = Hierarchy::new(&shape, None).unwrap();
+        let u = Tensor::<f64>::from_fn(&shape, |ix| {
+            2.0 + 0.5 * ix[0] as f64 - 0.25 * ix[1] as f64
+        });
+        let dec = decompose(&h, OptFlags::all(), h.pad(&u).unwrap(), 0);
+        for (k, stream) in dec.coeffs.iter().enumerate() {
+            for &c in stream {
+                assert!(c.abs() < 1e-9, "level {} coeff {c}", dec.coeff_level(k));
+            }
+        }
+    }
+
+    #[test]
+    fn partial_decompose_stops_at_level() {
+        let shape = [17, 17];
+        let h = Hierarchy::new(&shape, None).unwrap();
+        let u = rand_tensor(&shape, 77);
+        let dec = decompose(&h, OptFlags::all(), h.pad(&u).unwrap(), 2);
+        assert_eq!(dec.start_level, 2);
+        assert_eq!(dec.coarse.shape(), &[9, 9]);
+        assert_eq!(dec.coeffs.len(), 1);
+        let back = recompose(&h, OptFlags::all(), &dec, h.nlevels()).unwrap();
+        let err = crate::metrics::linf_error(h.pad(&u).unwrap().data(), back.data());
+        assert!(err < 1e-10);
+    }
+
+    #[test]
+    fn partial_recompose_is_projection() {
+        // recompose_to_level of a full decomposition reproduces the coarse
+        // array obtained by a decomposition stopped at that level.
+        let shape = [17, 17];
+        let h = Hierarchy::new(&shape, None).unwrap();
+        let u = rand_tensor(&shape, 88);
+        let full = decompose(&h, OptFlags::all(), h.pad(&u).unwrap(), 0);
+        let partial = decompose(&h, OptFlags::all(), h.pad(&u).unwrap(), 2);
+        let q2 = recompose(&h, OptFlags::all(), &full, 2).unwrap();
+        let err = crate::metrics::linf_error(q2.data(), partial.coarse.data());
+        assert!(err < 1e-9, "Q_2 mismatch {err}");
+    }
+
+    #[test]
+    fn residual_pass_zero_on_nodal() {
+        let shape = [5, 5];
+        let mut data: Vec<f64> = (0..25).map(|i| (i as f64 * 0.7).sin()).collect();
+        let orig = data.clone();
+        residual_pass(&mut data, &shape);
+        // nodal nodes (even, even) unchanged
+        for i in (0..5).step_by(2) {
+            for j in (0..5).step_by(2) {
+                assert_eq!(data[i * 5 + j], orig[i * 5 + j]);
+            }
+        }
+        // edge node (0,1): residual vs horizontal neighbors
+        let expect = orig[1] - 0.5 * (orig[0] + orig[2]);
+        assert!((data[1] - expect).abs() < 1e-12);
+        // cube^2 node (1,1): bilinear corners
+        let expect = orig[6] - 0.25 * (orig[0] + orig[2] + orig[10] + orig[12]);
+        assert!((data[6] - expect).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,350 @@
+//! Multilevel decomposition / recomposition (§2) with the MGARD+ performance
+//! optimizations (§5).
+//!
+//! Two engines implement the same transform:
+//!
+//! * [`baseline`] — the original method as described in §2: operates in
+//!   place on the full array with strided accesses whose stride doubles per
+//!   level, computes load vectors by fine-grained mass-matrix multiplication
+//!   followed by restriction, and re-derives the tridiagonal auxiliary
+//!   arrays for every line. This is the reference point for the Fig. 6
+//!   speedups.
+//! * [`contiguous`] — the MGARD+ engine: level-centric data reordering (DR,
+//!   §5.1), direct load-vector computation (DLVC, §5.2), batched correction
+//!   computation (BCC, §5.3), and intermediate-variable elimination & reuse
+//!   (IVER, §5.4), each individually switchable for the ablation.
+//!
+//! Both produce a [`Decomposition`]: the coarse representation `Q_l̃ u` plus
+//! per-level multilevel-coefficient streams in a canonical order (row-major
+//! over the level grid, skipping nodes already present in the next coarser
+//! grid), so their outputs are interchangeable bit-for-bit up to FP rounding.
+
+pub mod baseline;
+pub mod contiguous;
+pub mod sweeps;
+
+use crate::error::{Error, Result};
+use crate::grid::Hierarchy;
+use crate::tensor::{Scalar, Tensor};
+
+/// Which of the §5 optimizations are enabled (Fig. 6 ablation knobs).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct OptFlags {
+    /// DR: level-centric data reordering (§5.1). Off = baseline engine.
+    pub reorder: bool,
+    /// DLVC: direct load-vector computation (§5.2).
+    pub direct_load: bool,
+    /// BCC: batched correction computation (§5.3).
+    pub batched: bool,
+    /// IVER: intermediate-variable elimination & reuse (§5.4).
+    pub reuse: bool,
+}
+
+impl OptFlags {
+    /// The original multilevel method (no optimizations).
+    pub fn baseline() -> Self {
+        OptFlags {
+            reorder: false,
+            direct_load: false,
+            batched: false,
+            reuse: false,
+        }
+    }
+
+    /// +DR only.
+    pub fn dr() -> Self {
+        OptFlags {
+            reorder: true,
+            direct_load: false,
+            batched: false,
+            reuse: false,
+        }
+    }
+
+    /// +DR +DLVC.
+    pub fn dr_dlvc() -> Self {
+        OptFlags {
+            reorder: true,
+            direct_load: true,
+            batched: false,
+            reuse: false,
+        }
+    }
+
+    /// +DR +DLVC +BCC.
+    pub fn dr_dlvc_bcc() -> Self {
+        OptFlags {
+            reorder: true,
+            direct_load: true,
+            batched: true,
+            reuse: false,
+        }
+    }
+
+    /// All optimizations (the MGARD+ configuration).
+    pub fn all() -> Self {
+        OptFlags {
+            reorder: true,
+            direct_load: true,
+            batched: true,
+            reuse: true,
+        }
+    }
+
+    /// The five cumulative configurations of Fig. 6, with display labels.
+    pub fn fig6_series() -> Vec<(&'static str, OptFlags)> {
+        vec![
+            ("MGARD", OptFlags::baseline()),
+            ("+DR", OptFlags::dr()),
+            ("+DLVC", OptFlags::dr_dlvc()),
+            ("+BCC", OptFlags::dr_dlvc_bcc()),
+            ("+IVER", OptFlags::all()),
+        ]
+    }
+
+    fn validate(&self) -> Result<()> {
+        if !self.reorder && (self.direct_load || self.batched || self.reuse) {
+            return Err(Error::invalid(
+                "the baseline (non-reordered) engine does not support DLVC/BCC/IVER; \
+                 enable `reorder` first (the paper applies the optimizations cumulatively)",
+            ));
+        }
+        if self.batched && !self.direct_load {
+            return Err(Error::invalid(
+                "BCC requires DLVC (the batched sweep implements the direct stencil only)",
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// Result of a (possibly adaptive/partial) multilevel decomposition.
+///
+/// `coarse` holds `Q_l̃ u` on grid `N_l̃` and `coeffs[k]` holds the level
+/// `l̃+1+k` multilevel coefficients (values on `N_{l̃+1+k}^*`) in canonical
+/// order. A full decomposition has `start_level == 0`.
+#[derive(Clone, Debug)]
+pub struct Decomposition<T: Scalar> {
+    /// The grid hierarchy this decomposition lives on.
+    pub hierarchy: Hierarchy,
+    /// `l̃`: the level at which decomposition stopped (0 = complete).
+    pub start_level: usize,
+    /// `Q_l̃ u` — the coarse representation, shape `hierarchy.level_shape(l̃)`.
+    pub coarse: Tensor<T>,
+    /// Per-level coefficient streams for levels `l̃+1 ..= L`.
+    pub coeffs: Vec<Vec<T>>,
+}
+
+impl<T: Scalar> Decomposition<T> {
+    /// The finest level `L`.
+    pub fn max_level(&self) -> usize {
+        self.hierarchy.nlevels()
+    }
+
+    /// Absolute level of `coeffs[k]`.
+    pub fn coeff_level(&self, k: usize) -> usize {
+        self.start_level + 1 + k
+    }
+
+    /// Consistency check: stream lengths must match `#N_l^*` of each level.
+    pub fn validate(&self) -> Result<()> {
+        let h = &self.hierarchy;
+        if self.coarse.shape() != h.level_shape(self.start_level).as_slice() {
+            return Err(Error::shape("decomposition coarse shape mismatch"));
+        }
+        if self.start_level + self.coeffs.len() != h.nlevels() {
+            return Err(Error::shape(format!(
+                "decomposition has {} coefficient levels; expected {}",
+                self.coeffs.len(),
+                h.nlevels() - self.start_level
+            )));
+        }
+        for (k, c) in self.coeffs.iter().enumerate() {
+            let l = self.coeff_level(k);
+            if c.len() != h.num_coeff_nodes(l) {
+                return Err(Error::shape(format!(
+                    "level {l} stream has {} values; expected {}",
+                    c.len(),
+                    h.num_coeff_nodes(l)
+                )));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Multilevel decomposer: a [`Hierarchy`] plus an [`OptFlags`] configuration.
+#[derive(Clone, Debug)]
+pub struct Decomposer {
+    hierarchy: Hierarchy,
+    flags: OptFlags,
+}
+
+impl Decomposer {
+    /// Create a decomposer; validates the flag combination.
+    pub fn new(hierarchy: Hierarchy, flags: OptFlags) -> Result<Self> {
+        flags.validate()?;
+        Ok(Decomposer { hierarchy, flags })
+    }
+
+    /// The hierarchy this decomposer operates on.
+    pub fn hierarchy(&self) -> &Hierarchy {
+        &self.hierarchy
+    }
+
+    /// The optimization configuration.
+    pub fn flags(&self) -> OptFlags {
+        self.flags
+    }
+
+    /// Fully decompose `u` (original shape; padding applied internally).
+    pub fn decompose<T: Scalar>(&self, u: &Tensor<T>) -> Result<Decomposition<T>> {
+        self.decompose_to(u, 0)
+    }
+
+    /// Decompose down to `stop_level` (inclusive); `stop_level == L` is a
+    /// no-op decomposition whose "coarse" representation is the input.
+    pub fn decompose_to<T: Scalar>(
+        &self,
+        u: &Tensor<T>,
+        stop_level: usize,
+    ) -> Result<Decomposition<T>> {
+        if stop_level > self.hierarchy.nlevels() {
+            return Err(Error::invalid(format!(
+                "stop_level {stop_level} > L = {}",
+                self.hierarchy.nlevels()
+            )));
+        }
+        let padded = self.hierarchy.pad(u)?;
+        let d = if self.flags.reorder {
+            contiguous::decompose(&self.hierarchy, self.flags, padded, stop_level)
+        } else {
+            baseline::decompose(&self.hierarchy, padded, stop_level)
+        };
+        debug_assert!(d.validate().is_ok());
+        Ok(d)
+    }
+
+    /// Full recomposition back to the original shape.
+    pub fn recompose<T: Scalar>(&self, d: &Decomposition<T>) -> Result<Tensor<T>> {
+        d.validate()?;
+        let full = if self.flags.reorder {
+            contiguous::recompose(&self.hierarchy, self.flags, d, self.hierarchy.nlevels())?
+        } else {
+            baseline::recompose(&self.hierarchy, d, self.hierarchy.nlevels())?
+        };
+        self.hierarchy.crop(&full)
+    }
+
+    /// Partial recomposition: returns `Q_l u` on grid `N_l` (the reduced
+    /// representation used for refactoring and coarse-grained analysis,
+    /// §6.2.2). Values live on the padded domain's level grid.
+    pub fn recompose_to_level<T: Scalar>(
+        &self,
+        d: &Decomposition<T>,
+        level: usize,
+    ) -> Result<Tensor<T>> {
+        // partial validation: only the streams up to `level` are needed, so
+        // a progressively-retrieved decomposition (refactor store) may omit
+        // the finer ones
+        if d.coarse.shape() != self.hierarchy.level_shape(d.start_level).as_slice() {
+            return Err(Error::shape("decomposition coarse shape mismatch"));
+        }
+        if d.start_level + d.coeffs.len() < level {
+            return Err(Error::invalid(format!(
+                "recompose to level {level} needs {} streams, decomposition has {}",
+                level - d.start_level,
+                d.coeffs.len()
+            )));
+        }
+        for k in 0..(level - d.start_level) {
+            let l = d.coeff_level(k);
+            if d.coeffs[k].len() != self.hierarchy.num_coeff_nodes(l) {
+                return Err(Error::shape(format!("level {l} stream length mismatch")));
+            }
+        }
+        if level < d.start_level || level > self.hierarchy.nlevels() {
+            return Err(Error::invalid(format!(
+                "recompose level {level} outside [{}, {}]",
+                d.start_level,
+                self.hierarchy.nlevels()
+            )));
+        }
+        if self.flags.reorder {
+            contiguous::recompose(&self.hierarchy, self.flags, d, level)
+        } else {
+            baseline::recompose(&self.hierarchy, d, level)
+        }
+    }
+}
+
+/// Iterate the canonical coefficient-node order of level `l`: row-major over
+/// `N_l`'s level grid, skipping nodes present in `N_{l-1}`. Calls `f` with
+/// the node's level-grid multi-index.
+///
+/// A node belongs to `N_{l-1}` iff its coordinate is even along every dim
+/// that is active (still halving) at step `l`.
+pub(crate) fn for_each_coeff_node(
+    hierarchy: &Hierarchy,
+    l: usize,
+    mut f: impl FnMut(&[usize]),
+) {
+    let shape = hierarchy.level_shape(l);
+    let active: Vec<bool> = (0..shape.len())
+        .map(|d| l >= 1 && hierarchy.dim_active(l, d))
+        .collect();
+    crate::tensor::for_each_index(&shape, |ix| {
+        let nodal = ix
+            .iter()
+            .enumerate()
+            .all(|(d, &i)| !active[d] || i % 2 == 0);
+        if !nodal {
+            f(ix);
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flag_combos_validated() {
+        assert!(Decomposer::new(Hierarchy::new(&[9, 9], None).unwrap(), OptFlags::all()).is_ok());
+        let bad = OptFlags {
+            reorder: false,
+            direct_load: true,
+            batched: false,
+            reuse: false,
+        };
+        assert!(Decomposer::new(Hierarchy::new(&[9, 9], None).unwrap(), bad).is_err());
+        let bad2 = OptFlags {
+            reorder: true,
+            direct_load: false,
+            batched: true,
+            reuse: false,
+        };
+        assert!(Decomposer::new(Hierarchy::new(&[9, 9], None).unwrap(), bad2).is_err());
+    }
+
+    #[test]
+    fn coeff_node_count_matches_hierarchy() {
+        let h = Hierarchy::new(&[9, 17], None).unwrap();
+        for l in 1..=h.nlevels() {
+            let mut count = 0;
+            for_each_coeff_node(&h, l, |_| count += 1);
+            assert_eq!(count, h.num_coeff_nodes(l), "level {l}");
+        }
+    }
+
+    #[test]
+    fn fig6_series_is_cumulative() {
+        let series = OptFlags::fig6_series();
+        assert_eq!(series.len(), 5);
+        assert_eq!(series[0].1, OptFlags::baseline());
+        assert_eq!(series[4].1, OptFlags::all());
+        for (_, f) in &series {
+            assert!(f.validate().is_ok());
+        }
+    }
+}

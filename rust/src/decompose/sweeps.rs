@@ -1,0 +1,354 @@
+//! 1-D primitives of the multilevel transform: load-vector stencils, mass
+//! matrices and tridiagonal solves, in both the naive (§2) and optimized
+//! (§5.2–§5.4) variants.
+//!
+//! Geometry: a *fine* line has `2n+1` entries with spacing `h`; its *coarse*
+//! line has `n+1` entries with spacing `2h`. The L² projection of a fine
+//! piecewise-linear function onto the coarse space is `M⁻¹ f` where `M` is
+//! the coarse mass matrix and `f` the coarse load vector.
+//!
+//! With the common factor `h` kept (the un-optimized formulation):
+//!   * load (Lemma 1): `f_i = h·(1/12·c_{2i-2} + 1/2·c_{2i-1} + 5/6·c_{2i}
+//!     + 1/2·c_{2i+1} + 1/12·c_{2i+2})`, boundary rows
+//!     `f_0 = h·(5/12·c_0 + 1/2·c_1 + 1/12·c_2)` (mirrored at the end);
+//!   * mass: `tridiag(1/3, 4/3, 1/3)·h` with `2/3·h` corners.
+//!
+//! IVER (§5.4) cancels `h` between the two, so the optimized path uses the
+//! `h`-free stencils and a precomputed Thomas factorization per line length.
+
+use crate::tensor::Scalar;
+
+/// Interior load stencil weights (c_{2i-2}, c_{2i-1}, c_{2i}, c_{2i+1}, c_{2i+2}).
+const W_OUT: f64 = 1.0 / 12.0;
+const W_MID: f64 = 0.5;
+const W_CTR: f64 = 5.0 / 6.0;
+/// Boundary diagonal weight (exact element integral; see module docs).
+const W_CTR_B: f64 = 5.0 / 12.0;
+
+/// Direct load-vector computation (DLVC, Lemma 1 generalized): maps a fine
+/// line `c` of length `2n+1` to a coarse load `f` of length `n+1`.
+/// `h` multiplies every entry (pass 1.0 for the h-free optimized path).
+pub fn load_direct<T: Scalar>(c: &[T], f: &mut [T], h: f64) {
+    let m = c.len();
+    debug_assert!(m >= 3 && m % 2 == 1);
+    let n = m / 2;
+    debug_assert_eq!(f.len(), n + 1);
+    let wo = T::from_f64(W_OUT * h);
+    let wm = T::from_f64(W_MID * h);
+    let wc = T::from_f64(W_CTR * h);
+    let wb = T::from_f64(W_CTR_B * h);
+    // i = 0
+    f[0] = wb * c[0] + wm * c[1] + wo * c[2];
+    // interior
+    for i in 1..n {
+        let k = 2 * i;
+        f[i] = wo * c[k - 2] + wm * c[k - 1] + wc * c[k] + wm * c[k + 1] + wo * c[k + 2];
+    }
+    // i = n
+    f[n] = wo * c[m - 3] + wm * c[m - 2] + wb * c[m - 1];
+}
+
+/// Naive load-vector computation as in the original multilevel method:
+/// fine-grained mass-matrix multiplication followed by a restriction
+/// transform. Mathematically identical to [`load_direct`]; kept for the
+/// Fig. 6 baseline.
+pub fn load_mass_restrict<T: Scalar>(c: &[T], f: &mut [T], h: f64, scratch: &mut Vec<T>) {
+    let m = c.len();
+    debug_assert!(m >= 3 && m % 2 == 1);
+    let n = m / 2;
+    debug_assert_eq!(f.len(), n + 1);
+    scratch.clear();
+    scratch.resize(m, T::ZERO);
+    // fine mass multiply: interior rows h(1/6, 2/3, 1/6); boundary h(1/3, 1/6)
+    let d_in = T::from_f64(2.0 / 3.0 * h);
+    let d_bd = T::from_f64(1.0 / 3.0 * h);
+    let off = T::from_f64(1.0 / 6.0 * h);
+    scratch[0] = d_bd * c[0] + off * c[1];
+    for j in 1..m - 1 {
+        scratch[j] = off * c[j - 1] + d_in * c[j] + off * c[j + 1];
+    }
+    scratch[m - 1] = off * c[m - 2] + d_bd * c[m - 1];
+    // restriction: f_i = w_{2i} + (w_{2i-1} + w_{2i+1})/2
+    let half = T::from_f64(0.5);
+    f[0] = scratch[0] + half * scratch[1];
+    for i in 1..n {
+        let k = 2 * i;
+        f[i] = scratch[k] + half * (scratch[k - 1] + scratch[k + 1]);
+    }
+    f[n] = scratch[m - 1] + half * scratch[m - 2];
+}
+
+/// Reference load vector by direct element-by-element assembly of
+/// `∫ e·φ_i` over fine elements (test oracle for the two fast versions).
+#[cfg(test)]
+pub fn load_assembled(c: &[f64], h: f64) -> Vec<f64> {
+    let m = c.len();
+    let n = m / 2;
+    let mut f = vec![0.0; n + 1];
+    // coarse hat φ_i is supported on fine elements [2i-2, 2i) and [2i, 2i+2).
+    // On each fine element [j, j+1], e(t) = c_j(1-t) + c_{j+1} t and
+    // φ_i(t) is linear between its nodal values at j and j+1.
+    for j in 0..m - 1 {
+        // φ_i values at fine nodes j and j+1 for every coarse i
+        for i in 0..n + 1 {
+            let k = 2 * i as isize;
+            let phi = |x: isize| -> f64 {
+                let d = (x - k).abs() as f64;
+                (1.0 - d / 2.0).max(0.0)
+            };
+            let (pa, pb) = (phi(j as isize), phi(j as isize + 1));
+            if pa == 0.0 && pb == 0.0 {
+                continue;
+            }
+            // ∫_0^1 (c_a(1-t)+c_b t)(pa(1-t)+pb t) h dt
+            let (ca, cb) = (c[j], c[j + 1]);
+            f[i] += h * (ca * pa / 3.0 + (ca * pb + cb * pa) / 6.0 + cb * pb / 3.0);
+        }
+    }
+    f
+}
+
+/// Precomputed Thomas factorization of the coarse mass matrix
+/// `tridiag(e, d, e)` with `d = 4/3` interior, `2/3` corners, `e = 1/3`
+/// (all scaled by `h`). Reused across every line of a sweep (IVER).
+#[derive(Clone, Debug)]
+pub struct ThomasAux<T: Scalar> {
+    /// `c'_i = e / denom_i` forward-sweep coefficients.
+    cp: Vec<T>,
+    /// `1 / denom_i` reciprocal pivots.
+    inv_denom: Vec<T>,
+    /// Off-diagonal entry (scaled by h).
+    e: T,
+}
+
+impl<T: Scalar> ThomasAux<T> {
+    /// Factor the coarse mass matrix for a line of `n` coarse nodes.
+    pub fn new(n: usize, h: f64) -> Self {
+        debug_assert!(n >= 2);
+        let e = 1.0 / 3.0 * h;
+        let d_in = 4.0 / 3.0 * h;
+        let d_bd = 2.0 / 3.0 * h;
+        let mut cp = vec![T::ZERO; n];
+        let mut inv_denom = vec![T::ZERO; n];
+        let mut denom = d_bd;
+        inv_denom[0] = T::from_f64(1.0 / denom);
+        cp[0] = T::from_f64(e / denom);
+        for i in 1..n {
+            let d = if i == n - 1 { d_bd } else { d_in };
+            denom = d - e * (e / denom);
+            // recompute cp[i-1]-consistent denom chain in f64 for stability
+            inv_denom[i] = T::from_f64(1.0 / denom);
+            cp[i] = T::from_f64(e / denom);
+        }
+        ThomasAux {
+            cp,
+            inv_denom,
+            e: T::from_f64(e),
+        }
+    }
+
+    /// Number of coarse nodes this factorization covers.
+    pub fn len(&self) -> usize {
+        self.cp.len()
+    }
+
+    /// Whether the factorization is empty (never true in practice).
+    pub fn is_empty(&self) -> bool {
+        self.cp.is_empty()
+    }
+
+    /// Solve `M x = f` in place on a contiguous line.
+    pub fn solve(&self, f: &mut [T]) {
+        let n = f.len();
+        debug_assert_eq!(n, self.cp.len());
+        // forward
+        f[0] = f[0] * self.inv_denom[0];
+        for i in 1..n {
+            f[i] = (f[i] - self.e * f[i - 1]) * self.inv_denom[i];
+        }
+        // backward
+        for i in (0..n - 1).rev() {
+            let t = f[i + 1];
+            f[i] = f[i] - self.cp[i] * t;
+        }
+    }
+
+    /// Solve `M x = f` for `batch` interleaved lines stored as
+    /// `f[i * batch + b]` (row i of every line contiguous): the BCC layout.
+    /// The inner loops run over contiguous memory.
+    pub fn solve_batch(&self, f: &mut [T], batch: usize) {
+        let n = self.cp.len();
+        debug_assert_eq!(f.len(), n * batch);
+        // forward
+        for b in 0..batch {
+            f[b] = f[b] * self.inv_denom[0];
+        }
+        for i in 1..n {
+            let (prev, cur) = f.split_at_mut(i * batch);
+            let prev = &prev[(i - 1) * batch..];
+            let cur = &mut cur[..batch];
+            let inv = self.inv_denom[i];
+            let e = self.e;
+            for b in 0..batch {
+                cur[b] = (cur[b] - e * prev[b]) * inv;
+            }
+        }
+        // backward
+        for i in (0..n - 1).rev() {
+            let (cur, next) = f.split_at_mut((i + 1) * batch);
+            let cur = &mut cur[i * batch..];
+            let next = &next[..batch];
+            let cp = self.cp[i];
+            for b in 0..batch {
+                cur[b] = cur[b] - cp * next[b];
+            }
+        }
+    }
+}
+
+/// Plain Thomas solve building its factorization on the fly (the non-IVER
+/// path, recomputing auxiliary arrays for every line as the original method
+/// does).
+pub fn thomas_solve_fresh<T: Scalar>(f: &mut [T], h: f64) {
+    let aux = ThomasAux::<T>::new(f.len(), h);
+    aux.solve(f);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::rng::Rng;
+
+    fn rand_line(n: usize, seed: u64) -> Vec<f64> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| rng.uniform_in(-1.0, 1.0)).collect()
+    }
+
+    #[test]
+    fn direct_load_matches_assembly() {
+        for &m in &[5usize, 9, 17, 33] {
+            let c = rand_line(m, m as u64);
+            let oracle = load_assembled(&c, 1.0);
+            let mut fast = vec![0.0; m / 2 + 1];
+            load_direct(&c, &mut fast, 1.0);
+            for (a, b) in fast.iter().zip(&oracle) {
+                assert!((a - b).abs() < 1e-12, "m={m}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn mass_restrict_matches_direct() {
+        for &m in &[5usize, 9, 33, 65] {
+            let c = rand_line(m, 7 + m as u64);
+            let mut a = vec![0.0; m / 2 + 1];
+            let mut b = vec![0.0; m / 2 + 1];
+            let mut scratch = Vec::new();
+            load_direct(&c, &mut a, 2.5);
+            load_mass_restrict(&c, &mut b, 2.5, &mut scratch);
+            for (x, y) in a.iter().zip(&b) {
+                assert!((x - y).abs() < 1e-12, "{x} vs {y}");
+            }
+        }
+    }
+
+    #[test]
+    fn h_scaling_is_linear() {
+        let c = rand_line(9, 3);
+        let mut f1 = vec![0.0; 5];
+        let mut f2 = vec![0.0; 5];
+        load_direct(&c, &mut f1, 1.0);
+        load_direct(&c, &mut f2, 4.0);
+        for (a, b) in f1.iter().zip(&f2) {
+            assert!((a * 4.0 - b).abs() < 1e-12);
+        }
+    }
+
+    /// Multiply the coarse mass matrix by x (dense reference).
+    fn mass_mul(x: &[f64], h: f64) -> Vec<f64> {
+        let n = x.len();
+        let e = h / 3.0;
+        let d_in = 4.0 * h / 3.0;
+        let d_bd = 2.0 * h / 3.0;
+        (0..n)
+            .map(|i| {
+                let d = if i == 0 || i == n - 1 { d_bd } else { d_in };
+                let mut v = d * x[i];
+                if i > 0 {
+                    v += e * x[i - 1];
+                }
+                if i + 1 < n {
+                    v += e * x[i + 1];
+                }
+                v
+            })
+            .collect()
+    }
+
+    #[test]
+    fn thomas_inverts_mass() {
+        for &n in &[2usize, 3, 5, 9, 17] {
+            for &h in &[1.0, 2.0] {
+                let x = rand_line(n, n as u64 * 31 + h as u64);
+                let mut f = mass_mul(&x, h);
+                let aux = ThomasAux::<f64>::new(n, h);
+                aux.solve(&mut f);
+                for (a, b) in f.iter().zip(&x) {
+                    assert!((a - b).abs() < 1e-10, "n={n} h={h}: {a} vs {b}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fresh_equals_precomputed() {
+        let x = rand_line(9, 5);
+        let mut a = x.clone();
+        let mut b = x.clone();
+        thomas_solve_fresh(&mut a, 3.0);
+        ThomasAux::<f64>::new(9, 3.0).solve(&mut b);
+        for (p, q) in a.iter().zip(&b) {
+            assert!((p - q).abs() < 1e-14);
+        }
+    }
+
+    #[test]
+    fn batch_solve_matches_scalar() {
+        let n = 9;
+        let batch = 7;
+        let aux = ThomasAux::<f64>::new(n, 1.0);
+        // build interleaved batch from independent lines
+        let lines: Vec<Vec<f64>> = (0..batch).map(|b| rand_line(n, 100 + b as u64)).collect();
+        let mut inter = vec![0.0; n * batch];
+        for (b, line) in lines.iter().enumerate() {
+            for i in 0..n {
+                inter[i * batch + b] = line[i];
+            }
+        }
+        aux.solve_batch(&mut inter, batch);
+        for (b, line) in lines.iter().enumerate() {
+            let mut expect = line.clone();
+            aux.solve(&mut expect);
+            for i in 0..n {
+                assert!(
+                    (inter[i * batch + b] - expect[i]).abs() < 1e-12,
+                    "line {b} row {i}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn f32_precision_reasonable() {
+        let n = 33;
+        let x64 = rand_line(n, 9);
+        let x32: Vec<f32> = x64.iter().map(|&v| v as f32).collect();
+        let mut f64v = mass_mul(&x64, 1.0);
+        let mut f32v: Vec<f32> = f64v.iter().map(|&v| v as f32).collect();
+        ThomasAux::<f64>::new(n, 1.0).solve(&mut f64v);
+        ThomasAux::<f32>::new(n, 1.0).solve(&mut f32v);
+        for (a, b) in f32v.iter().zip(&f64v) {
+            assert!((*a as f64 - b).abs() < 1e-4);
+        }
+    }
+}

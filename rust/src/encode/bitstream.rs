@@ -1,0 +1,155 @@
+//! MSB-first bit stream reader/writer used by the Huffman and ZFP coders.
+
+/// Append-only MSB-first bit writer.
+#[derive(Default, Debug)]
+pub struct BitWriter {
+    buf: Vec<u8>,
+    /// Bits used in the current partial byte (0..8).
+    nbits: u32,
+    cur: u8,
+}
+
+impl BitWriter {
+    /// New empty writer.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Write the low `n` bits of `value`, most significant of those first.
+    #[inline]
+    pub fn write_bits(&mut self, value: u64, n: u32) {
+        debug_assert!(n <= 64);
+        let mut left = n;
+        while left > 0 {
+            let take = (8 - self.nbits).min(left);
+            let shift = left - take;
+            let chunk = ((value >> shift) & ((1u64 << take) - 1)) as u8;
+            self.cur = (self.cur << take) | chunk;
+            self.nbits += take;
+            left -= take;
+            if self.nbits == 8 {
+                self.buf.push(self.cur);
+                self.cur = 0;
+                self.nbits = 0;
+            }
+        }
+    }
+
+    /// Write a single bit.
+    #[inline]
+    pub fn write_bit(&mut self, bit: bool) {
+        self.write_bits(bit as u64, 1);
+    }
+
+    /// Number of bits written so far.
+    pub fn bit_len(&self) -> usize {
+        self.buf.len() * 8 + self.nbits as usize
+    }
+
+    /// Flush the partial byte (zero-padded) and return the bytes.
+    pub fn finish(mut self) -> Vec<u8> {
+        if self.nbits > 0 {
+            self.cur <<= 8 - self.nbits;
+            self.buf.push(self.cur);
+        }
+        self.buf
+    }
+}
+
+/// MSB-first bit reader over a byte slice.
+#[derive(Debug)]
+pub struct BitReader<'a> {
+    buf: &'a [u8],
+    /// Absolute bit cursor.
+    pos: usize,
+}
+
+impl<'a> BitReader<'a> {
+    /// Read from the start of `buf`.
+    pub fn new(buf: &'a [u8]) -> Self {
+        BitReader { buf, pos: 0 }
+    }
+
+    /// Remaining readable bits.
+    pub fn remaining(&self) -> usize {
+        self.buf.len() * 8 - self.pos
+    }
+
+    /// Read `n` bits as the low bits of a u64. Returns `None` past the end.
+    #[inline]
+    pub fn read_bits(&mut self, n: u32) -> Option<u64> {
+        if n as usize > self.remaining() {
+            return None;
+        }
+        let mut out = 0u64;
+        let mut left = n;
+        while left > 0 {
+            let byte = self.buf[self.pos / 8];
+            let avail = 8 - (self.pos % 8) as u32;
+            let take = avail.min(left);
+            let shift = avail - take;
+            let chunk = (byte >> shift) & ((1u16 << take) - 1) as u8;
+            out = (out << take) | chunk as u64;
+            self.pos += take as usize;
+            left -= take;
+        }
+        Some(out)
+    }
+
+    /// Read one bit.
+    #[inline]
+    pub fn read_bit(&mut self) -> Option<bool> {
+        self.read_bits(1).map(|b| b != 0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_trip_mixed_widths() {
+        let mut w = BitWriter::new();
+        w.write_bits(0b101, 3);
+        w.write_bits(0xDEAD, 16);
+        w.write_bit(true);
+        w.write_bits(0x3FFFF_FFFF, 34);
+        let bytes = w.finish();
+        let mut r = BitReader::new(&bytes);
+        assert_eq!(r.read_bits(3), Some(0b101));
+        assert_eq!(r.read_bits(16), Some(0xDEAD));
+        assert_eq!(r.read_bit(), Some(true));
+        assert_eq!(r.read_bits(34), Some(0x3FFFF_FFFF));
+    }
+
+    #[test]
+    fn read_past_end() {
+        let mut w = BitWriter::new();
+        w.write_bits(0b11, 2);
+        let bytes = w.finish();
+        let mut r = BitReader::new(&bytes);
+        assert_eq!(r.read_bits(2), Some(0b11));
+        // padding bits remain but only within the flushed byte
+        assert!(r.read_bits(7).is_none());
+    }
+
+    #[test]
+    fn bit_len_counts() {
+        let mut w = BitWriter::new();
+        w.write_bits(0, 5);
+        assert_eq!(w.bit_len(), 5);
+        w.write_bits(0, 5);
+        assert_eq!(w.bit_len(), 10);
+    }
+
+    #[test]
+    fn zero_width_write_is_noop() {
+        let mut w = BitWriter::new();
+        w.write_bits(123, 0);
+        w.write_bits(1, 1);
+        let bytes = w.finish();
+        let mut r = BitReader::new(&bytes);
+        assert_eq!(r.read_bits(0), Some(0));
+        assert_eq!(r.read_bit(), Some(true));
+    }
+}

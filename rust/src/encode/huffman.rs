@@ -1,0 +1,266 @@
+//! Canonical Huffman coding of quantization-code streams.
+//!
+//! Both SZ and the MGARD+ pipeline entropy-code streams of small unsigned
+//! integers (quantization bin labels). This is a canonical Huffman coder:
+//! code lengths are computed from a heap-built tree (with iterative frequency
+//! flattening if the depth exceeds the 32-bit decoding limit), codes are
+//! assigned canonically, and the header stores only the length table, which
+//! the downstream zstd pass squeezes further.
+
+use super::bitstream::{BitReader, BitWriter};
+use super::varint::{write_section, write_u64, ByteReader};
+use crate::error::{Error, Result};
+
+const MAX_CODE_LEN: u32 = 32;
+
+/// Compute Huffman code lengths for `freq` (0-frequency symbols get len 0).
+fn code_lengths(freq: &[u64]) -> Vec<u32> {
+    let n = freq.len();
+    let active: Vec<usize> = (0..n).filter(|&i| freq[i] > 0).collect();
+    let mut lens = vec![0u32; n];
+    match active.len() {
+        0 => return lens,
+        1 => {
+            lens[active[0]] = 1;
+            return lens;
+        }
+        _ => {}
+    }
+    let mut f: Vec<u64> = freq.to_vec();
+    loop {
+        // heap of (freq, node); internal nodes appended past n
+        #[derive(PartialEq, Eq, PartialOrd, Ord)]
+        struct Item(u64, usize);
+        let mut heap = std::collections::BinaryHeap::new();
+        let mut parent = vec![usize::MAX; active.len() * 2];
+        let mut leaf_node = vec![usize::MAX; active.len()];
+        for (k, &sym) in active.iter().enumerate() {
+            leaf_node[k] = k;
+            heap.push(std::cmp::Reverse(Item(f[sym], k)));
+        }
+        let mut next = active.len();
+        while heap.len() > 1 {
+            let std::cmp::Reverse(Item(fa, a)) = heap.pop().unwrap();
+            let std::cmp::Reverse(Item(fb, b)) = heap.pop().unwrap();
+            parent[a] = next;
+            parent[b] = next;
+            heap.push(std::cmp::Reverse(Item(fa + fb, next)));
+            next += 1;
+        }
+        // depth of each leaf
+        let mut too_deep = false;
+        for (k, &sym) in active.iter().enumerate() {
+            let mut d = 0u32;
+            let mut node = leaf_node[k];
+            while parent[node] != usize::MAX {
+                node = parent[node];
+                d += 1;
+            }
+            lens[sym] = d;
+            if d > MAX_CODE_LEN {
+                too_deep = true;
+            }
+        }
+        if !too_deep {
+            return lens;
+        }
+        // flatten the distribution and retry (classic depth-limit trick)
+        for &sym in &active {
+            f[sym] = (f[sym] + 1) / 2;
+        }
+    }
+}
+
+/// Canonical code assignment: symbols sorted by (len, symbol).
+fn canonical_codes(lens: &[u32]) -> Vec<u64> {
+    let mut order: Vec<usize> = (0..lens.len()).filter(|&i| lens[i] > 0).collect();
+    order.sort_by_key(|&i| (lens[i], i));
+    let mut codes = vec![0u64; lens.len()];
+    let mut code = 0u64;
+    let mut prev_len = 0u32;
+    for &sym in &order {
+        code <<= lens[sym] - prev_len;
+        codes[sym] = code;
+        code += 1;
+        prev_len = lens[sym];
+    }
+    codes
+}
+
+/// Huffman-encode a symbol stream. The alphabet is `0..=max(symbols)`.
+///
+/// Output layout: varint n_symbols, varint alphabet_size, section(lengths as
+/// bytes), section(payload bits).
+pub fn huffman_encode(symbols: &[u32]) -> Vec<u8> {
+    let mut out = Vec::new();
+    write_u64(&mut out, symbols.len() as u64);
+    if symbols.is_empty() {
+        write_u64(&mut out, 0);
+        return out;
+    }
+    let alphabet = *symbols.iter().max().unwrap() as usize + 1;
+    write_u64(&mut out, alphabet as u64);
+    let mut freq = vec![0u64; alphabet];
+    for &s in symbols {
+        freq[s as usize] += 1;
+    }
+    let lens = code_lengths(&freq);
+    let codes = canonical_codes(&lens);
+    let len_bytes: Vec<u8> = lens.iter().map(|&l| l as u8).collect();
+    write_section(&mut out, &len_bytes);
+    let mut bw = BitWriter::new();
+    for &s in symbols {
+        bw.write_bits(codes[s as usize], lens[s as usize]);
+    }
+    write_section(&mut out, &bw.finish());
+    out
+}
+
+/// Decode a stream produced by [`huffman_encode`].
+pub fn huffman_decode(bytes: &[u8]) -> Result<Vec<u32>> {
+    let mut r = ByteReader::new(bytes);
+    let n = r.usize()?;
+    if n == 0 {
+        return Ok(Vec::new());
+    }
+    let alphabet = r.usize()?;
+    let len_bytes = r.section()?;
+    if len_bytes.len() != alphabet {
+        return Err(Error::corrupt("huffman length table size mismatch"));
+    }
+    let lens: Vec<u32> = len_bytes.iter().map(|&b| b as u32).collect();
+    let payload = r.section()?;
+
+    // canonical decoding tables per length: first code value and symbol list
+    let max_len = *lens.iter().max().unwrap_or(&0);
+    if max_len == 0 {
+        return Err(Error::corrupt("huffman stream with empty code table"));
+    }
+    let mut order: Vec<usize> = (0..alphabet).filter(|&i| lens[i] > 0).collect();
+    order.sort_by_key(|&i| (lens[i], i));
+    // first_code[l], first_index[l] into `order` for codes of length l
+    let mut first_code = vec![0u64; (max_len + 2) as usize];
+    let mut first_index = vec![0usize; (max_len + 2) as usize];
+    {
+        let mut code = 0u64;
+        let mut idx = 0usize;
+        for l in 1..=max_len {
+            first_code[l as usize] = code;
+            first_index[l as usize] = idx;
+            let count = order[idx..]
+                .iter()
+                .take_while(|&&s| lens[s] == l)
+                .count();
+            idx += count;
+            code = (code + count as u64) << 1;
+        }
+    }
+    let count_at = |l: u32| -> usize {
+        let start = first_index[l as usize];
+        order[start..].iter().take_while(|&&s| lens[s] == l).count()
+    };
+    let mut counts = vec![0usize; (max_len + 1) as usize];
+    for l in 1..=max_len {
+        counts[l as usize] = count_at(l);
+    }
+
+    let mut br = BitReader::new(payload);
+    // cap the pre-allocation: a corrupted count must not OOM (at least one
+    // bit per symbol is needed, so bound by the payload size)
+    let mut out = Vec::with_capacity(n.min(payload.len() * 8 + 1));
+    for _ in 0..n {
+        let mut code = 0u64;
+        let mut l = 0u32;
+        loop {
+            let bit = br
+                .read_bit()
+                .ok_or_else(|| Error::corrupt("huffman payload truncated"))?;
+            code = (code << 1) | bit as u64;
+            l += 1;
+            if l > max_len {
+                return Err(Error::corrupt("invalid huffman code"));
+            }
+            let fc = first_code[l as usize];
+            if counts[l as usize] > 0 && code < fc + counts[l as usize] as u64 && code >= fc {
+                let sym = order[first_index[l as usize] + (code - fc) as usize];
+                out.push(sym as u32);
+                break;
+            }
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::rng::Rng;
+
+    #[test]
+    fn empty_stream() {
+        let enc = huffman_encode(&[]);
+        assert_eq!(huffman_decode(&enc).unwrap(), Vec::<u32>::new());
+    }
+
+    #[test]
+    fn single_symbol() {
+        let data = vec![5u32; 100];
+        let enc = huffman_encode(&data);
+        assert_eq!(huffman_decode(&enc).unwrap(), data);
+        // ~1 bit per symbol + small header
+        assert!(enc.len() < 40, "len {}", enc.len());
+    }
+
+    #[test]
+    fn skewed_distribution_round_trip() {
+        let mut rng = Rng::new(123);
+        let mut data = Vec::new();
+        for _ in 0..20_000 {
+            // geometric-ish: mostly 0, occasionally larger
+            let mut v = 0u32;
+            while rng.uniform() < 0.35 && v < 40 {
+                v += 1;
+            }
+            data.push(v);
+        }
+        let enc = huffman_encode(&data);
+        assert_eq!(huffman_decode(&enc).unwrap(), data);
+        // entropy << 8 bits/symbol, so this should beat raw u8 storage
+        assert!(enc.len() < data.len(), "enc {} raw {}", enc.len(), data.len());
+    }
+
+    #[test]
+    fn uniform_large_alphabet() {
+        let mut rng = Rng::new(7);
+        let data: Vec<u32> = (0..5000).map(|_| rng.below(1000) as u32).collect();
+        let enc = huffman_encode(&data);
+        assert_eq!(huffman_decode(&enc).unwrap(), data);
+    }
+
+    #[test]
+    fn adversarial_fibonacci_depths() {
+        // Fibonacci frequencies build maximally deep trees; exercises the
+        // depth-limit flattening path.
+        let mut freqs = vec![1u64, 1];
+        while freqs.len() < 48 {
+            let k = freqs.len();
+            freqs.push(freqs[k - 1] + freqs[k - 2]);
+        }
+        let mut data = Vec::new();
+        for (sym, &f) in freqs.iter().enumerate() {
+            for _ in 0..(f.min(5000)) {
+                data.push(sym as u32);
+            }
+        }
+        let enc = huffman_encode(&data);
+        assert_eq!(huffman_decode(&enc).unwrap(), data);
+    }
+
+    #[test]
+    fn corrupt_stream_rejected() {
+        let data = vec![1u32, 2, 3, 1, 2, 3, 3, 3];
+        let mut enc = huffman_encode(&data);
+        enc.truncate(enc.len() - 1);
+        assert!(huffman_decode(&enc).is_err());
+    }
+}

@@ -1,0 +1,47 @@
+//! Final lossless stage (zstd), shared by every compressor in the stack.
+
+use crate::error::{Error, Result};
+
+/// Default zstd level: 3 balances ratio and the throughput targets of Fig. 8.
+pub const DEFAULT_LEVEL: i32 = 3;
+
+/// zstd-compress a byte buffer.
+pub fn zstd_compress(data: &[u8], level: i32) -> Result<Vec<u8>> {
+    zstd::bulk::compress(data, level).map_err(|e| Error::Lossless(e.to_string()))
+}
+
+/// zstd-decompress; `capacity_hint` bounds the output allocation.
+///
+/// The hint is clamped to 4 GiB so a corrupted length field in a container
+/// cannot trigger an arbitrary-size allocation (fuzzed by
+/// `property_suite::corrupt_containers_never_panic`).
+pub fn zstd_decompress(data: &[u8], capacity_hint: usize) -> Result<Vec<u8>> {
+    let capacity = capacity_hint.min(4 << 30);
+    zstd::bulk::decompress(data, capacity).map_err(|e| Error::Lossless(e.to_string()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_trip() {
+        let data: Vec<u8> = (0..10_000).map(|i| ((i / 64) % 251) as u8).collect();
+        let c = zstd_compress(&data, DEFAULT_LEVEL).unwrap();
+        assert!(c.len() < data.len());
+        let d = zstd_decompress(&c, data.len()).unwrap();
+        assert_eq!(d, data);
+    }
+
+    #[test]
+    fn empty_input() {
+        let c = zstd_compress(&[], DEFAULT_LEVEL).unwrap();
+        let d = zstd_decompress(&c, 0).unwrap();
+        assert!(d.is_empty());
+    }
+
+    #[test]
+    fn garbage_rejected() {
+        assert!(zstd_decompress(&[1, 2, 3, 4], 100).is_err());
+    }
+}

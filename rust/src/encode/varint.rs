@@ -1,0 +1,185 @@
+//! LEB128 varints + zigzag, and a checked byte-slice reader.
+//!
+//! Used by the container format and by every codec header. Varints keep
+//! headers small; `ByteReader` gives uniform truncation-checked decoding.
+
+use crate::error::{Error, Result};
+
+/// Append an unsigned LEB128 varint.
+pub fn write_u64(out: &mut Vec<u8>, mut v: u64) {
+    loop {
+        let byte = (v & 0x7F) as u8;
+        v >>= 7;
+        if v == 0 {
+            out.push(byte);
+            return;
+        }
+        out.push(byte | 0x80);
+    }
+}
+
+/// Append a zigzag-encoded signed varint.
+pub fn write_i64(out: &mut Vec<u8>, v: i64) {
+    write_u64(out, ((v << 1) ^ (v >> 63)) as u64);
+}
+
+/// Read an unsigned LEB128 varint from the head of `src`; returns value and
+/// bytes consumed.
+pub fn read_u64(src: &[u8]) -> Result<(u64, usize)> {
+    let mut v = 0u64;
+    let mut shift = 0u32;
+    for (i, &b) in src.iter().enumerate() {
+        if shift >= 64 {
+            return Err(Error::corrupt("varint overflow"));
+        }
+        v |= ((b & 0x7F) as u64) << shift;
+        if b & 0x80 == 0 {
+            return Ok((v, i + 1));
+        }
+        shift += 7;
+    }
+    Err(Error::corrupt("truncated varint"))
+}
+
+/// Read a zigzag signed varint; returns value and bytes consumed.
+pub fn read_i64(src: &[u8]) -> Result<(i64, usize)> {
+    let (u, n) = read_u64(src)?;
+    Ok((((u >> 1) as i64) ^ -((u & 1) as i64), n))
+}
+
+/// Cursor over a byte slice with truncation-checked reads.
+pub struct ByteReader<'a> {
+    src: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> ByteReader<'a> {
+    /// Read from the start of `src`.
+    pub fn new(src: &'a [u8]) -> Self {
+        ByteReader { src, pos: 0 }
+    }
+
+    /// Bytes not yet consumed.
+    pub fn remaining(&self) -> usize {
+        self.src.len() - self.pos
+    }
+
+    /// Current cursor position.
+    pub fn position(&self) -> usize {
+        self.pos
+    }
+
+    /// Read one byte.
+    pub fn u8(&mut self) -> Result<u8> {
+        if self.pos >= self.src.len() {
+            return Err(Error::corrupt("truncated stream (u8)"));
+        }
+        let b = self.src[self.pos];
+        self.pos += 1;
+        Ok(b)
+    }
+
+    /// Read an unsigned varint.
+    pub fn u64(&mut self) -> Result<u64> {
+        let (v, n) = read_u64(&self.src[self.pos..])?;
+        self.pos += n;
+        Ok(v)
+    }
+
+    /// Read an unsigned varint as usize.
+    pub fn usize(&mut self) -> Result<usize> {
+        Ok(self.u64()? as usize)
+    }
+
+    /// Read a signed (zigzag) varint.
+    pub fn i64(&mut self) -> Result<i64> {
+        let (v, n) = read_i64(&self.src[self.pos..])?;
+        self.pos += n;
+        Ok(v)
+    }
+
+    /// Read a little-endian f64.
+    pub fn f64(&mut self) -> Result<f64> {
+        let b = self.bytes(8)?;
+        Ok(f64::from_le_bytes([
+            b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7],
+        ]))
+    }
+
+    /// Borrow the next `n` bytes.
+    pub fn bytes(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.remaining() < n {
+            return Err(Error::corrupt(format!(
+                "truncated stream: want {n} bytes, have {}",
+                self.remaining()
+            )));
+        }
+        let s = &self.src[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    /// Borrow a length-prefixed byte section (varint length + payload).
+    pub fn section(&mut self) -> Result<&'a [u8]> {
+        let n = self.usize()?;
+        self.bytes(n)
+    }
+}
+
+/// Append a little-endian f64.
+pub fn write_f64(out: &mut Vec<u8>, v: f64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Append a length-prefixed byte section.
+pub fn write_section(out: &mut Vec<u8>, payload: &[u8]) {
+    write_u64(out, payload.len() as u64);
+    out.extend_from_slice(payload);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn u64_round_trip() {
+        for v in [0u64, 1, 127, 128, 300, u32::MAX as u64, u64::MAX] {
+            let mut buf = Vec::new();
+            write_u64(&mut buf, v);
+            let (back, n) = read_u64(&buf).unwrap();
+            assert_eq!(back, v);
+            assert_eq!(n, buf.len());
+        }
+    }
+
+    #[test]
+    fn i64_round_trip() {
+        for v in [0i64, 1, -1, 63, -64, 1_000_000, -1_000_000, i64::MIN, i64::MAX] {
+            let mut buf = Vec::new();
+            write_i64(&mut buf, v);
+            let (back, n) = read_i64(&buf).unwrap();
+            assert_eq!(back, v);
+            assert_eq!(n, buf.len());
+        }
+    }
+
+    #[test]
+    fn truncated_varint_errors() {
+        assert!(read_u64(&[0x80, 0x80]).is_err());
+        assert!(read_u64(&[]).is_err());
+    }
+
+    #[test]
+    fn byte_reader_sections() {
+        let mut buf = Vec::new();
+        write_section(&mut buf, b"hello");
+        write_f64(&mut buf, 2.5);
+        write_i64(&mut buf, -42);
+        let mut r = ByteReader::new(&buf);
+        assert_eq!(r.section().unwrap(), b"hello");
+        assert_eq!(r.f64().unwrap(), 2.5);
+        assert_eq!(r.i64().unwrap(), -42);
+        assert_eq!(r.remaining(), 0);
+        assert!(r.u8().is_err());
+    }
+}

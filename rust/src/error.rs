@@ -1,0 +1,65 @@
+//! Crate-wide error type.
+//!
+//! Library code returns [`Error`]; binaries wrap it in `anyhow` at the edge.
+
+use thiserror::Error;
+
+/// Unified error type for the mgardp library.
+#[derive(Error, Debug)]
+pub enum Error {
+    /// Shape/dimension mismatch between tensors or against a grid hierarchy.
+    #[error("shape mismatch: {0}")]
+    ShapeMismatch(String),
+
+    /// An argument was outside its legal domain.
+    #[error("invalid argument: {0}")]
+    InvalidArgument(String),
+
+    /// The compressed byte stream is malformed or truncated.
+    #[error("corrupt stream: {0}")]
+    CorruptStream(String),
+
+    /// The stream was produced by an incompatible format version.
+    #[error("unsupported format: {0}")]
+    UnsupportedFormat(String),
+
+    /// Errors raised by the lossless backend (zstd).
+    #[error("lossless codec: {0}")]
+    Lossless(String),
+
+    /// I/O errors from dataset loading / artifact handling.
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+
+    /// Errors from the XLA/PJRT runtime backend.
+    #[error("xla runtime: {0}")]
+    Xla(String),
+
+    /// Configuration file / CLI parse errors.
+    #[error("config: {0}")]
+    Config(String),
+
+    /// A worker in the coordinator pipeline panicked or failed.
+    #[error("pipeline: {0}")]
+    Pipeline(String),
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+impl Error {
+    /// Helper to build a [`Error::ShapeMismatch`] from anything displayable.
+    pub fn shape(msg: impl std::fmt::Display) -> Self {
+        Error::ShapeMismatch(msg.to_string())
+    }
+
+    /// Helper to build a [`Error::InvalidArgument`].
+    pub fn invalid(msg: impl std::fmt::Display) -> Self {
+        Error::InvalidArgument(msg.to_string())
+    }
+
+    /// Helper to build a [`Error::CorruptStream`].
+    pub fn corrupt(msg: impl std::fmt::Display) -> Self {
+        Error::CorruptStream(msg.to_string())
+    }
+}

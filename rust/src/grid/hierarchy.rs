@@ -1,0 +1,262 @@
+//! The grid hierarchy object shared by every multilevel routine.
+
+use super::{next_dyadic, reflect_index};
+use crate::error::{Error, Result};
+use crate::tensor::{for_each_index, numel, Scalar, Tensor};
+
+/// Describes the nested grids `N_0 ⊂ N_1 ⊂ … ⊂ N_L` over a (possibly padded)
+/// input shape, plus the mapping back to the original shape.
+///
+/// * `L = nlevels()` is the number of decomposition *steps*; grids are
+///   indexed `0..=L` with `L` the finest.
+/// * Along dimension `d`, grid `N_l` has `2^(m_d - (L-l)) + 1` nodes located
+///   at padded indices that are multiples of `2^(L-l)` (dimensions too small
+///   to halve stop shrinking at 3 nodes).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Hierarchy {
+    orig_shape: Vec<usize>,
+    padded_shape: Vec<usize>,
+    /// Per-dimension dyadic exponent: padded dim = 2^m + 1.
+    exps: Vec<usize>,
+    /// Number of decomposition steps (levels are 0..=L).
+    nlevels: usize,
+}
+
+impl Hierarchy {
+    /// Build a hierarchy over `shape`, decomposing as deep as possible but at
+    /// most `max_levels` steps (if given).
+    ///
+    /// Every dimension must be >= 2. The depth is limited by the *largest*
+    /// dimension (smaller dimensions simply stop halving at 3 nodes, exactly
+    /// like MGARD's treatment of anisotropic grids).
+    pub fn new(shape: &[usize], max_levels: Option<usize>) -> Result<Self> {
+        if shape.is_empty() {
+            return Err(Error::invalid("hierarchy over empty shape"));
+        }
+        let mut padded = Vec::with_capacity(shape.len());
+        let mut exps = Vec::with_capacity(shape.len());
+        for &n in shape {
+            if n < 2 {
+                return Err(Error::invalid(format!(
+                    "dimension {n} < 2 cannot be decomposed"
+                )));
+            }
+            let (p, m) = next_dyadic(n);
+            padded.push(p);
+            exps.push(m);
+        }
+        // Deepest useful decomposition: until the largest dimension reaches 3
+        // nodes (exponent 1).
+        let max_exp = *exps.iter().max().unwrap();
+        let mut nlevels = max_exp - 1;
+        if let Some(cap) = max_levels {
+            nlevels = nlevels.min(cap);
+        }
+        Ok(Hierarchy {
+            orig_shape: shape.to_vec(),
+            padded_shape: padded,
+            exps,
+            nlevels,
+        })
+    }
+
+    /// The original (pre-padding) shape.
+    pub fn orig_shape(&self) -> &[usize] {
+        &self.orig_shape
+    }
+
+    /// The padded shape (every dim `2^m + 1`); all decomposition runs here.
+    pub fn padded_shape(&self) -> &[usize] {
+        &self.padded_shape
+    }
+
+    /// Whether padding was required at all.
+    pub fn is_padded(&self) -> bool {
+        self.orig_shape != self.padded_shape
+    }
+
+    /// Number of decomposition steps `L`; grid levels are `0..=L`.
+    pub fn nlevels(&self) -> usize {
+        self.nlevels
+    }
+
+    /// Number of dimensions.
+    pub fn ndim(&self) -> usize {
+        self.padded_shape.len()
+    }
+
+    /// Shape of grid `N_l` (`l` in `0..=L`).
+    pub fn level_shape(&self, l: usize) -> Vec<usize> {
+        assert!(l <= self.nlevels, "level {l} > L={}", self.nlevels);
+        let back = self.nlevels - l;
+        self.exps
+            .iter()
+            .map(|&m| {
+                let eff = m.saturating_sub(back).max(1);
+                (1usize << eff) + 1
+            })
+            .collect()
+    }
+
+    /// Per-dimension stride of grid `N_l` nodes in padded index space.
+    pub fn level_stride(&self, l: usize) -> Vec<usize> {
+        assert!(l <= self.nlevels);
+        let back = self.nlevels - l;
+        self.exps
+            .iter()
+            .map(|&m| {
+                // dims that bottomed out at 3 nodes stop growing their stride
+                let eff_back = back.min(m - 1);
+                1usize << eff_back
+            })
+            .collect()
+    }
+
+    /// `#N_l` — number of nodes in grid `l`.
+    pub fn level_numel(&self, l: usize) -> usize {
+        numel(&self.level_shape(l))
+    }
+
+    /// `#N_l^*` — number of *coefficient* nodes introduced at level `l`
+    /// (`N_l \ N_{l-1}`; for `l = 0` all of `N_0`).
+    pub fn num_coeff_nodes(&self, l: usize) -> usize {
+        if l == 0 {
+            self.level_numel(0)
+        } else {
+            self.level_numel(l) - self.level_numel(l - 1)
+        }
+    }
+
+    /// Internode spacing `h_l` of grid `l`, normalized so that `h_L = 1`
+    /// (uniform across dimensions, as assumed by the §4.1 analysis).
+    pub fn spacing(&self, l: usize) -> f64 {
+        (1usize << (self.nlevels - l)) as f64
+    }
+
+    /// Pad an input tensor to the padded shape using mirror reflection.
+    /// Returns a clone if no padding is needed.
+    pub fn pad<T: Scalar>(&self, u: &Tensor<T>) -> Result<Tensor<T>> {
+        if u.shape() != self.orig_shape.as_slice() {
+            return Err(Error::shape(format!(
+                "pad: tensor shape {:?} != hierarchy shape {:?}",
+                u.shape(),
+                self.orig_shape
+            )));
+        }
+        if !self.is_padded() {
+            return Ok(u.clone());
+        }
+        let orig = &self.orig_shape;
+        let mut out = Tensor::zeros(&self.padded_shape);
+        let mut src = vec![0usize; self.ndim()];
+        let shape = self.padded_shape.clone();
+        let mut k = 0;
+        let data = out.data_mut();
+        for_each_index(&shape, |ix| {
+            for d in 0..ix.len() {
+                src[d] = reflect_index(ix[d], orig[d]);
+            }
+            data[k] = u.at(&src);
+            k += 1;
+        });
+        Ok(out)
+    }
+
+    /// Crop a padded tensor back to the original shape.
+    pub fn crop<T: Scalar>(&self, u: &Tensor<T>) -> Result<Tensor<T>> {
+        if u.shape() != self.padded_shape.as_slice() {
+            return Err(Error::shape(format!(
+                "crop: tensor shape {:?} != padded shape {:?}",
+                u.shape(),
+                self.padded_shape
+            )));
+        }
+        if !self.is_padded() {
+            return Ok(u.clone());
+        }
+        u.block(&vec![0; self.ndim()], &self.orig_shape)
+    }
+
+    /// Whether dimension `d` halves when stepping from level `l` to `l-1`
+    /// (false once that dimension has bottomed out at 3 nodes).
+    pub fn dim_active(&self, l: usize, d: usize) -> bool {
+        assert!(l >= 1 && l <= self.nlevels);
+        let back = self.nlevels - l; // halvings already applied
+        self.exps[d] >= back + 2
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dyadic_hierarchy_shapes() {
+        let h = Hierarchy::new(&[17, 17], None).unwrap();
+        assert_eq!(h.nlevels(), 3);
+        assert_eq!(h.level_shape(3), vec![17, 17]);
+        assert_eq!(h.level_shape(2), vec![9, 9]);
+        assert_eq!(h.level_shape(1), vec![5, 5]);
+        assert_eq!(h.level_shape(0), vec![3, 3]);
+        assert_eq!(h.level_stride(3), vec![1, 1]);
+        assert_eq!(h.level_stride(0), vec![8, 8]);
+        assert!(!h.is_padded());
+    }
+
+    #[test]
+    fn anisotropic_bottom_out() {
+        // 5 = 2^2+1 bottoms out after 1 halving; 17 = 2^4+1 supports 3.
+        let h = Hierarchy::new(&[5, 17], None).unwrap();
+        assert_eq!(h.nlevels(), 3);
+        assert_eq!(h.level_shape(3), vec![5, 17]);
+        assert_eq!(h.level_shape(2), vec![3, 9]);
+        assert_eq!(h.level_shape(1), vec![3, 5]);
+        assert_eq!(h.level_shape(0), vec![3, 3]);
+        // stride along the bottomed-out dim stops at 2
+        assert_eq!(h.level_stride(1), vec![2, 4]);
+        assert_eq!(h.level_stride(0), vec![2, 8]);
+    }
+
+    #[test]
+    fn coeff_node_counts_sum_to_total() {
+        let h = Hierarchy::new(&[9, 17, 5], None).unwrap();
+        let total: usize = (0..=h.nlevels()).map(|l| h.num_coeff_nodes(l)).sum();
+        assert_eq!(total, h.level_numel(h.nlevels()));
+    }
+
+    #[test]
+    fn padding_round_trip() {
+        let h = Hierarchy::new(&[6, 7], None).unwrap();
+        assert_eq!(h.padded_shape(), &[9, 9]);
+        let u = Tensor::<f64>::from_fn(&[6, 7], |ix| (ix[0] * 7 + ix[1]) as f64);
+        let p = h.pad(&u).unwrap();
+        assert_eq!(p.shape(), &[9, 9]);
+        // interior preserved
+        assert_eq!(p.at(&[3, 4]), u.at(&[3, 4]));
+        // mirror: row 6 reflects row 4 (about row 5)
+        assert_eq!(p.at(&[6, 0]), u.at(&[4, 0]));
+        let c = h.crop(&p).unwrap();
+        assert_eq!(c, u);
+    }
+
+    #[test]
+    fn max_levels_cap() {
+        let h = Hierarchy::new(&[65, 65], Some(2)).unwrap();
+        assert_eq!(h.nlevels(), 2);
+        assert_eq!(h.level_shape(0), vec![17, 17]);
+    }
+
+    #[test]
+    fn rejects_tiny_dims() {
+        assert!(Hierarchy::new(&[1, 8], None).is_err());
+        assert!(Hierarchy::new(&[], None).is_err());
+    }
+
+    #[test]
+    fn spacing_doubles_per_level() {
+        let h = Hierarchy::new(&[17], None).unwrap();
+        assert_eq!(h.spacing(3), 1.0);
+        assert_eq!(h.spacing(2), 2.0);
+        assert_eq!(h.spacing(0), 8.0);
+    }
+}

@@ -1,0 +1,70 @@
+//! Multilevel grid hierarchy (the `N_L ⊃ N_{L-1} ⊃ … ⊃ N_0` of §2).
+//!
+//! The finest grid `N_L` covers the (padded) input array; each coarser grid
+//! keeps every second node along every dimension. Nodes of `N_l` live at
+//! indices that are multiples of `2^(L-l)` in the padded index space.
+//!
+//! Non-dyadic inputs are handled the way MGARD+ does (§6.2.2): each dimension
+//! is padded to the next `2^m + 1` with *dummy nodes* filled by mirror
+//! reflection, whose multilevel coefficients are near zero and vanish in the
+//! lossless stage.
+
+mod hierarchy;
+
+pub use hierarchy::Hierarchy;
+
+/// Smallest `2^m + 1` that is `>= n` (n >= 2). Returns `(padded, m)`.
+pub fn next_dyadic(n: usize) -> (usize, usize) {
+    assert!(n >= 2, "dimension must be at least 2");
+    let mut m = 1usize;
+    loop {
+        let p = (1usize << m) + 1;
+        if p >= n {
+            return (p, m);
+        }
+        m += 1;
+    }
+}
+
+/// Mirror-reflect an index into `[0, n)` (reflection about the last sample,
+/// period `2(n-1)`), used to fill dummy nodes.
+pub fn reflect_index(i: usize, n: usize) -> usize {
+    if n == 1 {
+        return 0;
+    }
+    let period = 2 * (n - 1);
+    let r = i % period;
+    if r < n {
+        r
+    } else {
+        period - r
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dyadic_sizes() {
+        assert_eq!(next_dyadic(2), (3, 1));
+        assert_eq!(next_dyadic(3), (3, 1));
+        assert_eq!(next_dyadic(4), (5, 2));
+        assert_eq!(next_dyadic(5), (5, 2));
+        assert_eq!(next_dyadic(6), (9, 3));
+        assert_eq!(next_dyadic(100), (129, 7));
+        assert_eq!(next_dyadic(512), (513, 9));
+        assert_eq!(next_dyadic(513), (513, 9));
+    }
+
+    #[test]
+    fn reflection() {
+        // n = 4: samples 0 1 2 3, reflection: 4->2, 5->1, 6->0, 7->1, ...
+        assert_eq!(reflect_index(3, 4), 3);
+        assert_eq!(reflect_index(4, 4), 2);
+        assert_eq!(reflect_index(5, 4), 1);
+        assert_eq!(reflect_index(6, 4), 0);
+        assert_eq!(reflect_index(7, 4), 1);
+        assert_eq!(reflect_index(0, 1), 0);
+    }
+}

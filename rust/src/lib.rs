@@ -1,0 +1,46 @@
+//! # mgardp — MGARD+ multilevel error-bounded scientific data reduction
+//!
+//! A production reproduction of *MGARD+: Optimizing Multilevel Methods for
+//! Error-bounded Scientific Data Reduction* (Liang et al., 2020).
+//!
+//! The crate is the Layer-3 hot path of a three-layer Rust + JAX + Pallas
+//! stack: everything needed to compress, decompress, refactor and analyze
+//! scientific floating-point data runs natively in Rust; the JAX/Pallas
+//! layers (under `python/`) AOT-compile an XLA backend for the multilevel
+//! decomposition which `runtime` can load and execute via PJRT.
+//!
+//! Quick start:
+//! ```
+//! use mgardp::compressors::{Compressor, MgardPlus, Tolerance};
+//! let field = mgardp::data::synth::smooth_test_field(&[17, 17, 17]);
+//! let codec = MgardPlus::default();
+//! let compressed = codec.compress(&field, Tolerance::Rel(1e-3)).unwrap();
+//! let restored = codec.decompress(&compressed).unwrap();
+//! let tau = 1e-3 * mgardp::metrics::value_range(field.data());
+//! assert!(mgardp::metrics::linf_error(field.data(), restored.data()) <= tau);
+//! ```
+
+pub mod adaptive;
+pub mod analysis;
+pub mod bench_util;
+pub mod compressors;
+pub mod coordinator;
+pub mod data;
+pub mod decompose;
+pub mod encode;
+pub mod error;
+pub mod grid;
+pub mod metrics;
+pub mod quant;
+pub mod runtime;
+pub mod tensor;
+
+pub use error::{Error, Result};
+
+/// Convenience re-exports for downstream users.
+pub mod prelude {
+    pub use crate::error::{Error, Result};
+    pub use crate::grid::Hierarchy;
+    pub use crate::metrics::{psnr, RateDistortionPoint};
+    pub use crate::tensor::Tensor;
+}

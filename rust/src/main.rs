@@ -1,0 +1,23 @@
+//! `mgardp` — the MGARD+ command-line tool.
+//!
+//! Layer-3 entry point: everything here runs natively in Rust; the XLA
+//! artifacts consumed by `mgardp xla-smoke` are produced once at build time
+//! by the Python compile path (`make artifacts`).
+
+use mgardp::coordinator::cli;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some(command) = argv.first() else {
+        eprint!("{}", cli::USAGE);
+        std::process::exit(2);
+    };
+    if command == "--help" || command == "-h" || command == "help" {
+        print!("{}", cli::USAGE);
+        return;
+    }
+    if let Err(e) = cli::run(command, &argv[1..]) {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,135 @@
+//! Quality and performance metrics (§3 of the paper).
+//!
+//! Quality is rate–distortion: bit-rate (bits per datum of the compressed
+//! representation) vs PSNR. Performance is throughput (original bytes per
+//! second of wall-clock for the operation).
+
+use crate::tensor::Scalar;
+
+/// Peak signal-to-noise ratio in dB, exactly the paper's formula:
+/// `PSNR = 20·log10(range) − 10·log10(MSE)` with `range = max(u) − min(u)`.
+pub fn psnr<T: Scalar>(original: &[T], reconstructed: &[T]) -> f64 {
+    assert_eq!(original.len(), reconstructed.len());
+    let range = value_range(original);
+    let mse = mse(original, reconstructed);
+    if mse == 0.0 {
+        return f64::INFINITY;
+    }
+    20.0 * range.log10() - 10.0 * mse.log10()
+}
+
+/// Mean squared error.
+pub fn mse<T: Scalar>(a: &[T], b: &[T]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let mut acc = 0.0f64;
+    for (x, y) in a.iter().zip(b) {
+        let d = x.to_f64() - y.to_f64();
+        acc += d * d;
+    }
+    acc / a.len() as f64
+}
+
+/// L2 norm of the error vector (not averaged).
+pub fn l2_error<T: Scalar>(a: &[T], b: &[T]) -> f64 {
+    (mse(a, b) * a.len() as f64).sqrt()
+}
+
+/// Maximum absolute pointwise error (the bound every compressor must honour).
+pub fn linf_error<T: Scalar>(a: &[T], b: &[T]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let mut mx = 0.0f64;
+    for (x, y) in a.iter().zip(b) {
+        let d = (x.to_f64() - y.to_f64()).abs();
+        if d > mx {
+            mx = d;
+        }
+    }
+    mx
+}
+
+/// `max − min` of a slice as f64.
+pub fn value_range<T: Scalar>(data: &[T]) -> f64 {
+    let mut mn = f64::INFINITY;
+    let mut mx = f64::NEG_INFINITY;
+    for v in data {
+        let v = v.to_f64();
+        if v < mn {
+            mn = v;
+        }
+        if v > mx {
+            mx = v;
+        }
+    }
+    mx - mn
+}
+
+/// Compression ratio: original bytes / compressed bytes.
+pub fn compression_ratio(original_bytes: usize, compressed_bytes: usize) -> f64 {
+    original_bytes as f64 / compressed_bytes as f64
+}
+
+/// Bit-rate: average compressed bits per data point.
+pub fn bit_rate(compressed_bytes: usize, num_points: usize) -> f64 {
+    compressed_bytes as f64 * 8.0 / num_points as f64
+}
+
+/// Throughput in MB/s given payload bytes and elapsed seconds.
+pub fn throughput_mbs(bytes: usize, seconds: f64) -> f64 {
+    bytes as f64 / 1e6 / seconds
+}
+
+/// One point on a rate–distortion curve (Figs. 10–12).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RateDistortionPoint {
+    /// Requested relative error tolerance that produced this point.
+    pub tolerance: f64,
+    /// Bits per data point.
+    pub bit_rate: f64,
+    /// PSNR in dB.
+    pub psnr: f64,
+    /// Compression ratio.
+    pub ratio: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn psnr_of_identical_is_infinite() {
+        let a = vec![1.0f32, 2.0, 3.0];
+        assert!(psnr(&a, &a).is_infinite());
+    }
+
+    #[test]
+    fn psnr_known_value() {
+        // range 1, constant error 0.1 -> PSNR = -10*log10(0.01) = 20 dB
+        let a: Vec<f64> = (0..100).map(|i| i as f64 / 99.0).collect();
+        let b: Vec<f64> = a.iter().map(|v| v + 0.1).collect();
+        let p = psnr(&a, &b);
+        assert!((p - 20.0).abs() < 1e-9, "psnr {p}");
+    }
+
+    #[test]
+    fn linf_picks_max() {
+        let a = vec![0.0f32, 0.0, 0.0];
+        let b = vec![0.1f32, -0.5, 0.2];
+        assert!((linf_error(&a, &b) - 0.5).abs() < 1e-7);
+    }
+
+    #[test]
+    fn ratios_and_rates() {
+        assert_eq!(compression_ratio(1000, 10), 100.0);
+        // 4-byte floats compressed 8x -> 4 bits/value
+        assert_eq!(bit_rate(500, 1000), 4.0);
+        assert_eq!(throughput_mbs(2_000_000, 2.0), 1.0);
+    }
+
+    #[test]
+    fn higher_error_lower_psnr() {
+        let a: Vec<f32> = (0..1000).map(|i| (i as f32 * 0.01).sin()).collect();
+        let small: Vec<f32> = a.iter().map(|v| v + 0.001).collect();
+        let big: Vec<f32> = a.iter().map(|v| v + 0.1).collect();
+        assert!(psnr(&a, &small) > psnr(&a, &big));
+    }
+}

@@ -1,0 +1,8 @@
+//! Coefficient quantization: uniform mid-tread bins plus the paper's
+//! level-wise tolerance schedule (§4.1).
+
+mod levelwise;
+mod quantizer;
+
+pub use levelwise::{kappa, level_tolerances, DEFAULT_C_LINF};
+pub use quantizer::{dequantize, quantize, QuantStream};

@@ -1,0 +1,178 @@
+//! Uniform mid-tread quantizer with an escape channel for outliers.
+//!
+//! A value `v` quantized with tolerance `τ` maps to the bin label
+//! `round(v / 2τ)`; reconstruction is the bin center `label · 2τ`, so the
+//! error is at most `τ`. Labels are zigzag-mapped to unsigned symbols for
+//! the Huffman stage. Labels beyond [`ESCAPE_CAP`] (possible when τ is tiny
+//! relative to a coefficient) are emitted verbatim into a side channel, like
+//! SZ's "unpredictable data" path, keeping the entropy-coder alphabet small.
+
+use crate::encode::varint::{write_f64, write_u64, ByteReader};
+use crate::error::{Error, Result};
+use crate::tensor::Scalar;
+
+/// Largest representable zigzag symbol; larger labels use the escape channel.
+pub const ESCAPE_CAP: u32 = 1 << 28;
+/// The symbol that marks an escaped value.
+pub const ESCAPE_SYMBOL: u32 = ESCAPE_CAP + 1;
+
+/// Quantized representation of one coefficient stream.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct QuantStream {
+    /// Zigzag symbols (with [`ESCAPE_SYMBOL`] markers).
+    pub symbols: Vec<u32>,
+    /// Escaped raw values, in stream order.
+    pub escapes: Vec<f64>,
+}
+
+impl QuantStream {
+    /// Serialize (symbols go to the entropy coder separately; this holds the
+    /// escape side channel).
+    pub fn escapes_to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        write_u64(&mut out, self.escapes.len() as u64);
+        for &v in &self.escapes {
+            write_f64(&mut out, v);
+        }
+        out
+    }
+
+    /// Parse the escape side channel.
+    pub fn escapes_from_bytes(bytes: &[u8]) -> Result<Vec<f64>> {
+        let mut r = ByteReader::new(bytes);
+        let n = r.usize()?;
+        let mut out = Vec::with_capacity(n.min(1 << 24));
+        for _ in 0..n {
+            out.push(r.f64()?);
+        }
+        Ok(out)
+    }
+}
+
+#[inline]
+fn zigzag(v: i64) -> u64 {
+    ((v << 1) ^ (v >> 63)) as u64
+}
+
+#[inline]
+fn unzigzag(u: u64) -> i64 {
+    ((u >> 1) as i64) ^ -((u & 1) as i64)
+}
+
+/// Quantize `values` with tolerance `tau` into `out` (append).
+pub fn quantize<T: Scalar>(values: &[T], tau: f64, out: &mut QuantStream) {
+    debug_assert!(tau > 0.0);
+    let inv = 1.0 / (2.0 * tau);
+    for &v in values {
+        let v = v.to_f64();
+        let label = (v * inv).round();
+        if !label.is_finite() || label.abs() >= ESCAPE_CAP as f64 / 2.0 {
+            out.symbols.push(ESCAPE_SYMBOL);
+            out.escapes.push(v);
+        } else {
+            out.symbols.push(zigzag(label as i64) as u32);
+        }
+    }
+}
+
+/// Dequantize `n` values with tolerance `tau` from a symbol/escape cursor.
+pub fn dequantize<T: Scalar>(
+    symbols: &[u32],
+    escapes: &[f64],
+    escape_cursor: &mut usize,
+    tau: f64,
+    out: &mut Vec<T>,
+) -> Result<()> {
+    let step = 2.0 * tau;
+    for &s in symbols {
+        if s == ESCAPE_SYMBOL {
+            let v = *escapes
+                .get(*escape_cursor)
+                .ok_or_else(|| Error::corrupt("escape channel exhausted"))?;
+            *escape_cursor += 1;
+            out.push(T::from_f64(v));
+        } else {
+            let label = unzigzag(s as u64);
+            out.push(T::from_f64(label as f64 * step));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::rng::Rng;
+
+    #[test]
+    fn error_bounded_round_trip() {
+        let mut rng = Rng::new(3);
+        let values: Vec<f64> = (0..10_000).map(|_| rng.uniform_in(-5.0, 5.0)).collect();
+        let tau = 0.01;
+        let mut qs = QuantStream::default();
+        quantize(&values, tau, &mut qs);
+        let mut back = Vec::new();
+        let mut cur = 0;
+        dequantize::<f64>(&qs.symbols, &qs.escapes, &mut cur, tau, &mut back).unwrap();
+        assert_eq!(back.len(), values.len());
+        for (a, b) in values.iter().zip(&back) {
+            assert!((a - b).abs() <= tau + 1e-12, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn zero_maps_to_zero() {
+        let mut qs = QuantStream::default();
+        quantize(&[0.0f32, 1e-9, -1e-9], 0.5, &mut qs);
+        assert_eq!(qs.symbols, vec![0, 0, 0]);
+        assert!(qs.escapes.is_empty());
+    }
+
+    #[test]
+    fn escape_channel_for_outliers() {
+        let tau = 1e-12;
+        let values = vec![1.0e6f64, 0.0, -2.5e7];
+        let mut qs = QuantStream::default();
+        quantize(&values, tau, &mut qs);
+        assert_eq!(qs.symbols[0], ESCAPE_SYMBOL);
+        assert_eq!(qs.symbols[1], 0);
+        assert_eq!(qs.symbols[2], ESCAPE_SYMBOL);
+        assert_eq!(qs.escapes, vec![1.0e6, -2.5e7]);
+        let mut back = Vec::new();
+        let mut cur = 0;
+        dequantize::<f64>(&qs.symbols, &qs.escapes, &mut cur, tau, &mut back).unwrap();
+        // escaped values are exact
+        assert_eq!(back[0], 1.0e6);
+        assert_eq!(back[2], -2.5e7);
+    }
+
+    #[test]
+    fn escape_side_channel_serialization() {
+        let qs = QuantStream {
+            symbols: vec![],
+            escapes: vec![1.5, -2.25, 1e300],
+        };
+        let bytes = qs.escapes_to_bytes();
+        assert_eq!(QuantStream::escapes_from_bytes(&bytes).unwrap(), qs.escapes);
+    }
+
+    #[test]
+    fn truncated_escape_channel_rejected() {
+        let qs = QuantStream {
+            symbols: vec![ESCAPE_SYMBOL],
+            escapes: vec![],
+        };
+        let mut back = Vec::new();
+        let mut cur = 0;
+        assert!(
+            dequantize::<f64>(&qs.symbols, &qs.escapes, &mut cur, 0.1, &mut back).is_err()
+        );
+    }
+
+    #[test]
+    fn nan_goes_to_escape() {
+        let mut qs = QuantStream::default();
+        quantize(&[f64::NAN, f64::INFINITY], 0.1, &mut qs);
+        assert_eq!(qs.symbols, vec![ESCAPE_SYMBOL, ESCAPE_SYMBOL]);
+    }
+}

@@ -1,0 +1,119 @@
+//! XLA-backed multilevel level step.
+//!
+//! The Layer-2 JAX model (`python/compile/model.py`) implements one 3-D
+//! decomposition step — coefficient computation (Pallas stencil kernel),
+//! correction computation (Pallas load-vector kernel + scan Thomas solve)
+//! and correction application — for a fixed `n³` grid, AOT-lowered to
+//! `artifacts/decompose_level_n{N}.hlo.txt` (+ recompose). This backend
+//! loads those artifacts and exposes the same (coarse, coefficient-stream)
+//! contract as the native `decompose::contiguous` engine, so the two are
+//! interchangeable and cross-checked in integration tests.
+
+use super::pjrt::{XlaExecutable, XlaRuntime};
+use crate::error::{Error, Result};
+use crate::tensor::Tensor;
+use std::path::Path;
+
+/// One-level 3-D decompose/recompose running through XLA.
+pub struct XlaLevelStep {
+    dec: XlaExecutable,
+    rec: XlaExecutable,
+    n: usize,
+}
+
+impl XlaLevelStep {
+    /// Load the artifacts for grid size `n` (must be `2^k + 1`, `n >= 5`).
+    pub fn load(runtime: &XlaRuntime, dir: &Path, n: usize) -> Result<XlaLevelStep> {
+        let dec = runtime.load_hlo_text(&dir.join(format!("decompose_level_n{n}.hlo.txt")))?;
+        let rec = runtime.load_hlo_text(&dir.join(format!("recompose_level_n{n}.hlo.txt")))?;
+        Ok(XlaLevelStep { dec, rec, n })
+    }
+
+    /// Whether the artifacts for grid size `n` exist in `dir`.
+    pub fn available(dir: &Path, n: usize) -> bool {
+        dir.join(format!("decompose_level_n{n}.hlo.txt")).is_file()
+            && dir.join(format!("recompose_level_n{n}.hlo.txt")).is_file()
+    }
+
+    /// Grid size this step was compiled for.
+    pub fn grid_size(&self) -> usize {
+        self.n
+    }
+
+    /// Coarse grid size `m = (n+1)/2`.
+    pub fn coarse_size(&self) -> usize {
+        (self.n + 1) / 2
+    }
+
+    /// One decomposition step: `u` on `n³` → (`Q_{l-1}u` on `m³`, canonical
+    /// coefficient stream).
+    pub fn decompose(&self, u: &Tensor<f32>) -> Result<(Tensor<f32>, Vec<f32>)> {
+        let n = self.n;
+        if u.shape() != [n, n, n] {
+            return Err(Error::shape(format!(
+                "XLA level step compiled for {n}³, got {:?}",
+                u.shape()
+            )));
+        }
+        let outputs = self.dec.run_f32(&[(u.data(), &[n, n, n])])?;
+        if outputs.len() != 2 {
+            return Err(Error::Xla(format!(
+                "decompose artifact returned {} outputs, expected 2",
+                outputs.len()
+            )));
+        }
+        let m = self.coarse_size();
+        let coarse = Tensor::from_vec(&[m, m, m], outputs[0].clone())?;
+        // output[1] is the residual field on n³ (zero at nodal positions);
+        // extract the canonical (row-major, skip all-even) stream
+        let resid = &outputs[1];
+        if resid.len() != n * n * n {
+            return Err(Error::Xla("residual output shape mismatch".into()));
+        }
+        let mut stream = Vec::with_capacity(n * n * n - m * m * m);
+        for x in 0..n {
+            for y in 0..n {
+                for z in 0..n {
+                    if x % 2 == 0 && y % 2 == 0 && z % 2 == 0 {
+                        continue;
+                    }
+                    stream.push(resid[(x * n + y) * n + z]);
+                }
+            }
+        }
+        Ok((coarse, stream))
+    }
+
+    /// Inverse step: (`Q_{l-1}u`, stream) → `u` on `n³`.
+    pub fn recompose(&self, coarse: &Tensor<f32>, stream: &[f32]) -> Result<Tensor<f32>> {
+        let n = self.n;
+        let m = self.coarse_size();
+        if coarse.shape() != [m, m, m] {
+            return Err(Error::shape("coarse shape mismatch"));
+        }
+        if stream.len() != n * n * n - m * m * m {
+            return Err(Error::shape("stream length mismatch"));
+        }
+        // scatter the stream back to the residual field layout
+        let mut resid = vec![0f32; n * n * n];
+        let mut k = 0;
+        for x in 0..n {
+            for y in 0..n {
+                for z in 0..n {
+                    if x % 2 == 0 && y % 2 == 0 && z % 2 == 0 {
+                        continue;
+                    }
+                    resid[(x * n + y) * n + z] = stream[k];
+                    k += 1;
+                }
+            }
+        }
+        let outputs = self
+            .rec
+            .run_f32(&[(coarse.data(), &[m, m, m]), (&resid, &[n, n, n])])?;
+        if outputs.len() != 1 {
+            return Err(Error::Xla("recompose artifact returned wrong arity".into()));
+        }
+        Tensor::from_vec(&[n, n, n], outputs[0].clone())
+    }
+}

@@ -1,0 +1,27 @@
+//! XLA/PJRT runtime: loads the AOT artifacts produced by the Python
+//! compile path (`python/compile/aot.py`) and executes them natively.
+//!
+//! This is the bridge of the three-layer architecture: Layer-2 (JAX) and
+//! Layer-1 (Pallas) author the multilevel decomposition kernels and lower
+//! them *once* to HLO text; this module compiles the text with the PJRT CPU
+//! client and runs it from the Rust hot path. Python is never needed at
+//! runtime — the artifacts are plain files.
+//!
+//! Interchange is HLO **text**, not serialized protos: jax ≥ 0.5 emits
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects, while the text
+//! parser reassigns ids (see /opt/xla-example/README.md).
+
+mod backend;
+mod pjrt;
+
+pub use backend::XlaLevelStep;
+pub use pjrt::{XlaExecutable, XlaRuntime};
+
+use std::path::PathBuf;
+
+/// Default artifacts directory (relative to the crate root / cwd).
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var("MGARDP_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}

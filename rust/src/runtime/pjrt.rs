@@ -1,0 +1,115 @@
+//! Thin safe wrapper over the `xla` crate's PJRT client.
+
+use crate::error::{Error, Result};
+use std::path::Path;
+
+/// A PJRT client (CPU in this environment; the same artifacts compile for
+/// TPU by swapping the plugin).
+pub struct XlaRuntime {
+    client: xla::PjRtClient,
+}
+
+/// A compiled executable loaded from an HLO-text artifact.
+pub struct XlaExecutable {
+    exe: xla::PjRtLoadedExecutable,
+    /// Artifact the executable came from (for diagnostics).
+    pub source: String,
+}
+
+impl std::fmt::Debug for XlaExecutable {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("XlaExecutable")
+            .field("source", &self.source)
+            .finish()
+    }
+}
+
+impl XlaRuntime {
+    /// Create a CPU PJRT client.
+    pub fn cpu() -> Result<XlaRuntime> {
+        let client = xla::PjRtClient::cpu().map_err(|e| Error::Xla(e.to_string()))?;
+        Ok(XlaRuntime { client })
+    }
+
+    /// Platform name reported by PJRT.
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load an HLO-text artifact and compile it.
+    pub fn load_hlo_text(&self, path: &Path) -> Result<XlaExecutable> {
+        if !path.is_file() {
+            return Err(Error::Xla(format!(
+                "artifact {} not found — run `make artifacts` first",
+                path.display()
+            )));
+        }
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str()
+                .ok_or_else(|| Error::Xla("non-utf8 artifact path".into()))?,
+        )
+        .map_err(|e| Error::Xla(format!("parse {}: {e}", path.display())))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| Error::Xla(format!("compile {}: {e}", path.display())))?;
+        Ok(XlaExecutable {
+            exe,
+            source: path.display().to_string(),
+        })
+    }
+}
+
+impl XlaExecutable {
+    /// Execute with f32 inputs of the given shapes; returns the tuple of
+    /// f32 outputs (the jax lowering always returns a tuple).
+    pub fn run_f32(&self, inputs: &[(&[f32], &[usize])]) -> Result<Vec<Vec<f32>>> {
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (data, shape) in inputs {
+            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+            let lit = xla::Literal::vec1(data)
+                .reshape(&dims)
+                .map_err(|e| Error::Xla(format!("reshape input: {e}")))?;
+            literals.push(lit);
+        }
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| Error::Xla(format!("execute {}: {e}", self.source)))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| Error::Xla(format!("fetch result: {e}")))?;
+        let tuple = out
+            .to_tuple()
+            .map_err(|e| Error::Xla(format!("untuple result: {e}")))?;
+        let mut vecs = Vec::with_capacity(tuple.len());
+        for lit in tuple {
+            vecs.push(
+                lit.to_vec::<f32>()
+                    .map_err(|e| Error::Xla(format!("read output: {e}")))?,
+            );
+        }
+        Ok(vecs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cpu_client_initializes() {
+        let rt = XlaRuntime::cpu().unwrap();
+        assert!(!rt.platform().is_empty());
+    }
+
+    #[test]
+    fn missing_artifact_is_clean_error() {
+        let rt = XlaRuntime::cpu().unwrap();
+        let err = rt
+            .load_hlo_text(Path::new("/nonexistent/foo.hlo.txt"))
+            .unwrap_err();
+        assert!(err.to_string().contains("make artifacts"));
+    }
+}

@@ -1,0 +1,302 @@
+//! Owned dense row-major N-d array.
+
+use super::{numel, strides_for, Scalar};
+use crate::error::{Error, Result};
+
+/// Dense row-major N-dimensional array of scalars.
+///
+/// The fundamental data container of the stack: simulation fields, multilevel
+/// coefficient planes and reconstructions are all `Tensor`s. Dimensionality is
+/// dynamic (the paper evaluates 3-D and 4-D data).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor<T: Scalar> {
+    shape: Vec<usize>,
+    strides: Vec<usize>,
+    data: Vec<T>,
+}
+
+impl<T: Scalar> Tensor<T> {
+    /// Zero-filled tensor of the given shape.
+    pub fn zeros(shape: &[usize]) -> Self {
+        Tensor {
+            shape: shape.to_vec(),
+            strides: strides_for(shape),
+            data: vec![T::ZERO; numel(shape)],
+        }
+    }
+
+    /// Build from existing data; `data.len()` must equal the shape product.
+    pub fn from_vec(shape: &[usize], data: Vec<T>) -> Result<Self> {
+        if data.len() != numel(shape) {
+            return Err(Error::shape(format!(
+                "data length {} != shape product {} for {:?}",
+                data.len(),
+                numel(shape),
+                shape
+            )));
+        }
+        Ok(Tensor {
+            shape: shape.to_vec(),
+            strides: strides_for(shape),
+            data,
+        })
+    }
+
+    /// Generate entries from a function of the multi-index.
+    pub fn from_fn(shape: &[usize], mut f: impl FnMut(&[usize]) -> T) -> Self {
+        let mut t = Tensor::zeros(shape);
+        let mut out = Vec::with_capacity(t.data.len());
+        super::for_each_index(shape, |ix| out.push(f(ix)));
+        t.data = out;
+        t
+    }
+
+    /// Shape (row-major; last dim contiguous).
+    #[inline]
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    /// Row-major strides.
+    #[inline]
+    pub fn strides(&self) -> &[usize] {
+        &self.strides
+    }
+
+    /// Number of dimensions.
+    #[inline]
+    pub fn ndim(&self) -> usize {
+        self.shape.len()
+    }
+
+    /// Total number of elements.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    /// True if the tensor holds no elements.
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Flat read-only element access.
+    #[inline]
+    pub fn data(&self) -> &[T] {
+        &self.data
+    }
+
+    /// Flat mutable element access.
+    #[inline]
+    pub fn data_mut(&mut self) -> &mut [T] {
+        &mut self.data
+    }
+
+    /// Consume into the flat data vector.
+    pub fn into_vec(self) -> Vec<T> {
+        self.data
+    }
+
+    /// Linear offset of a multi-index.
+    #[inline]
+    pub fn offset(&self, idx: &[usize]) -> usize {
+        debug_assert_eq!(idx.len(), self.shape.len());
+        let mut off = 0;
+        for (i, &ix) in idx.iter().enumerate() {
+            debug_assert!(ix < self.shape[i], "index {ix} out of bound {:?}", self.shape);
+            off += ix * self.strides[i];
+        }
+        off
+    }
+
+    /// Element at a multi-index.
+    #[inline]
+    pub fn at(&self, idx: &[usize]) -> T {
+        self.data[self.offset(idx)]
+    }
+
+    /// Mutable element at a multi-index.
+    #[inline]
+    pub fn at_mut(&mut self, idx: &[usize]) -> &mut T {
+        let off = self.offset(idx);
+        &mut self.data[off]
+    }
+
+    /// Minimum and maximum value (ignores nothing; data must be finite).
+    pub fn min_max(&self) -> (T, T) {
+        let mut mn = self.data[0];
+        let mut mx = self.data[0];
+        for &v in &self.data {
+            if v < mn {
+                mn = v;
+            }
+            if v > mx {
+                mx = v;
+            }
+        }
+        (mn, mx)
+    }
+
+    /// max - min as f64 (the value range used for relative error bounds).
+    pub fn value_range(&self) -> f64 {
+        let (mn, mx) = self.min_max();
+        mx.to_f64() - mn.to_f64()
+    }
+
+    /// Extract a sub-block `[start, start+size)` along every dimension.
+    pub fn block(&self, start: &[usize], size: &[usize]) -> Result<Tensor<T>> {
+        if start.len() != self.ndim() || size.len() != self.ndim() {
+            return Err(Error::shape("block rank mismatch"));
+        }
+        for d in 0..self.ndim() {
+            if start[d] + size[d] > self.shape[d] {
+                return Err(Error::shape(format!(
+                    "block [{}..{}) exceeds dim {} of size {}",
+                    start[d],
+                    start[d] + size[d],
+                    d,
+                    self.shape[d]
+                )));
+            }
+        }
+        let mut out = Tensor::zeros(size);
+        let mut src_idx = vec![0usize; self.ndim()];
+        let mut k = 0;
+        let data = &mut out.data;
+        super::for_each_index(size, |ix| {
+            for d in 0..ix.len() {
+                src_idx[d] = start[d] + ix[d];
+            }
+            data[k] = self.at(&src_idx);
+            k += 1;
+        });
+        Ok(out)
+    }
+
+    /// Write a sub-block at `start` (inverse of [`Tensor::block`]).
+    pub fn set_block(&mut self, start: &[usize], block: &Tensor<T>) -> Result<()> {
+        if start.len() != self.ndim() || block.ndim() != self.ndim() {
+            return Err(Error::shape("set_block rank mismatch"));
+        }
+        for d in 0..self.ndim() {
+            if start[d] + block.shape[d] > self.shape[d] {
+                return Err(Error::shape("set_block out of range"));
+            }
+        }
+        let mut dst_idx = vec![0usize; self.ndim()];
+        let mut k = 0;
+        // borrow dance: compute offsets first
+        let shape = block.shape.clone();
+        super::for_each_index(&shape, |ix| {
+            for d in 0..ix.len() {
+                dst_idx[d] = start[d] + ix[d];
+            }
+            let off = self.offset(&dst_idx);
+            self.data[off] = block.data[k];
+            k += 1;
+        });
+        Ok(())
+    }
+
+    /// Map every element through `f`, producing a new tensor.
+    pub fn map(&self, f: impl Fn(T) -> T) -> Tensor<T> {
+        Tensor {
+            shape: self.shape.clone(),
+            strides: self.strides.clone(),
+            data: self.data.iter().map(|&v| f(v)).collect(),
+        }
+    }
+
+    /// Raw little-endian byte serialization of the data payload.
+    pub fn to_le_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.data.len() * T::BYTES);
+        for &v in &self.data {
+            v.write_le(&mut out);
+        }
+        out
+    }
+
+    /// Rebuild from raw little-endian bytes.
+    pub fn from_le_bytes(shape: &[usize], bytes: &[u8]) -> Result<Self> {
+        let n = numel(shape);
+        if bytes.len() != n * T::BYTES {
+            return Err(Error::corrupt(format!(
+                "byte payload {} != {} elements × {} bytes",
+                bytes.len(),
+                n,
+                T::BYTES
+            )));
+        }
+        let mut data = Vec::with_capacity(n);
+        for i in 0..n {
+            data.push(T::read_le(&bytes[i * T::BYTES..]));
+        }
+        Tensor::from_vec(shape, data)
+    }
+
+    /// Size of the payload in bytes.
+    pub fn nbytes(&self) -> usize {
+        self.data.len() * T::BYTES
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zeros_and_indexing() {
+        let mut t: Tensor<f64> = Tensor::zeros(&[3, 4]);
+        *t.at_mut(&[1, 2]) = 5.0;
+        assert_eq!(t.at(&[1, 2]), 5.0);
+        assert_eq!(t.data()[1 * 4 + 2], 5.0);
+    }
+
+    #[test]
+    fn from_vec_checks_len() {
+        assert!(Tensor::<f32>::from_vec(&[2, 2], vec![0.0; 3]).is_err());
+        assert!(Tensor::<f32>::from_vec(&[2, 2], vec![0.0; 4]).is_ok());
+    }
+
+    #[test]
+    fn from_fn_row_major() {
+        let t = Tensor::<f32>::from_fn(&[2, 3], |ix| (ix[0] * 10 + ix[1]) as f32);
+        assert_eq!(t.data(), &[0.0, 1.0, 2.0, 10.0, 11.0, 12.0]);
+    }
+
+    #[test]
+    fn block_round_trip() {
+        let t = Tensor::<f64>::from_fn(&[4, 5], |ix| (ix[0] * 5 + ix[1]) as f64);
+        let b = t.block(&[1, 2], &[2, 3]).unwrap();
+        assert_eq!(b.shape(), &[2, 3]);
+        assert_eq!(b.at(&[0, 0]), 7.0);
+        assert_eq!(b.at(&[1, 2]), 14.0);
+        let mut t2 = Tensor::<f64>::zeros(&[4, 5]);
+        t2.set_block(&[1, 2], &b).unwrap();
+        assert_eq!(t2.at(&[1, 2]), 7.0);
+        assert_eq!(t2.at(&[2, 4]), 14.0);
+        assert_eq!(t2.at(&[0, 0]), 0.0);
+    }
+
+    #[test]
+    fn block_bounds_checked() {
+        let t = Tensor::<f32>::zeros(&[3, 3]);
+        assert!(t.block(&[2, 0], &[2, 1]).is_err());
+    }
+
+    #[test]
+    fn min_max_and_range() {
+        let t = Tensor::<f32>::from_vec(&[4], vec![3.0, -1.0, 2.0, 0.5]).unwrap();
+        assert_eq!(t.min_max(), (-1.0, 3.0));
+        assert_eq!(t.value_range(), 4.0);
+    }
+
+    #[test]
+    fn byte_round_trip() {
+        let t = Tensor::<f64>::from_fn(&[3, 3], |ix| ix[0] as f64 - 0.25 * ix[1] as f64);
+        let bytes = t.to_le_bytes();
+        let back = Tensor::<f64>::from_le_bytes(&[3, 3], &bytes).unwrap();
+        assert_eq!(t, back);
+    }
+}

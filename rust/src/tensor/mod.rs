@@ -1,0 +1,85 @@
+//! Dense N-dimensional tensors over scientific floating-point data.
+//!
+//! The whole reduction stack operates on row-major dense arrays of `f32` or
+//! `f64`. [`Tensor`] is deliberately small: owned storage, shape, and the
+//! line/stride iterators the multilevel kernels need. Views are expressed as
+//! (offset, stride) line walks rather than general slicing — that is exactly
+//! the access pattern of the multilevel method (Fig. 1 of the paper) and
+//! keeps the hot loops transparent to the optimizer.
+
+mod array;
+mod scalar;
+
+pub use array::Tensor;
+pub use scalar::Scalar;
+
+/// Row-major strides for a shape (last dimension contiguous).
+pub fn strides_for(shape: &[usize]) -> Vec<usize> {
+    let mut strides = vec![1usize; shape.len()];
+    for i in (0..shape.len().saturating_sub(1)).rev() {
+        strides[i] = strides[i + 1] * shape[i + 1];
+    }
+    strides
+}
+
+/// Total number of elements of a shape.
+pub fn numel(shape: &[usize]) -> usize {
+    shape.iter().product()
+}
+
+/// Iterate over all multi-indices of `shape` in row-major order, calling `f`
+/// with the index slice. Allocation-free per step.
+pub fn for_each_index(shape: &[usize], mut f: impl FnMut(&[usize])) {
+    if shape.is_empty() {
+        return;
+    }
+    let n = numel(shape);
+    if n == 0 {
+        return;
+    }
+    let mut idx = vec![0usize; shape.len()];
+    for _ in 0..n {
+        f(&idx);
+        // increment (row-major: last dim fastest)
+        for d in (0..shape.len()).rev() {
+            idx[d] += 1;
+            if idx[d] < shape[d] {
+                break;
+            }
+            idx[d] = 0;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strides_row_major() {
+        assert_eq!(strides_for(&[2, 3, 4]), vec![12, 4, 1]);
+        assert_eq!(strides_for(&[5]), vec![1]);
+        assert_eq!(strides_for(&[]), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn numel_products() {
+        assert_eq!(numel(&[2, 3, 4]), 24);
+        assert_eq!(numel(&[7]), 7);
+        assert_eq!(numel(&[]), 1);
+    }
+
+    #[test]
+    fn index_iteration_order() {
+        let mut seen = Vec::new();
+        for_each_index(&[2, 2], |ix| seen.push((ix[0], ix[1])));
+        assert_eq!(seen, vec![(0, 0), (0, 1), (1, 0), (1, 1)]);
+    }
+
+    #[test]
+    fn index_iteration_empty_dim() {
+        let mut count = 0;
+        for_each_index(&[3, 0, 2], |_| count += 1);
+        assert_eq!(count, 0);
+    }
+}

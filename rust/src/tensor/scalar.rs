@@ -1,0 +1,138 @@
+//! Floating-point scalar abstraction: the stack supports `f32` and `f64`.
+
+/// Trait bound for element types handled by the reduction stack.
+///
+/// Everything the multilevel kernels, quantizers and codecs need from an
+/// element type, without pulling in a numerics crate.
+pub trait Scalar:
+    Copy
+    + Clone
+    + PartialOrd
+    + std::fmt::Debug
+    + std::fmt::Display
+    + std::ops::Add<Output = Self>
+    + std::ops::Sub<Output = Self>
+    + std::ops::Mul<Output = Self>
+    + std::ops::Div<Output = Self>
+    + std::ops::Neg<Output = Self>
+    + std::ops::AddAssign
+    + std::ops::SubAssign
+    + std::ops::MulAssign
+    + Send
+    + Sync
+    + 'static
+{
+    /// Additive identity.
+    const ZERO: Self;
+    /// Multiplicative identity.
+    const ONE: Self;
+    /// Number of bytes in the raw little-endian encoding.
+    const BYTES: usize;
+    /// Tag stored in container headers (1 = f32, 2 = f64).
+    const DTYPE_TAG: u8;
+
+    /// Lossless conversion from `f64` (f32: rounds).
+    fn from_f64(v: f64) -> Self;
+    /// Widening conversion to `f64`.
+    fn to_f64(self) -> f64;
+    /// Absolute value.
+    fn abs(self) -> Self;
+    /// True if NaN or infinite.
+    fn is_finite(self) -> bool;
+    /// Append little-endian bytes to `out`.
+    fn write_le(self, out: &mut Vec<u8>);
+    /// Read little-endian bytes from the head of `src`.
+    fn read_le(src: &[u8]) -> Self;
+}
+
+impl Scalar for f32 {
+    const ZERO: Self = 0.0;
+    const ONE: Self = 1.0;
+    const BYTES: usize = 4;
+    const DTYPE_TAG: u8 = 1;
+
+    #[inline]
+    fn from_f64(v: f64) -> Self {
+        v as f32
+    }
+    #[inline]
+    fn to_f64(self) -> f64 {
+        self as f64
+    }
+    #[inline]
+    fn abs(self) -> Self {
+        f32::abs(self)
+    }
+    #[inline]
+    fn is_finite(self) -> bool {
+        f32::is_finite(self)
+    }
+    #[inline]
+    fn write_le(self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&self.to_le_bytes());
+    }
+    #[inline]
+    fn read_le(src: &[u8]) -> Self {
+        f32::from_le_bytes([src[0], src[1], src[2], src[3]])
+    }
+}
+
+impl Scalar for f64 {
+    const ZERO: Self = 0.0;
+    const ONE: Self = 1.0;
+    const BYTES: usize = 8;
+    const DTYPE_TAG: u8 = 2;
+
+    #[inline]
+    fn from_f64(v: f64) -> Self {
+        v
+    }
+    #[inline]
+    fn to_f64(self) -> f64 {
+        self
+    }
+    #[inline]
+    fn abs(self) -> Self {
+        f64::abs(self)
+    }
+    #[inline]
+    fn is_finite(self) -> bool {
+        f64::is_finite(self)
+    }
+    #[inline]
+    fn write_le(self, out: &mut Vec<u8>) {
+        out.extend_from_slice(&self.to_le_bytes());
+    }
+    #[inline]
+    fn read_le(src: &[u8]) -> Self {
+        f64::from_le_bytes([
+            src[0], src[1], src[2], src[3], src[4], src[5], src[6], src[7],
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_round_trip_bytes() {
+        let mut buf = Vec::new();
+        1.5f32.write_le(&mut buf);
+        assert_eq!(buf.len(), 4);
+        assert_eq!(f32::read_le(&buf), 1.5);
+    }
+
+    #[test]
+    fn f64_round_trip_bytes() {
+        let mut buf = Vec::new();
+        (-3.25f64).write_le(&mut buf);
+        assert_eq!(buf.len(), 8);
+        assert_eq!(f64::read_le(&buf), -3.25);
+    }
+
+    #[test]
+    fn dtype_tags_distinct() {
+        assert_ne!(<f32 as Scalar>::DTYPE_TAG, <f64 as Scalar>::DTYPE_TAG);
+    }
+}

@@ -1,0 +1,109 @@
+//! The contract every compressor in the crate must honour: the reconstructed
+//! data never deviates from the original by more than the requested L∞
+//! tolerance — on smooth data, rough data, adversarial data, and all four
+//! synthetic dataset analogs.
+
+use mgardp::compressors::{all_compressors, Tolerance};
+use mgardp::data::{rng::Rng, synth};
+use mgardp::metrics::linf_error;
+use mgardp::tensor::Tensor;
+
+fn check_all(data: &Tensor<f32>, rel: f64, label: &str) {
+    // same degenerate-range fallback as Tolerance::absolute
+    let range = data.value_range();
+    let tau = rel * if range > 0.0 { range } else { 1.0 };
+    for c in all_compressors::<f32>() {
+        let bytes = c
+            .compress(data, Tolerance::Rel(rel))
+            .unwrap_or_else(|e| panic!("{} failed on {label}: {e}", c.name()));
+        let back = c
+            .decompress(&bytes)
+            .unwrap_or_else(|e| panic!("{} decompress failed on {label}: {e}", c.name()));
+        assert_eq!(back.shape(), data.shape());
+        let err = linf_error(data.data(), back.data());
+        assert!(
+            err <= tau * (1.0 + 1e-6),
+            "{} violates bound on {label}: err {err} > τ {tau}",
+            c.name()
+        );
+    }
+}
+
+#[test]
+fn synthetic_dataset_fields_bounded() {
+    // small-scale versions of all four dataset analogs
+    for ds in synth::all_datasets(0.12, 7) {
+        for f in &ds.fields {
+            check_all(&f.data, 1e-3, &format!("{}/{}", ds.name, f.name));
+        }
+    }
+}
+
+#[test]
+fn tolerance_sweep_on_smooth_field() {
+    let t = synth::smooth_test_field(&[20, 18, 22]);
+    for rel in [1e-1, 1e-2, 1e-3, 1e-4] {
+        check_all(&t, rel, &format!("smooth rel={rel}"));
+    }
+}
+
+#[test]
+fn white_noise_bounded() {
+    let mut rng = Rng::new(3);
+    let t = Tensor::<f32>::from_fn(&[17, 15, 13], |_| rng.uniform_in(-1.0, 1.0) as f32);
+    check_all(&t, 1e-2, "white noise");
+}
+
+#[test]
+fn constant_field_bounded() {
+    let t = Tensor::<f32>::from_fn(&[12, 12, 12], |_| 3.25);
+    check_all(&t, 1e-3, "constant");
+}
+
+#[test]
+fn step_discontinuity_bounded() {
+    let t = Tensor::<f32>::from_fn(&[16, 16, 16], |ix| if ix[0] < 8 { -5.0 } else { 7.0 });
+    check_all(&t, 1e-3, "step");
+}
+
+#[test]
+fn large_magnitude_values_bounded() {
+    let mut rng = Rng::new(9);
+    let t = Tensor::<f32>::from_fn(&[14, 14, 14], |_| {
+        (rng.uniform_in(-5.0, 12.0) as f32).exp() * 1e6
+    });
+    check_all(&t, 1e-3, "large magnitudes");
+}
+
+#[test]
+fn alternating_checkerboard_bounded() {
+    // worst case for interpolation-based prediction
+    let t = Tensor::<f32>::from_fn(&[15, 15, 15], |ix| {
+        if (ix[0] + ix[1] + ix[2]) % 2 == 0 {
+            1.0
+        } else {
+            -1.0
+        }
+    });
+    check_all(&t, 5e-2, "checkerboard");
+}
+
+#[test]
+fn anisotropic_shapes_bounded() {
+    let t = synth::smooth_test_field(&[6, 40, 11]);
+    check_all(&t, 1e-3, "anisotropic");
+    let t2 = synth::smooth_test_field(&[64, 7]);
+    check_all(&t2, 1e-3, "2d anisotropic");
+}
+
+#[test]
+fn four_dimensional_bounded() {
+    let t = synth::smooth_test_field(&[5, 8, 9, 7]);
+    check_all(&t, 1e-3, "4d");
+}
+
+#[test]
+fn one_dimensional_bounded() {
+    let t = synth::smooth_test_field(&[257]);
+    check_all(&t, 1e-4, "1d");
+}

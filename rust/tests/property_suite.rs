@@ -1,0 +1,233 @@
+//! Randomized property suite (in-house generator; no proptest in the
+//! offline vendor set): every invariant the stack's correctness rests on,
+//! exercised over randomly drawn shapes, dimensionalities, data
+//! distributions and tolerances, plus failure injection on the container
+//! formats.
+
+use mgardp::compressors::{all_compressors, Compressor, Tolerance};
+use mgardp::data::rng::Rng;
+use mgardp::decompose::{Decomposer, OptFlags};
+use mgardp::encode::{huffman_decode, huffman_encode};
+use mgardp::grid::Hierarchy;
+use mgardp::metrics::{linf_error, value_range};
+use mgardp::tensor::Tensor;
+
+/// Draw a random shape with 1..=4 dims, sizes 5..=28, total <= 60k points.
+fn random_shape(rng: &mut Rng) -> Vec<usize> {
+    loop {
+        let d = 1 + rng.below(4);
+        let shape: Vec<usize> = (0..d).map(|_| 5 + rng.below(24)).collect();
+        if shape.iter().product::<usize>() <= 60_000 {
+            return shape;
+        }
+    }
+}
+
+/// Draw random field data from one of several distributions.
+fn random_field(shape: &[usize], rng: &mut Rng) -> Tensor<f64> {
+    match rng.below(4) {
+        // smooth separable waves
+        0 => Tensor::from_fn(shape, |ix| {
+            ix.iter()
+                .enumerate()
+                .map(|(k, &i)| ((i as f64) * 0.21 * (k + 1) as f64).sin())
+                .sum()
+        }),
+        // white noise
+        1 => Tensor::from_fn(shape, |_| rng.uniform_in(-1.0, 1.0)),
+        // heavy-tailed magnitudes
+        2 => Tensor::from_fn(shape, |_| {
+            let sign = if rng.uniform() < 0.5 { -1.0 } else { 1.0 };
+            sign * rng.uniform_in(0.0, 9.0).exp()
+        }),
+        // piecewise constant with jumps
+        _ => Tensor::from_fn(shape, |ix| {
+            if ix.iter().sum::<usize>() % 7 < 3 {
+                4.0
+            } else {
+                -1.5
+            }
+        }),
+    }
+}
+
+#[test]
+fn decompose_recompose_identity_random_shapes() {
+    let mut rng = Rng::new(0xD0C5);
+    for trial in 0..25 {
+        let shape = random_shape(&mut rng);
+        let u = random_field(&shape, &mut rng);
+        let h = Hierarchy::new(&shape, None).unwrap();
+        let dec = Decomposer::new(h, OptFlags::all()).unwrap();
+        let d = dec.decompose(&u).unwrap();
+        let back = dec.recompose(&d).unwrap();
+        let err = linf_error(u.data(), back.data());
+        let scale = value_range(u.data()).max(1.0);
+        assert!(
+            err < 1e-9 * scale,
+            "trial {trial} shape {shape:?}: round-trip err {err}"
+        );
+    }
+}
+
+#[test]
+fn engines_agree_random_shapes() {
+    let mut rng = Rng::new(0xE9E5);
+    for trial in 0..10 {
+        let shape = random_shape(&mut rng);
+        let u = random_field(&shape, &mut rng);
+        let h = Hierarchy::new(&shape, None).unwrap();
+        let fast = Decomposer::new(h.clone(), OptFlags::all()).unwrap();
+        let slow = Decomposer::new(h, OptFlags::baseline()).unwrap();
+        let a = fast.decompose(&u).unwrap();
+        let b = slow.decompose(&u).unwrap();
+        let scale = value_range(u.data()).max(1.0);
+        assert!(
+            linf_error(a.coarse.data(), b.coarse.data()) < 1e-8 * scale,
+            "trial {trial} {shape:?} coarse"
+        );
+        for (x, y) in a.coeffs.iter().zip(&b.coeffs) {
+            assert!(linf_error(x, y) < 1e-8 * scale, "trial {trial} {shape:?}");
+        }
+    }
+}
+
+#[test]
+fn partial_recompositions_are_consistent_random() {
+    // recompose_to_level(full decomposition, l) == coarse of decompose_to(l)
+    let mut rng = Rng::new(0xBEEF);
+    for _ in 0..8 {
+        let shape = random_shape(&mut rng);
+        let u = random_field(&shape, &mut rng);
+        let h = Hierarchy::new(&shape, None).unwrap();
+        let dec = Decomposer::new(h.clone(), OptFlags::all()).unwrap();
+        let full = dec.decompose(&u).unwrap();
+        let scale = value_range(u.data()).max(1.0);
+        for l in 0..h.nlevels() {
+            let a = dec.recompose_to_level(&full, l).unwrap();
+            let b = dec.decompose_to(&u, l).unwrap();
+            assert!(
+                linf_error(a.data(), b.coarse.data()) < 1e-8 * scale,
+                "{shape:?} level {l}"
+            );
+        }
+    }
+}
+
+#[test]
+fn error_bound_random_everything() {
+    // random shape × random distribution × random tolerance × every codec
+    let mut rng = Rng::new(0x70E1);
+    for trial in 0..6 {
+        let shape = random_shape(&mut rng);
+        let u64field = random_field(&shape, &mut rng);
+        let u = Tensor::<f32>::from_vec(
+            &shape,
+            u64field.data().iter().map(|&v| v as f32).collect(),
+        )
+        .unwrap();
+        let rel = [1e-1, 1e-2, 1e-3][rng.below(3)];
+        let range = value_range(u.data());
+        let tau = rel * if range > 0.0 { range } else { 1.0 };
+        for c in all_compressors::<f32>() {
+            let bytes = c.compress(&u, Tolerance::Rel(rel)).unwrap();
+            let back = c.decompress(&bytes).unwrap();
+            let err = linf_error(u.data(), back.data());
+            assert!(
+                err <= tau * (1.0 + 1e-6),
+                "trial {trial} {} {shape:?} rel {rel}: {err} > {tau}",
+                c.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn corrupt_containers_never_panic() {
+    // bit-flip and truncation fuzzing: decompression must return Err (or a
+    // wrong-but-well-formed tensor) — never panic, never hang
+    let t = mgardp::data::synth::smooth_test_field(&[12, 12, 12]);
+    let mut rng = Rng::new(0xFA11);
+    for c in all_compressors::<f32>() {
+        let bytes = c.compress(&t, Tolerance::Rel(1e-3)).unwrap();
+        // truncations
+        for frac in [0.1, 0.5, 0.9, 0.99] {
+            let cut = (bytes.len() as f64 * frac) as usize;
+            let _ = c.decompress(&bytes[..cut]); // must not panic
+        }
+        // random single-byte corruptions (skip the magic so we exercise deep
+        // parsing, not just the header check)
+        for _ in 0..40 {
+            let mut bad = bytes.clone();
+            let pos = 5 + rng.below(bad.len() - 5);
+            bad[pos] ^= 1 << rng.below(8);
+            let _ = c.decompress(&bad); // must not panic
+        }
+    }
+}
+
+#[test]
+fn huffman_random_streams() {
+    let mut rng = Rng::new(0x4875);
+    for _ in 0..30 {
+        let n = rng.below(5000);
+        let spread = 1 + rng.below(3000) as u32;
+        let data: Vec<u32> = (0..n).map(|_| rng.below(spread as usize) as u32).collect();
+        let enc = huffman_encode(&data);
+        assert_eq!(huffman_decode(&enc).unwrap(), data);
+    }
+}
+
+#[test]
+fn tolerance_monotonicity_random() {
+    // tighter tolerance never produces a *smaller* compressed payload by
+    // more than noise, and never a worse error
+    let mut rng = Rng::new(0x3011);
+    let shape = random_shape(&mut rng);
+    let u64field = random_field(&shape, &mut rng);
+    let u = Tensor::<f32>::from_vec(
+        &shape,
+        u64field.data().iter().map(|&v| v as f32).collect(),
+    )
+    .unwrap();
+    for c in all_compressors::<f32>() {
+        let mut prev_err = f64::INFINITY;
+        for rel in [1e-1, 1e-2, 1e-3, 1e-4] {
+            let bytes = c.compress(&u, Tolerance::Rel(rel)).unwrap();
+            let back = c.decompress(&bytes).unwrap();
+            let err = linf_error(u.data(), back.data());
+            assert!(
+                err <= prev_err * (1.0 + 1e-9) + 1e-12,
+                "{}: error must not grow as τ shrinks ({err} after {prev_err})",
+                c.name()
+            );
+            prev_err = err;
+        }
+    }
+}
+
+#[test]
+fn refactor_store_random_fields() {
+    let mut rng = Rng::new(0x5704);
+    let dir = std::env::temp_dir().join(format!("mgardp_prop_store_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let store = mgardp::coordinator::refactor::RefactorStore::create(&dir).unwrap();
+    for trial in 0..5 {
+        let shape = random_shape(&mut rng);
+        let u64field = random_field(&shape, &mut rng);
+        let u = Tensor::<f32>::from_vec(
+            &shape,
+            u64field.data().iter().map(|&v| v as f32).collect(),
+        )
+        .unwrap();
+        let name = format!("f{trial}");
+        let m = store.write_field(&name, &u, 1).unwrap();
+        let back: Tensor<f32> = store.reconstruct(&name, m.max_level).unwrap();
+        let scale = value_range(u.data()).max(1.0) as f64;
+        assert!(
+            linf_error(u.data(), back.data()) < 1e-3 * scale,
+            "trial {trial} {shape:?}"
+        );
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -1,0 +1,88 @@
+//! Cross-layer consistency: the AOT-compiled XLA level step (Pallas + JAX,
+//! lowered to HLO text and executed via PJRT) must agree with the native
+//! Rust `decompose::contiguous` engine to f32 rounding.
+//!
+//! These tests are skipped (with a notice) when `make artifacts` has not
+//! been run, so `cargo test` stays green in a bare checkout.
+
+use mgardp::data::synth;
+use mgardp::decompose::{Decomposer, OptFlags};
+use mgardp::grid::Hierarchy;
+use mgardp::metrics::linf_error;
+use mgardp::runtime::{artifacts_dir, XlaLevelStep, XlaRuntime};
+use mgardp::tensor::Tensor;
+
+fn load_step(n: usize) -> Option<XlaLevelStep> {
+    let dir = artifacts_dir();
+    if !XlaLevelStep::available(&dir, n) {
+        eprintln!("skipping: artifacts for n={n} not found (run `make artifacts`)");
+        return None;
+    }
+    let rt = XlaRuntime::cpu().expect("PJRT CPU client");
+    Some(XlaLevelStep::load(&rt, &dir, n).expect("load artifacts"))
+}
+
+fn native_one_step(u: &Tensor<f32>) -> (Tensor<f32>, Vec<f32>) {
+    // a single decomposition step through the public API: cap the hierarchy
+    // at one level
+    let h = Hierarchy::new(u.shape(), Some(1)).unwrap();
+    let dec = Decomposer::new(h, OptFlags::all()).unwrap();
+    let d = dec.decompose(u).unwrap();
+    assert_eq!(d.coeffs.len(), 1);
+    (d.coarse.clone(), d.coeffs[0].clone())
+}
+
+#[test]
+fn xla_matches_native_engine_n17() {
+    let Some(step) = load_step(17) else { return };
+    let u = synth::smooth_test_field(&[17, 17, 17]);
+    let (xc, xs) = step.decompose(&u).unwrap();
+    let (nc, ns) = native_one_step(&u);
+    assert_eq!(xc.shape(), nc.shape());
+    assert_eq!(xs.len(), ns.len());
+    let cerr = linf_error(xc.data(), nc.data());
+    let serr = linf_error(&xs, &ns);
+    assert!(cerr < 1e-4, "coarse mismatch {cerr}");
+    assert!(serr < 1e-4, "stream mismatch {serr}");
+}
+
+#[test]
+fn xla_matches_native_engine_n33_random() {
+    let Some(step) = load_step(33) else { return };
+    let mut rng = mgardp::data::rng::Rng::new(17);
+    let u = Tensor::<f32>::from_fn(&[33, 33, 33], |_| rng.uniform_in(-2.0, 2.0) as f32);
+    let (xc, xs) = step.decompose(&u).unwrap();
+    let (nc, ns) = native_one_step(&u);
+    assert!(linf_error(xc.data(), nc.data()) < 1e-4);
+    assert!(linf_error(&xs, &ns) < 1e-4);
+}
+
+#[test]
+fn xla_round_trip_exact() {
+    let Some(step) = load_step(17) else { return };
+    let mut rng = mgardp::data::rng::Rng::new(23);
+    let u = Tensor::<f32>::from_fn(&[17, 17, 17], |_| rng.uniform_in(-1.0, 1.0) as f32);
+    let (coarse, stream) = step.decompose(&u).unwrap();
+    let back = step.recompose(&coarse, &stream).unwrap();
+    let err = linf_error(u.data(), back.data());
+    assert!(err < 1e-5, "xla round trip {err}");
+}
+
+#[test]
+fn xla_cross_recompose_with_native_decompose() {
+    // native decompose -> xla recompose: the two implementations must be
+    // interchangeable mid-pipeline
+    let Some(step) = load_step(17) else { return };
+    let u = synth::smooth_test_field(&[17, 17, 17]);
+    let (nc, ns) = native_one_step(&u);
+    let back = step.recompose(&nc, &ns).unwrap();
+    let err = linf_error(u.data(), back.data());
+    assert!(err < 1e-4, "cross recompose {err}");
+}
+
+#[test]
+fn xla_rejects_wrong_shapes() {
+    let Some(step) = load_step(17) else { return };
+    let u = synth::smooth_test_field(&[9, 9, 9]);
+    assert!(step.decompose(&u).is_err());
+}
