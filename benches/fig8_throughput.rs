@@ -1,13 +1,16 @@
 //! Fig. 8 — compression and decompression throughput of the five
-//! error-bounded compressors on the four datasets (rel. tolerance 1e-3).
+//! error-bounded compressors on the four datasets (rel. tolerance 1e-3),
+//! plus the chunked-pipeline thread-scaling curve on a 129³ field.
 //!
 //! Paper expectations: ZFP fastest on both directions; MGARD+ compression
 //! comparable to SZ and far above original MGARD; hybrid ≈ half of SZ's
-//! compression speed.
+//! compression speed. The chunked section targets >= 3x compression
+//! throughput at 8 threads over the single-threaded unchunked path.
 
-use mgardp::bench_util::{bench_fields, bench_scale, CsvOut};
+use mgardp::bench_util::{bench_fields, bench_scale, chunked_scaling, smoke_mode, CsvOut};
 use mgardp::compressors::Tolerance;
 use mgardp::coordinator::pipeline::make_compressor;
+use mgardp::data::synth;
 use mgardp::metrics::throughput_mbs;
 use std::time::Instant;
 
@@ -36,5 +39,36 @@ fn main() {
             csv.row(&format!("{ds},{m},{comp:.2},{decomp:.2},{ratio:.2}"));
         }
         println!();
+    }
+
+    // --- chunked thread-scaling curve (mgard+, 129³ field, 32³ blocks) ---
+    let (n, block): (usize, usize) = if smoke_mode() { (65, 32) } else { (129, 32) };
+    let data = synth::smooth_test_field(&[n, n, n]);
+    let tol = Tolerance::Rel(1e-3);
+    println!("=== chunked mgard+ scaling {n}³, {block}³ blocks ===");
+    println!(
+        "{:<8} {:>12} {:>12} {:>9} {:>12}",
+        "threads", "comp MB/s", "decomp MB/s", "speedup", "L∞"
+    );
+    let mut scsv = CsvOut::create(
+        "fig8_chunked_scaling",
+        "threads,comp_mbs,decomp_mbs,speedup,linf",
+    )
+    .unwrap();
+    let (base_secs, points) =
+        chunked_scaling(&data, tol, &[block], &[1, 2, 4, 8], 1, 3).unwrap();
+    println!(
+        "(unchunked single-thread baseline: {:.1} MB/s)",
+        throughput_mbs(data.nbytes(), base_secs)
+    );
+    for p in &points {
+        println!(
+            "{:<8} {:>12.1} {:>12.1} {:>8.2}x {:>12.2e}",
+            p.threads, p.comp_mbs, p.decomp_mbs, p.speedup, p.linf
+        );
+        scsv.row(&format!(
+            "{},{:.2},{:.2},{:.3},{:.3e}",
+            p.threads, p.comp_mbs, p.decomp_mbs, p.speedup, p.linf
+        ));
     }
 }

@@ -40,6 +40,7 @@ fn main() {
                 method: "mgard+".into(),
                 tolerance: Tolerance::Rel(1e-3),
                 verify: false,
+                ..PipelineConfig::default()
             },
             &Registry::new(),
         )

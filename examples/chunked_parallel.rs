@@ -1,0 +1,82 @@
+//! Chunked parallel compression: tile a field into blocks, compress them on
+//! a worker pool, and read individual blocks back without touching the rest
+//! of the container.
+//!
+//! Run with: `cargo run --release --example chunked_parallel`
+//! (`MGARDP_THREADS=8` sets the widest point of the scaling sweep.)
+
+use mgardp::bench_util::chunked_scaling;
+use mgardp::chunk::{container, ChunkedConfig};
+use mgardp::compressors::{Compressor, MgardPlus, Tolerance};
+use mgardp::data::synth;
+use mgardp::metrics::{compression_ratio, linf_error, throughput_mbs};
+
+fn main() -> mgardp::Result<()> {
+    let max_threads: usize = std::env::var("MGARDP_THREADS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(8);
+    let field = synth::smooth_test_field(&[129, 129, 129]);
+    let rel = 1e-3;
+    let tau = rel * field.value_range();
+    println!(
+        "field {:?} ({:.1} MB), rel tolerance {rel:.0e} (τ = {tau:.4e})\n",
+        field.shape(),
+        field.nbytes() as f64 / 1e6
+    );
+
+    // --- compress with 32³ blocks on the worker pool ---
+    let codec = MgardPlus::default().chunked(ChunkedConfig {
+        block_shape: vec![32],
+        threads: max_threads,
+    });
+    let bytes = codec.compress(&field, Tolerance::Rel(rel))?;
+    let back = codec.decompress(&bytes)?;
+    let err = linf_error(field.data(), back.data());
+    println!(
+        "chunked container: {} bytes (CR {:.2}), reassembled L∞ {err:.3e} <= τ: {}",
+        bytes.len(),
+        compression_ratio(field.nbytes(), bytes.len()),
+        err <= tau
+    );
+
+    // --- the per-block index enables random access ---
+    let (_header, index, blob) = container::read_container(&bytes)?;
+    println!(
+        "index: {} blocks of nominal {:?}, inner codec {:?}",
+        index.entries.len(),
+        index.block_shape,
+        index.inner
+    );
+    let e = &index.entries[index.entries.len() / 2];
+    let one: mgardp::tensor::Tensor<f32> =
+        mgardp::compressors::decompress_any(&blob[e.offset..e.offset + e.len])?;
+    let direct = field.block(&e.start, &e.shape)?;
+    println!(
+        "random access: block at {:?} {:?} decoded alone from {} bytes, L∞ {:.3e}",
+        e.start,
+        e.shape,
+        e.len,
+        linf_error(direct.data(), one.data())
+    );
+
+    // --- thread-scaling sweep vs the single-threaded unchunked path ---
+    let mut counts = vec![1usize];
+    while *counts.last().expect("non-empty") < max_threads {
+        counts.push(counts.last().expect("non-empty") * 2);
+    }
+    println!("\n{:<8} {:>12} {:>12} {:>9}", "threads", "comp MB/s", "decomp MB/s", "speedup");
+    let (base_secs, points) =
+        chunked_scaling(&field, Tolerance::Rel(rel), &[32], &counts, 1, 3)?;
+    println!(
+        "(unchunked single-thread baseline: {:.1} MB/s)",
+        throughput_mbs(field.nbytes(), base_secs)
+    );
+    for p in &points {
+        println!(
+            "{:<8} {:>12.1} {:>12.1} {:>8.2}x",
+            p.threads, p.comp_mbs, p.decomp_mbs, p.speedup
+        );
+    }
+    Ok(())
+}

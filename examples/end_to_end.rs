@@ -20,7 +20,7 @@ use mgardp::grid::Hierarchy;
 use mgardp::metrics::throughput_mbs;
 use mgardp::runtime::{artifacts_dir, XlaLevelStep, XlaRuntime};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> mgardp::Result<()> {
     let scale: f64 = std::env::var("MGARDP_SCALE")
         .ok()
         .and_then(|v| v.parse().ok())
@@ -77,7 +77,9 @@ fn main() -> anyhow::Result<()> {
     // --- stage 3: the XLA (Pallas/JAX AOT) backend cross-check ---
     println!("[3/4] XLA backend: AOT level step vs native engine");
     let dir = artifacts_dir();
-    if XlaLevelStep::available(&dir, 33) {
+    if !mgardp::runtime::pjrt_available() {
+        println!("  PJRT runtime unavailable in this build (skipped)\n");
+    } else if XlaLevelStep::available(&dir, 33) {
         let rt = XlaRuntime::cpu()?;
         let step = XlaLevelStep::load(&rt, &dir, 33)?;
         let u = synth::smooth_test_field(&[33, 33, 33]);
@@ -88,7 +90,9 @@ fn main() -> anyhow::Result<()> {
         let serr = mgardp::metrics::linf_error(&stream, &native.coeffs[0]);
         println!("  coarse L∞ diff {cerr:.2e}, stream L∞ diff {serr:.2e} (agree: {})\n",
             cerr < 1e-4 && serr < 1e-4);
-        anyhow::ensure!(cerr < 1e-4 && serr < 1e-4, "XLA/native mismatch");
+        if cerr >= 1e-4 || serr >= 1e-4 {
+            return Err(mgardp::Error::Xla("XLA/native mismatch".into()));
+        }
     } else {
         println!("  artifacts missing — run `make artifacts` (skipped)\n");
     }

@@ -14,7 +14,7 @@ use mgardp::decompose::{Decomposer, OptFlags};
 use mgardp::grid::Hierarchy;
 use std::time::Instant;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> mgardp::Result<()> {
     let ds = synth::nyx_like(0.5, 42);
     for (fname, iso_kind) in [("velocity_x", "zero"), ("temperature", "mean")] {
         let field = ds.field(fname).expect("field");

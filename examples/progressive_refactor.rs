@@ -14,7 +14,7 @@ use mgardp::grid::Hierarchy;
 use mgardp::metrics::psnr;
 use mgardp::tensor::Tensor;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> mgardp::Result<()> {
     let ds = synth::scale_like(0.4, 42);
     let field = ds.field("T").expect("temperature");
     let data = &field.data;

@@ -7,7 +7,7 @@ use mgardp::compressors::{all_compressors, Tolerance};
 use mgardp::data::synth;
 use mgardp::metrics::{compression_ratio, linf_error, psnr};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> mgardp::Result<()> {
     // A Hurricane-Isabel-like pressure field (synthetic analog).
     let ds = synth::hurricane_like(0.4, 42);
     let field = ds.field("P").expect("pressure field");

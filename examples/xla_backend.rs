@@ -11,8 +11,13 @@ use mgardp::grid::Hierarchy;
 use mgardp::metrics::{linf_error, throughput_mbs};
 use mgardp::runtime::{artifacts_dir, XlaLevelStep, XlaRuntime};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> mgardp::Result<()> {
     let dir = artifacts_dir();
+    if !mgardp::runtime::pjrt_available() {
+        println!("PJRT runtime unavailable in this build — nothing to do");
+        println!("(see rust/src/runtime/pjrt.rs for how to enable it)");
+        return Ok(());
+    }
     let rt = XlaRuntime::cpu()?;
     println!("PJRT platform: {}", rt.platform());
     for n in [17usize, 33] {

@@ -145,6 +145,79 @@ pub fn rd_tolerances() -> Vec<f64> {
     vec![3e-2, 1e-2, 3e-3, 1e-3, 3e-4, 1e-4, 3e-5, 1e-5]
 }
 
+/// One point of the chunked-throughput scaling curve.
+#[derive(Clone, Copy, Debug)]
+pub struct ChunkedScalingPoint {
+    /// Worker threads the chunked codec ran with.
+    pub threads: usize,
+    /// Median chunked compression seconds.
+    pub comp_secs: f64,
+    /// Median chunked decompression seconds.
+    pub decomp_secs: f64,
+    /// Chunked compression throughput (MB/s).
+    pub comp_mbs: f64,
+    /// Chunked decompression throughput (MB/s).
+    pub decomp_mbs: f64,
+    /// Compression speedup over the single-threaded *unchunked* path.
+    pub speedup: f64,
+    /// L∞ error of the reassembled field (must stay within the bound).
+    pub linf: f64,
+}
+
+/// Measure the chunked MGARD+ path against the single-threaded unchunked
+/// path on the same field and tolerance: returns the unchunked baseline
+/// compression seconds and one scaling point per requested thread count.
+/// Every point's reassembled field is verified against the same absolute
+/// L∞ bound the unchunked path guarantees.
+pub fn chunked_scaling(
+    data: &crate::tensor::Tensor<f32>,
+    tol: crate::compressors::Tolerance,
+    block_shape: &[usize],
+    thread_counts: &[usize],
+    warmup: usize,
+    runs: usize,
+) -> crate::error::Result<(f64, Vec<ChunkedScalingPoint>)> {
+    use crate::compressors::{Compressor, MgardPlus};
+    let tau = tol.absolute(data.value_range());
+    let unchunked = MgardPlus::default();
+    let base = time_fn(warmup, runs, || unchunked.compress(data, tol).unwrap());
+    let mut points = Vec::with_capacity(thread_counts.len());
+    for &threads in thread_counts {
+        let codec = MgardPlus::default().chunked(crate::chunk::ChunkedConfig {
+            block_shape: block_shape.to_vec(),
+            threads,
+        });
+        // capture the last timed result instead of paying an extra
+        // untimed compress/decompress per scaling point
+        let mut last_bytes: Option<Vec<u8>> = None;
+        let t_comp = time_fn(warmup, runs, || {
+            last_bytes = Some(codec.compress(data, tol).unwrap());
+        });
+        let bytes = last_bytes.take().expect("at least one timed run");
+        let mut last_back = None;
+        let t_decomp = time_fn(warmup, runs, || {
+            last_back = Some(codec.decompress(&bytes).unwrap());
+        });
+        let back: crate::tensor::Tensor<f32> = last_back.take().expect("at least one timed run");
+        let linf = crate::metrics::linf_error(data.data(), back.data());
+        if linf > tau * (1.0 + 1e-6) {
+            return Err(crate::error::Error::invalid(format!(
+                "chunked path broke the L∞ bound: {linf} > {tau} at {threads} threads"
+            )));
+        }
+        points.push(ChunkedScalingPoint {
+            threads,
+            comp_secs: t_comp.median,
+            decomp_secs: t_decomp.median,
+            comp_mbs: crate::metrics::throughput_mbs(data.nbytes(), t_comp.median),
+            decomp_mbs: crate::metrics::throughput_mbs(data.nbytes(), t_decomp.median),
+            speedup: base.median / t_comp.median,
+            linf,
+        });
+    }
+    Ok((base.median, points))
+}
+
 /// True when the benches should shrink workloads (smoke mode for CI):
 /// set `MGARDP_BENCH_SMOKE=1`.
 pub fn smoke_mode() -> bool {
@@ -187,6 +260,24 @@ mod tests {
         let t = time_fn(1, 5, || std::hint::black_box(2 + 2));
         assert_eq!(t.runs, 5);
         assert!(t.min <= t.median && t.median >= 0.0);
+    }
+
+    #[test]
+    fn chunked_scaling_points_bounded() {
+        let t = crate::data::synth::smooth_test_field(&[20, 20, 20]);
+        let (base, points) = chunked_scaling(
+            &t,
+            crate::compressors::Tolerance::Rel(1e-3),
+            &[10],
+            &[1, 2],
+            0,
+            1,
+        )
+        .unwrap();
+        assert!(base > 0.0);
+        assert_eq!(points.len(), 2);
+        assert_eq!(points[0].threads, 1);
+        assert!(points.iter().all(|p| p.comp_mbs > 0.0 && p.linf.is_finite()));
     }
 
     #[test]

@@ -1,0 +1,280 @@
+//! The versioned chunked container format.
+//!
+//! Layout (after the standard [`Header`] with `Method::Chunked`, which
+//! carries dtype, field shape and the global absolute tolerance):
+//!
+//! ```text
+//! u8                         chunk-container version (currently 1)
+//! u8                         inner method tag (never Chunked: no nesting)
+//! varint × ndim              nominal block shape
+//! varint                     number of blocks B
+//! B × {                      per-block index, row-major block order:
+//!   varint offset              byte offset into the blob section
+//!   varint len                 blob length in bytes
+//!   varint × ndim start        block origin in the field
+//!   varint × ndim shape        block extent
+//!   varint nlevels             decomposition depth of the block hierarchy
+//!   f64    tau_abs             absolute L∞ tolerance the block was coded at
+//! }
+//! varint                     blob section length
+//! bytes                      concatenated blobs (each a complete
+//!                            self-describing container of the inner method)
+//! ```
+//!
+//! Every blob is independently decompressible — random access to a block
+//! needs only the header + index, and parallel decompression needs no
+//! coordination beyond slicing the blob section.
+
+use crate::compressors::{Header, Method};
+use crate::encode::varint::{write_f64, write_u64, ByteReader};
+use crate::error::{Error, Result};
+use crate::tensor::Scalar;
+
+/// Current chunked-container sub-version.
+pub const CHUNK_CONTAINER_VERSION: u8 = 1;
+
+/// One entry of the per-block index.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BlockEntry {
+    /// Byte offset of the block's blob inside the blob section.
+    pub offset: usize,
+    /// Blob length in bytes.
+    pub len: usize,
+    /// Block origin in the field.
+    pub start: Vec<usize>,
+    /// Block extent (every entry >= 2).
+    pub shape: Vec<usize>,
+    /// Decomposition depth of the block's grid hierarchy.
+    pub nlevels: usize,
+    /// Absolute L∞ tolerance the block was encoded at.
+    pub tau_abs: f64,
+}
+
+/// Parsed chunked-container metadata (everything but the blobs).
+#[derive(Clone, Debug)]
+pub struct ChunkIndex {
+    /// Method of the inner per-block containers.
+    pub inner: Method,
+    /// Nominal block shape the partition was built from.
+    pub block_shape: Vec<usize>,
+    /// Per-block index in row-major block order.
+    pub entries: Vec<BlockEntry>,
+}
+
+/// Assemble a chunked container from per-block blobs (in row-major block
+/// order, matching `index.entries` which must carry offset/len consistent
+/// with the concatenation).
+pub fn write_container<T: Scalar>(
+    field_shape: &[usize],
+    tau_abs: f64,
+    index: &ChunkIndex,
+    blobs: &[Vec<u8>],
+) -> Vec<u8> {
+    let blob_len: usize = blobs.iter().map(|b| b.len()).sum();
+    let mut out = Vec::with_capacity(blob_len + 64 * index.entries.len() + 64);
+    Header {
+        method: Method::Chunked,
+        dtype: T::DTYPE_TAG,
+        shape: field_shape.to_vec(),
+        tau_abs,
+    }
+    .write(&mut out);
+    out.push(CHUNK_CONTAINER_VERSION);
+    out.push(index.inner as u8);
+    for &b in &index.block_shape {
+        write_u64(&mut out, b as u64);
+    }
+    write_u64(&mut out, index.entries.len() as u64);
+    for e in &index.entries {
+        write_u64(&mut out, e.offset as u64);
+        write_u64(&mut out, e.len as u64);
+        for &s in &e.start {
+            write_u64(&mut out, s as u64);
+        }
+        for &s in &e.shape {
+            write_u64(&mut out, s as u64);
+        }
+        write_u64(&mut out, e.nlevels as u64);
+        write_f64(&mut out, e.tau_abs);
+    }
+    write_u64(&mut out, blob_len as u64);
+    for b in blobs {
+        out.extend_from_slice(b);
+    }
+    out
+}
+
+/// Parse a chunked container: standard header, index, and the blob section.
+/// All offsets are validated against the blob section before returning, so
+/// callers can slice blobs without further checks.
+pub fn read_container(bytes: &[u8]) -> Result<(Header, ChunkIndex, &[u8])> {
+    let (header, mut r) = Header::read(bytes)?;
+    if header.method != Method::Chunked {
+        return Err(Error::UnsupportedFormat(format!(
+            "expected chunked container, found {:?}",
+            header.method
+        )));
+    }
+    let version = r.u8()?;
+    if version != CHUNK_CONTAINER_VERSION {
+        return Err(Error::UnsupportedFormat(format!(
+            "chunk container version {version}, expected {CHUNK_CONTAINER_VERSION}"
+        )));
+    }
+    let inner = Method::from_u8(r.u8()?)?;
+    if inner == Method::Chunked {
+        return Err(Error::corrupt("nested chunked containers are not allowed"));
+    }
+    let ndim = header.shape.len();
+    let mut block_shape = Vec::with_capacity(ndim);
+    for _ in 0..ndim {
+        block_shape.push(r.usize()?);
+    }
+    let nblocks = r.usize()?;
+    // each entry consumes at least 2*ndim + 3 varint bytes + 8 tau bytes,
+    // so bounding the count by remaining/min_entry keeps the index
+    // pre-allocation proportional to the actual input size even for a
+    // corrupted count field
+    let min_entry_bytes = 2 * ndim + 3 + 8;
+    if nblocks > r.remaining() / min_entry_bytes {
+        return Err(Error::corrupt(format!("implausible block count {nblocks}")));
+    }
+    let mut entries = Vec::with_capacity(nblocks);
+    for _ in 0..nblocks {
+        let offset = r.usize()?;
+        let len = r.usize()?;
+        let mut start = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            start.push(r.usize()?);
+        }
+        let mut shape = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            shape.push(r.usize()?);
+        }
+        let nlevels = r.usize()?;
+        let tau_abs = r.f64()?;
+        for d in 0..ndim {
+            let inside = shape[d] >= 2
+                && matches!(start[d].checked_add(shape[d]), Some(end) if end <= header.shape[d]);
+            if !inside {
+                return Err(Error::corrupt(format!(
+                    "block [{:?} + {:?}) outside field {:?}",
+                    start, shape, header.shape
+                )));
+            }
+        }
+        entries.push(BlockEntry {
+            offset,
+            len,
+            start,
+            shape,
+            nlevels,
+            tau_abs,
+        });
+    }
+    let blob_len = r.usize()?;
+    let blobs = r.bytes(blob_len)?;
+    for e in &entries {
+        let end = e
+            .offset
+            .checked_add(e.len)
+            .ok_or_else(|| Error::corrupt("block blob range overflow"))?;
+        if end > blob_len {
+            return Err(Error::corrupt(format!(
+                "block blob [{}, {end}) outside blob section of {blob_len} bytes",
+                e.offset
+            )));
+        }
+    }
+    Ok((
+        header,
+        ChunkIndex {
+            inner,
+            block_shape,
+            entries,
+        },
+        blobs,
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_index() -> (ChunkIndex, Vec<Vec<u8>>) {
+        let blobs = vec![vec![1u8, 2, 3], vec![4u8, 5]];
+        let entries = vec![
+            BlockEntry {
+                offset: 0,
+                len: 3,
+                start: vec![0, 0],
+                shape: vec![8, 8],
+                nlevels: 2,
+                tau_abs: 0.5,
+            },
+            BlockEntry {
+                offset: 3,
+                len: 2,
+                start: vec![8, 0],
+                shape: vec![9, 8],
+                nlevels: 3,
+                tau_abs: 0.5,
+            },
+        ];
+        (
+            ChunkIndex {
+                inner: Method::MgardPlus,
+                block_shape: vec![8, 8],
+                entries,
+            },
+            blobs,
+        )
+    }
+
+    #[test]
+    fn container_round_trip() {
+        let (index, blobs) = sample_index();
+        let bytes = write_container::<f32>(&[17, 8], 0.5, &index, &blobs);
+        let (header, back, blob) = read_container(&bytes).unwrap();
+        assert_eq!(header.shape, vec![17, 8]);
+        assert_eq!(header.tau_abs, 0.5);
+        assert_eq!(back.inner, Method::MgardPlus);
+        assert_eq!(back.block_shape, vec![8, 8]);
+        assert_eq!(back.entries, index.entries);
+        assert_eq!(&blob[0..3], &[1, 2, 3]);
+        assert_eq!(&blob[3..5], &[4, 5]);
+    }
+
+    #[test]
+    fn truncations_rejected() {
+        let (index, blobs) = sample_index();
+        let bytes = write_container::<f32>(&[17, 8], 0.5, &index, &blobs);
+        for cut in 0..bytes.len() {
+            assert!(read_container(&bytes[..cut]).is_err(), "cut at {cut}");
+        }
+    }
+
+    #[test]
+    fn nested_chunked_rejected() {
+        let (mut index, blobs) = sample_index();
+        index.inner = Method::Chunked;
+        let bytes = write_container::<f32>(&[17, 8], 0.5, &index, &blobs);
+        assert!(read_container(&bytes).is_err());
+    }
+
+    #[test]
+    fn out_of_field_blocks_rejected() {
+        let (index, blobs) = sample_index();
+        // field too small for the second entry (start 8 + shape 9 > 10)
+        let bytes = write_container::<f32>(&[10, 8], 0.5, &index, &blobs);
+        assert!(read_container(&bytes).is_err());
+    }
+
+    #[test]
+    fn out_of_section_blob_rejected() {
+        let (mut index, blobs) = sample_index();
+        index.entries[1].len = 40;
+        let bytes = write_container::<f32>(&[17, 8], 0.5, &index, &blobs);
+        assert!(read_container(&bytes).is_err());
+    }
+}

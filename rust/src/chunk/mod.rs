@@ -1,0 +1,273 @@
+//! Chunked, multi-threaded compression: the sharded/streaming front of the
+//! MGARD+ stack.
+//!
+//! The single-tensor compressors in [`crate::compressors`] run one
+//! monolithic in-core array through a single thread. This module partitions
+//! an N-d field into overlap-free blocks ([`partition`]), runs the full
+//! MGARD+ path (decompose → level-wise quantize → encode) per block on a
+//! self-balancing worker pool ([`pool`]), and assembles a versioned
+//! container with a per-block index ([`container`]) so blocks decompress
+//! independently — and therefore in parallel, or selectively for random
+//! access to a sub-domain.
+//!
+//! Error-bound semantics are preserved: the global [`Tolerance`] is resolved
+//! against the *whole field's* value range once, and every block is encoded
+//! at that absolute tolerance. Each point of the reassembled field is
+//! produced by exactly one block (the partition is overlap-free), so the
+//! pointwise guarantee `‖u − ũ‖_∞ ≤ τ` of the unchunked path carries over
+//! verbatim — including across block seams.
+//!
+//! ```
+//! use mgardp::chunk::ChunkedConfig;
+//! use mgardp::compressors::{Compressor, MgardPlus, Tolerance};
+//! let field = mgardp::data::synth::smooth_test_field(&[40, 40, 40]);
+//! let codec = MgardPlus::default().chunked(ChunkedConfig {
+//!     block_shape: vec![16, 16, 16],
+//!     threads: 4,
+//! });
+//! let bytes = codec.compress(&field, Tolerance::Rel(1e-3)).unwrap();
+//! let back = codec.decompress(&bytes).unwrap();
+//! let tau = 1e-3 * mgardp::metrics::value_range(field.data());
+//! assert!(mgardp::metrics::linf_error(field.data(), back.data()) <= tau);
+//! ```
+
+pub mod container;
+pub mod partition;
+pub mod pool;
+
+pub use container::{BlockEntry, ChunkIndex, CHUNK_CONTAINER_VERSION};
+pub use partition::{partition, resolve_block_shape, Block};
+pub use pool::{effective_threads, parallel_map};
+
+use crate::compressors::{peek_method, Compressor, Method, Tolerance};
+use crate::error::{Error, Result};
+use crate::grid::Hierarchy;
+use crate::tensor::{Scalar, Tensor};
+
+/// Configuration of the chunked pipeline.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ChunkedConfig {
+    /// Nominal block shape. A single entry broadcasts to every dimension
+    /// (e.g. `vec![64]` tiles any rank with 64^d blocks); otherwise the rank
+    /// must match the field. Trailing remainders < 2 merge into the last
+    /// block, so all block extents stay >= 2.
+    pub block_shape: Vec<usize>,
+    /// Worker threads for both compression and decompression; 0 means "use
+    /// available parallelism".
+    pub threads: usize,
+}
+
+impl Default for ChunkedConfig {
+    fn default() -> Self {
+        ChunkedConfig {
+            block_shape: vec![64],
+            threads: 0,
+        }
+    }
+}
+
+/// Wraps any [`Compressor`] into a block-parallel one producing the chunked
+/// container format.
+#[derive(Clone, Debug, Default)]
+pub struct ChunkedCompressor<C> {
+    inner: C,
+    cfg: ChunkedConfig,
+}
+
+impl<C> ChunkedCompressor<C> {
+    /// Wrap `inner`, compressing blocks of `cfg.block_shape` on
+    /// `cfg.threads` workers.
+    pub fn new(inner: C, cfg: ChunkedConfig) -> Self {
+        ChunkedCompressor { inner, cfg }
+    }
+
+    /// The wrapped single-tensor compressor.
+    pub fn inner(&self) -> &C {
+        &self.inner
+    }
+
+    /// The chunking configuration.
+    pub fn config(&self) -> &ChunkedConfig {
+        &self.cfg
+    }
+}
+
+/// Scatter decoded blocks back into a field tensor, verifying shapes and
+/// exact coverage.
+fn assemble<T: Scalar>(
+    field_shape: &[usize],
+    entries: &[BlockEntry],
+    blocks: Vec<Tensor<T>>,
+) -> Result<Tensor<T>> {
+    let covered: usize = entries.iter().map(|e| crate::tensor::numel(&e.shape)).sum();
+    if covered != crate::tensor::numel(field_shape) {
+        return Err(Error::corrupt(format!(
+            "block index covers {covered} points, field has {}",
+            crate::tensor::numel(field_shape)
+        )));
+    }
+    let mut out = Tensor::zeros(field_shape);
+    for (e, b) in entries.iter().zip(blocks) {
+        if b.shape() != e.shape.as_slice() {
+            return Err(Error::corrupt(format!(
+                "block decoded to {:?}, index says {:?}",
+                b.shape(),
+                e.shape
+            )));
+        }
+        out.set_block(&e.start, &b)?;
+    }
+    Ok(out)
+}
+
+/// Decode every blob of a parsed container in parallel with `decode`, then
+/// assemble the field.
+fn decode_blocks<T: Scalar>(
+    field_shape: &[usize],
+    index: &ChunkIndex,
+    blob: &[u8],
+    threads: usize,
+    decode: impl Fn(&[u8]) -> Result<Tensor<T>> + Sync,
+) -> Result<Tensor<T>> {
+    let results = parallel_map(index.entries.len(), threads, |i| {
+        let e = &index.entries[i];
+        decode(&blob[e.offset..e.offset + e.len])
+    });
+    let mut blocks = Vec::with_capacity(results.len());
+    for r in results {
+        blocks.push(r?);
+    }
+    assemble(field_shape, &index.entries, blocks)
+}
+
+impl<T: Scalar, C: Compressor<T> + Sync> Compressor<T> for ChunkedCompressor<C> {
+    fn name(&self) -> &'static str {
+        "Chunked"
+    }
+
+    fn compress(&self, data: &Tensor<T>, tol: Tolerance) -> Result<Vec<u8>> {
+        // resolve the tolerance against the *global* value range so every
+        // block honours the field-level bound
+        let tau = tol.absolute(data.value_range());
+        if tau <= 0.0 {
+            return Err(Error::invalid("tolerance must be positive"));
+        }
+        let block_shape = resolve_block_shape(&self.cfg.block_shape, data.ndim())?;
+        let blocks = partition(data.shape(), &block_shape)?;
+        let results = parallel_map(blocks.len(), self.cfg.threads, |i| {
+            let b = &blocks[i];
+            let sub = data.block(&b.start, &b.shape)?;
+            let bytes = self.inner.compress(&sub, Tolerance::Abs(tau))?;
+            let nlevels = Hierarchy::new(&b.shape, None)?.nlevels();
+            Ok((bytes, nlevels))
+        });
+        let mut blobs = Vec::with_capacity(blocks.len());
+        let mut entries = Vec::with_capacity(blocks.len());
+        let mut offset = 0usize;
+        for (b, r) in blocks.iter().zip(results) {
+            let (bytes, nlevels) = r?;
+            entries.push(BlockEntry {
+                offset,
+                len: bytes.len(),
+                start: b.start.clone(),
+                shape: b.shape.clone(),
+                nlevels,
+                tau_abs: tau,
+            });
+            offset += bytes.len();
+            blobs.push(bytes);
+        }
+        let inner_method = peek_method(&blobs[0])?;
+        if inner_method == Method::Chunked {
+            return Err(Error::invalid(
+                "nested chunked compressors are not supported",
+            ));
+        }
+        let index = ChunkIndex {
+            inner: inner_method,
+            block_shape,
+            entries,
+        };
+        Ok(container::write_container::<T>(
+            data.shape(),
+            tau,
+            &index,
+            &blobs,
+        ))
+    }
+
+    fn decompress(&self, bytes: &[u8]) -> Result<Tensor<T>> {
+        let (header, index, blob) = container::read_container(bytes)?;
+        header.expect::<T>(Method::Chunked)?;
+        decode_blocks(
+            &header.shape,
+            &index,
+            blob,
+            self.cfg.threads,
+            |blob_bytes| self.inner.decompress(blob_bytes),
+        )
+    }
+}
+
+/// Decompress a chunked container whose inner method is only known from the
+/// stream itself (the [`crate::compressors::decompress_any`] path): each
+/// blob dispatches on its own header.
+pub fn decompress_any_chunked<T: Scalar>(bytes: &[u8]) -> Result<Tensor<T>> {
+    let (header, index, blob) = container::read_container(bytes)?;
+    header.expect::<T>(Method::Chunked)?;
+    decode_blocks(&header.shape, &index, blob, 0, |blob_bytes| {
+        let m = peek_method(blob_bytes)?;
+        if m == Method::Chunked {
+            return Err(Error::corrupt("nested chunked containers are not allowed"));
+        }
+        crate::compressors::decompress_any::<T>(blob_bytes)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compressors::MgardPlus;
+    use crate::metrics::linf_error;
+
+    #[test]
+    fn round_trip_multi_block() {
+        let t = crate::data::synth::smooth_test_field(&[20, 20, 20]);
+        let codec = ChunkedCompressor::new(
+            MgardPlus::default(),
+            ChunkedConfig {
+                block_shape: vec![8],
+                threads: 2,
+            },
+        );
+        let bytes = codec.compress(&t, Tolerance::Abs(1e-3)).unwrap();
+        let back: Tensor<f32> = codec.decompress(&bytes).unwrap();
+        assert_eq!(back.shape(), t.shape());
+        assert!(linf_error(t.data(), back.data()) <= 1e-3);
+    }
+
+    #[test]
+    fn dispatch_via_decompress_any() {
+        let t = crate::data::synth::smooth_test_field(&[12, 18]);
+        let codec = ChunkedCompressor::new(
+            MgardPlus::default(),
+            ChunkedConfig {
+                block_shape: vec![8, 8],
+                threads: 1,
+            },
+        );
+        let bytes = codec.compress(&t, Tolerance::Abs(1e-3)).unwrap();
+        let back: Tensor<f32> = crate::compressors::decompress_any(&bytes).unwrap();
+        assert!(linf_error(t.data(), back.data()) <= 1e-3);
+    }
+
+    #[test]
+    fn wrong_dtype_rejected() {
+        let t = crate::data::synth::smooth_test_field(&[10, 10]);
+        let codec = ChunkedCompressor::new(MgardPlus::default(), ChunkedConfig::default());
+        let bytes = codec.compress(&t, Tolerance::Abs(1e-3)).unwrap();
+        let codec64 = ChunkedCompressor::new(MgardPlus::default(), ChunkedConfig::default());
+        let r: Result<Tensor<f64>> = codec64.decompress(&bytes);
+        assert!(r.is_err());
+    }
+}

@@ -1,0 +1,165 @@
+//! Domain decomposition into overlap-free blocks.
+//!
+//! A field of shape `S` is tiled by a block shape `B`: along every dimension
+//! the domain splits at multiples of `B_d`. A trailing remainder of fewer
+//! than 2 nodes cannot form a valid grid hierarchy on its own, so it is
+//! merged into the preceding block (e.g. 17 with 16-blocks gives one block
+//! of 17, and 33 gives blocks of 16 and 17). Blocks are enumerated in
+//! row-major order of their grid position, which is also the on-disk index
+//! order of the container.
+
+use crate::error::{Error, Result};
+
+/// One block of the partition: where it starts in the field and its shape.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Block {
+    /// Per-dimension start offset in the field.
+    pub start: Vec<usize>,
+    /// Per-dimension extent; every entry is >= 2.
+    pub shape: Vec<usize>,
+}
+
+/// Split one dimension of length `n` into segments of nominal length `b`,
+/// merging a trailing remainder < 2 into the last segment.
+fn segments(n: usize, b: usize) -> Vec<(usize, usize)> {
+    if n <= b {
+        return vec![(0, n)];
+    }
+    let k = n / b;
+    let rem = n % b;
+    let mut segs: Vec<(usize, usize)> = (0..k).map(|i| (i * b, b)).collect();
+    if rem >= 2 {
+        segs.push((k * b, rem));
+    } else if rem > 0 {
+        segs.last_mut().expect("k >= 1").1 += rem;
+    }
+    segs
+}
+
+/// Resolve a user-supplied block shape against the field rank: a single
+/// entry broadcasts to every dimension, otherwise ranks must match.
+pub fn resolve_block_shape(block_shape: &[usize], ndim: usize) -> Result<Vec<usize>> {
+    let resolved: Vec<usize> = if block_shape.len() == 1 {
+        vec![block_shape[0]; ndim]
+    } else if block_shape.len() == ndim {
+        block_shape.to_vec()
+    } else {
+        return Err(Error::invalid(format!(
+            "block shape has {} dims, field has {ndim}",
+            block_shape.len()
+        )));
+    };
+    for &b in &resolved {
+        if b < 2 {
+            return Err(Error::invalid(format!("block extent {b} < 2")));
+        }
+    }
+    Ok(resolved)
+}
+
+/// Enumerate the partition of `field_shape` by `block_shape` (already
+/// resolved to the field rank) in row-major block order.
+pub fn partition(field_shape: &[usize], block_shape: &[usize]) -> Result<Vec<Block>> {
+    if field_shape.len() != block_shape.len() {
+        return Err(Error::shape("partition rank mismatch"));
+    }
+    for &n in field_shape {
+        if n < 2 {
+            return Err(Error::invalid(format!("field dimension {n} < 2")));
+        }
+    }
+    let per_dim: Vec<Vec<(usize, usize)>> = field_shape
+        .iter()
+        .zip(block_shape)
+        .map(|(&n, &b)| segments(n, b))
+        .collect();
+    let counts: Vec<usize> = per_dim.iter().map(|s| s.len()).collect();
+    let total: usize = counts.iter().product();
+    let mut blocks = Vec::with_capacity(total);
+    let mut idx = vec![0usize; counts.len()];
+    for _ in 0..total {
+        let mut start = Vec::with_capacity(idx.len());
+        let mut shape = Vec::with_capacity(idx.len());
+        for (d, &i) in idx.iter().enumerate() {
+            let (s, len) = per_dim[d][i];
+            start.push(s);
+            shape.push(len);
+        }
+        blocks.push(Block { start, shape });
+        for d in (0..idx.len()).rev() {
+            idx[d] += 1;
+            if idx[d] < counts[d] {
+                break;
+            }
+            idx[d] = 0;
+        }
+    }
+    Ok(blocks)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_tiling() {
+        let blocks = partition(&[32, 32], &[16, 16]).unwrap();
+        assert_eq!(blocks.len(), 4);
+        assert_eq!(blocks[0].start, vec![0, 0]);
+        assert_eq!(blocks[3].start, vec![16, 16]);
+        assert!(blocks.iter().all(|b| b.shape == vec![16, 16]));
+    }
+
+    #[test]
+    fn remainder_blocks_kept_when_large_enough() {
+        // 33 = 16 + 16 + 1 → the size-1 tail merges into the second block
+        assert_eq!(segments(33, 16), vec![(0, 16), (16, 17)]);
+        // 35 = 16 + 16 + 3 → the tail stands alone
+        assert_eq!(segments(35, 16), vec![(0, 16), (16, 16), (32, 3)]);
+        // 17 with 16-blocks: one merged block
+        assert_eq!(segments(17, 16), vec![(0, 17)]);
+    }
+
+    #[test]
+    fn small_field_is_single_block() {
+        let blocks = partition(&[9, 9, 9], &[64, 64, 64]).unwrap();
+        assert_eq!(blocks.len(), 1);
+        assert_eq!(blocks[0].shape, vec![9, 9, 9]);
+    }
+
+    #[test]
+    fn every_point_covered_exactly_once() {
+        let field = [17, 33, 65];
+        let blocks = partition(&field, &[16, 16, 16]).unwrap();
+        let mut seen = vec![0u8; field.iter().product()];
+        for b in &blocks {
+            for &s in &b.shape {
+                assert!(s >= 2);
+            }
+            crate::tensor::for_each_index(&b.shape, |ix| {
+                let flat = (b.start[0] + ix[0]) * field[1] * field[2]
+                    + (b.start[1] + ix[1]) * field[2]
+                    + (b.start[2] + ix[2]);
+                seen[flat] += 1;
+            });
+        }
+        assert!(seen.iter().all(|&c| c == 1), "overlap or gap in partition");
+    }
+
+    #[test]
+    fn broadcast_and_validation() {
+        assert_eq!(resolve_block_shape(&[64], 3).unwrap(), vec![64, 64, 64]);
+        assert_eq!(resolve_block_shape(&[8, 16], 2).unwrap(), vec![8, 16]);
+        assert!(resolve_block_shape(&[8, 16], 3).is_err());
+        assert!(resolve_block_shape(&[1], 2).is_err());
+        assert!(partition(&[5, 1], &[4, 4]).is_err());
+    }
+
+    #[test]
+    fn row_major_block_order() {
+        let blocks = partition(&[32, 48], &[16, 16]).unwrap();
+        assert_eq!(blocks.len(), 6);
+        assert_eq!(blocks[1].start, vec![0, 16]);
+        assert_eq!(blocks[3].start, vec![16, 0]);
+    }
+}

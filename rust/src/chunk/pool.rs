@@ -1,0 +1,113 @@
+//! A small work-stealing-style parallel map over indexed jobs.
+//!
+//! The offline vendor set has no rayon, so chunked compression uses this:
+//! scoped worker threads pull the next job index from a shared atomic
+//! counter (self-balancing — a thread that finishes a cheap remainder block
+//! immediately grabs the next full block), run the job, and deposit the
+//! result into its slot. Output order is the input order regardless of
+//! which thread ran what.
+
+use crate::error::{Error, Result};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Resolve a requested thread count: 0 means "use available parallelism",
+/// and the count is capped at the job count.
+pub fn effective_threads(requested: usize, jobs: usize) -> usize {
+    let t = if requested == 0 {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    } else {
+        requested
+    };
+    t.clamp(1, jobs.max(1))
+}
+
+/// Run `f(0..n)` across `threads` workers, returning results in index order.
+/// Worker panics are converted to `Error::Pipeline` for the affected job.
+pub fn parallel_map<T, F>(n: usize, threads: usize, f: F) -> Vec<Result<T>>
+where
+    T: Send,
+    F: Fn(usize) -> Result<T> + Sync,
+{
+    let threads = effective_threads(threads, n);
+    if n == 0 {
+        return Vec::new();
+    }
+    if threads == 1 {
+        return (0..n).map(&f).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<Result<T>>>> = (0..n).map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let outcome =
+                    std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(i)))
+                        .unwrap_or_else(|_| {
+                            Err(Error::Pipeline(format!("block job {i} panicked")))
+                        });
+                *slots[i].lock().expect("pool slot poisoned") = Some(outcome);
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|slot| {
+            slot.into_inner()
+                .expect("pool slot poisoned")
+                .unwrap_or_else(|| Err(Error::Pipeline("block job never ran".into())))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn results_in_input_order() {
+        for threads in [1, 2, 8] {
+            let out = parallel_map(100, threads, |i| Ok(i * i));
+            let vals: Vec<usize> = out.into_iter().map(|r| r.unwrap()).collect();
+            assert_eq!(vals, (0..100).map(|i| i * i).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn errors_stay_in_their_slot() {
+        let out = parallel_map(10, 4, |i| {
+            if i == 3 {
+                Err(Error::invalid("boom"))
+            } else {
+                Ok(i)
+            }
+        });
+        assert!(out[3].is_err());
+        assert_eq!(out.iter().filter(|r| r.is_ok()).count(), 9);
+    }
+
+    #[test]
+    fn panics_become_errors() {
+        let out = parallel_map(4, 2, |i| {
+            if i == 1 {
+                panic!("worker blew up");
+            }
+            Ok(i)
+        });
+        assert!(out[1].is_err());
+        assert!(out[0].is_ok() && out[2].is_ok() && out[3].is_ok());
+    }
+
+    #[test]
+    fn zero_jobs_and_thread_resolution() {
+        let out: Vec<Result<()>> = parallel_map(0, 8, |_| Ok(()));
+        assert!(out.is_empty());
+        assert_eq!(effective_threads(8, 3), 3);
+        assert_eq!(effective_threads(2, 100), 2);
+        assert!(effective_threads(0, 100) >= 1);
+    }
+}

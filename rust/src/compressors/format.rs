@@ -10,6 +10,10 @@ use crate::tensor::Scalar;
 const MAGIC: &[u8; 4] = b"MGRP";
 const VERSION: u8 = 1;
 
+/// Largest element count a container header may declare (2^33 ≈ 8.6e9
+/// points — generously above any field in the paper's datasets).
+pub const MAX_HEADER_NUMEL: usize = 1 << 33;
+
 /// Compression method tag stored in the container.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Method {
@@ -23,16 +27,20 @@ pub enum Method {
     Zfp = 4,
     /// SZ framework with transform predictor.
     Hybrid = 5,
+    /// Chunked container: independently compressed blocks of any of the
+    /// above, plus a per-block index (see `crate::chunk`).
+    Chunked = 6,
 }
 
 impl Method {
-    fn from_u8(v: u8) -> Result<Method> {
+    pub(crate) fn from_u8(v: u8) -> Result<Method> {
         Ok(match v {
             1 => Method::Mgard,
             2 => Method::MgardPlus,
             3 => Method::Sz,
             4 => Method::Zfp,
             5 => Method::Hybrid,
+            6 => Method::Chunked,
             other => return Err(Error::UnsupportedFormat(format!("method tag {other}"))),
         })
     }
@@ -86,6 +94,16 @@ impl Header {
         let mut shape = Vec::with_capacity(ndim);
         for _ in 0..ndim {
             shape.push(r.usize()?);
+        }
+        // bound the declared element count so corrupted shape fields can
+        // neither overflow stride/numel arithmetic downstream nor set up
+        // absurd allocations before payload-length validation kicks in
+        let numel = shape
+            .iter()
+            .try_fold(1usize, |acc, &d| acc.checked_mul(d))
+            .filter(|&n| n <= MAX_HEADER_NUMEL);
+        if numel.is_none() {
+            return Err(Error::corrupt(format!("implausible shape {shape:?}")));
         }
         let tau_abs = r.f64()?;
         Ok((
@@ -158,6 +176,7 @@ mod tests {
             Method::Sz,
             Method::Zfp,
             Method::Hybrid,
+            Method::Chunked,
         ] {
             assert_eq!(Method::from_u8(m as u8).unwrap(), m);
         }

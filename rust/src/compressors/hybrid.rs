@@ -11,7 +11,7 @@ use super::format::{Header, Method};
 use super::zfp::{decode_block_f64, encode_block_f64, intprec};
 use super::{Compressor, Tolerance};
 use crate::encode::varint::{write_i64, write_section, write_u64, ByteReader};
-use crate::encode::{huffman_decode, huffman_encode, zstd_compress, zstd_decompress};
+use crate::encode::{huffman_decode, huffman_encode, lossless_compress, lossless_decompress};
 use crate::encode::{BitReader, BitWriter};
 use crate::error::{Error, Result};
 use crate::tensor::{strides_for, Scalar, Tensor};
@@ -23,7 +23,7 @@ const EDGE: usize = 4;
 pub struct HybridConfig {
     /// Quantization radius for the prediction modes.
     pub radius: i64,
-    /// zstd level of the final lossless stage.
+    /// Lossless-stage effort level (kept as `zstd_level` for config compatibility).
     pub zstd_level: i32,
 }
 
@@ -46,6 +46,15 @@ impl Hybrid {
     /// Build with an explicit configuration.
     pub fn new(cfg: HybridConfig) -> Self {
         Hybrid { cfg }
+    }
+
+    /// Wrap into a block-parallel compressor (see [`crate::chunk`]),
+    /// mirroring [`super::MgardPlus::chunked`].
+    pub fn chunked(
+        self,
+        cfg: crate::chunk::ChunkedConfig,
+    ) -> crate::chunk::ChunkedCompressor<Self> {
+        crate::chunk::ChunkedCompressor::new(self, cfg)
     }
 }
 
@@ -354,7 +363,7 @@ impl<T: Scalar> Compressor<T> for Hybrid {
         write_section(&mut payload, &huffman_encode(&symbols));
         write_section(&mut payload, &literals);
         write_section(&mut payload, &tw.finish());
-        let compressed = zstd_compress(&payload, self.cfg.zstd_level)?;
+        let compressed = lossless_compress(&payload, self.cfg.zstd_level)?;
 
         let mut out = Vec::with_capacity(compressed.len() + 64);
         Header {
@@ -382,7 +391,7 @@ impl<T: Scalar> Compressor<T> for Hybrid {
         let radius = self.cfg.radius;
 
         let payload_len = r.usize()?;
-        let payload = zstd_decompress(r.bytes(r.remaining())?, payload_len)?;
+        let payload = lossless_decompress(r.bytes(r.remaining())?, payload_len)?;
         let mut pr = ByteReader::new(&payload);
         let flags = pr.section()?.to_vec();
         let reg_codes_raw = pr.section()?.to_vec();

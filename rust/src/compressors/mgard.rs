@@ -6,7 +6,7 @@ use super::format::{Header, Method};
 use super::{Compressor, Tolerance};
 use crate::decompose::{Decomposer, Decomposition, OptFlags};
 use crate::encode::varint::{write_section, write_u64, ByteReader};
-use crate::encode::{huffman_decode, huffman_encode, zstd_compress, zstd_decompress};
+use crate::encode::{huffman_decode, huffman_encode, lossless_compress, lossless_decompress};
 use crate::error::{Error, Result};
 use crate::grid::Hierarchy;
 use crate::quant::{dequantize, quantize, QuantStream, DEFAULT_C_LINF};
@@ -24,7 +24,7 @@ pub struct MgardConfig {
     pub c_linf: f64,
     /// Cap on decomposition depth (None = as deep as possible).
     pub max_levels: Option<usize>,
-    /// zstd level for the lossless stage.
+    /// Lossless-stage effort level (kept as `zstd_level` for config compatibility).
     pub zstd_level: i32,
 }
 
@@ -88,7 +88,7 @@ impl<T: Scalar> Compressor<T> for Mgard {
         write_u64(&mut payload, self.cfg.max_levels.map_or(0, |v| v as u64 + 1));
         write_section(&mut payload, &huffman_encode(&qs.symbols));
         write_section(&mut payload, &qs.escapes_to_bytes());
-        let compressed = zstd_compress(&payload, self.cfg.zstd_level)?;
+        let compressed = lossless_compress(&payload, self.cfg.zstd_level)?;
 
         let mut out = Vec::with_capacity(compressed.len() + 64);
         Header {
@@ -107,7 +107,7 @@ impl<T: Scalar> Compressor<T> for Mgard {
         let (header, mut r) = Header::read(bytes)?;
         header.expect::<T>(Method::Mgard)?;
         let payload_len = r.usize()?;
-        let payload = zstd_decompress(r.bytes(r.remaining())?, payload_len)?;
+        let payload = lossless_decompress(r.bytes(r.remaining())?, payload_len)?;
         let mut pr = ByteReader::new(&payload);
         let max_levels_enc = pr.usize()?;
         let max_levels = if max_levels_enc == 0 {

@@ -6,7 +6,7 @@
 //! against piecewise multilinear interpolation, and when Lorenzo wins the
 //! remaining coarse representation is handed to an *external* error-bounded
 //! compressor. Coefficients of level `l` are quantized with the κ-scaled
-//! tolerance `τ_l`, entropy-coded (Huffman) and zstd-compressed.
+//! tolerance `τ_l`, entropy-coded (Huffman) and LZ-compressed.
 //!
 //! The paper's future-work extension — swapping the external compressor for
 //! ZFP or the hybrid model (§6.3.2) — is implemented via
@@ -17,7 +17,7 @@ use super::{Compressor, Hybrid, Sz, Tolerance, Zfp};
 use crate::adaptive::estimate_predictors;
 use crate::decompose::{contiguous, Decomposer, Decomposition, OptFlags};
 use crate::encode::varint::{write_section, write_u64, ByteReader};
-use crate::encode::{huffman_decode, huffman_encode, zstd_compress, zstd_decompress};
+use crate::encode::{huffman_decode, huffman_encode, lossless_compress, lossless_decompress};
 use crate::error::{Error, Result};
 use crate::grid::Hierarchy;
 use crate::quant::{dequantize, kappa, level_tolerances, quantize, QuantStream, DEFAULT_C_LINF};
@@ -80,7 +80,7 @@ pub struct MgardPlusConfig {
     pub sample_stride: usize,
     /// Cap on decomposition depth.
     pub max_levels: Option<usize>,
-    /// zstd level of the lossless stage.
+    /// Lossless-stage effort level (kept as `zstd_level` for config compatibility).
     pub zstd_level: i32,
     /// Engine optimization flags (all on = MGARD+; exposed for ablations).
     pub flags: OptFlags,
@@ -131,6 +131,16 @@ impl MgardPlus {
         MgardPlus { cfg }
     }
 
+    /// Wrap into a block-parallel compressor (see [`crate::chunk`]): the
+    /// field is tiled by `cfg.block_shape` and each block runs the full
+    /// MGARD+ path on the worker pool, preserving the global L∞ bound.
+    pub fn chunked(
+        self,
+        cfg: crate::chunk::ChunkedConfig,
+    ) -> crate::chunk::ChunkedCompressor<Self> {
+        crate::chunk::ChunkedCompressor::new(self, cfg)
+    }
+
     /// Tolerance tiers for levels `l̃ ..= L` (index 0 = coarse).
     fn tiers(&self, levels: usize, d: usize, tau: f64) -> Vec<f64> {
         if self.cfg.levelwise {
@@ -159,7 +169,7 @@ fn finish_container<T: Scalar>(
     write_section(&mut payload, external_bytes);
     write_section(&mut payload, &huffman_encode(&qs.symbols));
     write_section(&mut payload, &qs.escapes_to_bytes());
-    let compressed = zstd_compress(&payload, cfg.zstd_level)?;
+    let compressed = lossless_compress(&payload, cfg.zstd_level)?;
 
     let mut out = Vec::with_capacity(compressed.len() + 64);
     Header {
@@ -261,7 +271,7 @@ impl<T: Scalar> Compressor<T> for MgardPlus {
         let (header, mut r) = Header::read(bytes)?;
         header.expect::<T>(Method::MgardPlus)?;
         let payload_len = r.usize()?;
-        let payload = zstd_decompress(r.bytes(r.remaining())?, payload_len)?;
+        let payload = lossless_decompress(r.bytes(r.remaining())?, payload_len)?;
         let mut pr = ByteReader::new(&payload);
         let stop = pr.usize()?;
         let max_levels_enc = pr.usize()?;

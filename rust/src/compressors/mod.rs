@@ -14,7 +14,7 @@ mod mgard_plus;
 mod sz;
 mod zfp;
 
-pub use format::{Header, Method};
+pub use format::{peek_method, Header, Method};
 pub use hybrid::{Hybrid, HybridConfig};
 pub use mgard::{Mgard, MgardConfig};
 pub use mgard_plus::{ExternalChoice, MgardPlus, MgardPlusConfig};
@@ -59,7 +59,8 @@ pub trait Compressor<T: Scalar> {
 }
 
 /// Decompress any container produced by any compressor in this crate,
-/// dispatching on the header's method tag.
+/// dispatching on the header's method tag (including chunked containers,
+/// whose blocks dispatch individually on their own headers).
 pub fn decompress_any<T: Scalar>(bytes: &[u8]) -> Result<Tensor<T>> {
     let method = format::peek_method(bytes)?;
     match method {
@@ -68,6 +69,7 @@ pub fn decompress_any<T: Scalar>(bytes: &[u8]) -> Result<Tensor<T>> {
         Method::Sz => Sz::default().decompress(bytes),
         Method::Zfp => Zfp::default().decompress(bytes),
         Method::Hybrid => Hybrid::default().decompress(bytes),
+        Method::Chunked => crate::chunk::decompress_any_chunked(bytes),
     }
 }
 

@@ -7,12 +7,12 @@
 //! and a block-local linear-regression predictor (coefficients fitted to the
 //! original data, quantized, and shipped); prediction residuals go through
 //! linear-scaling quantization with an unpredictable-literal escape, then
-//! canonical Huffman + zstd.
+//! canonical Huffman + the in-tree LZ codec.
 
 use super::format::{Header, Method};
 use super::{Compressor, Tolerance};
 use crate::encode::varint::{write_i64, write_section, write_u64, ByteReader};
-use crate::encode::{huffman_decode, huffman_encode, zstd_compress, zstd_decompress};
+use crate::encode::{huffman_decode, huffman_encode, lossless_compress, lossless_decompress};
 use crate::error::{Error, Result};
 use crate::tensor::{strides_for, Scalar, Tensor};
 
@@ -23,7 +23,7 @@ pub struct SzConfig {
     pub block_edge: usize,
     /// Quantization radius: codes live in `[-radius+1, radius-1]`.
     pub radius: i64,
-    /// zstd level of the final lossless stage.
+    /// Lossless-stage effort level (kept as `zstd_level` for config compatibility).
     pub zstd_level: i32,
 }
 
@@ -275,7 +275,7 @@ impl<T: Scalar> Compressor<T> for Sz {
         write_section(&mut payload, &reg_codes);
         write_section(&mut payload, &huffman_encode(&symbols));
         write_section(&mut payload, &literals);
-        let compressed = zstd_compress(&payload, self.cfg.zstd_level)?;
+        let compressed = lossless_compress(&payload, self.cfg.zstd_level)?;
 
         let mut out = Vec::with_capacity(compressed.len() + 64);
         Header {
@@ -299,7 +299,7 @@ impl<T: Scalar> Compressor<T> for Sz {
         let strides = strides_for(&shape);
         let n: usize = shape.iter().product();
         let payload_len = r.usize()?;
-        let payload = zstd_decompress(r.bytes(r.remaining())?, payload_len)?;
+        let payload = lossless_decompress(r.bytes(r.remaining())?, payload_len)?;
         let mut pr = ByteReader::new(&payload);
         let flags = pr.section()?.to_vec();
         let reg_codes_raw = pr.section()?.to_vec();

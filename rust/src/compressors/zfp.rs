@@ -11,7 +11,7 @@
 use super::format::{Header, Method};
 use super::{Compressor, Tolerance};
 use crate::encode::{BitReader, BitWriter};
-use crate::encode::{zstd_compress, zstd_decompress};
+use crate::encode::{lossless_compress, lossless_decompress};
 use crate::encode::varint::write_u64;
 use crate::error::{Error, Result};
 use crate::tensor::{strides_for, Scalar, Tensor};
@@ -19,7 +19,7 @@ use crate::tensor::{strides_for, Scalar, Tensor};
 /// ZFP configuration.
 #[derive(Clone, Copy, Debug)]
 pub struct ZfpConfig {
-    /// zstd level applied to the bitstream (zfp itself doesn't, but the
+    /// Lossless effort level applied to the bitstream (zfp itself skips this, but the
     /// paper's pipelines all end in a lossless stage; level 1 keeps the
     /// throughput character).
     pub zstd_level: i32,
@@ -389,7 +389,7 @@ impl<T: Scalar> Compressor<T> for Zfp {
         }
 
         let payload = w.finish();
-        let compressed = zstd_compress(&payload, self.cfg.zstd_level)?;
+        let compressed = lossless_compress(&payload, self.cfg.zstd_level)?;
         let mut out = Vec::with_capacity(compressed.len() + 64);
         Header {
             method: Method::Zfp,
@@ -413,7 +413,7 @@ impl<T: Scalar> Compressor<T> for Zfp {
         let prec = intprec::<T>();
 
         let payload_len = r.usize()?;
-        let payload = zstd_decompress(r.bytes(r.remaining())?, payload_len)?;
+        let payload = lossless_decompress(r.bytes(r.remaining())?, payload_len)?;
         let mut br = BitReader::new(&payload);
 
         let n: usize = shape.iter().product();

@@ -104,10 +104,11 @@ USAGE: mgardp <command> [--flag value ...]
 
 COMMANDS:
   compress    --input F --shape ZxYxX --output F [--method mgard+|mgard|sz|zfp|hybrid] [--rel R | --abs A]
+              [--block-shape BxBxB --threads N]  (chunked parallel path; threads 0 = all cores)
   decompress  --input F --output F
   info        --input F
   synth       --out DIR [--dataset all|hurricane|nyx|scale|qmcpack] [--scale S] [--seed N]
-  pipeline    --config FILE  (sections: [pipeline] workers/method/rel_tol/verify, [data] scale/seed)
+  pipeline    --config FILE  (sections: [pipeline] workers/method/rel_tol/verify/block_shape/threads, [data] scale/seed)
   refactor    --input F --shape ZxYxX --store DIR --field NAME
   reconstruct --store DIR --field NAME --level L --output F
   analyze     --input F --shape ZxYxX --iso V  (iso-surface area)
@@ -140,7 +141,14 @@ fn cmd_compress(args: &Args) -> Result<()> {
     let method = args.opt("method").unwrap_or("mgard+");
     let tol = tolerance_from(args)?;
     let data: Tensor<f32> = io::read_raw(&input, &shape)?;
-    let compressor = pipeline::make_compressor(method)?;
+    let compressor = match args.opt("block-shape") {
+        Some(bs) => {
+            let block_shape = parse_shape(bs)?;
+            let threads = args.usize_or("threads", 0)?;
+            pipeline::make_chunked_compressor(method, &block_shape, threads)?
+        }
+        None => pipeline::make_compressor(method)?,
+    };
     let t0 = std::time::Instant::now();
     let bytes = compressor.compress(&data, tol)?;
     let secs = t0.elapsed().as_secs_f64();
@@ -210,12 +218,22 @@ fn cmd_synth(args: &Args) -> Result<()> {
 
 fn cmd_pipeline(args: &Args) -> Result<()> {
     let cfg = Config::load(Path::new(args.req("config")?))?;
+    let block_shape = {
+        let s = cfg.str_or("pipeline", "block_shape", "");
+        if s.is_empty() {
+            None
+        } else {
+            Some(parse_shape(&s)?)
+        }
+    };
     let pcfg = PipelineConfig {
         workers: cfg.int_or("pipeline", "workers", 1) as usize,
         queue_depth: cfg.int_or("pipeline", "queue_depth", 4) as usize,
         method: cfg.str_or("pipeline", "method", "mgard+"),
         tolerance: Tolerance::Rel(cfg.float_or("pipeline", "rel_tol", 1e-3)),
         verify: cfg.bool_or("pipeline", "verify", true),
+        block_shape,
+        threads: cfg.int_or("pipeline", "threads", 1) as usize,
     };
     let scale = cfg.float_or("data", "scale", 0.5);
     let seed = cfg.int_or("data", "seed", 42) as u64;

@@ -2,7 +2,7 @@
 //!
 //! A refactored field is the multilevel decomposition written as
 //! *independently retrievable* components: the coarse representation plus
-//! one file per level's coefficient stream (zstd-compressed). A consumer
+//! one file per level's coefficient stream (LZ-compressed). A consumer
 //! reads only `coarse + levels ≤ l` to reconstruct `Q_l u` — the
 //! reduced-size, reduced-cost representation the iso-surface experiment
 //! analyzes — and can later fetch more components to refine it, up to exact
@@ -10,7 +10,7 @@
 
 use crate::decompose::{Decomposer, Decomposition, OptFlags};
 use crate::encode::varint::{write_u64, ByteReader};
-use crate::encode::{zstd_compress, zstd_decompress};
+use crate::encode::{lossless_compress, lossless_decompress};
 use crate::error::{Error, Result};
 use crate::grid::Hierarchy;
 use crate::tensor::{Scalar, Tensor};
@@ -117,7 +117,7 @@ impl RefactorStore {
         fs::create_dir_all(&dir)?;
         let mut component_bytes = Vec::new();
         // component 0: coarse representation
-        let coarse_z = zstd_compress(&dec.coarse.to_le_bytes(), zstd_level)?;
+        let coarse_z = lossless_compress(&dec.coarse.to_le_bytes(), zstd_level)?;
         fs::write(dir.join("coarse.bin"), &coarse_z)?;
         component_bytes.push(coarse_z.len() as u64);
         // components 1..: per-level coefficient streams
@@ -126,7 +126,7 @@ impl RefactorStore {
             for &v in stream {
                 v.write_le(&mut raw);
             }
-            let z = zstd_compress(&raw, zstd_level)?;
+            let z = lossless_compress(&raw, zstd_level)?;
             fs::write(dir.join(format!("level_{}.bin", dec.coeff_level(k))), &z)?;
             component_bytes.push(z.len() as u64);
         }
@@ -164,7 +164,7 @@ impl RefactorStore {
         let hierarchy = Hierarchy::new(&m.shape, None)?;
         let dir = self.field_dir(field);
         let coarse_shape = hierarchy.level_shape(m.start_level);
-        let coarse_raw = zstd_decompress(
+        let coarse_raw = lossless_decompress(
             &fs::read(dir.join("coarse.bin"))?,
             crate::tensor::numel(&coarse_shape) * T::BYTES,
         )?;
@@ -172,7 +172,7 @@ impl RefactorStore {
         let mut coeffs = Vec::new();
         for l in (m.start_level + 1)..=level {
             let n = hierarchy.num_coeff_nodes(l);
-            let raw = zstd_decompress(
+            let raw = lossless_decompress(
                 &fs::read(dir.join(format!("level_{l}.bin")))?,
                 n * T::BYTES,
             )?;
@@ -231,7 +231,8 @@ mod tests {
     use crate::metrics::linf_error;
 
     fn temp_store(tag: &str) -> RefactorStore {
-        let dir = std::env::temp_dir().join(format!("mgardp_refactor_{tag}_{}", std::process::id()));
+        let dir =
+            std::env::temp_dir().join(format!("mgardp_refactor_{tag}_{}", std::process::id()));
         let _ = fs::remove_dir_all(&dir);
         RefactorStore::create(dir).unwrap()
     }

@@ -115,17 +115,16 @@ mod tests {
     #[test]
     fn thread_safe() {
         let r = std::sync::Arc::new(Registry::new());
-        crossbeam_utils::thread::scope(|s| {
+        std::thread::scope(|s| {
             for _ in 0..4 {
                 let r = r.clone();
-                s.spawn(move |_| {
+                s.spawn(move || {
                     for _ in 0..1000 {
                         r.count("n", 1);
                     }
                 });
             }
-        })
-        .unwrap();
+        });
         assert_eq!(r.counter("n"), 4000);
     }
 }

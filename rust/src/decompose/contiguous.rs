@@ -294,7 +294,8 @@ fn load_sweep<T: Scalar>(
             let dst = &mut out[o * nc * inner..(o + 1) * nc * inner];
             // i = 0: wb*c0 + wm*c1 + wo*c2
             {
-                let (r0, r1, r2) = (&src[0..inner], &src[inner..2 * inner], &src[2 * inner..3 * inner]);
+                let (r0, r1, r2) =
+                    (&src[0..inner], &src[inner..2 * inner], &src[2 * inner..3 * inner]);
                 let d0 = &mut dst[0..inner];
                 for j in 0..inner {
                     d0[j] = wb * r0[j] + wm * r1[j] + wo * r2[j];

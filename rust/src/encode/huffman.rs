@@ -5,7 +5,7 @@
 //! code lengths are computed from a heap-built tree (with iterative frequency
 //! flattening if the depth exceeds the 32-bit decoding limit), codes are
 //! assigned canonically, and the header stores only the length table, which
-//! the downstream zstd pass squeezes further.
+//! the downstream LZ pass squeezes further.
 
 use super::bitstream::{BitReader, BitWriter};
 use super::varint::{write_section, write_u64, ByteReader};

@@ -1,23 +1,186 @@
-//! Final lossless stage (zstd), shared by every compressor in the stack.
+//! Final lossless stage, shared by every compressor in the stack.
+//!
+//! The offline vendor set has no zstd, so this is a self-contained
+//! byte-oriented LZ codec (LZ4-style token format: 4-bit literal/match
+//! nibbles with 255-extension bytes, 16-bit match offsets, greedy
+//! hash-table matching). It fills the same role as the paper's "lossless
+//! encoder" (§4.1 / Alg. 1 line 23): squeezing the entropy-coded symbol
+//! stream and the raw headers.
+//!
+//! Container layout: magic `MLZ1`, varint raw length, then LZ sequences.
+//! Every read is bounds-checked so corrupted or truncated containers return
+//! `Err` (fuzzed by `property_suite::corrupt_containers_never_panic` and
+//! `format_fuzz`).
 
+use crate::encode::varint::{write_u64, ByteReader};
 use crate::error::{Error, Result};
 
-/// Default zstd level: 3 balances ratio and the throughput targets of Fig. 8.
+/// Default effort level (kept for API compatibility with the zstd-backed
+/// build; the in-tree codec has a single effort setting).
 pub const DEFAULT_LEVEL: i32 = 3;
 
-/// zstd-compress a byte buffer.
-pub fn zstd_compress(data: &[u8], level: i32) -> Result<Vec<u8>> {
-    zstd::bulk::compress(data, level).map_err(|e| Error::Lossless(e.to_string()))
+const MAGIC: &[u8; 4] = b"MLZ1";
+const MIN_MATCH: usize = 4;
+const MAX_TABLE_BITS: u32 = 16;
+const MIN_TABLE_BITS: u32 = 8;
+const MAX_OFFSET: usize = u16::MAX as usize;
+
+/// Hash-table size for an input of `n` bytes: roughly one slot per input
+/// position, clamped to [2^8, 2^16] slots so small per-block payloads (the
+/// chunked pipeline compresses many of them) don't pay a fixed 512 KiB
+/// alloc+memset per call.
+fn table_bits_for(n: usize) -> u32 {
+    let bits = usize::BITS - n.max(1).leading_zeros();
+    bits.clamp(MIN_TABLE_BITS, MAX_TABLE_BITS)
 }
 
-/// zstd-decompress; `capacity_hint` bounds the output allocation.
+#[inline]
+fn hash4(v: u32, bits: u32) -> usize {
+    (v.wrapping_mul(2654435761) >> (32 - bits)) as usize
+}
+
+#[inline]
+fn read_u32_le(src: &[u8], i: usize) -> u32 {
+    u32::from_le_bytes([src[i], src[i + 1], src[i + 2], src[i + 3]])
+}
+
+/// Append an LZ4-style length extension: extra bytes summed onto the nibble,
+/// terminated by the first byte < 255.
+fn write_len_ext(out: &mut Vec<u8>, mut rem: usize) {
+    while rem >= 255 {
+        out.push(255);
+        rem -= 255;
+    }
+    out.push(rem as u8);
+}
+
+fn read_len_ext(r: &mut ByteReader<'_>) -> Result<usize> {
+    let mut len = 0usize;
+    loop {
+        let b = r.u8()?;
+        len += b as usize;
+        if b < 255 {
+            return Ok(len);
+        }
+        if len > (4 << 30) {
+            return Err(Error::corrupt("lossless length extension overflow"));
+        }
+    }
+}
+
+/// Emit one sequence: literals, then a match of `mlen >= MIN_MATCH` bytes at
+/// `offset` back. `offset == 0` means a final literals-only sequence.
+fn emit_sequence(out: &mut Vec<u8>, literals: &[u8], offset: u16, mlen: usize) {
+    let lit = literals.len();
+    let m = if offset == 0 { 0 } else { mlen - MIN_MATCH };
+    let token = ((lit.min(15) << 4) as u8) | (m.min(15) as u8);
+    out.push(token);
+    if lit >= 15 {
+        write_len_ext(out, lit - 15);
+    }
+    out.extend_from_slice(literals);
+    if offset != 0 {
+        out.extend_from_slice(&offset.to_le_bytes());
+        if m >= 15 {
+            write_len_ext(out, m - 15);
+        }
+    }
+}
+
+/// Compress a byte buffer. `_level` is accepted for API stability; the
+/// in-tree codec runs a single (greedy) effort setting.
+pub fn lossless_compress(data: &[u8], _level: i32) -> Result<Vec<u8>> {
+    let n = data.len();
+    let mut out = Vec::with_capacity(n / 2 + 16);
+    out.extend_from_slice(MAGIC);
+    write_u64(&mut out, n as u64);
+    if n == 0 {
+        return Ok(out);
+    }
+    let bits = table_bits_for(n);
+    let mut table = vec![usize::MAX; 1 << bits];
+    let mut i = 0usize;
+    let mut anchor = 0usize;
+    while i + MIN_MATCH <= n {
+        let cur = read_u32_le(data, i);
+        let h = hash4(cur, bits);
+        let cand = table[h];
+        table[h] = i;
+        if cand != usize::MAX && i - cand <= MAX_OFFSET && read_u32_le(data, cand) == cur {
+            let mut mlen = MIN_MATCH;
+            while i + mlen < n && data[cand + mlen] == data[i + mlen] {
+                mlen += 1;
+            }
+            emit_sequence(&mut out, &data[anchor..i], (i - cand) as u16, mlen);
+            i += mlen;
+            anchor = i;
+        } else {
+            i += 1;
+        }
+    }
+    if anchor < n {
+        emit_sequence(&mut out, &data[anchor..n], 0, 0);
+    }
+    Ok(out)
+}
+
+/// Decompress; `capacity_hint` bounds the output allocation.
 ///
 /// The hint is clamped to 4 GiB so a corrupted length field in a container
 /// cannot trigger an arbitrary-size allocation (fuzzed by
 /// `property_suite::corrupt_containers_never_panic`).
-pub fn zstd_decompress(data: &[u8], capacity_hint: usize) -> Result<Vec<u8>> {
-    let capacity = capacity_hint.min(4 << 30);
-    zstd::bulk::decompress(data, capacity).map_err(|e| Error::Lossless(e.to_string()))
+pub fn lossless_decompress(data: &[u8], capacity_hint: usize) -> Result<Vec<u8>> {
+    let mut r = ByteReader::new(data);
+    if r.bytes(4)? != MAGIC {
+        return Err(Error::Lossless("bad lossless magic".into()));
+    }
+    let raw_len = r.usize()?;
+    if raw_len > capacity_hint.min(4 << 30) {
+        return Err(Error::Lossless(format!(
+            "declared size {raw_len} exceeds expected {capacity_hint}"
+        )));
+    }
+    let mut out: Vec<u8> = Vec::with_capacity(raw_len);
+    while out.len() < raw_len {
+        let token = r.u8()?;
+        let mut lit = (token >> 4) as usize;
+        if lit == 15 {
+            lit += read_len_ext(&mut r)?;
+        }
+        if lit > 0 {
+            if out.len() + lit > raw_len {
+                return Err(Error::Lossless("literal run overruns output".into()));
+            }
+            out.extend_from_slice(r.bytes(lit)?);
+        }
+        if out.len() == raw_len {
+            break; // final literals-only sequence
+        }
+        let off_bytes = r.bytes(2)?;
+        let offset = u16::from_le_bytes([off_bytes[0], off_bytes[1]]) as usize;
+        if offset == 0 || offset > out.len() {
+            return Err(Error::Lossless(format!("match offset {offset} out of window")));
+        }
+        let mut mlen = (token & 0x0F) as usize;
+        if mlen == 15 {
+            mlen += read_len_ext(&mut r)?;
+        }
+        mlen += MIN_MATCH;
+        if out.len() + mlen > raw_len {
+            return Err(Error::Lossless("match run overruns output".into()));
+        }
+        let start = out.len() - offset;
+        // byte-wise copy: overlapping matches (offset < mlen) replicate, as
+        // in every LZ77 family codec
+        for k in 0..mlen {
+            let b = out[start + k];
+            out.push(b);
+        }
+    }
+    if out.len() != raw_len {
+        return Err(Error::Lossless("truncated lossless stream".into()));
+    }
+    Ok(out)
 }
 
 #[cfg(test)]
@@ -27,21 +190,69 @@ mod tests {
     #[test]
     fn round_trip() {
         let data: Vec<u8> = (0..10_000).map(|i| ((i / 64) % 251) as u8).collect();
-        let c = zstd_compress(&data, DEFAULT_LEVEL).unwrap();
+        let c = lossless_compress(&data, DEFAULT_LEVEL).unwrap();
         assert!(c.len() < data.len());
-        let d = zstd_decompress(&c, data.len()).unwrap();
+        let d = lossless_decompress(&c, data.len()).unwrap();
         assert_eq!(d, data);
     }
 
     #[test]
     fn empty_input() {
-        let c = zstd_compress(&[], DEFAULT_LEVEL).unwrap();
-        let d = zstd_decompress(&c, 0).unwrap();
+        let c = lossless_compress(&[], DEFAULT_LEVEL).unwrap();
+        let d = lossless_decompress(&c, 0).unwrap();
         assert!(d.is_empty());
     }
 
     #[test]
     fn garbage_rejected() {
-        assert!(zstd_decompress(&[1, 2, 3, 4], 100).is_err());
+        assert!(lossless_decompress(&[1, 2, 3, 4], 100).is_err());
+    }
+
+    #[test]
+    fn incompressible_input_survives() {
+        // pseudo-random bytes: no matches, pure literal passthrough
+        let mut x = 0x12345678u32;
+        let data: Vec<u8> = (0..4096)
+            .map(|_| {
+                x ^= x << 13;
+                x ^= x >> 17;
+                x ^= x << 5;
+                (x & 0xFF) as u8
+            })
+            .collect();
+        let c = lossless_compress(&data, DEFAULT_LEVEL).unwrap();
+        let d = lossless_decompress(&c, data.len()).unwrap();
+        assert_eq!(d, data);
+    }
+
+    #[test]
+    fn overlapping_match_replicates() {
+        // long run: matches overlap their own output (offset 1)
+        let data = vec![7u8; 5000];
+        let c = lossless_compress(&data, DEFAULT_LEVEL).unwrap();
+        assert!(c.len() < 100, "run-length input should collapse, got {}", c.len());
+        let d = lossless_decompress(&c, data.len()).unwrap();
+        assert_eq!(d, data);
+    }
+
+    #[test]
+    fn truncations_and_flips_never_panic() {
+        let data: Vec<u8> = (0..2000).map(|i| (i % 97) as u8).collect();
+        let c = lossless_compress(&data, DEFAULT_LEVEL).unwrap();
+        for cut in [0, 1, 4, 5, c.len() / 2, c.len() - 1] {
+            let _ = lossless_decompress(&c[..cut], data.len());
+        }
+        for pos in 0..c.len().min(64) {
+            let mut bad = c.clone();
+            bad[pos] ^= 0x40;
+            let _ = lossless_decompress(&bad, data.len());
+        }
+    }
+
+    #[test]
+    fn wrong_capacity_hint_rejected() {
+        let data = vec![1u8; 100];
+        let c = lossless_compress(&data, DEFAULT_LEVEL).unwrap();
+        assert!(lossless_decompress(&c, 10).is_err());
     }
 }

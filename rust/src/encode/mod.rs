@@ -1,7 +1,7 @@
 //! Entropy coding and lossless back-end.
 //!
 //! The quantized multilevel coefficients are entropy-coded with a canonical
-//! Huffman coder and then passed through zstd (the same pipeline SZ uses and
+//! Huffman coder and then passed through the in-tree LZ codec (the same pipeline shape SZ uses and
 //! the paper's "lossless encoder", §4.1 / Alg. 1 line 23).
 
 pub mod bitstream;
@@ -11,7 +11,7 @@ pub mod varint;
 
 pub use bitstream::{BitReader, BitWriter};
 pub use huffman::{huffman_decode, huffman_encode};
-pub use lossless::{zstd_compress, zstd_decompress};
+pub use lossless::{lossless_compress, lossless_decompress};
 pub use varint::{
     read_i64, read_u64, write_i64, write_u64, ByteReader,
 };

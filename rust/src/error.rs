@@ -1,47 +1,68 @@
 //! Crate-wide error type.
 //!
-//! Library code returns [`Error`]; binaries wrap it in `anyhow` at the edge.
-
-use thiserror::Error;
+//! Hand-implemented `Display`/`Error` (the offline vendor set has no
+//! `thiserror`); binaries print the message at the edge.
 
 /// Unified error type for the mgardp library.
-#[derive(Error, Debug)]
+#[derive(Debug)]
 pub enum Error {
     /// Shape/dimension mismatch between tensors or against a grid hierarchy.
-    #[error("shape mismatch: {0}")]
     ShapeMismatch(String),
 
     /// An argument was outside its legal domain.
-    #[error("invalid argument: {0}")]
     InvalidArgument(String),
 
     /// The compressed byte stream is malformed or truncated.
-    #[error("corrupt stream: {0}")]
     CorruptStream(String),
 
     /// The stream was produced by an incompatible format version.
-    #[error("unsupported format: {0}")]
     UnsupportedFormat(String),
 
-    /// Errors raised by the lossless backend (zstd).
-    #[error("lossless codec: {0}")]
+    /// Errors raised by the lossless backend.
     Lossless(String),
 
     /// I/O errors from dataset loading / artifact handling.
-    #[error("io: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
 
     /// Errors from the XLA/PJRT runtime backend.
-    #[error("xla runtime: {0}")]
     Xla(String),
 
     /// Configuration file / CLI parse errors.
-    #[error("config: {0}")]
     Config(String),
 
     /// A worker in the coordinator pipeline panicked or failed.
-    #[error("pipeline: {0}")]
     Pipeline(String),
+}
+
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Error::ShapeMismatch(m) => write!(f, "shape mismatch: {m}"),
+            Error::InvalidArgument(m) => write!(f, "invalid argument: {m}"),
+            Error::CorruptStream(m) => write!(f, "corrupt stream: {m}"),
+            Error::UnsupportedFormat(m) => write!(f, "unsupported format: {m}"),
+            Error::Lossless(m) => write!(f, "lossless codec: {m}"),
+            Error::Io(e) => write!(f, "io: {e}"),
+            Error::Xla(m) => write!(f, "xla runtime: {m}"),
+            Error::Config(m) => write!(f, "config: {m}"),
+            Error::Pipeline(m) => write!(f, "pipeline: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
 }
 
 /// Crate-wide result alias.
@@ -61,5 +82,26 @@ impl Error {
     /// Helper to build a [`Error::CorruptStream`].
     pub fn corrupt(msg: impl std::fmt::Display) -> Self {
         Error::CorruptStream(msg.to_string())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_includes_category_and_message() {
+        assert_eq!(Error::shape("a != b").to_string(), "shape mismatch: a != b");
+        assert_eq!(
+            Error::corrupt("short read").to_string(),
+            "corrupt stream: short read"
+        );
+    }
+
+    #[test]
+    fn io_errors_convert() {
+        let e: Error = std::io::Error::new(std::io::ErrorKind::NotFound, "gone").into();
+        assert!(e.to_string().contains("gone"));
+        assert!(std::error::Error::source(&e).is_some());
     }
 }

@@ -23,6 +23,7 @@
 pub mod adaptive;
 pub mod analysis;
 pub mod bench_util;
+pub mod chunk;
 pub mod compressors;
 pub mod coordinator;
 pub mod data;

@@ -15,9 +15,16 @@ mod backend;
 mod pjrt;
 
 pub use backend::XlaLevelStep;
-pub use pjrt::{XlaExecutable, XlaRuntime};
+pub use pjrt::{XlaExecutable, XlaRuntime, PJRT_ENV};
 
 use std::path::PathBuf;
+
+/// Whether this build can run XLA artifacts at all. Integration tests and
+/// examples check this (plus artifact presence) and skip cleanly when false,
+/// so a missing PJRT toolchain never fails tier-1.
+pub fn pjrt_available() -> bool {
+    XlaRuntime::available()
+}
 
 /// Default artifacts directory (relative to the crate root / cwd).
 pub fn artifacts_dir() -> PathBuf {

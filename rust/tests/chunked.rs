@@ -1,0 +1,147 @@
+//! The chunked parallel pipeline's contract: block-parallel compression is
+//! transparent — same error bound as the unchunked path (including across
+//! block seams), bit-exact on single-block inputs, correct on remainder
+//! block shapes, and deterministic under any thread count.
+
+use mgardp::chunk::{partition, ChunkedCompressor, ChunkedConfig};
+use mgardp::compressors::{decompress_any, Compressor, MgardPlus, Tolerance};
+use mgardp::data::synth;
+use mgardp::metrics::linf_error;
+use mgardp::tensor::Tensor;
+
+fn chunked(block: &[usize], threads: usize) -> ChunkedCompressor<MgardPlus> {
+    MgardPlus::default().chunked(ChunkedConfig {
+        block_shape: block.to_vec(),
+        threads,
+    })
+}
+
+#[test]
+fn single_block_bit_exact_vs_unchunked() {
+    // a field smaller than the block shape is one block compressed at the
+    // same absolute tolerance the unchunked path resolves, so the two
+    // reconstructions must agree bit for bit
+    let t = synth::smooth_test_field(&[14, 15, 16]);
+    let tol = Tolerance::Rel(1e-3);
+    let unchunked = MgardPlus::default();
+    let plain: Tensor<f32> = unchunked.decompress(&unchunked.compress(&t, tol).unwrap()).unwrap();
+    let codec = chunked(&[64], 2);
+    let blocked: Tensor<f32> = codec.decompress(&codec.compress(&t, tol).unwrap()).unwrap();
+    assert_eq!(plain.shape(), blocked.shape());
+    assert_eq!(plain.data(), blocked.data(), "single-block output must be bit-exact");
+}
+
+#[test]
+fn linf_bound_holds_across_block_seams() {
+    // a field with structure crossing every seam of a 16³ tiling
+    let t = Tensor::<f32>::from_fn(&[33, 33, 33], |ix| {
+        ((ix[0] as f32) * 0.37).sin()
+            + ((ix[1] as f32) * 0.23).cos() * ((ix[2] as f32) * 0.31).sin()
+    });
+    for rel in [1e-1, 1e-2, 1e-3, 1e-4] {
+        let tau = rel * t.value_range();
+        let codec = chunked(&[16], 4);
+        let bytes = codec.compress(&t, Tolerance::Rel(rel)).unwrap();
+        let back: Tensor<f32> = codec.decompress(&bytes).unwrap();
+        let err = linf_error(t.data(), back.data());
+        assert!(
+            err <= tau * (1.0 + 1e-6),
+            "rel {rel}: chunked L∞ {err} > τ {tau}"
+        );
+    }
+}
+
+#[test]
+fn remainder_block_shapes() {
+    // 17×33×65 with 16³ blocks exercises merged (17), merged-tail (16+17)
+    // and multi-block (16+16+16+17) dimensions in one field
+    let t = synth::smooth_test_field(&[17, 33, 65]);
+    let blocks = partition(&[17, 33, 65], &[16, 16, 16]).unwrap();
+    assert_eq!(blocks.len(), 8); // 1 × 2 × 4 blocks along the three dims
+    let codec = chunked(&[16], 4);
+    let bytes = codec.compress(&t, Tolerance::Rel(1e-3)).unwrap();
+    let back: Tensor<f32> = codec.decompress(&bytes).unwrap();
+    assert_eq!(back.shape(), &[17, 33, 65]);
+    let tau = 1e-3 * t.value_range();
+    assert!(linf_error(t.data(), back.data()) <= tau * (1.0 + 1e-6));
+}
+
+#[test]
+fn thread_counts_agree_bitwise() {
+    // the container must be a pure function of (data, tolerance, blocks):
+    // worker scheduling may not leak into the output
+    let t = synth::smooth_test_field(&[25, 26, 27]);
+    let reference = chunked(&[12], 1).compress(&t, Tolerance::Rel(1e-3)).unwrap();
+    for threads in [2, 8] {
+        let bytes = chunked(&[12], threads)
+            .compress(&t, Tolerance::Rel(1e-3))
+            .unwrap();
+        assert_eq!(bytes, reference, "{threads} threads changed the container");
+        let back: Tensor<f32> = chunked(&[12], threads).decompress(&bytes).unwrap();
+        let tau = 1e-3 * t.value_range();
+        assert!(linf_error(t.data(), back.data()) <= tau * (1.0 + 1e-6));
+    }
+}
+
+#[test]
+fn concurrency_smoke_many_rounds() {
+    // hammer the pool a little: repeated compress/decompress at 8 threads
+    // over a block grid larger than the thread count
+    let t = synth::smooth_test_field(&[40, 40, 40]);
+    let codec = chunked(&[8], 8);
+    let tau = 1e-2 * t.value_range();
+    for _ in 0..3 {
+        let bytes = codec.compress(&t, Tolerance::Rel(1e-2)).unwrap();
+        let back: Tensor<f32> = codec.decompress(&bytes).unwrap();
+        assert!(linf_error(t.data(), back.data()) <= tau * (1.0 + 1e-6));
+    }
+}
+
+#[test]
+fn dispatches_through_decompress_any() {
+    let t = synth::smooth_test_field(&[20, 24]);
+    let bytes = chunked(&[10, 12], 2).compress(&t, Tolerance::Rel(1e-3)).unwrap();
+    let back: Tensor<f32> = decompress_any(&bytes).unwrap();
+    let tau = 1e-3 * t.value_range();
+    assert!(linf_error(t.data(), back.data()) <= tau * (1.0 + 1e-6));
+}
+
+#[test]
+fn f64_and_other_inner_codecs() {
+    let t = Tensor::<f64>::from_fn(&[19, 21], |ix| {
+        ((ix[0] as f64) * 0.4).sin() * ((ix[1] as f64) * 0.3).cos()
+    });
+    let codec = ChunkedCompressor::new(
+        MgardPlus::default(),
+        ChunkedConfig {
+            block_shape: vec![8],
+            threads: 2,
+        },
+    );
+    let bytes = codec.compress(&t, Tolerance::Abs(1e-6)).unwrap();
+    let back: Tensor<f64> = codec.decompress(&bytes).unwrap();
+    assert!(linf_error(t.data(), back.data()) <= 1e-6);
+
+    let t32 = synth::smooth_test_field(&[18, 18]);
+    let zfp = ChunkedCompressor::new(
+        mgardp::compressors::Zfp::default(),
+        ChunkedConfig {
+            block_shape: vec![9],
+            threads: 2,
+        },
+    );
+    let bytes = zfp.compress(&t32, Tolerance::Rel(1e-3)).unwrap();
+    let back: Tensor<f32> = zfp.decompress(&bytes).unwrap();
+    let tau = 1e-3 * t32.value_range();
+    assert!(linf_error(t32.data(), back.data()) <= tau * (1.0 + 1e-6));
+}
+
+#[test]
+fn constant_field_and_tiny_blocks() {
+    let t = Tensor::<f32>::from_fn(&[10, 10, 10], |_| 2.5);
+    let codec = chunked(&[4], 2);
+    let bytes = codec.compress(&t, Tolerance::Rel(1e-3)).unwrap();
+    let back: Tensor<f32> = codec.decompress(&bytes).unwrap();
+    // degenerate range: Tolerance::Rel falls back to unit range
+    assert!(linf_error(t.data(), back.data()) <= 1e-3);
+}

@@ -1,0 +1,157 @@
+//! Engine-equivalence suite: `decompose::baseline` (the original §2 method)
+//! and `decompose::contiguous` (the §5-optimized engine) implement the same
+//! transform, so their decompositions must agree to FP rounding across
+//! every `OptFlags` ablation combination and across odd/even/1-d/2-d/3-d
+//! shapes — and their outputs must be interchangeable at recompose time.
+
+use mgardp::data::rng::Rng;
+use mgardp::decompose::{Decomposer, OptFlags};
+use mgardp::grid::Hierarchy;
+use mgardp::metrics::{linf_error, value_range};
+use mgardp::tensor::Tensor;
+
+/// Every legal flag combination, baseline first (the Fig. 6 series plus the
+/// non-cumulative DR+IVER variant).
+fn all_flag_combos() -> Vec<OptFlags> {
+    let mut combos = vec![
+        OptFlags::baseline(),
+        OptFlags::dr(),
+        OptFlags::dr_dlvc(),
+        OptFlags::dr_dlvc_bcc(),
+        OptFlags::all(),
+    ];
+    combos.push(OptFlags {
+        reorder: true,
+        direct_load: false,
+        batched: false,
+        reuse: true,
+    });
+    combos.push(OptFlags {
+        reorder: true,
+        direct_load: true,
+        batched: false,
+        reuse: true,
+    });
+    combos
+}
+
+/// Shapes covering 1-d/2-d/3-d, odd and even extents, dyadic and non-dyadic.
+fn shapes() -> Vec<Vec<usize>> {
+    vec![
+        vec![17],
+        vec![16],
+        vec![33],
+        vec![9, 9],
+        vec![8, 8],
+        vec![17, 9],
+        vec![12, 10],
+        vec![9, 9, 9],
+        vec![8, 12, 10],
+        vec![5, 9, 17],
+        vec![7, 7, 7],
+    ]
+}
+
+fn rand_tensor(shape: &[usize], seed: u64) -> Tensor<f64> {
+    let mut rng = Rng::new(seed);
+    Tensor::from_fn(shape, |_| rng.uniform_in(-1.0, 1.0))
+}
+
+#[test]
+fn all_flag_combos_agree_on_all_shapes() {
+    for (si, shape) in shapes().iter().enumerate() {
+        let u = rand_tensor(shape, 1000 + si as u64);
+        let h = Hierarchy::new(shape, None).unwrap();
+        let scale = value_range(u.data()).max(1.0);
+        let reference = Decomposer::new(h.clone(), OptFlags::baseline())
+            .unwrap()
+            .decompose(&u)
+            .unwrap();
+        for flags in all_flag_combos() {
+            let dec = Decomposer::new(h.clone(), flags).unwrap().decompose(&u).unwrap();
+            assert_eq!(
+                dec.coeffs.len(),
+                reference.coeffs.len(),
+                "{shape:?} {flags:?}: level count"
+            );
+            let cerr = linf_error(dec.coarse.data(), reference.coarse.data());
+            assert!(
+                cerr < 1e-9 * scale,
+                "{shape:?} {flags:?}: coarse differs by {cerr}"
+            );
+            for (l, (a, b)) in dec.coeffs.iter().zip(&reference.coeffs).enumerate() {
+                let serr = linf_error(a, b);
+                assert!(
+                    serr < 1e-9 * scale,
+                    "{shape:?} {flags:?}: stream {l} differs by {serr}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn cross_engine_recompose_round_trips() {
+    // decompose with engine A, recompose with engine B: every pairing must
+    // reproduce the input
+    let combos = [OptFlags::baseline(), OptFlags::dr_dlvc(), OptFlags::all()];
+    for shape in [vec![17, 9], vec![10, 11, 12]] {
+        let u = rand_tensor(&shape, 77);
+        let h = Hierarchy::new(&shape, None).unwrap();
+        let scale = value_range(u.data()).max(1.0);
+        for fa in combos {
+            let dec = Decomposer::new(h.clone(), fa).unwrap().decompose(&u).unwrap();
+            for fb in combos {
+                let back = Decomposer::new(h.clone(), fb).unwrap().recompose(&dec).unwrap();
+                let err = linf_error(u.data(), back.data());
+                assert!(
+                    err < 1e-9 * scale,
+                    "{shape:?} {fa:?} -> {fb:?}: round trip {err}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn partial_decompositions_agree_between_engines() {
+    let shape = [17, 17];
+    let u = rand_tensor(&shape, 5);
+    let h = Hierarchy::new(&shape, None).unwrap();
+    let scale = value_range(u.data()).max(1.0);
+    for stop in 0..=h.nlevels() {
+        let a = Decomposer::new(h.clone(), OptFlags::baseline())
+            .unwrap()
+            .decompose_to(&u, stop)
+            .unwrap();
+        let b = Decomposer::new(h.clone(), OptFlags::all())
+            .unwrap()
+            .decompose_to(&u, stop)
+            .unwrap();
+        assert_eq!(a.start_level, b.start_level);
+        assert!(
+            linf_error(a.coarse.data(), b.coarse.data()) < 1e-9 * scale,
+            "stop {stop}"
+        );
+        for (x, y) in a.coeffs.iter().zip(&b.coeffs) {
+            assert!(linf_error(x, y) < 1e-9 * scale, "stop {stop}");
+        }
+    }
+}
+
+#[test]
+fn f32_engines_agree_within_single_precision() {
+    let shape = [12, 14, 9];
+    let mut rng = Rng::new(42);
+    let u = Tensor::<f32>::from_fn(&shape, |_| rng.uniform_in(-3.0, 3.0) as f32);
+    let h = Hierarchy::new(&shape, None).unwrap();
+    let a = Decomposer::new(h.clone(), OptFlags::baseline())
+        .unwrap()
+        .decompose(&u)
+        .unwrap();
+    let b = Decomposer::new(h, OptFlags::all()).unwrap().decompose(&u).unwrap();
+    assert!(linf_error(a.coarse.data(), b.coarse.data()) < 1e-3);
+    for (x, y) in a.coeffs.iter().zip(&b.coeffs) {
+        assert!(linf_error(x, y) < 1e-3);
+    }
+}

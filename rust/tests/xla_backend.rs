@@ -13,6 +13,10 @@ use mgardp::runtime::{artifacts_dir, XlaLevelStep, XlaRuntime};
 use mgardp::tensor::Tensor;
 
 fn load_step(n: usize) -> Option<XlaLevelStep> {
+    if !mgardp::runtime::pjrt_available() {
+        eprintln!("skipping: PJRT runtime unavailable (see rust/src/runtime/pjrt.rs)");
+        return None;
+    }
     let dir = artifacts_dir();
     if !XlaLevelStep::available(&dir, n) {
         eprintln!("skipping: artifacts for n={n} not found (run `make artifacts`)");
