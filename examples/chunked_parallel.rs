@@ -3,7 +3,8 @@
 //! of the container.
 //!
 //! Run with: `cargo run --release --example chunked_parallel`
-//! (`MGARDP_THREADS=8` sets the widest point of the scaling sweep.)
+//! (`MGARDP_THREADS=8` sets the widest point of the scaling sweep;
+//! `MGARDP_SMOKE=1` shrinks the field and sweep for CI smoke runs.)
 
 use mgardp::bench_util::chunked_scaling;
 use mgardp::chunk::{container, ChunkedConfig};
@@ -12,11 +13,15 @@ use mgardp::data::synth;
 use mgardp::metrics::{compression_ratio, linf_error, throughput_mbs};
 
 fn main() -> mgardp::Result<()> {
+    let smoke = std::env::var_os("MGARDP_SMOKE").is_some();
     let max_threads: usize = std::env::var("MGARDP_THREADS")
         .ok()
         .and_then(|v| v.parse().ok())
-        .unwrap_or(8);
-    let field = synth::smooth_test_field(&[129, 129, 129]);
+        .unwrap_or(if smoke { 2 } else { 8 });
+    // 65 (not 33) under smoke: 65 = 32 + 33 keeps two 32-blocks per
+    // dimension, so the multi-block path is still exercised
+    let n = if smoke { 65 } else { 129 };
+    let field = synth::smooth_test_field(&[n, n, n]);
     let rel = 1e-3;
     let tau = rel * field.value_range();
     println!(
@@ -66,8 +71,9 @@ fn main() -> mgardp::Result<()> {
         counts.push(counts.last().expect("non-empty") * 2);
     }
     println!("\n{:<8} {:>12} {:>12} {:>9}", "threads", "comp MB/s", "decomp MB/s", "speedup");
+    let (warmup, runs) = if smoke { (0, 1) } else { (1, 3) };
     let (base_secs, points) =
-        chunked_scaling(&field, Tolerance::Rel(rel), &[32], &counts, 1, 3)?;
+        chunked_scaling(&field, Tolerance::Rel(rel), &[32], &counts, warmup, runs)?;
     println!(
         "(unchunked single-thread baseline: {:.1} MB/s)",
         throughput_mbs(field.nbytes(), base_secs)

@@ -2,6 +2,7 @@
 //! bound, and compare against the baselines.
 //!
 //! Run with: `cargo run --release --example quickstart`
+//! (`MGARDP_SMOKE=1` shrinks the field for CI smoke runs.)
 
 use mgardp::compressors::{all_compressors, Tolerance};
 use mgardp::data::synth;
@@ -9,7 +10,12 @@ use mgardp::metrics::{compression_ratio, linf_error, psnr};
 
 fn main() -> mgardp::Result<()> {
     // A Hurricane-Isabel-like pressure field (synthetic analog).
-    let ds = synth::hurricane_like(0.4, 42);
+    let scale = if std::env::var_os("MGARDP_SMOKE").is_some() {
+        0.08
+    } else {
+        0.4
+    };
+    let ds = synth::hurricane_like(scale, 42);
     let field = ds.field("P").expect("pressure field");
     let data = &field.data;
     println!(

@@ -26,7 +26,7 @@
 //! coordination beyond slicing the blob section.
 
 use crate::compressors::{Header, Method};
-use crate::encode::varint::{write_f64, write_u64, ByteReader};
+use crate::encode::varint::{write_f64, write_u64};
 use crate::error::{Error, Result};
 use crate::tensor::Scalar;
 
@@ -61,6 +61,50 @@ pub struct ChunkIndex {
     pub entries: Vec<BlockEntry>,
 }
 
+impl ChunkIndex {
+    /// Serialize the container prefix — shared header, sub-version, inner
+    /// method tag, nominal block shape, per-block index and the
+    /// blob-section length — to `out`. This is the *single* serialization
+    /// point of the format: both the one-shot [`write_container`] and the
+    /// streaming `crate::stream::ContainerWriter` go through it, so the
+    /// in-core and out-of-core paths cannot drift apart byte-wise.
+    pub(crate) fn write_prefix(
+        &self,
+        out: &mut Vec<u8>,
+        dtype: u8,
+        field_shape: &[usize],
+        tau_abs: f64,
+        blob_len: usize,
+    ) {
+        Header {
+            method: Method::Chunked,
+            dtype,
+            shape: field_shape.to_vec(),
+            tau_abs,
+        }
+        .write(out);
+        out.push(CHUNK_CONTAINER_VERSION);
+        out.push(self.inner as u8);
+        for &b in &self.block_shape {
+            write_u64(out, b as u64);
+        }
+        write_u64(out, self.entries.len() as u64);
+        for e in &self.entries {
+            write_u64(out, e.offset as u64);
+            write_u64(out, e.len as u64);
+            for &s in &e.start {
+                write_u64(out, s as u64);
+            }
+            for &s in &e.shape {
+                write_u64(out, s as u64);
+            }
+            write_u64(out, e.nlevels as u64);
+            write_f64(out, e.tau_abs);
+        }
+        write_u64(out, blob_len as u64);
+    }
+}
+
 /// Assemble a chunked container from per-block blobs (in row-major block
 /// order, matching `index.entries` which must carry offset/len consistent
 /// with the concatenation).
@@ -72,42 +116,46 @@ pub fn write_container<T: Scalar>(
 ) -> Vec<u8> {
     let blob_len: usize = blobs.iter().map(|b| b.len()).sum();
     let mut out = Vec::with_capacity(blob_len + 64 * index.entries.len() + 64);
-    Header {
-        method: Method::Chunked,
-        dtype: T::DTYPE_TAG,
-        shape: field_shape.to_vec(),
-        tau_abs,
-    }
-    .write(&mut out);
-    out.push(CHUNK_CONTAINER_VERSION);
-    out.push(index.inner as u8);
-    for &b in &index.block_shape {
-        write_u64(&mut out, b as u64);
-    }
-    write_u64(&mut out, index.entries.len() as u64);
-    for e in &index.entries {
-        write_u64(&mut out, e.offset as u64);
-        write_u64(&mut out, e.len as u64);
-        for &s in &e.start {
-            write_u64(&mut out, s as u64);
-        }
-        for &s in &e.shape {
-            write_u64(&mut out, s as u64);
-        }
-        write_u64(&mut out, e.nlevels as u64);
-        write_f64(&mut out, e.tau_abs);
-    }
-    write_u64(&mut out, blob_len as u64);
+    index.write_prefix(&mut out, T::DTYPE_TAG, field_shape, tau_abs, blob_len);
     for b in blobs {
         out.extend_from_slice(b);
     }
     out
 }
 
-/// Parse a chunked container: standard header, index, and the blob section.
-/// All offsets are validated against the blob section before returning, so
-/// callers can slice blobs without further checks.
-pub fn read_container(bytes: &[u8]) -> Result<(Header, ChunkIndex, &[u8])> {
+/// Check every index entry's declared blob region against the blob section
+/// size, returning the structured [`Error::BlobOutOfRange`] on the first
+/// inconsistency (e.g. an index that declares more bytes than a truncated
+/// final block left in the section).
+fn validate_entries(entries: &[BlockEntry], blob_len: usize) -> Result<()> {
+    for (i, e) in entries.iter().enumerate() {
+        let overrun = match e.offset.checked_add(e.len) {
+            Some(end) => end > blob_len,
+            None => true,
+        };
+        if overrun {
+            return Err(Error::BlobOutOfRange {
+                block: i,
+                offset: e.offset,
+                len: e.len,
+                section: blob_len,
+            });
+        }
+    }
+    Ok(())
+}
+
+/// Parse only the container *prefix* — standard header, chunk index, and the
+/// blob-section length — without requiring the blob bytes to be present.
+///
+/// Returns the header, the index, the byte offset at which the blob section
+/// starts, and its declared length. Every entry's blob region is validated
+/// against the declared section length (structured
+/// [`Error::BlobOutOfRange`] on overrun), so out-of-core readers can seek
+/// straight to `blob_start + entry.offset` without further checks beyond
+/// confirming the underlying stream actually holds `blob_start + blob_len`
+/// bytes.
+pub fn read_index(bytes: &[u8]) -> Result<(Header, ChunkIndex, usize, usize)> {
     let (header, mut r) = Header::read(bytes)?;
     if header.method != Method::Chunked {
         return Err(Error::UnsupportedFormat(format!(
@@ -173,19 +221,7 @@ pub fn read_container(bytes: &[u8]) -> Result<(Header, ChunkIndex, &[u8])> {
         });
     }
     let blob_len = r.usize()?;
-    let blobs = r.bytes(blob_len)?;
-    for e in &entries {
-        let end = e
-            .offset
-            .checked_add(e.len)
-            .ok_or_else(|| Error::corrupt("block blob range overflow"))?;
-        if end > blob_len {
-            return Err(Error::corrupt(format!(
-                "block blob [{}, {end}) outside blob section of {blob_len} bytes",
-                e.offset
-            )));
-        }
-    }
+    validate_entries(&entries, blob_len)?;
     Ok((
         header,
         ChunkIndex {
@@ -193,8 +229,28 @@ pub fn read_container(bytes: &[u8]) -> Result<(Header, ChunkIndex, &[u8])> {
             block_shape,
             entries,
         },
-        blobs,
+        r.position(),
+        blob_len,
     ))
+}
+
+/// Parse a chunked container: standard header, index, and the blob section.
+/// All offsets are validated against the blob section before returning, so
+/// callers can slice blobs without further checks. An index entry whose blob
+/// region overruns the section yields the structured
+/// [`Error::BlobOutOfRange`].
+pub fn read_container(bytes: &[u8]) -> Result<(Header, ChunkIndex, &[u8])> {
+    let (header, index, blob_start, blob_len) = read_index(bytes)?;
+    let end = blob_start
+        .checked_add(blob_len)
+        .ok_or_else(|| Error::corrupt("blob section length overflow"))?;
+    if end > bytes.len() {
+        return Err(Error::corrupt(format!(
+            "truncated blob section: declared {blob_len} bytes, stream holds {}",
+            bytes.len() - blob_start
+        )));
+    }
+    Ok((header, index, &bytes[blob_start..end]))
 }
 
 #[cfg(test)]
@@ -275,6 +331,31 @@ mod tests {
         let (mut index, blobs) = sample_index();
         index.entries[1].len = 40;
         let bytes = write_container::<f32>(&[17, 8], 0.5, &index, &blobs);
-        assert!(read_container(&bytes).is_err());
+        match read_container(&bytes) {
+            Err(Error::BlobOutOfRange {
+                block,
+                offset,
+                len,
+                section,
+            }) => {
+                assert_eq!((block, offset, len, section), (1, 3, 40, 5));
+            }
+            other => panic!("expected BlobOutOfRange, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn index_parses_without_blob_bytes() {
+        let (index, blobs) = sample_index();
+        let bytes = write_container::<f32>(&[17, 8], 0.5, &index, &blobs);
+        // cut the container right after the prefix: the blobs are gone but
+        // the index must still parse, reporting where the section starts
+        let (header, back, blob_start, blob_len) = read_index(&bytes[..bytes.len() - 5]).unwrap();
+        assert_eq!(header.shape, vec![17, 8]);
+        assert_eq!(back.entries, index.entries);
+        assert_eq!(blob_len, 5);
+        assert_eq!(blob_start, bytes.len() - 5);
+        // but the full read needs the section
+        assert!(read_container(&bytes[..bytes.len() - 5]).is_err());
     }
 }

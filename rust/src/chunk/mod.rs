@@ -17,6 +17,10 @@
 //! pointwise guarantee `‖u − ũ‖_∞ ≤ τ` of the unchunked path carries over
 //! verbatim — including across block seams.
 //!
+//! For fields larger than RAM, [`crate::stream`] feeds this same pipeline
+//! from disk block-at-a-time under a memory budget and emits a
+//! byte-identical container.
+//!
 //! ```
 //! use mgardp::chunk::ChunkedConfig;
 //! use mgardp::compressors::{Compressor, MgardPlus, Tolerance};
@@ -36,8 +40,8 @@ pub mod partition;
 pub mod pool;
 
 pub use container::{BlockEntry, ChunkIndex, CHUNK_CONTAINER_VERSION};
-pub use partition::{partition, resolve_block_shape, Block};
-pub use pool::{effective_threads, parallel_map};
+pub use partition::{intersect, partition, resolve_block_shape, Block};
+pub use pool::{effective_threads, parallel_map, parallel_map_ordered};
 
 use crate::compressors::{peek_method, Compressor, Method, Tolerance};
 use crate::error::{Error, Result};
@@ -138,6 +142,37 @@ fn decode_blocks<T: Scalar>(
         blocks.push(r?);
     }
     assemble(field_shape, &index.entries, blocks)
+}
+
+impl<C> ChunkedCompressor<C> {
+    /// Stream the chunked container for an in-core field to any
+    /// [`std::io::Write`] sink instead of materializing it as one `Vec`:
+    /// compressed blobs leave memory as blocks complete (bounded by
+    /// `memory_budget`, see [`crate::stream::StreamConfig`]), and the index
+    /// is back-patched at finalize. The bytes written are identical to
+    /// [`Compressor::compress`] on the same input. For fields larger than
+    /// RAM, pair [`crate::stream::compress_to_writer`] with a
+    /// [`crate::stream::RawFileSource`] instead.
+    pub fn compress_to_writer<T, W>(
+        &self,
+        data: &Tensor<T>,
+        tol: Tolerance,
+        memory_budget: usize,
+        sink: W,
+    ) -> Result<u64>
+    where
+        T: Scalar,
+        C: Compressor<T> + Sync,
+        W: std::io::Write,
+    {
+        let cfg = crate::stream::StreamConfig {
+            chunk: self.cfg.clone(),
+            memory_budget,
+            spool_dir: None,
+        };
+        let source = crate::stream::InCoreSource::new(data);
+        crate::stream::compress_to_writer(&self.inner, &source, tol, &cfg, sink)
+    }
 }
 
 impl<T: Scalar, C: Compressor<T> + Sync> Compressor<T> for ChunkedCompressor<C> {
@@ -259,6 +294,25 @@ mod tests {
         let bytes = codec.compress(&t, Tolerance::Abs(1e-3)).unwrap();
         let back: Tensor<f32> = crate::compressors::decompress_any(&bytes).unwrap();
         assert!(linf_error(t.data(), back.data()) <= 1e-3);
+    }
+
+    #[test]
+    fn compress_to_writer_matches_compress() {
+        let t = crate::data::synth::smooth_test_field(&[15, 18]);
+        let codec = ChunkedCompressor::new(
+            MgardPlus::default(),
+            ChunkedConfig {
+                block_shape: vec![8],
+                threads: 2,
+            },
+        );
+        let want = codec.compress(&t, Tolerance::Abs(1e-3)).unwrap();
+        let mut got = Vec::new();
+        let total = codec
+            .compress_to_writer(&t, Tolerance::Abs(1e-3), 16 * 1024, &mut got)
+            .unwrap();
+        assert_eq!(got, want, "streamed container differs from in-core one");
+        assert_eq!(total as usize, want.len());
     }
 
     #[test]

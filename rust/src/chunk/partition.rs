@@ -57,6 +57,32 @@ pub fn resolve_block_shape(block_shape: &[usize], ndim: usize) -> Result<Vec<usi
     Ok(resolved)
 }
 
+/// Intersect two axis-aligned boxes given as (start, shape) pairs of the
+/// same rank. Returns the intersection's (start, shape) in field
+/// coordinates, or `None` when the boxes are disjoint in any dimension.
+/// Used for selective region decompression: only blocks whose box
+/// intersects the requested region are decoded.
+pub fn intersect(
+    a_start: &[usize],
+    a_shape: &[usize],
+    b_start: &[usize],
+    b_shape: &[usize],
+) -> Option<(Vec<usize>, Vec<usize>)> {
+    debug_assert_eq!(a_start.len(), b_start.len());
+    let mut start = Vec::with_capacity(a_start.len());
+    let mut shape = Vec::with_capacity(a_start.len());
+    for d in 0..a_start.len() {
+        let lo = a_start[d].max(b_start[d]);
+        let hi = (a_start[d] + a_shape[d]).min(b_start[d] + b_shape[d]);
+        if hi <= lo {
+            return None;
+        }
+        start.push(lo);
+        shape.push(hi - lo);
+    }
+    Some((start, shape))
+}
+
 /// Enumerate the partition of `field_shape` by `block_shape` (already
 /// resolved to the field rank) in row-major block order.
 pub fn partition(field_shape: &[usize], block_shape: &[usize]) -> Result<Vec<Block>> {
@@ -153,6 +179,21 @@ mod tests {
         assert!(resolve_block_shape(&[8, 16], 3).is_err());
         assert!(resolve_block_shape(&[1], 2).is_err());
         assert!(partition(&[5, 1], &[4, 4]).is_err());
+    }
+
+    #[test]
+    fn box_intersection() {
+        // overlapping boxes
+        let (s, sh) = intersect(&[0, 0], &[16, 16], &[10, 12], &[16, 16]).unwrap();
+        assert_eq!((s, sh), (vec![10, 12], vec![6, 4]));
+        // containment
+        let (s, sh) = intersect(&[4, 4], &[4, 4], &[0, 0], &[64, 64]).unwrap();
+        assert_eq!((s, sh), (vec![4, 4], vec![4, 4]));
+        // disjoint along one axis
+        assert!(intersect(&[0, 0], &[8, 8], &[8, 0], &[8, 8]).is_none());
+        // single-point overlap is a 1-wide box, kept (copying needs no grid)
+        let (s, sh) = intersect(&[0], &[9], &[8], &[4]).unwrap();
+        assert_eq!((s, sh), (vec![8], vec![1]));
     }
 
     #[test]

@@ -8,8 +8,9 @@
 //! which thread ran what.
 
 use crate::error::{Error, Result};
+use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::{Condvar, Mutex};
 
 /// Resolve a requested thread count: 0 means "use available parallelism",
 /// and the count is capped at the job count.
@@ -64,6 +65,158 @@ where
         .collect()
 }
 
+/// Shared scheduler state of [`parallel_map_ordered`].
+struct OrderedState<T> {
+    /// Next job index to hand out.
+    next: usize,
+    /// Number of results the consumer has finished with.
+    consumed: usize,
+    /// Completed results not yet consumed, keyed by job index.
+    ready: BTreeMap<usize, T>,
+    /// First error observed (job error, worker panic, or consumer error);
+    /// once set, no new work is issued.
+    error: Option<Error>,
+}
+
+/// Run `f(0..n)` on `threads` workers while a single consumer receives every
+/// result *in index order* through `consume`, with at most `window` jobs in
+/// flight (issued but not yet consumed) at any moment.
+///
+/// This is the streaming counterpart of [`parallel_map`]: instead of
+/// collecting all `n` results, the in-flight set is bounded, so memory stays
+/// proportional to `window` rather than `n` — the backpressure primitive of
+/// the out-of-core pipeline (`crate::stream`). `consume` runs on the calling
+/// thread; the first error from either side cancels outstanding work and is
+/// returned.
+pub fn parallel_map_ordered<T, F, G>(
+    n: usize,
+    threads: usize,
+    window: usize,
+    f: F,
+    mut consume: G,
+) -> Result<()>
+where
+    T: Send,
+    F: Fn(usize) -> Result<T> + Sync,
+    G: FnMut(usize, T) -> Result<()>,
+{
+    if n == 0 {
+        return Ok(());
+    }
+    let window = window.max(1);
+    let threads = effective_threads(threads, window.min(n));
+    if threads == 1 {
+        // sequential fast path: one job in flight by construction; job
+        // panics still surface as Error::Pipeline like on the parallel path
+        for i in 0..n {
+            let v = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(i)))
+                .unwrap_or_else(|_| Err(Error::Pipeline(format!("block job {i} panicked"))))?;
+            consume(i, v)?;
+        }
+        return Ok(());
+    }
+    let state = Mutex::new(OrderedState::<T> {
+        next: 0,
+        consumed: 0,
+        ready: BTreeMap::new(),
+        error: None,
+    });
+    let cvar = Condvar::new();
+    /// Wakes the workers if the consumer unwinds (e.g. `consume` panics):
+    /// without this, workers blocked on the window condvar would never be
+    /// notified and `thread::scope` would join them forever.
+    struct ConsumerGuard<'a, T> {
+        state: &'a Mutex<OrderedState<T>>,
+        cvar: &'a Condvar,
+        completed: bool,
+    }
+    impl<T> Drop for ConsumerGuard<'_, T> {
+        fn drop(&mut self) {
+            let mut s = self.state.lock().expect("ordered pool poisoned");
+            if !self.completed && s.error.is_none() {
+                s.error = Some(Error::Pipeline("consumer panicked".into()));
+            }
+            drop(s);
+            self.cvar.notify_all();
+        }
+    }
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let i = {
+                    let mut s = state.lock().expect("ordered pool poisoned");
+                    loop {
+                        if s.error.is_some() || s.next >= n {
+                            return;
+                        }
+                        if s.next < s.consumed + window {
+                            s.next += 1;
+                            break s.next - 1;
+                        }
+                        s = cvar.wait(s).expect("ordered pool poisoned");
+                    }
+                };
+                let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(i)))
+                    .unwrap_or_else(|_| Err(Error::Pipeline(format!("block job {i} panicked"))));
+                let mut s = state.lock().expect("ordered pool poisoned");
+                match outcome {
+                    Ok(v) => {
+                        s.ready.insert(i, v);
+                    }
+                    Err(e) => {
+                        if s.error.is_none() {
+                            s.error = Some(e);
+                        }
+                    }
+                }
+                drop(s);
+                cvar.notify_all();
+            });
+        }
+        // consumer: this thread drains results in index order; the guard
+        // marks the pass complete so only an unwind registers as an error
+        let mut guard = ConsumerGuard {
+            state: &state,
+            cvar: &cvar,
+            completed: false,
+        };
+        for i in 0..n {
+            let v = {
+                let mut s = state.lock().expect("ordered pool poisoned");
+                loop {
+                    if s.error.is_some() {
+                        guard.completed = true;
+                        return;
+                    }
+                    if let Some(v) = s.ready.remove(&i) {
+                        break v;
+                    }
+                    s = cvar.wait(s).expect("ordered pool poisoned");
+                }
+            };
+            if let Err(e) = consume(i, v) {
+                let mut s = state.lock().expect("ordered pool poisoned");
+                if s.error.is_none() {
+                    s.error = Some(e);
+                }
+                drop(s);
+                guard.completed = true;
+                cvar.notify_all();
+                return;
+            }
+            let mut s = state.lock().expect("ordered pool poisoned");
+            s.consumed += 1;
+            drop(s);
+            cvar.notify_all();
+        }
+        guard.completed = true;
+    });
+    match state.into_inner().expect("ordered pool poisoned").error {
+        Some(e) => Err(e),
+        None => Ok(()),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -100,6 +253,122 @@ mod tests {
         });
         assert!(out[1].is_err());
         assert!(out[0].is_ok() && out[2].is_ok() && out[3].is_ok());
+    }
+
+    #[test]
+    fn ordered_streaming_consumes_in_order() {
+        for (threads, window) in [(1, 1), (2, 1), (4, 2), (8, 64)] {
+            let mut seen = Vec::new();
+            parallel_map_ordered(
+                50,
+                threads,
+                window,
+                |i| Ok(i * 3),
+                |i, v| {
+                    assert_eq!(v, i * 3);
+                    seen.push(i);
+                    Ok(())
+                },
+            )
+            .unwrap();
+            assert_eq!(seen, (0..50).collect::<Vec<_>>(), "t={threads} w={window}");
+        }
+    }
+
+    #[test]
+    fn ordered_streaming_window_bounds_in_flight() {
+        // with window w, job index i may only start once i < consumed + w;
+        // track a started-minus-consumed gauge and its high-water mark
+        let inflight = AtomicUsize::new(0);
+        let peak = AtomicUsize::new(0);
+        let window = 3;
+        parallel_map_ordered(
+            40,
+            4,
+            window,
+            |_| {
+                let now = inflight.fetch_add(1, Ordering::SeqCst) + 1;
+                peak.fetch_max(now, Ordering::SeqCst);
+                Ok(())
+            },
+            |_, _| {
+                inflight.fetch_sub(1, Ordering::SeqCst);
+                Ok(())
+            },
+        )
+        .unwrap();
+        assert!(
+            peak.load(Ordering::SeqCst) <= window,
+            "window violated: {} in flight",
+            peak.load(Ordering::SeqCst)
+        );
+    }
+
+    #[test]
+    fn ordered_streaming_propagates_errors_and_panics() {
+        let r = parallel_map_ordered(
+            20,
+            4,
+            4,
+            |i| {
+                if i == 7 {
+                    Err(Error::invalid("job failed"))
+                } else {
+                    Ok(i)
+                }
+            },
+            |_, _| Ok(()),
+        );
+        assert!(r.is_err());
+
+        let r = parallel_map_ordered(
+            10,
+            3,
+            2,
+            |i| {
+                if i == 4 {
+                    panic!("worker blew up");
+                }
+                Ok(i)
+            },
+            |_, _| Ok(()),
+        );
+        assert!(r.is_err());
+
+        // consumer errors cancel the run too
+        let r = parallel_map_ordered(
+            30,
+            4,
+            4,
+            |i| Ok(i),
+            |i, _| {
+                if i == 5 {
+                    Err(Error::invalid("consumer full"))
+                } else {
+                    Ok(())
+                }
+            },
+        );
+        assert!(r.is_err());
+    }
+
+    #[test]
+    #[should_panic(expected = "consumer blew up")]
+    fn consumer_panic_propagates_without_deadlock() {
+        // the ConsumerGuard must wake window-blocked workers so the scope
+        // can join them and re-raise the panic instead of hanging forever
+        let _ = parallel_map_ordered(
+            40,
+            4,
+            2,
+            |i| Ok(i),
+            |i, _| {
+                if i == 1 {
+                    panic!("consumer blew up");
+                }
+                Ok(())
+            },
+        );
     }
 
     #[test]

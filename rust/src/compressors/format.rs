@@ -32,6 +32,21 @@ pub enum Method {
     Chunked = 6,
 }
 
+impl std::fmt::Display for Method {
+    /// CLI-facing name, matching the `--method` spellings where one exists.
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = match self {
+            Method::Mgard => "mgard",
+            Method::MgardPlus => "mgard+",
+            Method::Sz => "sz",
+            Method::Zfp => "zfp",
+            Method::Hybrid => "hybrid",
+            Method::Chunked => "chunked",
+        };
+        f.write_str(s)
+    }
+}
+
 impl Method {
     pub(crate) fn from_u8(v: u8) -> Result<Method> {
         Ok(match v {
@@ -181,6 +196,12 @@ mod tests {
             assert_eq!(Method::from_u8(m as u8).unwrap(), m);
         }
         assert!(Method::from_u8(99).is_err());
+    }
+
+    #[test]
+    fn method_display_names() {
+        assert_eq!(Method::MgardPlus.to_string(), "mgard+");
+        assert_eq!(Method::Chunked.to_string(), "chunked");
     }
 
     #[test]

@@ -49,7 +49,8 @@ impl Hybrid {
     }
 
     /// Wrap into a block-parallel compressor (see [`crate::chunk`]),
-    /// mirroring [`super::MgardPlus::chunked`].
+    /// mirroring [`super::MgardPlus::chunked`]. Out-of-core fields stream
+    /// through the same pipeline via [`crate::stream`].
     pub fn chunked(
         self,
         cfg: crate::chunk::ChunkedConfig,

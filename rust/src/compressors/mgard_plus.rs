@@ -134,6 +134,10 @@ impl MgardPlus {
     /// Wrap into a block-parallel compressor (see [`crate::chunk`]): the
     /// field is tiled by `cfg.block_shape` and each block runs the full
     /// MGARD+ path on the worker pool, preserving the global L∞ bound.
+    /// For fields larger than RAM, the same block pipeline can be fed from
+    /// disk under a memory budget via [`crate::stream::compress_to_writer`]
+    /// with a [`crate::stream::RawFileSource`]; the container is
+    /// byte-identical either way.
     pub fn chunked(
         self,
         cfg: crate::chunk::ChunkedConfig,

@@ -73,6 +73,39 @@ pub fn decompress_any<T: Scalar>(bytes: &[u8]) -> Result<Tensor<T>> {
     }
 }
 
+/// Streaming counterpart of [`decompress_any`] for seekable byte streams:
+/// chunked containers decode block-at-a-time through
+/// [`crate::stream::StreamingDecompressor`] (the blob section never loads
+/// as a whole), while single-tensor containers fall back to an in-memory
+/// read — their payloads are monolithic by construction.
+pub fn decompress_any_from<T: Scalar, R: std::io::Read + std::io::Seek>(
+    mut src: R,
+) -> Result<Tensor<T>> {
+    use std::io::{Read, Seek, SeekFrom};
+    // a 128-byte probe covers the worst-case header (8 dims × 10-byte
+    // varints plus the fixed fields is 96 bytes)
+    let mut probe = [0u8; 128];
+    src.seek(SeekFrom::Start(0))?;
+    let mut got = 0;
+    while got < probe.len() {
+        let n = src.read(&mut probe[got..])?;
+        if n == 0 {
+            break;
+        }
+        got += n;
+    }
+    let method = format::peek_method(&probe[..got])?;
+    src.seek(SeekFrom::Start(0))?;
+    if method == Method::Chunked {
+        let mut d = crate::stream::StreamingDecompressor::open(src)?;
+        d.decompress()
+    } else {
+        let mut bytes = Vec::new();
+        src.read_to_end(&mut bytes)?;
+        decompress_any(&bytes)
+    }
+}
+
 /// All five compressors with their default configurations (the Fig. 8/10/11
 /// comparison set).
 pub fn all_compressors<T: Scalar>() -> Vec<Box<dyn Compressor<T>>> {

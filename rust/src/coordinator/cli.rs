@@ -87,6 +87,24 @@ pub fn parse_shape(s: &str) -> Result<Vec<usize>> {
         .collect()
 }
 
+/// Parse a byte count with an optional `K`/`M`/`G` suffix (powers of 1024),
+/// e.g. `256M`, `4096`, `2G`.
+pub fn parse_byte_size(s: &str) -> Result<usize> {
+    let t = s.trim();
+    let (digits, mult) = match t.chars().last() {
+        Some('K') | Some('k') => (&t[..t.len() - 1], 1usize << 10),
+        Some('M') | Some('m') => (&t[..t.len() - 1], 1usize << 20),
+        Some('G') | Some('g') => (&t[..t.len() - 1], 1usize << 30),
+        _ => (t, 1usize),
+    };
+    let v: usize = digits
+        .trim()
+        .parse()
+        .map_err(|_| Error::Config(format!("bad byte size `{s}` (expected e.g. 256M)")))?;
+    v.checked_mul(mult)
+        .ok_or_else(|| Error::Config(format!("byte size `{s}` overflows")))
+}
+
 fn tolerance_from(args: &Args) -> Result<Tolerance> {
     match (args.f64_opt("rel")?, args.f64_opt("abs")?) {
         (Some(r), None) => Ok(Tolerance::Rel(r)),
@@ -105,10 +123,16 @@ USAGE: mgardp <command> [--flag value ...]
 COMMANDS:
   compress    --input F --shape ZxYxX --output F [--method mgard+|mgard|sz|zfp|hybrid] [--rel R | --abs A]
               [--block-shape BxBxB --threads N]  (chunked parallel path; threads 0 = all cores)
-  decompress  --input F --output F
+              [--stream [--memory-budget BYTES]]  (out-of-core: the raw input is read
+              block-at-a-time and never fully resident; BYTES accepts K/M/G suffixes,
+              default 256M; implies chunking, --block-shape defaults to 64)
+  decompress  --input F --output F [--stream [--threads N]]  (chunked containers: batched
+              block decode straight to the raw sink; threads 0 = all cores)
+              [--region ZxYxX --region-shape ZxYxX]  (decode only the blocks intersecting the region)
   info        --input F
   synth       --out DIR [--dataset all|hurricane|nyx|scale|qmcpack] [--scale S] [--seed N]
-  pipeline    --config FILE  (sections: [pipeline] workers/method/rel_tol/verify/block_shape/threads, [data] scale/seed)
+  pipeline    --config FILE  (sections: [pipeline] workers/method/rel_tol/verify/block_shape/threads/
+              stream/memory_budget, [data] scale/seed)
   refactor    --input F --shape ZxYxX --store DIR --field NAME
   reconstruct --store DIR --field NAME --level L --output F
   analyze     --input F --shape ZxYxX --iso V  (iso-surface area)
@@ -140,6 +164,9 @@ fn cmd_compress(args: &Args) -> Result<()> {
     let output = PathBuf::from(args.req("output")?);
     let method = args.opt("method").unwrap_or("mgard+");
     let tol = tolerance_from(args)?;
+    if args.opt("stream").is_some() {
+        return cmd_compress_stream(args, &shape, &input, &output, method, tol);
+    }
     let data: Tensor<f32> = io::read_raw(&input, &shape)?;
     let compressor = match args.opt("block-shape") {
         Some(bs) => {
@@ -164,9 +191,84 @@ fn cmd_compress(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `compress --stream`: the raw input is read block-at-a-time through
+/// `RawFileSource` and the container streams to the output file; neither
+/// the field nor the blob section is ever fully resident.
+fn cmd_compress_stream(
+    args: &Args,
+    shape: &[usize],
+    input: &Path,
+    output: &Path,
+    method: &str,
+    tol: Tolerance,
+) -> Result<()> {
+    let block_shape = match args.opt("block-shape") {
+        Some(bs) => parse_shape(bs)?,
+        None => vec![64],
+    };
+    let threads = args.usize_or("threads", 0)?;
+    let memory_budget = match args.opt("memory-budget") {
+        Some(s) => parse_byte_size(s)?,
+        None => 256 << 20,
+    };
+    let source = crate::stream::RawFileSource::<f32>::new(input, shape)?;
+    let inner = pipeline::make_compressor(method)?;
+    let cfg = crate::stream::StreamConfig {
+        chunk: crate::chunk::ChunkedConfig {
+            block_shape,
+            threads,
+        },
+        memory_budget,
+        // spool compressed blobs next to the output so finalize is a local copy
+        spool_dir: Some(
+            output
+                .parent()
+                .filter(|p| !p.as_os_str().is_empty())
+                .unwrap_or(Path::new("."))
+                .to_path_buf(),
+        ),
+    };
+    let t0 = std::time::Instant::now();
+    let sink = std::io::BufWriter::new(std::fs::File::create(output)?);
+    let written = match crate::stream::compress_to_writer(&*inner, &source, tol, &cfg, sink) {
+        Ok(n) => n,
+        Err(e) => {
+            // don't leave a half-written container behind
+            std::fs::remove_file(output).ok();
+            return Err(e);
+        }
+    };
+    let secs = t0.elapsed().as_secs_f64();
+    let orig = crate::tensor::numel(shape) * 4;
+    println!(
+        "{method} (streamed, budget {}B): {} -> {} bytes (CR {:.2}) in {:.3}s ({:.1} MB/s)",
+        memory_budget,
+        orig,
+        written,
+        metrics::compression_ratio(orig, written as usize),
+        secs,
+        metrics::throughput_mbs(orig, secs),
+    );
+    Ok(())
+}
+
 fn cmd_decompress(args: &Args) -> Result<()> {
     let input = PathBuf::from(args.req("input")?);
     let output = PathBuf::from(args.req("output")?);
+    match (args.opt("region"), args.opt("region-shape")) {
+        (Some(rs), Some(rss)) => {
+            return cmd_decompress_region(&input, &output, &parse_shape(rs)?, &parse_shape(rss)?)
+        }
+        (None, None) => {}
+        _ => {
+            return Err(Error::Config(
+                "--region and --region-shape must be passed together".into(),
+            ))
+        }
+    }
+    if args.opt("stream").is_some() {
+        return cmd_decompress_stream(&input, &output, args.usize_or("threads", 0)?);
+    }
     let bytes = std::fs::read(&input)?;
     let t0 = std::time::Instant::now();
     let data: Tensor<f32> = decompress_any(&bytes)?;
@@ -181,14 +283,73 @@ fn cmd_decompress(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `decompress --stream`: decode the chunked container block-at-a-time and
+/// scatter each block straight into the raw output file.
+fn cmd_decompress_stream(input: &Path, output: &Path, threads: usize) -> Result<()> {
+    let t0 = std::time::Instant::now();
+    let src = std::io::BufReader::new(std::fs::File::open(input)?);
+    let mut d = crate::stream::StreamingDecompressor::open(src)?.with_threads(threads);
+    if let Some(parent) = output.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)?;
+        }
+    }
+    let mut sink = std::fs::File::create(output)?;
+    let written = d.decompress_to_raw::<f32, _>(&mut sink)?;
+    let secs = t0.elapsed().as_secs_f64();
+    println!(
+        "streamed {} blocks -> {:?} ({} bytes) in {:.3}s ({:.1} MB/s)",
+        d.nblocks(),
+        d.header().shape,
+        written,
+        secs,
+        metrics::throughput_mbs(written as usize, secs),
+    );
+    Ok(())
+}
+
+/// `decompress --region`: decode only the blocks intersecting the requested
+/// sub-domain and write it as a raw field of the region's shape.
+fn cmd_decompress_region(
+    input: &Path,
+    output: &Path,
+    start: &[usize],
+    shape: &[usize],
+) -> Result<()> {
+    let t0 = std::time::Instant::now();
+    let src = std::io::BufReader::new(std::fs::File::open(input)?);
+    let mut d = crate::stream::StreamingDecompressor::open(src)?;
+    let region: Tensor<f32> = d.decompress_region(start, shape)?;
+    io::write_raw(output, &region)?;
+    println!(
+        "region [{start:?} + {shape:?}) of {:?} decoded in {:.3}s",
+        d.header().shape,
+        t0.elapsed().as_secs_f64(),
+    );
+    Ok(())
+}
+
 fn cmd_info(args: &Args) -> Result<()> {
-    let bytes = std::fs::read(args.req("input")?)?;
-    let (header, _) = crate::compressors::Header::read(&bytes)?;
-    println!("method : {:?}", header.method);
+    // never load the payload: containers this PR produces can exceed RAM,
+    // and info only needs the header (and, for chunked streams, the index)
+    let path = Path::new(args.req("input")?);
+    let total = std::fs::metadata(path)?.len();
+    let mut file = std::fs::File::open(path)?;
+    let mut probe = vec![0u8; (total as usize).min(128)];
+    std::io::Read::read_exact(&mut file, &mut probe)?;
+    let (header, _) = crate::compressors::Header::read(&probe)?;
+    println!("method : {}", header.method);
     println!("dtype  : {}", if header.dtype == 1 { "f32" } else { "f64" });
     println!("shape  : {:?}", header.shape);
     println!("tau_abs: {:.6e}", header.tau_abs);
-    println!("bytes  : {}", bytes.len());
+    println!("bytes  : {total}");
+    if header.method == crate::compressors::Method::Chunked {
+        let d = crate::stream::StreamingDecompressor::open(std::io::BufReader::new(file))?;
+        let index = d.index();
+        println!("inner  : {}", index.inner);
+        println!("blocks : {} of nominal {:?}", index.entries.len(), index.block_shape);
+        println!("blobs  : {} bytes", d.blob_len());
+    }
     Ok(())
 }
 
@@ -226,6 +387,17 @@ fn cmd_pipeline(args: &Args) -> Result<()> {
             Some(parse_shape(&s)?)
         }
     };
+    // memory_budget accepts either an integer byte count or a quoted
+    // string with a K/M/G suffix (e.g. "256M")
+    let memory_budget = match cfg.get("pipeline", "memory_budget") {
+        Some(v) => match v.as_str() {
+            Some(s) => parse_byte_size(s)?,
+            None => v.as_int().ok_or_else(|| {
+                Error::Config("pipeline.memory_budget must be bytes or e.g. \"256M\"".into())
+            })? as usize,
+        },
+        None => 0,
+    };
     let pcfg = PipelineConfig {
         workers: cfg.int_or("pipeline", "workers", 1) as usize,
         queue_depth: cfg.int_or("pipeline", "queue_depth", 4) as usize,
@@ -234,6 +406,8 @@ fn cmd_pipeline(args: &Args) -> Result<()> {
         verify: cfg.bool_or("pipeline", "verify", true),
         block_shape,
         threads: cfg.int_or("pipeline", "threads", 1) as usize,
+        stream: cfg.bool_or("pipeline", "stream", false),
+        memory_budget,
     };
     let scale = cfg.float_or("data", "scale", 0.5);
     let seed = cfg.int_or("data", "seed", 42) as u64;
@@ -378,6 +552,96 @@ mod tests {
         assert_eq!(parse_shape("100x500x500").unwrap(), vec![100, 500, 500]);
         assert_eq!(parse_shape("8,9").unwrap(), vec![8, 9]);
         assert!(parse_shape("8xfoo").is_err());
+    }
+
+    #[test]
+    fn byte_size_parsing() {
+        assert_eq!(parse_byte_size("4096").unwrap(), 4096);
+        assert_eq!(parse_byte_size("64K").unwrap(), 64 << 10);
+        assert_eq!(parse_byte_size("256M").unwrap(), 256 << 20);
+        assert_eq!(parse_byte_size("2g").unwrap(), 2 << 30);
+        assert_eq!(parse_byte_size(" 8 M ").unwrap(), 8 << 20);
+        assert!(parse_byte_size("lots").is_err());
+        assert!(parse_byte_size("12T").is_err());
+        assert!(parse_byte_size("").is_err());
+    }
+
+    #[test]
+    fn streamed_cli_cycle_matches_in_core_cycle() {
+        let dir = std::env::temp_dir().join(format!("mgardp_cli_stream_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let raw = dir.join("in.f32");
+        let t = crate::data::synth::smooth_test_field(&[17, 18, 19]);
+        io::write_raw(&raw, &t).unwrap();
+        let in_core = dir.join("incore.mgrp");
+        let streamed = dir.join("streamed.mgrp");
+        let common = [
+            "--input",
+            raw.to_str().unwrap(),
+            "--shape",
+            "17x18x19",
+            "--method",
+            "mgard+",
+            "--rel",
+            "1e-3",
+            "--block-shape",
+            "8x8x8",
+            "--threads",
+            "2",
+        ];
+        let mut a: Vec<String> = common.iter().map(|x| x.to_string()).collect();
+        a.extend(s(&["--output", in_core.to_str().unwrap()]));
+        run("compress", &a).unwrap();
+        let mut b: Vec<String> = common.iter().map(|x| x.to_string()).collect();
+        b.extend(s(&[
+            "--output",
+            streamed.to_str().unwrap(),
+            "--stream",
+            "--memory-budget",
+            "16K",
+        ]));
+        run("compress", &b).unwrap();
+        // the out-of-core container must be byte-identical to the in-core one
+        assert_eq!(
+            std::fs::read(&streamed).unwrap(),
+            std::fs::read(&in_core).unwrap()
+        );
+        // streamed decompression straight to a raw sink honours the bound
+        let rec = dir.join("rec.f32");
+        run(
+            "decompress",
+            &s(&[
+                "--input",
+                streamed.to_str().unwrap(),
+                "--output",
+                rec.to_str().unwrap(),
+                "--stream",
+            ]),
+        )
+        .unwrap();
+        let back: Tensor<f32> = io::read_raw(&rec, &[17, 18, 19]).unwrap();
+        let tau = 1e-3 * t.value_range();
+        assert!(metrics::linf_error(t.data(), back.data()) <= tau * (1.0 + 1e-6));
+        // region decode of a seam-crossing box
+        let reg = dir.join("region.f32");
+        run(
+            "decompress",
+            &s(&[
+                "--input",
+                streamed.to_str().unwrap(),
+                "--output",
+                reg.to_str().unwrap(),
+                "--region",
+                "5x6x7",
+                "--region-shape",
+                "9x8x6",
+            ]),
+        )
+        .unwrap();
+        let region: Tensor<f32> = io::read_raw(&reg, &[9, 8, 6]).unwrap();
+        let direct = t.block(&[5, 6, 7], &[9, 8, 6]).unwrap();
+        assert!(metrics::linf_error(direct.data(), region.data()) <= tau * (1.0 + 1e-6));
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

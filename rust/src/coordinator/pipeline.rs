@@ -42,6 +42,15 @@ pub struct PipelineConfig {
     /// parallelism). Independent of `workers`, which parallelizes across
     /// fields.
     pub threads: usize,
+    /// Compress through the streaming writer (`crate::stream`): blocks are
+    /// fed through the bounded in-flight window and blobs leave memory as
+    /// they complete. The container bytes are identical to the in-core
+    /// chunked path. Implies chunking (`block_shape` defaults to 64 per
+    /// dimension when unset).
+    pub stream: bool,
+    /// In-flight byte budget for the streaming path (0 = unbounded); see
+    /// [`crate::stream::StreamConfig::memory_budget`].
+    pub memory_budget: usize,
 }
 
 impl Default for PipelineConfig {
@@ -54,6 +63,8 @@ impl Default for PipelineConfig {
             verify: true,
             block_shape: None,
             threads: 1,
+            stream: false,
+            memory_budget: 0,
         }
     }
 }
@@ -165,6 +176,40 @@ struct Job {
     data: Arc<Tensor<f32>>,
 }
 
+/// How a pipeline worker turns a field into container bytes: the classic
+/// in-core compressor, or the streaming writer fed from an in-core source
+/// (same bytes, bounded in-flight memory).
+enum JobCodec {
+    Plain(Box<dyn Compressor<f32> + Send + Sync>),
+    Streamed {
+        inner: Box<dyn Compressor<f32> + Send + Sync>,
+        cfg: crate::stream::StreamConfig,
+    },
+}
+
+impl JobCodec {
+    fn compress(&self, data: &Tensor<f32>, tol: Tolerance) -> Result<Vec<u8>> {
+        match self {
+            JobCodec::Plain(c) => c.compress(data, tol),
+            JobCodec::Streamed { inner, cfg } => {
+                let mut out = Vec::new();
+                let src = crate::stream::InCoreSource::new(data);
+                crate::stream::compress_to_writer(&**inner, &src, tol, cfg, &mut out)?;
+                Ok(out)
+            }
+        }
+    }
+
+    fn decompress(&self, bytes: &[u8]) -> Result<Tensor<f32>> {
+        match self {
+            JobCodec::Plain(c) => c.decompress(bytes),
+            // streamed containers are chunked containers; dispatch on the
+            // stream's own header
+            JobCodec::Streamed { .. } => crate::compressors::decompress_any(bytes),
+        }
+    }
+}
+
 /// Run every field of every dataset through the configured compressor.
 pub fn run(
     datasets: &[Dataset],
@@ -174,11 +219,26 @@ pub fn run(
     if cfg.workers == 0 {
         return Err(Error::invalid("pipeline needs at least one worker"));
     }
-    let compressor = match &cfg.block_shape {
-        Some(bs) => make_chunked_compressor(&cfg.method, bs, cfg.threads)?,
-        None => make_compressor(&cfg.method)?,
+    let codec = if cfg.stream {
+        let block_shape = cfg.block_shape.clone().unwrap_or_else(|| vec![64]);
+        JobCodec::Streamed {
+            inner: make_compressor(&cfg.method)?,
+            cfg: crate::stream::StreamConfig {
+                chunk: ChunkedConfig {
+                    block_shape,
+                    threads: cfg.threads,
+                },
+                memory_budget: cfg.memory_budget,
+                spool_dir: None,
+            },
+        }
+    } else {
+        JobCodec::Plain(match &cfg.block_shape {
+            Some(bs) => make_chunked_compressor(&cfg.method, bs, cfg.threads)?,
+            None => make_compressor(&cfg.method)?,
+        })
     };
-    let compressor: Arc<dyn Compressor<f32> + Send + Sync> = Arc::from(compressor);
+    let codec = Arc::new(codec);
     let (job_tx, job_rx) = mpsc::sync_channel::<Job>(cfg.queue_depth.max(1));
     let job_rx = Arc::new(Mutex::new(job_rx));
     let (res_tx, res_rx) = mpsc::channel::<Result<FieldResult>>();
@@ -194,7 +254,7 @@ pub fn run(
             for _ in 0..cfg.workers {
                 let job_rx = Arc::clone(&job_rx);
                 let res_tx = res_tx.clone();
-                let compressor = Arc::clone(&compressor);
+                let codec = Arc::clone(&codec);
                 let tol = cfg.tolerance;
                 let verify = cfg.verify;
                 scope.spawn(move || loop {
@@ -203,7 +263,7 @@ pub fn run(
                         rx.recv()
                     };
                     let Ok(job) = job else { break };
-                    let outcome = process(&*compressor, &job, tol, verify);
+                    let outcome = process(&codec, &job, tol, verify);
                     if res_tx.send(outcome).is_err() {
                         break;
                     }
@@ -245,13 +305,13 @@ pub fn run(
 }
 
 fn process(
-    compressor: &dyn Compressor<f32>,
+    codec: &JobCodec,
     job: &Job,
     tol: Tolerance,
     verify: bool,
 ) -> Result<FieldResult> {
     let t0 = Instant::now();
-    let bytes = compressor.compress(&job.data, tol)?;
+    let bytes = codec.compress(&job.data, tol)?;
     let compress_secs = t0.elapsed().as_secs_f64();
     let mut result = FieldResult {
         dataset: job.dataset.clone(),
@@ -265,7 +325,7 @@ fn process(
     };
     if verify {
         let t1 = Instant::now();
-        let back = compressor.decompress(&bytes)?;
+        let back = codec.decompress(&bytes)?;
         result.decompress_secs = Some(t1.elapsed().as_secs_f64());
         result.psnr = Some(metrics::psnr(job.data.data(), back.data()));
         result.linf = Some(metrics::linf_error(job.data.data(), back.data()));
@@ -352,6 +412,54 @@ mod tests {
         for r in &report.results {
             // verify=true: the decompressed field exists and the bound is
             // finite; the tight per-field bound is asserted in system_e2e
+            assert!(r.comp_bytes > 0);
+            assert!(r.linf.unwrap().is_finite());
+        }
+    }
+
+    #[test]
+    fn streamed_pipeline_matches_chunked_container_bytes() {
+        // the streaming writer path must emit the same container as the
+        // in-core chunked compressor for the same field and settings
+        let ds = tiny_datasets();
+        let field = &ds[0].fields[0].data;
+        let chunked = make_chunked_compressor("mgard+", &[10], 1).unwrap();
+        let want = chunked.compress(field, Tolerance::Rel(1e-3)).unwrap();
+        let streamed = JobCodec::Streamed {
+            inner: make_compressor("mgard+").unwrap(),
+            cfg: crate::stream::StreamConfig {
+                chunk: ChunkedConfig {
+                    block_shape: vec![10],
+                    threads: 1,
+                },
+                memory_budget: 8 * 1024,
+                spool_dir: None,
+            },
+        };
+        let got = streamed.compress(field, Tolerance::Rel(1e-3)).unwrap();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn streamed_pipeline_completes_all_fields() {
+        let ds = tiny_datasets();
+        let njobs: usize = ds.iter().map(|d| d.fields.len()).sum();
+        let reg = Registry::new();
+        let report = run(
+            &ds,
+            &PipelineConfig {
+                workers: 2,
+                method: "mgard+".into(),
+                stream: true,
+                memory_budget: 64 * 1024,
+                threads: 2,
+                ..PipelineConfig::default()
+            },
+            &reg,
+        )
+        .unwrap();
+        assert_eq!(report.results.len(), njobs);
+        for r in &report.results {
             assert!(r.comp_bytes > 0);
             assert!(r.linf.unwrap().is_finite());
         }

@@ -5,8 +5,9 @@
 //! touching the rest of the stack.
 
 use crate::error::{Error, Result};
-use crate::tensor::{numel, Scalar, Tensor};
+use crate::tensor::{numel, strides_for, Scalar, Tensor};
 use std::fs;
+use std::io::{Read, Seek, SeekFrom, Write};
 use std::path::Path;
 
 /// Read a headerless little-endian scalar file into a tensor of `shape`.
@@ -34,6 +35,150 @@ pub fn write_raw<T: Scalar>(path: &Path, t: &Tensor<T>) -> Result<()> {
     Ok(())
 }
 
+/// Validate block-in-field geometry shared by the strided readers/writers.
+fn check_block(field_shape: &[usize], start: &[usize], shape: &[usize]) -> Result<()> {
+    if field_shape.is_empty() {
+        return Err(Error::shape("raw block field rank must be >= 1"));
+    }
+    if start.len() != field_shape.len() || shape.len() != field_shape.len() {
+        return Err(Error::shape("raw block rank mismatch"));
+    }
+    for d in 0..field_shape.len() {
+        if shape[d] == 0 || start[d] + shape[d] > field_shape[d] {
+            return Err(Error::shape(format!(
+                "raw block [{}..{}) exceeds dim {d} of size {}",
+                start[d],
+                start[d] + shape[d],
+                field_shape[d]
+            )));
+        }
+    }
+    Ok(())
+}
+
+/// Walk the contiguous runs of a block inside a row-major field: for every
+/// outer index of the block, `f(file_elem_offset, run_elems)` is called with
+/// the field-flat element offset of the run's first element and the run
+/// length (`shape[last]` elements along the contiguous last dimension).
+fn for_each_run(
+    field_shape: &[usize],
+    start: &[usize],
+    shape: &[usize],
+    mut f: impl FnMut(usize, usize) -> Result<()>,
+) -> Result<()> {
+    let ndim = field_shape.len();
+    let strides = strides_for(field_shape);
+    let run = shape[ndim - 1];
+    let outer = &shape[..ndim - 1];
+    let nruns: usize = outer.iter().product();
+    let mut idx = vec![0usize; outer.len()];
+    for _ in 0..nruns {
+        let mut off = start[ndim - 1];
+        for d in 0..outer.len() {
+            off += (start[d] + idx[d]) * strides[d];
+        }
+        f(off, run)?;
+        for d in (0..idx.len()).rev() {
+            idx[d] += 1;
+            if idx[d] < outer[d] {
+                break;
+            }
+            idx[d] = 0;
+        }
+    }
+    Ok(())
+}
+
+/// Read one block's strided slab from a headerless little-endian raw file
+/// of `field_shape`, seeking to each contiguous run — the whole field is
+/// never resident. This is the I/O primitive behind
+/// `crate::stream::RawFileSource`.
+pub fn read_raw_block<T: Scalar, R: Read + Seek>(
+    src: &mut R,
+    field_shape: &[usize],
+    start: &[usize],
+    shape: &[usize],
+) -> Result<Tensor<T>> {
+    check_block(field_shape, start, shape)?;
+    let mut out = Tensor::<T>::zeros(shape);
+    let run_elems = shape[shape.len() - 1];
+    let mut buf = vec![0u8; run_elems * T::BYTES];
+    let mut k = 0usize;
+    let data = out.data_mut();
+    for_each_run(field_shape, start, shape, |off, run| {
+        src.seek(SeekFrom::Start((off * T::BYTES) as u64))?;
+        src.read_exact(&mut buf)?;
+        for (i, chunk) in buf[..run * T::BYTES].chunks_exact(T::BYTES).enumerate() {
+            data[k + i] = T::read_le(chunk);
+        }
+        k += run;
+        Ok(())
+    })?;
+    Ok(out)
+}
+
+/// Scatter a block tensor into a headerless little-endian raw file of
+/// `field_shape` at `start` (inverse of [`read_raw_block`]): each contiguous
+/// run is seek-written in place, so a full field is materialized on disk one
+/// block at a time.
+pub fn write_raw_block<T: Scalar, W: Write + Seek>(
+    dst: &mut W,
+    field_shape: &[usize],
+    start: &[usize],
+    block: &Tensor<T>,
+) -> Result<()> {
+    check_block(field_shape, start, block.shape())?;
+    let run_elems = block.shape()[block.ndim() - 1];
+    let mut buf = Vec::with_capacity(run_elems * T::BYTES);
+    let data = block.data();
+    let mut k = 0usize;
+    for_each_run(field_shape, start, block.shape(), |off, run| {
+        buf.clear();
+        for &v in &data[k..k + run] {
+            v.write_le(&mut buf);
+        }
+        k += run;
+        dst.seek(SeekFrom::Start((off * T::BYTES) as u64))?;
+        dst.write_all(&buf)?;
+        Ok(())
+    })
+}
+
+/// Streaming (min, max) over a headerless raw file of `n` scalars, scanning
+/// in bounded buffers — semantically identical to [`Tensor::min_max`] on the
+/// same values, so a relative tolerance resolves to the *same* absolute τ
+/// whether the field is in core or on disk.
+pub fn raw_min_max<T: Scalar, R: Read>(src: &mut R, n: usize) -> Result<(T, T)> {
+    if n == 0 {
+        return Err(Error::invalid("min/max of an empty raw file"));
+    }
+    const CHUNK_ELEMS: usize = 1 << 16;
+    let mut buf = vec![0u8; CHUNK_ELEMS * T::BYTES];
+    let mut first = true;
+    let (mut mn, mut mx) = (T::ZERO, T::ZERO);
+    let mut left = n;
+    while left > 0 {
+        let take = left.min(CHUNK_ELEMS);
+        src.read_exact(&mut buf[..take * T::BYTES])?;
+        for chunk in buf[..take * T::BYTES].chunks_exact(T::BYTES) {
+            let v = T::read_le(chunk);
+            if first {
+                mn = v;
+                mx = v;
+                first = false;
+            }
+            if v < mn {
+                mn = v;
+            }
+            if v > mx {
+                mx = v;
+            }
+        }
+        left -= take;
+    }
+    Ok((mn, mx))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -47,6 +192,71 @@ mod tests {
         let back: Tensor<f32> = read_raw(&path, &[4, 5]).unwrap();
         assert_eq!(t, back);
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn strided_block_reads_match_in_core_blocks() {
+        let dir = std::env::temp_dir().join(format!("mgardp_io_blk_{}", std::process::id()));
+        for (shape, start, bshape) in [
+            (vec![37], vec![5], vec![9]),
+            (vec![9, 11], vec![2, 3], vec![4, 7]),
+            (vec![5, 6, 7], vec![1, 0, 3], vec![3, 6, 4]),
+        ] {
+            let t = Tensor::<f32>::from_fn(&shape, |ix| {
+                ix.iter().enumerate().map(|(d, &i)| (d + 1) * i).sum::<usize>() as f32 * 0.25
+            });
+            let path = dir.join(format!("f_{}.f32", shape.len()));
+            write_raw(&path, &t).unwrap();
+            let mut f = fs::File::open(&path).unwrap();
+            let got: Tensor<f32> = read_raw_block(&mut f, &shape, &start, &bshape).unwrap();
+            assert_eq!(got, t.block(&start, &bshape).unwrap());
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn strided_block_writes_reassemble_the_field() {
+        let dir = std::env::temp_dir().join(format!("mgardp_io_scatter_{}", std::process::id()));
+        fs::create_dir_all(&dir).unwrap();
+        let shape = [6, 7, 8];
+        let t = Tensor::<f64>::from_fn(&shape, |ix| (ix[0] * 56 + ix[1] * 8 + ix[2]) as f64);
+        let path = dir.join("scatter.f64");
+        {
+            let mut f = fs::File::create(&path).unwrap();
+            // two slabs along dim 0, written out of order
+            let hi = t.block(&[4, 0, 0], &[2, 7, 8]).unwrap();
+            write_raw_block(&mut f, &shape, &[4, 0, 0], &hi).unwrap();
+            let lo = t.block(&[0, 0, 0], &[4, 7, 8]).unwrap();
+            write_raw_block(&mut f, &shape, &[0, 0, 0], &lo).unwrap();
+        }
+        let back: Tensor<f64> = read_raw(&path, &shape).unwrap();
+        assert_eq!(back, t);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn raw_min_max_matches_tensor_min_max() {
+        let dir = std::env::temp_dir().join(format!("mgardp_io_mm_{}", std::process::id()));
+        let t = Tensor::<f32>::from_fn(&[13, 17], |ix| {
+            ((ix[0] as f32) * 0.7 - 4.0).sin() * 3.0 - ix[1] as f32 * 0.01
+        });
+        let path = dir.join("mm.f32");
+        write_raw(&path, &t).unwrap();
+        let mut f = fs::File::open(&path).unwrap();
+        let (mn, mx) = raw_min_max::<f32, _>(&mut f, t.len()).unwrap();
+        assert_eq!((mn, mx), t.min_max());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn block_geometry_validated() {
+        let mut cur = std::io::Cursor::new(vec![0u8; 4 * 4 * 4]);
+        // out of bounds
+        assert!(read_raw_block::<f32, _>(&mut cur, &[4, 4], &[2, 0], &[3, 4]).is_err());
+        // rank mismatch
+        assert!(read_raw_block::<f32, _>(&mut cur, &[4, 4], &[0], &[2, 2]).is_err());
+        // zero-extent block
+        assert!(read_raw_block::<f32, _>(&mut cur, &[4, 4], &[0, 0], &[0, 2]).is_err());
     }
 
     #[test]

@@ -32,6 +32,21 @@ pub enum Error {
 
     /// A worker in the coordinator pipeline panicked or failed.
     Pipeline(String),
+
+    /// A chunked container's index declares a blob region that falls outside
+    /// the blob section (structured so callers can distinguish an index
+    /// inconsistency — e.g. a truncated final block — from generic stream
+    /// corruption).
+    BlobOutOfRange {
+        /// Index of the offending block entry.
+        block: usize,
+        /// Declared byte offset of the blob inside the blob section.
+        offset: usize,
+        /// Declared blob length in bytes.
+        len: usize,
+        /// Size of the blob section in bytes.
+        section: usize,
+    },
 }
 
 impl std::fmt::Display for Error {
@@ -46,6 +61,16 @@ impl std::fmt::Display for Error {
             Error::Xla(m) => write!(f, "xla runtime: {m}"),
             Error::Config(m) => write!(f, "config: {m}"),
             Error::Pipeline(m) => write!(f, "pipeline: {m}"),
+            Error::BlobOutOfRange {
+                block,
+                offset,
+                len,
+                section,
+            } => write!(
+                f,
+                "chunk index: block {block} declares blob [{offset}, {offset} + {len}) \
+                 outside the {section}-byte blob section"
+            ),
         }
     }
 }
@@ -96,6 +121,18 @@ mod tests {
             Error::corrupt("short read").to_string(),
             "corrupt stream: short read"
         );
+    }
+
+    #[test]
+    fn blob_out_of_range_display() {
+        let e = Error::BlobOutOfRange {
+            block: 3,
+            offset: 10,
+            len: 40,
+            section: 32,
+        };
+        let s = e.to_string();
+        assert!(s.contains("block 3") && s.contains("32-byte"), "{s}");
     }
 
     #[test]

@@ -34,6 +34,7 @@ pub mod grid;
 pub mod metrics;
 pub mod quant;
 pub mod runtime;
+pub mod stream;
 pub mod tensor;
 
 pub use error::{Error, Result};

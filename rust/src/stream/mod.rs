@@ -1,0 +1,203 @@
+//! Streaming, out-of-core chunked compression and decompression.
+//!
+//! The chunked pipeline ([`crate::chunk`]) tiles a field into blocks and
+//! compresses them in parallel — but its `compress` entry point needs the
+//! whole field in core. This module removes that cap for simulation-scale
+//! fields (the paper's §VI evaluates multi-GB snapshots):
+//!
+//! * [`BlockSource`] abstracts where blocks come from: an in-core tensor
+//!   ([`InCoreSource`]) or a raw file on disk read one strided slab at a
+//!   time ([`RawFileSource`]).
+//! * [`compress_to_writer`] drives the worker pool under a configurable
+//!   [`StreamConfig::memory_budget`]: at most `window` blocks are in flight
+//!   (read but not yet written out), enforced by backpressure in
+//!   [`crate::chunk::pool::parallel_map_ordered`].
+//! * [`ContainerWriter`] streams compressed blobs to any [`std::io::Write`]
+//!   sink and back-patches the chunk index at finalize.
+//! * [`StreamingDecompressor`] mirrors the writer: it parses only the
+//!   header + index, then decodes blocks on demand — the whole field to a
+//!   raw-file sink, or just a sub-domain via `decompress_region`.
+//!
+//! The streamed container is **byte-identical** to the one the in-core
+//! [`crate::chunk::ChunkedCompressor`] produces for the same input, block
+//! shape and tolerance — the two paths cross-check each other (enforced in
+//! `rust/tests/streaming.rs`).
+
+pub mod reader;
+pub mod source;
+pub mod writer;
+
+pub use reader::StreamingDecompressor;
+pub use source::{BlockSource, InCoreSource, RawFileSource};
+pub use writer::ContainerWriter;
+
+use crate::chunk::pool::parallel_map_ordered;
+use crate::chunk::{partition, resolve_block_shape, ChunkedConfig};
+use crate::compressors::{Compressor, Tolerance};
+use crate::error::{Error, Result};
+use crate::grid::Hierarchy;
+use crate::tensor::{numel, Scalar};
+use std::io::Write;
+use std::path::PathBuf;
+
+/// Configuration of the streaming pipeline.
+#[derive(Clone, Debug, Default)]
+pub struct StreamConfig {
+    /// Block shape and worker threads, exactly as in the in-core chunked
+    /// path (single-entry shapes broadcast to the field rank).
+    pub chunk: ChunkedConfig,
+    /// Approximate cap, in bytes, on the raw data held in flight: the
+    /// number of concurrently resident blocks is
+    /// `max(1, memory_budget / (2 × largest_block_bytes))`, sized from the
+    /// largest block the partition actually produced (a factor 2 covers
+    /// the raw slab plus its compressed blob; codec workspace is
+    /// excluded). `0` means unbounded — every block may be in flight at
+    /// once.
+    pub memory_budget: usize,
+    /// Directory for the blob spool file; `None` buffers compressed blobs
+    /// in memory (fine when the *compressed* size fits comfortably).
+    pub spool_dir: Option<PathBuf>,
+}
+
+/// Resolve a byte budget to an in-flight block window given the largest
+/// *actual* block of the partition in elements (remainder-merged blocks can
+/// be bigger than the nominal shape — up to ~2× per dimension — so sizing
+/// from the nominal shape would overshoot the budget).
+pub fn window_for_budget<T: Scalar>(
+    memory_budget: usize,
+    max_block_numel: usize,
+    nblocks: usize,
+) -> usize {
+    if memory_budget == 0 {
+        return nblocks.max(1);
+    }
+    let per_block = 2 * max_block_numel * T::BYTES;
+    (memory_budget / per_block.max(1)).clamp(1, nblocks.max(1))
+}
+
+/// Compress `source` block-at-a-time with `inner`, streaming the chunked
+/// container to `sink`. Returns the total container size in bytes.
+///
+/// Semantics match [`Compressor::compress`] on a
+/// [`crate::chunk::ChunkedCompressor`] exactly —
+/// the tolerance is resolved once against the whole field's value range and
+/// every block is encoded at that absolute τ — and the emitted bytes are
+/// identical to the in-core path's for the same input. Peak memory is
+/// bounded by the in-flight window (see [`StreamConfig::memory_budget`])
+/// plus the spool copy buffer, never the field or the blob section.
+pub fn compress_to_writer<T, C, S, W>(
+    inner: &C,
+    source: &S,
+    tol: Tolerance,
+    cfg: &StreamConfig,
+    sink: W,
+) -> Result<u64>
+where
+    T: Scalar,
+    C: Compressor<T> + Sync + ?Sized,
+    S: BlockSource<T> + ?Sized,
+    W: Write,
+{
+    // an absolute tolerance never consults the value range, so skip the
+    // full-field min/max scan (a whole extra I/O pass on a RawFileSource)
+    let tau = match tol {
+        Tolerance::Abs(t) => t,
+        Tolerance::Rel(_) => tol.absolute(source.value_range()?),
+    };
+    if tau <= 0.0 {
+        return Err(Error::invalid("tolerance must be positive"));
+    }
+    let field_shape = source.shape().to_vec();
+    let block_shape = resolve_block_shape(&cfg.chunk.block_shape, field_shape.len())?;
+    let blocks = partition(&field_shape, &block_shape)?;
+    let max_block_numel = blocks.iter().map(|b| numel(&b.shape)).max().unwrap_or(1);
+    let window = window_for_budget::<T>(cfg.memory_budget, max_block_numel, blocks.len());
+    let mut writer = match &cfg.spool_dir {
+        Some(dir) => ContainerWriter::spooled::<T>(
+            sink,
+            &field_shape,
+            tau,
+            block_shape.clone(),
+            dir,
+        )?,
+        None => ContainerWriter::in_memory::<T>(sink, &field_shape, tau, block_shape.clone()),
+    };
+    parallel_map_ordered(
+        blocks.len(),
+        cfg.chunk.threads,
+        window,
+        |i| {
+            let b = &blocks[i];
+            let sub = source.read_block(&b.start, &b.shape)?;
+            let bytes = inner.compress(&sub, Tolerance::Abs(tau))?;
+            let nlevels = Hierarchy::new(&b.shape, None)?.nlevels();
+            Ok((bytes, nlevels))
+        },
+        |i, (bytes, nlevels)| {
+            let b = &blocks[i];
+            writer.push_block(&b.start, &b.shape, nlevels, &bytes)
+        },
+    )?;
+    let (_sink, total) = writer.finalize()?;
+    Ok(total)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compressors::MgardPlus;
+    use crate::data::synth;
+
+    #[test]
+    fn window_resolution() {
+        // 16³-element f32 blocks are 16 KiB raw, 32 KiB with the in-flight
+        // factor
+        let w = window_for_budget::<f32>(256 * 1024, 16 * 16 * 16, 100);
+        assert_eq!(w, 8);
+        // budget below one block still makes progress
+        assert_eq!(window_for_budget::<f32>(1, 16 * 16 * 16, 100), 1);
+        // zero budget = unbounded
+        assert_eq!(window_for_budget::<f32>(0, 16 * 16 * 16, 100), 100);
+        // window never exceeds the block count
+        assert_eq!(window_for_budget::<f32>(usize::MAX, 16, 3), 3);
+    }
+
+    #[test]
+    fn vec_sink_matches_in_core_chunked_compress() {
+        let t = synth::smooth_test_field(&[21, 22, 23]);
+        let codec = MgardPlus::default().chunked(ChunkedConfig {
+            block_shape: vec![10],
+            threads: 2,
+        });
+        let want = codec.compress(&t, Tolerance::Rel(1e-3)).unwrap();
+        let mut got = Vec::new();
+        let cfg = StreamConfig {
+            chunk: ChunkedConfig {
+                block_shape: vec![10],
+                threads: 2,
+            },
+            memory_budget: 64 * 1024, // well below the 388 KiB field
+            spool_dir: None,
+        };
+        let src = InCoreSource::new(&t);
+        let total =
+            compress_to_writer(&MgardPlus::default(), &src, Tolerance::Rel(1e-3), &cfg, &mut got)
+                .unwrap();
+        assert_eq!(got, want);
+        assert_eq!(total as usize, want.len());
+    }
+
+    #[test]
+    fn invalid_tolerance_rejected() {
+        let t = synth::smooth_test_field(&[8, 8]);
+        let src = InCoreSource::new(&t);
+        let r = compress_to_writer(
+            &MgardPlus::default(),
+            &src,
+            Tolerance::Abs(0.0),
+            &StreamConfig::default(),
+            Vec::<u8>::new(),
+        );
+        assert!(r.is_err());
+    }
+}

@@ -1,0 +1,303 @@
+//! Streaming decompression of chunked containers.
+//!
+//! [`StreamingDecompressor`] parses only the container *prefix* (header +
+//! per-block index) from any seekable byte stream, then decodes blocks on
+//! demand: the blob section is never resident in memory. That enables
+//! decompressing fields larger than RAM straight to a raw-file sink, and
+//! random access to sub-domains via [`StreamingDecompressor::decompress_region`],
+//! which touches only the blocks intersecting the requested box.
+
+use crate::chunk::container::{self, ChunkIndex};
+use crate::chunk::partition::intersect;
+use crate::chunk::pool::{effective_threads, parallel_map};
+use crate::compressors::{decompress_any, peek_method, Header, Method};
+use crate::data::io;
+use crate::error::{Error, Result};
+use crate::tensor::{numel, Scalar, Tensor};
+use std::io::{Read, Seek, SeekFrom, Write};
+
+/// Upper bound on the container prefix (header + index) the reader will
+/// buffer while parsing: ~16 MiB covers several hundred thousand block
+/// entries, far beyond any partition the compressor emits.
+const MAX_INDEX_PREFIX: u64 = 1 << 24;
+
+/// Decodes a chunked container block-at-a-time from a seekable stream.
+pub struct StreamingDecompressor<R: Read + Seek> {
+    src: R,
+    header: Header,
+    index: ChunkIndex,
+    /// Absolute byte offset of the blob section inside the stream.
+    blob_start: u64,
+    /// Declared blob-section length in bytes.
+    blob_len: usize,
+    /// Worker threads for batched block decoding (0 = available
+    /// parallelism). Blob *reads* stay serial on the single stream handle;
+    /// only the CPU-side decode fans out.
+    threads: usize,
+}
+
+impl<R: Read + Seek> StreamingDecompressor<R> {
+    /// Parse the prefix of a chunked container and validate that the
+    /// stream physically holds the declared blob section, so a container
+    /// truncated mid-stream errors here instead of at first block access.
+    pub fn open(mut src: R) -> Result<Self> {
+        let stream_len = src.seek(SeekFrom::End(0))?;
+        src.seek(SeekFrom::Start(0))?;
+        let mut buf: Vec<u8> = Vec::new();
+        let cap = stream_len.min(MAX_INDEX_PREFIX);
+        let (header, index, blob_start, blob_len) = loop {
+            match container::read_index(&buf) {
+                Ok(parsed) => break parsed,
+                Err(e) => {
+                    // only a CorruptStream can mean "prefix not fully
+                    // buffered yet"; bad magic / wrong method / version
+                    // mismatches (UnsupportedFormat) and index
+                    // inconsistencies (BlobOutOfRange) are definitive, so
+                    // fail fast instead of reading up to the prefix cap
+                    let retryable = matches!(e, Error::CorruptStream(_));
+                    if !retryable || buf.len() as u64 >= cap {
+                        return Err(e);
+                    }
+                    // grow geometrically so huge indexes need few passes
+                    let want = (buf.len().max(4096) as u64).min(cap - buf.len() as u64);
+                    let old = buf.len();
+                    buf.resize(old + want as usize, 0);
+                    src.read_exact(&mut buf[old..])?;
+                }
+            }
+        };
+        let declared_end = (blob_start as u64)
+            .checked_add(blob_len as u64)
+            .ok_or_else(|| Error::corrupt("blob section length overflow"))?;
+        if declared_end > stream_len {
+            return Err(Error::corrupt(format!(
+                "container truncated mid-stream: blob section needs {declared_end} bytes, \
+                 stream holds {stream_len}"
+            )));
+        }
+        // the partition writers always cover the field exactly; reject a
+        // point-count mismatch up front so a missing or duplicated block
+        // fails at open instead of surfacing as zero-filled output. (Like
+        // the in-core assemble() check this is a point-count test: a
+        // crafted index pairing an overlap with a compensating gap can
+        // still pass — each point is only guaranteed to be covered *on
+        // average*, not exactly once.)
+        let covered: usize = index.entries.iter().map(|e| numel(&e.shape)).sum();
+        if covered != numel(&header.shape) {
+            return Err(Error::corrupt(format!(
+                "block index covers {covered} points, field has {}",
+                numel(&header.shape)
+            )));
+        }
+        Ok(StreamingDecompressor {
+            src,
+            header,
+            index,
+            blob_start: blob_start as u64,
+            blob_len,
+            threads: 0,
+        })
+    }
+
+    /// Set the decode worker count (0 = available parallelism, the
+    /// default). Returns `self` for chaining after [`Self::open`].
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.threads = threads;
+        self
+    }
+
+    /// The container header (field shape, dtype tag, absolute tolerance).
+    pub fn header(&self) -> &Header {
+        &self.header
+    }
+
+    /// The per-block index.
+    pub fn index(&self) -> &ChunkIndex {
+        &self.index
+    }
+
+    /// Number of blocks in the container.
+    pub fn nblocks(&self) -> usize {
+        self.index.entries.len()
+    }
+
+    /// Declared size of the blob section in bytes.
+    pub fn blob_len(&self) -> usize {
+        self.blob_len
+    }
+
+    /// Read block `i`'s blob bytes (already range-validated at open).
+    fn read_blob(&mut self, i: usize) -> Result<Vec<u8>> {
+        let e = self
+            .index
+            .entries
+            .get(i)
+            .ok_or_else(|| Error::invalid(format!("block {i} out of {}", self.nblocks())))?;
+        self.src
+            .seek(SeekFrom::Start(self.blob_start + e.offset as u64))?;
+        let mut blob = vec![0u8; e.len];
+        self.src.read_exact(&mut blob)?;
+        Ok(blob)
+    }
+
+    /// Read blobs `lo..hi` serially, then decode them on the worker pool.
+    /// The batch bounds resident memory to `hi - lo` blobs plus their
+    /// decoded tensors while restoring the chunked format's decode
+    /// parallelism on the streaming path.
+    fn decode_batch<T: Scalar>(&mut self, lo: usize, hi: usize) -> Result<Vec<Tensor<T>>> {
+        let mut blobs = Vec::with_capacity(hi - lo);
+        for i in lo..hi {
+            blobs.push(self.read_blob(i)?);
+        }
+        let inner = self.index.inner;
+        let entries = &self.index.entries[lo..hi];
+        let results = parallel_map(blobs.len(), self.threads, |k| {
+            let method = peek_method(&blobs[k])?;
+            if method != inner {
+                return Err(Error::corrupt(format!(
+                    "block {} is a {method:?} blob, index says {inner:?}",
+                    lo + k
+                )));
+            }
+            let block: Tensor<T> = decompress_any(&blobs[k])?;
+            if block.shape() != entries[k].shape.as_slice() {
+                return Err(Error::corrupt(format!(
+                    "block {} decoded to {:?}, index says {:?}",
+                    lo + k,
+                    block.shape(),
+                    entries[k].shape
+                )));
+            }
+            Ok(block)
+        });
+        let mut out = Vec::with_capacity(results.len());
+        for r in results {
+            out.push(r?);
+        }
+        Ok(out)
+    }
+
+    /// Decode block `i` on demand.
+    pub fn decompress_block<T: Scalar>(&mut self, i: usize) -> Result<Tensor<T>> {
+        self.header.expect::<T>(Method::Chunked)?;
+        let blob = self.read_blob(i)?;
+        let method = peek_method(&blob)?;
+        if method != self.index.inner {
+            return Err(Error::corrupt(format!(
+                "block {i} is a {method:?} blob, index says {:?}",
+                self.index.inner
+            )));
+        }
+        let block: Tensor<T> = decompress_any(&blob)?;
+        let e = &self.index.entries[i];
+        if block.shape() != e.shape.as_slice() {
+            return Err(Error::corrupt(format!(
+                "block {i} decoded to {:?}, index says {:?}",
+                block.shape(),
+                e.shape
+            )));
+        }
+        Ok(block)
+    }
+
+    /// Decompress only the sub-domain `[start, start + shape)`: blocks that
+    /// do not intersect the region are never read or decoded. The returned
+    /// tensor has shape `shape` and satisfies the container's global L∞
+    /// tolerance pointwise (every point is produced by exactly one block).
+    pub fn decompress_region<T: Scalar>(
+        &mut self,
+        start: &[usize],
+        shape: &[usize],
+    ) -> Result<Tensor<T>> {
+        self.header.expect::<T>(Method::Chunked)?;
+        let field = self.header.shape.clone();
+        if start.len() != field.len() || shape.len() != field.len() {
+            return Err(Error::shape("region rank mismatch"));
+        }
+        for d in 0..field.len() {
+            let inside = shape[d] > 0
+                && matches!(start[d].checked_add(shape[d]), Some(end) if end <= field[d]);
+            if !inside {
+                return Err(Error::shape(format!(
+                    "region [{start:?} + {shape:?}) outside field {field:?}"
+                )));
+            }
+        }
+        let mut out = Tensor::<T>::zeros(shape);
+        let hits: Vec<(usize, Vec<usize>, Vec<usize>)> = self
+            .index
+            .entries
+            .iter()
+            .enumerate()
+            .filter_map(|(i, e)| {
+                intersect(start, shape, &e.start, &e.shape)
+                    .map(|(is, ish)| (i, is, ish))
+            })
+            .collect();
+        for (i, isect_start, isect_shape) in hits {
+            let block: Tensor<T> = self.decompress_block(i)?;
+            let e = &self.index.entries[i];
+            let rel_block: Vec<usize> = isect_start
+                .iter()
+                .zip(&e.start)
+                .map(|(&a, &b)| a - b)
+                .collect();
+            let rel_out: Vec<usize> = isect_start
+                .iter()
+                .zip(start)
+                .map(|(&a, &b)| a - b)
+                .collect();
+            let piece = block.block(&rel_block, &isect_shape)?;
+            out.set_block(&rel_out, &piece)?;
+        }
+        Ok(out)
+    }
+
+    /// Decompress the whole field into memory. Blocks are decoded in
+    /// bounded parallel batches, so peak memory is the output plus one
+    /// batch. Point-count coverage of the field by the index was already
+    /// validated at [`Self::open`].
+    pub fn decompress<T: Scalar>(&mut self) -> Result<Tensor<T>> {
+        self.header.expect::<T>(Method::Chunked)?;
+        let field = self.header.shape.clone();
+        let mut out = Tensor::<T>::zeros(&field);
+        let n = self.nblocks();
+        let batch = 2 * effective_threads(self.threads, n);
+        let mut lo = 0;
+        while lo < n {
+            let hi = (lo + batch).min(n);
+            let blocks = self.decode_batch::<T>(lo, hi)?;
+            for (k, block) in blocks.into_iter().enumerate() {
+                let start = self.index.entries[lo + k].start.clone();
+                out.set_block(&start, &block)?;
+            }
+            lo = hi;
+        }
+        Ok(out)
+    }
+
+    /// Decompress the whole field straight into a seekable raw-file sink
+    /// (headerless little-endian, the layout
+    /// [`crate::data::io::read_raw`] reads): the out-of-core mirror of the
+    /// streaming compressor. Blocks decode in bounded parallel batches and
+    /// scatter to the sink as each batch completes — neither the field nor
+    /// the blob section is ever fully resident.
+    pub fn decompress_to_raw<T: Scalar, W: Write + Seek>(&mut self, sink: &mut W) -> Result<u64> {
+        self.header.expect::<T>(Method::Chunked)?;
+        let field = self.header.shape.clone();
+        let n = self.nblocks();
+        let batch = 2 * effective_threads(self.threads, n);
+        let mut lo = 0;
+        while lo < n {
+            let hi = (lo + batch).min(n);
+            let blocks = self.decode_batch::<T>(lo, hi)?;
+            for (k, block) in blocks.into_iter().enumerate() {
+                let start = self.index.entries[lo + k].start.clone();
+                io::write_raw_block(sink, &field, &start, &block)?;
+            }
+            lo = hi;
+        }
+        sink.flush()?;
+        Ok((numel(&field) * T::BYTES) as u64)
+    }
+}

@@ -1,0 +1,153 @@
+//! Where streamed blocks come from: an in-core tensor or a raw file on
+//! disk read one strided slab at a time.
+
+use crate::data::io;
+use crate::error::{Error, Result};
+use crate::tensor::{numel, Scalar, Tensor};
+use std::fs;
+use std::marker::PhantomData;
+use std::path::{Path, PathBuf};
+
+/// A field that can hand out one block at a time.
+///
+/// The streaming compressor never asks for more than the blocks inside its
+/// in-flight window, so an implementation backed by external storage keeps
+/// peak memory proportional to the window, not the field. Implementations
+/// must be `Sync`: blocks are read concurrently from pool workers.
+pub trait BlockSource<T: Scalar>: Sync {
+    /// Shape of the whole field.
+    fn shape(&self) -> &[usize];
+
+    /// `max − min` over the whole field, used to resolve a relative
+    /// tolerance to the absolute τ every block is encoded at. Must be
+    /// computed exactly as [`Tensor::value_range`] so the streamed
+    /// container is byte-identical to the in-core one.
+    fn value_range(&self) -> Result<f64>;
+
+    /// Read the block `[start, start + shape)` into a dense tensor.
+    fn read_block(&self, start: &[usize], shape: &[usize]) -> Result<Tensor<T>>;
+}
+
+/// [`BlockSource`] over a tensor already in memory. Exists so the streaming
+/// writer path can be cross-checked byte-for-byte against the in-core
+/// chunked path on the same input.
+pub struct InCoreSource<'a, T: Scalar> {
+    data: &'a Tensor<T>,
+}
+
+impl<'a, T: Scalar> InCoreSource<'a, T> {
+    /// Wrap a borrowed tensor.
+    pub fn new(data: &'a Tensor<T>) -> Self {
+        InCoreSource { data }
+    }
+}
+
+impl<T: Scalar> BlockSource<T> for InCoreSource<'_, T> {
+    fn shape(&self) -> &[usize] {
+        self.data.shape()
+    }
+
+    fn value_range(&self) -> Result<f64> {
+        Ok(self.data.value_range())
+    }
+
+    fn read_block(&self, start: &[usize], shape: &[usize]) -> Result<Tensor<T>> {
+        self.data.block(start, shape)
+    }
+}
+
+/// [`BlockSource`] over a headerless little-endian raw file (the SDRBench
+/// layout [`crate::data::io`] already reads whole): each block is fetched
+/// with per-run `seek`/`read`, so fields larger than RAM compress under a
+/// fixed memory budget. Every call opens its own file handle, which keeps
+/// concurrent reads from pool workers coordination-free.
+pub struct RawFileSource<T: Scalar> {
+    path: PathBuf,
+    shape: Vec<usize>,
+    _elem: PhantomData<T>,
+}
+
+impl<T: Scalar> RawFileSource<T> {
+    /// Open `path` as a field of `shape`, validating the file size against
+    /// the shape up front.
+    pub fn new(path: &Path, shape: &[usize]) -> Result<Self> {
+        if shape.is_empty() || shape.contains(&0) {
+            return Err(Error::invalid(format!("bad raw field shape {shape:?}")));
+        }
+        let expect = (numel(shape) * T::BYTES) as u64;
+        let actual = fs::metadata(path)?.len();
+        if actual != expect {
+            return Err(Error::invalid(format!(
+                "{} is {actual} bytes; shape {shape:?} needs {expect}",
+                path.display()
+            )));
+        }
+        Ok(RawFileSource {
+            path: path.to_path_buf(),
+            shape: shape.to_vec(),
+            _elem: PhantomData,
+        })
+    }
+
+    /// The backing file path.
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+}
+
+impl<T: Scalar> BlockSource<T> for RawFileSource<T> {
+    fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    fn value_range(&self) -> Result<f64> {
+        let mut f = fs::File::open(&self.path)?;
+        let (mn, mx) = io::raw_min_max::<T, _>(&mut f, numel(&self.shape))?;
+        Ok(mx.to_f64() - mn.to_f64())
+    }
+
+    fn read_block(&self, start: &[usize], shape: &[usize]) -> Result<Tensor<T>> {
+        let mut f = fs::File::open(&self.path)?;
+        io::read_raw_block(&mut f, &self.shape, start, shape)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth;
+
+    #[test]
+    fn raw_file_source_mirrors_in_core_source() {
+        let dir = std::env::temp_dir().join(format!("mgardp_src_{}", std::process::id()));
+        let t = synth::smooth_test_field(&[9, 12, 7]);
+        let path = dir.join("field.f32");
+        io::write_raw(&path, &t).unwrap();
+
+        let file_src = RawFileSource::<f32>::new(&path, &[9, 12, 7]).unwrap();
+        let core_src = InCoreSource::new(&t);
+        assert_eq!(file_src.shape(), core_src.shape());
+        // identical fold order -> bitwise-equal value range
+        assert_eq!(
+            file_src.value_range().unwrap(),
+            core_src.value_range().unwrap()
+        );
+        let a = file_src.read_block(&[2, 3, 1], &[5, 6, 4]).unwrap();
+        let b = core_src.read_block(&[2, 3, 1], &[5, 6, 4]).unwrap();
+        assert_eq!(a, b);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn raw_file_source_validates_size_and_shape() {
+        let dir = std::env::temp_dir().join(format!("mgardp_src_bad_{}", std::process::id()));
+        let t = synth::smooth_test_field(&[4, 4]);
+        let path = dir.join("small.f32");
+        io::write_raw(&path, &t).unwrap();
+        assert!(RawFileSource::<f32>::new(&path, &[4, 5]).is_err());
+        assert!(RawFileSource::<f64>::new(&path, &[4, 4]).is_err());
+        assert!(RawFileSource::<f32>::new(&path, &[]).is_err());
+        assert!(RawFileSource::<f32>::new(&dir.join("absent.f32"), &[4, 4]).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,356 @@
+//! Incremental chunked-container writer.
+//!
+//! The chunked container places the per-block index (whose offsets and
+//! lengths are varint-encoded, hence variable-width) *before* the blob
+//! section, so a byte-identical container cannot be emitted strictly
+//! front-to-back while blocks are still being compressed. [`ContainerWriter`]
+//! therefore spools blobs as they arrive — to a temporary file for the
+//! out-of-core path, or to memory for small jobs — accumulates the
+//! lightweight index, and at [`ContainerWriter::finalize`] writes the fully
+//! patched prefix (header + index + section length) to the sink followed by
+//! a bounded-buffer copy of the spool. Peak memory is the index plus one
+//! copy buffer, never the blob section; the output is byte-identical to
+//! [`crate::chunk::container::write_container`] fed the same blocks in the
+//! same order.
+
+use crate::chunk::container::{BlockEntry, ChunkIndex};
+use crate::compressors::{peek_method, Method};
+use crate::error::{Error, Result};
+use crate::tensor::Scalar;
+use std::fs;
+use std::io::{self, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Distinguishes concurrently created spool files within one process.
+static SPOOL_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// Where pushed blobs wait for [`ContainerWriter::finalize`].
+enum Spool {
+    /// Blobs buffered in memory (fine when the compressed size is small).
+    Mem(Vec<u8>),
+    /// Blobs spooled to a temporary file (the out-of-core path). The file
+    /// is deleted on finalize or drop.
+    File { file: fs::File, path: PathBuf },
+}
+
+impl Spool {
+    fn write_all(&mut self, blob: &[u8]) -> Result<()> {
+        match self {
+            Spool::Mem(v) => {
+                v.extend_from_slice(blob);
+                Ok(())
+            }
+            Spool::File { file, .. } => {
+                file.write_all(blob)?;
+                Ok(())
+            }
+        }
+    }
+}
+
+impl Drop for Spool {
+    fn drop(&mut self) {
+        if let Spool::File { path, .. } = self {
+            let _ = fs::remove_file(path);
+        }
+    }
+}
+
+/// Streams per-block blobs to any [`io::Write`] sink, back-patching the
+/// chunk index when the stream is finalized.
+///
+/// Blocks must be pushed in row-major block order (the order
+/// [`crate::chunk::partition::partition`] enumerates), matching the on-disk
+/// index order of the in-core path.
+pub struct ContainerWriter<W: Write> {
+    sink: W,
+    dtype: u8,
+    field_shape: Vec<usize>,
+    tau_abs: f64,
+    block_shape: Vec<usize>,
+    inner: Option<Method>,
+    entries: Vec<BlockEntry>,
+    spool: Spool,
+    spooled_bytes: usize,
+}
+
+impl<W: Write> ContainerWriter<W> {
+    /// Writer whose blobs are buffered in memory until finalize.
+    pub fn in_memory<T: Scalar>(
+        sink: W,
+        field_shape: &[usize],
+        tau_abs: f64,
+        block_shape: Vec<usize>,
+    ) -> Self {
+        ContainerWriter {
+            sink,
+            dtype: T::DTYPE_TAG,
+            field_shape: field_shape.to_vec(),
+            tau_abs,
+            block_shape,
+            inner: None,
+            entries: Vec::new(),
+            spool: Spool::Mem(Vec::new()),
+            spooled_bytes: 0,
+        }
+    }
+
+    /// Writer whose blobs are spooled to a fresh temporary file under
+    /// `spool_dir` (created if absent), keeping memory bounded regardless
+    /// of the compressed size.
+    pub fn spooled<T: Scalar>(
+        sink: W,
+        field_shape: &[usize],
+        tau_abs: f64,
+        block_shape: Vec<usize>,
+        spool_dir: &Path,
+    ) -> Result<Self> {
+        fs::create_dir_all(spool_dir)?;
+        let path = spool_dir.join(format!(
+            "mgardp_spool_{}_{}.blob",
+            std::process::id(),
+            SPOOL_SEQ.fetch_add(1, Ordering::Relaxed)
+        ));
+        let file = fs::OpenOptions::new()
+            .read(true)
+            .write(true)
+            .create_new(true)
+            .open(&path)?;
+        let mut w = Self::in_memory::<T>(sink, field_shape, tau_abs, block_shape);
+        w.spool = Spool::File { file, path };
+        Ok(w)
+    }
+
+    /// Number of blocks pushed so far.
+    pub fn blocks_written(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Append one compressed block. `blob` must be a complete
+    /// self-describing container of a non-chunked inner method; the first
+    /// push fixes the container's inner-method tag and every later blob
+    /// must match it.
+    pub fn push_block(
+        &mut self,
+        start: &[usize],
+        shape: &[usize],
+        nlevels: usize,
+        blob: &[u8],
+    ) -> Result<()> {
+        if start.len() != self.field_shape.len() || shape.len() != self.field_shape.len() {
+            return Err(Error::shape("pushed block rank mismatch"));
+        }
+        for d in 0..shape.len() {
+            if start[d] + shape[d] > self.field_shape[d] {
+                return Err(Error::shape(format!(
+                    "pushed block [{start:?} + {shape:?}) outside field {:?}",
+                    self.field_shape
+                )));
+            }
+        }
+        let method = peek_method(blob)?;
+        if method == Method::Chunked {
+            return Err(Error::invalid(
+                "nested chunked compressors are not supported",
+            ));
+        }
+        match self.inner {
+            None => self.inner = Some(method),
+            Some(m) if m == method => {}
+            Some(m) => {
+                return Err(Error::invalid(format!(
+                    "pushed {method:?} blob into a container of {m:?} blobs"
+                )))
+            }
+        }
+        self.entries.push(BlockEntry {
+            offset: self.spooled_bytes,
+            len: blob.len(),
+            start: start.to_vec(),
+            shape: shape.to_vec(),
+            nlevels,
+            tau_abs: self.tau_abs,
+        });
+        self.spool.write_all(blob)?;
+        self.spooled_bytes += blob.len();
+        Ok(())
+    }
+
+    /// Write the back-patched prefix (header + index + section length) to
+    /// the sink, stream the spooled blobs after it, and return the sink
+    /// together with the total container size in bytes.
+    pub fn finalize(mut self) -> Result<(W, u64)> {
+        let inner = self
+            .inner
+            .ok_or_else(|| Error::invalid("cannot finalize a container with no blocks"))?;
+        // hand the accumulated index to the shared prefix serializer (the
+        // same code path `write_container` uses, guaranteeing byte
+        // identity with the in-core chunked compressor)
+        let index = ChunkIndex {
+            inner,
+            block_shape: std::mem::take(&mut self.block_shape),
+            entries: std::mem::take(&mut self.entries),
+        };
+        let mut prefix = Vec::with_capacity(64 + 64 * index.entries.len());
+        index.write_prefix(
+            &mut prefix,
+            self.dtype,
+            &self.field_shape,
+            self.tau_abs,
+            self.spooled_bytes,
+        );
+        self.sink.write_all(&prefix)?;
+        match &mut self.spool {
+            Spool::Mem(v) => self.sink.write_all(v)?,
+            Spool::File { file, .. } => {
+                file.flush()?;
+                file.seek(SeekFrom::Start(0))?;
+                let copied = io::copy(file, &mut self.sink)?;
+                if copied != self.spooled_bytes as u64 {
+                    return Err(Error::corrupt(format!(
+                        "spool copy moved {copied} bytes, expected {}",
+                        self.spooled_bytes
+                    )));
+                }
+            }
+        }
+        self.sink.flush()?;
+        let total = prefix.len() as u64 + self.spooled_bytes as u64;
+        Ok((self.sink, total))
+    }
+
+    /// The parsed-form index accumulated so far (for diagnostics/tests).
+    pub fn index(&self) -> Option<ChunkIndex> {
+        self.inner.map(|inner| ChunkIndex {
+            inner,
+            block_shape: self.block_shape.clone(),
+            entries: self.entries.clone(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::chunk::container;
+    use crate::compressors::Header;
+
+    fn blobs() -> Vec<Vec<u8>> {
+        // two tiny but well-formed inner containers (method MgardPlus)
+        let mk = |shape: &[usize], payload: &[u8]| {
+            let mut b = Vec::new();
+            Header {
+                method: Method::MgardPlus,
+                dtype: 1,
+                shape: shape.to_vec(),
+                tau_abs: 0.5,
+            }
+            .write(&mut b);
+            b.extend_from_slice(payload);
+            b
+        };
+        vec![mk(&[8, 8], b"aaa"), mk(&[9, 8], b"zz")]
+    }
+
+    fn reference_container(blobs: &[Vec<u8>]) -> Vec<u8> {
+        let entries = vec![
+            BlockEntry {
+                offset: 0,
+                len: blobs[0].len(),
+                start: vec![0, 0],
+                shape: vec![8, 8],
+                nlevels: 2,
+                tau_abs: 0.5,
+            },
+            BlockEntry {
+                offset: blobs[0].len(),
+                len: blobs[1].len(),
+                start: vec![8, 0],
+                shape: vec![9, 8],
+                nlevels: 3,
+                tau_abs: 0.5,
+            },
+        ];
+        container::write_container::<f32>(
+            &[17, 8],
+            0.5,
+            &ChunkIndex {
+                inner: Method::MgardPlus,
+                block_shape: vec![8, 8],
+                entries,
+            },
+            blobs,
+        )
+    }
+
+    #[test]
+    fn incremental_writer_matches_write_container_bytes() {
+        let blobs = blobs();
+        let want = reference_container(&blobs);
+        for spooled in [false, true] {
+            let dir = std::env::temp_dir().join(format!(
+                "mgardp_writer_{}_{spooled}",
+                std::process::id()
+            ));
+            let mut w = if spooled {
+                ContainerWriter::spooled::<f32>(Vec::new(), &[17, 8], 0.5, vec![8, 8], &dir)
+                    .unwrap()
+            } else {
+                ContainerWriter::in_memory::<f32>(Vec::new(), &[17, 8], 0.5, vec![8, 8])
+            };
+            w.push_block(&[0, 0], &[8, 8], 2, &blobs[0]).unwrap();
+            w.push_block(&[8, 0], &[9, 8], 3, &blobs[1]).unwrap();
+            assert_eq!(w.blocks_written(), 2);
+            let (got, total) = w.finalize().unwrap();
+            assert_eq!(got, want, "spooled={spooled}");
+            assert_eq!(total as usize, want.len());
+            std::fs::remove_dir_all(&dir).ok();
+        }
+    }
+
+    #[test]
+    fn spool_file_removed_after_finalize_and_on_drop() {
+        let dir = std::env::temp_dir().join(format!("mgardp_writer_rm_{}", std::process::id()));
+        let blobs = blobs();
+        let mut w =
+            ContainerWriter::spooled::<f32>(Vec::<u8>::new(), &[17, 8], 0.5, vec![8, 8], &dir)
+                .unwrap();
+        w.push_block(&[0, 0], &[8, 8], 2, &blobs[0]).unwrap();
+        w.push_block(&[8, 0], &[9, 8], 3, &blobs[1]).unwrap();
+        w.finalize().unwrap();
+        // abandoned writer: spool cleaned up by Drop
+        let mut w2 =
+            ContainerWriter::spooled::<f32>(Vec::<u8>::new(), &[17, 8], 0.5, vec![8, 8], &dir)
+                .unwrap();
+        w2.push_block(&[0, 0], &[8, 8], 2, &blobs[0]).unwrap();
+        drop(w2);
+        let leftovers: Vec<_> = std::fs::read_dir(&dir)
+            .map(|rd| rd.filter_map(|e| e.ok()).collect())
+            .unwrap_or_default();
+        assert!(leftovers.is_empty(), "spool files leaked: {leftovers:?}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn writer_rejects_bad_blocks() {
+        let blobs = blobs();
+        let mut w = ContainerWriter::in_memory::<f32>(Vec::<u8>::new(), &[17, 8], 0.5, vec![8, 8]);
+        // out-of-field block
+        assert!(w.push_block(&[10, 0], &[9, 8], 2, &blobs[0]).is_err());
+        // garbage blob (no header)
+        assert!(w.push_block(&[0, 0], &[8, 8], 2, b"junk").is_err());
+        // nested chunked blob
+        let mut nested = Vec::new();
+        Header {
+            method: Method::Chunked,
+            dtype: 1,
+            shape: vec![8, 8],
+            tau_abs: 0.5,
+        }
+        .write(&mut nested);
+        assert!(w.push_block(&[0, 0], &[8, 8], 2, &nested).is_err());
+        // no blocks -> finalize refuses
+        assert!(w.finalize().is_err());
+    }
+}

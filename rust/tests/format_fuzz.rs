@@ -131,6 +131,54 @@ fn random_garbage_never_panics() {
 }
 
 #[test]
+fn truncated_final_block_is_structured_error() {
+    // build a real chunked container, then re-serialize it with the final
+    // blob truncated: the index still declares the full length, so the
+    // declared region overruns the (shorter) blob section. The parser must
+    // surface the *structured* error — pinpointing the block — for every
+    // truncation depth, and the streamed reader path must agree.
+    use mgardp::chunk::container::{read_container, read_index, write_container};
+    use mgardp::error::Error;
+
+    let (_, bytes) = chunked_container();
+    let (header, index, blob) = read_container(&bytes).unwrap();
+    let nblocks = index.entries.len();
+    assert!(nblocks >= 2, "fuzz case needs a multi-block container");
+    let last = index.entries.last().unwrap().clone();
+    let mut rng = Rng::new(0x77121C);
+    for _ in 0..50 {
+        let cut = 1 + rng.below(last.len - 1);
+        let mut blobs: Vec<Vec<u8>> = index
+            .entries
+            .iter()
+            .map(|e| blob[e.offset..e.offset + e.len].to_vec())
+            .collect();
+        let short = blobs.last_mut().unwrap();
+        short.truncate(short.len() - cut);
+        let bad = write_container::<f32>(&header.shape, header.tau_abs, &index, &blobs);
+        match read_container(&bad) {
+            Err(Error::BlobOutOfRange {
+                block,
+                offset,
+                len,
+                section,
+            }) => {
+                assert_eq!(block, nblocks - 1);
+                assert_eq!(offset, last.offset);
+                assert_eq!(len, last.len);
+                assert_eq!(section, last.offset + last.len - cut);
+            }
+            other => panic!("cut {cut}: expected BlobOutOfRange, got {other:?}"),
+        }
+        // the prefix-only parser returns the same structured error
+        assert!(matches!(
+            read_index(&bad),
+            Err(Error::BlobOutOfRange { .. })
+        ));
+    }
+}
+
+#[test]
 fn oversized_counts_do_not_allocate() {
     // a chunked container whose block count field claims 2^40 blocks must be
     // rejected by the plausibility bound, not die in Vec::with_capacity

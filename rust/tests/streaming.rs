@@ -1,0 +1,249 @@
+//! The streaming/out-of-core contract: a raw-file-backed field compressed
+//! under a memory budget smaller than the field yields a container
+//! byte-identical to the in-core chunked path; region decompression decodes
+//! only intersecting blocks yet honours the global L∞ bound; truncated
+//! containers error cleanly at open.
+
+use mgardp::chunk::{ChunkedCompressor, ChunkedConfig};
+use mgardp::compressors::{decompress_any_from, Compressor, MgardPlus, Tolerance};
+use mgardp::data::{io, synth};
+use mgardp::error::Error;
+use mgardp::metrics::linf_error;
+use mgardp::stream::{compress_to_writer, RawFileSource, StreamConfig, StreamingDecompressor};
+use mgardp::tensor::Tensor;
+use std::path::PathBuf;
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("mgardp_streamtest_{tag}_{}", std::process::id()));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+fn stream_cfg(
+    block: &[usize],
+    threads: usize,
+    budget: usize,
+    spool: Option<PathBuf>,
+) -> StreamConfig {
+    StreamConfig {
+        chunk: ChunkedConfig {
+            block_shape: block.to_vec(),
+            threads,
+        },
+        memory_budget: budget,
+        spool_dir: spool,
+    }
+}
+
+/// Compress `t` both ways — in-core `ChunkedCompressor` and the streaming
+/// writer over a raw file on disk — and require byte-identical containers.
+fn assert_byte_identity(t: &Tensor<f32>, block: &[usize], budget: usize, tag: &str) -> Vec<u8> {
+    let dir = tmp_dir(tag);
+    let raw = dir.join("field.f32");
+    io::write_raw(&raw, t).unwrap();
+
+    let codec = MgardPlus::default().chunked(ChunkedConfig {
+        block_shape: block.to_vec(),
+        threads: 3,
+    });
+    let want = codec.compress(t, Tolerance::Rel(1e-3)).unwrap();
+
+    let source = RawFileSource::<f32>::new(&raw, t.shape()).unwrap();
+    let out_path = dir.join("streamed.mgrp");
+    let sink = std::io::BufWriter::new(std::fs::File::create(&out_path).unwrap());
+    let written = compress_to_writer(
+        &MgardPlus::default(),
+        &source,
+        Tolerance::Rel(1e-3),
+        &stream_cfg(block, 3, budget, Some(dir.clone())),
+        sink,
+    )
+    .unwrap();
+    let got = std::fs::read(&out_path).unwrap();
+    assert_eq!(written as usize, got.len());
+    assert_eq!(got, want, "streamed container differs ({tag})");
+    std::fs::remove_dir_all(&dir).ok();
+    want
+}
+
+#[test]
+fn byte_identity_1d_with_remainder() {
+    let t = synth::smooth_test_field(&[107]);
+    // budget far below the 428-byte-per-block scale: window of 1–2 blocks
+    assert_byte_identity(&t, &[16], 256, "1d");
+}
+
+#[test]
+fn byte_identity_2d_with_remainder() {
+    let t = synth::smooth_test_field(&[33, 49]);
+    assert_byte_identity(&t, &[16, 16], 4 * 1024, "2d");
+}
+
+#[test]
+fn byte_identity_3d_17_33_65() {
+    // the canonical remainder-heavy shape: merged (17), merged-tail
+    // (16+17) and multi-block (16+16+16+17) dimensions at once, under a
+    // budget (64 KiB) far below the 1.4 MiB field
+    let t = synth::smooth_test_field(&[17, 33, 65]);
+    assert_byte_identity(&t, &[16, 16, 16], 64 * 1024, "3d");
+}
+
+#[test]
+fn region_decode_matches_full_and_honours_bound() {
+    let dir = tmp_dir("region");
+    let t = synth::smooth_test_field(&[17, 33, 65]);
+    let codec = MgardPlus::default().chunked(ChunkedConfig {
+        block_shape: vec![16],
+        threads: 2,
+    });
+    let bytes = codec.compress(&t, Tolerance::Rel(1e-3)).unwrap();
+    let path = dir.join("c.mgrp");
+    std::fs::write(&path, &bytes).unwrap();
+    let full: Tensor<f32> = codec.decompress(&bytes).unwrap();
+    let tau = 1e-3 * t.value_range();
+
+    let f = std::io::BufReader::new(std::fs::File::open(&path).unwrap());
+    let mut d = StreamingDecompressor::open(f).unwrap();
+    // a box crossing seams in all three dimensions, plus degenerate and
+    // aligned boxes
+    for (start, shape) in [
+        (vec![10, 12, 30], vec![7, 21, 35]),
+        (vec![0, 0, 0], vec![17, 33, 65]),
+        (vec![16, 16, 16], vec![1, 1, 1]),
+        (vec![0, 16, 48], vec![16, 16, 17]),
+    ] {
+        let region: Tensor<f32> = d.decompress_region(&start, &shape).unwrap();
+        // bitwise-identical to the same box sliced out of the full
+        // reconstruction: the same blocks decode either way
+        assert_eq!(
+            region,
+            full.block(&start, &shape).unwrap(),
+            "region [{start:?} + {shape:?})"
+        );
+        let direct = t.block(&start, &shape).unwrap();
+        assert!(linf_error(direct.data(), region.data()) <= tau * (1.0 + 1e-6));
+    }
+    // out-of-field regions are rejected
+    assert!(d.decompress_region::<f32>(&[10, 0, 0], &[8, 4, 4]).is_err());
+    assert!(d.decompress_region::<f32>(&[0, 0], &[4, 4]).is_err());
+    assert!(d.decompress_region::<f32>(&[0, 0, 0], &[0, 4, 4]).is_err());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn streaming_decompress_to_raw_round_trips() {
+    let dir = tmp_dir("to_raw");
+    let t = synth::smooth_test_field(&[19, 21, 23]);
+    let raw = dir.join("in.f32");
+    io::write_raw(&raw, &t).unwrap();
+    let source = RawFileSource::<f32>::new(&raw, t.shape()).unwrap();
+    let comp = dir.join("c.mgrp");
+    let sink = std::io::BufWriter::new(std::fs::File::create(&comp).unwrap());
+    compress_to_writer(
+        &MgardPlus::default(),
+        &source,
+        Tolerance::Rel(1e-3),
+        &stream_cfg(&[8], 2, 32 * 1024, Some(dir.clone())),
+        sink,
+    )
+    .unwrap();
+
+    let f = std::io::BufReader::new(std::fs::File::open(&comp).unwrap());
+    let mut d = StreamingDecompressor::open(f).unwrap();
+    let rec = dir.join("rec.f32");
+    let mut out = std::fs::File::create(&rec).unwrap();
+    let n = d.decompress_to_raw::<f32, _>(&mut out).unwrap();
+    assert_eq!(n as usize, t.nbytes());
+    drop(out);
+    let back: Tensor<f32> = io::read_raw(&rec, t.shape()).unwrap();
+    let tau = 1e-3 * t.value_range();
+    assert!(linf_error(t.data(), back.data()) <= tau * (1.0 + 1e-6));
+
+    // ... and the streamed reconstruction is bitwise the in-core one
+    let codec = ChunkedCompressor::new(
+        MgardPlus::default(),
+        ChunkedConfig {
+            block_shape: vec![8],
+            threads: 2,
+        },
+    );
+    let in_core: Tensor<f32> = codec
+        .decompress(&std::fs::read(&comp).unwrap())
+        .unwrap();
+    assert_eq!(back, in_core);
+
+    // decompress_any_from dispatches seekable streams too
+    let f2 = std::io::BufReader::new(std::fs::File::open(&comp).unwrap());
+    let any: Tensor<f32> = decompress_any_from(f2).unwrap();
+    assert_eq!(any, in_core);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn mid_stream_truncation_errors_cleanly() {
+    let t = synth::smooth_test_field(&[20, 24]);
+    let codec = MgardPlus::default().chunked(ChunkedConfig {
+        block_shape: vec![8],
+        threads: 1,
+    });
+    let bytes = codec.compress(&t, Tolerance::Rel(1e-3)).unwrap();
+    // every prefix of the container: open (or any later decode) must fail
+    // with an error, never panic and never succeed
+    for cut in 0..bytes.len() {
+        let cur = std::io::Cursor::new(bytes[..cut].to_vec());
+        match StreamingDecompressor::open(cur) {
+            Err(_) => {}
+            Ok(mut d) => {
+                // if the prefix happened to parse (cut inside trailing
+                // padding can't occur — the index byte-range is exact), the
+                // data must still fail to decode fully
+                let r: Result<Tensor<f32>, Error> = d.decompress();
+                assert!(r.is_err(), "truncation at {cut} decoded successfully");
+            }
+        }
+    }
+    // the untruncated stream still opens fine
+    let mut d = StreamingDecompressor::open(std::io::Cursor::new(bytes.clone())).unwrap();
+    let full: Tensor<f32> = d.decompress().unwrap();
+    assert_eq!(full.shape(), t.shape());
+}
+
+#[test]
+fn incomplete_coverage_refused_at_open() {
+    // an index that omits a block (field not fully covered) must be
+    // rejected at open, not silently zero-filled by decompress_region
+    use mgardp::chunk::container::{read_container, write_container};
+    let t = synth::smooth_test_field(&[20, 24]);
+    let codec = MgardPlus::default().chunked(ChunkedConfig {
+        block_shape: vec![8],
+        threads: 1,
+    });
+    let bytes = codec.compress(&t, Tolerance::Rel(1e-3)).unwrap();
+    let (header, mut index, blob) = read_container(&bytes).unwrap();
+    let mut blobs: Vec<Vec<u8>> = index
+        .entries
+        .iter()
+        .map(|e| blob[e.offset..e.offset + e.len].to_vec())
+        .collect();
+    let dropped = index.entries.pop().unwrap();
+    blobs.pop();
+    assert!(dropped.len > 0);
+    let bad = write_container::<f32>(&header.shape, header.tau_abs, &index, &blobs);
+    let r = StreamingDecompressor::open(std::io::Cursor::new(bad));
+    assert!(matches!(r.err(), Some(Error::CorruptStream(_))));
+}
+
+#[test]
+fn truncated_blob_section_refused_at_open() {
+    // a stream physically shorter than the declared blob section must be
+    // refused at open, before any block access (the index itself parses)
+    let t = synth::smooth_test_field(&[20, 24]);
+    let codec = MgardPlus::default().chunked(ChunkedConfig {
+        block_shape: vec![8],
+        threads: 1,
+    });
+    let mut bytes = codec.compress(&t, Tolerance::Rel(1e-3)).unwrap();
+    bytes.truncate(bytes.len() - 3);
+    let r = StreamingDecompressor::open(std::io::Cursor::new(bytes));
+    assert!(matches!(r.err(), Some(Error::CorruptStream(_))));
+}

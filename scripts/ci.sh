@@ -1,0 +1,63 @@
+#!/usr/bin/env bash
+# Mirror of .github/workflows/ci.yml: every gate GitHub Actions runs, in the
+# same order, so offline builders verify exactly what CI verifies.
+#
+#   scripts/ci.sh            run all gates on the default toolchain
+#   scripts/ci.sh --msrv     also build+test on the pinned MSRV (needs
+#                            `rustup toolchain install 1.70.0`)
+#
+# Gates: build (release), tests, bench targets compile, rustfmt, clippy
+# (-D warnings), rustdoc (-D warnings), examples smoke (tiny inputs).
+set -euo pipefail
+
+cd "$(dirname "$0")/.."
+
+MSRV=1.70.0
+run_msrv=0
+for arg in "$@"; do
+  case "$arg" in
+    --msrv) run_msrv=1 ;;
+    *) echo "unknown flag: $arg" >&2; exit 2 ;;
+  esac
+done
+
+step() { printf '\n==> %s\n' "$*"; }
+
+step "build (release)"
+cargo build --release
+
+step "tier-1 tests"
+cargo test -q
+
+step "bench targets compile"
+cargo bench --no-run
+
+step "rustfmt"
+if cargo fmt --version >/dev/null 2>&1; then
+  cargo fmt --check
+else
+  echo "SKIP: rustfmt component not installed (CI runs it)" >&2
+fi
+
+step "clippy (-D warnings)"
+if cargo clippy --version >/dev/null 2>&1; then
+  cargo clippy --all-targets -- -D warnings
+else
+  echo "SKIP: clippy component not installed (CI runs it)" >&2
+fi
+
+step "rustdoc (-D warnings)"
+RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
+
+step "examples smoke (tiny synthetic inputs)"
+MGARDP_SMOKE=1 cargo run --release --example quickstart
+MGARDP_SMOKE=1 MGARDP_THREADS=2 cargo run --release --example chunked_parallel
+MGARDP_SMOKE=1 cargo run --release --example streaming
+
+if [ "$run_msrv" = 1 ]; then
+  step "MSRV build + test ($MSRV)"
+  cargo "+$MSRV" build --release
+  cargo "+$MSRV" test -q
+fi
+
+step "all CI gates passed"
