@@ -1,0 +1,57 @@
+//! Fixed vs variance-guided adaptive tiling: ratio/throughput curve over
+//! the relative variance threshold on a synthetic field with a
+//! smooth/turbulent split (the workload TAC-style adaptive partitioning is
+//! built for). Writes `bench_out/adaptive_tiling.csv`.
+
+use mgardp::bench_util::{adaptive_tiling_curve, bench_scale, smoke_mode, CsvOut};
+use mgardp::compressors::Tolerance;
+use mgardp::data::synth;
+
+fn main() -> mgardp::Result<()> {
+    let n = if smoke_mode() { 48 } else { (96.0 * bench_scale().max(0.2)) as usize };
+    let field = synth::split_test_field(&[n, n, n], 42);
+    let (warmup, runs) = if smoke_mode() { (0, 1) } else { (1, 3) };
+    let thresholds = [0.1, 0.25, 0.5, 0.75, 1.0];
+    let mut csv = CsvOut::create(
+        "adaptive_tiling",
+        "tiling,variance_threshold,nblocks,ratio,comp_mbs,linf",
+    )?;
+
+    println!(
+        "split field {:?} ({:.1} MB), rel tolerance 1e-3, min blocks 8³, nominal 32³\n",
+        field.shape(),
+        field.nbytes() as f64 / 1e6
+    );
+    let ((fixed, fixed_nblocks), points) = adaptive_tiling_curve(
+        &field,
+        Tolerance::Rel(1e-3),
+        &[32],
+        &[8],
+        &thresholds,
+        warmup,
+        runs,
+    )?;
+    println!(
+        "{:<10} {:>10} {:>8} {:>8} {:>12} {:>12}",
+        "tiling", "threshold", "blocks", "CR", "comp MB/s", "L∞"
+    );
+    println!(
+        "{:<10} {:>10} {:>8} {:>8.2} {:>12.1} {:>12.3e}",
+        "fixed", "-", fixed_nblocks, fixed.ratio, fixed.comp_mbs, fixed.linf
+    );
+    csv.row(&format!(
+        "fixed,,{fixed_nblocks},{:.4},{:.2},{:.6e}",
+        fixed.ratio, fixed.comp_mbs, fixed.linf
+    ));
+    for p in &points {
+        println!(
+            "{:<10} {:>10} {:>8} {:>8.2} {:>12.1} {:>12.3e}",
+            "adaptive", p.variance_threshold, p.nblocks, p.ratio, p.comp_mbs, p.linf
+        );
+        csv.row(&format!(
+            "adaptive,{},{},{:.4},{:.2},{:.6e}",
+            p.variance_threshold, p.nblocks, p.ratio, p.comp_mbs, p.linf
+        ));
+    }
+    Ok(())
+}

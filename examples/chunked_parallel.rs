@@ -1,13 +1,14 @@
 //! Chunked parallel compression: tile a field into blocks, compress them on
-//! a worker pool, and read individual blocks back without touching the rest
-//! of the container.
+//! a worker pool, read individual blocks back without touching the rest of
+//! the container, and compare fixed against variance-guided adaptive tiling
+//! (the CLI's `--adaptive-tiling`).
 //!
 //! Run with: `cargo run --release --example chunked_parallel`
 //! (`MGARDP_THREADS=8` sets the widest point of the scaling sweep;
 //! `MGARDP_SMOKE=1` shrinks the field and sweep for CI smoke runs.)
 
 use mgardp::bench_util::chunked_scaling;
-use mgardp::chunk::{container, ChunkedConfig};
+use mgardp::chunk::{container, ChunkedConfig, Tiling};
 use mgardp::compressors::{Compressor, MgardPlus, Tolerance};
 use mgardp::data::synth;
 use mgardp::metrics::{compression_ratio, linf_error, throughput_mbs};
@@ -34,6 +35,7 @@ fn main() -> mgardp::Result<()> {
     let codec = MgardPlus::default().chunked(ChunkedConfig {
         block_shape: vec![32],
         threads: max_threads,
+        ..Default::default()
     });
     let bytes = codec.compress(&field, Tolerance::Rel(rel))?;
     let back = codec.decompress(&bytes)?;
@@ -63,6 +65,48 @@ fn main() -> mgardp::Result<()> {
         e.shape,
         e.len,
         linf_error(direct.data(), one.data())
+    );
+
+    // --- variance-guided adaptive tiling on a smooth/turbulent split ---
+    // (the CLI spelling: `mgardp compress … --adaptive-tiling
+    //  --min-block-shape 8x8x8 --variance-threshold 0.5`)
+    let split = synth::split_test_field(&[n, n, n], 42);
+    let split_tau = rel * split.value_range();
+    let fixed_codec = MgardPlus::default().chunked(ChunkedConfig {
+        block_shape: vec![32],
+        threads: max_threads,
+        tiling: Tiling::Fixed,
+    });
+    let adaptive_codec = MgardPlus::default().chunked(ChunkedConfig {
+        block_shape: vec![32],
+        threads: max_threads,
+        tiling: Tiling::Adaptive {
+            min_block_shape: vec![8],
+            variance_threshold: 0.5,
+        },
+    });
+    let fixed_bytes = fixed_codec.compress(&split, Tolerance::Rel(rel))?;
+    let adaptive_bytes = adaptive_codec.compress(&split, Tolerance::Rel(rel))?;
+    let (_, fixed_index, _) = container::read_container(&fixed_bytes)?;
+    let (_, adaptive_index, _) = container::read_container(&adaptive_bytes)?;
+    let adaptive_back = adaptive_codec.decompress(&adaptive_bytes)?;
+    let adaptive_err = linf_error(split.data(), adaptive_back.data());
+    println!(
+        "\nadaptive tiling on a smooth/turbulent split field {:?}:",
+        split.shape()
+    );
+    println!(
+        "  fixed    : {:>4} blocks, {} bytes (CR {:.2})",
+        fixed_index.entries.len(),
+        fixed_bytes.len(),
+        compression_ratio(split.nbytes(), fixed_bytes.len())
+    );
+    println!(
+        "  adaptive : {:>4} blocks, {} bytes (CR {:.2}), L∞ {adaptive_err:.3e} <= τ: {}",
+        adaptive_index.entries.len(),
+        adaptive_bytes.len(),
+        compression_ratio(split.nbytes(), adaptive_bytes.len()),
+        adaptive_err <= split_tau
     );
 
     // --- thread-scaling sweep vs the single-threaded unchunked path ---

@@ -38,6 +38,7 @@ fn main() -> mgardp::Result<()> {
         chunk: ChunkedConfig {
             block_shape: vec![block],
             threads: 4,
+            ..Default::default()
         },
         memory_budget: budget,
         spool_dir: Some(dir.clone()),
@@ -56,6 +57,7 @@ fn main() -> mgardp::Result<()> {
     let codec = MgardPlus::default().chunked(ChunkedConfig {
         block_shape: vec![block],
         threads: 4,
+        ..Default::default()
     });
     let in_core = codec.compress(&field, Tolerance::Rel(1e-3))?;
     let streamed = std::fs::read(&comp)?;

@@ -186,6 +186,7 @@ pub fn chunked_scaling(
         let codec = MgardPlus::default().chunked(crate::chunk::ChunkedConfig {
             block_shape: block_shape.to_vec(),
             threads,
+            ..Default::default()
         });
         // capture the last timed result instead of paying an extra
         // untimed compress/decompress per scaling point
@@ -216,6 +217,81 @@ pub fn chunked_scaling(
         });
     }
     Ok((base.median, points))
+}
+
+/// One point of the fixed-vs-adaptive tiling comparison.
+#[derive(Clone, Copy, Debug)]
+pub struct AdaptiveTilingPoint {
+    /// Relative variance threshold the adaptive layout ran with.
+    pub variance_threshold: f64,
+    /// Blocks in the adaptive container.
+    pub nblocks: usize,
+    /// Compression ratio of the adaptive container.
+    pub ratio: f64,
+    /// Adaptive compression throughput (MB/s, median).
+    pub comp_mbs: f64,
+    /// L∞ error of the reassembled field (must stay within the bound).
+    pub linf: f64,
+}
+
+/// Measure variance-guided adaptive tiling against the fixed tiling on the
+/// same field, codec and tolerance: returns the fixed baseline
+/// ([`EvalPoint`] plus its block count) and one point per requested
+/// variance threshold. Every point's reassembled field is verified against
+/// the same absolute L∞ bound the fixed path guarantees.
+pub fn adaptive_tiling_curve(
+    data: &crate::tensor::Tensor<f32>,
+    tol: crate::compressors::Tolerance,
+    block_shape: &[usize],
+    min_block_shape: &[usize],
+    thresholds: &[f64],
+    warmup: usize,
+    runs: usize,
+) -> crate::error::Result<((EvalPoint, usize), Vec<AdaptiveTilingPoint>)> {
+    use crate::chunk::{container, ChunkedConfig, Tiling};
+    use crate::compressors::{Compressor, MgardPlus};
+    let tau = tol.absolute(data.value_range());
+    let fixed_codec = MgardPlus::default().chunked(ChunkedConfig {
+        block_shape: block_shape.to_vec(),
+        threads: 0,
+        tiling: Tiling::Fixed,
+    });
+    let fixed = eval_point(&fixed_codec, data, tol)?;
+    let fixed_bytes = fixed_codec.compress(data, tol)?;
+    let fixed_nblocks = container::read_container(&fixed_bytes)?.1.entries.len();
+    let mut points = Vec::with_capacity(thresholds.len());
+    for &variance_threshold in thresholds {
+        let codec = MgardPlus::default().chunked(ChunkedConfig {
+            block_shape: block_shape.to_vec(),
+            threads: 0,
+            tiling: Tiling::Adaptive {
+                min_block_shape: min_block_shape.to_vec(),
+                variance_threshold,
+            },
+        });
+        let mut last_bytes: Option<Vec<u8>> = None;
+        let t_comp = time_fn(warmup, runs, || {
+            last_bytes = Some(codec.compress(data, tol).unwrap());
+        });
+        let bytes = last_bytes.take().expect("at least one timed run");
+        let nblocks = container::read_container(&bytes)?.1.entries.len();
+        let back: crate::tensor::Tensor<f32> = codec.decompress(&bytes)?;
+        let linf = crate::metrics::linf_error(data.data(), back.data());
+        if linf > tau * (1.0 + 1e-6) {
+            return Err(crate::error::Error::invalid(format!(
+                "adaptive tiling broke the L∞ bound: {linf} > {tau} at threshold \
+                 {variance_threshold}"
+            )));
+        }
+        points.push(AdaptiveTilingPoint {
+            variance_threshold,
+            nblocks,
+            ratio: crate::metrics::compression_ratio(data.nbytes(), bytes.len()),
+            comp_mbs: crate::metrics::throughput_mbs(data.nbytes(), t_comp.median),
+            linf,
+        });
+    }
+    Ok(((fixed, fixed_nblocks), points))
 }
 
 /// True when the benches should shrink workloads (smoke mode for CI):
@@ -278,6 +354,26 @@ mod tests {
         assert_eq!(points.len(), 2);
         assert_eq!(points[0].threads, 1);
         assert!(points.iter().all(|p| p.comp_mbs > 0.0 && p.linf.is_finite()));
+    }
+
+    #[test]
+    fn adaptive_curve_points_bounded() {
+        let t = crate::data::synth::split_test_field(&[24, 24], 7);
+        let ((fixed, fixed_nblocks), points) = adaptive_tiling_curve(
+            &t,
+            crate::compressors::Tolerance::Rel(1e-3),
+            &[8],
+            &[4],
+            &[0.25, 1.0],
+            0,
+            1,
+        )
+        .unwrap();
+        assert!(fixed.ratio > 0.0 && fixed_nblocks > 1);
+        assert_eq!(points.len(), 2);
+        assert!(points.iter().all(|p| p.nblocks >= 1 && p.linf.is_finite()));
+        // threshold >= 1 can never split the root: one block
+        assert_eq!(points[1].nblocks, 1);
     }
 
     #[test]

@@ -1,0 +1,556 @@
+//! Variance-guided adaptive tiling: heterogeneous block layouts that match
+//! the partition to local data behaviour.
+//!
+//! The fixed partition ([`partition()`]) gives every region the
+//! same nominal block shape, so smooth and turbulent regions pay the same
+//! tiling cost. This module instead builds the tile list from the data:
+//!
+//! 1. The field is covered by a grid of *cells* of the configured minimum
+//!    block shape (remainders < 2 merge exactly as in the fixed partition;
+//!    a trailing remainder of 2 or more stands alone as a smaller cell).
+//! 2. One streaming pass reads each cell once — through the same strided
+//!    block reads the out-of-core path uses (`crate::data::io`), so the
+//!    pass works identically whether the field is in core or on disk — and
+//!    folds per-cell count and squared-deviation statistics (accumulated
+//!    relative to each cell's first value, so large mean offsets cannot
+//!    cancel the fluctuation signal).
+//! 3. A recursive split/merge descent over the cell grid scores every tile
+//!    by its **sub-cell variance** — the pooled variance of the data
+//!    *within* its min-shape cells. Pooling within cells makes the score
+//!    trend-invariant: a steep but smooth gradient (which the multilevel
+//!    decomposition compresses well at any block size) scores near zero,
+//!    while small-scale turbulence scores its full noise variance. A tile
+//!    whose score is at most `variance_threshold ×` the whole field's
+//!    sub-cell variance is kept; otherwise every splittable dimension is
+//!    bisected, down to single cells.
+//!
+//! Smooth regions therefore stay one large block (a uniform field collapses
+//! to a single block covering the whole field) while turbulent regions are
+//! refined to the minimum shape. Every tile is a union of cells, so tile
+//! extents are at least 2 and — remainder cells aside — at least the
+//! minimum shape; each tile carries a valid grid hierarchy.
+//!
+//! Determinism: cell statistics are folded in row-major cell order with
+//! f64 accumulators and the descent is data-independent given those
+//! statistics, so the tile list — and hence the container bytes — is
+//! identical run to run and thread-count independent, and identical
+//! between the in-core and streamed compression paths.
+//!
+//! ```
+//! use mgardp::chunk::{ChunkedConfig, Tiling};
+//! use mgardp::compressors::{Compressor, MgardPlus, Tolerance};
+//! let field = mgardp::data::synth::split_test_field(&[24, 24], 7);
+//! let codec = MgardPlus::default().chunked(ChunkedConfig {
+//!     block_shape: vec![8],
+//!     threads: 1,
+//!     tiling: Tiling::Adaptive {
+//!         min_block_shape: vec![4],
+//!         variance_threshold: 0.5,
+//!     },
+//! });
+//! let bytes = codec.compress(&field, Tolerance::Rel(1e-2)).unwrap();
+//! let back: mgardp::tensor::Tensor<f32> = codec.decompress(&bytes).unwrap();
+//! assert_eq!(back.shape(), field.shape());
+//! ```
+
+use super::container::TilingPolicy;
+use super::partition::{partition, resolve_block_shape, segments, Block};
+use super::pool::parallel_map;
+use crate::error::{Error, Result};
+use crate::tensor::{Scalar, Tensor};
+
+/// Default minimum block extent of [`Tiling::Adaptive`] when the CLI or a
+/// pipeline config enables adaptive tiling without choosing one
+/// (broadcasts to the field rank). Shared by every user surface so the
+/// documented default cannot drift.
+pub const DEFAULT_MIN_BLOCK_EXTENT: usize = 16;
+
+/// Default relative variance threshold of [`Tiling::Adaptive`], shared by
+/// every user surface (see [`DEFAULT_MIN_BLOCK_EXTENT`]).
+pub const DEFAULT_VARIANCE_THRESHOLD: f64 = 0.5;
+
+/// How the chunked pipeline tiles a field (the *configuration*; the policy
+/// a container records is [`TilingPolicy`]).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub enum Tiling {
+    /// Every block has the nominal shape (trailing remainders < 2 merged),
+    /// exactly as in PR 1. This is the default.
+    #[default]
+    Fixed,
+    /// Variance-guided adaptive layout: split tiles whose sub-cell
+    /// variance exceeds `variance_threshold ×` the whole field's down to
+    /// `min_block_shape`, keep smoother tiles large.
+    Adaptive {
+        /// Smallest tile extent per dimension (a single entry broadcasts to
+        /// the field rank; every entry must be >= 2). This is also the cell
+        /// size of the variance-estimation pass.
+        min_block_shape: Vec<usize>,
+        /// Split a tile when its sub-cell variance (pooled variance within
+        /// min-shape cells — smooth large-scale trends score ~0) exceeds
+        /// `variance_threshold ×` the whole field's sub-cell variance.
+        /// Must be >= 0 and finite. Values in `(0, 1)` refine turbulent
+        /// regions (lower = more splitting); values >= 1 can never split
+        /// the root tile, so the whole field becomes one block; `0` is a
+        /// sentinel that disables the adaptive pass entirely and reproduces
+        /// the fixed nominal tiling bit-exactly.
+        variance_threshold: f64,
+    },
+}
+
+/// Per-cell roughness statistic: element count and the within-cell sum of
+/// squared deviations from the cell mean, in f64 (bitwise-deterministic
+/// for a fixed fold order). Both fields are additive across cells, so the
+/// *pooled within-cell variance* of any cell-aligned tile — the sub-cell
+/// variance the split decision scores — combines in O(cells) without
+/// revisiting the data.
+#[derive(Clone, Copy, Debug, Default)]
+struct Stats {
+    /// Elements across the combined cells.
+    n: f64,
+    /// Σ over cells of `Σ (x − cell_mean)²` (one streaming pass per cell).
+    w: f64,
+}
+
+impl Stats {
+    fn of<T: Scalar>(data: &[T]) -> Stats {
+        // accumulate deviations from the cell's first value instead of raw
+        // values: the naive Σx² − (Σx)²/n cancels catastrophically on
+        // fields with a large mean offset relative to their fluctuations
+        // (values ~1e7 with ppm-scale turbulence would score 0 and silently
+        // disable splitting). Shifting by x₀ keeps the pass single-sweep
+        // and deterministic while the accumulated magnitudes stay on the
+        // fluctuation scale.
+        let x0 = data.first().map_or(0.0, |v| v.to_f64());
+        let mut n = 0.0f64;
+        let mut sum = 0.0f64;
+        let mut sumsq = 0.0f64;
+        for &v in data {
+            let x = v.to_f64() - x0;
+            n += 1.0;
+            sum += x;
+            sumsq += x * x;
+        }
+        let w = if n == 0.0 {
+            0.0
+        } else {
+            // within-cell squared deviation (shift-invariant), clamped
+            // against rounding
+            (sumsq - sum * sum / n).max(0.0)
+        };
+        Stats { n, w }
+    }
+
+    fn add(&mut self, o: &Stats) {
+        self.n += o.n;
+        self.w += o.w;
+    }
+
+    /// Pooled within-cell (sub-cell) variance of the combined cells.
+    fn sub_cell_variance(&self) -> f64 {
+        if self.n == 0.0 {
+            0.0
+        } else {
+            self.w / self.n
+        }
+    }
+}
+
+/// The min-shape cell grid the adaptive descent runs on.
+struct CellGrid {
+    /// Per-dimension `(start, len)` segments (remainder-merged).
+    segs: Vec<Vec<(usize, usize)>>,
+    /// Cells per dimension.
+    counts: Vec<usize>,
+}
+
+impl CellGrid {
+    fn new(field_shape: &[usize], min_shape: &[usize]) -> CellGrid {
+        let segs: Vec<Vec<(usize, usize)>> = field_shape
+            .iter()
+            .zip(min_shape)
+            .map(|(&n, &b)| segments(n, b))
+            .collect();
+        let counts = segs.iter().map(|s| s.len()).collect();
+        CellGrid { segs, counts }
+    }
+
+    /// Flat index of a cell in row-major cell order (the order
+    /// [`partition()`] enumerates the same cells in).
+    fn flat(&self, idx: &[usize]) -> usize {
+        let mut f = 0usize;
+        for (d, &i) in idx.iter().enumerate() {
+            f = f * self.counts[d] + i;
+        }
+        f
+    }
+
+    /// Combine cell statistics over the half-open cell range `[lo, hi)` in
+    /// row-major cell order (fixed fold order => deterministic f64 result).
+    fn combine(&self, stats: &[Stats], lo: &[usize], hi: &[usize]) -> Stats {
+        let mut acc = Stats::default();
+        let mut idx = lo.to_vec();
+        loop {
+            acc.add(&stats[self.flat(&idx)]);
+            // row-major advance within [lo, hi)
+            let mut d = idx.len();
+            loop {
+                if d == 0 {
+                    return acc;
+                }
+                d -= 1;
+                idx[d] += 1;
+                if idx[d] < hi[d] {
+                    break;
+                }
+                idx[d] = lo[d];
+            }
+        }
+    }
+
+    /// The field-coordinate block covered by the cell range `[lo, hi)`.
+    fn block(&self, lo: &[usize], hi: &[usize]) -> Block {
+        let mut start = Vec::with_capacity(lo.len());
+        let mut shape = Vec::with_capacity(lo.len());
+        for d in 0..lo.len() {
+            let s = self.segs[d][lo[d]].0;
+            let (last_s, last_len) = self.segs[d][hi[d] - 1];
+            start.push(s);
+            shape.push(last_s + last_len - s);
+        }
+        Block { start, shape }
+    }
+}
+
+/// Recursive descent: keep `[lo, hi)` when its sub-cell variance is within
+/// the absolute threshold (or it is a single cell), otherwise bisect every
+/// dimension spanning >= 2 cells and recurse, children in row-major order.
+fn refine(
+    grid: &CellGrid,
+    stats: &[Stats],
+    lo: &[usize],
+    hi: &[usize],
+    threshold_abs: f64,
+    out: &mut Vec<Block>,
+) {
+    let nd = lo.len();
+    let split_dims: Vec<usize> = (0..nd).filter(|&d| hi[d] - lo[d] >= 2).collect();
+    let smooth = grid.combine(stats, lo, hi).sub_cell_variance() <= threshold_abs;
+    if split_dims.is_empty() || smooth {
+        out.push(grid.block(lo, hi));
+        return;
+    }
+    let k = split_dims.len();
+    for child in 0..(1usize << k) {
+        let mut clo = lo.to_vec();
+        let mut chi = hi.to_vec();
+        for (j, &d) in split_dims.iter().enumerate() {
+            let mid = lo[d] + (hi[d] - lo[d]) / 2;
+            // earlier dimensions vary slowest: child tiles come out in
+            // row-major order of their grid position
+            if (child >> (k - 1 - j)) & 1 == 0 {
+                chi[d] = mid;
+            } else {
+                clo[d] = mid;
+            }
+        }
+        refine(grid, stats, &clo, &chi, threshold_abs, out);
+    }
+}
+
+/// Build the variance-guided adaptive partition of `field_shape`.
+///
+/// `min_shape` must already be broadcast to the field rank (see
+/// [`resolve_block_shape`]) and every extent must be >= 2 (validated
+/// here); `variance_threshold` is relative to the whole field's sub-cell
+/// variance (the pooled variance within min-shape cells) and must be
+/// finite and > 0 (callers map the `0` sentinel to the fixed partition
+/// before getting here). `read` fetches
+/// one cell `[start, start + shape)` as a dense tensor — `Tensor::block` in
+/// core, `BlockSource::read_block` when streaming — and is invoked exactly
+/// once per cell, in parallel on `threads` workers (0 = available
+/// parallelism). The returned tile list covers the field exactly once, in
+/// the deterministic depth-first order the container index records.
+pub fn adaptive_partition<T, F>(
+    field_shape: &[usize],
+    min_shape: &[usize],
+    variance_threshold: f64,
+    threads: usize,
+    read: F,
+) -> Result<Vec<Block>>
+where
+    T: Scalar,
+    F: Fn(&Block) -> Result<Tensor<T>> + Sync,
+{
+    if !variance_threshold.is_finite() || variance_threshold <= 0.0 {
+        return Err(Error::invalid(format!(
+            "variance threshold must be finite and > 0, got {variance_threshold}"
+        )));
+    }
+    // validate the extents ourselves: `partition` checks field geometry but
+    // not block extents (a 0 would divide by zero in `segments`, a 1 would
+    // emit tiles that cannot carry a grid hierarchy)
+    for &m in min_shape {
+        if m < 2 {
+            return Err(Error::invalid(format!("minimum block extent {m} < 2")));
+        }
+    }
+    if min_shape.len() != field_shape.len() {
+        return Err(Error::shape("adaptive min-shape rank mismatch"));
+    }
+    // the cells are exactly the fixed partition by the minimum shape
+    let cells = partition(field_shape, min_shape)?;
+    let grid = CellGrid::new(field_shape, min_shape);
+    debug_assert_eq!(cells.len(), grid.counts.iter().product::<usize>());
+    let results = parallel_map(cells.len(), threads, |i| {
+        let cell = read(&cells[i])?;
+        if cell.shape() != cells[i].shape.as_slice() {
+            return Err(Error::shape(format!(
+                "cell read returned {:?}, expected {:?}",
+                cell.shape(),
+                cells[i].shape
+            )));
+        }
+        Ok(Stats::of(cell.data()))
+    });
+    let mut stats = Vec::with_capacity(results.len());
+    for r in results {
+        stats.push(r?);
+    }
+    // the whole field's sub-cell variance from the same statistics
+    // (row-major fold), so the relative threshold costs no extra pass
+    let root_lo = vec![0usize; field_shape.len()];
+    let field_var = grid
+        .combine(&stats, &root_lo, &grid.counts)
+        .sub_cell_variance();
+    let threshold_abs = variance_threshold * field_var;
+    let mut out = Vec::new();
+    refine(&grid, &stats, &root_lo, &grid.counts, threshold_abs, &mut out);
+    Ok(out)
+}
+
+/// Resolve a [`Tiling`] configuration into the concrete tile list and the
+/// [`TilingPolicy`] the container records. Shared by the in-core
+/// [`crate::chunk::ChunkedCompressor`] and the streaming
+/// [`crate::stream::compress_to_writer`], which is what keeps the two
+/// paths' containers byte-identical.
+///
+/// `nominal` is the resolved nominal block shape; [`Tiling::Fixed`] — and
+/// the [`Tiling::Adaptive`] sentinel `variance_threshold == 0` — partition
+/// by it and record [`TilingPolicy::Fixed`] (sub-version 1, bit-exactly
+/// today's fixed container). A positive threshold runs
+/// [`adaptive_partition`] and records the policy (sub-version 2).
+pub fn plan_tiles<T, F>(
+    field_shape: &[usize],
+    nominal: &[usize],
+    tiling: &Tiling,
+    threads: usize,
+    read: F,
+) -> Result<(Vec<Block>, TilingPolicy)>
+where
+    T: Scalar,
+    F: Fn(&Block) -> Result<Tensor<T>> + Sync,
+{
+    match tiling {
+        Tiling::Fixed => Ok((partition(field_shape, nominal)?, TilingPolicy::Fixed)),
+        Tiling::Adaptive {
+            min_block_shape,
+            variance_threshold,
+        } => {
+            let t = *variance_threshold;
+            if !t.is_finite() || t < 0.0 {
+                return Err(Error::invalid(format!(
+                    "variance threshold must be finite and >= 0, got {t}"
+                )));
+            }
+            if t == 0.0 {
+                return Ok((partition(field_shape, nominal)?, TilingPolicy::Fixed));
+            }
+            let min = resolve_block_shape(min_block_shape, field_shape.len())?;
+            let tiles = adaptive_partition(field_shape, &min, t, threads, read)?;
+            Ok((
+                tiles,
+                TilingPolicy::VarianceGuided {
+                    min_block_shape: min,
+                    variance_threshold: t,
+                },
+            ))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::numel;
+
+    fn read_from(t: &Tensor<f32>) -> impl Fn(&Block) -> Result<Tensor<f32>> + Sync + '_ {
+        |b: &Block| t.block(&b.start, &b.shape)
+    }
+
+    fn assert_exact_cover(field: &[usize], tiles: &[Block]) {
+        let mut seen = vec![0u8; numel(field)];
+        for b in tiles {
+            for (d, &s) in b.shape.iter().enumerate() {
+                assert!(s >= 2, "tile extent {s} < 2 in dim {d}");
+            }
+            crate::tensor::for_each_index(&b.shape, |ix| {
+                let mut flat = 0usize;
+                for d in 0..field.len() {
+                    flat = flat * field[d] + b.start[d] + ix[d];
+                }
+                seen[flat] += 1;
+            });
+        }
+        assert!(seen.iter().all(|&c| c == 1), "overlap or gap in tiling");
+    }
+
+    #[test]
+    fn uniform_field_collapses_to_one_block() {
+        let t = Tensor::<f32>::from_fn(&[20, 24], |_| 3.25);
+        let tiles = adaptive_partition(&[20, 24], &[4, 4], 0.5, 1, read_from(&t)).unwrap();
+        assert_eq!(tiles.len(), 1);
+        assert_eq!(tiles[0], Block { start: vec![0, 0], shape: vec![20, 24] });
+    }
+
+    #[test]
+    fn split_field_refines_only_the_turbulent_half() {
+        let t = crate::data::synth::split_test_field(&[32, 32], 11);
+        let tiles = adaptive_partition(&[32, 32], &[4, 4], 0.5, 2, read_from(&t)).unwrap();
+        assert_exact_cover(&[32, 32], &tiles);
+        assert!(tiles.len() > 1, "split field must refine somewhere");
+        // the largest tile sits in the smooth half (dim-0 start < 16), the
+        // smallest in the turbulent half
+        let largest = tiles.iter().max_by_key(|b| numel(&b.shape)).unwrap();
+        let smallest = tiles.iter().min_by_key(|b| numel(&b.shape)).unwrap();
+        assert!(numel(&largest.shape) > numel(&smallest.shape));
+        assert!(
+            largest.start[0] < 16,
+            "largest tile {largest:?} should be in the smooth half"
+        );
+        assert!(
+            smallest.start[0] + smallest.shape[0] > 16,
+            "smallest tile {smallest:?} should touch the turbulent half"
+        );
+    }
+
+    #[test]
+    fn remainders_and_min_shape_respected() {
+        // 17 and 33 are not multiples of 4: cells remainder-merge, and every
+        // tile extent stays >= the (merged) minimum of 2
+        let t = crate::data::synth::split_test_field(&[17, 33], 5);
+        let tiles = adaptive_partition(&[17, 33], &[4, 4], 0.3, 1, read_from(&t)).unwrap();
+        assert_exact_cover(&[17, 33], &tiles);
+        for b in &tiles {
+            assert!(b.shape.iter().all(|&s| s >= 4), "tile {b:?} under min shape");
+        }
+    }
+
+    #[test]
+    fn thread_count_does_not_change_the_tiling() {
+        let t = crate::data::synth::split_test_field(&[24, 20], 3);
+        let one = adaptive_partition(&[24, 20], &[4, 4], 0.4, 1, read_from(&t)).unwrap();
+        let four = adaptive_partition(&[24, 20], &[4, 4], 0.4, 4, read_from(&t)).unwrap();
+        assert_eq!(one, four);
+    }
+
+    #[test]
+    fn threshold_one_or_more_keeps_the_root() {
+        // var(root) == var(field), so t >= 1 can never split the root
+        let t = crate::data::synth::split_test_field(&[16, 16], 9);
+        let tiles = adaptive_partition(&[16, 16], &[4, 4], 1.0, 1, read_from(&t)).unwrap();
+        assert_eq!(tiles.len(), 1);
+    }
+
+    #[test]
+    fn invalid_thresholds_rejected() {
+        let t = Tensor::<f32>::zeros(&[8, 8]);
+        for bad in [0.0, -1.0, f64::NAN, f64::INFINITY] {
+            assert!(adaptive_partition(&[8, 8], &[4, 4], bad, 1, read_from(&t)).is_err());
+        }
+    }
+
+    #[test]
+    fn invalid_min_shapes_rejected_not_panicking() {
+        // extent 0 would divide by zero in the segmenter, extent 1 would
+        // emit hierarchy-less tiles, rank mismatch would index out of range
+        let t = Tensor::<f32>::zeros(&[8, 8]);
+        for bad in [vec![0, 4], vec![1, 4], vec![4]] {
+            assert!(
+                adaptive_partition(&[8, 8], &bad, 0.5, 1, read_from(&t)).is_err(),
+                "min shape {bad:?} accepted"
+            );
+        }
+    }
+
+    #[test]
+    fn large_mean_offset_does_not_mask_turbulence() {
+        // values ~1e7 with unit-scale noise in the upper half: the shifted
+        // accumulation must still see the noise (the naive Σx² − (Σx)²/n
+        // would cancel to ~0 in f64 after the f32 inputs' own rounding)
+        let base = 1.0e7f32;
+        let mut k = 0u32;
+        let t = Tensor::<f32>::from_fn(&[16, 16], |ix| {
+            k = k.wrapping_mul(1664525).wrapping_add(1013904223);
+            let noise = (k >> 8) as f32 / (1 << 24) as f32 - 0.5;
+            if ix[0] >= 8 {
+                base + noise * 64.0
+            } else {
+                base
+            }
+        });
+        let tiles = adaptive_partition(&[16, 16], &[4, 4], 0.5, 1, read_from(&t)).unwrap();
+        assert!(
+            tiles.len() > 1,
+            "turbulence on a large DC offset must still trigger splitting"
+        );
+    }
+
+    #[test]
+    fn plan_tiles_zero_threshold_degrades_to_fixed() {
+        let t = crate::data::synth::split_test_field(&[20, 20], 2);
+        let tiling = Tiling::Adaptive {
+            min_block_shape: vec![4],
+            variance_threshold: 0.0,
+        };
+        let (tiles, policy) = plan_tiles(&[20, 20], &[8, 8], &tiling, 1, read_from(&t)).unwrap();
+        assert_eq!(policy, TilingPolicy::Fixed);
+        assert_eq!(tiles, partition(&[20, 20], &[8, 8]).unwrap());
+    }
+
+    #[test]
+    fn plan_tiles_adaptive_records_resolved_policy() {
+        let t = crate::data::synth::split_test_field(&[24, 24], 4);
+        let tiling = Tiling::Adaptive {
+            min_block_shape: vec![4],
+            variance_threshold: 0.5,
+        };
+        let (tiles, policy) = plan_tiles(&[24, 24], &[8, 8], &tiling, 1, read_from(&t)).unwrap();
+        assert_exact_cover(&[24, 24], &tiles);
+        assert_eq!(
+            policy,
+            TilingPolicy::VarianceGuided {
+                min_block_shape: vec![4, 4],
+                variance_threshold: 0.5,
+            }
+        );
+    }
+
+    #[test]
+    fn stats_pool_within_cell_variance() {
+        // a single cell scores its own population variance
+        let vals: Vec<f32> = vec![1.0, 2.0, 3.0, 4.0, 10.0];
+        let s = Stats::of(&vals);
+        let mean = vals.iter().map(|&v| v as f64).sum::<f64>() / vals.len() as f64;
+        let var = vals
+            .iter()
+            .map(|&v| (v as f64 - mean) * (v as f64 - mean))
+            .sum::<f64>()
+            / vals.len() as f64;
+        assert!((s.sub_cell_variance() - var).abs() < 1e-9);
+        // two cells with identical internal spread but wildly different
+        // means: the pooled score ignores the between-cell trend entirely
+        let mut pooled = Stats::of(&[1.0f32, 2.0]);
+        pooled.add(&Stats::of(&[101.0f32, 102.0]));
+        assert!((pooled.sub_cell_variance() - 0.25).abs() < 1e-12);
+    }
+}

@@ -1,14 +1,23 @@
 //! The versioned chunked container format.
 //!
-//! Layout (after the standard [`Header`] with `Method::Chunked`, which
-//! carries dtype, field shape and the global absolute tolerance):
+//! The normative byte-level specification lives in `docs/FORMAT.md`; this
+//! module is its single implementation (both the in-core and the streaming
+//! writer serialize through [`ChunkIndex::write_prefix`]). Layout, after
+//! the standard [`Header`] with `Method::Chunked` (which carries dtype,
+//! field shape and the global absolute tolerance):
 //!
 //! ```text
-//! u8                         chunk-container version (currently 1)
+//! u8                         chunk-container sub-version (1 = fixed
+//!                            tiling, 2 = adaptive tiling)
 //! u8                         inner method tag (never Chunked: no nesting)
 //! varint × ndim              nominal block shape
+//! -- sub-version 2 only --
+//! u8                         tiling policy tag (1 = variance-guided)
+//! varint × ndim              minimum block shape of the adaptive layout
+//! f64                        relative variance threshold (> 0, finite)
+//! -- all sub-versions --
 //! varint                     number of blocks B
-//! B × {                      per-block index, row-major block order:
+//! B × {                      per-block index, in tile-list order:
 //!   varint offset              byte offset into the blob section
 //!   varint len                 blob length in bytes
 //!   varint × ndim start        block origin in the field
@@ -21,17 +30,51 @@
 //!                            self-describing container of the inner method)
 //! ```
 //!
-//! Every blob is independently decompressible — random access to a block
-//! needs only the header + index, and parallel decompression needs no
-//! coordination beyond slicing the blob section.
+//! Sub-version 1 (row-major fixed tiling) and sub-version 2 (heterogeneous
+//! variance-guided tiling, depth-first tile order — see
+//! [`crate::chunk::adaptive`]) differ *only* in the policy bytes; index
+//! entries always carry each block's own `start`/`shape`, so readers never
+//! reconstruct the layout from the policy. Every blob is independently
+//! decompressible — random access to a block needs only the header +
+//! index, and parallel decompression needs no coordination beyond slicing
+//! the blob section.
 
 use crate::compressors::{Header, Method};
 use crate::encode::varint::{write_f64, write_u64};
 use crate::error::{Error, Result};
 use crate::tensor::Scalar;
 
-/// Current chunked-container sub-version.
+/// Chunked-container sub-version for fixed nominal tilings.
 pub const CHUNK_CONTAINER_VERSION: u8 = 1;
+
+/// Chunked-container sub-version for adaptive (heterogeneous) tilings:
+/// identical to sub-version 1 plus the tiling-policy bytes after the
+/// nominal block shape.
+pub const CHUNK_CONTAINER_VERSION_ADAPTIVE: u8 = 2;
+
+/// Tiling-policy tag: variance-guided split/merge layout
+/// ([`TilingPolicy::VarianceGuided`]). The only policy currently defined.
+pub const TILING_POLICY_VARIANCE: u8 = 1;
+
+/// The tiling policy a chunked container records (the *configuration* side
+/// is [`crate::chunk::Tiling`]). Fixed layouts serialize as sub-version
+/// [`CHUNK_CONTAINER_VERSION`]; adaptive layouts as
+/// [`CHUNK_CONTAINER_VERSION_ADAPTIVE`] with the policy parameters in the
+/// header, so a container is self-describing about how it was tiled.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TilingPolicy {
+    /// Fixed nominal tiling (sub-version 1; no policy bytes).
+    Fixed,
+    /// Variance-guided adaptive tiling (sub-version 2).
+    VarianceGuided {
+        /// Minimum tile extent per dimension (resolved to the field rank).
+        min_block_shape: Vec<usize>,
+        /// Relative split threshold: tiles whose sub-cell variance (pooled
+        /// variance within min-shape cells) exceeded `threshold ×` the
+        /// whole field's sub-cell variance were split.
+        variance_threshold: f64,
+    },
+}
 
 /// One entry of the per-block index.
 #[derive(Clone, Debug, PartialEq)]
@@ -55,9 +98,13 @@ pub struct BlockEntry {
 pub struct ChunkIndex {
     /// Method of the inner per-block containers.
     pub inner: Method,
-    /// Nominal block shape the partition was built from.
+    /// Nominal block shape the partition was built from (recorded for
+    /// adaptive layouts too, whose tile shapes live in the entries).
     pub block_shape: Vec<usize>,
-    /// Per-block index in row-major block order.
+    /// How the field was tiled; decides the serialized sub-version.
+    pub policy: TilingPolicy,
+    /// Per-block index in tile-list order (row-major for fixed tilings,
+    /// depth-first for adaptive ones).
     pub entries: Vec<BlockEntry>,
 }
 
@@ -83,10 +130,24 @@ impl ChunkIndex {
             tau_abs,
         }
         .write(out);
-        out.push(CHUNK_CONTAINER_VERSION);
+        out.push(match self.policy {
+            TilingPolicy::Fixed => CHUNK_CONTAINER_VERSION,
+            TilingPolicy::VarianceGuided { .. } => CHUNK_CONTAINER_VERSION_ADAPTIVE,
+        });
         out.push(self.inner as u8);
         for &b in &self.block_shape {
             write_u64(out, b as u64);
+        }
+        if let TilingPolicy::VarianceGuided {
+            min_block_shape,
+            variance_threshold,
+        } = &self.policy
+        {
+            out.push(TILING_POLICY_VARIANCE);
+            for &m in min_block_shape {
+                write_u64(out, m as u64);
+            }
+            write_f64(out, *variance_threshold);
         }
         write_u64(out, self.entries.len() as u64);
         for e in &self.entries {
@@ -105,9 +166,9 @@ impl ChunkIndex {
     }
 }
 
-/// Assemble a chunked container from per-block blobs (in row-major block
-/// order, matching `index.entries` which must carry offset/len consistent
-/// with the concatenation).
+/// Assemble a chunked container from per-block blobs (in tile-list order,
+/// matching `index.entries` which must carry offset/len consistent with
+/// the concatenation).
 pub fn write_container<T: Scalar>(
     field_shape: &[usize],
     tau_abs: f64,
@@ -164,9 +225,10 @@ pub fn read_index(bytes: &[u8]) -> Result<(Header, ChunkIndex, usize, usize)> {
         )));
     }
     let version = r.u8()?;
-    if version != CHUNK_CONTAINER_VERSION {
+    if version != CHUNK_CONTAINER_VERSION && version != CHUNK_CONTAINER_VERSION_ADAPTIVE {
         return Err(Error::UnsupportedFormat(format!(
-            "chunk container version {version}, expected {CHUNK_CONTAINER_VERSION}"
+            "chunk container sub-version {version}, expected \
+             {CHUNK_CONTAINER_VERSION} (fixed) or {CHUNK_CONTAINER_VERSION_ADAPTIVE} (adaptive)"
         )));
     }
     let inner = Method::from_u8(r.u8()?)?;
@@ -178,6 +240,34 @@ pub fn read_index(bytes: &[u8]) -> Result<(Header, ChunkIndex, usize, usize)> {
     for _ in 0..ndim {
         block_shape.push(r.usize()?);
     }
+    let policy = if version == CHUNK_CONTAINER_VERSION_ADAPTIVE {
+        let tag = r.u8()?;
+        if tag != TILING_POLICY_VARIANCE {
+            return Err(Error::UnsupportedFormat(format!(
+                "tiling policy tag {tag}, expected {TILING_POLICY_VARIANCE} (variance-guided)"
+            )));
+        }
+        let mut min_block_shape = Vec::with_capacity(ndim);
+        for d in 0..ndim {
+            let m = r.usize()?;
+            if m < 2 {
+                return Err(Error::corrupt(format!("minimum block extent {m} < 2 in dim {d}")));
+            }
+            min_block_shape.push(m);
+        }
+        let variance_threshold = r.f64()?;
+        if !variance_threshold.is_finite() || variance_threshold <= 0.0 {
+            return Err(Error::corrupt(format!(
+                "implausible variance threshold {variance_threshold}"
+            )));
+        }
+        TilingPolicy::VarianceGuided {
+            min_block_shape,
+            variance_threshold,
+        }
+    } else {
+        TilingPolicy::Fixed
+    };
     let nblocks = r.usize()?;
     // each entry consumes at least 2*ndim + 3 varint bytes + 8 tau bytes,
     // so bounding the count by remaining/min_entry keeps the index
@@ -227,6 +317,7 @@ pub fn read_index(bytes: &[u8]) -> Result<(Header, ChunkIndex, usize, usize)> {
         ChunkIndex {
             inner,
             block_shape,
+            policy,
             entries,
         },
         r.position(),
@@ -281,6 +372,7 @@ mod tests {
             ChunkIndex {
                 inner: Method::MgardPlus,
                 block_shape: vec![8, 8],
+                policy: TilingPolicy::Fixed,
                 entries,
             },
             blobs,
@@ -296,9 +388,80 @@ mod tests {
         assert_eq!(header.tau_abs, 0.5);
         assert_eq!(back.inner, Method::MgardPlus);
         assert_eq!(back.block_shape, vec![8, 8]);
+        assert_eq!(back.policy, TilingPolicy::Fixed);
         assert_eq!(back.entries, index.entries);
         assert_eq!(&blob[0..3], &[1, 2, 3]);
         assert_eq!(&blob[3..5], &[4, 5]);
+    }
+
+    #[test]
+    fn adaptive_policy_round_trips_as_sub_version_two() {
+        let (mut index, blobs) = sample_index();
+        index.policy = TilingPolicy::VarianceGuided {
+            min_block_shape: vec![4, 4],
+            variance_threshold: 0.25,
+        };
+        let bytes = write_container::<f32>(&[17, 8], 0.5, &index, &blobs);
+        // the sub-version byte sits right after the shared header
+        let mut header_only = Vec::new();
+        Header {
+            method: Method::Chunked,
+            dtype: 1,
+            shape: vec![17, 8],
+            tau_abs: 0.5,
+        }
+        .write(&mut header_only);
+        assert_eq!(bytes[header_only.len()], CHUNK_CONTAINER_VERSION_ADAPTIVE);
+        let (_, back, _) = read_container(&bytes).unwrap();
+        assert_eq!(back.policy, index.policy);
+        assert_eq!(back.entries, index.entries);
+        // the fixed container for the same index is strictly shorter (no
+        // policy bytes) and declares sub-version 1
+        index.policy = TilingPolicy::Fixed;
+        let fixed = write_container::<f32>(&[17, 8], 0.5, &index, &blobs);
+        assert_eq!(fixed[header_only.len()], CHUNK_CONTAINER_VERSION);
+        assert_eq!(bytes.len(), fixed.len() + 1 + 2 + 8);
+    }
+
+    #[test]
+    fn corrupt_policy_bytes_rejected() {
+        let (mut index, blobs) = sample_index();
+        index.policy = TilingPolicy::VarianceGuided {
+            min_block_shape: vec![4, 4],
+            variance_threshold: 0.25,
+        };
+        let good = write_container::<f32>(&[17, 8], 0.5, &index, &blobs);
+        let mut header_only = Vec::new();
+        Header {
+            method: Method::Chunked,
+            dtype: 1,
+            shape: vec![17, 8],
+            tau_abs: 0.5,
+        }
+        .write(&mut header_only);
+        // policy tag: header + sub-version + inner tag + 2 block-shape varints
+        let tag_pos = header_only.len() + 1 + 1 + 2;
+        assert_eq!(good[tag_pos], TILING_POLICY_VARIANCE);
+        for bad_tag in [0u8, 2, 255] {
+            let mut bad = good.clone();
+            bad[tag_pos] = bad_tag;
+            assert!(read_container(&bad).is_err(), "tag {bad_tag} accepted");
+        }
+        // unknown sub-version
+        for bad_version in [0u8, 3, 255] {
+            let mut bad = good.clone();
+            bad[header_only.len()] = bad_version;
+            assert!(read_container(&bad).is_err(), "version {bad_version} accepted");
+        }
+        // min extent < 2
+        let mut bad = good.clone();
+        bad[tag_pos + 1] = 1;
+        assert!(read_container(&bad).is_err());
+        // non-finite threshold (min-shape varints are 1 byte each here)
+        let mut bad = good.clone();
+        let thr_pos = tag_pos + 1 + 2;
+        bad[thr_pos..thr_pos + 8].copy_from_slice(&f64::NAN.to_le_bytes());
+        assert!(read_container(&bad).is_err());
     }
 
     #[test]

@@ -3,7 +3,7 @@
 //!
 //! The single-tensor compressors in [`crate::compressors`] run one
 //! monolithic in-core array through a single thread. This module partitions
-//! an N-d field into overlap-free blocks ([`partition`]), runs the full
+//! an N-d field into overlap-free blocks ([`partition()`]), runs the full
 //! MGARD+ path (decompose → level-wise quantize → encode) per block on a
 //! self-balancing worker pool ([`pool`]), and assembles a versioned
 //! container with a per-block index ([`container`]) so blocks decompress
@@ -21,13 +21,26 @@
 //! from disk block-at-a-time under a memory budget and emits a
 //! byte-identical container.
 //!
+//! Invariants the rest of the stack leans on:
+//!
+//! * **Remainder merging** — the partition never emits a block extent < 2
+//!   (a trailing remainder of 1 merges into its neighbor), so every block
+//!   carries a valid grid hierarchy ([`partition()`]).
+//! * **Exact coverage** — blocks are overlap-free and cover the field
+//!   exactly; decoders validate point-count coverage before zero-filling.
+//! * **Self-describing layout** — index entries carry each block's own
+//!   `start`/`shape`, so fixed ([`Tiling::Fixed`]) and variance-guided
+//!   adaptive ([`Tiling::Adaptive`], see [`adaptive`]) layouts decode
+//!   through one code path.
+//!
 //! ```
-//! use mgardp::chunk::ChunkedConfig;
+//! use mgardp::chunk::{ChunkedConfig, Tiling};
 //! use mgardp::compressors::{Compressor, MgardPlus, Tolerance};
 //! let field = mgardp::data::synth::smooth_test_field(&[40, 40, 40]);
 //! let codec = MgardPlus::default().chunked(ChunkedConfig {
 //!     block_shape: vec![16, 16, 16],
 //!     threads: 4,
+//!     tiling: Tiling::Fixed,
 //! });
 //! let bytes = codec.compress(&field, Tolerance::Rel(1e-3)).unwrap();
 //! let back = codec.decompress(&bytes).unwrap();
@@ -35,11 +48,18 @@
 //! assert!(mgardp::metrics::linf_error(field.data(), back.data()) <= tau);
 //! ```
 
+pub mod adaptive;
 pub mod container;
 pub mod partition;
 pub mod pool;
 
-pub use container::{BlockEntry, ChunkIndex, CHUNK_CONTAINER_VERSION};
+pub use adaptive::{
+    adaptive_partition, plan_tiles, Tiling, DEFAULT_MIN_BLOCK_EXTENT, DEFAULT_VARIANCE_THRESHOLD,
+};
+pub use container::{
+    BlockEntry, ChunkIndex, TilingPolicy, CHUNK_CONTAINER_VERSION,
+    CHUNK_CONTAINER_VERSION_ADAPTIVE, TILING_POLICY_VARIANCE,
+};
 pub use partition::{intersect, partition, resolve_block_shape, Block};
 pub use pool::{effective_threads, parallel_map, parallel_map_ordered};
 
@@ -49,16 +69,21 @@ use crate::grid::Hierarchy;
 use crate::tensor::{Scalar, Tensor};
 
 /// Configuration of the chunked pipeline.
-#[derive(Clone, Debug, PartialEq, Eq)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct ChunkedConfig {
     /// Nominal block shape. A single entry broadcasts to every dimension
     /// (e.g. `vec![64]` tiles any rank with 64^d blocks); otherwise the rank
     /// must match the field. Trailing remainders < 2 merge into the last
-    /// block, so all block extents stay >= 2.
+    /// block, so all block extents stay >= 2. With [`Tiling::Adaptive`] the
+    /// layout comes from the data instead; the nominal shape is still
+    /// recorded in the container for diagnostics.
     pub block_shape: Vec<usize>,
     /// Worker threads for both compression and decompression; 0 means "use
     /// available parallelism".
     pub threads: usize,
+    /// How the field is tiled: [`Tiling::Fixed`] (the default) or
+    /// variance-guided [`Tiling::Adaptive`].
+    pub tiling: Tiling,
 }
 
 impl Default for ChunkedConfig {
@@ -66,6 +91,7 @@ impl Default for ChunkedConfig {
         ChunkedConfig {
             block_shape: vec![64],
             threads: 0,
+            tiling: Tiling::Fixed,
         }
     }
 }
@@ -188,7 +214,13 @@ impl<T: Scalar, C: Compressor<T> + Sync> Compressor<T> for ChunkedCompressor<C> 
             return Err(Error::invalid("tolerance must be positive"));
         }
         let block_shape = resolve_block_shape(&self.cfg.block_shape, data.ndim())?;
-        let blocks = partition(data.shape(), &block_shape)?;
+        let (blocks, policy) = plan_tiles(
+            data.shape(),
+            &block_shape,
+            &self.cfg.tiling,
+            self.cfg.threads,
+            |b| data.block(&b.start, &b.shape),
+        )?;
         let results = parallel_map(blocks.len(), self.cfg.threads, |i| {
             let b = &blocks[i];
             let sub = data.block(&b.start, &b.shape)?;
@@ -221,6 +253,7 @@ impl<T: Scalar, C: Compressor<T> + Sync> Compressor<T> for ChunkedCompressor<C> 
         let index = ChunkIndex {
             inner: inner_method,
             block_shape,
+            policy,
             entries,
         };
         Ok(container::write_container::<T>(
@@ -273,6 +306,7 @@ mod tests {
             ChunkedConfig {
                 block_shape: vec![8],
                 threads: 2,
+                tiling: Tiling::Fixed,
             },
         );
         let bytes = codec.compress(&t, Tolerance::Abs(1e-3)).unwrap();
@@ -289,6 +323,7 @@ mod tests {
             ChunkedConfig {
                 block_shape: vec![8, 8],
                 threads: 1,
+                tiling: Tiling::Fixed,
             },
         );
         let bytes = codec.compress(&t, Tolerance::Abs(1e-3)).unwrap();
@@ -304,6 +339,7 @@ mod tests {
             ChunkedConfig {
                 block_shape: vec![8],
                 threads: 2,
+                tiling: Tiling::Fixed,
             },
         );
         let want = codec.compress(&t, Tolerance::Abs(1e-3)).unwrap();

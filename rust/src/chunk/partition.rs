@@ -20,8 +20,10 @@ pub struct Block {
 }
 
 /// Split one dimension of length `n` into segments of nominal length `b`,
-/// merging a trailing remainder < 2 into the last segment.
-fn segments(n: usize, b: usize) -> Vec<(usize, usize)> {
+/// merging a trailing remainder < 2 into the last segment. Shared with the
+/// adaptive tiler (`super::adaptive`), whose min-shape cell grid must use
+/// the exact same segmentation as the fixed partition.
+pub(crate) fn segments(n: usize, b: usize) -> Vec<(usize, usize)> {
     if n <= b {
         return vec![(0, n)];
     }

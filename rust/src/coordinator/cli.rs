@@ -105,6 +105,31 @@ pub fn parse_byte_size(s: &str) -> Result<usize> {
         .ok_or_else(|| Error::Config(format!("byte size `{s}` overflows")))
 }
 
+/// Resolve the tiling flags shared by the in-core and streaming compress
+/// paths: `--adaptive-tiling [--min-block-shape MxMxM] [--variance-threshold T]`.
+fn tiling_from(args: &Args) -> Result<crate::chunk::Tiling> {
+    use crate::chunk::Tiling;
+    if args.opt("adaptive-tiling").is_none() {
+        for dependent in ["min-block-shape", "variance-threshold"] {
+            if args.opt(dependent).is_some() {
+                return Err(Error::Config(format!(
+                    "--{dependent} requires --adaptive-tiling"
+                )));
+            }
+        }
+        return Ok(Tiling::Fixed);
+    }
+    Ok(Tiling::Adaptive {
+        min_block_shape: match args.opt("min-block-shape") {
+            Some(s) => parse_shape(s)?,
+            None => vec![crate::chunk::DEFAULT_MIN_BLOCK_EXTENT],
+        },
+        variance_threshold: args
+            .f64_opt("variance-threshold")?
+            .unwrap_or(crate::chunk::DEFAULT_VARIANCE_THRESHOLD),
+    })
+}
+
 fn tolerance_from(args: &Args) -> Result<Tolerance> {
     match (args.f64_opt("rel")?, args.f64_opt("abs")?) {
         (Some(r), None) => Ok(Tolerance::Rel(r)),
@@ -126,13 +151,18 @@ COMMANDS:
               [--stream [--memory-budget BYTES]]  (out-of-core: the raw input is read
               block-at-a-time and never fully resident; BYTES accepts K/M/G suffixes,
               default 256M; implies chunking, --block-shape defaults to 64)
+              [--adaptive-tiling [--min-block-shape MxMxM] [--variance-threshold T]]
+              (variance-guided tiling: split tiles whose sub-cell variance exceeds
+              T × the field's down to the minimum shape, keep smooth regions large;
+              defaults M=16, T=0.5; T=0 reproduces the fixed tiling bit-exactly;
+              implies chunking; see docs/FORMAT.md)
   decompress  --input F --output F [--stream [--threads N]]  (chunked containers: batched
               block decode straight to the raw sink; threads 0 = all cores)
               [--region ZxYxX --region-shape ZxYxX]  (decode only the blocks intersecting the region)
   info        --input F
   synth       --out DIR [--dataset all|hurricane|nyx|scale|qmcpack] [--scale S] [--seed N]
   pipeline    --config FILE  (sections: [pipeline] workers/method/rel_tol/verify/block_shape/threads/
-              stream/memory_budget, [data] scale/seed)
+              stream/memory_budget/tiling/min_block_shape/variance_threshold, [data] scale/seed)
   refactor    --input F --shape ZxYxX --store DIR --field NAME
   reconstruct --store DIR --field NAME --level L --output F
   analyze     --input F --shape ZxYxX --iso V  (iso-surface area)
@@ -168,13 +198,21 @@ fn cmd_compress(args: &Args) -> Result<()> {
         return cmd_compress_stream(args, &shape, &input, &output, method, tol);
     }
     let data: Tensor<f32> = io::read_raw(&input, &shape)?;
-    let compressor = match args.opt("block-shape") {
-        Some(bs) => {
+    let tiling = tiling_from(args)?;
+    // --adaptive-tiling implies the chunked path (with the default nominal
+    // shape when --block-shape is absent), exactly like --stream
+    let compressor = match (args.opt("block-shape"), &tiling) {
+        (Some(bs), _) => {
             let block_shape = parse_shape(bs)?;
             let threads = args.usize_or("threads", 0)?;
-            pipeline::make_chunked_compressor(method, &block_shape, threads)?
+            pipeline::make_chunked_compressor(method, &block_shape, threads, tiling.clone())?
         }
-        None => pipeline::make_compressor(method)?,
+        (None, crate::chunk::Tiling::Adaptive { .. }) => {
+            let threads = args.usize_or("threads", 0)?;
+            let nominal = crate::chunk::ChunkedConfig::default().block_shape;
+            pipeline::make_chunked_compressor(method, &nominal, threads, tiling.clone())?
+        }
+        (None, crate::chunk::Tiling::Fixed) => pipeline::make_compressor(method)?,
     };
     let t0 = std::time::Instant::now();
     let bytes = compressor.compress(&data, tol)?;
@@ -204,7 +242,7 @@ fn cmd_compress_stream(
 ) -> Result<()> {
     let block_shape = match args.opt("block-shape") {
         Some(bs) => parse_shape(bs)?,
-        None => vec![64],
+        None => crate::chunk::ChunkedConfig::default().block_shape,
     };
     let threads = args.usize_or("threads", 0)?;
     let memory_budget = match args.opt("memory-budget") {
@@ -217,6 +255,7 @@ fn cmd_compress_stream(
         chunk: crate::chunk::ChunkedConfig {
             block_shape,
             threads,
+            tiling: tiling_from(args)?,
         },
         memory_budget,
         // spool compressed blobs next to the output so finalize is a local copy
@@ -348,6 +387,15 @@ fn cmd_info(args: &Args) -> Result<()> {
         let index = d.index();
         println!("inner  : {}", index.inner);
         println!("blocks : {} of nominal {:?}", index.entries.len(), index.block_shape);
+        match &index.policy {
+            crate::chunk::TilingPolicy::Fixed => println!("tiling : fixed"),
+            crate::chunk::TilingPolicy::VarianceGuided {
+                min_block_shape,
+                variance_threshold,
+            } => println!(
+                "tiling : adaptive (min {min_block_shape:?}, variance threshold {variance_threshold})"
+            ),
+        }
         println!("blobs  : {} bytes", d.blob_len());
     }
     Ok(())
@@ -398,6 +446,27 @@ fn cmd_pipeline(args: &Args) -> Result<()> {
         },
         None => 0,
     };
+    // `tiling = "adaptive"` enables the variance-guided layout, tuned by
+    // `min_block_shape` and `variance_threshold` (see docs/FORMAT.md)
+    let tiling = match cfg.str_or("pipeline", "tiling", "fixed").as_str() {
+        "fixed" => crate::chunk::Tiling::Fixed,
+        "adaptive" => crate::chunk::Tiling::Adaptive {
+            min_block_shape: match cfg.str_or("pipeline", "min_block_shape", "").as_str() {
+                "" => vec![crate::chunk::DEFAULT_MIN_BLOCK_EXTENT],
+                s => parse_shape(s)?,
+            },
+            variance_threshold: cfg.float_or(
+                "pipeline",
+                "variance_threshold",
+                crate::chunk::DEFAULT_VARIANCE_THRESHOLD,
+            ),
+        },
+        other => {
+            return Err(Error::Config(format!(
+                "pipeline.tiling must be \"fixed\" or \"adaptive\", got `{other}`"
+            )))
+        }
+    };
     let pcfg = PipelineConfig {
         workers: cfg.int_or("pipeline", "workers", 1) as usize,
         queue_depth: cfg.int_or("pipeline", "queue_depth", 4) as usize,
@@ -408,6 +477,7 @@ fn cmd_pipeline(args: &Args) -> Result<()> {
         threads: cfg.int_or("pipeline", "threads", 1) as usize,
         stream: cfg.bool_or("pipeline", "stream", false),
         memory_budget,
+        tiling,
     };
     let scale = cfg.float_or("data", "scale", 0.5);
     let seed = cfg.int_or("data", "seed", 42) as u64;
@@ -641,6 +711,76 @@ mod tests {
         let region: Tensor<f32> = io::read_raw(&reg, &[9, 8, 6]).unwrap();
         let direct = t.block(&[5, 6, 7], &[9, 8, 6]).unwrap();
         assert!(metrics::linf_error(direct.data(), region.data()) <= tau * (1.0 + 1e-6));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn adaptive_cli_cycle_and_threshold_zero_identity() {
+        let dir = std::env::temp_dir().join(format!("mgardp_cli_adapt_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let raw = dir.join("in.f32");
+        let t = crate::data::synth::split_test_field(&[24, 24], 7);
+        io::write_raw(&raw, &t).unwrap();
+        let common = [
+            "--input",
+            raw.to_str().unwrap(),
+            "--shape",
+            "24x24",
+            "--method",
+            "mgard+",
+            "--rel",
+            "1e-3",
+            "--block-shape",
+            "8x8",
+            "--threads",
+            "2",
+        ];
+        // adaptive compress + decompress honours the bound
+        let adaptive = dir.join("adaptive.mgrp");
+        let mut a: Vec<String> = common.iter().map(|x| x.to_string()).collect();
+        a.extend(s(&[
+            "--output",
+            adaptive.to_str().unwrap(),
+            "--adaptive-tiling",
+            "--min-block-shape",
+            "4x4",
+            "--variance-threshold",
+            "0.5",
+        ]));
+        run("compress", &a).unwrap();
+        let rec = dir.join("rec.f32");
+        run(
+            "decompress",
+            &s(&["--input", adaptive.to_str().unwrap(), "--output", rec.to_str().unwrap()]),
+        )
+        .unwrap();
+        let back: Tensor<f32> = io::read_raw(&rec, &[24, 24]).unwrap();
+        let tau = 1e-3 * t.value_range();
+        assert!(metrics::linf_error(t.data(), back.data()) <= tau * (1.0 + 1e-6));
+        // --variance-threshold 0 must reproduce the fixed container bit-exactly
+        let fixed = dir.join("fixed.mgrp");
+        let mut f: Vec<String> = common.iter().map(|x| x.to_string()).collect();
+        f.extend(s(&["--output", fixed.to_str().unwrap()]));
+        run("compress", &f).unwrap();
+        let zero = dir.join("zero.mgrp");
+        let mut z: Vec<String> = common.iter().map(|x| x.to_string()).collect();
+        z.extend(s(&[
+            "--output",
+            zero.to_str().unwrap(),
+            "--adaptive-tiling",
+            "--variance-threshold",
+            "0",
+        ]));
+        run("compress", &z).unwrap();
+        assert_eq!(
+            std::fs::read(&zero).unwrap(),
+            std::fs::read(&fixed).unwrap(),
+            "threshold 0 must be byte-identical to the fixed tiling"
+        );
+        // tiling flags without --adaptive-tiling are rejected
+        let mut bad: Vec<String> = common.iter().map(|x| x.to_string()).collect();
+        bad.extend(s(&["--output", zero.to_str().unwrap(), "--variance-threshold", "0.5"]));
+        assert!(run("compress", &bad).is_err());
         std::fs::remove_dir_all(&dir).ok();
     }
 

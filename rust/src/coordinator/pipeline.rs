@@ -9,7 +9,7 @@
 //! compress/verify, and results are aggregated into a report.
 
 use super::registry::Registry;
-use crate::chunk::{ChunkedCompressor, ChunkedConfig};
+use crate::chunk::{ChunkedCompressor, ChunkedConfig, Tiling};
 use crate::compressors::{
     Compressor, Hybrid, Mgard, MgardPlus, Sz, Tolerance, Zfp,
 };
@@ -51,6 +51,11 @@ pub struct PipelineConfig {
     /// In-flight byte budget for the streaming path (0 = unbounded); see
     /// [`crate::stream::StreamConfig::memory_budget`].
     pub memory_budget: usize,
+    /// How chunked fields are tiled: [`Tiling::Fixed`] (default) or
+    /// variance-guided [`Tiling::Adaptive`]. A non-fixed tiling implies
+    /// chunking (`block_shape` defaults to 64 per dimension when unset),
+    /// exactly like `stream`.
+    pub tiling: Tiling,
 }
 
 impl Default for PipelineConfig {
@@ -65,6 +70,7 @@ impl Default for PipelineConfig {
             threads: 1,
             stream: false,
             memory_budget: 0,
+            tiling: Tiling::Fixed,
         }
     }
 }
@@ -149,10 +155,12 @@ pub fn make_chunked_compressor(
     name: &str,
     block_shape: &[usize],
     threads: usize,
+    tiling: Tiling,
 ) -> Result<Box<dyn Compressor<f32> + Send + Sync>> {
     let cfg = ChunkedConfig {
         block_shape: block_shape.to_vec(),
         threads,
+        tiling,
     };
     Ok(match name.to_ascii_lowercase().as_str() {
         "sz" => Box::new(ChunkedCompressor::new(Sz::default(), cfg)),
@@ -220,22 +228,34 @@ pub fn run(
         return Err(Error::invalid("pipeline needs at least one worker"));
     }
     let codec = if cfg.stream {
-        let block_shape = cfg.block_shape.clone().unwrap_or_else(|| vec![64]);
+        let block_shape = cfg
+            .block_shape
+            .clone()
+            .unwrap_or_else(|| ChunkedConfig::default().block_shape);
         JobCodec::Streamed {
             inner: make_compressor(&cfg.method)?,
             cfg: crate::stream::StreamConfig {
                 chunk: ChunkedConfig {
                     block_shape,
                     threads: cfg.threads,
+                    tiling: cfg.tiling.clone(),
                 },
                 memory_budget: cfg.memory_budget,
                 spool_dir: None,
             },
         }
     } else {
-        JobCodec::Plain(match &cfg.block_shape {
-            Some(bs) => make_chunked_compressor(&cfg.method, bs, cfg.threads)?,
-            None => make_compressor(&cfg.method)?,
+        // an adaptive tiling only makes sense on the chunked path, so it
+        // implies chunking with the default nominal shape, like `stream`
+        JobCodec::Plain(match (&cfg.block_shape, &cfg.tiling) {
+            (Some(bs), _) => {
+                make_chunked_compressor(&cfg.method, bs, cfg.threads, cfg.tiling.clone())?
+            }
+            (None, Tiling::Adaptive { .. }) => {
+                let nominal = ChunkedConfig::default().block_shape;
+                make_chunked_compressor(&cfg.method, &nominal, cfg.threads, cfg.tiling.clone())?
+            }
+            (None, Tiling::Fixed) => make_compressor(&cfg.method)?,
         })
     };
     let codec = Arc::new(codec);
@@ -388,7 +408,7 @@ mod tests {
     #[test]
     fn unknown_method_rejected() {
         assert!(make_compressor("gzip").is_err());
-        assert!(make_chunked_compressor("gzip", &[16], 1).is_err());
+        assert!(make_chunked_compressor("gzip", &[16], 1, Tiling::Fixed).is_err());
     }
 
     #[test]
@@ -418,12 +438,40 @@ mod tests {
     }
 
     #[test]
+    fn adaptive_pipeline_completes_all_fields() {
+        let ds = tiny_datasets();
+        let njobs: usize = ds.iter().map(|d| d.fields.len()).sum();
+        let reg = Registry::new();
+        let report = run(
+            &ds,
+            &PipelineConfig {
+                workers: 2,
+                method: "mgard+".into(),
+                block_shape: Some(vec![10]),
+                threads: 2,
+                tiling: Tiling::Adaptive {
+                    min_block_shape: vec![4],
+                    variance_threshold: 0.5,
+                },
+                ..PipelineConfig::default()
+            },
+            &reg,
+        )
+        .unwrap();
+        assert_eq!(report.results.len(), njobs);
+        for r in &report.results {
+            assert!(r.comp_bytes > 0);
+            assert!(r.linf.unwrap().is_finite());
+        }
+    }
+
+    #[test]
     fn streamed_pipeline_matches_chunked_container_bytes() {
         // the streaming writer path must emit the same container as the
         // in-core chunked compressor for the same field and settings
         let ds = tiny_datasets();
         let field = &ds[0].fields[0].data;
-        let chunked = make_chunked_compressor("mgard+", &[10], 1).unwrap();
+        let chunked = make_chunked_compressor("mgard+", &[10], 1, Tiling::Fixed).unwrap();
         let want = chunked.compress(field, Tolerance::Rel(1e-3)).unwrap();
         let streamed = JobCodec::Streamed {
             inner: make_compressor("mgard+").unwrap(),
@@ -431,6 +479,7 @@ mod tests {
                 chunk: ChunkedConfig {
                     block_shape: vec![10],
                     threads: 1,
+                    ..Default::default()
                 },
                 memory_budget: 8 * 1024,
                 spool_dir: None,

@@ -3,6 +3,29 @@
 //! SDRBench distributes fields as headerless little-endian float arrays;
 //! these helpers let real datasets replace the synthetic analogs without
 //! touching the rest of the stack.
+//!
+//! Invariants the streaming pipeline builds on:
+//!
+//! * **Strided block access** — [`read_raw_block`] / [`write_raw_block`]
+//!   seek to each contiguous run of a block, so only the block is ever
+//!   resident; a block read equals `Tensor::block` on the whole field
+//!   bit-for-bit. These are the reads behind both the compression pass
+//!   and the adaptive-tiling variance pass of `crate::stream`.
+//! * **Fold-order parity** — [`raw_min_max`] scans in the same order as
+//!   `Tensor::min_max`, so a relative tolerance resolves to the *same*
+//!   absolute τ on disk as in core (a prerequisite for the streamed
+//!   container being byte-identical to the in-core one).
+//!
+//! ```
+//! use mgardp::data::io::{read_raw_block, write_raw_block};
+//! use mgardp::tensor::Tensor;
+//! // a 4×6 f32 field backed by any Read/Write + Seek stream
+//! let mut file = std::io::Cursor::new(vec![0u8; 4 * 6 * 4]);
+//! let block = Tensor::<f32>::from_fn(&[2, 3], |ix| (ix[0] * 3 + ix[1]) as f32);
+//! write_raw_block(&mut file, &[4, 6], &[1, 2], &block).unwrap();
+//! let back: Tensor<f32> = read_raw_block(&mut file, &[4, 6], &[1, 2], &[2, 3]).unwrap();
+//! assert_eq!(back, block);
+//! ```
 
 use crate::error::{Error, Result};
 use crate::tensor::{numel, strides_for, Scalar, Tensor};

@@ -70,6 +70,32 @@ pub fn smooth_test_field(shape: &[usize]) -> Tensor<f32> {
     })
 }
 
+/// A field with a smooth/turbulent split along dimension 0: the lower half
+/// is a gentle separable surface (half the frequency of
+/// [`smooth_test_field`], so it is genuinely smooth at small block
+/// scales), the upper half adds deterministic point noise on top of it.
+/// The archetypal workload for variance-guided adaptive tiling
+/// ([`crate::chunk::Tiling::Adaptive`]): the smooth half should stay one
+/// large block while the turbulent half refines toward the minimum shape.
+/// Deterministic in `seed` (noise is drawn in row-major point order; the
+/// smooth half is seed-independent).
+pub fn split_test_field(shape: &[usize], seed: u64) -> Tensor<f32> {
+    let mut rng = Rng::new(seed ^ 0x5711_71e5);
+    let half = shape[0] / 2;
+    Tensor::from_fn(shape, |ix| {
+        let mut v = 1.0f64;
+        for (d, &i) in ix.iter().enumerate() {
+            let n = shape[d].max(2);
+            let t = i as f64 / (n - 1) as f64;
+            v *= (std::f64::consts::PI * t * (d + 1) as f64 * 0.5).sin() + 1.5;
+        }
+        if ix[0] >= half {
+            v += rng.uniform_in(-1.0, 1.0);
+        }
+        v as f32
+    })
+}
+
 /// Hurricane-Isabel analog: 3-D `z × y × x` slab with a translating vortex,
 /// vertical stratification and band-limited turbulence. Four fields.
 pub fn hurricane_like(scale: f64, seed: u64) -> Dataset {
@@ -356,5 +382,30 @@ mod tests {
     fn dataset_nbytes() {
         let ds = nyx_like(0.1, 1);
         assert_eq!(ds.nbytes(), 3 * 16 * 16 * 16 * 4);
+    }
+
+    #[test]
+    fn split_field_deterministic_and_half_turbulent() {
+        let a = split_test_field(&[20, 16], 9);
+        let b = split_test_field(&[20, 16], 9);
+        assert_eq!(a, b);
+        let c = split_test_field(&[20, 16], 10);
+        assert_ne!(c, a, "different seeds must differ");
+        // only the upper half along dim 0 carries the (seeded) noise: the
+        // smooth lower half is identical across seeds, the upper is not
+        let mut lower_equal = true;
+        let mut upper_diff_var = 0.0f64;
+        for z in 0..20 {
+            for x in 0..16 {
+                let d = (a.at(&[z, x]) - c.at(&[z, x])) as f64;
+                if z < 10 {
+                    lower_equal &= d == 0.0;
+                } else {
+                    upper_diff_var += d * d / (10.0 * 16.0);
+                }
+            }
+        }
+        assert!(lower_equal, "lower half must be seed-independent (noise-free)");
+        assert!(upper_diff_var > 0.1, "upper half must be noisy, got {upper_diff_var}");
     }
 }

@@ -18,10 +18,46 @@
 //!   header + index, then decodes blocks on demand — the whole field to a
 //!   raw-file sink, or just a sub-domain via `decompress_region`.
 //!
-//! The streamed container is **byte-identical** to the one the in-core
-//! [`crate::chunk::ChunkedCompressor`] produces for the same input, block
-//! shape and tolerance — the two paths cross-check each other (enforced in
-//! `rust/tests/streaming.rs`).
+//! Invariants:
+//!
+//! * **Ordered-window backpressure** — workers stall instead of reading
+//!   ahead once `window` blocks are in flight, and results reach the
+//!   writer in tile-list order regardless of completion order
+//!   ([`crate::chunk::pool::parallel_map_ordered`]).
+//! * **Byte identity** — the streamed container is **byte-identical** to
+//!   the one the in-core [`crate::chunk::ChunkedCompressor`] produces for
+//!   the same input, tiling configuration and tolerance, for both fixed
+//!   and adaptive layouts — the two paths cross-check each other
+//!   (enforced in `rust/tests/streaming.rs` and
+//!   `rust/tests/adaptive_tiling.rs`).
+//! * **Budget from the actual tile list** — the in-flight window is sized
+//!   from the largest block the tiling *actually produced* (remainder-
+//!   merged and adaptive blocks can both exceed the nominal shape), so an
+//!   adaptive layout cannot overshoot [`StreamConfig::memory_budget`].
+//!
+//! ```
+//! use mgardp::chunk::ChunkedConfig;
+//! use mgardp::compressors::{MgardPlus, Tolerance};
+//! use mgardp::stream::{compress_to_writer, InCoreSource, StreamConfig, StreamingDecompressor};
+//! let field = mgardp::data::synth::smooth_test_field(&[12, 12]);
+//! let cfg = StreamConfig {
+//!     chunk: ChunkedConfig { block_shape: vec![8], threads: 1, ..Default::default() },
+//!     memory_budget: 4096,
+//!     spool_dir: None,
+//! };
+//! let mut bytes = Vec::new();
+//! compress_to_writer(
+//!     &MgardPlus::default(),
+//!     &InCoreSource::new(&field),
+//!     Tolerance::Rel(1e-3),
+//!     &cfg,
+//!     &mut bytes,
+//! )
+//! .unwrap();
+//! let mut d = StreamingDecompressor::open(std::io::Cursor::new(bytes)).unwrap();
+//! let back: mgardp::tensor::Tensor<f32> = d.decompress().unwrap();
+//! assert_eq!(back.shape(), field.shape());
+//! ```
 
 pub mod reader;
 pub mod source;
@@ -32,7 +68,7 @@ pub use source::{BlockSource, InCoreSource, RawFileSource};
 pub use writer::ContainerWriter;
 
 use crate::chunk::pool::parallel_map_ordered;
-use crate::chunk::{partition, resolve_block_shape, ChunkedConfig};
+use crate::chunk::{plan_tiles, resolve_block_shape, ChunkedConfig};
 use crate::compressors::{Compressor, Tolerance};
 use crate::error::{Error, Result};
 use crate::grid::Hierarchy;
@@ -49,10 +85,14 @@ pub struct StreamConfig {
     /// Approximate cap, in bytes, on the raw data held in flight: the
     /// number of concurrently resident blocks is
     /// `max(1, memory_budget / (2 × largest_block_bytes))`, sized from the
-    /// largest block the partition actually produced (a factor 2 covers
-    /// the raw slab plus its compressed blob; codec workspace is
-    /// excluded). `0` means unbounded — every block may be in flight at
-    /// once.
+    /// largest block of the *actual* tile list — remainder-merged blocks
+    /// exceed the nominal shape, and an adaptive layout
+    /// ([`crate::chunk::Tiling::Adaptive`]) can keep a smooth region as
+    /// one block far larger than either (a factor 2 covers the raw slab
+    /// plus its compressed blob; codec workspace is excluded). `0` means
+    /// unbounded — every block may be in flight at once. The window never
+    /// drops below one block, so a budget smaller than the largest tile
+    /// still makes progress while holding that one tile resident.
     pub memory_budget: usize,
     /// Directory for the blob spool file; `None` buffers compressed blobs
     /// in memory (fine when the *compressed* size fits comfortably).
@@ -60,9 +100,10 @@ pub struct StreamConfig {
 }
 
 /// Resolve a byte budget to an in-flight block window given the largest
-/// *actual* block of the partition in elements (remainder-merged blocks can
-/// be bigger than the nominal shape — up to ~2× per dimension — so sizing
-/// from the nominal shape would overshoot the budget).
+/// *actual* block of the tile list in elements. Sizing from the nominal
+/// shape would overshoot the budget: remainder-merged blocks can be up to
+/// ~2× bigger per dimension, and adaptive tiles are unbounded by the
+/// nominal shape altogether (a smooth region stays one large block).
 pub fn window_for_budget<T: Scalar>(
     memory_budget: usize,
     max_block_numel: usize,
@@ -109,7 +150,19 @@ where
     }
     let field_shape = source.shape().to_vec();
     let block_shape = resolve_block_shape(&cfg.chunk.block_shape, field_shape.len())?;
-    let blocks = partition(&field_shape, &block_shape)?;
+    // the variance pass of an adaptive tiling reads each min-shape cell
+    // once through the same strided block reads the compression pass uses,
+    // so it works unchanged on an out-of-core source
+    let (blocks, policy) = plan_tiles(
+        &field_shape,
+        &block_shape,
+        &cfg.chunk.tiling,
+        cfg.chunk.threads,
+        |b| source.read_block(&b.start, &b.shape),
+    )?;
+    // size the in-flight window from the largest tile the plan actually
+    // produced — never the nominal shape — so heterogeneous (adaptive)
+    // layouts stay inside the budget too
     let max_block_numel = blocks.iter().map(|b| numel(&b.shape)).max().unwrap_or(1);
     let window = window_for_budget::<T>(cfg.memory_budget, max_block_numel, blocks.len());
     let mut writer = match &cfg.spool_dir {
@@ -118,9 +171,12 @@ where
             &field_shape,
             tau,
             block_shape.clone(),
+            policy,
             dir,
         )?,
-        None => ContainerWriter::in_memory::<T>(sink, &field_shape, tau, block_shape.clone()),
+        None => {
+            ContainerWriter::in_memory::<T>(sink, &field_shape, tau, block_shape.clone(), policy)
+        }
     };
     parallel_map_ordered(
         blocks.len(),
@@ -168,6 +224,7 @@ mod tests {
         let codec = MgardPlus::default().chunked(ChunkedConfig {
             block_shape: vec![10],
             threads: 2,
+            ..Default::default()
         });
         let want = codec.compress(&t, Tolerance::Rel(1e-3)).unwrap();
         let mut got = Vec::new();
@@ -175,6 +232,7 @@ mod tests {
             chunk: ChunkedConfig {
                 block_shape: vec![10],
                 threads: 2,
+                ..Default::default()
             },
             memory_budget: 64 * 1024, // well below the 388 KiB field
             spool_dir: None,

@@ -13,7 +13,7 @@
 //! [`crate::chunk::container::write_container`] fed the same blocks in the
 //! same order.
 
-use crate::chunk::container::{BlockEntry, ChunkIndex};
+use crate::chunk::container::{BlockEntry, ChunkIndex, TilingPolicy};
 use crate::compressors::{peek_method, Method};
 use crate::error::{Error, Result};
 use crate::tensor::Scalar;
@@ -60,8 +60,10 @@ impl Drop for Spool {
 /// Streams per-block blobs to any [`io::Write`] sink, back-patching the
 /// chunk index when the stream is finalized.
 ///
-/// Blocks must be pushed in row-major block order (the order
-/// [`crate::chunk::partition::partition`] enumerates), matching the on-disk
+/// Blocks must be pushed in tile-list order — row-major for fixed tilings
+/// (the order [`crate::chunk::partition::partition`] enumerates),
+/// depth-first for adaptive ones
+/// ([`crate::chunk::adaptive::adaptive_partition`]) — matching the on-disk
 /// index order of the in-core path.
 pub struct ContainerWriter<W: Write> {
     sink: W,
@@ -69,6 +71,7 @@ pub struct ContainerWriter<W: Write> {
     field_shape: Vec<usize>,
     tau_abs: f64,
     block_shape: Vec<usize>,
+    policy: TilingPolicy,
     inner: Option<Method>,
     entries: Vec<BlockEntry>,
     spool: Spool,
@@ -76,12 +79,15 @@ pub struct ContainerWriter<W: Write> {
 }
 
 impl<W: Write> ContainerWriter<W> {
-    /// Writer whose blobs are buffered in memory until finalize.
+    /// Writer whose blobs are buffered in memory until finalize. `policy`
+    /// is the tiling policy the container records (it decides the
+    /// serialized sub-version; see `docs/FORMAT.md`).
     pub fn in_memory<T: Scalar>(
         sink: W,
         field_shape: &[usize],
         tau_abs: f64,
         block_shape: Vec<usize>,
+        policy: TilingPolicy,
     ) -> Self {
         ContainerWriter {
             sink,
@@ -89,6 +95,7 @@ impl<W: Write> ContainerWriter<W> {
             field_shape: field_shape.to_vec(),
             tau_abs,
             block_shape,
+            policy,
             inner: None,
             entries: Vec::new(),
             spool: Spool::Mem(Vec::new()),
@@ -104,6 +111,7 @@ impl<W: Write> ContainerWriter<W> {
         field_shape: &[usize],
         tau_abs: f64,
         block_shape: Vec<usize>,
+        policy: TilingPolicy,
         spool_dir: &Path,
     ) -> Result<Self> {
         fs::create_dir_all(spool_dir)?;
@@ -117,7 +125,7 @@ impl<W: Write> ContainerWriter<W> {
             .write(true)
             .create_new(true)
             .open(&path)?;
-        let mut w = Self::in_memory::<T>(sink, field_shape, tau_abs, block_shape);
+        let mut w = Self::in_memory::<T>(sink, field_shape, tau_abs, block_shape, policy);
         w.spool = Spool::File { file, path };
         Ok(w)
     }
@@ -190,6 +198,7 @@ impl<W: Write> ContainerWriter<W> {
         let index = ChunkIndex {
             inner,
             block_shape: std::mem::take(&mut self.block_shape),
+            policy: self.policy.clone(),
             entries: std::mem::take(&mut self.entries),
         };
         let mut prefix = Vec::with_capacity(64 + 64 * index.entries.len());
@@ -225,6 +234,7 @@ impl<W: Write> ContainerWriter<W> {
         self.inner.map(|inner| ChunkIndex {
             inner,
             block_shape: self.block_shape.clone(),
+            policy: self.policy.clone(),
             entries: self.entries.clone(),
         })
     }
@@ -278,6 +288,7 @@ mod tests {
             &ChunkIndex {
                 inner: Method::MgardPlus,
                 block_shape: vec![8, 8],
+                policy: TilingPolicy::Fixed,
                 entries,
             },
             blobs,
@@ -294,10 +305,23 @@ mod tests {
                 std::process::id()
             ));
             let mut w = if spooled {
-                ContainerWriter::spooled::<f32>(Vec::new(), &[17, 8], 0.5, vec![8, 8], &dir)
-                    .unwrap()
+                ContainerWriter::spooled::<f32>(
+                    Vec::new(),
+                    &[17, 8],
+                    0.5,
+                    vec![8, 8],
+                    TilingPolicy::Fixed,
+                    &dir,
+                )
+                .unwrap()
             } else {
-                ContainerWriter::in_memory::<f32>(Vec::new(), &[17, 8], 0.5, vec![8, 8])
+                ContainerWriter::in_memory::<f32>(
+                    Vec::new(),
+                    &[17, 8],
+                    0.5,
+                    vec![8, 8],
+                    TilingPolicy::Fixed,
+                )
             };
             w.push_block(&[0, 0], &[8, 8], 2, &blobs[0]).unwrap();
             w.push_block(&[8, 0], &[9, 8], 3, &blobs[1]).unwrap();
@@ -313,16 +337,28 @@ mod tests {
     fn spool_file_removed_after_finalize_and_on_drop() {
         let dir = std::env::temp_dir().join(format!("mgardp_writer_rm_{}", std::process::id()));
         let blobs = blobs();
-        let mut w =
-            ContainerWriter::spooled::<f32>(Vec::<u8>::new(), &[17, 8], 0.5, vec![8, 8], &dir)
-                .unwrap();
+        let mut w = ContainerWriter::spooled::<f32>(
+            Vec::<u8>::new(),
+            &[17, 8],
+            0.5,
+            vec![8, 8],
+            TilingPolicy::Fixed,
+            &dir,
+        )
+        .unwrap();
         w.push_block(&[0, 0], &[8, 8], 2, &blobs[0]).unwrap();
         w.push_block(&[8, 0], &[9, 8], 3, &blobs[1]).unwrap();
         w.finalize().unwrap();
         // abandoned writer: spool cleaned up by Drop
-        let mut w2 =
-            ContainerWriter::spooled::<f32>(Vec::<u8>::new(), &[17, 8], 0.5, vec![8, 8], &dir)
-                .unwrap();
+        let mut w2 = ContainerWriter::spooled::<f32>(
+            Vec::<u8>::new(),
+            &[17, 8],
+            0.5,
+            vec![8, 8],
+            TilingPolicy::Fixed,
+            &dir,
+        )
+        .unwrap();
         w2.push_block(&[0, 0], &[8, 8], 2, &blobs[0]).unwrap();
         drop(w2);
         let leftovers: Vec<_> = std::fs::read_dir(&dir)
@@ -335,7 +371,13 @@ mod tests {
     #[test]
     fn writer_rejects_bad_blocks() {
         let blobs = blobs();
-        let mut w = ContainerWriter::in_memory::<f32>(Vec::<u8>::new(), &[17, 8], 0.5, vec![8, 8]);
+        let mut w = ContainerWriter::in_memory::<f32>(
+            Vec::<u8>::new(),
+            &[17, 8],
+            0.5,
+            vec![8, 8],
+            TilingPolicy::Fixed,
+        );
         // out-of-field block
         assert!(w.push_block(&[10, 0], &[9, 8], 2, &blobs[0]).is_err());
         // garbage blob (no header)

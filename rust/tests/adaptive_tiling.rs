@@ -1,0 +1,178 @@
+//! Tier-1 suite for variance-guided adaptive tiling: byte identity between
+//! the in-core and streamed writers on adaptive layouts, the threshold-0
+//! fixed-tiling degenerate, seam error bounds across unequal neighboring
+//! blocks, and region decode on heterogeneous layouts.
+
+use mgardp::chunk::{container, ChunkedConfig, Tiling, TilingPolicy};
+use mgardp::compressors::{decompress_any, Compressor, MgardPlus, Tolerance};
+use mgardp::data::{io, synth};
+use mgardp::metrics::linf_error;
+use mgardp::stream::{
+    compress_to_writer, InCoreSource, RawFileSource, StreamConfig, StreamingDecompressor,
+};
+use mgardp::tensor::Tensor;
+
+fn adaptive(block: &[usize], min: &[usize], threshold: f64, threads: usize) -> ChunkedConfig {
+    ChunkedConfig {
+        block_shape: block.to_vec(),
+        threads,
+        tiling: Tiling::Adaptive {
+            min_block_shape: min.to_vec(),
+            variance_threshold: threshold,
+        },
+    }
+}
+
+#[test]
+fn threshold_zero_is_bit_exact_fixed_tiling() {
+    let t = synth::split_test_field(&[21, 22], 3);
+    let fixed = MgardPlus::default().chunked(ChunkedConfig {
+        block_shape: vec![8],
+        threads: 2,
+        tiling: Tiling::Fixed,
+    });
+    let zero = MgardPlus::default().chunked(adaptive(&[8], &[4], 0.0, 2));
+    let want = fixed.compress(&t, Tolerance::Rel(1e-3)).unwrap();
+    let got = zero.compress(&t, Tolerance::Rel(1e-3)).unwrap();
+    assert_eq!(got, want, "threshold 0 must reproduce the fixed container");
+    let (_, index, _) = container::read_container(&got).unwrap();
+    assert_eq!(index.policy, TilingPolicy::Fixed);
+}
+
+#[test]
+fn uniform_field_collapses_to_one_block() {
+    let t = Tensor::<f32>::from_fn(&[20, 24], |_| 1.5);
+    let codec = MgardPlus::default().chunked(adaptive(&[8], &[4], 0.5, 1));
+    let bytes = codec.compress(&t, Tolerance::Abs(1e-3)).unwrap();
+    let (header, index, _) = container::read_container(&bytes).unwrap();
+    assert_eq!(index.entries.len(), 1);
+    assert_eq!(index.entries[0].start, vec![0, 0]);
+    assert_eq!(index.entries[0].shape, header.shape);
+    let back: Tensor<f32> = codec.decompress(&bytes).unwrap();
+    assert!(linf_error(t.data(), back.data()) <= 1e-3);
+}
+
+#[test]
+fn adaptive_layout_refines_and_honours_seam_bound() {
+    // unequal neighboring blocks: the turbulent half splits to 4³-ish tiles
+    // while the smooth half stays coarse, so seams join blocks of different
+    // sizes — the global L∞ bound must hold pointwise across all of them
+    let t = synth::split_test_field(&[33, 32, 18], 11);
+    let tau = 1e-3 * t.value_range();
+    let codec = MgardPlus::default().chunked(adaptive(&[16], &[4], 0.4, 4));
+    let bytes = codec.compress(&t, Tolerance::Rel(1e-3)).unwrap();
+    let (_, index, _) = container::read_container(&bytes).unwrap();
+    assert!(
+        index.entries.len() > 1,
+        "split field must refine into multiple blocks"
+    );
+    let sizes: Vec<usize> = index
+        .entries
+        .iter()
+        .map(|e| e.shape.iter().product::<usize>())
+        .collect();
+    let smallest = *sizes.iter().min().unwrap();
+    let largest = *sizes.iter().max().unwrap();
+    assert!(
+        largest > smallest,
+        "expected heterogeneous block sizes, got {sizes:?}"
+    );
+    let back: Tensor<f32> = codec.decompress(&bytes).unwrap();
+    assert!(linf_error(t.data(), back.data()) <= tau * (1.0 + 1e-6));
+    // the self-dispatching path agrees
+    let any: Tensor<f32> = decompress_any(&bytes).unwrap();
+    assert_eq!(any, back);
+}
+
+#[test]
+fn streamed_adaptive_container_is_byte_identical() {
+    let t = synth::split_test_field(&[21, 22, 23], 5);
+    let codec = MgardPlus::default().chunked(adaptive(&[10], &[4], 0.4, 2));
+    let want = codec.compress(&t, Tolerance::Rel(1e-3)).unwrap();
+
+    // in-core source through the streaming writer
+    let cfg = StreamConfig {
+        chunk: adaptive(&[10], &[4], 0.4, 2),
+        memory_budget: 64 * 1024,
+        spool_dir: None,
+    };
+    let mut from_core = Vec::new();
+    compress_to_writer(
+        &MgardPlus::default(),
+        &InCoreSource::new(&t),
+        Tolerance::Rel(1e-3),
+        &cfg,
+        &mut from_core,
+    )
+    .unwrap();
+    assert_eq!(from_core, want, "in-core source streamed container differs");
+
+    // raw file on disk through the streaming writer (strided cell reads)
+    let dir = std::env::temp_dir().join(format!("mgardp_adapt_stream_{}", std::process::id()));
+    let raw = dir.join("field.f32");
+    io::write_raw(&raw, &t).unwrap();
+    let source = RawFileSource::<f32>::new(&raw, t.shape()).unwrap();
+    let mut from_file = Vec::new();
+    compress_to_writer(
+        &MgardPlus::default(),
+        &source,
+        Tolerance::Rel(1e-3),
+        &cfg,
+        &mut from_file,
+    )
+    .unwrap();
+    assert_eq!(from_file, want, "raw-file source streamed container differs");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn streaming_decompressor_handles_adaptive_layouts() {
+    let t = synth::split_test_field(&[24, 26], 13);
+    let tau = 1e-3 * t.value_range();
+    let codec = MgardPlus::default().chunked(adaptive(&[8], &[4], 0.4, 1));
+    let bytes = codec.compress(&t, Tolerance::Rel(1e-3)).unwrap();
+    let mut d = StreamingDecompressor::open(std::io::Cursor::new(bytes)).unwrap();
+    assert!(matches!(
+        d.index().policy,
+        TilingPolicy::VarianceGuided { .. }
+    ));
+    // full decode
+    let back: Tensor<f32> = d.decompress().unwrap();
+    assert!(linf_error(t.data(), back.data()) <= tau * (1.0 + 1e-6));
+    // a region crossing the smooth/turbulent seam touches blocks of
+    // different sizes; only intersecting blocks decode, bound still holds
+    let region: Tensor<f32> = d.decompress_region(&[8, 5], &[12, 14]).unwrap();
+    let direct = t.block(&[8, 5], &[12, 14]).unwrap();
+    assert!(linf_error(direct.data(), region.data()) <= tau * (1.0 + 1e-6));
+}
+
+#[test]
+fn adaptive_partition_covers_exactly_and_respects_min_shape() {
+    let t = synth::split_test_field(&[17, 33], 9);
+    let tiles = mgardp::chunk::adaptive_partition(&[17, 33], &[4, 4], 0.3, 2, |b| {
+        t.block(&b.start, &b.shape)
+    })
+    .unwrap();
+    let mut seen = vec![0u8; 17 * 33];
+    for b in &tiles {
+        assert!(b.shape.iter().all(|&s| s >= 4), "tile {b:?} under min shape");
+        for dz in 0..b.shape[0] {
+            for dx in 0..b.shape[1] {
+                seen[(b.start[0] + dz) * 33 + (b.start[1] + dx)] += 1;
+            }
+        }
+    }
+    assert!(seen.iter().all(|&c| c == 1), "overlap or gap in adaptive tiling");
+}
+
+#[test]
+fn invalid_adaptive_configs_error() {
+    let t = synth::smooth_test_field(&[12, 12]);
+    for (min, thr) in [(vec![1usize], 0.5), (vec![4], -0.5), (vec![4], f64::NAN)] {
+        let codec = MgardPlus::default().chunked(adaptive(&[8], &min, thr, 1));
+        assert!(
+            codec.compress(&t, Tolerance::Rel(1e-3)).is_err(),
+            "min {min:?} threshold {thr} accepted"
+        );
+    }
+}

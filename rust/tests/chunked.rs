@@ -13,6 +13,7 @@ fn chunked(block: &[usize], threads: usize) -> ChunkedCompressor<MgardPlus> {
     MgardPlus::default().chunked(ChunkedConfig {
         block_shape: block.to_vec(),
         threads,
+        ..Default::default()
     })
 }
 
@@ -116,6 +117,7 @@ fn f64_and_other_inner_codecs() {
         ChunkedConfig {
             block_shape: vec![8],
             threads: 2,
+            ..Default::default()
         },
     );
     let bytes = codec.compress(&t, Tolerance::Abs(1e-6)).unwrap();
@@ -128,6 +130,7 @@ fn f64_and_other_inner_codecs() {
         ChunkedConfig {
             block_shape: vec![9],
             threads: 2,
+            ..Default::default()
         },
     );
     let bytes = zfp.compress(&t32, Tolerance::Rel(1e-3)).unwrap();

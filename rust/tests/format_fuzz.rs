@@ -68,6 +68,7 @@ fn chunked_container() -> (Tensor<f32>, Vec<u8>) {
     let codec = MgardPlus::default().chunked(ChunkedConfig {
         block_shape: vec![8],
         threads: 1,
+        ..Default::default()
     });
     let bytes = codec.compress(&t, Tolerance::Rel(1e-3)).unwrap();
     (t, bytes)
@@ -79,6 +80,7 @@ fn truncated_chunked_container_errors_cleanly() {
     let codec = MgardPlus::default().chunked(ChunkedConfig {
         block_shape: vec![8],
         threads: 1,
+        ..Default::default()
     });
     // every possible truncation point: must return Err, never panic
     for cut in 0..bytes.len() {
@@ -93,6 +95,7 @@ fn corrupted_chunked_index_never_panics() {
     let codec = MgardPlus::default().chunked(ChunkedConfig {
         block_shape: vec![8],
         threads: 2,
+        ..Default::default()
     });
     let mut rng = Rng::new(0xC0DE);
     // single-byte flips across the whole container, with extra density in
@@ -178,6 +181,68 @@ fn truncated_final_block_is_structured_error() {
     }
 }
 
+fn adaptive_container() -> (Tensor<f32>, Vec<u8>) {
+    let t = synth::split_test_field(&[18, 22], 21);
+    let codec = MgardPlus::default().chunked(ChunkedConfig {
+        block_shape: vec![8],
+        threads: 1,
+        tiling: mgardp::chunk::Tiling::Adaptive {
+            min_block_shape: vec![4],
+            variance_threshold: 0.4,
+        },
+    });
+    let bytes = codec.compress(&t, Tolerance::Rel(1e-3)).unwrap();
+    (t, bytes)
+}
+
+#[test]
+fn corrupted_adaptive_sub_version_byte_errors_cleanly() {
+    let (_, bytes) = adaptive_container();
+    // the sub-version byte sits right after the shared header; recompute
+    // the header length instead of hard-coding it
+    let mut header_only = Vec::new();
+    Header {
+        method: Method::Chunked,
+        dtype: 1,
+        shape: vec![18, 22],
+        tau_abs: mgardp::compressors::Header::read(&bytes).unwrap().0.tau_abs,
+    }
+    .write(&mut header_only);
+    let pos = header_only.len();
+    assert_eq!(bytes[pos], 2, "adaptive containers must declare sub-version 2");
+    // unknown sub-versions are refused outright
+    for bad_version in [0u8, 3, 7, 255] {
+        let mut bad = bytes.clone();
+        bad[pos] = bad_version;
+        let r: mgardp::Result<Tensor<f32>> = decompress_any(&bad);
+        assert!(r.is_err(), "sub-version {bad_version} accepted");
+    }
+    // flipping to sub-version 1 re-interprets the policy bytes as the block
+    // count/index; whatever happens, it must not panic (and with this
+    // container it fails validation)
+    let mut bad = bytes.clone();
+    bad[pos] = 1;
+    let _: mgardp::Result<Tensor<f32>> = decompress_any(&bad);
+    // every single-byte corruption of the policy region errors or decodes,
+    // never panics
+    let mut rng = Rng::new(0xADA9);
+    for _ in 0..200 {
+        let mut bad = bytes.clone();
+        let p = pos + rng.below(16);
+        bad[p] ^= 1 << rng.below(8);
+        let _: mgardp::Result<Tensor<f32>> = decompress_any(&bad);
+    }
+}
+
+#[test]
+fn truncated_adaptive_container_errors_cleanly() {
+    let (_, bytes) = adaptive_container();
+    for cut in 0..bytes.len().min(200) {
+        let r: mgardp::Result<Tensor<f32>> = decompress_any(&bytes[..cut]);
+        assert!(r.is_err(), "truncation at {cut} did not error");
+    }
+}
+
 #[test]
 fn oversized_counts_do_not_allocate() {
     // a chunked container whose block count field claims 2^40 blocks must be
@@ -189,6 +254,7 @@ fn oversized_counts_do_not_allocate() {
     let codec = MgardPlus::default().chunked(ChunkedConfig {
         block_shape: vec![8],
         threads: 1,
+        ..Default::default()
     });
     for pos in 0..bytes.len().min(64) {
         let mut bad = bytes.clone();

@@ -1,0 +1,150 @@
+//! Pin the container format to the normative spec: the worked hex example
+//! in `docs/FORMAT.md` must match, byte for byte, what the real emitter
+//! (`chunk::container::write_container`) produces for the documented
+//! inputs — and the document itself must contain exactly these bytes, so
+//! the spec cannot drift from the code.
+
+use mgardp::chunk::container::{write_container, BlockEntry, ChunkIndex, TilingPolicy};
+use mgardp::chunk::{CHUNK_CONTAINER_VERSION, CHUNK_CONTAINER_VERSION_ADAPTIVE};
+use mgardp::compressors::{Header, Method};
+
+/// The adaptive worked example of docs/FORMAT.md, 105 bytes.
+const ADAPTIVE_EXAMPLE_HEX: &str = "\
+4d 47 52 50 01 06 01 02 06 04 00 00 00 00 00 00
+e0 3f 02 02 04 04 01 02 02 00 00 00 00 00 00 d0
+3f 02 00 14 00 00 04 04 02 00 00 00 00 00 00 e0
+3f 14 14 04 00 02 04 01 00 00 00 00 00 00 e0 3f
+28 4d 47 52 50 01 02 01 02 04 04 00 00 00 00 00
+00 e0 3f 41 41 4d 47 52 50 01 02 01 02 02 04 00
+00 00 00 00 00 e0 3f 42 42";
+
+/// The fixed counterpart of docs/FORMAT.md, 94 bytes.
+const FIXED_EXAMPLE_HEX: &str = "\
+4d 47 52 50 01 06 01 02 06 04 00 00 00 00 00 00
+e0 3f 01 02 04 04 02 00 14 00 00 04 04 02 00 00
+00 00 00 00 e0 3f 14 14 04 00 02 04 01 00 00 00
+00 00 00 e0 3f 28 4d 47 52 50 01 02 01 02 04 04
+00 00 00 00 00 00 e0 3f 41 41 4d 47 52 50 01 02
+01 02 02 04 00 00 00 00 00 00 e0 3f 42 42";
+
+fn parse_hex(s: &str) -> Vec<u8> {
+    s.split_whitespace()
+        .map(|b| u8::from_str_radix(b, 16).expect("hex byte"))
+        .collect()
+}
+
+/// A well-formed inner mgard+ blob: the shared header for the block shape
+/// plus a 2-byte stand-in payload, exactly as documented.
+fn inner_blob(shape: &[usize], payload: &[u8]) -> Vec<u8> {
+    let mut b = Vec::new();
+    Header {
+        method: Method::MgardPlus,
+        dtype: 1,
+        shape: shape.to_vec(),
+        tau_abs: 0.5,
+    }
+    .write(&mut b);
+    b.extend_from_slice(payload);
+    b
+}
+
+fn example_blobs_and_entries() -> (Vec<Vec<u8>>, Vec<BlockEntry>) {
+    let blobs = vec![inner_blob(&[4, 4], b"AA"), inner_blob(&[2, 4], b"BB")];
+    let entries = vec![
+        BlockEntry {
+            offset: 0,
+            len: blobs[0].len(),
+            start: vec![0, 0],
+            shape: vec![4, 4],
+            nlevels: 2,
+            tau_abs: 0.5,
+        },
+        BlockEntry {
+            offset: blobs[0].len(),
+            len: blobs[1].len(),
+            start: vec![4, 0],
+            shape: vec![2, 4],
+            nlevels: 1,
+            tau_abs: 0.5,
+        },
+    ];
+    (blobs, entries)
+}
+
+#[test]
+fn adaptive_worked_example_matches_emitter() {
+    let (blobs, entries) = example_blobs_and_entries();
+    let index = ChunkIndex {
+        inner: Method::MgardPlus,
+        block_shape: vec![4, 4],
+        policy: TilingPolicy::VarianceGuided {
+            min_block_shape: vec![2, 2],
+            variance_threshold: 0.25,
+        },
+        entries,
+    };
+    let bytes = write_container::<f32>(&[6, 4], 0.5, &index, &blobs);
+    assert_eq!(bytes, parse_hex(ADAPTIVE_EXAMPLE_HEX), "spec hex drifted from emitter");
+    // and the documented container parses back to the documented inputs
+    let (header, back, blob) = mgardp::chunk::container::read_container(&bytes).unwrap();
+    assert_eq!(header.shape, vec![6, 4]);
+    assert_eq!(header.tau_abs, 0.5);
+    assert_eq!(back.policy, index.policy);
+    assert_eq!(back.entries, index.entries);
+    assert_eq!(blob.len(), 40);
+}
+
+#[test]
+fn fixed_worked_example_matches_emitter() {
+    let (blobs, entries) = example_blobs_and_entries();
+    let index = ChunkIndex {
+        inner: Method::MgardPlus,
+        block_shape: vec![4, 4],
+        policy: TilingPolicy::Fixed,
+        entries,
+    };
+    let bytes = write_container::<f32>(&[6, 4], 0.5, &index, &blobs);
+    assert_eq!(bytes, parse_hex(FIXED_EXAMPLE_HEX), "spec hex drifted from emitter");
+    // the fixed example is exactly what the fixed partition produces
+    let tiles = mgardp::chunk::partition(&[6, 4], &[4, 4]).unwrap();
+    let tile_geom: Vec<(Vec<usize>, Vec<usize>)> =
+        tiles.into_iter().map(|b| (b.start, b.shape)).collect();
+    let entry_geom: Vec<(Vec<usize>, Vec<usize>)> = index
+        .entries
+        .iter()
+        .map(|e| (e.start.clone(), e.shape.clone()))
+        .collect();
+    assert_eq!(tile_geom, entry_geom);
+}
+
+#[test]
+fn sub_version_bytes_match_spec_constants() {
+    let adaptive = parse_hex(ADAPTIVE_EXAMPLE_HEX);
+    let fixed = parse_hex(FIXED_EXAMPLE_HEX);
+    // the sub-version byte sits right after the 18-byte shared header of
+    // the [6, 4] example
+    assert_eq!(adaptive[18], CHUNK_CONTAINER_VERSION_ADAPTIVE);
+    assert_eq!(fixed[18], CHUNK_CONTAINER_VERSION);
+    // the two containers differ only by the 11 policy bytes
+    assert_eq!(adaptive.len(), fixed.len() + 11);
+}
+
+#[test]
+fn format_md_contains_exactly_these_bytes() {
+    let doc = include_str!(concat!(env!("CARGO_MANIFEST_DIR"), "/docs/FORMAT.md"));
+    let normalized: String = doc
+        .chars()
+        .filter(|c| !c.is_whitespace())
+        .collect::<String>()
+        .to_ascii_lowercase();
+    for (name, hex) in [
+        ("adaptive", ADAPTIVE_EXAMPLE_HEX),
+        ("fixed", FIXED_EXAMPLE_HEX),
+    ] {
+        let needle: String = hex.split_whitespace().collect();
+        assert!(
+            normalized.contains(&needle),
+            "docs/FORMAT.md no longer contains the {name} worked example bytes"
+        );
+    }
+}

@@ -29,6 +29,7 @@ fn stream_cfg(
         chunk: ChunkedConfig {
             block_shape: block.to_vec(),
             threads,
+            ..Default::default()
         },
         memory_budget: budget,
         spool_dir: spool,
@@ -45,6 +46,7 @@ fn assert_byte_identity(t: &Tensor<f32>, block: &[usize], budget: usize, tag: &s
     let codec = MgardPlus::default().chunked(ChunkedConfig {
         block_shape: block.to_vec(),
         threads: 3,
+        ..Default::default()
     });
     let want = codec.compress(t, Tolerance::Rel(1e-3)).unwrap();
 
@@ -95,6 +97,7 @@ fn region_decode_matches_full_and_honours_bound() {
     let codec = MgardPlus::default().chunked(ChunkedConfig {
         block_shape: vec![16],
         threads: 2,
+        ..Default::default()
     });
     let bytes = codec.compress(&t, Tolerance::Rel(1e-3)).unwrap();
     let path = dir.join("c.mgrp");
@@ -165,6 +168,7 @@ fn streaming_decompress_to_raw_round_trips() {
         ChunkedConfig {
             block_shape: vec![8],
             threads: 2,
+            ..Default::default()
         },
     );
     let in_core: Tensor<f32> = codec
@@ -185,6 +189,7 @@ fn mid_stream_truncation_errors_cleanly() {
     let codec = MgardPlus::default().chunked(ChunkedConfig {
         block_shape: vec![8],
         threads: 1,
+        ..Default::default()
     });
     let bytes = codec.compress(&t, Tolerance::Rel(1e-3)).unwrap();
     // every prefix of the container: open (or any later decode) must fail
@@ -217,6 +222,7 @@ fn incomplete_coverage_refused_at_open() {
     let codec = MgardPlus::default().chunked(ChunkedConfig {
         block_shape: vec![8],
         threads: 1,
+        ..Default::default()
     });
     let bytes = codec.compress(&t, Tolerance::Rel(1e-3)).unwrap();
     let (header, mut index, blob) = read_container(&bytes).unwrap();
@@ -241,6 +247,7 @@ fn truncated_blob_section_refused_at_open() {
     let codec = MgardPlus::default().chunked(ChunkedConfig {
         block_shape: vec![8],
         threads: 1,
+        ..Default::default()
     });
     let mut bytes = codec.compress(&t, Tolerance::Rel(1e-3)).unwrap();
     bytes.truncate(bytes.len() - 3);

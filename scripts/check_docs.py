@@ -1,0 +1,92 @@
+#!/usr/bin/env python3
+"""Docs gate: fail CI when the written specification drifts from the code.
+
+Two checks, both dependency-free (stdlib only):
+
+1. **Sub-version table drift** — every `pub const CHUNK_CONTAINER_* /
+   TILING_POLICY_*` constant in rust/src/chunk/container.rs must appear in
+   docs/FORMAT.md's tables with the same numeric value, and every such
+   constant named in docs/FORMAT.md must exist in the source. A format
+   bump that edits only one side fails here.
+2. **Markdown link check** — every relative link target in README.md,
+   ROADMAP.md and docs/*.md must exist on disk (http(s)/mailto and
+   in-page #anchors are skipped).
+
+Run from anywhere: paths resolve against the repo root (parent of this
+script's directory). Exit code 0 = clean, 1 = drift/broken links.
+"""
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+CONTAINER_RS = ROOT / "rust" / "src" / "chunk" / "container.rs"
+FORMAT_MD = ROOT / "docs" / "FORMAT.md"
+LINK_DOCS = [ROOT / "README.md", ROOT / "ROADMAP.md", *sorted((ROOT / "docs").glob("*.md"))]
+
+CONST_RE = re.compile(
+    r"pub const (CHUNK_CONTAINER_\w+|TILING_POLICY_\w+): u8 = (\d+);"
+)
+# a table row naming a constant: | `1` | `CHUNK_CONTAINER_VERSION` | ...
+ROW_RE = re.compile(r"\|\s*`(\d+)`\s*\|\s*`(CHUNK_CONTAINER_\w+|TILING_POLICY_\w+)`\s*\|")
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+
+def check_subversion_tables() -> list:
+    errors = []
+    source = CONTAINER_RS.read_text(encoding="utf-8")
+    doc = FORMAT_MD.read_text(encoding="utf-8")
+    src_consts = {name: int(val) for name, val in CONST_RE.findall(source)}
+    doc_consts = {name: int(val) for val, name in ROW_RE.findall(doc)}
+    if not src_consts:
+        errors.append(f"{CONTAINER_RS}: no format constants found (regex drift?)")
+    if not doc_consts:
+        errors.append(f"{FORMAT_MD}: no sub-version table rows found (regex drift?)")
+    for name, val in sorted(src_consts.items()):
+        if name not in doc_consts:
+            errors.append(
+                f"{FORMAT_MD}: constant `{name}` (= {val}) from container.rs "
+                "is missing from the sub-version tables"
+            )
+        elif doc_consts[name] != val:
+            errors.append(
+                f"{FORMAT_MD}: `{name}` documented as {doc_consts[name]}, "
+                f"container.rs says {val}"
+            )
+    for name, val in sorted(doc_consts.items()):
+        if name not in src_consts:
+            errors.append(
+                f"{FORMAT_MD}: documents `{name}` (= {val}) which does not "
+                "exist in container.rs"
+            )
+    return errors
+
+
+def check_links() -> list:
+    errors = []
+    for doc in LINK_DOCS:
+        text = doc.read_text(encoding="utf-8")
+        for target in LINK_RE.findall(text):
+            if target.startswith(("http://", "https://", "mailto:", "#")):
+                continue
+            path = target.split("#", 1)[0]
+            if not path:
+                continue
+            resolved = (doc.parent / path).resolve()
+            if not resolved.exists():
+                errors.append(f"{doc.relative_to(ROOT)}: broken link -> {target}")
+    return errors
+
+
+def main() -> int:
+    errors = check_subversion_tables() + check_links()
+    for e in errors:
+        print(f"docs gate: {e}", file=sys.stderr)
+    if errors:
+        return 1
+    print("docs gate: sub-version tables in sync, all markdown links resolve")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -6,8 +6,24 @@
 #   scripts/ci.sh --msrv     also build+test on the pinned MSRV (needs
 #                            `rustup toolchain install 1.70.0`)
 #
-# Gates: build (release), tests, bench targets compile, rustfmt, clippy
-# (-D warnings), rustdoc (-D warnings), examples smoke (tiny inputs).
+# Gates, and what each one protects:
+#   build (release)   the crate compiles as shipped (lto/thin, debug info)
+#   tier-1 tests      the whole integration + unit suite, including the
+#                     chunked/streaming/adaptive-tiling byte-identity and
+#                     error-bound contracts and the format fuzz suite
+#   bench compile     the paper-figure + adaptive_tiling bench drivers keep
+#                     building (they are harness=false binaries, easy to rot)
+#   rustfmt           formatting is canonical (a review-noise gate)
+#   clippy            lints are clean at -D warnings (correctness smells)
+#   rustdoc           docs build at -D warnings: every intra-doc link in the
+#                     chunk/stream/data rustdoc pass must resolve
+#   docs gate         scripts/check_docs.py — docs/FORMAT.md sub-version
+#                     tables must match rust/src/chunk/container.rs
+#                     constants, and every relative markdown link in
+#                     README/ROADMAP/docs must resolve (no toolchain needed)
+#   examples smoke    quickstart, chunked_parallel (includes the
+#                     fixed-vs-adaptive tiling comparison) and streaming run
+#                     end-to-end on tiny multi-block synthetic inputs
 set -euo pipefail
 
 cd "$(dirname "$0")/.."
@@ -48,6 +64,9 @@ fi
 
 step "rustdoc (-D warnings)"
 RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
+
+step "docs gate (FORMAT.md constants + markdown links)"
+python3 scripts/check_docs.py
 
 step "examples smoke (tiny synthetic inputs)"
 MGARDP_SMOKE=1 cargo run --release --example quickstart
