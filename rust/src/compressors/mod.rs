@@ -14,7 +14,7 @@ mod mgard_plus;
 mod sz;
 mod zfp;
 
-pub use format::{peek_method, Header, Method};
+pub use format::{peek_method, Header, Method, MAX_HEADER_NUMEL};
 pub use hybrid::{Hybrid, HybridConfig};
 pub use mgard::{Mgard, MgardConfig};
 pub use mgard_plus::{ExternalChoice, MgardPlus, MgardPlusConfig};

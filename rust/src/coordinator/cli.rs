@@ -5,6 +5,7 @@ use super::config::Config;
 use super::pipeline::{self, PipelineConfig};
 use super::refactor::RefactorStore;
 use super::registry::Registry;
+use crate::progressive::ComponentId;
 use crate::analysis::isosurface_area_scaled;
 use crate::compressors::{decompress_any, Tolerance};
 use crate::data::{io, synth};
@@ -163,8 +164,14 @@ COMMANDS:
   synth       --out DIR [--dataset all|hurricane|nyx|scale|qmcpack] [--scale S] [--seed N]
   pipeline    --config FILE  (sections: [pipeline] workers/method/rel_tol/verify/block_shape/threads/
               stream/memory_budget/tiling/min_block_shape/variance_threshold, [data] scale/seed)
-  refactor    --input F --shape ZxYxX --store DIR --field NAME
-  reconstruct --store DIR --field NAME --level L --output F
+  refactor    --input F --shape ZxYxX --store DIR --field NAME [--progressive [--planes P]]
+              (--progressive writes the bitplane layout: sign/bitplane/residual
+              components per level plus an error-bound manifest; see docs/FORMAT.md)
+  retrieve    --store DIR --field NAME --tolerance T --output F [--refine] [--state FILE]
+              (bitplane layout: fetch the minimal component set certified for the
+              absolute L∞ tolerance T; --refine extends the retrieval recorded in
+              FILE — default <output>.fetchstate — fetching only the delta)
+  reconstruct --store DIR --field NAME --level L --output F  (level layout)
   analyze     --input F --shape ZxYxX --iso V  (iso-surface area)
   penalties   (print the calibrated §4.2.2 penalty factors)
   xla-smoke   [--artifacts DIR] [--n 33]  (load + run the AOT level-step artifact)
@@ -180,6 +187,7 @@ pub fn run(command: &str, argv: &[String]) -> Result<()> {
         "synth" => cmd_synth(&args),
         "pipeline" => cmd_pipeline(&args),
         "refactor" => cmd_refactor(&args),
+        "retrieve" => cmd_retrieve(&args),
         "reconstruct" => cmd_reconstruct(&args),
         "analyze" => cmd_analyze(&args),
         "penalties" => cmd_penalties(),
@@ -514,13 +522,136 @@ fn cmd_refactor(args: &Args) -> Result<()> {
     let shape = parse_shape(args.req("shape")?)?;
     let data: Tensor<f32> = io::read_raw(Path::new(args.req("input")?), &shape)?;
     let store = RefactorStore::create(args.req("store")?)?;
-    let manifest = store.write_field(args.req("field")?, &data, 3)?;
+    if args.opt("progressive").is_none() {
+        if args.opt("planes").is_some() {
+            return Err(Error::Config("--planes requires --progressive".into()));
+        }
+        let manifest = store.write_field(args.req("field")?, &data, 3)?;
+        println!(
+            "refactored into {} components (levels {}..={}), bytes per component: {:?}",
+            manifest.component_bytes.len(),
+            manifest.start_level,
+            manifest.max_level,
+            manifest.component_bytes
+        );
+        return Ok(());
+    }
+    let planes = match args.opt("planes") {
+        Some(_) => Some(args.usize_or("planes", 0)?),
+        None => None,
+    };
+    let manifest = store.write_field_progressive(args.req("field")?, &data, planes, 3)?;
     println!(
-        "refactored into {} components (levels {}..={}), bytes per component: {:?}",
-        manifest.component_bytes.len(),
-        manifest.start_level,
-        manifest.max_level,
-        manifest.component_bytes
+        "progressively refactored into {} streams × {} components \
+         ({} bitplanes + sign + residual), {} stored bytes",
+        manifest.streams.len(),
+        manifest.comps_per_stream(),
+        manifest.planes,
+        manifest.total_bytes()
+    );
+    Ok(())
+}
+
+/// The sidecar file `retrieve --refine` uses to remember which components
+/// a previous retrieval already fetched.
+fn write_fetch_state(path: &Path, field: &str, fetched: &[usize]) -> Result<()> {
+    let counts: Vec<String> = fetched.iter().map(|c| c.to_string()).collect();
+    std::fs::write(
+        path,
+        format!("mgardp-fetch-state v1\n{field}\n{}\n", counts.join(" ")),
+    )?;
+    Ok(())
+}
+
+fn read_fetch_state(path: &Path, field: &str, nstreams: usize) -> Result<Vec<usize>> {
+    let text = std::fs::read_to_string(path).map_err(|e| {
+        Error::Config(format!(
+            "--refine needs the state of a previous retrieval at {}: {e}",
+            path.display()
+        ))
+    })?;
+    let mut lines = text.lines();
+    if lines.next() != Some("mgardp-fetch-state v1") {
+        return Err(Error::Config(format!(
+            "{} is not a fetch-state file",
+            path.display()
+        )));
+    }
+    let recorded = lines.next().unwrap_or("");
+    if recorded != field {
+        return Err(Error::Config(format!(
+            "{} records field `{recorded}`, not `{field}`",
+            path.display()
+        )));
+    }
+    let counts: Vec<usize> = lines
+        .next()
+        .unwrap_or("")
+        .split_whitespace()
+        .map(|t| {
+            t.parse::<usize>()
+                .map_err(|_| Error::Config(format!("bad fetch-state count `{t}`")))
+        })
+        .collect::<Result<_>>()?;
+    if counts.len() != nstreams {
+        return Err(Error::Config(format!(
+            "fetch state has {} streams; the field has {nstreams}",
+            counts.len()
+        )));
+    }
+    Ok(counts)
+}
+
+fn cmd_retrieve(args: &Args) -> Result<()> {
+    let store = RefactorStore::open(args.req("store")?)?;
+    let name = args.req("field")?;
+    let output = PathBuf::from(args.req("output")?);
+    let tau = args.f64_opt("tolerance")?.ok_or_else(|| {
+        Error::Config("missing required flag --tolerance (absolute L∞ bound)".into())
+    })?;
+    let field = store.progressive(name)?;
+    let nstreams = field.manifest().streams.len();
+    let state_path = match args.opt("state") {
+        Some(p) => PathBuf::from(p),
+        None => {
+            let mut os = output.clone().into_os_string();
+            os.push(".fetchstate");
+            PathBuf::from(os)
+        }
+    };
+    let mut reader = field.reader::<f32>()?;
+    // --refine replays what the recorded state already holds (local
+    // re-reads; they don't count as newly fetched bytes), then fetches
+    // only the delta the tighter tolerance requires
+    if args.opt("refine").is_some() {
+        let floor = read_fetch_state(&state_path, name, nstreams)?;
+        for (stream, &c) in floor.iter().enumerate() {
+            for comp in 0..c.min(field.manifest().comps_per_stream()) {
+                let id = ComponentId { stream, comp };
+                reader.apply(id, &field.fetch_component(id)?)?;
+            }
+        }
+    }
+    let replayed = reader.bytes_fetched();
+    let plan = field.plan(tau, Some(&reader.fetched()))?;
+    let new_bytes = field.refine(&mut reader, &plan)?;
+    let data = reader.reconstruct()?;
+    io::write_raw(&output, &data)?;
+    write_fetch_state(&state_path, name, &reader.fetched())?;
+    let total = field.manifest().total_bytes();
+    println!(
+        "retrieved `{name}` {:?} at τ {tau:.3e}: {new_bytes} bytes fetched\
+         {} = {} of {total} stored ({:.1}%), certified L∞ ≤ {:.3e}{}",
+        data.shape(),
+        if replayed > 0 {
+            format!(" (+{replayed} replayed)")
+        } else {
+            String::new()
+        },
+        reader.bytes_fetched(),
+        reader.bytes_fetched() as f64 / total as f64 * 100.0,
+        reader.current_bound(),
+        if reader.is_lossless() { " [lossless]" } else { "" },
     );
     Ok(())
 }
@@ -781,6 +912,101 @@ mod tests {
         let mut bad: Vec<String> = common.iter().map(|x| x.to_string()).collect();
         bad.extend(s(&["--output", zero.to_str().unwrap(), "--variance-threshold", "0.5"]));
         assert!(run("compress", &bad).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn progressive_refactor_retrieve_cycle() {
+        let dir = std::env::temp_dir().join(format!("mgardp_cli_retr_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let raw = dir.join("in.f32");
+        let t = crate::data::synth::smooth_test_field(&[17, 18]);
+        io::write_raw(&raw, &t).unwrap();
+        let store_dir = dir.join("store");
+        run(
+            "refactor",
+            &s(&[
+                "--input",
+                raw.to_str().unwrap(),
+                "--shape",
+                "17x18",
+                "--store",
+                store_dir.to_str().unwrap(),
+                "--field",
+                "T",
+                "--progressive",
+            ]),
+        )
+        .unwrap();
+        // loose retrieval honours the bound and drops bitplanes
+        let out = dir.join("out.f32");
+        run(
+            "retrieve",
+            &s(&[
+                "--store",
+                store_dir.to_str().unwrap(),
+                "--field",
+                "T",
+                "--tolerance",
+                "0.05",
+                "--output",
+                out.to_str().unwrap(),
+            ]),
+        )
+        .unwrap();
+        let back: Tensor<f32> = io::read_raw(&out, &[17, 18]).unwrap();
+        assert!(metrics::linf_error(t.data(), back.data()) <= 0.05);
+        // refinement tightens using the recorded fetch state
+        run(
+            "retrieve",
+            &s(&[
+                "--store",
+                store_dir.to_str().unwrap(),
+                "--field",
+                "T",
+                "--tolerance",
+                "1e-3",
+                "--output",
+                out.to_str().unwrap(),
+                "--refine",
+            ]),
+        )
+        .unwrap();
+        let back: Tensor<f32> = io::read_raw(&out, &[17, 18]).unwrap();
+        assert!(metrics::linf_error(t.data(), back.data()) <= 1e-3);
+        // --refine without a prior state errors cleanly
+        assert!(run(
+            "retrieve",
+            &s(&[
+                "--store",
+                store_dir.to_str().unwrap(),
+                "--field",
+                "T",
+                "--tolerance",
+                "1e-2",
+                "--output",
+                dir.join("fresh.f32").to_str().unwrap(),
+                "--refine",
+            ]),
+        )
+        .is_err());
+        // --planes without --progressive is rejected
+        assert!(run(
+            "refactor",
+            &s(&[
+                "--input",
+                raw.to_str().unwrap(),
+                "--shape",
+                "17x18",
+                "--store",
+                store_dir.to_str().unwrap(),
+                "--field",
+                "T2",
+                "--planes",
+                "8",
+            ]),
+        )
+        .is_err());
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -4,7 +4,9 @@
 //!   bounded-queue backpressure (the §6.2.4 scalability harness).
 //! * [`refactor`] — progressive data-refactoring store: multilevel
 //!   components written as separately-retrievable chunks, partial
-//!   reconstruction at any level (§1's refactoring use case, §6.2.2).
+//!   reconstruction at any level (§1's refactoring use case, §6.2.2) and,
+//!   via the bitplane layout ([`crate::progressive`]), error-bound-driven
+//!   retrieval at any L∞ tolerance with incremental refinement.
 //! * [`config`] — minimal TOML-subset configuration loader for the CLI.
 //! * [`registry`] — lightweight metrics counters/timers for the binary.
 //! * [`cli`] — the `mgardp` command-line interface.

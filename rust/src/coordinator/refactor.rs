@@ -1,28 +1,56 @@
 //! Progressive data-refactoring store (§1, §6.2.2).
 //!
 //! A refactored field is the multilevel decomposition written as
-//! *independently retrievable* components: the coarse representation plus
-//! one file per level's coefficient stream (LZ-compressed). A consumer
-//! reads only `coarse + levels ≤ l` to reconstruct `Q_l u` — the
-//! reduced-size, reduced-cost representation the iso-surface experiment
-//! analyzes — and can later fetch more components to refine it, up to exact
-//! (lossless) recovery of the original.
+//! *independently retrievable* components. The store supports two layouts
+//! per field, distinguished by the manifest magic:
+//!
+//! * **Level layout** (`MGRF`, and the magic-less PR-era files): the
+//!   coarse representation plus one LZ-compressed file per level's
+//!   coefficient stream. The smallest retrievable increment is a whole
+//!   level; `reconstruct` returns `Q_l u`.
+//! * **Bitplane layout** (`MGPR`, [`crate::progressive`]): every stream is
+//!   further split into sign/bitplane/residual components laid out in one
+//!   `components.bin`, and the manifest records per-component error
+//!   bounds. A consumer plans an error-bounded fetch for a requested L∞
+//!   tolerance τ ([`ProgressiveField::retrieve`]), refines incrementally,
+//!   and reaches bit-exact lossless recovery after the last component.
 
 use crate::decompose::{Decomposer, Decomposition, OptFlags};
 use crate::encode::varint::{write_u64, ByteReader};
 use crate::encode::{lossless_compress, lossless_decompress};
 use crate::error::{Error, Result};
 use crate::grid::Hierarchy;
-use crate::tensor::{Scalar, Tensor};
+use crate::progressive::{
+    self, plan_with_floor, ComponentId, FetchPlan, ProgressiveManifest, ProgressiveReader,
+};
+use crate::tensor::{numel, Scalar, Tensor};
 use std::fs;
+use std::io::{Read, Seek, SeekFrom};
 use std::path::{Path, PathBuf};
+
+/// Magic prefix of a versioned level-layout manifest (single definition
+/// shared with the cross-layout dispatch in [`crate::progressive`]).
+pub use crate::progressive::manifest::LEVEL_MAGIC as LEVEL_MANIFEST_MAGIC;
+/// Current level-layout manifest version.
+pub const REFACTOR_MANIFEST_VERSION: u8 = 1;
 
 /// On-disk progressive store for refactored fields.
 pub struct RefactorStore {
     root: PathBuf,
 }
 
-/// Per-field manifest: what's needed to interpret the components.
+/// Which layout a stored field uses.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FieldLayout {
+    /// Whole-level components (`reconstruct` / `bytes_up_to`).
+    Level,
+    /// Bitplane components with an error-bound manifest
+    /// ([`RefactorStore::progressive`]).
+    Progressive,
+}
+
+/// Per-field manifest of the level layout: what's needed to interpret the
+/// components.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Manifest {
     /// Original tensor shape.
@@ -38,26 +66,67 @@ pub struct Manifest {
 }
 
 impl Manifest {
-    fn to_bytes(&self) -> Vec<u8> {
+    /// Serialize with the versioned `MGRF` header (normative layout in
+    /// `docs/FORMAT.md`, pinned by `rust/tests/format_spec.rs`).
+    pub fn to_bytes(&self) -> Vec<u8> {
         let mut out = Vec::new();
-        out.push(self.dtype);
-        write_u64(&mut out, self.shape.len() as u64);
-        for &d in &self.shape {
-            write_u64(&mut out, d as u64);
-        }
-        write_u64(&mut out, self.start_level as u64);
-        write_u64(&mut out, self.max_level as u64);
-        write_u64(&mut out, self.component_bytes.len() as u64);
-        for &b in &self.component_bytes {
-            write_u64(&mut out, b);
-        }
+        out.extend_from_slice(LEVEL_MANIFEST_MAGIC);
+        out.push(REFACTOR_MANIFEST_VERSION);
+        self.write_body(&mut out);
         out
     }
 
-    fn from_bytes(bytes: &[u8]) -> Result<Manifest> {
+    fn write_body(&self, out: &mut Vec<u8>) {
+        out.push(self.dtype);
+        write_u64(out, self.shape.len() as u64);
+        for &d in &self.shape {
+            write_u64(out, d as u64);
+        }
+        write_u64(out, self.start_level as u64);
+        write_u64(out, self.max_level as u64);
+        write_u64(out, self.component_bytes.len() as u64);
+        for &b in &self.component_bytes {
+            write_u64(out, b);
+        }
+    }
+
+    /// Parse either the versioned (`MGRF`) or the magic-less PR-era
+    /// encoding; both go through the same bounds checks, so truncated or
+    /// foreign bytes are refused with a structured error.
+    pub fn from_bytes(bytes: &[u8]) -> Result<Manifest> {
+        let body = if bytes.len() >= 4 && &bytes[..4] == LEVEL_MANIFEST_MAGIC {
+            let mut r = ByteReader::new(&bytes[4..]);
+            let version = r.u8()?;
+            if version != REFACTOR_MANIFEST_VERSION {
+                return Err(Error::UnsupportedFormat(format!(
+                    "refactor manifest version {version} \
+                     (supported: {REFACTOR_MANIFEST_VERSION})"
+                )));
+            }
+            &bytes[5..]
+        } else if bytes.len() >= 4 && &bytes[..4] == progressive::manifest::PROGRESSIVE_MAGIC {
+            return Err(Error::UnsupportedFormat(
+                "field uses the progressive bitplane layout \
+                 (use RefactorStore::progressive / `mgardp retrieve`)"
+                    .into(),
+            ));
+        } else {
+            // magic-less PR-era manifest: parse the legacy body, but gate
+            // it behind the same validation so foreign bytes are refused
+            bytes
+        };
+        let m = Self::body_from_bytes(body)?;
+        m.validate()?;
+        Ok(m)
+    }
+
+    fn body_from_bytes(bytes: &[u8]) -> Result<Manifest> {
         let mut r = ByteReader::new(bytes);
         let dtype = r.u8()?;
         let ndim = r.usize()?;
+        if ndim == 0 || ndim > 8 {
+            return Err(Error::corrupt(format!("implausible rank {ndim}")));
+        }
         let mut shape = Vec::with_capacity(ndim);
         for _ in 0..ndim {
             shape.push(r.usize()?);
@@ -65,9 +134,18 @@ impl Manifest {
         let start_level = r.usize()?;
         let max_level = r.usize()?;
         let ncomp = r.usize()?;
+        if ncomp > 64 {
+            return Err(Error::corrupt(format!("implausible component count {ncomp}")));
+        }
         let mut component_bytes = Vec::with_capacity(ncomp);
         for _ in 0..ncomp {
             component_bytes.push(r.u64()?);
+        }
+        if r.remaining() != 0 {
+            return Err(Error::corrupt(format!(
+                "{} trailing bytes after the manifest",
+                r.remaining()
+            )));
         }
         Ok(Manifest {
             shape,
@@ -76,6 +154,52 @@ impl Manifest {
             max_level,
             component_bytes,
         })
+    }
+
+    /// Bounds checks shared by the versioned and the legacy parse: a
+    /// truncated or foreign file must be refused with a structured error,
+    /// never garbage-parsed into nonsense levels or sizes.
+    fn validate(&self) -> Result<()> {
+        if self.dtype != 1 && self.dtype != 2 {
+            return Err(Error::corrupt(format!("unknown dtype tag {}", self.dtype)));
+        }
+        let mut total = 1usize;
+        for &d in &self.shape {
+            if d < 2 {
+                return Err(Error::corrupt(format!("field extent {d} < 2")));
+            }
+            total = total
+                .checked_mul(d)
+                .filter(|&t| t <= crate::compressors::MAX_HEADER_NUMEL)
+                .ok_or_else(|| Error::corrupt("implausible field size"))?;
+        }
+        let hierarchy = Hierarchy::new(&self.shape, None)?;
+        if self.max_level != hierarchy.nlevels() || self.start_level > self.max_level {
+            return Err(Error::corrupt(format!(
+                "levels [{}, {}] inconsistent with shape {:?} (hierarchy depth {})",
+                self.start_level,
+                self.max_level,
+                self.shape,
+                hierarchy.nlevels()
+            )));
+        }
+        if self.component_bytes.len() != self.max_level - self.start_level + 1 {
+            return Err(Error::corrupt(format!(
+                "{} components for levels [{}, {}]",
+                self.component_bytes.len(),
+                self.start_level,
+                self.max_level
+            )));
+        }
+        let cap = 64 + 2 * (total as u64) * 8;
+        for (i, &b) in self.component_bytes.iter().enumerate() {
+            if b > cap {
+                return Err(Error::corrupt(format!(
+                    "component {i} declares implausible size {b}"
+                )));
+            }
+        }
+        Ok(())
     }
 }
 
@@ -101,6 +225,16 @@ impl RefactorStore {
 
     fn field_dir(&self, field: &str) -> PathBuf {
         self.root.join(field)
+    }
+
+    /// Which layout `field` was written with (reads the manifest magic).
+    pub fn layout(&self, field: &str) -> Result<FieldLayout> {
+        let bytes = fs::read(self.field_dir(field).join("manifest.bin"))?;
+        if bytes.len() >= 4 && &bytes[..4] == progressive::manifest::PROGRESSIVE_MAGIC {
+            Ok(FieldLayout::Progressive)
+        } else {
+            Ok(FieldLayout::Level)
+        }
     }
 
     /// Refactor `data` and write its components under `field`.
@@ -141,7 +275,53 @@ impl RefactorStore {
         Ok(manifest)
     }
 
-    /// Read a field's manifest.
+    /// Refactor `data` into the bitplane layout under `field`: every
+    /// stream becomes `planes + 2` independently retrievable components
+    /// (sign, magnitude bitplanes, lossless residual) in one
+    /// `components.bin`, described by a versioned progressive manifest.
+    /// `planes` defaults to the scalar type's mantissa width.
+    pub fn write_field_progressive<T: Scalar>(
+        &self,
+        field: &str,
+        data: &Tensor<T>,
+        planes: Option<usize>,
+        zstd_level: i32,
+    ) -> Result<ProgressiveManifest> {
+        let planes = planes.unwrap_or_else(progressive::default_planes::<T>);
+        let (manifest, components) = progressive::refactor_streams(data, planes, zstd_level)?;
+        let dir = self.field_dir(field);
+        fs::create_dir_all(&dir)?;
+        let mut blob = Vec::new();
+        for comps in &components {
+            for c in comps {
+                blob.extend_from_slice(c);
+            }
+        }
+        fs::write(dir.join("components.bin"), &blob)?;
+        fs::write(dir.join("manifest.bin"), manifest.to_bytes())?;
+        Ok(manifest)
+    }
+
+    /// Open a progressively refactored field for planning and retrieval.
+    pub fn progressive(&self, field: &str) -> Result<ProgressiveField> {
+        let dir = self.field_dir(field);
+        let bytes = fs::read(dir.join("manifest.bin"))?;
+        let manifest = ProgressiveManifest::from_bytes(&bytes)?;
+        let components = dir.join("components.bin");
+        let actual = fs::metadata(&components)?.len();
+        if actual != manifest.total_bytes() {
+            return Err(Error::corrupt(format!(
+                "components.bin has {actual} bytes; manifest says {}",
+                manifest.total_bytes()
+            )));
+        }
+        Ok(ProgressiveField {
+            components,
+            manifest,
+        })
+    }
+
+    /// Read a field's (level-layout) manifest.
     pub fn manifest(&self, field: &str) -> Result<Manifest> {
         let bytes = fs::read(self.field_dir(field).join("manifest.bin"))?;
         Manifest::from_bytes(&bytes)
@@ -166,7 +346,7 @@ impl RefactorStore {
         let coarse_shape = hierarchy.level_shape(m.start_level);
         let coarse_raw = lossless_decompress(
             &fs::read(dir.join("coarse.bin"))?,
-            crate::tensor::numel(&coarse_shape) * T::BYTES,
+            numel(&coarse_shape) * T::BYTES,
         )?;
         let coarse = Tensor::<T>::from_le_bytes(&coarse_shape, &coarse_raw)?;
         let mut coeffs = Vec::new();
@@ -222,6 +402,67 @@ impl RefactorStore {
     /// The store's root directory.
     pub fn root(&self) -> &Path {
         &self.root
+    }
+}
+
+/// One progressively refactored field: the parsed manifest plus the
+/// component blob it indexes. Components are fetched by byte range, so a
+/// remote serving path maps 1:1 onto ranged reads.
+pub struct ProgressiveField {
+    components: PathBuf,
+    manifest: ProgressiveManifest,
+}
+
+impl ProgressiveField {
+    /// The field's manifest.
+    pub fn manifest(&self) -> &ProgressiveManifest {
+        &self.manifest
+    }
+
+    /// Plan the minimal fetch for an absolute L∞ tolerance `tau`,
+    /// optionally never descending below `floor` (components per stream
+    /// already held by a reader).
+    pub fn plan(&self, tau: f64, floor: Option<&[usize]>) -> Result<FetchPlan> {
+        plan_with_floor(&self.manifest, tau, floor)
+    }
+
+    /// Read one component's stored bytes (a ranged read of
+    /// `components.bin`).
+    pub fn fetch_component(&self, id: ComponentId) -> Result<Vec<u8>> {
+        let (offset, len) = self.manifest.component_range(id.stream, id.comp)?;
+        let mut f = fs::File::open(&self.components)?;
+        f.seek(SeekFrom::Start(offset))?;
+        let mut buf = vec![0u8; len as usize];
+        f.read_exact(&mut buf)?;
+        Ok(buf)
+    }
+
+    /// Start an empty incremental reader for this field.
+    pub fn reader<T: Scalar>(&self) -> Result<ProgressiveReader<T>> {
+        ProgressiveReader::new(self.manifest.clone())
+    }
+
+    /// Fetch everything `plan` requires that `reader` does not already
+    /// hold, applying it in place. Returns the bytes transferred.
+    pub fn refine<T: Scalar>(
+        &self,
+        reader: &mut ProgressiveReader<T>,
+        plan: &FetchPlan,
+    ) -> Result<u64> {
+        let before = reader.bytes_fetched();
+        for id in plan.components_beyond(&reader.fetched()) {
+            reader.apply(id, &self.fetch_component(id)?)?;
+        }
+        Ok(reader.bytes_fetched() - before)
+    }
+
+    /// One-shot error-bounded retrieval: plan for `tau`, fetch the planned
+    /// components, reconstruct. Returns the field and the executed plan.
+    pub fn retrieve<T: Scalar>(&self, tau: f64) -> Result<(Tensor<T>, FetchPlan)> {
+        let plan = self.plan(tau, None)?;
+        let mut reader = self.reader::<T>()?;
+        self.refine(&mut reader, &plan)?;
+        Ok((reader.reconstruct()?, plan))
     }
 }
 
@@ -281,15 +522,64 @@ mod tests {
     }
 
     #[test]
-    fn manifest_round_trip() {
+    fn manifest_round_trip_is_versioned() {
         let m = Manifest {
-            shape: vec![10, 20, 30],
+            shape: vec![17, 33],
             dtype: 1,
             start_level: 0,
             max_level: 4,
             component_bytes: vec![100, 200, 300, 400, 500],
         };
-        assert_eq!(Manifest::from_bytes(&m.to_bytes()).unwrap(), m);
+        let bytes = m.to_bytes();
+        assert_eq!(&bytes[..4], LEVEL_MANIFEST_MAGIC);
+        assert_eq!(bytes[4], REFACTOR_MANIFEST_VERSION);
+        assert_eq!(Manifest::from_bytes(&bytes).unwrap(), m);
+        // future versions are refused, not misparsed
+        let mut bumped = bytes.clone();
+        bumped[4] = 9;
+        assert!(matches!(
+            Manifest::from_bytes(&bumped),
+            Err(Error::UnsupportedFormat(_))
+        ));
+    }
+
+    #[test]
+    fn legacy_magicless_manifest_still_readable() {
+        let m = Manifest {
+            shape: vec![17, 33],
+            dtype: 1,
+            start_level: 0,
+            max_level: 4,
+            component_bytes: vec![100, 200, 300, 400, 500],
+        };
+        // the PR-era encoding: the body alone, no magic/version
+        let mut legacy = Vec::new();
+        m.write_body(&mut legacy);
+        assert_eq!(Manifest::from_bytes(&legacy).unwrap(), m);
+    }
+
+    #[test]
+    fn truncated_and_foreign_manifests_refused() {
+        let m = Manifest {
+            shape: vec![9, 9],
+            dtype: 2,
+            start_level: 1,
+            max_level: 2,
+            component_bytes: vec![10, 20],
+        };
+        let bytes = m.to_bytes();
+        for cut in 0..bytes.len() {
+            assert!(Manifest::from_bytes(&bytes[..cut]).is_err(), "cut {cut}");
+        }
+        // foreign bytes that happen to parse as a "manifest" fail the
+        // bounds checks instead of yielding garbage
+        assert!(Manifest::from_bytes(b"\x01\x02\x00\x00").is_err());
+        assert!(Manifest::from_bytes(&[0xFF; 64]).is_err());
+        // levels inconsistent with the shape's hierarchy depth
+        let mut bad = m.clone();
+        bad.max_level = 40;
+        bad.component_bytes = vec![1; 40];
+        assert!(Manifest::from_bytes(&bad.to_bytes()).is_err());
     }
 
     #[test]
@@ -298,7 +588,10 @@ mod tests {
         let t = crate::data::synth::smooth_test_field(&[9, 9]);
         store.write_field("beta", &t, 1).unwrap();
         store.write_field("alpha", &t, 1).unwrap();
-        assert_eq!(store.fields().unwrap(), vec!["alpha", "beta"]);
+        store.write_field_progressive("gamma", &t, None, 1).unwrap();
+        assert_eq!(store.fields().unwrap(), vec!["alpha", "beta", "gamma"]);
+        assert_eq!(store.layout("alpha").unwrap(), FieldLayout::Level);
+        assert_eq!(store.layout("gamma").unwrap(), FieldLayout::Progressive);
         fs::remove_dir_all(store.root()).ok();
     }
 
@@ -308,6 +601,62 @@ mod tests {
         let t = crate::data::synth::smooth_test_field(&[9, 9]);
         let m = store.write_field("f", &t, 1).unwrap();
         assert!(store.reconstruct::<f32>("f", m.max_level + 1).is_err());
+        fs::remove_dir_all(store.root()).ok();
+    }
+
+    #[test]
+    fn progressive_field_retrieves_within_tau() {
+        let store = temp_store("prog");
+        let t = crate::data::synth::smooth_test_field(&[17, 18]);
+        store.write_field_progressive("f", &t, None, 3).unwrap();
+        let field = store.progressive("f").unwrap();
+        let total = field.manifest().total_bytes();
+        let (back, plan): (Tensor<f32>, _) = field.retrieve(0.05).unwrap();
+        assert!(plan.bytes < total, "a loose tau must drop bitplanes");
+        assert!(plan.certified_bound <= 0.05);
+        assert!(linf_error(t.data(), back.data()) <= 0.05);
+        // the level APIs refuse the bitplane layout with a structured error
+        assert!(matches!(
+            store.manifest("f"),
+            Err(Error::UnsupportedFormat(_))
+        ));
+        assert!(store.reconstruct::<f32>("f", 0).is_err());
+        fs::remove_dir_all(store.root()).ok();
+    }
+
+    #[test]
+    fn progressive_refine_fetches_only_the_delta() {
+        let store = temp_store("refine");
+        let t = crate::data::synth::smooth_test_field(&[17, 17]);
+        store.write_field_progressive("f", &t, None, 3).unwrap();
+        let field = store.progressive("f").unwrap();
+        let mut reader = field.reader::<f32>().unwrap();
+        let loose = field.plan(0.1, None).unwrap();
+        let first = field.refine(&mut reader, &loose).unwrap();
+        assert_eq!(first, loose.bytes);
+        let tight = field.plan(1e-3, Some(&reader.fetched())).unwrap();
+        let delta = field.refine(&mut reader, &tight).unwrap();
+        assert_eq!(first + delta, tight.bytes);
+        assert!(delta > 0);
+        let back = reader.reconstruct().unwrap();
+        assert!(linf_error(t.data(), back.data()) <= 1e-3);
+        // refining all the way down reaches lossless
+        let all = field.plan(f64::MIN_POSITIVE, Some(&reader.fetched())).unwrap();
+        field.refine(&mut reader, &all).unwrap();
+        assert!(reader.is_lossless());
+        fs::remove_dir_all(store.root()).ok();
+    }
+
+    #[test]
+    fn progressive_component_blob_validated_on_open() {
+        let store = temp_store("blobcheck");
+        let t = crate::data::synth::smooth_test_field(&[9, 9]);
+        store.write_field_progressive("f", &t, None, 1).unwrap();
+        let path = store.root().join("f").join("components.bin");
+        let mut blob = fs::read(&path).unwrap();
+        blob.truncate(blob.len() - 1);
+        fs::write(&path, &blob).unwrap();
+        assert!(store.progressive("f").is_err());
         fs::remove_dir_all(store.root()).ok();
     }
 }

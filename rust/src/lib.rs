@@ -32,6 +32,7 @@ pub mod encode;
 pub mod error;
 pub mod grid;
 pub mod metrics;
+pub mod progressive;
 pub mod quant;
 pub mod runtime;
 pub mod stream;

@@ -1,0 +1,454 @@
+//! Sign + magnitude bitplane coding of one coefficient stream.
+//!
+//! Each stream (the coarse representation or one level's multilevel
+//! coefficients) is turned into `planes + 2` independently retrievable
+//! *components* built with [`crate::encode::bitstream`]:
+//!
+//! * component `0` — the **sign plane**: one bit per coefficient
+//!   (IEEE sign bit, so `-0.0` survives the lossless path),
+//! * components `1..=planes` — **magnitude bitplanes**, most significant
+//!   first: bit `planes-1-b` of `m_i = ⌊|v_i| · 2^(planes-e)⌋`, where `e`
+//!   is the stream exponent (the smallest integer with `max|v| < 2^e`),
+//! * component `planes + 1` — the **lossless residual**: the XOR of each
+//!   original value's little-endian bits with the bits of its
+//!   `planes`-plane reconstruction (all-zero whenever the fixed-point
+//!   image is already exact, so it compresses to almost nothing).
+//!
+//! Truncating after `k ≥ 1` magnitude planes reconstructs
+//! `±⌊|v|/2^(e-k)⌋·2^(e-k)`, so every coefficient is off by **less than
+//! `2^(e-k)`** — the per-(level, bitplane) error contribution the manifest
+//! records and the fetch planner sums. With zero components the stream
+//! reads as all zeros, off by at most `max|v|`. All arithmetic stays exact:
+//! `planes` is capped at the mantissa width of the scalar type, magnitudes
+//! are extracted by bit manipulation (never float multiply + floor), and
+//! partial reconstructions are dyadic rationals the scalar type represents
+//! exactly, so applying every component is bit-exact lossless.
+
+use crate::encode::bitstream::{BitReader, BitWriter};
+use crate::error::{Error, Result};
+use crate::tensor::Scalar;
+
+/// Most planes any stream may use (the f64 mantissa width; f32 streams are
+/// further capped at 24). Keeping magnitudes within the mantissa makes
+/// every encode/decode step exact.
+pub const MAX_PLANES: usize = 53;
+
+/// Bitplane-coded form of one coefficient stream (raw, before the lossless
+/// stage; the store compresses each component independently).
+#[derive(Clone, Debug, PartialEq)]
+pub struct BitplaneStream {
+    /// Number of coefficients.
+    pub n: usize,
+    /// `max_i |v_i|` (0.0 for an all-zero stream).
+    pub max_abs: f64,
+    /// Stream exponent `e`: smallest integer with `max_abs < 2^e`
+    /// (0 when `max_abs == 0`).
+    pub exponent: i32,
+    /// Magnitude planes coded, MSB first.
+    pub planes: usize,
+    /// Component 0: packed sign bits (`⌈n/8⌉` bytes).
+    pub sign: Vec<u8>,
+    /// Components `1..=planes`: packed magnitude bitplanes (`⌈n/8⌉` each).
+    pub plane_bits: Vec<Vec<u8>>,
+    /// Component `planes+1`: per-value little-endian bit XOR residual
+    /// (`n · T::BYTES` bytes).
+    pub residual: Vec<u8>,
+}
+
+/// `(sign, mantissa, exp2)` with `|v| = mantissa · 2^exp2`, exact.
+fn split_f64(v: f64) -> (bool, u64, i32) {
+    let bits = v.to_bits();
+    let neg = bits >> 63 == 1;
+    let biased = ((bits >> 52) & 0x7FF) as i32;
+    let frac = bits & ((1u64 << 52) - 1);
+    if biased == 0 {
+        (neg, frac, -1074) // subnormal (or zero)
+    } else {
+        (neg, frac | (1 << 52), biased - 1075)
+    }
+}
+
+/// Smallest `e` with `|v| < 2^e` — exact, no `log2` rounding risk.
+fn exponent_above(max_abs: f64) -> i32 {
+    debug_assert!(max_abs > 0.0 && max_abs.is_finite());
+    let (_, mant, exp2) = split_f64(max_abs);
+    // bit length of the mantissa plus its scale: mant < 2^bits
+    let bits = 64 - mant.leading_zeros() as i32;
+    exp2 + bits
+}
+
+/// `m = ⌊|v| · 2^(planes - e)⌋`, exact via bit shifts. `m < 2^planes`.
+#[inline]
+fn magnitude(v: f64, exponent: i32, planes: usize) -> u64 {
+    let (_, mant, exp2) = split_f64(v);
+    if mant == 0 {
+        return 0;
+    }
+    let shift = exp2 + planes as i32 - exponent;
+    if shift >= 0 {
+        // m = mant << shift < 2^planes ≤ 2^53 is guaranteed by |v| < 2^e,
+        // so the shift cannot overflow u64
+        debug_assert!(shift as u32 <= mant.leading_zeros());
+        mant << shift
+    } else if shift <= -64 {
+        0
+    } else {
+        mant >> (-shift)
+    }
+}
+
+/// Reconstruction from the first `k` planes: `±(m >> (planes-k)) · 2^(e-k)`
+/// as an exact value of `T`. `k == 0` yields signed zero.
+#[inline]
+pub(crate) fn reconstruct<T: Scalar>(
+    neg: bool,
+    mag: u64,
+    exponent: i32,
+    k: usize,
+) -> T {
+    let v = if k == 0 || mag == 0 {
+        0.0
+    } else {
+        // mag < 2^k ≤ 2^53 is exact as f64; the power of two keeps it exact
+        (mag as f64) * 2f64.powi(exponent - k as i32)
+    };
+    T::from_f64(if neg { -v } else { v })
+}
+
+/// Per-coefficient error bound after fetching the sign plane plus `k`
+/// magnitude planes (`k == 0` also covers "nothing fetched").
+pub fn plane_error_bound(max_abs: f64, exponent: i32, k: usize) -> f64 {
+    if max_abs == 0.0 {
+        return 0.0;
+    }
+    if k == 0 {
+        max_abs
+    } else {
+        2f64.powi(exponent - k as i32)
+    }
+}
+
+/// Encode `values` into `planes` magnitude bitplanes plus sign and
+/// residual components. Errors on non-finite values, `planes` outside
+/// `1..=min(MAX_PLANES, T::MANT_BITS)`, or a stream whose magnitudes fall
+/// outside the exactly-representable dyadic range of `T`.
+pub fn encode<T: Scalar>(values: &[T], planes: usize) -> Result<BitplaneStream> {
+    let cap = MAX_PLANES.min(T::MANT_BITS as usize);
+    if planes == 0 || planes > cap {
+        return Err(Error::invalid(format!(
+            "bitplane count {planes} outside 1..={cap} for this dtype"
+        )));
+    }
+    let mut max_abs = 0.0f64;
+    for &v in values {
+        let v = v.to_f64();
+        if !v.is_finite() {
+            return Err(Error::invalid(
+                "bitplane refactoring requires finite coefficients",
+            ));
+        }
+        let a = v.abs();
+        if a > max_abs {
+            max_abs = a;
+        }
+    }
+    let exponent = if max_abs == 0.0 { 0 } else { exponent_above(max_abs) };
+    if max_abs > 0.0 && exponent - (planes as i32) < T::MIN_POW {
+        return Err(Error::invalid(format!(
+            "stream magnitudes too small for exact {planes}-plane coding \
+             (exponent {exponent})"
+        )));
+    }
+    let mut sign_w = BitWriter::new();
+    let mut plane_w: Vec<BitWriter> = (0..planes).map(|_| BitWriter::new()).collect();
+    let mut residual = Vec::with_capacity(values.len() * T::BYTES);
+    let mut orig = Vec::with_capacity(T::BYTES);
+    let mut approx = Vec::with_capacity(T::BYTES);
+    for &v in values {
+        let v64 = v.to_f64();
+        let (neg, _, _) = split_f64(v64);
+        sign_w.write_bit(neg);
+        let m = magnitude(v64, exponent, planes);
+        for (b, w) in plane_w.iter_mut().enumerate() {
+            w.write_bit((m >> (planes - 1 - b)) & 1 == 1);
+        }
+        // residual: original bits XOR full-precision reconstruction bits
+        let full: T = reconstruct(neg, m, exponent, planes);
+        orig.clear();
+        approx.clear();
+        v.write_le(&mut orig);
+        full.write_le(&mut approx);
+        for (o, a) in orig.iter().zip(&approx) {
+            residual.push(o ^ a);
+        }
+    }
+    Ok(BitplaneStream {
+        n: values.len(),
+        max_abs,
+        exponent,
+        planes,
+        sign: sign_w.finish(),
+        plane_bits: plane_w.into_iter().map(BitWriter::finish).collect(),
+        residual,
+    })
+}
+
+/// Incremental decoder for one stream: components are applied strictly in
+/// order (sign, plane 0, plane 1, …, residual) and the partially
+/// materialized magnitudes refine **in place** (`m ← m·2 + bit`).
+#[derive(Clone, Debug)]
+pub struct StreamDecoder {
+    n: usize,
+    exponent: i32,
+    planes: usize,
+    signs: Option<Vec<u8>>,
+    mags: Vec<u64>,
+    planes_applied: usize,
+    residual: Option<Vec<u8>>,
+}
+
+impl StreamDecoder {
+    /// Empty decoder for a stream of `n` coefficients at `exponent` with
+    /// `planes` magnitude planes.
+    pub fn new(n: usize, exponent: i32, planes: usize) -> StreamDecoder {
+        StreamDecoder {
+            n,
+            exponent,
+            planes,
+            signs: None,
+            mags: vec![0; n],
+            planes_applied: 0,
+            residual: None,
+        }
+    }
+
+    /// Components applied so far (0 ..= planes + 2).
+    pub fn components_applied(&self) -> usize {
+        if self.residual.is_some() {
+            self.planes + 2
+        } else if self.signs.is_some() {
+            1 + self.planes_applied
+        } else {
+            0
+        }
+    }
+
+    /// Whether every component (including the residual) has been applied.
+    pub fn is_lossless(&self) -> bool {
+        self.residual.is_some()
+    }
+
+    fn expect_bits(&self, bytes: &[u8], what: &str) -> Result<()> {
+        if bytes.len() != (self.n + 7) / 8 {
+            return Err(Error::corrupt(format!(
+                "{what} has {} bytes; stream of {} coefficients needs {}",
+                bytes.len(),
+                self.n,
+                (self.n + 7) / 8
+            )));
+        }
+        Ok(())
+    }
+
+    /// Apply component `idx` (0 = sign, `1..=planes` = magnitude plane,
+    /// `planes+1` = residual). Components must arrive in order.
+    pub fn apply(&mut self, idx: usize, raw: &[u8]) -> Result<()> {
+        let expected = self.components_applied();
+        if idx != expected {
+            return Err(Error::invalid(format!(
+                "component {idx} applied out of order; expected {expected}"
+            )));
+        }
+        if idx == 0 {
+            self.expect_bits(raw, "sign plane")?;
+            self.signs = Some(raw.to_vec());
+        } else if idx <= self.planes {
+            self.expect_bits(raw, "magnitude plane")?;
+            let mut r = BitReader::new(raw);
+            for m in self.mags.iter_mut() {
+                let bit = r.read_bit().ok_or_else(|| {
+                    Error::corrupt("magnitude plane shorter than the stream")
+                })?;
+                *m = (*m << 1) | bit as u64;
+            }
+            self.planes_applied += 1;
+        } else {
+            self.residual = Some(raw.to_vec());
+        }
+        Ok(())
+    }
+
+    #[inline]
+    fn sign_at(&self, i: usize) -> bool {
+        match &self.signs {
+            // MSB-first packing, matching BitWriter
+            Some(s) => (s[i / 8] >> (7 - (i % 8))) & 1 == 1,
+            None => false,
+        }
+    }
+
+    /// Materialize the stream at its current precision. With the residual
+    /// applied the output is bit-exact; validates the residual length.
+    pub fn materialize<T: Scalar>(&self) -> Result<Vec<T>> {
+        if let Some(res) = &self.residual {
+            if res.len() != self.n * T::BYTES {
+                return Err(Error::corrupt(format!(
+                    "residual has {} bytes; stream needs {}",
+                    res.len(),
+                    self.n * T::BYTES
+                )));
+            }
+        }
+        let mut out = Vec::with_capacity(self.n);
+        let mut buf = Vec::with_capacity(T::BYTES);
+        for i in 0..self.n {
+            let v: T = reconstruct(
+                self.sign_at(i),
+                self.mags[i],
+                self.exponent,
+                self.planes_applied,
+            );
+            match &self.residual {
+                None => out.push(v),
+                Some(res) => {
+                    buf.clear();
+                    v.write_le(&mut buf);
+                    let mut exact = [0u8; 8];
+                    for (b, x) in buf.iter().enumerate() {
+                        exact[b] = x ^ res[i * T::BYTES + b];
+                    }
+                    out.push(T::read_le(&exact));
+                }
+            }
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::rng::Rng;
+
+    fn round_trip_exact<T: Scalar>(values: &[T], planes: usize) {
+        let s = encode(values, planes).unwrap();
+        let mut d = StreamDecoder::new(s.n, s.exponent, s.planes);
+        d.apply(0, &s.sign).unwrap();
+        for (b, p) in s.plane_bits.iter().enumerate() {
+            d.apply(1 + b, p).unwrap();
+        }
+        d.apply(planes + 1, &s.residual).unwrap();
+        let back: Vec<T> = d.materialize().unwrap();
+        for (a, b) in values.iter().zip(&back) {
+            let mut x = Vec::new();
+            let mut y = Vec::new();
+            a.write_le(&mut x);
+            b.write_le(&mut y);
+            assert_eq!(x, y, "{a} vs {b} not bit-exact");
+        }
+    }
+
+    #[test]
+    fn lossless_round_trip_f32_and_f64() {
+        let mut rng = Rng::new(0xB17);
+        let f32s: Vec<f32> = (0..500)
+            .map(|_| (rng.uniform_in(-4.0, 4.0) * 1e3) as f32 / 1e3)
+            .collect();
+        round_trip_exact(&f32s, 24);
+        round_trip_exact(&f32s, 8);
+        let f64s: Vec<f64> = (0..500).map(|_| rng.uniform_in(-1e6, 1e6)).collect();
+        round_trip_exact(&f64s, 52);
+        round_trip_exact(&f64s, 3);
+    }
+
+    #[test]
+    fn lossless_round_trip_awkward_values() {
+        round_trip_exact(
+            &[0.0f32, -0.0, 1.0, -1.0, f32::MIN_POSITIVE, 1.5e-39, 3.4e38, -7.25],
+            24,
+        );
+        round_trip_exact(&[0.0f64, -0.0, 5e-324, 1e308, -1e-300], 53);
+    }
+
+    #[test]
+    fn truncated_planes_respect_error_bound() {
+        let mut rng = Rng::new(0x5EED);
+        let values: Vec<f64> = (0..2000).map(|_| rng.uniform_in(-3.0, 3.0)).collect();
+        let planes = 20;
+        let s = encode(&values, planes).unwrap();
+        let mut d = StreamDecoder::new(s.n, s.exponent, s.planes);
+        d.apply(0, &s.sign).unwrap();
+        // k = 0: everything reads as zero, bounded by max_abs
+        let zeros: Vec<f64> = d.materialize().unwrap();
+        for (v, z) in values.iter().zip(&zeros) {
+            assert_eq!(*z, 0.0);
+            assert!(v.abs() <= s.max_abs);
+        }
+        for k in 1..=planes {
+            d.apply(k, &s.plane_bits[k - 1]).unwrap();
+            let approx: Vec<f64> = d.materialize().unwrap();
+            let bound = plane_error_bound(s.max_abs, s.exponent, k);
+            for (v, a) in values.iter().zip(&approx) {
+                assert!(
+                    (v - a).abs() < bound * (1.0 + 1e-12),
+                    "k={k}: |{v} - {a}| >= {bound}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn error_bound_halves_per_plane() {
+        let b1 = plane_error_bound(3.0, 2, 1);
+        let b2 = plane_error_bound(3.0, 2, 2);
+        assert_eq!(b1, 2.0);
+        assert_eq!(b2, 1.0);
+        assert_eq!(plane_error_bound(3.0, 2, 0), 3.0);
+        assert_eq!(plane_error_bound(0.0, 0, 5), 0.0);
+    }
+
+    #[test]
+    fn exponent_is_tight() {
+        assert_eq!(exponent_above(1.0), 1); // 1.0 < 2^1
+        assert_eq!(exponent_above(0.5), 0);
+        assert_eq!(exponent_above(1.5), 1);
+        assert_eq!(exponent_above(2.0), 2);
+        assert_eq!(exponent_above(0.75), 0);
+    }
+
+    #[test]
+    fn out_of_order_components_rejected() {
+        let s = encode(&[1.0f32, -2.0], 8).unwrap();
+        let mut d = StreamDecoder::new(s.n, s.exponent, s.planes);
+        assert!(d.apply(1, &s.plane_bits[0]).is_err());
+        d.apply(0, &s.sign).unwrap();
+        assert!(d.apply(2, &s.plane_bits[1]).is_err());
+        assert!(d.apply(0, &s.sign).is_err());
+    }
+
+    #[test]
+    fn wrong_component_sizes_rejected() {
+        let s = encode(&[1.0f32; 100], 8).unwrap();
+        let mut d = StreamDecoder::new(s.n, s.exponent, s.planes);
+        assert!(d.apply(0, &s.sign[..s.sign.len() - 1]).is_err());
+        d.apply(0, &s.sign).unwrap();
+        assert!(d.apply(1, &[]).is_err());
+    }
+
+    #[test]
+    fn invalid_plane_counts_rejected() {
+        assert!(encode(&[1.0f32], 0).is_err());
+        assert!(encode(&[1.0f32], 25).is_err()); // > f32 mantissa width
+        assert!(encode(&[1.0f64], 54).is_err());
+        assert!(encode(&[f32::NAN], 8).is_err());
+        assert!(encode(&[f64::INFINITY], 8).is_err());
+    }
+
+    #[test]
+    fn all_zero_stream_is_trivial() {
+        let s = encode(&[0.0f32; 64], 24).unwrap();
+        assert_eq!(s.max_abs, 0.0);
+        assert!(s.plane_bits.iter().all(|p| p.iter().all(|&b| b == 0)));
+        assert!(s.residual.iter().all(|&b| b == 0));
+    }
+}

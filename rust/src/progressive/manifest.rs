@@ -1,0 +1,427 @@
+//! The versioned progressive-refactor manifest.
+//!
+//! One manifest describes one bitplane-refactored field: the hierarchy it
+//! was decomposed on, how many magnitude planes each stream carries, the
+//! stored size of every component, and — the planner's contract — the
+//! **per-coefficient error bound after each component**. Everything a
+//! remote consumer needs to plan an error-bounded fetch lives here; the
+//! component payloads themselves are opaque bytes.
+//!
+//! The byte layout is normative in `docs/FORMAT.md` (§"Refactor store
+//! manifests") and pinned by `rust/tests/format_spec.rs`; the version
+//! constant below is covered by the `scripts/check_docs.py` drift gate.
+
+use crate::encode::varint::{write_f64, write_i64, write_u64, ByteReader};
+use crate::error::{Error, Result};
+use crate::grid::Hierarchy;
+use crate::tensor::numel;
+
+/// Magic prefix of a progressive (bitplane-layout) manifest.
+pub const PROGRESSIVE_MAGIC: &[u8; 4] = b"MGPR";
+/// Magic prefix of a versioned level-layout manifest (see
+/// [`crate::coordinator::refactor`]).
+pub const LEVEL_MAGIC: &[u8; 4] = b"MGRF";
+/// Current progressive manifest version.
+pub const PROGRESSIVE_MANIFEST_VERSION: u8 = 1;
+
+/// Largest plausible field (shared with the container header bound).
+const MAX_NUMEL: usize = crate::compressors::MAX_HEADER_NUMEL;
+
+/// Per-stream metadata: stream `0` is the coarse representation at
+/// `start_level`, stream `s >= 1` the level-`start_level + s` coefficients.
+#[derive(Clone, Debug, PartialEq)]
+pub struct StreamMeta {
+    /// Number of coefficients in the stream.
+    pub n: usize,
+    /// `max |v|` over the stream.
+    pub max_abs: f64,
+    /// Stream exponent `e` (smallest integer with `max_abs < 2^e`).
+    pub exponent: i32,
+    /// Stored (lossless-compressed) byte length of each component:
+    /// sign, `planes` magnitude planes (MSB first), residual —
+    /// `planes + 2` entries.
+    pub comp_lens: Vec<u64>,
+    /// Per-coefficient error bound after fetching the first `c` components,
+    /// for `c in 0 ..= planes + 2` (`planes + 3` entries): non-increasing,
+    /// starts at `max_abs`, ends at exactly `0.0` (the residual is
+    /// lossless).
+    pub err_after: Vec<f64>,
+}
+
+impl StreamMeta {
+    /// Total stored bytes of the stream.
+    pub fn total_bytes(&self) -> u64 {
+        self.comp_lens.iter().sum()
+    }
+}
+
+/// Manifest of one progressively refactored field.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ProgressiveManifest {
+    /// Original field shape.
+    pub shape: Vec<usize>,
+    /// Scalar dtype tag (1 = f32, 2 = f64).
+    pub dtype: u8,
+    /// Decomposition start level `l̃`.
+    pub start_level: usize,
+    /// Finest level `L` (always the hierarchy's full depth).
+    pub max_level: usize,
+    /// Magnitude bitplanes per stream.
+    pub planes: usize,
+    /// The L∞ amplification constant certified bounds are computed with.
+    pub c_linf: f64,
+    /// One entry per stream, coarsest first.
+    pub streams: Vec<StreamMeta>,
+}
+
+impl ProgressiveManifest {
+    /// Components per stream (sign + planes + residual).
+    pub fn comps_per_stream(&self) -> usize {
+        self.planes + 2
+    }
+
+    /// Total stored bytes of all components.
+    pub fn total_bytes(&self) -> u64 {
+        self.streams.iter().map(StreamMeta::total_bytes).sum()
+    }
+
+    /// Byte range `(offset, len)` of component `comp` of stream `stream`
+    /// inside `components.bin` (stream-major, components in order).
+    pub fn component_range(&self, stream: usize, comp: usize) -> Result<(u64, u64)> {
+        if stream >= self.streams.len() || comp >= self.comps_per_stream() {
+            return Err(Error::invalid(format!(
+                "component ({stream}, {comp}) out of range"
+            )));
+        }
+        let mut off = 0u64;
+        for s in &self.streams[..stream] {
+            off += s.total_bytes();
+        }
+        for &l in &self.streams[stream].comp_lens[..comp] {
+            off += l;
+        }
+        Ok((off, self.streams[stream].comp_lens[comp]))
+    }
+
+    /// Raw (pre-compression) byte length of component `comp`.
+    pub fn raw_len(&self, stream: usize, comp: usize) -> usize {
+        let n = self.streams[stream].n;
+        if comp == self.planes + 1 {
+            n * if self.dtype == 2 { 8 } else { 4 }
+        } else {
+            (n + 7) / 8
+        }
+    }
+
+    /// Serialize (see `docs/FORMAT.md` for the normative layout).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend_from_slice(PROGRESSIVE_MAGIC);
+        out.push(PROGRESSIVE_MANIFEST_VERSION);
+        out.push(self.dtype);
+        write_u64(&mut out, self.shape.len() as u64);
+        for &d in &self.shape {
+            write_u64(&mut out, d as u64);
+        }
+        write_u64(&mut out, self.start_level as u64);
+        write_u64(&mut out, self.max_level as u64);
+        write_u64(&mut out, self.planes as u64);
+        write_f64(&mut out, self.c_linf);
+        write_u64(&mut out, self.streams.len() as u64);
+        for s in &self.streams {
+            write_u64(&mut out, s.n as u64);
+            write_f64(&mut out, s.max_abs);
+            write_i64(&mut out, s.exponent as i64);
+            for &l in &s.comp_lens {
+                write_u64(&mut out, l);
+            }
+            for &e in &s.err_after {
+                write_f64(&mut out, e);
+            }
+        }
+        out
+    }
+
+    /// Parse and fully validate a manifest. A truncated, corrupted or
+    /// foreign byte stream is refused with a structured error — the
+    /// hierarchy implied by `shape` must exist and every recorded stream
+    /// length, component size and error schedule must be plausible.
+    pub fn from_bytes(bytes: &[u8]) -> Result<ProgressiveManifest> {
+        if bytes.len() < 5 || &bytes[..4] != PROGRESSIVE_MAGIC {
+            if bytes.len() >= 4 && &bytes[..4] == LEVEL_MAGIC {
+                return Err(Error::UnsupportedFormat(
+                    "level-layout refactor manifest (use RefactorStore::manifest)".into(),
+                ));
+            }
+            return Err(Error::UnsupportedFormat(
+                "not a progressive refactor manifest (bad magic)".into(),
+            ));
+        }
+        let mut r = ByteReader::new(&bytes[4..]);
+        let version = r.u8()?;
+        if version != PROGRESSIVE_MANIFEST_VERSION {
+            return Err(Error::UnsupportedFormat(format!(
+                "progressive manifest version {version} (supported: {PROGRESSIVE_MANIFEST_VERSION})"
+            )));
+        }
+        let dtype = r.u8()?;
+        if dtype != 1 && dtype != 2 {
+            return Err(Error::corrupt(format!("unknown dtype tag {dtype}")));
+        }
+        let ndim = r.usize()?;
+        if ndim == 0 || ndim > 8 {
+            return Err(Error::corrupt(format!("implausible rank {ndim}")));
+        }
+        let mut shape = Vec::with_capacity(ndim);
+        let mut total = 1usize;
+        for _ in 0..ndim {
+            let d = r.usize()?;
+            if d < 2 {
+                return Err(Error::corrupt(format!("field extent {d} < 2")));
+            }
+            total = total
+                .checked_mul(d)
+                .filter(|&t| t <= MAX_NUMEL)
+                .ok_or_else(|| Error::corrupt("implausible field size"))?;
+            shape.push(d);
+        }
+        let start_level = r.usize()?;
+        let max_level = r.usize()?;
+        let hierarchy = Hierarchy::new(&shape, None)?;
+        if max_level != hierarchy.nlevels() || start_level > max_level {
+            return Err(Error::corrupt(format!(
+                "levels [{start_level}, {max_level}] inconsistent with shape {shape:?} \
+                 (hierarchy depth {})",
+                hierarchy.nlevels()
+            )));
+        }
+        let planes = r.usize()?;
+        let plane_cap = if dtype == 1 { 24 } else { 53 };
+        if planes == 0 || planes > plane_cap {
+            return Err(Error::corrupt(format!(
+                "plane count {planes} outside 1..={plane_cap}"
+            )));
+        }
+        let c_linf = r.f64()?;
+        if !c_linf.is_finite() || c_linf <= 0.0 {
+            return Err(Error::corrupt("non-positive amplification constant"));
+        }
+        let nstreams = r.usize()?;
+        if nstreams != max_level - start_level + 1 {
+            return Err(Error::corrupt(format!(
+                "{nstreams} streams for levels [{start_level}, {max_level}]"
+            )));
+        }
+        let tbytes = if dtype == 2 { 8usize } else { 4 };
+        let mut streams = Vec::with_capacity(nstreams);
+        for s in 0..nstreams {
+            let n = r.usize()?;
+            let expected = if s == 0 {
+                numel(&hierarchy.level_shape(start_level))
+            } else {
+                hierarchy.num_coeff_nodes(start_level + s)
+            };
+            if n != expected {
+                return Err(Error::corrupt(format!(
+                    "stream {s} declares {n} coefficients; hierarchy says {expected}"
+                )));
+            }
+            let max_abs = r.f64()?;
+            if !max_abs.is_finite() || max_abs < 0.0 {
+                return Err(Error::corrupt(format!("stream {s}: bad max_abs {max_abs}")));
+            }
+            let exponent = r.i64()?;
+            if exponent.unsigned_abs() > 1100 {
+                return Err(Error::corrupt(format!(
+                    "stream {s}: implausible exponent {exponent}"
+                )));
+            }
+            let exponent = exponent as i32;
+            if max_abs == 0.0 {
+                if exponent != 0 {
+                    return Err(Error::corrupt(format!(
+                        "stream {s}: zero stream with exponent {exponent}"
+                    )));
+                }
+            } else if !(max_abs < 2f64.powi(exponent)
+                && max_abs >= 2f64.powi(exponent - 1))
+            {
+                return Err(Error::corrupt(format!(
+                    "stream {s}: max_abs {max_abs} outside [2^{}, 2^{exponent})",
+                    exponent - 1
+                )));
+            }
+            // worst-case stored size: the in-tree LZ stage never doubles a
+            // payload and adds a small header
+            let comp_cap = 64 + 2 * (n as u64) * tbytes as u64;
+            let mut comp_lens = Vec::with_capacity(planes + 2);
+            for c in 0..planes + 2 {
+                let l = r.u64()?;
+                if l > comp_cap {
+                    return Err(Error::corrupt(format!(
+                        "stream {s} component {c}: implausible stored size {l}"
+                    )));
+                }
+                comp_lens.push(l);
+            }
+            let mut err_after = Vec::with_capacity(planes + 3);
+            for c in 0..planes + 3 {
+                let e = r.f64()?;
+                if !e.is_finite() || e < 0.0 {
+                    return Err(Error::corrupt(format!(
+                        "stream {s}: error bound {e} after {c} components"
+                    )));
+                }
+                if let Some(&prev) = err_after.last() {
+                    if e > prev {
+                        return Err(Error::corrupt(format!(
+                            "stream {s}: error schedule increases at component {c}"
+                        )));
+                    }
+                }
+                err_after.push(e);
+            }
+            if err_after[0] != max_abs {
+                return Err(Error::corrupt(format!(
+                    "stream {s}: error schedule starts at {} (max_abs {max_abs})",
+                    err_after[0]
+                )));
+            }
+            if *err_after.last().unwrap() != 0.0 {
+                return Err(Error::corrupt(format!(
+                    "stream {s}: error schedule does not end lossless"
+                )));
+            }
+            streams.push(StreamMeta {
+                n,
+                max_abs,
+                exponent,
+                comp_lens,
+                err_after,
+            });
+        }
+        if r.remaining() != 0 {
+            return Err(Error::corrupt(format!(
+                "{} trailing bytes after the manifest",
+                r.remaining()
+            )));
+        }
+        Ok(ProgressiveManifest {
+            shape,
+            dtype,
+            start_level,
+            max_level,
+            planes,
+            c_linf,
+            streams,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A small, fully valid manifest over a `[5]` field (streams of 3 and
+    /// 2 coefficients, 2 planes).
+    pub(crate) fn tiny_manifest() -> ProgressiveManifest {
+        ProgressiveManifest {
+            shape: vec![5],
+            dtype: 1,
+            start_level: 0,
+            max_level: 1,
+            planes: 2,
+            c_linf: 2.0,
+            streams: vec![
+                StreamMeta {
+                    n: 3,
+                    max_abs: 1.5,
+                    exponent: 1,
+                    comp_lens: vec![1, 1, 1, 13],
+                    err_after: vec![1.5, 1.5, 1.0, 0.5, 0.0],
+                },
+                StreamMeta {
+                    n: 2,
+                    max_abs: 0.75,
+                    exponent: 0,
+                    comp_lens: vec![1, 1, 1, 9],
+                    err_after: vec![0.75, 0.75, 0.5, 0.25, 0.0],
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn round_trip() {
+        let m = tiny_manifest();
+        assert_eq!(ProgressiveManifest::from_bytes(&m.to_bytes()).unwrap(), m);
+    }
+
+    #[test]
+    fn component_ranges_are_contiguous() {
+        let m = tiny_manifest();
+        assert_eq!(m.component_range(0, 0).unwrap(), (0, 1));
+        assert_eq!(m.component_range(0, 3).unwrap(), (3, 13));
+        assert_eq!(m.component_range(1, 0).unwrap(), (16, 1));
+        assert_eq!(m.total_bytes(), 28);
+        assert!(m.component_range(2, 0).is_err());
+        assert!(m.component_range(0, 4).is_err());
+    }
+
+    #[test]
+    fn every_truncation_is_rejected() {
+        let bytes = tiny_manifest().to_bytes();
+        for cut in 0..bytes.len() {
+            assert!(
+                ProgressiveManifest::from_bytes(&bytes[..cut]).is_err(),
+                "cut at {cut}"
+            );
+        }
+    }
+
+    #[test]
+    fn foreign_and_level_magic_rejected() {
+        assert!(matches!(
+            ProgressiveManifest::from_bytes(b"MGRF\x01rest"),
+            Err(Error::UnsupportedFormat(_))
+        ));
+        assert!(matches!(
+            ProgressiveManifest::from_bytes(b"JUNKJUNK"),
+            Err(Error::UnsupportedFormat(_))
+        ));
+        assert!(ProgressiveManifest::from_bytes(&[]).is_err());
+    }
+
+    #[test]
+    fn inconsistent_fields_rejected() {
+        let mut m = tiny_manifest();
+        m.streams[0].n = 4; // hierarchy says 3
+        assert!(ProgressiveManifest::from_bytes(&m.to_bytes()).is_err());
+        let mut m = tiny_manifest();
+        m.streams[1].err_after[2] = 2.0; // increases
+        assert!(ProgressiveManifest::from_bytes(&m.to_bytes()).is_err());
+        let mut m = tiny_manifest();
+        m.streams[1].err_after[4] = 0.1; // not lossless at the end
+        assert!(ProgressiveManifest::from_bytes(&m.to_bytes()).is_err());
+        let mut m = tiny_manifest();
+        m.streams[0].exponent = 5; // max_abs not in [2^4, 2^5)
+        assert!(ProgressiveManifest::from_bytes(&m.to_bytes()).is_err());
+        let mut m = tiny_manifest();
+        m.streams[0].comp_lens[3] = 1 << 40; // implausible component size
+        assert!(ProgressiveManifest::from_bytes(&m.to_bytes()).is_err());
+        let mut m = tiny_manifest();
+        m.max_level = 3; // hierarchy of [5] has depth 1
+        assert!(ProgressiveManifest::from_bytes(&m.to_bytes()).is_err());
+        // version bump refused
+        let mut bytes = tiny_manifest().to_bytes();
+        bytes[4] = 9;
+        assert!(matches!(
+            ProgressiveManifest::from_bytes(&bytes),
+            Err(Error::UnsupportedFormat(_))
+        ));
+        // trailing garbage refused
+        let mut bytes = tiny_manifest().to_bytes();
+        bytes.push(0);
+        assert!(ProgressiveManifest::from_bytes(&bytes).is_err());
+    }
+}

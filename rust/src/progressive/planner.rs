@@ -1,0 +1,348 @@
+//! The error-bound-driven fetch planner.
+//!
+//! Given a requested L∞ tolerance τ, the planner selects — per stream — how
+//! many leading components (sign, then magnitude planes, then the lossless
+//! residual) must be fetched so that the reconstruction is **certified** to
+//! satisfy `‖u − ũ‖_∞ ≤ τ`. The certificate is the level-wise tolerance
+//! model of [`crate::quant::level_tolerances`]: perturbing every coefficient of
+//! stream `s` by at most `ε_s` amplifies to at most `c_linf · Σ_s ε_s` in
+//! the reconstruction, so the planner keeps `c_linf · Σ_s ε_s ≤ τ` —
+//! evaluated exactly as returned, so the bound holds without slack — using
+//! the per-component error schedule recorded in the manifest.
+//!
+//! Planning is two-phase and deterministic:
+//! 1. **Allocate** the budget geometrically across streams with
+//!    [`level_tolerances`] (coarser levels get tighter shares, exactly like
+//!    quantization), rounding each stream up to the next component whose
+//!    recorded bound meets its share.
+//! 2. **Give back**: bitplane granularity means phase 1 usually lands
+//!    under budget, so greedily drop the component with the largest stored
+//!    size whose removal keeps the total within budget, until nothing more
+//!    fits. This only ever shrinks the fetch set.
+//!
+//! Plans are deterministic, but the greedy give-back is not globally
+//! optimal, so *independent* plans at different τ are only approximately
+//! byte-monotone. Incremental consumers should refine through
+//! [`plan_with_floor`] instead: with the already-fetched components as the
+//! floor, a tighter plan is a superset by construction — nothing is ever
+//! re-fetched or dropped.
+
+use super::manifest::ProgressiveManifest;
+use crate::error::{Error, Result};
+use crate::quant::level_tolerances;
+
+/// One retrievable component: `comp` is `0` (sign), `1..=planes`
+/// (magnitude plane `comp-1`, MSB first) or `planes+1` (residual).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ComponentId {
+    /// Stream index (0 = coarse, `s >= 1` = level `start_level + s`).
+    pub stream: usize,
+    /// Component index within the stream.
+    pub comp: usize,
+}
+
+/// A planned error-bounded fetch.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FetchPlan {
+    /// The tolerance the plan was built for.
+    pub tau: f64,
+    /// Leading components to fetch per stream (`0`, or `2 ..= planes+2`;
+    /// a bare sign plane is never fetched — it refines nothing).
+    pub per_stream: Vec<usize>,
+    /// Certified L∞ bound of the planned reconstruction
+    /// (`c_linf · Σ_s err_after[c_s]`, always `<= tau`).
+    pub certified_bound: f64,
+    /// Stored bytes the plan fetches.
+    pub bytes: u64,
+    /// Stored bytes of the whole refactored field.
+    pub total_bytes: u64,
+}
+
+impl FetchPlan {
+    /// The components to fetch, in stream-major order (the store's
+    /// physical byte order, so a fetch is one ascending range scan).
+    pub fn components(&self) -> Vec<ComponentId> {
+        let mut out = Vec::new();
+        for (stream, &c) in self.per_stream.iter().enumerate() {
+            for comp in 0..c {
+                out.push(ComponentId { stream, comp });
+            }
+        }
+        out
+    }
+
+    /// Components in this plan that `floor` (components per stream already
+    /// fetched) does not cover — what an incremental refinement must
+    /// actually transfer.
+    pub fn components_beyond(&self, floor: &[usize]) -> Vec<ComponentId> {
+        let mut out = Vec::new();
+        for (stream, &c) in self.per_stream.iter().enumerate() {
+            for comp in floor.get(stream).copied().unwrap_or(0)..c {
+                out.push(ComponentId { stream, comp });
+            }
+        }
+        out
+    }
+
+    /// Whether the plan fetches every component (lossless).
+    pub fn is_lossless(&self) -> bool {
+        self.bytes == self.total_bytes
+    }
+}
+
+/// Stored bytes of the first `c` components of stream `s`.
+fn prefix_bytes(m: &ProgressiveManifest, s: usize, c: usize) -> u64 {
+    m.streams[s].comp_lens[..c].iter().sum()
+}
+
+/// Next smaller admissible component count below `c` (skipping the useless
+/// "sign plane only" state `1`).
+fn step_down(c: usize) -> Option<usize> {
+    match c {
+        0 => None,
+        1 | 2 => Some(0),
+        _ => Some(c - 1),
+    }
+}
+
+/// Plan the minimal component fetch for tolerance `tau`.
+pub fn plan(manifest: &ProgressiveManifest, tau: f64) -> Result<FetchPlan> {
+    plan_with_floor(manifest, tau, None)
+}
+
+/// Like [`plan`], but never descending below `floor` (components per
+/// stream already fetched) — the incremental-refinement entry point: the
+/// result is always a superset of what the reader already holds.
+pub fn plan_with_floor(
+    manifest: &ProgressiveManifest,
+    tau: f64,
+    floor: Option<&[usize]>,
+) -> Result<FetchPlan> {
+    if !tau.is_finite() || tau <= 0.0 {
+        return Err(Error::invalid(format!(
+            "retrieval tolerance must be finite and positive, got {tau}"
+        )));
+    }
+    let nstreams = manifest.streams.len();
+    let ncomps = manifest.comps_per_stream();
+    if let Some(f) = floor {
+        if f.len() != nstreams {
+            return Err(Error::invalid("fetch floor has the wrong stream count"));
+        }
+        if let Some(&bad) = f.iter().find(|&&c| c > ncomps) {
+            return Err(Error::invalid(format!(
+                "fetch floor holds {bad} components; streams have at most {ncomps}"
+            )));
+        }
+    }
+    let d = manifest.shape.len();
+    // the certificate is always evaluated in τ space (c_linf × Σ err),
+    // never against the rounded intermediate τ/c_linf, so the returned
+    // bound is `<= tau` exactly even when float rounding bites
+    let certified = |per: &[usize]| -> f64 {
+        manifest.c_linf
+            * per
+                .iter()
+                .enumerate()
+                .map(|(s, &c)| manifest.streams[s].err_after[c])
+                .sum::<f64>()
+    };
+    // phase 1: geometric allocation, coarsest stream first (same order as
+    // level_tolerances: index 0 is the coarse representation's share)
+    let targets = level_tolerances(nstreams, d, tau, manifest.c_linf);
+    let mut per_stream = Vec::with_capacity(nstreams);
+    for (s, meta) in manifest.streams.iter().enumerate() {
+        let lo = floor.map(|f| f[s]).unwrap_or(0);
+        let mut c = (0..=ncomps)
+            .find(|&c| c != 1 && meta.err_after[c] <= targets[s])
+            .unwrap_or(ncomps);
+        c = c.max(lo);
+        per_stream.push(c);
+    }
+    // repair: per-stream shares meet their targets, but their float *sum*
+    // can exceed the budget by ulps — tighten the worst stream until the
+    // certificate itself is within τ (terminates: every step strictly
+    // lowers the total, which reaches 0 at lossless)
+    while certified(&per_stream) > tau {
+        let worst = (0..nstreams)
+            .filter(|&s| per_stream[s] < ncomps)
+            .max_by(|&a, &b| {
+                let ea = manifest.streams[a].err_after[per_stream[a]];
+                let eb = manifest.streams[b].err_after[per_stream[b]];
+                ea.partial_cmp(&eb).unwrap().then(b.cmp(&a))
+            });
+        match worst {
+            Some(s) => per_stream[s] = if per_stream[s] == 0 { 2 } else { per_stream[s] + 1 },
+            None => break, // everything lossless: certificate is 0
+        }
+    }
+    // phase 2: greedy give-back while the certificate stays within τ
+    loop {
+        let mut best: Option<(u64, usize, usize)> = None; // (saved bytes, s, c')
+        for s in 0..nstreams {
+            let lo = floor.map(|f| f[s]).unwrap_or(0);
+            let Some(c_next) = step_down(per_stream[s]) else {
+                continue;
+            };
+            if c_next < lo {
+                continue;
+            }
+            let prev = per_stream[s];
+            per_stream[s] = c_next;
+            let fits = certified(&per_stream) <= tau;
+            per_stream[s] = prev;
+            if !fits {
+                continue;
+            }
+            let saved = prefix_bytes(manifest, s, per_stream[s]) - prefix_bytes(manifest, s, c_next);
+            if best.map(|(b, _, _)| saved > b).unwrap_or(true) {
+                best = Some((saved, s, c_next));
+            }
+        }
+        match best {
+            Some((_, s, c_next)) => per_stream[s] = c_next,
+            None => break,
+        }
+    }
+    let bytes = per_stream
+        .iter()
+        .enumerate()
+        .map(|(s, &c)| prefix_bytes(manifest, s, c))
+        .sum();
+    Ok(FetchPlan {
+        tau,
+        certified_bound: manifest.c_linf * total_err(&per_stream),
+        per_stream,
+        bytes,
+        total_bytes: manifest.total_bytes(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::progressive::manifest::StreamMeta;
+
+    /// Two-stream manifest over a `[5]` field with simple dyadic error
+    /// schedules and 4 planes.
+    fn test_manifest() -> ProgressiveManifest {
+        let sched = |max: f64, e: i32| {
+            let mut v = vec![max, max];
+            for k in 1..=4 {
+                v.push(2f64.powi(e - k));
+            }
+            v.push(0.0);
+            v
+        };
+        ProgressiveManifest {
+            shape: vec![5],
+            dtype: 1,
+            start_level: 0,
+            max_level: 1,
+            planes: 4,
+            c_linf: 2.0,
+            streams: vec![
+                StreamMeta {
+                    n: 3,
+                    max_abs: 1.5,
+                    exponent: 1,
+                    comp_lens: vec![1, 2, 2, 2, 2, 13],
+                    err_after: sched(1.5, 1),
+                },
+                StreamMeta {
+                    n: 2,
+                    max_abs: 0.75,
+                    exponent: 0,
+                    comp_lens: vec![1, 1, 1, 1, 1, 9],
+                    err_after: sched(0.75, 0),
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn certified_bound_never_exceeds_tau() {
+        let m = test_manifest();
+        for tau in [10.0, 3.0, 1.0, 0.3, 0.1, 0.03, 0.01, 1e-6] {
+            let p = plan(&m, tau).unwrap();
+            assert!(
+                p.certified_bound <= tau,
+                "tau {tau}: certified {}",
+                p.certified_bound
+            );
+        }
+    }
+
+    #[test]
+    fn bytes_grow_as_tau_shrinks() {
+        // byte-monotonicity over independent plans is not guaranteed in
+        // general (see the module docs), but it holds — and is pinned —
+        // for this fixed manifest and ladder
+        let m = test_manifest();
+        let mut prev = 0;
+        for tau in [10.0, 1.0, 0.5, 0.1, 0.01, 1e-9] {
+            let p = plan(&m, tau).unwrap();
+            assert!(p.bytes >= prev, "tau {tau}");
+            prev = p.bytes;
+        }
+    }
+
+    #[test]
+    fn huge_tau_fetches_nothing_tiny_tau_everything() {
+        let m = test_manifest();
+        let loose = plan(&m, 100.0).unwrap();
+        assert_eq!(loose.bytes, 0);
+        assert_eq!(loose.per_stream, vec![0, 0]);
+        let tight = plan(&m, 1e-12).unwrap();
+        assert!(tight.is_lossless());
+        assert_eq!(tight.certified_bound, 0.0);
+        assert_eq!(tight.bytes, m.total_bytes());
+    }
+
+    #[test]
+    fn sign_only_state_never_planned() {
+        let m = test_manifest();
+        for tau in [10.0, 3.0, 1.0, 0.3, 0.1, 0.03, 0.01, 1e-4, 1e-9] {
+            let p = plan(&m, tau).unwrap();
+            assert!(p.per_stream.iter().all(|&c| c != 1), "tau {tau}: {p:?}");
+        }
+    }
+
+    #[test]
+    fn floor_is_respected_and_monotone() {
+        let m = test_manifest();
+        let first = plan(&m, 0.5).unwrap();
+        let refined = plan_with_floor(&m, 0.05, Some(&first.per_stream)).unwrap();
+        for (a, b) in first.per_stream.iter().zip(&refined.per_stream) {
+            assert!(b >= a, "refinement dropped components: {first:?} -> {refined:?}");
+        }
+        // a *looser* refinement keeps what was already fetched
+        let loose = plan_with_floor(&m, 10.0, Some(&first.per_stream)).unwrap();
+        assert_eq!(loose.per_stream, first.per_stream);
+        let delta = refined.components_beyond(&first.per_stream);
+        assert!(delta.iter().all(|c| c.comp >= first.per_stream[c.stream]));
+    }
+
+    #[test]
+    fn invalid_tau_rejected() {
+        let m = test_manifest();
+        assert!(plan(&m, 0.0).is_err());
+        assert!(plan(&m, -1.0).is_err());
+        assert!(plan(&m, f64::NAN).is_err());
+        assert!(plan(&m, f64::INFINITY).is_err());
+        assert!(plan_with_floor(&m, 1.0, Some(&[0])).is_err());
+        // a floor claiming more components than streams have is refused,
+        // not indexed out of bounds
+        assert!(plan_with_floor(&m, 1.0, Some(&[7, 0])).is_err());
+    }
+
+    #[test]
+    fn components_enumerate_in_store_order() {
+        let m = test_manifest();
+        let p = plan(&m, 1e-12).unwrap();
+        let ids = p.components();
+        assert_eq!(ids.len(), 12);
+        assert_eq!(ids[0], ComponentId { stream: 0, comp: 0 });
+        assert_eq!(ids[6], ComponentId { stream: 1, comp: 0 });
+    }
+}

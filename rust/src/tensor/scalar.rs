@@ -30,6 +30,14 @@ pub trait Scalar:
     const BYTES: usize;
     /// Tag stored in container headers (1 = f32, 2 = f64).
     const DTYPE_TAG: u8;
+    /// Mantissa width in bits including the implicit leading one
+    /// (24 for f32, 53 for f64) — the exactness cap for fixed-point
+    /// bitplane coding.
+    const MANT_BITS: u32;
+    /// Power of two of the smallest positive (subnormal) value:
+    /// dyadic values `m · 2^p` with `p >= MIN_POW` and `m` within the
+    /// mantissa width are exactly representable.
+    const MIN_POW: i32;
 
     /// Lossless conversion from `f64` (f32: rounds).
     fn from_f64(v: f64) -> Self;
@@ -50,6 +58,8 @@ impl Scalar for f32 {
     const ONE: Self = 1.0;
     const BYTES: usize = 4;
     const DTYPE_TAG: u8 = 1;
+    const MANT_BITS: u32 = 24;
+    const MIN_POW: i32 = -149;
 
     #[inline]
     fn from_f64(v: f64) -> Self {
@@ -82,6 +92,8 @@ impl Scalar for f64 {
     const ONE: Self = 1.0;
     const BYTES: usize = 8;
     const DTYPE_TAG: u8 = 2;
+    const MANT_BITS: u32 = 53;
+    const MIN_POW: i32 = -1074;
 
     #[inline]
     fn from_f64(v: f64) -> Self {

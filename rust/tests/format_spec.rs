@@ -7,6 +7,10 @@
 use mgardp::chunk::container::{write_container, BlockEntry, ChunkIndex, TilingPolicy};
 use mgardp::chunk::{CHUNK_CONTAINER_VERSION, CHUNK_CONTAINER_VERSION_ADAPTIVE};
 use mgardp::compressors::{Header, Method};
+use mgardp::coordinator::refactor::{Manifest, REFACTOR_MANIFEST_VERSION};
+use mgardp::progressive::{
+    ProgressiveManifest, StreamMeta, PROGRESSIVE_MANIFEST_VERSION,
+};
 
 /// The adaptive worked example of docs/FORMAT.md, 105 bytes.
 const ADAPTIVE_EXAMPLE_HEX: &str = "\
@@ -129,6 +133,96 @@ fn sub_version_bytes_match_spec_constants() {
     assert_eq!(adaptive.len(), fixed.len() + 11);
 }
 
+/// The progressive-manifest worked example of docs/FORMAT.md, 128 bytes:
+/// an f32 field of shape `[5]`, levels 0..=1, 2 magnitude planes,
+/// `c_linf = 2.0`, two streams (3 and 2 coefficients).
+const PROGRESSIVE_MANIFEST_EXAMPLE_HEX: &str = "\
+4d 47 50 52 01 01 01 05 00 01 02 00 00 00 00 00
+00 00 40 02 03 00 00 00 00 00 00 f8 3f 02 01 01
+01 0d 00 00 00 00 00 00 f8 3f 00 00 00 00 00 00
+f8 3f 00 00 00 00 00 00 f0 3f 00 00 00 00 00 00
+e0 3f 00 00 00 00 00 00 00 00 02 00 00 00 00 00
+00 e8 3f 00 01 01 01 09 00 00 00 00 00 00 e8 3f
+00 00 00 00 00 00 e8 3f 00 00 00 00 00 00 e0 3f
+00 00 00 00 00 00 d0 3f 00 00 00 00 00 00 00 00";
+
+/// The level-manifest worked example of docs/FORMAT.md, 13 bytes: the
+/// same `[5]` field in the level layout with components of 7 and 9 bytes.
+const LEVEL_MANIFEST_EXAMPLE_HEX: &str = "\
+4d 47 52 46 01 01 01 05 00 01 02 07 09";
+
+/// The documented progressive manifest as a struct.
+fn progressive_manifest_example() -> ProgressiveManifest {
+    ProgressiveManifest {
+        shape: vec![5],
+        dtype: 1,
+        start_level: 0,
+        max_level: 1,
+        planes: 2,
+        c_linf: 2.0,
+        streams: vec![
+            StreamMeta {
+                n: 3,
+                max_abs: 1.5,
+                exponent: 1,
+                comp_lens: vec![1, 1, 1, 13],
+                err_after: vec![1.5, 1.5, 1.0, 0.5, 0.0],
+            },
+            StreamMeta {
+                n: 2,
+                max_abs: 0.75,
+                exponent: 0,
+                comp_lens: vec![1, 1, 1, 9],
+                err_after: vec![0.75, 0.75, 0.5, 0.25, 0.0],
+            },
+        ],
+    }
+}
+
+#[test]
+fn progressive_manifest_worked_example_matches_emitter() {
+    let m = progressive_manifest_example();
+    let bytes = m.to_bytes();
+    assert_eq!(
+        bytes,
+        parse_hex(PROGRESSIVE_MANIFEST_EXAMPLE_HEX),
+        "spec hex drifted from the progressive manifest emitter"
+    );
+    // the documented bytes parse back to the documented manifest
+    assert_eq!(ProgressiveManifest::from_bytes(&bytes).unwrap(), m);
+    // and the version byte sits where the spec says (right after magic)
+    assert_eq!(bytes[4], PROGRESSIVE_MANIFEST_VERSION);
+    assert_eq!(&bytes[..4], b"MGPR");
+    // component ranges tile components.bin exactly as documented
+    assert_eq!(m.component_range(0, 0).unwrap(), (0, 1));
+    assert_eq!(m.component_range(0, 3).unwrap(), (3, 13));
+    assert_eq!(m.component_range(1, 0).unwrap(), (16, 1));
+    assert_eq!(m.total_bytes(), 28);
+}
+
+#[test]
+fn level_manifest_worked_example_matches_emitter() {
+    let m = Manifest {
+        shape: vec![5],
+        dtype: 1,
+        start_level: 0,
+        max_level: 1,
+        component_bytes: vec![7, 9],
+    };
+    let bytes = m.to_bytes();
+    assert_eq!(
+        bytes,
+        parse_hex(LEVEL_MANIFEST_EXAMPLE_HEX),
+        "spec hex drifted from the level manifest emitter"
+    );
+    assert_eq!(Manifest::from_bytes(&bytes).unwrap(), m);
+    assert_eq!(bytes[4], REFACTOR_MANIFEST_VERSION);
+    assert_eq!(&bytes[..4], b"MGRF");
+    // the PR-era encoding is exactly the versioned body without the
+    // 5-byte magic + version prefix, and still parses
+    assert_eq!(Manifest::from_bytes(&bytes[5..]).unwrap(), m);
+}
+
 #[test]
 fn format_md_contains_exactly_these_bytes() {
     let doc = include_str!(concat!(env!("CARGO_MANIFEST_DIR"), "/docs/FORMAT.md"));
@@ -140,6 +234,8 @@ fn format_md_contains_exactly_these_bytes() {
     for (name, hex) in [
         ("adaptive", ADAPTIVE_EXAMPLE_HEX),
         ("fixed", FIXED_EXAMPLE_HEX),
+        ("progressive manifest", PROGRESSIVE_MANIFEST_EXAMPLE_HEX),
+        ("level manifest", LEVEL_MANIFEST_EXAMPLE_HEX),
     ] {
         let needle: String = hex.split_whitespace().collect();
         assert!(

@@ -1,0 +1,227 @@
+//! Tier-1 contract of the progressive multi-precision retrieval subsystem:
+//!
+//! * for a sweep of tolerances τ on 1/2/3-D synthetic fields, the planner's
+//!   component set reconstructs within `‖u − ũ‖_∞ ≤ τ`, fetching strictly
+//!   fewer bytes than the full refactored field whenever τ admits dropping
+//!   at least one bitplane;
+//! * incremental refinement is monotone (never re-fetches, never loosens)
+//!   and reaches **bit-exact** lossless recovery once every component has
+//!   been applied;
+//! * PR-era (magic-less) level-layout stores remain readable next to the
+//!   new versioned manifests.
+
+use mgardp::coordinator::refactor::{FieldLayout, RefactorStore};
+use mgardp::data::synth;
+use mgardp::decompose::{Decomposer, OptFlags};
+use mgardp::grid::Hierarchy;
+use mgardp::metrics::linf_error;
+use mgardp::progressive::{plan, plan_with_floor, refactor_streams, ProgressiveReader};
+use mgardp::tensor::Tensor;
+
+fn temp_store(tag: &str) -> RefactorStore {
+    let dir = std::env::temp_dir().join(format!(
+        "mgardp_progressive_{tag}_{}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    RefactorStore::create(dir).unwrap()
+}
+
+/// The store's lossless reference: recomposing the exact decomposition.
+fn lossless_reference(t: &Tensor<f32>) -> Tensor<f32> {
+    let h = Hierarchy::new(t.shape(), None).unwrap();
+    let dz = Decomposer::new(h, OptFlags::all()).unwrap();
+    dz.recompose(&dz.decompose(t).unwrap()).unwrap()
+}
+
+fn planner_bound_sweep(shape: &[usize], tag: &str) {
+    let store = temp_store(tag);
+    let t = synth::smooth_test_field(shape);
+    store.write_field_progressive("u", &t, None, 3).unwrap();
+    let field = store.progressive("u").unwrap();
+    let total = field.manifest().total_bytes();
+    let range = t.value_range();
+    for rel in [0.3, 0.1, 3e-2, 1e-2, 3e-3, 1e-3, 3e-4, 1e-4] {
+        let tau = rel * range;
+        let (back, plan): (Tensor<f32>, _) = field.retrieve(tau).unwrap();
+        assert_eq!(back.shape(), t.shape());
+        assert!(
+            plan.certified_bound <= tau,
+            "{shape:?} τ {tau}: certificate {}",
+            plan.certified_bound
+        );
+        let err = linf_error(t.data(), back.data());
+        assert!(
+            err <= tau * (1.0 + 1e-6),
+            "{shape:?} τ {tau}: L∞ {err} exceeds the bound"
+        );
+        // any τ loose enough to certify without everything must fetch less
+        // than the whole refactored field
+        let dropped_any = plan
+            .per_stream
+            .iter()
+            .any(|&c| c < field.manifest().comps_per_stream());
+        if dropped_any {
+            assert!(
+                plan.bytes < total,
+                "{shape:?} τ {tau}: dropped components but fetched {} of {total}",
+                plan.bytes
+            );
+        }
+    }
+    std::fs::remove_dir_all(store.root()).ok();
+}
+
+#[test]
+fn planner_bound_sweep_1d() {
+    planner_bound_sweep(&[129], "1d");
+}
+
+#[test]
+fn planner_bound_sweep_2d() {
+    planner_bound_sweep(&[33, 17], "2d");
+}
+
+#[test]
+fn planner_bound_sweep_3d() {
+    // non-dyadic extents exercise padding under the hierarchy
+    planner_bound_sweep(&[17, 18, 19], "3d");
+}
+
+#[test]
+fn refinement_plans_are_byte_monotone() {
+    // independent plans at different τ may differ slightly (the greedy
+    // give-back is not globally optimal), but *refinement* — planning with
+    // the already-fetched floor — is monotone by construction: it never
+    // drops a held component and never re-fetches
+    let t = synth::smooth_test_field(&[33, 33]);
+    let (m, _) = refactor_streams(&t, 24, 3).unwrap();
+    let range = t.value_range();
+    let mut floor = vec![0usize; m.streams.len()];
+    let mut prev = 0u64;
+    for rel in [0.3, 0.1, 3e-2, 1e-2, 3e-3, 1e-3, 1e-5, 1e-9] {
+        let p = plan_with_floor(&m, rel * range, Some(&floor)).unwrap();
+        assert!(p.certified_bound <= rel * range);
+        assert!(p.bytes >= prev, "rel {rel}: {} < {prev}", p.bytes);
+        for (f, &c) in floor.iter_mut().zip(&p.per_stream) {
+            assert!(c >= *f, "refinement dropped a held component");
+            *f = c;
+        }
+        prev = p.bytes;
+    }
+    // and an absurdly tight τ degrades to lossless, certified at exactly 0
+    let p = plan(&m, 1e-300).unwrap();
+    assert!(p.is_lossless());
+    assert_eq!(p.certified_bound, 0.0);
+}
+
+#[test]
+fn refinement_to_all_planes_is_bit_exact_lossless() {
+    for shape in [&[65][..], &[17, 18][..], &[9, 10, 11][..]] {
+        let store = temp_store(&format!("lossless{}", shape.len()));
+        let t = synth::smooth_test_field(shape);
+        store.write_field_progressive("u", &t, None, 3).unwrap();
+        let field = store.progressive("u").unwrap();
+        let mut reader = field.reader::<f32>().unwrap();
+        // refine through two progressively tighter plans, then to lossless
+        let range = t.value_range();
+        let mut fetched = 0u64;
+        for tau in [0.1 * range, 1e-3 * range] {
+            let p = field.plan(tau, Some(&reader.fetched())).unwrap();
+            let delta = field.refine(&mut reader, &p).unwrap();
+            fetched += delta;
+            assert_eq!(fetched, reader.bytes_fetched(), "no re-fetching");
+            let back = reader.reconstruct().unwrap();
+            let err = linf_error(t.data(), back.data());
+            assert!(err <= tau * (1.0 + 1e-6), "τ {tau}: {err}");
+        }
+        // the final step: an (unreachably tight) τ degrades to "fetch
+        // everything", whose certificate — error 0 vs the store's lossless
+        // reference — is checked bit-for-bit below
+        let p = field.plan(f64::MIN_POSITIVE, Some(&reader.fetched())).unwrap();
+        field.refine(&mut reader, &p).unwrap();
+        assert_eq!(reader.current_bound(), 0.0);
+        assert!(reader.is_lossless());
+        assert_eq!(reader.bytes_fetched(), field.manifest().total_bytes());
+        let exact = lossless_reference(&t);
+        let back = reader.reconstruct().unwrap();
+        assert_eq!(exact.shape(), back.shape());
+        for (a, b) in exact.data().iter().zip(back.data()) {
+            assert_eq!(a.to_bits(), b.to_bits(), "lossless must be bit-exact");
+        }
+        std::fs::remove_dir_all(store.root()).ok();
+    }
+}
+
+#[test]
+fn f64_progressive_round_trip() {
+    let store = temp_store("f64");
+    let t32 = synth::smooth_test_field(&[17, 17]);
+    let t = Tensor::<f64>::from_fn(t32.shape(), |ix| t32.at(ix) as f64);
+    store.write_field_progressive("u", &t, None, 3).unwrap();
+    let field = store.progressive("u").unwrap();
+    let (back, plan): (Tensor<f64>, _) = field.retrieve(1e-6).unwrap();
+    assert!(plan.certified_bound <= 1e-6);
+    assert!(linf_error(t.data(), back.data()) <= 1e-6);
+    // f32 readers are refused on an f64 field
+    assert!(field.reader::<f32>().is_err());
+    std::fs::remove_dir_all(store.root()).ok();
+}
+
+#[test]
+fn pr_era_level_store_remains_readable() {
+    let store = temp_store("compat");
+    let t = synth::smooth_test_field(&[17, 17]);
+    let m = store.write_field("u", &t, 3).unwrap();
+    // rewrite the manifest in the PR-era encoding: body only, no
+    // magic/version header (what stores created before this PR contain)
+    let manifest_path = store.root().join("u").join("manifest.bin");
+    let versioned = std::fs::read(&manifest_path).unwrap();
+    assert_eq!(&versioned[..4], b"MGRF");
+    std::fs::write(&manifest_path, &versioned[5..]).unwrap();
+    assert_eq!(store.layout("u").unwrap(), FieldLayout::Level);
+    assert_eq!(store.manifest("u").unwrap(), m);
+    let back: Tensor<f32> = store.reconstruct("u", m.max_level).unwrap();
+    assert!(linf_error(t.data(), back.data()) < 1e-4);
+    std::fs::remove_dir_all(store.root()).ok();
+}
+
+#[test]
+fn coarse_only_and_zero_fetch_edge_cases() {
+    let t = synth::smooth_test_field(&[33]);
+    let (m, comps) = refactor_streams(&t, 24, 3).unwrap();
+    // τ larger than the certified worst case: nothing needs fetching and
+    // the all-zero reconstruction is still certified
+    let worst: f64 = m.streams.iter().map(|s| s.max_abs).sum::<f64>() * m.c_linf;
+    let p = plan(&m, worst * 2.0).unwrap();
+    assert_eq!(p.bytes, 0);
+    let reader: ProgressiveReader<f32> = ProgressiveReader::new(m.clone()).unwrap();
+    let zeros = reader.reconstruct().unwrap();
+    assert!(linf_error(t.data(), zeros.data()) <= reader.current_bound() * (1.0 + 1e-9));
+    // sanity: the component payloads advertised by the manifest exist
+    assert_eq!(comps.len(), m.streams.len());
+}
+
+#[test]
+fn stored_bytes_match_manifest_accounting() {
+    let store = temp_store("accounting");
+    let t = synth::smooth_test_field(&[17, 18]);
+    let manifest = store.write_field_progressive("u", &t, Some(16), 3).unwrap();
+    assert_eq!(manifest.planes, 16);
+    let blob = std::fs::read(store.root().join("u").join("components.bin")).unwrap();
+    assert_eq!(blob.len() as u64, manifest.total_bytes());
+    // every component range slices the blob exactly
+    let field = store.progressive("u").unwrap();
+    for (s, meta) in manifest.streams.iter().enumerate() {
+        for c in 0..manifest.comps_per_stream() {
+            let (off, len) = manifest.component_range(s, c).unwrap();
+            let direct = &blob[off as usize..(off + len) as usize];
+            let fetched = field
+                .fetch_component(mgardp::progressive::ComponentId { stream: s, comp: c })
+                .unwrap();
+            assert_eq!(direct, fetched.as_slice());
+        }
+        assert_eq!(meta.comp_lens.len(), manifest.comps_per_stream());
+    }
+    std::fs::remove_dir_all(store.root()).ok();
+}

@@ -3,11 +3,13 @@
 
 Two checks, both dependency-free (stdlib only):
 
-1. **Sub-version table drift** — every `pub const CHUNK_CONTAINER_* /
-   TILING_POLICY_*` constant in rust/src/chunk/container.rs must appear in
-   docs/FORMAT.md's tables with the same numeric value, and every such
-   constant named in docs/FORMAT.md must exist in the source. A format
-   bump that edits only one side fails here.
+1. **Constant table drift** — every format constant listed in
+   CONST_SOURCES (chunked sub-versions and tiling policies in
+   rust/src/chunk/container.rs, refactor/progressive manifest versions in
+   rust/src/coordinator/refactor.rs and rust/src/progressive/manifest.rs)
+   must appear in docs/FORMAT.md's tables with the same numeric value, and
+   every such constant named in docs/FORMAT.md must exist in the source. A
+   format bump that edits only one side fails here.
 2. **Markdown link check** — every relative link target in README.md,
    ROADMAP.md and docs/*.md must exist on disk (http(s)/mailto and
    in-page #anchors are skipped).
@@ -20,44 +22,60 @@ import sys
 from pathlib import Path
 
 ROOT = Path(__file__).resolve().parent.parent
-CONTAINER_RS = ROOT / "rust" / "src" / "chunk" / "container.rs"
 FORMAT_MD = ROOT / "docs" / "FORMAT.md"
 LINK_DOCS = [ROOT / "README.md", ROOT / "ROADMAP.md", *sorted((ROOT / "docs").glob("*.md"))]
 
-CONST_RE = re.compile(
-    r"pub const (CHUNK_CONTAINER_\w+|TILING_POLICY_\w+): u8 = (\d+);"
-)
+# every (file, constant-name pattern) pair whose `pub const NAME: u8 = N;`
+# values FORMAT.md's tables must mirror
+CONST_SOURCES = [
+    (
+        ROOT / "rust" / "src" / "chunk" / "container.rs",
+        r"CHUNK_CONTAINER_\w+|TILING_POLICY_\w+",
+    ),
+    (
+        ROOT / "rust" / "src" / "coordinator" / "refactor.rs",
+        r"REFACTOR_MANIFEST_\w+",
+    ),
+    (
+        ROOT / "rust" / "src" / "progressive" / "manifest.rs",
+        r"PROGRESSIVE_MANIFEST_\w+",
+    ),
+]
+ALL_NAMES = "|".join(pat for _, pat in CONST_SOURCES)
 # a table row naming a constant: | `1` | `CHUNK_CONTAINER_VERSION` | ...
-ROW_RE = re.compile(r"\|\s*`(\d+)`\s*\|\s*`(CHUNK_CONTAINER_\w+|TILING_POLICY_\w+)`\s*\|")
+ROW_RE = re.compile(r"\|\s*`(\d+)`\s*\|\s*`(" + ALL_NAMES + r")`\s*\|")
 LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
 
 
 def check_subversion_tables() -> list:
     errors = []
-    source = CONTAINER_RS.read_text(encoding="utf-8")
     doc = FORMAT_MD.read_text(encoding="utf-8")
-    src_consts = {name: int(val) for name, val in CONST_RE.findall(source)}
+    src_consts = {}
+    for path, pattern in CONST_SOURCES:
+        source = path.read_text(encoding="utf-8")
+        found = re.findall(r"pub const (" + pattern + r"): u8 = (\d+);", source)
+        if not found:
+            errors.append(f"{path}: no format constants found (regex drift?)")
+        src_consts.update({name: int(val) for name, val in found})
     doc_consts = {name: int(val) for val, name in ROW_RE.findall(doc)}
-    if not src_consts:
-        errors.append(f"{CONTAINER_RS}: no format constants found (regex drift?)")
     if not doc_consts:
-        errors.append(f"{FORMAT_MD}: no sub-version table rows found (regex drift?)")
+        errors.append(f"{FORMAT_MD}: no constant table rows found (regex drift?)")
     for name, val in sorted(src_consts.items()):
         if name not in doc_consts:
             errors.append(
-                f"{FORMAT_MD}: constant `{name}` (= {val}) from container.rs "
-                "is missing from the sub-version tables"
+                f"{FORMAT_MD}: constant `{name}` (= {val}) from the source "
+                "is missing from the constant tables"
             )
         elif doc_consts[name] != val:
             errors.append(
                 f"{FORMAT_MD}: `{name}` documented as {doc_consts[name]}, "
-                f"container.rs says {val}"
+                f"the source says {val}"
             )
     for name, val in sorted(doc_consts.items()):
         if name not in src_consts:
             errors.append(
                 f"{FORMAT_MD}: documents `{name}` (= {val}) which does not "
-                "exist in container.rs"
+                "exist in the source"
             )
     return errors
 
@@ -84,7 +102,7 @@ def main() -> int:
         print(f"docs gate: {e}", file=sys.stderr)
     if errors:
         return 1
-    print("docs gate: sub-version tables in sync, all markdown links resolve")
+    print("docs gate: constant tables in sync, all markdown links resolve")
     return 0
 
 

@@ -17,13 +17,15 @@
 #   clippy            lints are clean at -D warnings (correctness smells)
 #   rustdoc           docs build at -D warnings: every intra-doc link in the
 #                     chunk/stream/data rustdoc pass must resolve
-#   docs gate         scripts/check_docs.py — docs/FORMAT.md sub-version
-#                     tables must match rust/src/chunk/container.rs
-#                     constants, and every relative markdown link in
-#                     README/ROADMAP/docs must resolve (no toolchain needed)
+#   docs gate         scripts/check_docs.py — docs/FORMAT.md constant
+#                     tables (chunked sub-versions + refactor manifest
+#                     versions) must match the source constants, and every
+#                     relative markdown link in README/ROADMAP/docs must
+#                     resolve (no toolchain needed)
 #   examples smoke    quickstart, chunked_parallel (includes the
-#                     fixed-vs-adaptive tiling comparison) and streaming run
-#                     end-to-end on tiny multi-block synthetic inputs
+#                     fixed-vs-adaptive tiling comparison), streaming and
+#                     progressive (error-bounded retrieval down to
+#                     bit-exact lossless) run end-to-end on tiny inputs
 set -euo pipefail
 
 cd "$(dirname "$0")/.."
@@ -72,6 +74,7 @@ step "examples smoke (tiny synthetic inputs)"
 MGARDP_SMOKE=1 cargo run --release --example quickstart
 MGARDP_SMOKE=1 MGARDP_THREADS=2 cargo run --release --example chunked_parallel
 MGARDP_SMOKE=1 cargo run --release --example streaming
+MGARDP_SMOKE=1 cargo run --release --example progressive
 
 if [ "$run_msrv" = 1 ]; then
   step "MSRV build + test ($MSRV)"
