@@ -294,6 +294,139 @@ pub fn adaptive_tiling_curve(
     Ok(((fixed, fixed_nblocks), points))
 }
 
+/// One staged-vs-fused decompose+quantize measurement (the PR-5 hot-path
+/// trajectory point recorded in `BENCH_PR5.json`).
+#[derive(Clone, Debug)]
+pub struct HotPathPoint {
+    /// Display label (dataset or synthetic tag).
+    pub label: String,
+    /// Field shape.
+    pub shape: Vec<usize>,
+    /// Staged decompose-then-quantize throughput (MB/s, median).
+    pub staged_mbs: f64,
+    /// Fused single-pass decompose→quantize throughput (MB/s, median).
+    pub fused_mbs: f64,
+    /// `fused_mbs / staged_mbs`.
+    pub speedup: f64,
+}
+
+/// Measure the decompose+quantize stage of MGARD+ on `data` twice — the
+/// staged two-pass pipeline (decompose into per-level buffers, then
+/// quantize each) versus the fused single pass (`decompose::fused`) — with
+/// shared scratch on both sides so the comparison isolates the fusion
+/// itself. The two paths are bit-identical in output (differential-tested
+/// in `rust/tests/decompose_equivalence.rs`); this reports their speed.
+pub fn hot_path_point(
+    label: &str,
+    data: &crate::tensor::Tensor<f32>,
+    tau: f64,
+    warmup: usize,
+    runs: usize,
+) -> crate::error::Result<HotPathPoint> {
+    use crate::decompose::fused::{decompose_quantize, FusedStreams};
+    use crate::decompose::{DecomposeScratch, OptFlags};
+    use crate::quant::{level_tolerances, quantize, QuantStream, DEFAULT_C_LINF};
+
+    let h = crate::grid::Hierarchy::new(data.shape(), None)?;
+    let ll = h.nlevels();
+    let d = data.ndim();
+    let tiers = level_tolerances(ll + 1, d, tau, DEFAULT_C_LINF);
+
+    let mut ds = DecomposeScratch::<f32>::new();
+    let staged_flags = OptFlags::all_staged();
+    let t_staged = time_fn(warmup, runs, || {
+        let padded = h.pad(data).unwrap();
+        let dec =
+            crate::decompose::contiguous::decompose_scratch(&h, staged_flags, padded, 0, &mut ds);
+        let mut qs = QuantStream::default();
+        for (i, stream) in dec.coeffs.iter().enumerate() {
+            quantize(stream, tiers[i + 1], &mut qs);
+        }
+        qs
+    });
+
+    let mut fs = FusedStreams::new();
+    let fused_flags = OptFlags::all();
+    let t_fused = time_fn(warmup, runs, || {
+        let padded = h.pad(data).unwrap();
+        decompose_quantize(&h, fused_flags, padded, &tiers, &mut ds, &mut fs)
+    });
+
+    let staged_mbs = crate::metrics::throughput_mbs(data.nbytes(), t_staged.median);
+    let fused_mbs = crate::metrics::throughput_mbs(data.nbytes(), t_fused.median);
+    Ok(HotPathPoint {
+        label: label.to_string(),
+        shape: data.shape().to_vec(),
+        staged_mbs,
+        fused_mbs,
+        speedup: fused_mbs / staged_mbs,
+    })
+}
+
+/// Minimal JSON string escaping for labels.
+fn json_escape(s: &str) -> String {
+    s.chars()
+        .flat_map(|c| match c {
+            '"' => "\\\"".chars().collect::<Vec<_>>(),
+            '\\' => "\\\\".chars().collect(),
+            c if (c as u32) < 0x20 => format!("\\u{:04x}", c as u32).chars().collect(),
+            c => vec![c],
+        })
+        .collect()
+}
+
+/// Write the machine-readable PR-5 performance-trajectory file
+/// (`BENCH_PR5.json`). Schema (validated by `scripts/check_bench.py`):
+/// a `schema` tag, a `generator` provenance string, a `smoke` flag, the
+/// staged-vs-fused `hot_path` points and the `chunked_scaling` curve.
+pub fn write_bench_pr5_json(
+    path: &Path,
+    generator: &str,
+    smoke: bool,
+    hot_path: &[HotPathPoint],
+    scaling: &[ChunkedScalingPoint],
+) -> std::io::Result<()> {
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    let mut out = String::new();
+    out.push_str("{\n");
+    out.push_str("  \"schema\": \"mgardp-bench-pr5-v1\",\n");
+    out.push_str(&format!("  \"generator\": \"{}\",\n", json_escape(generator)));
+    out.push_str(&format!("  \"smoke\": {smoke},\n"));
+    out.push_str("  \"hot_path\": [\n");
+    for (i, p) in hot_path.iter().enumerate() {
+        let shape: Vec<String> = p.shape.iter().map(|s| s.to_string()).collect();
+        out.push_str(&format!(
+            "    {{\"label\": \"{}\", \"shape\": [{}], \"staged_mbs\": {:.6}, \
+             \"fused_mbs\": {:.6}, \"speedup\": {:.6}}}{}\n",
+            json_escape(&p.label),
+            shape.join(", "),
+            p.staged_mbs,
+            p.fused_mbs,
+            p.speedup,
+            if i + 1 < hot_path.len() { "," } else { "" }
+        ));
+    }
+    out.push_str("  ],\n");
+    out.push_str("  \"chunked_scaling\": [\n");
+    for (i, p) in scaling.iter().enumerate() {
+        out.push_str(&format!(
+            "    {{\"threads\": {}, \"comp_mbs\": {:.6}, \"decomp_mbs\": {:.6}, \
+             \"speedup\": {:.6}}}{}\n",
+            p.threads,
+            p.comp_mbs,
+            p.decomp_mbs,
+            p.speedup,
+            if i + 1 < scaling.len() { "," } else { "" }
+        ));
+    }
+    out.push_str("  ]\n}\n");
+    std::fs::write(path, out)
+}
+
 /// True when the benches should shrink workloads (smoke mode for CI):
 /// set `MGARDP_BENCH_SMOKE=1`.
 pub fn smoke_mode() -> bool {
@@ -374,6 +507,45 @@ mod tests {
         assert!(points.iter().all(|p| p.nblocks >= 1 && p.linf.is_finite()));
         // threshold >= 1 can never split the root: one block
         assert_eq!(points[1].nblocks, 1);
+    }
+
+    #[test]
+    fn hot_path_point_measures_both_paths() {
+        let t = crate::data::synth::smooth_test_field(&[17, 17, 17]);
+        let p = hot_path_point("test", &t, 1e-3, 0, 1).unwrap();
+        assert_eq!(p.shape, vec![17, 17, 17]);
+        assert!(p.staged_mbs > 0.0 && p.staged_mbs.is_finite());
+        assert!(p.fused_mbs > 0.0 && p.fused_mbs.is_finite());
+        assert!((p.speedup - p.fused_mbs / p.staged_mbs).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bench_json_schema_round_trip() {
+        let dir = std::env::temp_dir().join(format!("mgardp_bench_json_{}", std::process::id()));
+        let path = dir.join("BENCH_PR5.json");
+        let points = vec![HotPathPoint {
+            label: "syn\"thetic".to_string(),
+            shape: vec![9, 9],
+            staged_mbs: 10.0,
+            fused_mbs: 12.5,
+            speedup: 1.25,
+        }];
+        let scaling = vec![ChunkedScalingPoint {
+            threads: 2,
+            comp_secs: 0.5,
+            decomp_secs: 0.25,
+            comp_mbs: 20.0,
+            decomp_mbs: 40.0,
+            speedup: 1.8,
+            linf: 1e-4,
+        }];
+        write_bench_pr5_json(&path, "unit-test", true, &points, &scaling).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.contains("\"schema\": \"mgardp-bench-pr5-v1\""));
+        assert!(text.contains("\"smoke\": true"));
+        assert!(text.contains("\\\"")); // label escaping
+        assert!(text.contains("\"fused_mbs\": 12.500000"));
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -61,7 +61,10 @@ pub use container::{
     CHUNK_CONTAINER_VERSION_ADAPTIVE, TILING_POLICY_VARIANCE,
 };
 pub use partition::{intersect, partition, resolve_block_shape, Block};
-pub use pool::{effective_threads, parallel_map, parallel_map_ordered};
+pub use pool::{
+    effective_threads, parallel_map, parallel_map_ordered, parallel_map_ordered_with,
+    parallel_map_with,
+};
 
 use crate::compressors::{peek_method, Compressor, Method, Tolerance};
 use crate::error::{Error, Result};
@@ -221,13 +224,21 @@ impl<T: Scalar, C: Compressor<T> + Sync> Compressor<T> for ChunkedCompressor<C> 
             self.cfg.threads,
             |b| data.block(&b.start, &b.shape),
         )?;
-        let results = parallel_map(blocks.len(), self.cfg.threads, |i| {
-            let b = &blocks[i];
-            let sub = data.block(&b.start, &b.shape)?;
-            let bytes = self.inner.compress(&sub, Tolerance::Abs(tau))?;
-            let nlevels = Hierarchy::new(&b.shape, None)?.nlevels();
-            Ok((bytes, nlevels))
-        });
+        // one CodecScratch per worker: each worker reuses its warm buffers
+        // across every block it compresses (O(1) allocations per block in
+        // steady state; bit-transparent by the scratch contract)
+        let results = parallel_map_with(
+            blocks.len(),
+            self.cfg.threads,
+            crate::compressors::CodecScratch::<T>::new,
+            |scratch, i| {
+                let b = &blocks[i];
+                let sub = data.block(&b.start, &b.shape)?;
+                let bytes = self.inner.compress_scratch(&sub, Tolerance::Abs(tau), scratch)?;
+                let nlevels = Hierarchy::new(&b.shape, None)?.nlevels();
+                Ok((bytes, nlevels))
+            },
+        );
         let mut blobs = Vec::with_capacity(blocks.len());
         let mut entries = Vec::with_capacity(blocks.len());
         let mut offset = 0usize;

@@ -30,28 +30,53 @@ where
     T: Send,
     F: Fn(usize) -> Result<T> + Sync,
 {
+    parallel_map_with(n, threads, || (), |(), i| f(i))
+}
+
+/// [`parallel_map`] with per-worker state: every worker thread calls `init`
+/// once at spawn and passes the resulting value to each job it runs.
+///
+/// This is the scratch-reuse seam of the chunked pipeline: `init`
+/// constructs a [`crate::compressors::CodecScratch`] and a worker threads
+/// it through every block it compresses, so steady-state compression
+/// performs O(1) heap allocations per block no matter how many blocks a
+/// field has. State is strictly per-thread — jobs never observe another
+/// worker's state, and a job's result must not depend on state contents
+/// (scratch reuse is value-transparent by contract).
+pub fn parallel_map_with<T, S, I, F>(n: usize, threads: usize, init: I, f: F) -> Vec<Result<T>>
+where
+    T: Send,
+    I: Fn() -> S + Sync,
+    F: Fn(&mut S, usize) -> Result<T> + Sync,
+{
     let threads = effective_threads(threads, n);
     if n == 0 {
         return Vec::new();
     }
     if threads == 1 {
-        return (0..n).map(&f).collect();
+        let mut state = init();
+        return (0..n).map(|i| f(&mut state, i)).collect();
     }
     let next = AtomicUsize::new(0);
     let slots: Vec<Mutex<Option<Result<T>>>> = (0..n).map(|_| Mutex::new(None)).collect();
     std::thread::scope(|scope| {
         for _ in 0..threads {
-            scope.spawn(|| loop {
-                let i = next.fetch_add(1, Ordering::Relaxed);
-                if i >= n {
-                    break;
-                }
-                let outcome =
-                    std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(i)))
+            scope.spawn(|| {
+                let mut state = init();
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    let outcome =
+                        std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                            f(&mut state, i)
+                        }))
                         .unwrap_or_else(|_| {
                             Err(Error::Pipeline(format!("block job {i} panicked")))
                         });
-                *slots[i].lock().expect("pool slot poisoned") = Some(outcome);
+                    *slots[i].lock().expect("pool slot poisoned") = Some(outcome);
+                }
             });
         }
     });
@@ -93,11 +118,32 @@ pub fn parallel_map_ordered<T, F, G>(
     threads: usize,
     window: usize,
     f: F,
-    mut consume: G,
+    consume: G,
 ) -> Result<()>
 where
     T: Send,
     F: Fn(usize) -> Result<T> + Sync,
+    G: FnMut(usize, T) -> Result<()>,
+{
+    parallel_map_ordered_with(n, threads, window, || (), |(), i| f(i), consume)
+}
+
+/// [`parallel_map_ordered`] with per-worker state (see
+/// [`parallel_map_with`]): the streaming pipeline's scratch-reuse seam.
+/// `init` runs once per worker thread; the consumer stays stateless and on
+/// the calling thread.
+pub fn parallel_map_ordered_with<T, S, I, F, G>(
+    n: usize,
+    threads: usize,
+    window: usize,
+    init: I,
+    f: F,
+    mut consume: G,
+) -> Result<()>
+where
+    T: Send,
+    I: Fn() -> S + Sync,
+    F: Fn(&mut S, usize) -> Result<T> + Sync,
     G: FnMut(usize, T) -> Result<()>,
 {
     if n == 0 {
@@ -108,9 +154,13 @@ where
     if threads == 1 {
         // sequential fast path: one job in flight by construction; job
         // panics still surface as Error::Pipeline like on the parallel path
+        let mut state = init();
         for i in 0..n {
-            let v = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(i)))
-                .unwrap_or_else(|_| Err(Error::Pipeline(format!("block job {i} panicked"))))?;
+            let v =
+                std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&mut state, i)))
+                    .unwrap_or_else(|_| {
+                        Err(Error::Pipeline(format!("block job {i} panicked")))
+                    })?;
             consume(i, v)?;
         }
         return Ok(());
@@ -142,35 +192,43 @@ where
     }
     std::thread::scope(|scope| {
         for _ in 0..threads {
-            scope.spawn(|| loop {
-                let i = {
+            scope.spawn(|| {
+                let mut wstate = init();
+                loop {
+                    let i = {
+                        let mut s = state.lock().expect("ordered pool poisoned");
+                        loop {
+                            if s.error.is_some() || s.next >= n {
+                                return;
+                            }
+                            if s.next < s.consumed + window {
+                                s.next += 1;
+                                break s.next - 1;
+                            }
+                            s = cvar.wait(s).expect("ordered pool poisoned");
+                        }
+                    };
+                    let outcome =
+                        std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                            f(&mut wstate, i)
+                        }))
+                        .unwrap_or_else(|_| {
+                            Err(Error::Pipeline(format!("block job {i} panicked")))
+                        });
                     let mut s = state.lock().expect("ordered pool poisoned");
-                    loop {
-                        if s.error.is_some() || s.next >= n {
-                            return;
+                    match outcome {
+                        Ok(v) => {
+                            s.ready.insert(i, v);
                         }
-                        if s.next < s.consumed + window {
-                            s.next += 1;
-                            break s.next - 1;
-                        }
-                        s = cvar.wait(s).expect("ordered pool poisoned");
-                    }
-                };
-                let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(i)))
-                    .unwrap_or_else(|_| Err(Error::Pipeline(format!("block job {i} panicked"))));
-                let mut s = state.lock().expect("ordered pool poisoned");
-                match outcome {
-                    Ok(v) => {
-                        s.ready.insert(i, v);
-                    }
-                    Err(e) => {
-                        if s.error.is_none() {
-                            s.error = Some(e);
+                        Err(e) => {
+                            if s.error.is_none() {
+                                s.error = Some(e);
+                            }
                         }
                     }
+                    drop(s);
+                    cvar.notify_all();
                 }
-                drop(s);
-                cvar.notify_all();
             });
         }
         // consumer: this thread drains results in index order; the guard
@@ -369,6 +427,58 @@ mod tests {
                 Ok(())
             },
         );
+    }
+
+    #[test]
+    fn per_worker_state_reused_across_jobs() {
+        // `init` runs at most once per worker, and each worker's state
+        // accumulates across the jobs it ran — the scratch-reuse contract
+        let inits = AtomicUsize::new(0);
+        let out = parallel_map_with(
+            64,
+            4,
+            || {
+                inits.fetch_add(1, Ordering::SeqCst);
+                0usize
+            },
+            |seen, i| {
+                *seen += 1;
+                Ok((i, *seen))
+            },
+        );
+        assert!(inits.load(Ordering::SeqCst) <= 4, "init ran per job, not per worker");
+        let mut per_worker_jobs = 0usize;
+        for r in &out {
+            let (i, seen) = *r.as_ref().unwrap();
+            assert!(seen >= 1 && i < 64);
+            per_worker_jobs = per_worker_jobs.max(seen);
+        }
+        // 64 jobs over <= 4 workers: some worker ran at least 16
+        assert!(per_worker_jobs >= 64 / 4);
+
+        let ordered_inits = AtomicUsize::new(0);
+        let mut seen = Vec::new();
+        parallel_map_ordered_with(
+            40,
+            3,
+            4,
+            || {
+                ordered_inits.fetch_add(1, Ordering::SeqCst);
+                0usize
+            },
+            |count, i| {
+                *count += 1;
+                Ok(i)
+            },
+            |i, v| {
+                assert_eq!(i, v);
+                seen.push(i);
+                Ok(())
+            },
+        )
+        .unwrap();
+        assert_eq!(seen, (0..40).collect::<Vec<_>>());
+        assert!(ordered_inits.load(Ordering::SeqCst) <= 3);
     }
 
     #[test]

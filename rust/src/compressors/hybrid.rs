@@ -9,7 +9,7 @@
 
 use super::format::{Header, Method};
 use super::zfp::{decode_block_f64, encode_block_f64, intprec};
-use super::{Compressor, Tolerance};
+use super::{CodecScratch, Compressor, HybridScratch, Tolerance};
 use crate::encode::varint::{write_i64, write_section, write_u64, ByteReader};
 use crate::encode::{huffman_decode, huffman_encode, lossless_compress, lossless_decompress};
 use crate::encode::{BitReader, BitWriter};
@@ -99,25 +99,29 @@ fn lorenzo_pred<T: Scalar>(recon: &[T], idx: &[usize], strides: &[usize]) -> f64
     acc
 }
 
+/// Least-squares linear fit over the block; writes the `d + 1` coefficients
+/// (intercept first) into `out`. Allocation-free: the per-dim accumulators
+/// live on fixed-size stacks (`d <= 4`).
 fn fit_regression<T: Scalar>(
     data: &[T],
     strides: &[usize],
     origin: &[usize],
     bsize: &[usize],
-) -> Vec<f64> {
+    out: &mut [f64],
+) {
     let d = bsize.len();
+    debug_assert_eq!(out.len(), d + 1);
     let n: usize = bsize.iter().product();
-    let centers: Vec<f64> = bsize.iter().map(|&b| (b as f64 - 1.0) / 2.0).collect();
-    let vars: Vec<f64> = bsize
-        .iter()
-        .map(|&b| {
-            let c = (b as f64 - 1.0) / 2.0;
-            (0..b).map(|i| (i as f64 - c).powi(2)).sum::<f64>() / b as f64
-        })
-        .collect();
+    let mut centers = [0.0f64; 4];
+    let mut vars = [0.0f64; 4];
+    for (k, &b) in bsize.iter().enumerate() {
+        let c = (b as f64 - 1.0) / 2.0;
+        centers[k] = c;
+        vars[k] = (0..b).map(|i| (i as f64 - c).powi(2)).sum::<f64>() / b as f64;
+    }
     let mut mean = 0.0f64;
-    let mut cov = vec![0.0f64; d];
-    let mut idx = vec![0usize; d];
+    let mut cov = [0.0f64; 4];
+    let mut idx = [0usize; 4];
     for _ in 0..n {
         let mut off = 0;
         for k in 0..d {
@@ -137,7 +141,6 @@ fn fit_regression<T: Scalar>(
         }
     }
     mean /= n as f64;
-    let mut out = vec![0.0; d + 1];
     for k in 0..d {
         out[k + 1] = if vars[k] > 0.0 {
             cov[k] / (n as f64 * vars[k])
@@ -146,7 +149,6 @@ fn fit_regression<T: Scalar>(
         };
     }
     out[0] = mean - (0..d).map(|k| out[k + 1] * centers[k]).sum::<f64>();
-    out
 }
 
 fn reg_tau(tau: f64, d: usize) -> f64 {
@@ -159,12 +161,16 @@ fn code_cost(code: f64) -> f64 {
     (code.abs() + 1.0).log2() + 2.0
 }
 
-impl<T: Scalar> Compressor<T> for Hybrid {
-    fn name(&self) -> &'static str {
-        "HybridModel"
-    }
-
-    fn compress(&self, data: &Tensor<T>, tol: Tolerance) -> Result<Vec<u8>> {
+impl Hybrid {
+    /// Shared compress core; all large working buffers come from `ws`, the
+    /// small per-block index/coefficient vectors are hoisted out of the
+    /// block loop, so steady-state calls allocate O(1) times.
+    fn compress_impl<T: Scalar>(
+        &self,
+        data: &Tensor<T>,
+        tol: Tolerance,
+        ws: &mut HybridScratch<T>,
+    ) -> Result<Vec<u8>> {
         let tau = tol.absolute(data.value_range());
         if tau <= 0.0 {
             return Err(Error::invalid("tolerance must be positive"));
@@ -180,29 +186,47 @@ impl<T: Scalar> Compressor<T> for Hybrid {
         let prec = intprec::<T>();
         let rt = reg_tau(tau, d);
         let lorenzo_penalty = crate::adaptive::lorenzo_penalty_factor(d) * tau;
-        let mut recon = vec![T::ZERO; src.len()];
+        let recon = &mut ws.recon;
+        recon.clear();
+        recon.resize(src.len(), T::ZERO);
 
         let nblocks: Vec<usize> = shape.iter().map(|&n| n.div_ceil(EDGE)).collect();
         let total_blocks: usize = nblocks.iter().product();
         let size = EDGE.pow(d as u32);
 
-        let mut symbols: Vec<u32> = Vec::new();
-        let mut literals: Vec<u8> = Vec::new();
-        let mut flags: Vec<u8> = Vec::with_capacity(total_blocks);
-        let mut reg_codes: Vec<u8> = Vec::new();
+        let symbols = &mut ws.symbols;
+        symbols.clear();
+        let literals = &mut ws.literals;
+        literals.clear();
+        let flags = &mut ws.flags;
+        flags.clear();
+        flags.reserve(total_blocks);
+        let reg_codes = &mut ws.reg_codes;
+        reg_codes.clear();
         let mut tw = BitWriter::new(); // transform sub-stream
 
         let mut bidx = vec![0usize; d];
         let mut pt = vec![0usize; d];
-        let mut block = vec![0.0f64; size];
+        let block = &mut ws.block;
+        block.clear();
+        block.resize(size, 0.0);
+        // per-block index/coefficient buffers, allocated once per call
+        let mut origin = vec![0usize; d];
+        let mut bsize = vec![0usize; d];
+        let mut iidx = vec![0usize; d];
+        let mut i = vec![0usize; d];
+        let mut coeffs = vec![0.0f64; d + 1];
+        let mut qcoeffs = vec![0.0f64; d + 1];
         for _ in 0..total_blocks {
-            let origin: Vec<usize> = (0..d).map(|k| bidx[k] * EDGE).collect();
-            let bsize: Vec<usize> = (0..d).map(|k| EDGE.min(shape[k] - origin[k])).collect();
+            for k in 0..d {
+                origin[k] = bidx[k] * EDGE;
+                bsize[k] = EDGE.min(shape[k] - origin[k]);
+            }
             let bn: usize = bsize.iter().product();
 
             // gather the block (edge replication for partial blocks)
             {
-                let mut iidx = vec![0usize; d];
+                iidx.iter_mut().for_each(|x| *x = 0);
                 for item in block.iter_mut() {
                     let mut off = 0;
                     for k in 0..d {
@@ -221,15 +245,14 @@ impl<T: Scalar> Compressor<T> for Hybrid {
             }
 
             // --- candidate 1+2: prediction cost estimates ---
-            let coeffs = fit_regression(src, &strides, &origin, &bsize);
-            let qcoeffs: Vec<f64> = coeffs
-                .iter()
-                .map(|&c| (c / (2.0 * rt)).round() * 2.0 * rt)
-                .collect();
+            fit_regression(src, &strides, &origin, &bsize, &mut coeffs);
+            for (q, &c) in qcoeffs.iter_mut().zip(coeffs.iter()) {
+                *q = (c / (2.0 * rt)).round() * 2.0 * rt;
+            }
             let mut cost_lor = 0.0f64;
             let mut cost_reg = (d + 1) as f64 * 16.0; // coefficient overhead
             {
-                let mut i = vec![0usize; d];
+                i.iter_mut().for_each(|x| *x = 0);
                 for _ in 0..bn {
                     let mut off = 0;
                     for k in 0..d {
@@ -253,7 +276,7 @@ impl<T: Scalar> Compressor<T> for Hybrid {
             }
             // --- candidate 3: trial transform encoding (the costly step) ---
             let mut trial = BitWriter::new();
-            encode_block_f64(&block, d, tau, prec, &mut trial);
+            encode_block_f64(block, d, tau, prec, &mut trial);
             let trial_bits = trial.bit_len();
             let cost_tr = trial_bits as f64;
             let trial_bytes = trial.finish();
@@ -278,7 +301,7 @@ impl<T: Scalar> Compressor<T> for Hybrid {
                     for _ in 0..trial_bits {
                         tw.write_bit(tr2.read_bit().expect("trial length"));
                     }
-                    let mut iidx = vec![0usize; d];
+                    iidx.iter_mut().for_each(|x| *x = 0);
                     for &v in dec.iter() {
                         let mut off = 0;
                         let mut in_domain = true;
@@ -304,11 +327,11 @@ impl<T: Scalar> Compressor<T> for Hybrid {
                 }
                 Mode::Regression | Mode::Lorenzo => {
                     if mode == Mode::Regression {
-                        for &c in &coeffs {
-                            write_i64(&mut reg_codes, (c / (2.0 * rt)).round() as i64);
+                        for &c in coeffs.iter() {
+                            write_i64(reg_codes, (c / (2.0 * rt)).round() as i64);
                         }
                     }
-                    let mut i = vec![0usize; d];
+                    i.iter_mut().for_each(|x| *x = 0);
                     for _ in 0..bn {
                         let mut off = 0;
                         for k in 0..d {
@@ -320,7 +343,7 @@ impl<T: Scalar> Compressor<T> for Hybrid {
                             qcoeffs[0]
                                 + (0..d).map(|k| qcoeffs[k + 1] * i[k] as f64).sum::<f64>()
                         } else {
-                            lorenzo_pred(&recon, &pt, &strides)
+                            lorenzo_pred(recon, &pt, &strides)
                         };
                         let code = ((v - pred) / (2.0 * tau)).round();
                         let ok = code.is_finite() && code.abs() < (radius - 1) as f64;
@@ -335,7 +358,7 @@ impl<T: Scalar> Compressor<T> for Hybrid {
                         }
                         if !stored {
                             symbols.push(0);
-                            src[off].write_le(&mut literals);
+                            src[off].write_le(literals);
                             recon[off] = src[off];
                         }
                         for k in (0..d).rev() {
@@ -359,10 +382,10 @@ impl<T: Scalar> Compressor<T> for Hybrid {
         }
 
         let mut payload = Vec::new();
-        write_section(&mut payload, &flags);
-        write_section(&mut payload, &reg_codes);
-        write_section(&mut payload, &huffman_encode(&symbols));
-        write_section(&mut payload, &literals);
+        write_section(&mut payload, flags);
+        write_section(&mut payload, reg_codes);
+        write_section(&mut payload, &huffman_encode(symbols));
+        write_section(&mut payload, literals);
         write_section(&mut payload, &tw.finish());
         let compressed = lossless_compress(&payload, self.cfg.zstd_level)?;
 
@@ -377,6 +400,25 @@ impl<T: Scalar> Compressor<T> for Hybrid {
         write_u64(&mut out, payload.len() as u64);
         out.extend_from_slice(&compressed);
         Ok(out)
+    }
+}
+
+impl<T: Scalar> Compressor<T> for Hybrid {
+    fn name(&self) -> &'static str {
+        "HybridModel"
+    }
+
+    fn compress(&self, data: &Tensor<T>, tol: Tolerance) -> Result<Vec<u8>> {
+        self.compress_impl(data, tol, &mut HybridScratch::default())
+    }
+
+    fn compress_scratch(
+        &self,
+        data: &Tensor<T>,
+        tol: Tolerance,
+        scratch: &mut CodecScratch<T>,
+    ) -> Result<Vec<u8>> {
+        self.compress_impl(data, tol, &mut scratch.hybrid)
     }
 
     fn decompress(&self, bytes: &[u8]) -> Result<Tensor<T>> {

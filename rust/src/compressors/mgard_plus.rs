@@ -13,9 +13,9 @@
 //! [`ExternalChoice`].
 
 use super::format::{Header, Method};
-use super::{Compressor, Hybrid, Sz, Tolerance, Zfp};
+use super::{CodecScratch, Compressor, Hybrid, Sz, Tolerance, Zfp};
 use crate::adaptive::estimate_predictors;
-use crate::decompose::{contiguous, Decomposer, Decomposition, OptFlags};
+use crate::decompose::{contiguous, fused, Decomposer, Decomposition, OptFlags};
 use crate::encode::varint::{write_section, write_u64, ByteReader};
 use crate::encode::{huffman_decode, huffman_encode, lossless_compress, lossless_decompress};
 use crate::error::{Error, Result};
@@ -194,6 +194,15 @@ impl<T: Scalar> Compressor<T> for MgardPlus {
     }
 
     fn compress(&self, data: &Tensor<T>, tol: Tolerance) -> Result<Vec<u8>> {
+        self.compress_scratch(data, tol, &mut CodecScratch::new())
+    }
+
+    fn compress_scratch(
+        &self,
+        data: &Tensor<T>,
+        tol: Tolerance,
+        ws: &mut CodecScratch<T>,
+    ) -> Result<Vec<u8>> {
         let tau = tol.absolute(data.value_range());
         if tau <= 0.0 {
             return Err(Error::invalid("tolerance must be positive"));
@@ -234,10 +243,45 @@ impl<T: Scalar> Compressor<T> for MgardPlus {
                 );
             }
         }
+
+        // --- fused single pass (decompose→quantize, §5-style fusion) ---
+        // The tier schedule depends on the stop level, so the fused path
+        // requires it static: adaptive termination off means stop == 0 and
+        // every level's tolerance is known before the first step. Output
+        // bytes are bit-identical to the staged path below (differential
+        // suite in rust/tests/decompose_equivalence.rs).
+        if self.cfg.flags.fused && !self.cfg.adaptive {
+            let tiers = self.tiers(ll + 1, d, tau);
+            let padded = hierarchy.pad(data)?;
+            let coarse = fused::decompose_quantize(
+                &hierarchy,
+                self.cfg.flags,
+                padded,
+                &tiers,
+                &mut ws.decompose,
+                &mut ws.fused,
+            );
+            let external_bytes = self.cfg.external.compress(&coarse, tiers[0])?;
+            return finish_container::<T>(
+                data.shape(),
+                tau,
+                &self.cfg,
+                0,
+                &external_bytes,
+                &ws.fused.merged,
+            );
+        }
+
+        // --- staged path (adaptive termination interleaved) ---
+        // Per-level coefficient streams come from the scratch pool, so the
+        // steady-state allocation count stays O(1) per call here too.
         let padded = hierarchy.pad(data)?;
         let mut cur = padded.into_vec();
         let mut shape = hierarchy.padded_shape().to_vec();
-        let mut streams_rev: Vec<Vec<T>> = Vec::new();
+        while ws.streams.len() < ll {
+            ws.streams.push(Vec::new());
+        }
+        let mut nsteps = 0usize;
         let mut stop = 0usize;
         for l in (1..=ll).rev() {
             if self.cfg.adaptive && l < ll {
@@ -252,23 +296,31 @@ impl<T: Scalar> Compressor<T> for MgardPlus {
                     break;
                 }
             }
-            let (coarse, cshape, coeffs) =
-                contiguous::step_decompose(cur, &shape, self.cfg.flags, hierarchy.spacing(l));
-            streams_rev.push(coeffs);
-            cur = coarse;
-            shape = cshape;
+            let sink = &mut ws.streams[nsteps];
+            sink.clear();
+            shape = contiguous::step_decompose_into(
+                &mut cur,
+                &shape,
+                self.cfg.flags,
+                hierarchy.spacing(l),
+                &mut ws.decompose,
+                sink,
+            );
+            nsteps += 1;
         }
-        streams_rev.reverse();
         let coarse = Tensor::from_vec(&shape, cur)?;
 
         // --- level-wise quantization + external coarse compression ---
         let tiers = self.tiers(ll + 1 - stop, d, tau);
         let external_bytes = self.cfg.external.compress(&coarse, tiers[0])?;
-        let mut qs = QuantStream::default();
-        for (i, stream) in streams_rev.iter().enumerate() {
-            quantize(stream, tiers[i + 1], &mut qs);
+        ws.qs.symbols.clear();
+        ws.qs.escapes.clear();
+        // streams were collected finest-first; the container stores them
+        // coarsest level first
+        for (i, idx) in (0..nsteps).rev().enumerate() {
+            quantize(&ws.streams[idx], tiers[i + 1], &mut ws.qs);
         }
-        finish_container::<T>(data.shape(), tau, &self.cfg, stop, &external_bytes, &qs)
+        finish_container::<T>(data.shape(), tau, &self.cfg, stop, &external_bytes, &ws.qs)
     }
 
     fn decompress(&self, bytes: &[u8]) -> Result<Tensor<T>> {

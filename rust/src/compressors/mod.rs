@@ -11,6 +11,7 @@ mod format;
 mod hybrid;
 mod mgard;
 mod mgard_plus;
+mod scratch;
 mod sz;
 mod zfp;
 
@@ -18,8 +19,11 @@ pub use format::{peek_method, Header, Method, MAX_HEADER_NUMEL};
 pub use hybrid::{Hybrid, HybridConfig};
 pub use mgard::{Mgard, MgardConfig};
 pub use mgard_plus::{ExternalChoice, MgardPlus, MgardPlusConfig};
+pub use scratch::CodecScratch;
 pub use sz::{Sz, SzConfig};
 pub use zfp::{Zfp, ZfpConfig};
+
+pub(crate) use scratch::HybridScratch;
 
 use crate::error::Result;
 use crate::tensor::{Scalar, Tensor};
@@ -53,6 +57,26 @@ pub trait Compressor<T: Scalar> {
 
     /// Compress `data` with the given L∞ tolerance.
     fn compress(&self, data: &Tensor<T>, tol: Tolerance) -> Result<Vec<u8>>;
+
+    /// Compress `data`, reusing `scratch` for internal working memory.
+    ///
+    /// Semantics and output bytes are **identical** to
+    /// [`Compressor::compress`]; implementations that override this (the
+    /// MGARD+ and hybrid hot paths) only avoid re-allocating workspace, so
+    /// a caller compressing many blocks — the chunk worker pool, the
+    /// streaming pipeline — threads one [`CodecScratch`] per worker
+    /// through every call and gets O(1) steady-state allocations per
+    /// block. The default ignores the scratch and delegates to
+    /// `compress`.
+    fn compress_scratch(
+        &self,
+        data: &Tensor<T>,
+        tol: Tolerance,
+        scratch: &mut CodecScratch<T>,
+    ) -> Result<Vec<u8>> {
+        let _ = scratch;
+        self.compress(data, tol)
+    }
 
     /// Decompress a container produced by this compressor.
     fn decompress(&self, bytes: &[u8]) -> Result<Tensor<T>>;

@@ -1,0 +1,96 @@
+//! Per-worker codec workspace.
+//!
+//! [`CodecScratch`] bundles every reusable buffer the compressors need —
+//! the contiguous engine's [`DecomposeScratch`], the fused quantizer
+//! stream pool, the staged per-level coefficient pool, and the hybrid
+//! model's reconstruction/stream buffers — so one allocation-warm
+//! workspace can be threaded through an arbitrary number of
+//! [`super::Compressor::compress_scratch`] calls.
+//!
+//! The chunk worker pool ([`crate::chunk`]) and the streaming pipeline
+//! ([`crate::stream`]) create **one scratch per worker thread** and pass
+//! it to every block that worker compresses; after the first few blocks
+//! warm the buffers to their high-water mark, steady-state compression
+//! performs O(1) heap allocations per block (enforced by
+//! `rust/tests/alloc_budget.rs`).
+//!
+//! # Invariants
+//!
+//! * Reuse is value-transparent: compressing through a reused scratch
+//!   yields bytes identical to a fresh one (differential-tested).
+//! * A scratch carries no inter-call data dependencies, only capacity (and
+//!   Thomas factorizations, which are pure functions of line length).
+//! * A scratch is single-threaded state: one per worker, never shared.
+
+use crate::decompose::fused::FusedStreams;
+use crate::decompose::DecomposeScratch;
+use crate::quant::QuantStream;
+use crate::tensor::Scalar;
+
+/// Reusable buffers of the hybrid model's block loop.
+pub(crate) struct HybridScratch<T: Scalar> {
+    /// Running reconstruction (later Lorenzo predictions read it).
+    pub(crate) recon: Vec<T>,
+    /// Quantization symbols of the prediction modes.
+    pub(crate) symbols: Vec<u32>,
+    /// Escaped literal values.
+    pub(crate) literals: Vec<u8>,
+    /// Per-block mode flags.
+    pub(crate) flags: Vec<u8>,
+    /// Quantized regression coefficients.
+    pub(crate) reg_codes: Vec<u8>,
+    /// Gathered 4^d block values.
+    pub(crate) block: Vec<f64>,
+}
+
+// manual `Default` impls: a derive would add a spurious `T: Default` bound
+// the generic `T: Scalar` call sites (chunk/stream workers) cannot meet
+impl<T: Scalar> Default for HybridScratch<T> {
+    fn default() -> Self {
+        HybridScratch {
+            recon: Vec::new(),
+            symbols: Vec::new(),
+            literals: Vec::new(),
+            flags: Vec::new(),
+            reg_codes: Vec::new(),
+            block: Vec::new(),
+        }
+    }
+}
+
+/// Reusable workspace for [`super::Compressor::compress_scratch`].
+///
+/// See the module docs for the reuse contract. Constructing one is cheap
+/// (all buffers start empty); the win comes from passing the *same*
+/// scratch to many calls.
+pub struct CodecScratch<T: Scalar> {
+    /// Contiguous-engine workspace (sweeps, corrections, compactions).
+    pub(crate) decompose: DecomposeScratch<T>,
+    /// Fused-path per-level + merged quantizer streams.
+    pub(crate) fused: FusedStreams,
+    /// Staged-path per-level coefficient stream pool (adaptive mode).
+    pub(crate) streams: Vec<Vec<T>>,
+    /// Staged-path merged symbol/escape stream.
+    pub(crate) qs: QuantStream,
+    /// Hybrid-model buffers.
+    pub(crate) hybrid: HybridScratch<T>,
+}
+
+impl<T: Scalar> Default for CodecScratch<T> {
+    fn default() -> Self {
+        CodecScratch {
+            decompose: DecomposeScratch::default(),
+            fused: FusedStreams::default(),
+            streams: Vec::new(),
+            qs: QuantStream::default(),
+            hybrid: HybridScratch::default(),
+        }
+    }
+}
+
+impl<T: Scalar> CodecScratch<T> {
+    /// Fresh, empty workspace.
+    pub fn new() -> Self {
+        CodecScratch::default()
+    }
+}

@@ -6,17 +6,26 @@
 //! `N_l` (the de-interleaving view of §5.1): coefficient computation and
 //! correction run cache-coherently, then the nodal nodes are compacted into
 //! a new contiguous array for the next level while the coefficient nodes are
-//! emitted to the output stream.
+//! emitted to a [`CoeffSink`] — a `Vec` for the staged path, or the
+//! level-wise quantizer directly for the fused decompose→quantize hot path
+//! (see [`super::fused`]).
+//!
+//! All intermediate buffers (Thomas factorizations, sweep ping-pong arrays,
+//! level/coarse compaction buffers, gather/scatter columns) live in a
+//! [`DecomposeScratch`] that is allocated once and reused across levels,
+//! calls and — via the chunk worker pool — across blocks, so steady-state
+//! compression performs O(1) heap allocations per block.
 
 use super::sweeps::{load_direct, load_mass_restrict, thomas_solve_fresh, ThomasAux};
-use super::{Decomposition, OptFlags};
+use super::{CoeffSink, Decomposition, OptFlags};
 use crate::error::Result;
 use crate::grid::Hierarchy;
 use crate::tensor::{numel, Scalar, Tensor};
 use std::collections::BTreeMap;
 
-/// Per-decomposition scratch: Thomas factorizations keyed by coarse length
-/// (IVER's precomputed auxiliary arrays, shared across levels and dims).
+/// Thomas factorizations keyed by coarse length (IVER's precomputed
+/// auxiliary arrays, shared across levels, dims, and — through
+/// [`DecomposeScratch`] — across blocks).
 struct AuxCache<T: Scalar> {
     map: BTreeMap<usize, ThomasAux<T>>,
 }
@@ -29,6 +38,77 @@ impl<T: Scalar> AuxCache<T> {
     }
     fn get(&mut self, n: usize) -> &ThomasAux<T> {
         self.map.entry(n).or_insert_with(|| ThomasAux::new(n, 1.0))
+    }
+}
+
+/// Column gather/scatter and per-line buffers of the strided (pre-BCC)
+/// sweep paths.
+struct LineBufs<T: Scalar> {
+    col_in: Vec<T>,
+    col_out: Vec<T>,
+    mass: Vec<T>,
+}
+
+impl<T: Scalar> LineBufs<T> {
+    fn new() -> Self {
+        LineBufs {
+            col_in: Vec::new(),
+            col_out: Vec::new(),
+            mass: Vec::new(),
+        }
+    }
+}
+
+/// Reusable workspace of the contiguous engine.
+///
+/// One scratch serves any number of sequential [`decompose_scratch`] /
+/// [`recompose_scratch`] / [`step_decompose_into`] calls, on any shapes and
+/// scalar streams of the same `T`; buffers grow to the high-water mark and
+/// are reused, so a chunk worker that threads one scratch through every
+/// block it compresses performs O(1) heap allocations per block in steady
+/// state.
+///
+/// # Invariants
+///
+/// * Reuse is **value-transparent**: the transform output is bit-identical
+///   whether a scratch is fresh, reused across levels, or reused across
+///   unrelated fields/blocks (enforced by `rust/tests/alloc_budget.rs` and
+///   the differential suite in `rust/tests/decompose_equivalence.rs`).
+/// * The scratch carries no data dependencies between calls — only
+///   capacity and the [`ThomasAux`] factorizations, which are pure
+///   functions of the line length.
+/// * A scratch is single-threaded state: share one per worker, never one
+///   across workers.
+pub struct DecomposeScratch<T: Scalar> {
+    aux: AuxCache<T>,
+    /// Sweep ping-pong buffers; `correction` leaves its result in `work_a`.
+    work_a: Vec<T>,
+    work_b: Vec<T>,
+    /// Coarse compaction buffer of `split_level`, swapped with the level
+    /// array each step.
+    coarse: Vec<T>,
+    /// Fine-level buffer of the recomposition side (scatter + merge).
+    level: Vec<T>,
+    lines: LineBufs<T>,
+}
+
+impl<T: Scalar> DecomposeScratch<T> {
+    /// Fresh, empty workspace.
+    pub fn new() -> Self {
+        DecomposeScratch {
+            aux: AuxCache::new(),
+            work_a: Vec::new(),
+            work_b: Vec::new(),
+            coarse: Vec::new(),
+            level: Vec::new(),
+            lines: LineBufs::new(),
+        }
+    }
+}
+
+impl<T: Scalar> Default for DecomposeScratch<T> {
+    fn default() -> Self {
+        DecomposeScratch::new()
     }
 }
 
@@ -231,14 +311,15 @@ fn unresidual_pass_generic<T: Scalar>(data: &mut [T], shape: &[usize]) {
     }
 }
 
-/// Copy of the level array with nodal positions zeroed: the multilevel
-/// component `e = (I - Π) Q_l u`, which is zero on `N_{l-1}`.
-fn multilevel_component<T: Scalar>(data: &[T], shape: &[usize]) -> Vec<T> {
+/// Fill `out` with a copy of the level array whose nodal positions are
+/// zeroed: the multilevel component `e = (I - Π) Q_l u`, zero on `N_{l-1}`.
+fn multilevel_component<T: Scalar>(data: &[T], shape: &[usize], out: &mut Vec<T>) {
     let active = active_dims(shape);
     let d = shape.len();
-    let mut e = data.to_vec();
+    out.clear();
+    out.extend_from_slice(data);
     let mut idx = vec![0usize; d];
-    for item in e.iter_mut() {
+    for item in out.iter_mut() {
         let nodal = (0..d).all(|k| !active[k] || idx[k] % 2 == 0);
         if nodal {
             *item = T::ZERO;
@@ -251,36 +332,39 @@ fn multilevel_component<T: Scalar>(data: &[T], shape: &[usize]) -> Vec<T> {
             idx[k] = 0;
         }
     }
-    e
 }
 
-/// Load sweep along `dim`: consumes an array of `shape`, returns the array
-/// with `shape[dim]` halved (load vector contributions along that dim).
+/// Load sweep along `dim`: consumes an array of `shape`, fills `out` with
+/// the array whose `shape[dim]` is halved (load vector contributions along
+/// that dim) and returns the halved shape. Every element of `out` is
+/// overwritten.
 fn load_sweep<T: Scalar>(
     input: &[T],
     shape: &[usize],
     dim: usize,
     flags: OptFlags,
     h: f64,
-) -> (Vec<T>, Vec<usize>) {
+    out: &mut Vec<T>,
+    lines: &mut LineBufs<T>,
+) -> Vec<usize> {
     let n = shape[dim];
     let nc = (n + 1) / 2;
     let outer: usize = shape[..dim].iter().product();
     let inner: usize = shape[dim + 1..].iter().product();
     let mut out_shape = shape.to_vec();
     out_shape[dim] = nc;
-    let mut out = vec![T::ZERO; outer * nc * inner];
+    out.clear();
+    out.resize(outer * nc * inner, T::ZERO);
 
     if inner == 1 {
         // contiguous lines along the last dim
-        let mut scratch = Vec::new();
         for o in 0..outer {
             let line = &input[o * n..(o + 1) * n];
             let dst = &mut out[o * nc..(o + 1) * nc];
             if flags.direct_load {
                 load_direct(line, dst, h);
             } else {
-                load_mass_restrict(line, dst, h, &mut scratch);
+                load_mass_restrict(line, dst, h, &mut lines.mass);
             }
         }
     } else if flags.batched {
@@ -326,28 +410,29 @@ fn load_sweep<T: Scalar>(
         }
     } else {
         // column-at-a-time with strided gather/scatter (the pre-BCC pattern)
-        let mut col_in = vec![T::ZERO; n];
-        let mut col_out = vec![T::ZERO; nc];
-        let mut scratch = Vec::new();
+        lines.col_in.clear();
+        lines.col_in.resize(n, T::ZERO);
+        lines.col_out.clear();
+        lines.col_out.resize(nc, T::ZERO);
         for o in 0..outer {
             let src_base = o * n * inner;
             let dst_base = o * nc * inner;
             for j in 0..inner {
                 for i in 0..n {
-                    col_in[i] = input[src_base + i * inner + j];
+                    lines.col_in[i] = input[src_base + i * inner + j];
                 }
                 if flags.direct_load {
-                    load_direct(&col_in, &mut col_out, h);
+                    load_direct(&lines.col_in, &mut lines.col_out, h);
                 } else {
-                    load_mass_restrict(&col_in, &mut col_out, h, &mut scratch);
+                    load_mass_restrict(&lines.col_in, &mut lines.col_out, h, &mut lines.mass);
                 }
                 for i in 0..nc {
-                    out[dst_base + i * inner + j] = col_out[i];
+                    out[dst_base + i * inner + j] = lines.col_out[i];
                 }
             }
         }
     }
-    (out, out_shape)
+    out_shape
 }
 
 /// Tridiagonal mass solve along `dim` (in place).
@@ -358,13 +443,14 @@ fn mass_solve<T: Scalar>(
     flags: OptFlags,
     h: f64,
     aux: &mut AuxCache<T>,
+    lines: &mut LineBufs<T>,
 ) {
     let n = shape[dim];
     let outer: usize = shape[..dim].iter().product();
     let inner: usize = shape[dim + 1..].iter().product();
     if inner == 1 {
         if flags.reuse {
-            let a = aux.get(n).clone();
+            let a = aux.get(n);
             for o in 0..outer {
                 a.solve(&mut data[o * n..(o + 1) * n]);
             }
@@ -375,7 +461,7 @@ fn mass_solve<T: Scalar>(
         }
     } else if flags.batched {
         if flags.reuse {
-            let a = aux.get(n).clone();
+            let a = aux.get(n);
             for o in 0..outer {
                 a.solve_batch(&mut data[o * n * inner..(o + 1) * n * inner], inner);
             }
@@ -386,7 +472,9 @@ fn mass_solve<T: Scalar>(
             }
         }
     } else {
-        let mut col = vec![T::ZERO; n];
+        let col = &mut lines.col_in;
+        col.clear();
+        col.resize(n, T::ZERO);
         for o in 0..outer {
             let base = o * n * inner;
             for j in 0..inner {
@@ -394,9 +482,9 @@ fn mass_solve<T: Scalar>(
                     col[i] = data[base + i * inner + j];
                 }
                 if flags.reuse {
-                    aux.get(n).solve(&mut col);
+                    aux.get(n).solve(col);
                 } else {
-                    thomas_solve_fresh(&mut col, h);
+                    thomas_solve_fresh(col, h);
                 }
                 for i in 0..n {
                     data[base + i * inner + j] = col[i];
@@ -410,19 +498,22 @@ fn mass_solve<T: Scalar>(
 /// array directly (even-everywhere entries are implicitly zero) and sweeps
 /// along the *last* (contiguous) dimension. This is the IVER elimination of
 /// the intermediate multilevel-component array (§5.4): one full-array copy
-/// and one full-array write vanish.
+/// and one full-array write vanish. Fills `out` (every element overwritten)
+/// and returns the halved shape.
 fn load_sweep_last_masked<T: Scalar>(
     input: &[T],
     shape: &[usize],
     active: &[bool],
-) -> (Vec<T>, Vec<usize>) {
+    out: &mut Vec<T>,
+) -> Vec<usize> {
     let d = shape.len();
     let n = shape[d - 1];
     let nc = (n + 1) / 2;
     let outer: usize = shape[..d - 1].iter().product();
     let mut out_shape = shape.to_vec();
     out_shape[d - 1] = nc;
-    let mut out = vec![T::ZERO; outer * nc];
+    out.clear();
+    out.resize(outer * nc, T::ZERO);
     let wo = T::from_f64(1.0 / 12.0);
     let wm = T::from_f64(0.5);
     let wc = T::from_f64(5.0 / 6.0);
@@ -461,104 +552,105 @@ fn load_sweep_last_masked<T: Scalar>(
             idx[k] = 0;
         }
     }
-    (out, out_shape)
+    out_shape
 }
 
 /// Compute the correction `Q_{l-1}(I-Π)Q_l u` from the residualized level
-/// array: load sweeps along every active dim, then mass solves.
+/// array: load sweeps along every active dim, then mass solves. The result
+/// is left in `s.work_a`; its shape is returned.
 fn correction<T: Scalar>(
     level_data: &[T],
     shape: &[usize],
     flags: OptFlags,
     h_level: f64,
-    aux: &mut AuxCache<T>,
-) -> (Vec<T>, Vec<usize>) {
+    s: &mut DecomposeScratch<T>,
+) -> Vec<usize> {
     let active = active_dims(shape);
     let d = shape.len();
     // the h factors cancel against the mass solve; the non-IVER path carries
     // them through both stages like the original implementation
     let h = if flags.reuse { 1.0 } else { h_level };
-    let mut work;
+    // ping-pong between the two sweep buffers; `a` always holds the latest
+    let mut a = std::mem::take(&mut s.work_a);
+    let mut b = std::mem::take(&mut s.work_b);
     let mut wshape;
     if flags.reuse && flags.direct_load && active[d - 1] {
         // IVER fast path: fused mask + last-dim sweep, no e-copy
-        let (w, s) = load_sweep_last_masked(level_data, shape, &active);
-        work = w;
-        wshape = s;
+        wshape = load_sweep_last_masked(level_data, shape, &active, &mut a);
         for k in 0..d - 1 {
             if active[k] {
-                let (w, s) = load_sweep(&work, &wshape, k, flags, h);
-                work = w;
-                wshape = s;
+                wshape = load_sweep(&a, &wshape, k, flags, h, &mut b, &mut s.lines);
+                std::mem::swap(&mut a, &mut b);
             }
         }
     } else {
-        work = multilevel_component(level_data, shape);
+        multilevel_component(level_data, shape, &mut a);
         wshape = shape.to_vec();
         for k in 0..d {
             if active[k] {
-                let (w, s) = load_sweep(&work, &wshape, k, flags, h);
-                work = w;
-                wshape = s;
+                wshape = load_sweep(&a, &wshape, k, flags, h, &mut b, &mut s.lines);
+                std::mem::swap(&mut a, &mut b);
             }
         }
     }
     for k in 0..d {
         if active[k] {
-            mass_solve(&mut work, &wshape, k, flags, h, aux);
+            mass_solve(&mut a, &wshape, k, flags, h, &mut s.aux, &mut s.lines);
         }
     }
-    (work, wshape)
+    s.work_a = a;
+    s.work_b = b;
+    wshape
 }
 
 /// Correction of a given multilevel component in isolation (exposed for the
 /// §4.2.2 penalty-factor calibration, which measures the statistical spread
 /// of corrections induced by coefficient-node noise).
 pub(crate) fn correction_of_component(e: &[f64], shape: &[usize], flags: OptFlags) -> Vec<f64> {
-    let mut aux = AuxCache::new();
-    let (corr, _) = correction(e, shape, flags, 1.0, &mut aux);
-    corr
+    let mut s = DecomposeScratch::new();
+    let _ = correction(e, shape, flags, 1.0, &mut s);
+    s.work_a
 }
 
-/// De-interleave one level: returns (coarse contiguous array, coefficient
-/// stream in canonical order). `corr` is the correction to add to the nodal
-/// values.
-fn split_level<T: Scalar>(
+/// De-interleave one level: compact the nodal values (plus correction) into
+/// `coarse` and emit the coefficient nodes to `sink` in canonical
+/// (row-major) order. `corr` is the correction on grid `cshape`.
+fn split_level<T: Scalar, S: CoeffSink<T> + ?Sized>(
     data: &[T],
     shape: &[usize],
     corr: &[T],
     cshape: &[usize],
-) -> (Vec<T>, Vec<T>) {
+    coarse: &mut Vec<T>,
+    sink: &mut S,
+) {
     let active = active_dims(shape);
     let d = shape.len();
     let n = shape[d - 1];
     let last_active = active[d - 1];
     let outer: usize = shape[..d - 1].iter().product();
-    let mut coarse = vec![T::ZERO; numel(cshape)];
-    let mut coeffs = Vec::with_capacity(numel(shape) - numel(cshape));
+    coarse.clear();
     let mut idx = vec![0usize; d.saturating_sub(1)];
-    let mut cflat = 0usize;
     // line-at-a-time: a whole z-line is coefficient data unless every other
     // active dim is even; the canonical (row-major) order is preserved
     for o in 0..outer {
         let others_even = (0..d - 1).all(|k| !active[k] || idx[k] % 2 == 0);
         let line = &data[o * n..(o + 1) * n];
         if !others_even {
-            coeffs.extend_from_slice(line);
+            sink.run(line);
         } else if last_active {
             for (z, &v) in line.iter().enumerate() {
                 if z % 2 == 0 {
-                    coarse[cflat] = v + corr[cflat];
-                    cflat += 1;
+                    let cflat = coarse.len();
+                    coarse.push(v + corr[cflat]);
                 } else {
-                    coeffs.push(v);
+                    sink.push(v);
                 }
             }
         } else {
             // last dim bottomed out: the whole line is nodal
             for &v in line {
-                coarse[cflat] = v + corr[cflat];
-                cflat += 1;
+                let cflat = coarse.len();
+                coarse.push(v + corr[cflat]);
             }
         }
         for k in (0..d - 1).rev() {
@@ -569,25 +661,27 @@ fn split_level<T: Scalar>(
             idx[k] = 0;
         }
     }
-    debug_assert_eq!(cflat, numel(cshape));
-    (coarse, coeffs)
+    debug_assert_eq!(coarse.len(), numel(cshape));
 }
 
 /// Inverse of [`split_level`]: interleave coarse (minus correction) and
-/// coefficients back into a fine contiguous array, then add interpolants.
+/// coefficients back into the fine contiguous array `fine`, then add
+/// interpolants. Every element of `fine` is overwritten.
 fn merge_level<T: Scalar>(
     coarse: &[T],
     cshape: &[usize],
     coeffs: &[T],
     shape: &[usize],
     corr: &[T],
-) -> Vec<T> {
+    fine: &mut Vec<T>,
+) {
     let active = active_dims(shape);
     let d = shape.len();
     let n = shape[d - 1];
     let last_active = active[d - 1];
     let outer: usize = shape[..d - 1].iter().product();
-    let mut fine = vec![T::ZERO; numel(shape)];
+    fine.clear();
+    fine.resize(numel(shape), T::ZERO);
     let mut idx = vec![0usize; d.saturating_sub(1)];
     let mut cflat = 0usize;
     let mut kflat = 0usize;
@@ -624,49 +718,67 @@ fn merge_level<T: Scalar>(
     debug_assert_eq!(cflat, numel(cshape));
     debug_assert_eq!(kflat, coeffs.len());
     // coefficient nodes: residual + interpolant of (now final) nodal values
-    unresidual_pass(&mut fine, shape);
-    fine
+    unresidual_pass(fine, shape);
 }
 
-/// One decomposition step on a contiguous level array: returns
-/// `(coarse, coarse_shape, coefficient_stream)`. Exposed so Algorithm 1's
-/// adaptive loop (compressors::mgard_plus) can interleave termination checks
-/// between levels.
-pub(crate) fn step_decompose<T: Scalar>(
-    cur: Vec<T>,
+/// One decomposition step on a contiguous level array, in place: `cur` is
+/// replaced by the coarse representation, the step's coefficient stream is
+/// emitted to `sink` in canonical order, and the coarse shape is returned.
+/// Exposed so Algorithm 1's adaptive loop (`compressors::mgard_plus`) can
+/// interleave termination checks between levels, and so the fused
+/// decompose→quantize path ([`super::fused`]) can plug the quantizer in as
+/// the sink.
+pub(crate) fn step_decompose_into<T: Scalar, S: CoeffSink<T> + ?Sized>(
+    cur: &mut Vec<T>,
     shape: &[usize],
     flags: OptFlags,
     h_level: f64,
-) -> (Vec<T>, Vec<usize>, Vec<T>) {
-    let mut aux = AuxCache::new();
-    let mut cur = cur;
-    residual_pass(&mut cur, shape);
-    let (corr, cshape) = correction(&cur, shape, flags, h_level, &mut aux);
-    let (coarse, coeffs) = split_level(&cur, shape, &corr, &cshape);
-    (coarse, cshape, coeffs)
+    s: &mut DecomposeScratch<T>,
+    sink: &mut S,
+) -> Vec<usize> {
+    residual_pass(cur, shape);
+    let cshape = correction(cur, shape, flags, h_level, s);
+    let mut coarse = std::mem::take(&mut s.coarse);
+    split_level(cur, shape, &s.work_a, &cshape, &mut coarse, sink);
+    std::mem::swap(cur, &mut coarse);
+    // the old fine array becomes the next step's compaction buffer
+    s.coarse = coarse;
+    cshape
 }
 
-/// Full decomposition with the contiguous engine.
+/// Full decomposition with the contiguous engine (fresh scratch).
 pub(crate) fn decompose<T: Scalar>(
     hierarchy: &Hierarchy,
     flags: OptFlags,
     padded: Tensor<T>,
     stop_level: usize,
 ) -> Decomposition<T> {
+    let mut scratch = DecomposeScratch::new();
+    decompose_scratch(hierarchy, flags, padded, stop_level, &mut scratch)
+}
+
+/// Full decomposition with the contiguous engine, reusing `scratch`.
+///
+/// The per-level coefficient streams escape into the returned
+/// [`Decomposition`], so they are freshly allocated; every *internal*
+/// buffer (sweeps, corrections, compaction) comes from `scratch`.
+pub(crate) fn decompose_scratch<T: Scalar>(
+    hierarchy: &Hierarchy,
+    flags: OptFlags,
+    padded: Tensor<T>,
+    stop_level: usize,
+    scratch: &mut DecomposeScratch<T>,
+) -> Decomposition<T> {
     let ll = hierarchy.nlevels();
-    let mut aux = AuxCache::new();
     let mut cur = padded.into_vec();
     let mut shape = hierarchy.padded_shape().to_vec();
     // streams collected finest-first, then reversed into level order
     let mut streams_rev: Vec<Vec<T>> = Vec::with_capacity(ll - stop_level);
     for l in ((stop_level + 1)..=ll).rev() {
         let h_level = hierarchy.spacing(l);
-        residual_pass(&mut cur, &shape);
-        let (corr, cshape) = correction(&cur, &shape, flags, h_level, &mut aux);
-        let (coarse, coeffs) = split_level(&cur, &shape, &corr, &cshape);
+        let mut coeffs: Vec<T> = Vec::new();
+        shape = step_decompose_into(&mut cur, &shape, flags, h_level, scratch, &mut coeffs);
         streams_rev.push(coeffs);
-        cur = coarse;
-        shape = cshape;
         debug_assert_eq!(shape, hierarchy.level_shape(l - 1));
     }
     streams_rev.reverse();
@@ -679,14 +791,26 @@ pub(crate) fn decompose<T: Scalar>(
 }
 
 /// Recompose up to `target_level`, returning `Q_{target} u` on its level
-/// grid (the full padded array when `target_level == L`).
+/// grid (the full padded array when `target_level == L`). Fresh scratch.
 pub(crate) fn recompose<T: Scalar>(
     hierarchy: &Hierarchy,
     flags: OptFlags,
     d: &Decomposition<T>,
     target_level: usize,
 ) -> Result<Tensor<T>> {
-    let mut aux = AuxCache::new();
+    let mut scratch = DecomposeScratch::new();
+    recompose_scratch(hierarchy, flags, d, target_level, &mut scratch)
+}
+
+/// Recompose up to `target_level`, reusing `scratch` for every internal
+/// buffer (scatter, correction, merge).
+pub(crate) fn recompose_scratch<T: Scalar>(
+    hierarchy: &Hierarchy,
+    flags: OptFlags,
+    d: &Decomposition<T>,
+    target_level: usize,
+    s: &mut DecomposeScratch<T>,
+) -> Result<Tensor<T>> {
     let mut cur = d.coarse.data().to_vec();
     let mut shape = d.coarse.shape().to_vec();
     for l in (d.start_level + 1)..=target_level {
@@ -695,24 +819,30 @@ pub(crate) fn recompose<T: Scalar>(
         // correction must be recomputed from the residuals exactly as the
         // decomposition computed it
         let h_level = hierarchy.spacing(l);
-        let e_fine = scatter_coeffs_only(coeffs, &fine_shape);
-        let (corr, cshape) = correction(&e_fine, &fine_shape, flags, h_level, &mut aux);
+        let mut e = std::mem::take(&mut s.level);
+        scatter_coeffs_only(coeffs, &fine_shape, &mut e);
+        let cshape = correction(&e, &fine_shape, flags, h_level, s);
         debug_assert_eq!(cshape, shape);
-        cur = merge_level(&cur, &shape, coeffs, &fine_shape, &corr);
+        merge_level(&cur, &shape, coeffs, &fine_shape, &s.work_a, &mut e);
+        std::mem::swap(&mut cur, &mut e);
+        // the old coarse array becomes the next level's scatter buffer
+        s.level = e;
         shape = fine_shape;
     }
     Ok(Tensor::from_vec(&shape, cur).expect("recompose shape consistent"))
 }
 
-/// Build a fine-shaped array holding residuals at coefficient positions and
-/// zero at nodal positions (the multilevel component, recomposition side).
-fn scatter_coeffs_only<T: Scalar>(coeffs: &[T], shape: &[usize]) -> Vec<T> {
+/// Fill `out` with a fine-shaped array holding residuals at coefficient
+/// positions and zero at nodal positions (the multilevel component,
+/// recomposition side).
+fn scatter_coeffs_only<T: Scalar>(coeffs: &[T], shape: &[usize], out: &mut Vec<T>) {
     let active = active_dims(shape);
     let d = shape.len();
     let n = shape[d - 1];
     let last_active = active[d - 1];
     let outer: usize = shape[..d - 1].iter().product();
-    let mut out = vec![T::ZERO; numel(shape)];
+    out.clear();
+    out.resize(numel(shape), T::ZERO);
     let mut idx = vec![0usize; d.saturating_sub(1)];
     let mut k = 0usize;
     for o in 0..outer {
@@ -738,7 +868,6 @@ fn scatter_coeffs_only<T: Scalar>(coeffs: &[T], shape: &[usize]) -> Vec<T> {
         }
     }
     debug_assert_eq!(k, coeffs.len());
-    out
 }
 
 #[cfg(test)]
@@ -818,6 +947,29 @@ mod tests {
             {
                 assert!((a - b).abs() < 1e-9, "{flags:?}: {a} vs {b}");
             }
+        }
+    }
+
+    #[test]
+    fn scratch_reuse_is_bit_transparent() {
+        // one scratch threaded through decompositions of different shapes
+        // and seeds must reproduce the fresh-scratch results bit-for-bit
+        let mut s = DecomposeScratch::new();
+        for (i, shape) in [&[17usize][..], &[9, 17][..], &[6, 10, 11][..], &[9, 9][..]]
+            .iter()
+            .enumerate()
+        {
+            let h = Hierarchy::new(shape, None).unwrap();
+            let u = rand_tensor(shape, 900 + i as u64);
+            let fresh = decompose(&h, OptFlags::all(), h.pad(&u).unwrap(), 0);
+            let reused =
+                decompose_scratch(&h, OptFlags::all(), h.pad(&u).unwrap(), 0, &mut s);
+            assert_eq!(fresh.coarse.data(), reused.coarse.data(), "{shape:?}");
+            assert_eq!(fresh.coeffs, reused.coeffs, "{shape:?}");
+            let back_fresh = recompose(&h, OptFlags::all(), &fresh, h.nlevels()).unwrap();
+            let back_reused =
+                recompose_scratch(&h, OptFlags::all(), &reused, h.nlevels(), &mut s).unwrap();
+            assert_eq!(back_fresh.data(), back_reused.data(), "{shape:?}");
         }
     }
 

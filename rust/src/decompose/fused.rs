@@ -1,0 +1,193 @@
+//! The fused decompose→quantize hot path.
+//!
+//! The staged MGARD+ pipeline materializes one full coefficient buffer per
+//! level, then re-reads every buffer in a second pass to quantize it. This
+//! module fuses the two: [`decompose_quantize`] runs the contiguous engine
+//! with a [`crate::quant::QuantSink`] as the [`super::CoeffSink`], so each
+//! coefficient is mapped to its quantizer symbol the moment `split_level`
+//! compacts it out of the level array — the per-level scalar buffers (and
+//! the second pass over them) disappear, exactly the kernel-fusion move the
+//! GPU refactoring line of work applies to reach memory-bound throughput.
+//!
+//! # Invariants
+//!
+//! * **Bit identity** — the merged symbol/escape stream is byte-for-byte
+//!   the one the staged path (decompose, then [`crate::quant::quantize`]
+//!   per level, coarsest first) produces: both run the same per-value
+//!   quantization in the same canonical order, only the buffering differs.
+//!   Enforced by the differential suite in
+//!   `rust/tests/decompose_equivalence.rs`.
+//! * **Static schedule** — `tiers[l]` is the tolerance of level `l`'s
+//!   coefficients and must be known before the first step, which is why
+//!   the adaptive-termination path (stop level unknown until the loop
+//!   ends) stays staged (see [`OptFlags::fused`]).
+//! * **O(1) allocations** — all working memory comes from the caller's
+//!   [`DecomposeScratch`] and [`FusedStreams`]; in steady state the pass
+//!   allocates nothing beyond what escapes into the returned coarse
+//!   tensor.
+
+use super::contiguous::{step_decompose_into, DecomposeScratch};
+use super::OptFlags;
+use crate::grid::Hierarchy;
+use crate::quant::{QuantSink, QuantStream};
+use crate::tensor::{Scalar, Tensor};
+
+/// Reusable per-level + merged quantizer streams of the fused pass.
+///
+/// Levels are quantized finest-first (the order decomposition produces
+/// them) into pooled per-level streams, then merged coarsest-first into
+/// [`FusedStreams::merged`] — the container's canonical stream order.
+#[derive(Default)]
+pub struct FusedStreams {
+    levels: Vec<QuantStream>,
+    /// The merged symbol/escape stream, coarsest level first (identical to
+    /// the staged quantization order).
+    pub merged: QuantStream,
+}
+
+impl FusedStreams {
+    /// Fresh, empty pool.
+    pub fn new() -> Self {
+        FusedStreams::default()
+    }
+
+    fn ensure(&mut self, nlevels: usize) {
+        while self.levels.len() < nlevels {
+            self.levels.push(QuantStream::default());
+        }
+    }
+}
+
+/// Fully decompose `padded` (stop level 0) with the contiguous engine,
+/// quantizing each level's coefficients as they are compacted.
+///
+/// `tiers[l]` is the quantization tolerance of level `l` for
+/// `l in 1..=hierarchy.nlevels()` (`tiers[0]`, the coarse tier, is owned by
+/// the external compressor and ignored here), so `tiers.len()` must be
+/// `nlevels + 1`. Returns the coarse representation; the merged
+/// symbol/escape stream is left in `streams.merged`.
+pub fn decompose_quantize<T: Scalar>(
+    hierarchy: &Hierarchy,
+    flags: OptFlags,
+    padded: Tensor<T>,
+    tiers: &[f64],
+    scratch: &mut DecomposeScratch<T>,
+    streams: &mut FusedStreams,
+) -> Tensor<T> {
+    let ll = hierarchy.nlevels();
+    debug_assert_eq!(tiers.len(), ll + 1, "one tier per level plus the coarse tier");
+    streams.ensure(ll);
+    let mut cur = padded.into_vec();
+    let mut shape = hierarchy.padded_shape().to_vec();
+    for l in (1..=ll).rev() {
+        let qs = &mut streams.levels[ll - l];
+        qs.symbols.clear();
+        qs.escapes.clear();
+        let mut sink = QuantSink::new(tiers[l], qs);
+        shape = step_decompose_into(
+            &mut cur,
+            &shape,
+            flags,
+            hierarchy.spacing(l),
+            scratch,
+            &mut sink,
+        );
+        debug_assert_eq!(shape, hierarchy.level_shape(l - 1));
+    }
+    // merge coarsest level first — the staged layout the container stores
+    let merged = &mut streams.merged;
+    merged.symbols.clear();
+    merged.escapes.clear();
+    for qs in streams.levels[..ll].iter().rev() {
+        merged.symbols.extend_from_slice(&qs.symbols);
+        merged.escapes.extend_from_slice(&qs.escapes);
+    }
+    Tensor::from_vec(&shape, cur).expect("coarse shape consistent")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::decompose::contiguous;
+    use crate::quant::{level_tolerances, quantize, DEFAULT_C_LINF};
+
+    /// The fused pass must reproduce the staged decompose-then-quantize
+    /// symbol/escape stream bit-for-bit.
+    fn check(shape: &[usize], tau: f64, seed: u64) {
+        let mut rng = crate::data::rng::Rng::new(seed);
+        let u = Tensor::<f64>::from_fn(shape, |_| rng.uniform_in(-1.0, 1.0));
+        let h = Hierarchy::new(shape, None).unwrap();
+        let ll = h.nlevels();
+        let tiers = level_tolerances(ll + 1, shape.len(), tau, DEFAULT_C_LINF);
+
+        // staged oracle
+        let dec = contiguous::decompose(&h, OptFlags::all_staged(), h.pad(&u).unwrap(), 0);
+        let mut staged = QuantStream::default();
+        for (i, stream) in dec.coeffs.iter().enumerate() {
+            quantize(stream, tiers[i + 1], &mut staged);
+        }
+
+        // fused pass
+        let mut scratch = DecomposeScratch::new();
+        let mut streams = FusedStreams::new();
+        let coarse = decompose_quantize(
+            &h,
+            OptFlags::all(),
+            h.pad(&u).unwrap(),
+            &tiers,
+            &mut scratch,
+            &mut streams,
+        );
+        assert_eq!(coarse.data(), dec.coarse.data(), "{shape:?}: coarse differs");
+        assert_eq!(
+            streams.merged.symbols, staged.symbols,
+            "{shape:?}: symbol streams differ"
+        );
+        assert_eq!(
+            streams.merged.escapes, staged.escapes,
+            "{shape:?}: escape channels differ"
+        );
+    }
+
+    #[test]
+    fn fused_matches_staged_quantization() {
+        check(&[33], 1e-3, 1);
+        check(&[17, 9], 1e-4, 2);
+        check(&[9, 10, 11], 1e-3, 3);
+    }
+
+    #[test]
+    fn fused_reuses_streams_across_fields() {
+        // one FusedStreams pool across different shapes must not leak state
+        let mut scratch = DecomposeScratch::new();
+        let mut streams = FusedStreams::new();
+        for (i, shape) in [&[17usize, 17][..], &[9][..], &[6, 10, 11][..]]
+            .iter()
+            .enumerate()
+        {
+            let mut rng = crate::data::rng::Rng::new(50 + i as u64);
+            let u = Tensor::<f64>::from_fn(shape, |_| rng.uniform_in(-2.0, 2.0));
+            let h = Hierarchy::new(shape, None).unwrap();
+            let tiers = level_tolerances(h.nlevels() + 1, shape.len(), 1e-3, DEFAULT_C_LINF);
+            let _ = decompose_quantize(
+                &h,
+                OptFlags::all(),
+                h.pad(&u).unwrap(),
+                &tiers,
+                &mut scratch,
+                &mut streams,
+            );
+            let reused_syms = streams.merged.symbols.clone();
+            let mut fresh = (DecomposeScratch::new(), FusedStreams::new());
+            let _ = decompose_quantize(
+                &h,
+                OptFlags::all(),
+                h.pad(&u).unwrap(),
+                &tiers,
+                &mut fresh.0,
+                &mut fresh.1,
+            );
+            assert_eq!(reused_syms, fresh.1.merged.symbols, "{shape:?}");
+        }
+    }
+}

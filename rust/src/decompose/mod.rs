@@ -21,13 +21,58 @@
 
 pub mod baseline;
 pub mod contiguous;
+pub mod fused;
 pub mod sweeps;
+
+pub use contiguous::DecomposeScratch;
 
 use crate::error::{Error, Result};
 use crate::grid::Hierarchy;
 use crate::tensor::{Scalar, Tensor};
 
-/// Which of the §5 optimizations are enabled (Fig. 6 ablation knobs).
+/// Streaming consumer of the coefficient nodes a decomposition step emits.
+///
+/// `split_level` compacts each level's nodal values into the next coarse
+/// array and hands every coefficient node to a `CoeffSink` instead of
+/// materializing a per-level buffer — the seam that lets the level-wise
+/// quantizer ([`crate::quant::QuantSink`]) consume coefficients *as they
+/// are compacted* (the fused decompose→quantize hot path, [`fused`]).
+///
+/// # Invariants the producer guarantees
+///
+/// * Values arrive in the **canonical coefficient order** of the level
+///   (row-major over the level grid, skipping nodes of the next coarser
+///   grid) — exactly the order [`Decomposition::coeffs`] stores.
+/// * One decomposition step emits exactly
+///   [`Hierarchy::num_coeff_nodes`]`(l)` values, split into an arbitrary
+///   mix of [`CoeffSink::run`] slices and single [`CoeffSink::push`] calls;
+///   a sink must treat both identically.
+/// * The producer never inspects sink state: any sink observing the same
+///   value sequence produces the same result, so a `Vec<T>` sink (staged)
+///   and a quantizing sink (fused) are interchangeable bit-for-bit.
+pub trait CoeffSink<T: Scalar> {
+    /// Consume one contiguous run of coefficient values.
+    fn run(&mut self, values: &[T]);
+
+    /// Consume a single coefficient value.
+    fn push(&mut self, value: T);
+}
+
+/// The staged sink: collect the level's coefficient stream into a `Vec`.
+impl<T: Scalar> CoeffSink<T> for Vec<T> {
+    #[inline]
+    fn run(&mut self, values: &[T]) {
+        self.extend_from_slice(values);
+    }
+
+    #[inline]
+    fn push(&mut self, value: T) {
+        Vec::push(self, value);
+    }
+}
+
+/// Which of the §5 optimizations are enabled (Fig. 6 ablation knobs), plus
+/// the fused decompose→quantize hot path this reproduction adds on top.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct OptFlags {
     /// DR: level-centric data reordering (§5.1). Off = baseline engine.
@@ -38,6 +83,15 @@ pub struct OptFlags {
     pub batched: bool,
     /// IVER: intermediate-variable elimination & reuse (§5.4).
     pub reuse: bool,
+    /// Fused decompose→quantize: `compressors::MgardPlus` streams each
+    /// level's coefficients straight into the level-wise quantizer via
+    /// [`CoeffSink`] instead of staging per-level buffers. Output bytes are
+    /// bit-identical either way (the staged path is the differential
+    /// oracle); this only changes speed and peak memory. Requires
+    /// `reorder`; takes effect when the tier schedule is static (adaptive
+    /// termination off — with it on, the schedule depends on the stop
+    /// level, so the staged path runs).
+    pub fused: bool,
 }
 
 impl OptFlags {
@@ -48,6 +102,7 @@ impl OptFlags {
             direct_load: false,
             batched: false,
             reuse: false,
+            fused: false,
         }
     }
 
@@ -58,6 +113,7 @@ impl OptFlags {
             direct_load: false,
             batched: false,
             reuse: false,
+            fused: false,
         }
     }
 
@@ -68,6 +124,7 @@ impl OptFlags {
             direct_load: true,
             batched: false,
             reuse: false,
+            fused: false,
         }
     }
 
@@ -78,16 +135,27 @@ impl OptFlags {
             direct_load: true,
             batched: true,
             reuse: false,
+            fused: false,
         }
     }
 
-    /// All optimizations (the MGARD+ configuration).
+    /// All optimizations (the MGARD+ configuration, fused hot path on).
     pub fn all() -> Self {
+        OptFlags {
+            fused: true,
+            ..Self::all_staged()
+        }
+    }
+
+    /// All §5 optimizations with the fused hot path off: the staged
+    /// differential oracle the fused path is byte-compared against.
+    pub fn all_staged() -> Self {
         OptFlags {
             reorder: true,
             direct_load: true,
             batched: true,
             reuse: true,
+            fused: false,
         }
     }
 
@@ -103,10 +171,11 @@ impl OptFlags {
     }
 
     fn validate(&self) -> Result<()> {
-        if !self.reorder && (self.direct_load || self.batched || self.reuse) {
+        if !self.reorder && (self.direct_load || self.batched || self.reuse || self.fused) {
             return Err(Error::invalid(
-                "the baseline (non-reordered) engine does not support DLVC/BCC/IVER; \
-                 enable `reorder` first (the paper applies the optimizations cumulatively)",
+                "the baseline (non-reordered) engine does not support DLVC/BCC/IVER or the \
+                 fused hot path; enable `reorder` first (the paper applies the optimizations \
+                 cumulatively)",
             ));
         }
         if self.batched && !self.direct_load {
@@ -200,6 +269,48 @@ impl Decomposer {
     /// Fully decompose `u` (original shape; padding applied internally).
     pub fn decompose<T: Scalar>(&self, u: &Tensor<T>) -> Result<Decomposition<T>> {
         self.decompose_to(u, 0)
+    }
+
+    /// Like [`Decomposer::decompose`], but reusing `scratch` for every
+    /// internal buffer (sweeps, corrections, compactions). Bit-identical to
+    /// the fresh-scratch path; the baseline (non-reordered) engine ignores
+    /// the scratch.
+    pub fn decompose_scratch<T: Scalar>(
+        &self,
+        u: &Tensor<T>,
+        scratch: &mut DecomposeScratch<T>,
+    ) -> Result<Decomposition<T>> {
+        let padded = self.hierarchy.pad(u)?;
+        let d = if self.flags.reorder {
+            contiguous::decompose_scratch(&self.hierarchy, self.flags, padded, 0, scratch)
+        } else {
+            baseline::decompose(&self.hierarchy, padded, 0)
+        };
+        debug_assert!(d.validate().is_ok());
+        Ok(d)
+    }
+
+    /// Like [`Decomposer::recompose`], but reusing `scratch` for every
+    /// internal buffer. Bit-identical to the fresh-scratch path; the
+    /// baseline engine ignores the scratch.
+    pub fn recompose_scratch<T: Scalar>(
+        &self,
+        d: &Decomposition<T>,
+        scratch: &mut DecomposeScratch<T>,
+    ) -> Result<Tensor<T>> {
+        d.validate()?;
+        let full = if self.flags.reorder {
+            contiguous::recompose_scratch(
+                &self.hierarchy,
+                self.flags,
+                d,
+                self.hierarchy.nlevels(),
+                scratch,
+            )?
+        } else {
+            baseline::recompose(&self.hierarchy, d, self.hierarchy.nlevels())?
+        };
+        self.hierarchy.crop(&full)
     }
 
     /// Decompose down to `stop_level` (inclusive); `stop_level == L` is a
@@ -316,6 +427,7 @@ mod tests {
             direct_load: true,
             batched: false,
             reuse: false,
+            fused: false,
         };
         assert!(Decomposer::new(Hierarchy::new(&[9, 9], None).unwrap(), bad).is_err());
         let bad2 = OptFlags {
@@ -323,8 +435,17 @@ mod tests {
             direct_load: false,
             batched: true,
             reuse: false,
+            fused: false,
         };
         assert!(Decomposer::new(Hierarchy::new(&[9, 9], None).unwrap(), bad2).is_err());
+        let bad3 = OptFlags {
+            reorder: false,
+            direct_load: false,
+            batched: false,
+            reuse: false,
+            fused: true,
+        };
+        assert!(Decomposer::new(Hierarchy::new(&[9, 9], None).unwrap(), bad3).is_err());
     }
 
     #[test]

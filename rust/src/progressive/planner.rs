@@ -211,7 +211,7 @@ pub fn plan_with_floor(
         .sum();
     Ok(FetchPlan {
         tau,
-        certified_bound: manifest.c_linf * total_err(&per_stream),
+        certified_bound: certified(&per_stream),
         per_stream,
         bytes,
         total_bytes: manifest.total_bytes(),

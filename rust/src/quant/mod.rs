@@ -5,4 +5,4 @@ mod levelwise;
 mod quantizer;
 
 pub use levelwise::{kappa, level_tolerances, DEFAULT_C_LINF};
-pub use quantizer::{dequantize, quantize, QuantStream};
+pub use quantizer::{dequantize, quantize, QuantSink, QuantStream};

@@ -60,17 +60,62 @@ fn unzigzag(u: u64) -> i64 {
 }
 
 /// Quantize `values` with tolerance `tau` into `out` (append).
+///
+/// This is the staged entry point; it routes through [`QuantSink`], so the
+/// staged and fused paths share one quantization code path and cannot
+/// drift apart.
 pub fn quantize<T: Scalar>(values: &[T], tau: f64, out: &mut QuantStream) {
-    debug_assert!(tau > 0.0);
-    let inv = 1.0 / (2.0 * tau);
-    for &v in values {
-        let v = v.to_f64();
-        let label = (v * inv).round();
+    crate::decompose::CoeffSink::run(&mut QuantSink::new(tau, out), values);
+}
+
+/// A [`crate::decompose::CoeffSink`] that maps each coefficient to its
+/// quantizer symbol the moment the decomposition emits it — the consumer
+/// half of the fused decompose→quantize hot path
+/// ([`crate::decompose::fused`]).
+///
+/// # Invariants
+///
+/// * Feeding a value sequence through a `QuantSink` appends exactly the
+///   symbols and escapes [`quantize`] would append for the same sequence
+///   and tolerance — `quantize` itself is implemented on top of this sink,
+///   so the equivalence is structural, not coincidental.
+/// * The sink only ever appends to its target stream; interleaving sinks
+///   for several levels over one stream would interleave their symbols, so
+///   the fused driver keeps one pooled [`QuantStream`] per level and
+///   merges them coarsest-first afterwards.
+pub struct QuantSink<'a> {
+    inv: f64,
+    out: &'a mut QuantStream,
+}
+
+impl<'a> QuantSink<'a> {
+    /// Sink appending symbols quantized at tolerance `tau` to `out`.
+    pub fn new(tau: f64, out: &'a mut QuantStream) -> Self {
+        debug_assert!(tau > 0.0);
+        QuantSink {
+            inv: 1.0 / (2.0 * tau),
+            out,
+        }
+    }
+}
+
+impl<T: Scalar> crate::decompose::CoeffSink<T> for QuantSink<'_> {
+    #[inline]
+    fn push(&mut self, value: T) {
+        let v = value.to_f64();
+        let label = (v * self.inv).round();
         if !label.is_finite() || label.abs() >= ESCAPE_CAP as f64 / 2.0 {
-            out.symbols.push(ESCAPE_SYMBOL);
-            out.escapes.push(v);
+            self.out.symbols.push(ESCAPE_SYMBOL);
+            self.out.escapes.push(v);
         } else {
-            out.symbols.push(zigzag(label as i64) as u32);
+            self.out.symbols.push(zigzag(label as i64) as u32);
+        }
+    }
+
+    #[inline]
+    fn run(&mut self, values: &[T]) {
+        for &v in values {
+            self.push(v);
         }
     }
 }

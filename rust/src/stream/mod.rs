@@ -67,7 +67,7 @@ pub use reader::StreamingDecompressor;
 pub use source::{BlockSource, InCoreSource, RawFileSource};
 pub use writer::ContainerWriter;
 
-use crate::chunk::pool::parallel_map_ordered;
+use crate::chunk::pool::parallel_map_ordered_with;
 use crate::chunk::{plan_tiles, resolve_block_shape, ChunkedConfig};
 use crate::compressors::{Compressor, Tolerance};
 use crate::error::{Error, Result};
@@ -178,14 +178,18 @@ where
             ContainerWriter::in_memory::<T>(sink, &field_shape, tau, block_shape.clone(), policy)
         }
     };
-    parallel_map_ordered(
+    // one CodecScratch per worker (see chunk::ChunkedCompressor::compress):
+    // warm buffers are reused across every block a worker compresses, so
+    // the steady-state allocation count per block is O(1) here too
+    parallel_map_ordered_with(
         blocks.len(),
         cfg.chunk.threads,
         window,
-        |i| {
+        crate::compressors::CodecScratch::<T>::new,
+        |scratch, i| {
             let b = &blocks[i];
             let sub = source.read_block(&b.start, &b.shape)?;
-            let bytes = inner.compress(&sub, Tolerance::Abs(tau))?;
+            let bytes = inner.compress_scratch(&sub, Tolerance::Abs(tau), scratch)?;
             let nlevels = Hierarchy::new(&b.shape, None)?.nlevels();
             Ok((bytes, nlevels))
         },

@@ -1,0 +1,168 @@
+//! Allocation-discipline harness for the fused hot path.
+//!
+//! A counting global allocator measures heap-allocation *counts* (not
+//! bytes) around compression calls and pins the scratch-reuse contract:
+//!
+//! * steady-state chunked compression performs **O(1) allocations per
+//!   block** — the marginal per-block count is independent of how many
+//!   blocks a field has and stays under a fixed budget;
+//! * reusing a [`CodecScratch`] across calls strictly reduces allocations
+//!   after warm-up and **never changes the output bytes**;
+//! * [`DecomposeScratch`] reuse at the decomposer layer is likewise
+//!   allocation-bounded and value-transparent.
+//!
+//! The per-block budget below is a regression tripwire, not an exact
+//! count: it is sized so that re-introducing per-level stream buffers,
+//! per-sweep temporaries or (worse) per-element allocations trips it,
+//! while platform/allocator noise does not. Everything runs inside one
+//! `#[test]` so no concurrent test thread pollutes the counters.
+
+use mgardp::compressors::{CodecScratch, Compressor, MgardPlus, MgardPlusConfig, Tolerance};
+use mgardp::decompose::{DecomposeScratch, Decomposer, OptFlags};
+use mgardp::grid::Hierarchy;
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+struct CountingAlloc;
+
+static ALLOC_COUNT: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOC_COUNT.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOC_COUNT.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static ALLOCATOR: CountingAlloc = CountingAlloc;
+
+/// Allocation count of one closure run.
+fn allocs_of(mut f: impl FnMut()) -> u64 {
+    let before = ALLOC_COUNT.load(Ordering::Relaxed);
+    f();
+    ALLOC_COUNT.load(Ordering::Relaxed) - before
+}
+
+/// Fused, non-adaptive MGARD+ — the hot path under test. Adaptive
+/// termination is off so every block takes the fused single pass.
+fn hot_codec() -> MgardPlus {
+    MgardPlus::new(MgardPlusConfig {
+        adaptive: false,
+        ..MgardPlusConfig::default()
+    })
+}
+
+/// Marginal allocations per block of a chunked compression, measured by
+/// differencing two fields with the same block size but different block
+/// counts (the per-call fixed overhead — scratch warm-up, container
+/// assembly — cancels out).
+fn marginal_allocs_per_block() -> f64 {
+    let codec = hot_codec().chunked(mgardp::chunk::ChunkedConfig {
+        block_shape: vec![8],
+        threads: 1, // sequential pool path: one scratch serves every block
+        tiling: mgardp::chunk::Tiling::Fixed,
+    });
+    let small = mgardp::data::synth::smooth_test_field(&[16, 16, 16]); // 8 blocks
+    let large = mgardp::data::synth::smooth_test_field(&[32, 32, 32]); // 64 blocks
+    // warm once so lazily-initialized globals (huffman tables etc.) don't
+    // skew the small run
+    let _ = codec.compress(&small, Tolerance::Abs(1e-3)).unwrap();
+    let a_small = allocs_of(|| {
+        let _ = codec.compress(&small, Tolerance::Abs(1e-3)).unwrap();
+    });
+    let a_large = allocs_of(|| {
+        let _ = codec.compress(&large, Tolerance::Abs(1e-3)).unwrap();
+    });
+    (a_large.saturating_sub(a_small)) as f64 / (64 - 8) as f64
+}
+
+#[test]
+fn steady_state_allocation_budget_and_scratch_transparency() {
+    // --- O(1) allocations per block in steady state ---------------------
+    let per_block = marginal_allocs_per_block();
+    assert!(
+        per_block > 0.0,
+        "marginal allocation measurement degenerate: {per_block}"
+    );
+    // Budget: the fused path costs ~100–150 allocations per 8³ block
+    // (block gather, pad, external coarse codec, huffman, lossless stage,
+    // container assembly). 320 leaves room for allocator noise while
+    // catching any per-level or per-element regression (a single
+    // re-introduced per-sweep buffer adds ~2 × levels × dims ≈ 20+; a
+    // per-element path adds 500+).
+    assert!(
+        per_block <= 320.0,
+        "steady-state chunked compression allocates {per_block:.1} times per block \
+         (budget: 320) — per-block allocation discipline regressed"
+    );
+
+    // --- scratch reuse strictly reduces allocations after warm-up -------
+    let t = mgardp::data::synth::smooth_test_field(&[17, 17, 17]);
+    let codec = hot_codec();
+    let mut ws = CodecScratch::<f32>::new();
+    let mut first_bytes = Vec::new();
+    let cold = allocs_of(|| {
+        first_bytes = codec
+            .compress_scratch(&t, Tolerance::Abs(1e-3), &mut ws)
+            .unwrap();
+    });
+    let mut warm_bytes = Vec::new();
+    let warm = allocs_of(|| {
+        warm_bytes = codec
+            .compress_scratch(&t, Tolerance::Abs(1e-3), &mut ws)
+            .unwrap();
+    });
+    assert!(
+        warm < cold,
+        "warm scratch call allocated {warm} times, cold {cold}: reuse is not kicking in"
+    );
+
+    // --- scratch reuse never changes output bytes -----------------------
+    assert_eq!(first_bytes, warm_bytes, "scratch reuse changed the container bytes");
+    let fresh = codec.compress(&t, Tolerance::Abs(1e-3)).unwrap();
+    assert_eq!(fresh, warm_bytes, "scratch path differs from fresh-scratch path");
+
+    // --- decomposer-layer scratch: bounded and value-transparent --------
+    let u2 = mgardp::data::synth::smooth_test_field(&[33, 33]);
+    let h = Hierarchy::new(&[33, 33], None).unwrap();
+    let dz = Decomposer::new(h, OptFlags::all()).unwrap();
+    let mut ds = DecomposeScratch::<f32>::new();
+    let reference = dz.decompose(&u2).unwrap();
+    let _ = dz.decompose_scratch(&u2, &mut ds).unwrap(); // warm
+    let mut reused = None;
+    let warm_dz = allocs_of(|| {
+        reused = Some(dz.decompose_scratch(&u2, &mut ds).unwrap());
+    });
+    let reused = reused.unwrap();
+    assert_eq!(reference.coarse.data(), reused.coarse.data());
+    assert_eq!(reference.coeffs, reused.coeffs);
+    // A warm decompose allocates only what escapes (input copy, coarse
+    // tensor, one stream per level plus growth) and the small per-call
+    // index/shape vectors — ~100 for 33×33. The budget is a tripwire for
+    // anything per-element (1089 points here would blow straight past it).
+    assert!(
+        warm_dz <= 192,
+        "warm decompose_scratch allocated {warm_dz} times (budget: 192)"
+    );
+    let mut recomposed = None;
+    let warm_rz = allocs_of(|| {
+        recomposed = Some(dz.recompose_scratch(&reused, &mut ds).unwrap());
+    });
+    let back = recomposed.unwrap();
+    let direct = dz.recompose(&reference).unwrap();
+    assert_eq!(direct.data(), back.data(), "recompose scratch reuse changed values");
+    assert!(
+        warm_rz <= 192,
+        "warm recompose_scratch allocated {warm_rz} times (budget: 192)"
+    );
+}

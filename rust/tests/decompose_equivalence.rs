@@ -3,11 +3,21 @@
 //! transform, so their decompositions must agree to FP rounding across
 //! every `OptFlags` ablation combination and across odd/even/1-d/2-d/3-d
 //! shapes — and their outputs must be interchangeable at recompose time.
+//!
+//! The second half is the fused-vs-staged differential suite: the fused
+//! decompose→quantize hot path (`OptFlags::fused`) must produce
+//! **bit-identical compressed bytes and reconstructions** to the staged
+//! path across every flag combination, 1/2/3-D dyadic and non-dyadic
+//! shapes (incl. 17×33×65), f32 and f64, and the chunked and streamed
+//! container paths — the staged path is the oracle.
 
+use mgardp::chunk::{ChunkedConfig, Tiling};
+use mgardp::compressors::{Compressor, MgardPlus, MgardPlusConfig, Tolerance};
 use mgardp::data::rng::Rng;
 use mgardp::decompose::{Decomposer, OptFlags};
 use mgardp::grid::Hierarchy;
 use mgardp::metrics::{linf_error, value_range};
+use mgardp::stream::{compress_to_writer, InCoreSource, StreamConfig};
 use mgardp::tensor::Tensor;
 
 /// Every legal flag combination, baseline first (the Fig. 6 series plus the
@@ -25,12 +35,14 @@ fn all_flag_combos() -> Vec<OptFlags> {
         direct_load: false,
         batched: false,
         reuse: true,
+        fused: false,
     });
     combos.push(OptFlags {
         reorder: true,
         direct_load: true,
         batched: false,
         reuse: true,
+        fused: false,
     });
     combos
 }
@@ -137,6 +149,165 @@ fn partial_decompositions_agree_between_engines() {
             assert!(linf_error(x, y) < 1e-9 * scale, "stop {stop}");
         }
     }
+}
+
+// ---------------------------------------------------------------------------
+// Fused-vs-staged differential suite
+// ---------------------------------------------------------------------------
+
+/// MGARD+ config with the given engine flags and (levelwise, adaptive)
+/// ablation switches.
+fn cfg(flags: OptFlags, levelwise: bool, adaptive: bool) -> MgardPlusConfig {
+    MgardPlusConfig {
+        levelwise,
+        adaptive,
+        flags,
+        ..MgardPlusConfig::default()
+    }
+}
+
+/// Compress `t` with the staged and the fused variant of `flags` and
+/// assert byte identity of containers and bit identity of reconstructions.
+fn assert_fused_matches_staged<T: mgardp::tensor::Scalar>(
+    t: &Tensor<T>,
+    flags: OptFlags,
+    levelwise: bool,
+    adaptive: bool,
+    tau: f64,
+    what: &str,
+) {
+    let staged = MgardPlus::new(cfg(OptFlags { fused: false, ..flags }, levelwise, adaptive));
+    let fused = MgardPlus::new(cfg(OptFlags { fused: true, ..flags }, levelwise, adaptive));
+    let b_staged = staged.compress(t, Tolerance::Abs(tau)).unwrap();
+    let b_fused = fused.compress(t, Tolerance::Abs(tau)).unwrap();
+    assert_eq!(b_staged, b_fused, "{what}: container bytes differ");
+    let r_staged: Tensor<T> = staged.decompress(&b_staged).unwrap();
+    let r_fused: Tensor<T> = fused.decompress(&b_fused).unwrap();
+    assert_eq!(r_staged.shape(), t.shape(), "{what}: shape");
+    for (a, b) in r_staged.data().iter().zip(r_fused.data()) {
+        let (mut xa, mut xb) = (Vec::new(), Vec::new());
+        a.write_le(&mut xa);
+        b.write_le(&mut xb);
+        assert_eq!(xa, xb, "{what}: reconstructions not bit-identical");
+    }
+    assert!(
+        linf_error(t.data(), r_fused.data()) <= tau * (1.0 + 1e-9),
+        "{what}: fused path broke the error bound"
+    );
+}
+
+/// Shapes of the differential suite: 1/2/3-D, dyadic and non-dyadic.
+fn diff_shapes() -> Vec<Vec<usize>> {
+    vec![
+        vec![33],
+        vec![16],
+        vec![17, 9],
+        vec![12, 10],
+        vec![9, 9, 9],
+        vec![6, 10, 11],
+    ]
+}
+
+#[test]
+fn fused_bytes_match_staged_across_flags_and_shapes() {
+    for shape in diff_shapes() {
+        let u = rand_tensor(&shape, 4000 + shape.iter().sum::<usize>() as u64);
+        for flags in [
+            OptFlags::dr(),
+            OptFlags::dr_dlvc(),
+            OptFlags::dr_dlvc_bcc(),
+            OptFlags::all_staged(),
+        ] {
+            for levelwise in [true, false] {
+                assert_fused_matches_staged(
+                    &u,
+                    flags,
+                    levelwise,
+                    false,
+                    1e-3,
+                    &format!("{shape:?} {flags:?} levelwise={levelwise}"),
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn fused_flag_is_inert_under_adaptive_termination() {
+    // with adaptive termination the tier schedule is dynamic, so the fused
+    // flag must fall back to the staged path — bytes identical by
+    // construction, pinned here so the fallback never silently diverges
+    for shape in [vec![33usize], vec![17, 9], vec![9, 9, 9]] {
+        let u = rand_tensor(&shape, 4400 + shape.len() as u64);
+        assert_fused_matches_staged(
+            &u,
+            OptFlags::all_staged(),
+            true,
+            true,
+            1e-3,
+            &format!("{shape:?} adaptive"),
+        );
+    }
+}
+
+#[test]
+fn fused_matches_staged_17x33x65_f32_f64() {
+    let shape = [17usize, 33, 65];
+    let t32 = mgardp::data::synth::smooth_test_field(&shape);
+    assert_fused_matches_staged(&t32, OptFlags::all_staged(), true, false, 1e-3, "f32");
+    let t64 = Tensor::<f64>::from_fn(&shape, |ix| t32.at(ix) as f64);
+    assert_fused_matches_staged(&t64, OptFlags::all_staged(), true, false, 1e-6, "f64");
+}
+
+#[test]
+fn fused_matches_staged_chunked_and_streamed() {
+    let t = mgardp::data::synth::smooth_test_field(&[17, 33, 65]);
+    let tau = 1e-3;
+    let chunk_cfg = ChunkedConfig {
+        block_shape: vec![16],
+        threads: 2,
+        tiling: Tiling::Fixed,
+    };
+    let staged = MgardPlus::new(cfg(OptFlags::all_staged(), true, false));
+    let fused = MgardPlus::new(cfg(OptFlags::all(), true, false));
+    let b_staged = staged
+        .clone()
+        .chunked(chunk_cfg.clone())
+        .compress(&t, Tolerance::Abs(tau))
+        .unwrap();
+    let b_fused = fused
+        .clone()
+        .chunked(chunk_cfg.clone())
+        .compress(&t, Tolerance::Abs(tau))
+        .unwrap();
+    assert_eq!(b_staged, b_fused, "chunked containers differ");
+
+    // the streaming path must agree with both
+    let mut b_streamed = Vec::new();
+    let scfg = StreamConfig {
+        chunk: chunk_cfg,
+        memory_budget: 64 * 1024,
+        spool_dir: None,
+    };
+    compress_to_writer(
+        &fused,
+        &InCoreSource::new(&t),
+        Tolerance::Abs(tau),
+        &scfg,
+        &mut b_streamed,
+    )
+    .unwrap();
+    assert_eq!(b_streamed, b_staged, "streamed container differs");
+
+    let back: Tensor<f32> = staged
+        .chunked(ChunkedConfig {
+            block_shape: vec![16],
+            threads: 2,
+            tiling: Tiling::Fixed,
+        })
+        .decompress(&b_fused)
+        .unwrap();
+    assert!(linf_error(t.data(), back.data()) <= tau);
 }
 
 #[test]

@@ -1,0 +1,116 @@
+#!/usr/bin/env python3
+"""Validate a BENCH_PR5.json performance-trajectory file.
+
+Usage:
+    python3 scripts/check_bench.py [PATH] [--fresh]
+
+Checks (no toolchain needed):
+  * the schema tag is `mgardp-bench-pr5-v1` and the provenance/smoke
+    fields are present and well-typed;
+  * `hot_path` is non-empty and every point carries a valid shape and
+    finite, positive staged/fused throughputs whose recorded speedup
+    matches fused/staged;
+  * fused throughput is >= staged on every measured shape — the PR-5
+    acceptance bar. For the committed baseline this is exact; with
+    `--fresh` (a just-measured smoke run on shared CI hardware, where a
+    single scheduler preemption can skew a tiny median) only a
+    catastrophic-regression floor (0.5x) is enforced — the acceptance
+    bar itself is gated deterministically on the committed file;
+  * `chunked_scaling` entries (if any) are finite and positive.
+
+Exit code 0 on success; 1 with a diagnostic on the first violation.
+"""
+
+import json
+import math
+import sys
+
+
+def fail(msg: str) -> None:
+    print(f"check_bench: FAIL: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def finite_positive(x, what: str) -> float:
+    if not isinstance(x, (int, float)) or isinstance(x, bool):
+        fail(f"{what} is not a number: {x!r}")
+    x = float(x)
+    if not math.isfinite(x) or x <= 0.0:
+        fail(f"{what} is not finite and positive: {x!r}")
+    return x
+
+
+def main() -> None:
+    args = [a for a in sys.argv[1:] if a != "--fresh"]
+    fresh = "--fresh" in sys.argv[1:]
+    path = args[0] if args else "BENCH_PR5.json"
+    try:
+        with open(path, "r", encoding="utf-8") as f:
+            doc = json.load(f)
+    except FileNotFoundError:
+        fail(f"{path} does not exist")
+    except json.JSONDecodeError as e:
+        fail(f"{path} is not valid JSON: {e}")
+
+    if doc.get("schema") != "mgardp-bench-pr5-v1":
+        fail(f"unexpected schema tag {doc.get('schema')!r}")
+    gen = doc.get("generator")
+    if not isinstance(gen, str) or not gen:
+        fail(f"generator must be a non-empty string, got {gen!r}")
+    if not isinstance(doc.get("smoke"), bool):
+        fail(f"smoke must be a boolean, got {doc.get('smoke')!r}")
+
+    hot = doc.get("hot_path")
+    if not isinstance(hot, list) or not hot:
+        fail("hot_path must be a non-empty list")
+    # freshly measured numbers on shared CI hardware jitter far beyond the
+    # few-percent effect under test, so the fresh gate only catches
+    # catastrophic regressions; the committed baseline must meet the
+    # acceptance bar exactly
+    floor = 0.5 if fresh else 1.0
+    for i, p in enumerate(hot):
+        if not isinstance(p, dict):
+            fail(f"hot_path[{i}] is not an object")
+        shape = p.get("shape")
+        if (
+            not isinstance(shape, list)
+            or not shape
+            or not all(isinstance(s, int) and s >= 2 for s in shape)
+        ):
+            fail(f"hot_path[{i}].shape invalid: {shape!r}")
+        staged = finite_positive(p.get("staged_mbs"), f"hot_path[{i}].staged_mbs")
+        fused = finite_positive(p.get("fused_mbs"), f"hot_path[{i}].fused_mbs")
+        speedup = finite_positive(p.get("speedup"), f"hot_path[{i}].speedup")
+        if abs(speedup - fused / staged) > 0.01 * speedup:
+            fail(
+                f"hot_path[{i}].speedup {speedup} inconsistent with "
+                f"fused/staged = {fused / staged}"
+            )
+        if fused < staged * floor:
+            fail(
+                f"hot_path[{i}] ({p.get('label')}): fused {fused} MB/s below "
+                f"staged {staged} MB/s (floor {floor}) — the fused hot path "
+                "must not be slower"
+            )
+
+    scaling = doc.get("chunked_scaling")
+    if not isinstance(scaling, list):
+        fail("chunked_scaling must be a list")
+    for i, p in enumerate(scaling):
+        if not isinstance(p, dict):
+            fail(f"chunked_scaling[{i}] is not an object")
+        t = p.get("threads")
+        if not isinstance(t, int) or t < 1:
+            fail(f"chunked_scaling[{i}].threads invalid: {t!r}")
+        finite_positive(p.get("comp_mbs"), f"chunked_scaling[{i}].comp_mbs")
+        finite_positive(p.get("decomp_mbs"), f"chunked_scaling[{i}].decomp_mbs")
+        finite_positive(p.get("speedup"), f"chunked_scaling[{i}].speedup")
+
+    print(
+        f"check_bench: OK: {path} ({len(hot)} hot-path points, "
+        f"{len(scaling)} scaling points, generator {gen!r})"
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -22,6 +22,15 @@
 #                     versions) must match the source constants, and every
 #                     relative markdown link in README/ROADMAP/docs must
 #                     resolve (no toolchain needed)
+#   bench smoke       the committed BENCH_PR5.json baseline passes the
+#                     schema gate (scripts/check_bench.py, no toolchain
+#                     needed): keys present, finite positive numbers,
+#                     fused decompose+quantize >= staged on every shape.
+#                     Then the fig8 throughput bench runs on a small
+#                     synthetic field and the freshly emitted
+#                     bench_out/BENCH_PR5.json passes the same schema
+#                     checks (--fresh: ordering only guarded against
+#                     catastrophic regressions — smoke timings are noisy)
 #   examples smoke    quickstart, chunked_parallel (includes the
 #                     fixed-vs-adaptive tiling comparison), streaming and
 #                     progressive (error-bounded retrieval down to
@@ -69,6 +78,11 @@ RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
 
 step "docs gate (FORMAT.md constants + markdown links)"
 python3 scripts/check_docs.py
+
+step "bench smoke (committed baseline + fresh BENCH_PR5.json)"
+python3 scripts/check_bench.py BENCH_PR5.json
+MGARDP_BENCH_SMOKE=1 cargo bench --bench fig8_throughput
+python3 scripts/check_bench.py bench_out/BENCH_PR5.json --fresh
 
 step "examples smoke (tiny synthetic inputs)"
 MGARDP_SMOKE=1 cargo run --release --example quickstart
