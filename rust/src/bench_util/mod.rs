@@ -363,6 +363,99 @@ pub fn hot_path_point(
     })
 }
 
+/// One per-line-vs-line-batched sweep-engine measurement (the PR-6
+/// trajectory point recorded in `BENCH_PR6.json`).
+#[derive(Clone, Debug)]
+pub struct PanelPoint {
+    /// Display label (dataset or synthetic tag).
+    pub label: String,
+    /// Field shape.
+    pub shape: Vec<usize>,
+    /// Per-line sweep-engine decompose throughput (MB/s, median).
+    pub per_line_mbs: f64,
+    /// Line-batched (panel) sweep-engine decompose throughput (MB/s, median).
+    pub batched_mbs: f64,
+    /// `batched_mbs / per_line_mbs`.
+    pub speedup: f64,
+}
+
+/// Measure the decomposition of `data` twice through the same engine — once
+/// with `DecomposeScratch::panel_width` forced to 1 (the per-line reference
+/// path) and once at [`DEFAULT_PANEL_WIDTH`](crate::decompose::DEFAULT_PANEL_WIDTH)
+/// (the line-batched, cache-blocked path) — isolating the PR-6 panel engine
+/// itself. The two paths are bit-identical in output (differential-tested in
+/// `rust/tests/panel_differential.rs`); this reports their speed.
+pub fn panel_point(
+    label: &str,
+    data: &crate::tensor::Tensor<f32>,
+    warmup: usize,
+    runs: usize,
+) -> crate::error::Result<PanelPoint> {
+    use crate::decompose::{DecomposeScratch, OptFlags, DEFAULT_PANEL_WIDTH};
+    let h = crate::grid::Hierarchy::new(data.shape(), None)?;
+    let flags = OptFlags::all_staged();
+
+    let mut per_line_scratch = DecomposeScratch::<f32>::with_panel_width(1);
+    let t_per_line = time_fn(warmup, runs, || {
+        let padded = h.pad(data).unwrap();
+        crate::decompose::contiguous::decompose_scratch(&h, flags, padded, 0, &mut per_line_scratch)
+    });
+
+    let mut batched_scratch = DecomposeScratch::<f32>::with_panel_width(DEFAULT_PANEL_WIDTH);
+    let t_batched = time_fn(warmup, runs, || {
+        let padded = h.pad(data).unwrap();
+        crate::decompose::contiguous::decompose_scratch(&h, flags, padded, 0, &mut batched_scratch)
+    });
+
+    let per_line_mbs = crate::metrics::throughput_mbs(data.nbytes(), t_per_line.median);
+    let batched_mbs = crate::metrics::throughput_mbs(data.nbytes(), t_batched.median);
+    Ok(PanelPoint {
+        label: label.to_string(),
+        shape: data.shape().to_vec(),
+        per_line_mbs,
+        batched_mbs,
+        speedup: batched_mbs / per_line_mbs,
+    })
+}
+
+/// Write the machine-readable PR-6 performance-trajectory file
+/// (`BENCH_PR6.json`). Schema (validated by `scripts/check_bench.py`):
+/// a `schema` tag, a `generator` provenance string, a `smoke` flag, and the
+/// per-line-vs-batched `panel` points.
+pub fn write_bench_pr6_json(
+    path: &Path,
+    generator: &str,
+    smoke: bool,
+    panel: &[PanelPoint],
+) -> std::io::Result<()> {
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    let mut out = String::new();
+    out.push_str("{\n");
+    out.push_str("  \"schema\": \"mgardp-bench-pr6-v1\",\n");
+    out.push_str(&format!("  \"generator\": \"{}\",\n", json_escape(generator)));
+    out.push_str(&format!("  \"smoke\": {smoke},\n"));
+    out.push_str("  \"panel\": [\n");
+    for (i, p) in panel.iter().enumerate() {
+        let shape: Vec<String> = p.shape.iter().map(|s| s.to_string()).collect();
+        out.push_str(&format!(
+            "    {{\"label\": \"{}\", \"shape\": [{}], \"per_line_mbs\": {:.6}, \
+             \"batched_mbs\": {:.6}, \"speedup\": {:.6}}}{}\n",
+            json_escape(&p.label),
+            shape.join(", "),
+            p.per_line_mbs,
+            p.batched_mbs,
+            p.speedup,
+            if i + 1 < panel.len() { "," } else { "" }
+        ));
+    }
+    out.push_str("  ]\n}\n");
+    std::fs::write(path, out)
+}
+
 /// Minimal JSON string escaping for labels.
 fn json_escape(s: &str) -> String {
     s.chars()
@@ -545,6 +638,37 @@ mod tests {
         assert!(text.contains("\"smoke\": true"));
         assert!(text.contains("\\\"")); // label escaping
         assert!(text.contains("\"fused_mbs\": 12.500000"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn panel_point_measures_both_paths() {
+        let t = crate::data::synth::smooth_test_field(&[17, 17, 17]);
+        let p = panel_point("test", &t, 0, 1).unwrap();
+        assert_eq!(p.shape, vec![17, 17, 17]);
+        assert!(p.per_line_mbs > 0.0 && p.per_line_mbs.is_finite());
+        assert!(p.batched_mbs > 0.0 && p.batched_mbs.is_finite());
+        assert!((p.speedup - p.batched_mbs / p.per_line_mbs).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bench_pr6_json_schema_round_trip() {
+        let dir =
+            std::env::temp_dir().join(format!("mgardp_bench_pr6_json_{}", std::process::id()));
+        let path = dir.join("BENCH_PR6.json");
+        let points = vec![PanelPoint {
+            label: "syn\\2d".to_string(),
+            shape: vec![65, 65],
+            per_line_mbs: 100.0,
+            batched_mbs: 130.0,
+            speedup: 1.3,
+        }];
+        write_bench_pr6_json(&path, "unit-test", true, &points).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.contains("\"schema\": \"mgardp-bench-pr6-v1\""));
+        assert!(text.contains("\"smoke\": true"));
+        assert!(text.contains("\\\\")); // label escaping
+        assert!(text.contains("\"batched_mbs\": 130.000000"));
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -155,6 +155,34 @@ impl MgardPlus {
     }
 }
 
+/// Decomposition schedule recorded in an MGARD+ container.
+///
+/// The schedule is a property of the *configuration* (`cfg.adaptive`), not
+/// of the execution path: the fused and staged engines produce bit-identical
+/// containers for the same schedule, so recording "fused vs staged" would be
+/// meaningless (and would break that differential invariant). What varies —
+/// and what `info` reports — is whether the level schedule was fixed up
+/// front (fused-eligible) or chosen adaptively at runtime.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Schedule {
+    /// §4.2 adaptive termination was on: the stop level was chosen at
+    /// runtime, so only the staged engine could have produced the bytes.
+    Adaptive,
+    /// The level schedule was static (adaptive off): the container is
+    /// fused-eligible — the single-pass and staged engines both produce
+    /// exactly these bytes.
+    Static,
+}
+
+impl std::fmt::Display for Schedule {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            Schedule::Adaptive => "adaptive (staged engine)",
+            Schedule::Static => "static (fused-eligible)",
+        })
+    }
+}
+
 /// Assemble the MGARD+ container (shared by the decomposed and the
 /// direct-external paths).
 fn finish_container<T: Scalar>(
@@ -173,6 +201,11 @@ fn finish_container<T: Scalar>(
     write_section(&mut payload, external_bytes);
     write_section(&mut payload, &huffman_encode(&qs.symbols));
     write_section(&mut payload, &qs.escapes_to_bytes());
+    // schedule trailer (PR 6): appended *after* the sections so readers
+    // that predate it — including `decompress` below — never look at it.
+    // Must be a function of the config, never of the engine that ran, so
+    // staged/fused differential pairs stay byte-identical.
+    payload.push(if cfg.adaptive { 0 } else { 1 });
     let compressed = lossless_compress(&payload, cfg.zstd_level)?;
 
     let mut out = Vec::with_capacity(compressed.len() + 64);
@@ -186,6 +219,39 @@ fn finish_container<T: Scalar>(
     write_u64(&mut out, payload.len() as u64);
     out.extend_from_slice(&compressed);
     Ok(out)
+}
+
+/// Read the [`Schedule`] trailer of an MGARD+ container.
+///
+/// Returns `Ok(None)` for containers written before the trailer existed
+/// (their payload ends exactly at the third section); `info` reports those
+/// as unknown. Rejects non-MGARD+ containers and malformed trailer bytes.
+pub fn container_schedule(bytes: &[u8]) -> Result<Option<Schedule>> {
+    let (header, mut r) = Header::read(bytes)?;
+    if header.method != Method::MgardPlus {
+        return Err(Error::invalid(format!(
+            "schedule trailer: container method is {}, expected mgard+",
+            header.method
+        )));
+    }
+    let payload_len = r.usize()?;
+    let payload = lossless_decompress(r.bytes(r.remaining())?, payload_len)?;
+    let mut pr = ByteReader::new(&payload);
+    pr.usize()?; // stop level
+    pr.usize()?; // max_levels encoding
+    pr.u8()?; // external compressor tag
+    pr.u8()?; // levelwise flag
+    pr.section()?; // external coarse bytes
+    pr.section()?; // huffman symbols
+    pr.section()?; // quantizer escapes
+    if pr.remaining() == 0 {
+        return Ok(None); // pre-trailer container
+    }
+    match pr.u8()? {
+        0 => Ok(Some(Schedule::Adaptive)),
+        1 => Ok(Some(Schedule::Static)),
+        other => Err(Error::corrupt(format!("schedule trailer byte {other}"))),
+    }
 }
 
 impl<T: Scalar> Compressor<T> for MgardPlus {
@@ -463,6 +529,37 @@ mod tests {
         let bytes = m.compress(&t, Tolerance::Abs(1e-2)).unwrap();
         let back: Tensor<f32> = m.decompress(&bytes).unwrap();
         assert!(linf_error(t.data(), back.data()) <= 1e-2);
+    }
+
+    #[test]
+    fn schedule_trailer_reflects_config_not_engine() {
+        let t = crate::data::synth::smooth_test_field(&[17, 17]);
+        // adaptive on -> Adaptive, regardless of the fused flag (which is
+        // inert under adaptive termination)
+        let adaptive = MgardPlus::default()
+            .compress(&t, Tolerance::Abs(1e-3))
+            .unwrap();
+        assert_eq!(
+            container_schedule(&adaptive).unwrap(),
+            Some(Schedule::Adaptive)
+        );
+        // adaptive off -> Static, identically for the staged and fused engines
+        for flags in [OptFlags::all_staged(), OptFlags::all()] {
+            let cfg = MgardPlusConfig {
+                adaptive: false,
+                flags,
+                ..MgardPlusConfig::default()
+            };
+            let bytes = MgardPlus::new(cfg).compress(&t, Tolerance::Abs(1e-3)).unwrap();
+            assert_eq!(
+                container_schedule(&bytes).unwrap(),
+                Some(Schedule::Static),
+                "{flags:?}"
+            );
+        }
+        // non-MGARD+ containers are rejected, not misread
+        let sz = Sz::default().compress(&t, Tolerance::Abs(1e-3)).unwrap();
+        assert!(container_schedule(&sz).is_err());
     }
 
     #[test]

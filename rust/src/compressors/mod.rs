@@ -18,7 +18,7 @@ mod zfp;
 pub use format::{peek_method, Header, Method, MAX_HEADER_NUMEL};
 pub use hybrid::{Hybrid, HybridConfig};
 pub use mgard::{Mgard, MgardConfig};
-pub use mgard_plus::{ExternalChoice, MgardPlus, MgardPlusConfig};
+pub use mgard_plus::{container_schedule, ExternalChoice, MgardPlus, MgardPlusConfig, Schedule};
 pub use scratch::CodecScratch;
 pub use sz::{Sz, SzConfig};
 pub use zfp::{Zfp, ZfpConfig};

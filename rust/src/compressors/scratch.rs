@@ -65,7 +65,12 @@ impl<T: Scalar> Default for HybridScratch<T> {
 /// scratch to many calls.
 pub struct CodecScratch<T: Scalar> {
     /// Contiguous-engine workspace (sweeps, corrections, compactions).
-    pub(crate) decompose: DecomposeScratch<T>,
+    ///
+    /// Public so callers (and the differential test-suite) can tune
+    /// [`DecomposeScratch::panel_width`] before compressing; the width is
+    /// value-transparent — any setting produces bit-identical output —
+    /// so exposing it cannot break the reuse contract above.
+    pub decompose: DecomposeScratch<T>,
     /// Fused-path per-level + merged quantizer streams.
     pub(crate) fused: FusedStreams,
     /// Staged-path per-level coefficient stream pool (adaptive mode).

@@ -66,6 +66,18 @@ impl Args {
             .transpose()
     }
 
+    /// Optional boolean flag (`--key`, `--key true`, `--key false`).
+    pub fn bool_opt(&self, key: &str) -> Result<Option<bool>> {
+        match self.flags.get(key).map(|s| s.as_str()) {
+            None => Ok(None),
+            Some("true") => Ok(Some(true)),
+            Some("false") => Ok(Some(false)),
+            Some(other) => Err(Error::Config(format!(
+                "--{key} expects true or false, got `{other}`"
+            ))),
+        }
+    }
+
     /// Optional usize flag with default.
     pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
         match self.flags.get(key) {
@@ -131,6 +143,27 @@ fn tiling_from(args: &Args) -> Result<crate::chunk::Tiling> {
     })
 }
 
+/// Resolve the `--fused` production knob against the `--adaptive`
+/// termination override. The fused single pass needs the level schedule
+/// static, so `--fused --adaptive true` is contradictory and must be a
+/// structured config error — never a silent fallback to the staged engine.
+/// `--adaptive false` alone selects the same static-schedule config (under
+/// default engine flags the fused pass runs whenever the schedule is
+/// static), so it resolves to the fused knob too.
+fn fused_from(args: &Args) -> Result<bool> {
+    let fused = args.bool_opt("fused")?.unwrap_or(false);
+    let adaptive = args.bool_opt("adaptive")?;
+    if fused && adaptive == Some(true) {
+        return Err(Error::Config(
+            "--fused runs the single-pass engine, which needs a static level \
+             schedule; --adaptive true re-enables §4.2 adaptive termination \
+             and contradicts it. Drop one of the two flags."
+                .into(),
+        ));
+    }
+    Ok(fused || adaptive == Some(false))
+}
+
 fn tolerance_from(args: &Args) -> Result<Tolerance> {
     match (args.f64_opt("rel")?, args.f64_opt("abs")?) {
         (Some(r), None) => Ok(Tolerance::Rel(r)),
@@ -157,13 +190,17 @@ COMMANDS:
               T × the field's down to the minimum shape, keep smooth regions large;
               defaults M=16, T=0.5; T=0 reproduces the fixed tiling bit-exactly;
               implies chunking; see docs/FORMAT.md)
+              [--fused]  (mgard+ only: static level schedule, fused single-pass
+              decompose→quantize engine; disables §4.2 adaptive termination, so
+              combining it with --adaptive true is a config error)
   decompress  --input F --output F [--stream [--threads N]]  (chunked containers: batched
               block decode straight to the raw sink; threads 0 = all cores)
               [--region ZxYxX --region-shape ZxYxX]  (decode only the blocks intersecting the region)
   info        --input F
   synth       --out DIR [--dataset all|hurricane|nyx|scale|qmcpack] [--scale S] [--seed N]
   pipeline    --config FILE  (sections: [pipeline] workers/method/rel_tol/verify/block_shape/threads/
-              stream/memory_budget/tiling/min_block_shape/variance_threshold, [data] scale/seed)
+              stream/memory_budget/tiling/min_block_shape/variance_threshold/fused/adaptive,
+              [data] scale/seed)
   refactor    --input F --shape ZxYxX --store DIR --field NAME [--progressive [--planes P]]
               (--progressive writes the bitplane layout: sign/bitplane/residual
               components per level plus an error-bound manifest; see docs/FORMAT.md)
@@ -207,20 +244,27 @@ fn cmd_compress(args: &Args) -> Result<()> {
     }
     let data: Tensor<f32> = io::read_raw(&input, &shape)?;
     let tiling = tiling_from(args)?;
+    let fused = fused_from(args)?;
     // --adaptive-tiling implies the chunked path (with the default nominal
     // shape when --block-shape is absent), exactly like --stream
     let compressor = match (args.opt("block-shape"), &tiling) {
         (Some(bs), _) => {
             let block_shape = parse_shape(bs)?;
             let threads = args.usize_or("threads", 0)?;
-            pipeline::make_chunked_compressor(method, &block_shape, threads, tiling.clone())?
+            pipeline::make_chunked_compressor_with(
+                method,
+                &block_shape,
+                threads,
+                tiling.clone(),
+                fused,
+            )?
         }
         (None, crate::chunk::Tiling::Adaptive { .. }) => {
             let threads = args.usize_or("threads", 0)?;
             let nominal = crate::chunk::ChunkedConfig::default().block_shape;
-            pipeline::make_chunked_compressor(method, &nominal, threads, tiling.clone())?
+            pipeline::make_chunked_compressor_with(method, &nominal, threads, tiling.clone(), fused)?
         }
-        (None, crate::chunk::Tiling::Fixed) => pipeline::make_compressor(method)?,
+        (None, crate::chunk::Tiling::Fixed) => pipeline::make_compressor_with(method, fused)?,
     };
     let t0 = std::time::Instant::now();
     let bytes = compressor.compress(&data, tol)?;
@@ -258,7 +302,7 @@ fn cmd_compress_stream(
         None => 256 << 20,
     };
     let source = crate::stream::RawFileSource::<f32>::new(input, shape)?;
-    let inner = pipeline::make_compressor(method)?;
+    let inner = pipeline::make_compressor_with(method, fused_from(args)?)?;
     let cfg = crate::stream::StreamConfig {
         chunk: crate::chunk::ChunkedConfig {
             block_shape,
@@ -390,6 +434,17 @@ fn cmd_info(args: &Args) -> Result<()> {
     println!("shape  : {:?}", header.shape);
     println!("tau_abs: {:.6e}", header.tau_abs);
     println!("bytes  : {total}");
+    if header.method == crate::compressors::Method::MgardPlus {
+        // the schedule trailer lives inside the lossless payload, so this
+        // is the one info path that reads the body — safe here because
+        // single-tensor MGARD+ containers are in-core by construction (the
+        // larger-than-RAM case is always a chunked container)
+        let bytes = std::fs::read(path)?;
+        match crate::compressors::container_schedule(&bytes)? {
+            Some(s) => println!("sched  : {s}"),
+            None => println!("sched  : unknown (container predates the schedule trailer)"),
+        }
+    }
     if header.method == crate::compressors::Method::Chunked {
         let d = crate::stream::StreamingDecompressor::open(std::io::BufReader::new(file))?;
         let index = d.index();
@@ -475,6 +530,20 @@ fn cmd_pipeline(args: &Args) -> Result<()> {
             )))
         }
     };
+    // `fused = true` opts into the static-schedule single-pass engine; an
+    // explicit `adaptive = true` alongside it is contradictory (the fused
+    // pass needs the level schedule fixed up front) and a config error,
+    // mirroring the CLI's `--fused --adaptive true` rejection. An explicit
+    // `adaptive = false` alone selects the same static-schedule config.
+    let fused = cfg.bool_or("pipeline", "fused", false);
+    let adaptive = cfg.get("pipeline", "adaptive").and_then(|v| v.as_bool());
+    if fused && adaptive == Some(true) {
+        return Err(Error::Config(
+            "pipeline.fused needs a static level schedule; pipeline.adaptive = \
+             true re-enables adaptive termination and contradicts it"
+                .into(),
+        ));
+    }
     let pcfg = PipelineConfig {
         workers: cfg.int_or("pipeline", "workers", 1) as usize,
         queue_depth: cfg.int_or("pipeline", "queue_depth", 4) as usize,
@@ -486,6 +555,7 @@ fn cmd_pipeline(args: &Args) -> Result<()> {
         stream: cfg.bool_or("pipeline", "stream", false),
         memory_budget,
         tiling,
+        fused: fused || adaptive == Some(false),
     };
     let scale = cfg.float_or("data", "scale", 0.5);
     let seed = cfg.int_or("data", "seed", 42) as u64;
@@ -1007,6 +1077,72 @@ mod tests {
             ]),
         )
         .is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn fused_flag_resolution_and_cli_cycle() {
+        // --fused --adaptive true is a structured config error
+        let conflict = Args::parse(&s(&["--fused", "--adaptive", "true"])).unwrap();
+        assert!(matches!(fused_from(&conflict), Err(Error::Config(_))));
+        // --adaptive false alone resolves to the static schedule
+        let implicit = Args::parse(&s(&["--adaptive", "false"])).unwrap();
+        assert!(fused_from(&implicit).unwrap());
+        let explicit = Args::parse(&s(&["--fused"])).unwrap();
+        assert!(fused_from(&explicit).unwrap());
+        assert!(!fused_from(&Args::parse(&[]).unwrap()).unwrap());
+        // bad boolean spelling is rejected
+        let bad = Args::parse(&s(&["--fused", "yes"])).unwrap();
+        assert!(fused_from(&bad).is_err());
+
+        // end to end: --fused and --adaptive false produce identical
+        // containers, the cycle honours the bound, and the container's
+        // schedule trailer says static
+        let dir = std::env::temp_dir().join(format!("mgardp_cli_fused_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let raw = dir.join("in.f32");
+        let t = crate::data::synth::smooth_test_field(&[12, 12, 12]);
+        io::write_raw(&raw, &t).unwrap();
+        let common = [
+            "--input",
+            raw.to_str().unwrap(),
+            "--shape",
+            "12x12x12",
+            "--method",
+            "mgard+",
+            "--rel",
+            "1e-3",
+        ];
+        let fused_out = dir.join("fused.mgrp");
+        let mut a: Vec<String> = common.iter().map(|x| x.to_string()).collect();
+        a.extend(s(&["--output", fused_out.to_str().unwrap(), "--fused"]));
+        run("compress", &a).unwrap();
+        let static_out = dir.join("static.mgrp");
+        let mut b: Vec<String> = common.iter().map(|x| x.to_string()).collect();
+        b.extend(s(&["--output", static_out.to_str().unwrap(), "--adaptive", "false"]));
+        run("compress", &b).unwrap();
+        let fused_bytes = std::fs::read(&fused_out).unwrap();
+        assert_eq!(fused_bytes, std::fs::read(&static_out).unwrap());
+        assert_eq!(
+            crate::compressors::container_schedule(&fused_bytes).unwrap(),
+            Some(crate::compressors::Schedule::Static)
+        );
+        let rec = dir.join("rec.f32");
+        run(
+            "decompress",
+            &s(&["--input", fused_out.to_str().unwrap(), "--output", rec.to_str().unwrap()]),
+        )
+        .unwrap();
+        let back: Tensor<f32> = io::read_raw(&rec, &[12, 12, 12]).unwrap();
+        let tau = 1e-3 * t.value_range();
+        assert!(metrics::linf_error(t.data(), back.data()) <= tau);
+        // info on the fused container succeeds (prints the schedule line)
+        run("info", &s(&["--input", fused_out.to_str().unwrap()])).unwrap();
+        // --fused with a non-mgard+ method is rejected
+        let mut c: Vec<String> = common.iter().map(|x| x.to_string()).collect();
+        c[5] = "sz".into(); // --method sz
+        c.extend(s(&["--output", dir.join("sz.mgrp").to_str().unwrap(), "--fused"]));
+        assert!(run("compress", &c).is_err());
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -56,6 +56,12 @@ pub struct PipelineConfig {
     /// chunking (`block_shape` defaults to 64 per dimension when unset),
     /// exactly like `stream`.
     pub tiling: Tiling,
+    /// Run MGARD+ with a static level schedule (adaptive termination off)
+    /// so the fused single-pass decompose→quantize engine executes — the
+    /// `[pipeline] fused` / `--fused` production knob. Only valid with
+    /// `method = "mgard+"`; requesting it for any other method is a
+    /// structured config error, never a silent fallback.
+    pub fused: bool,
 }
 
 impl Default for PipelineConfig {
@@ -71,6 +77,7 @@ impl Default for PipelineConfig {
             stream: false,
             memory_budget: 0,
             tiling: Tiling::Fixed,
+            fused: false,
         }
     }
 }
@@ -177,6 +184,61 @@ pub fn make_chunked_compressor(
     })
 }
 
+/// Build the MGARD+ engine behind the `fused` production knob: adaptive
+/// termination off, so the level schedule is static and the fused
+/// decompose→quantize single pass runs ([`crate::decompose::OptFlags`]
+/// requires the schedule to be static for fusion; see
+/// `OptFlags::validate`). Containers are bit-identical to the staged
+/// engine's — the knob trades the §4.2 adaptive stop for one fewer pass
+/// over the coefficients.
+fn fused_mgard_plus(name: &str) -> Result<MgardPlus> {
+    match name.to_ascii_lowercase().as_str() {
+        "mgard+" | "mgardplus" | "mgardp" => {
+            let cfg = crate::compressors::MgardPlusConfig {
+                adaptive: false,
+                ..Default::default()
+            };
+            cfg.flags.validate()?;
+            Ok(MgardPlus::new(cfg))
+        }
+        other => Err(Error::invalid(format!(
+            "`fused` is an MGARD+ engine mode; method `{other}` does not support it"
+        ))),
+    }
+}
+
+/// [`make_compressor`] plus the `fused` knob: when set, the method must be
+/// MGARD+ and the returned codec runs the static-schedule fused engine.
+pub fn make_compressor_with(
+    name: &str,
+    fused: bool,
+) -> Result<Box<dyn Compressor<f32> + Send + Sync>> {
+    if fused {
+        return Ok(Box::new(fused_mgard_plus(name)?));
+    }
+    make_compressor(name)
+}
+
+/// [`make_chunked_compressor`] plus the `fused` knob (see
+/// [`make_compressor_with`]).
+pub fn make_chunked_compressor_with(
+    name: &str,
+    block_shape: &[usize],
+    threads: usize,
+    tiling: Tiling,
+    fused: bool,
+) -> Result<Box<dyn Compressor<f32> + Send + Sync>> {
+    if fused {
+        let cfg = ChunkedConfig {
+            block_shape: block_shape.to_vec(),
+            threads,
+            tiling,
+        };
+        return Ok(Box::new(fused_mgard_plus(name)?.chunked(cfg)));
+    }
+    make_chunked_compressor(name, block_shape, threads, tiling)
+}
+
 /// One unit of work: a named field tensor.
 struct Job {
     dataset: String,
@@ -233,7 +295,7 @@ pub fn run(
             .clone()
             .unwrap_or_else(|| ChunkedConfig::default().block_shape);
         JobCodec::Streamed {
-            inner: make_compressor(&cfg.method)?,
+            inner: make_compressor_with(&cfg.method, cfg.fused)?,
             cfg: crate::stream::StreamConfig {
                 chunk: ChunkedConfig {
                     block_shape,
@@ -248,14 +310,24 @@ pub fn run(
         // an adaptive tiling only makes sense on the chunked path, so it
         // implies chunking with the default nominal shape, like `stream`
         JobCodec::Plain(match (&cfg.block_shape, &cfg.tiling) {
-            (Some(bs), _) => {
-                make_chunked_compressor(&cfg.method, bs, cfg.threads, cfg.tiling.clone())?
-            }
+            (Some(bs), _) => make_chunked_compressor_with(
+                &cfg.method,
+                bs,
+                cfg.threads,
+                cfg.tiling.clone(),
+                cfg.fused,
+            )?,
             (None, Tiling::Adaptive { .. }) => {
                 let nominal = ChunkedConfig::default().block_shape;
-                make_chunked_compressor(&cfg.method, &nominal, cfg.threads, cfg.tiling.clone())?
+                make_chunked_compressor_with(
+                    &cfg.method,
+                    &nominal,
+                    cfg.threads,
+                    cfg.tiling.clone(),
+                    cfg.fused,
+                )?
             }
-            (None, Tiling::Fixed) => make_compressor(&cfg.method)?,
+            (None, Tiling::Fixed) => make_compressor_with(&cfg.method, cfg.fused)?,
         })
     };
     let codec = Arc::new(codec);
@@ -409,6 +481,74 @@ mod tests {
     fn unknown_method_rejected() {
         assert!(make_compressor("gzip").is_err());
         assert!(make_chunked_compressor("gzip", &[16], 1, Tiling::Fixed).is_err());
+    }
+
+    #[test]
+    fn fused_knob_requires_mgard_plus() {
+        assert!(make_compressor_with("mgard+", true).is_ok());
+        for m in ["sz", "zfp", "hybrid", "mgard", "mgard-orig"] {
+            assert!(make_compressor_with(m, true).is_err(), "{m}");
+            assert!(make_compressor_with(m, false).is_ok(), "{m}");
+            assert!(
+                make_chunked_compressor_with(m, &[16], 1, Tiling::Fixed, true).is_err(),
+                "{m}"
+            );
+        }
+    }
+
+    #[test]
+    fn fused_pipeline_matches_static_schedule_bytes() {
+        // the knob selects a static schedule; its container must equal the
+        // staged engine's under the same (adaptive = off) config
+        let ds = tiny_datasets();
+        let field = &ds[0].fields[0].data;
+        let fused = make_compressor_with("mgard+", true).unwrap();
+        let staged = MgardPlus::new(crate::compressors::MgardPlusConfig {
+            adaptive: false,
+            flags: crate::decompose::OptFlags::all_staged(),
+            ..Default::default()
+        });
+        let a = fused.compress(field, Tolerance::Rel(1e-3)).unwrap();
+        let b = staged.compress(field, Tolerance::Rel(1e-3)).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(
+            crate::compressors::container_schedule(&a).unwrap(),
+            Some(crate::compressors::Schedule::Static)
+        );
+    }
+
+    #[test]
+    fn fused_pipeline_completes_all_fields() {
+        let ds = tiny_datasets();
+        let njobs: usize = ds.iter().map(|d| d.fields.len()).sum();
+        let reg = Registry::new();
+        let report = run(
+            &ds,
+            &PipelineConfig {
+                workers: 2,
+                method: "mgard+".into(),
+                fused: true,
+                ..PipelineConfig::default()
+            },
+            &reg,
+        )
+        .unwrap();
+        assert_eq!(report.results.len(), njobs);
+        for r in &report.results {
+            assert!(r.comp_bytes > 0);
+            assert!(r.linf.unwrap().is_finite());
+        }
+        // a non-mgard+ fused pipeline is a structured config error
+        let err = run(
+            &ds,
+            &PipelineConfig {
+                method: "sz".into(),
+                fused: true,
+                ..PipelineConfig::default()
+            },
+            &reg,
+        );
+        assert!(err.is_err());
     }
 
     #[test]

@@ -16,7 +16,10 @@
 //! calls and — via the chunk worker pool — across blocks, so steady-state
 //! compression performs O(1) heap allocations per block.
 
-use super::sweeps::{load_direct, load_mass_restrict, thomas_solve_fresh, ThomasAux};
+use super::sweeps::{
+    load_direct, load_direct_panel, load_mass_restrict, load_mass_restrict_panel,
+    thomas_solve_fresh, LinePanel, ThomasAux,
+};
 use super::{CoeffSink, Decomposition, OptFlags};
 use crate::error::Result;
 use crate::grid::Hierarchy;
@@ -59,6 +62,12 @@ impl<T: Scalar> LineBufs<T> {
     }
 }
 
+/// Default width (in lines, or stride-1 lanes for non-unit-stride axes) of
+/// the panel the batched sweep kernels process per pass. 64 lanes keeps a
+/// row pair of an f64 panel within a handful of cache lines while giving
+/// the auto-vectorizer long stride-1 inner loops.
+pub const DEFAULT_PANEL_WIDTH: usize = 64;
+
 /// Reusable workspace of the contiguous engine.
 ///
 /// One scratch serves any number of sequential [`decompose_scratch`] /
@@ -77,6 +86,12 @@ impl<T: Scalar> LineBufs<T> {
 /// * The scratch carries no data dependencies between calls — only
 ///   capacity and the [`ThomasAux`] factorizations, which are pure
 ///   functions of the line length.
+/// * [`panel_width`](Self::panel_width) is likewise value-transparent:
+///   every panel kernel performs the identical per-element operation
+///   sequence for every width, so any two widths (including 1, the
+///   per-line oracle) produce bit-identical transforms (enforced by
+///   `rust/tests/panel_differential.rs`). It is a *tuning* knob, never a
+///   semantic one.
 /// * A scratch is single-threaded state: share one per worker, never one
 ///   across workers.
 pub struct DecomposeScratch<T: Scalar> {
@@ -90,11 +105,26 @@ pub struct DecomposeScratch<T: Scalar> {
     /// Fine-level buffer of the recomposition side (scatter + merge).
     level: Vec<T>,
     lines: LineBufs<T>,
+    /// Transpose-gather tile of the line-batched sweep paths.
+    panel: LinePanel<T>,
+    /// Panel width of the batched sweep kernels: the number of contiguous
+    /// lines gathered per tile on unit-stride axes, and the column-panel
+    /// width (stride-1 lanes) the cache-blocked kernels touch per pass on
+    /// non-unit-stride axes. Value-transparent (see the invariants above);
+    /// `1` forces the per-line reference path, widths beyond the line
+    /// count are clamped per panel.
+    pub panel_width: usize,
 }
 
 impl<T: Scalar> DecomposeScratch<T> {
-    /// Fresh, empty workspace.
+    /// Fresh, empty workspace with the default panel width.
     pub fn new() -> Self {
+        DecomposeScratch::with_panel_width(DEFAULT_PANEL_WIDTH)
+    }
+
+    /// Fresh, empty workspace with an explicit panel width (`1` forces the
+    /// per-line reference path; the differential suite sweeps this knob).
+    pub fn with_panel_width(panel_width: usize) -> Self {
         DecomposeScratch {
             aux: AuxCache::new(),
             work_a: Vec::new(),
@@ -102,6 +132,8 @@ impl<T: Scalar> DecomposeScratch<T> {
             coarse: Vec::new(),
             level: Vec::new(),
             lines: LineBufs::new(),
+            panel: LinePanel::new(),
+            panel_width: panel_width.max(1),
         }
     }
 }
@@ -338,6 +370,14 @@ fn multilevel_component<T: Scalar>(data: &[T], shape: &[usize], out: &mut Vec<T>
 /// the array whose `shape[dim]` is halved (load vector contributions along
 /// that dim) and returns the halved shape. Every element of `out` is
 /// overwritten.
+///
+/// With `flags.batched` the sweep is **line-batched and cache-blocked**
+/// (panel width `s.panel_width`): unit-stride axes transpose-gather a panel
+/// of contiguous lines into the lane-interleaved [`LinePanel`] tile and run
+/// the panel kernels, non-unit-stride axes walk the stencil in stride-1
+/// column panels. Every path performs the identical per-element arithmetic,
+/// so the output is bit-identical for every panel width (width 1 is the
+/// per-line reference).
 fn load_sweep<T: Scalar>(
     input: &[T],
     shape: &[usize],
@@ -345,7 +385,7 @@ fn load_sweep<T: Scalar>(
     flags: OptFlags,
     h: f64,
     out: &mut Vec<T>,
-    lines: &mut LineBufs<T>,
+    s: &mut DecomposeScratch<T>,
 ) -> Vec<usize> {
     let n = shape[dim];
     let nc = (n + 1) / 2;
@@ -355,20 +395,49 @@ fn load_sweep<T: Scalar>(
     out_shape[dim] = nc;
     out.clear();
     out.resize(outer * nc * inner, T::ZERO);
+    let pw = s.panel_width.max(1);
 
     if inner == 1 {
-        // contiguous lines along the last dim
-        for o in 0..outer {
-            let line = &input[o * n..(o + 1) * n];
-            let dst = &mut out[o * nc..(o + 1) * nc];
-            if flags.direct_load {
-                load_direct(line, dst, h);
-            } else {
-                load_mass_restrict(line, dst, h, &mut lines.mass);
+        if flags.batched && pw > 1 {
+            // line-batched: transpose-gather panels of contiguous lines and
+            // run the lane-interleaved kernels (stride-1 inner loops over
+            // the panel, no per-line bounds checks)
+            let panel = &mut s.panel;
+            let mut o0 = 0;
+            while o0 < outer {
+                let bw = pw.min(outer - o0);
+                panel.gather(input, o0, n, bw);
+                panel.ensure_out(nc, bw);
+                if flags.direct_load {
+                    load_direct_panel(&panel.tile_in, &mut panel.tile_out, bw, h);
+                } else {
+                    load_mass_restrict_panel(
+                        &panel.tile_in,
+                        &mut panel.tile_out,
+                        bw,
+                        h,
+                        &mut panel.mass,
+                    );
+                }
+                panel.scatter_out(out, o0, nc, bw);
+                o0 += bw;
+            }
+        } else {
+            // contiguous lines along the last dim, one at a time
+            for o in 0..outer {
+                let line = &input[o * n..(o + 1) * n];
+                let dst = &mut out[o * nc..(o + 1) * nc];
+                if flags.direct_load {
+                    load_direct(line, dst, h);
+                } else {
+                    load_mass_restrict(line, dst, h, &mut s.lines.mass);
+                }
             }
         }
     } else if flags.batched {
-        // vectorized direct stencil over the contiguous inner dimension
+        // vectorized direct stencil over the contiguous inner dimension,
+        // cache-blocked into column panels of `pw` stride-1 lanes so the
+        // five input rows under the stencil stay resident per panel
         let wo = T::from_f64(h / 12.0);
         let wm = T::from_f64(h * 0.5);
         let wc = T::from_f64(h * 5.0 / 6.0);
@@ -376,40 +445,45 @@ fn load_sweep<T: Scalar>(
         for o in 0..outer {
             let src = &input[o * n * inner..(o + 1) * n * inner];
             let dst = &mut out[o * nc * inner..(o + 1) * nc * inner];
-            // i = 0: wb*c0 + wm*c1 + wo*c2
-            {
-                let (r0, r1, r2) =
-                    (&src[0..inner], &src[inner..2 * inner], &src[2 * inner..3 * inner]);
-                let d0 = &mut dst[0..inner];
-                for j in 0..inner {
-                    d0[j] = wb * r0[j] + wm * r1[j] + wo * r2[j];
+            let mut j0 = 0;
+            while j0 < inner {
+                let jw = pw.min(inner - j0);
+                // i = 0: wb*c0 + wm*c1 + wo*c2
+                {
+                    let rows = &src[j0..2 * inner + j0 + jw];
+                    let d0 = &mut dst[j0..j0 + jw];
+                    for j in 0..jw {
+                        d0[j] = wb * rows[j] + wm * rows[inner + j] + wo * rows[2 * inner + j];
+                    }
                 }
-            }
-            for i in 1..nc - 1 {
-                let k = 2 * i;
-                let base = (k - 2) * inner;
-                let rows = &src[base..base + 5 * inner];
-                let d = &mut dst[i * inner..(i + 1) * inner];
-                for j in 0..inner {
-                    d[j] = wo * rows[j]
-                        + wm * rows[inner + j]
-                        + wc * rows[2 * inner + j]
-                        + wm * rows[3 * inner + j]
-                        + wo * rows[4 * inner + j];
+                for i in 1..nc - 1 {
+                    let k = 2 * i;
+                    let base = (k - 2) * inner + j0;
+                    let rows = &src[base..base + 4 * inner + jw];
+                    let d = &mut dst[i * inner + j0..i * inner + j0 + jw];
+                    for j in 0..jw {
+                        d[j] = wo * rows[j]
+                            + wm * rows[inner + j]
+                            + wc * rows[2 * inner + j]
+                            + wm * rows[3 * inner + j]
+                            + wo * rows[4 * inner + j];
+                    }
                 }
-            }
-            // i = nc-1
-            {
-                let base = (n - 3) * inner;
-                let rows = &src[base..base + 3 * inner];
-                let d = &mut dst[(nc - 1) * inner..nc * inner];
-                for j in 0..inner {
-                    d[j] = wo * rows[j] + wm * rows[inner + j] + wb * rows[2 * inner + j];
+                // i = nc-1
+                {
+                    let base = (n - 3) * inner + j0;
+                    let rows = &src[base..base + 2 * inner + jw];
+                    let d = &mut dst[(nc - 1) * inner + j0..(nc - 1) * inner + j0 + jw];
+                    for j in 0..jw {
+                        d[j] = wo * rows[j] + wm * rows[inner + j] + wb * rows[2 * inner + j];
+                    }
                 }
+                j0 += jw;
             }
         }
     } else {
         // column-at-a-time with strided gather/scatter (the pre-BCC pattern)
+        let lines = &mut s.lines;
         lines.col_in.clear();
         lines.col_in.resize(n, T::ZERO);
         lines.col_out.clear();
@@ -436,21 +510,44 @@ fn load_sweep<T: Scalar>(
 }
 
 /// Tridiagonal mass solve along `dim` (in place).
+///
+/// With `flags.batched` the solve is line-batched and cache-blocked like
+/// [`load_sweep`]: unit-stride axes solve transpose-gathered line panels
+/// via [`ThomasAux::solve_batch`], non-unit-stride axes run the blocked
+/// [`ThomasAux::solve_batch_blocked`] over `s.panel_width`-lane column
+/// panels. All paths are bit-identical to the per-line solve.
 fn mass_solve<T: Scalar>(
     data: &mut [T],
     shape: &[usize],
     dim: usize,
     flags: OptFlags,
     h: f64,
-    aux: &mut AuxCache<T>,
-    lines: &mut LineBufs<T>,
+    s: &mut DecomposeScratch<T>,
 ) {
     let n = shape[dim];
     let outer: usize = shape[..dim].iter().product();
     let inner: usize = shape[dim + 1..].iter().product();
+    let pw = s.panel_width.max(1);
     if inner == 1 {
-        if flags.reuse {
-            let a = aux.get(n);
+        if flags.batched && pw > 1 {
+            // line-batched: solve a transposed panel of contiguous lines at
+            // a time (the forward/backward recurrences vectorize over the
+            // panel lanes)
+            let mut o0 = 0;
+            while o0 < outer {
+                let bw = pw.min(outer - o0);
+                s.panel.gather(data, o0, n, bw);
+                if flags.reuse {
+                    let a = s.aux.get(n);
+                    a.solve_batch(&mut s.panel.tile_in, bw);
+                } else {
+                    ThomasAux::<T>::new(n, h).solve_batch(&mut s.panel.tile_in, bw);
+                }
+                s.panel.scatter_in(data, o0, n, bw);
+                o0 += bw;
+            }
+        } else if flags.reuse {
+            let a = s.aux.get(n);
             for o in 0..outer {
                 a.solve(&mut data[o * n..(o + 1) * n]);
             }
@@ -461,18 +558,19 @@ fn mass_solve<T: Scalar>(
         }
     } else if flags.batched {
         if flags.reuse {
-            let a = aux.get(n);
+            let a = s.aux.get(n);
             for o in 0..outer {
-                a.solve_batch(&mut data[o * n * inner..(o + 1) * n * inner], inner);
+                a.solve_batch_blocked(&mut data[o * n * inner..(o + 1) * n * inner], inner, pw);
             }
         } else {
             let a = ThomasAux::<T>::new(n, h);
             for o in 0..outer {
-                a.solve_batch(&mut data[o * n * inner..(o + 1) * n * inner], inner);
+                a.solve_batch_blocked(&mut data[o * n * inner..(o + 1) * n * inner], inner, pw);
             }
         }
     } else {
-        let col = &mut lines.col_in;
+        let aux = &mut s.aux;
+        let col = &mut s.lines.col_in;
         col.clear();
         col.resize(n, T::ZERO);
         for o in 0..outer {
@@ -579,7 +677,7 @@ fn correction<T: Scalar>(
         wshape = load_sweep_last_masked(level_data, shape, &active, &mut a);
         for k in 0..d - 1 {
             if active[k] {
-                wshape = load_sweep(&a, &wshape, k, flags, h, &mut b, &mut s.lines);
+                wshape = load_sweep(&a, &wshape, k, flags, h, &mut b, s);
                 std::mem::swap(&mut a, &mut b);
             }
         }
@@ -588,14 +686,14 @@ fn correction<T: Scalar>(
         wshape = shape.to_vec();
         for k in 0..d {
             if active[k] {
-                wshape = load_sweep(&a, &wshape, k, flags, h, &mut b, &mut s.lines);
+                wshape = load_sweep(&a, &wshape, k, flags, h, &mut b, s);
                 std::mem::swap(&mut a, &mut b);
             }
         }
     }
     for k in 0..d {
         if active[k] {
-            mass_solve(&mut a, &wshape, k, flags, h, &mut s.aux, &mut s.lines);
+            mass_solve(&mut a, &wshape, k, flags, h, s);
         }
     }
     s.work_a = a;
@@ -970,6 +1068,32 @@ mod tests {
             let back_reused =
                 recompose_scratch(&h, OptFlags::all(), &reused, h.nlevels(), &mut s).unwrap();
             assert_eq!(back_fresh.data(), back_reused.data(), "{shape:?}");
+        }
+    }
+
+    #[test]
+    fn panel_width_is_bit_transparent() {
+        // width 1 is the per-line oracle; every other width (including one
+        // wider than any line count) must reproduce it bit-for-bit, on both
+        // decompose and recompose
+        for shape in [&[33usize][..], &[17, 9], &[9, 9, 9], &[6, 10, 11]] {
+            let h = Hierarchy::new(shape, None).unwrap();
+            let u = rand_tensor(shape, 4321);
+            let mut s1 = DecomposeScratch::with_panel_width(1);
+            let reference =
+                decompose_scratch(&h, OptFlags::all(), h.pad(&u).unwrap(), 0, &mut s1);
+            let back_ref =
+                recompose_scratch(&h, OptFlags::all(), &reference, h.nlevels(), &mut s1)
+                    .unwrap();
+            for pw in [2usize, 5, 64, 4096] {
+                let mut s = DecomposeScratch::with_panel_width(pw);
+                let d = decompose_scratch(&h, OptFlags::all(), h.pad(&u).unwrap(), 0, &mut s);
+                assert_eq!(reference.coarse.data(), d.coarse.data(), "pw={pw} {shape:?}");
+                assert_eq!(reference.coeffs, d.coeffs, "pw={pw} {shape:?}");
+                let back =
+                    recompose_scratch(&h, OptFlags::all(), &d, h.nlevels(), &mut s).unwrap();
+                assert_eq!(back_ref.data(), back.data(), "recompose pw={pw} {shape:?}");
+            }
         }
     }
 

@@ -24,7 +24,8 @@ pub mod contiguous;
 pub mod fused;
 pub mod sweeps;
 
-pub use contiguous::DecomposeScratch;
+pub use contiguous::{DecomposeScratch, DEFAULT_PANEL_WIDTH};
+pub use sweeps::LinePanel;
 
 use crate::error::{Error, Result};
 use crate::grid::Hierarchy;
@@ -170,7 +171,11 @@ impl OptFlags {
         ]
     }
 
-    fn validate(&self) -> Result<()> {
+    /// Check the cumulative-optimization dependencies (DLVC/BCC/IVER and
+    /// the fused hot path require `reorder`; BCC requires DLVC). Public so
+    /// config layers (coordinator CLI/pipeline) can reject inconsistent
+    /// knob combinations with a structured error before construction.
+    pub fn validate(&self) -> Result<()> {
         if !self.reorder && (self.direct_load || self.batched || self.reuse || self.fused) {
             return Err(Error::invalid(
                 "the baseline (non-reordered) engine does not support DLVC/BCC/IVER or the \

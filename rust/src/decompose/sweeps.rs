@@ -48,6 +48,56 @@ pub fn load_direct<T: Scalar>(c: &[T], f: &mut [T], h: f64) {
     f[n] = wo * c[m - 3] + wm * c[m - 2] + wb * c[m - 1];
 }
 
+/// Panel variant of [`load_direct`]: `bw` lines interleaved lane-wise.
+///
+/// `c` holds `2n+1` rows of `bw` lanes (`c[i * bw + b]` = entry `i` of lane
+/// `b`), `f` receives `n+1` rows in the same layout. Every lane undergoes
+/// **exactly** the operation sequence of [`load_direct`] — same weights,
+/// same association order — so the panel kernel is bit-identical to the
+/// per-line kernel while the inner loops run over `bw` contiguous lanes
+/// (auto-vectorizable, no per-line bounds checks).
+pub fn load_direct_panel<T: Scalar>(c: &[T], f: &mut [T], bw: usize, h: f64) {
+    debug_assert!(bw >= 1);
+    let m = c.len() / bw;
+    debug_assert_eq!(c.len(), m * bw);
+    debug_assert!(m >= 3 && m % 2 == 1);
+    let n = m / 2;
+    debug_assert_eq!(f.len(), (n + 1) * bw);
+    let wo = T::from_f64(W_OUT * h);
+    let wm = T::from_f64(W_MID * h);
+    let wc = T::from_f64(W_CTR * h);
+    let wb = T::from_f64(W_CTR_B * h);
+    // i = 0
+    {
+        let (r0, r1, r2) = (&c[..bw], &c[bw..2 * bw], &c[2 * bw..3 * bw]);
+        let d0 = &mut f[..bw];
+        for b in 0..bw {
+            d0[b] = wb * r0[b] + wm * r1[b] + wo * r2[b];
+        }
+    }
+    // interior
+    for i in 1..n {
+        let k = 2 * i;
+        let rows = &c[(k - 2) * bw..(k + 3) * bw];
+        let d = &mut f[i * bw..(i + 1) * bw];
+        for b in 0..bw {
+            d[b] = wo * rows[b]
+                + wm * rows[bw + b]
+                + wc * rows[2 * bw + b]
+                + wm * rows[3 * bw + b]
+                + wo * rows[4 * bw + b];
+        }
+    }
+    // i = n
+    {
+        let rows = &c[(m - 3) * bw..m * bw];
+        let d = &mut f[n * bw..(n + 1) * bw];
+        for b in 0..bw {
+            d[b] = wo * rows[b] + wm * rows[bw + b] + wb * rows[2 * bw + b];
+        }
+    }
+}
+
 /// Naive load-vector computation as in the original multilevel method:
 /// fine-grained mass-matrix multiplication followed by a restriction
 /// transform. Mathematically identical to [`load_direct`]; kept for the
@@ -76,6 +126,57 @@ pub fn load_mass_restrict<T: Scalar>(c: &[T], f: &mut [T], h: f64, scratch: &mut
         f[i] = scratch[k] + half * (scratch[k - 1] + scratch[k + 1]);
     }
     f[n] = scratch[m - 1] + half * scratch[m - 2];
+}
+
+/// Panel variant of [`load_mass_restrict`]: `bw` lane-interleaved lines,
+/// same layout as [`load_direct_panel`], with the fine mass multiply kept
+/// in a caller-provided `w` scratch (`m * bw` lanes). Per-lane arithmetic
+/// is exactly that of [`load_mass_restrict`], so the two are bit-identical.
+pub fn load_mass_restrict_panel<T: Scalar>(
+    c: &[T],
+    f: &mut [T],
+    bw: usize,
+    h: f64,
+    w: &mut Vec<T>,
+) {
+    debug_assert!(bw >= 1);
+    let m = c.len() / bw;
+    debug_assert_eq!(c.len(), m * bw);
+    debug_assert!(m >= 3 && m % 2 == 1);
+    let n = m / 2;
+    debug_assert_eq!(f.len(), (n + 1) * bw);
+    w.clear();
+    w.resize(m * bw, T::ZERO);
+    let d_in = T::from_f64(2.0 / 3.0 * h);
+    let d_bd = T::from_f64(1.0 / 3.0 * h);
+    let off = T::from_f64(1.0 / 6.0 * h);
+    for b in 0..bw {
+        w[b] = d_bd * c[b] + off * c[bw + b];
+    }
+    for j in 1..m - 1 {
+        let rows = &c[(j - 1) * bw..(j + 2) * bw];
+        let wj = &mut w[j * bw..(j + 1) * bw];
+        for b in 0..bw {
+            wj[b] = off * rows[b] + d_in * rows[bw + b] + off * rows[2 * bw + b];
+        }
+    }
+    for b in 0..bw {
+        w[(m - 1) * bw + b] = off * c[(m - 2) * bw + b] + d_bd * c[(m - 1) * bw + b];
+    }
+    let half = T::from_f64(0.5);
+    for b in 0..bw {
+        f[b] = w[b] + half * w[bw + b];
+    }
+    for i in 1..n {
+        let k = 2 * i;
+        let (wk, fk) = (k * bw, i * bw);
+        for b in 0..bw {
+            f[fk + b] = w[wk + b] + half * (w[wk - bw + b] + w[wk + bw + b]);
+        }
+    }
+    for b in 0..bw {
+        f[n * bw + b] = w[(m - 1) * bw + b] + half * w[(m - 2) * bw + b];
+    }
 }
 
 /// Reference load vector by direct element-by-element assembly of
@@ -203,6 +304,146 @@ impl<T: Scalar> ThomasAux<T> {
                 cur[b] = cur[b] - cp * next[b];
             }
         }
+    }
+
+    /// Cache-blocked variant of [`solve_batch`](Self::solve_batch): the
+    /// `batch` interleaved lines are processed in column panels of at most
+    /// `panel` lanes, so one forward+backward pass keeps a working set of
+    /// `O(panel)` elements per row instead of `O(batch)` — for wide inner
+    /// dimensions the row pair under update stays cache-resident. Every
+    /// element undergoes exactly the operation sequence of
+    /// [`solve_batch`](Self::solve_batch) (and therefore of
+    /// [`solve`](Self::solve)), so all three are bit-identical; `panel == 0`
+    /// or `panel >= batch` degenerates to one unblocked pass.
+    pub fn solve_batch_blocked(&self, f: &mut [T], batch: usize, panel: usize) {
+        if panel == 0 || panel >= batch {
+            return self.solve_batch(f, batch);
+        }
+        let n = self.cp.len();
+        debug_assert_eq!(f.len(), n * batch);
+        let mut p0 = 0;
+        while p0 < batch {
+            let w = panel.min(batch - p0);
+            // forward
+            {
+                let inv0 = self.inv_denom[0];
+                let row0 = &mut f[p0..p0 + w];
+                for b in 0..w {
+                    row0[b] = row0[b] * inv0;
+                }
+            }
+            for i in 1..n {
+                let (prev, cur) = f.split_at_mut(i * batch);
+                let prev = &prev[(i - 1) * batch + p0..(i - 1) * batch + p0 + w];
+                let cur = &mut cur[p0..p0 + w];
+                let inv = self.inv_denom[i];
+                let e = self.e;
+                for b in 0..w {
+                    cur[b] = (cur[b] - e * prev[b]) * inv;
+                }
+            }
+            // backward
+            for i in (0..n - 1).rev() {
+                let (cur, next) = f.split_at_mut((i + 1) * batch);
+                let cur = &mut cur[i * batch + p0..i * batch + p0 + w];
+                let next = &next[p0..p0 + w];
+                let cp = self.cp[i];
+                for b in 0..w {
+                    cur[b] = cur[b] - cp * next[b];
+                }
+            }
+            p0 += w;
+        }
+    }
+}
+
+/// Transpose-gather tile for batching contiguous lines through the panel
+/// kernels ([`load_direct_panel`], [`load_mass_restrict_panel`],
+/// [`ThomasAux::solve_batch`]).
+///
+/// For a sweep whose lines are already stride-1 (the last dimension), a
+/// panel of `bw` consecutive lines is transposed on load into the
+/// lane-interleaved layout `tile[i * bw + b]` (row `i` of lane `b`), the
+/// panel kernel runs with stride-1 inner loops over the `bw` lanes, and
+/// the result is transposed back on store.
+///
+/// # Invariants
+///
+/// * The tile buffers carry **no state between panels or calls** — every
+///   `gather` fully overwrites the region the subsequent kernel reads, so
+///   reuse is value-transparent (pinned by the differential suite in
+///   `rust/tests/panel_differential.rs`).
+/// * Buffers grow to the high-water mark `max_line_len × panel_width` and
+///   are never shrunk, preserving the per-worker O(1)-allocation
+///   steady-state invariant of `DecomposeScratch`.
+/// * Like the rest of the scratch, a `LinePanel` is single-threaded state.
+#[derive(Debug)]
+pub struct LinePanel<T: Scalar> {
+    /// Lane-interleaved input tile (also the in-place solve tile).
+    pub(crate) tile_in: Vec<T>,
+    /// Lane-interleaved output tile of the load kernels.
+    pub(crate) tile_out: Vec<T>,
+    /// Fine mass-multiply scratch of [`load_mass_restrict_panel`].
+    pub(crate) mass: Vec<T>,
+}
+
+impl<T: Scalar> LinePanel<T> {
+    /// Fresh, empty tile.
+    pub fn new() -> Self {
+        LinePanel {
+            tile_in: Vec::new(),
+            tile_out: Vec::new(),
+            mass: Vec::new(),
+        }
+    }
+
+    /// Transpose-gather `bw` consecutive lines of length `n`, starting at
+    /// line `o0`, from `src` (lines contiguous at stride `n`) into
+    /// `tile_in`'s lane-interleaved layout.
+    pub(crate) fn gather(&mut self, src: &[T], o0: usize, n: usize, bw: usize) {
+        self.tile_in.clear();
+        self.tile_in.resize(n * bw, T::ZERO);
+        for b in 0..bw {
+            let line = &src[(o0 + b) * n..(o0 + b + 1) * n];
+            for (i, &v) in line.iter().enumerate() {
+                self.tile_in[i * bw + b] = v;
+            }
+        }
+    }
+
+    /// Size `tile_out` for `rows` rows of `bw` lanes (contents are fully
+    /// overwritten by the panel kernel).
+    pub(crate) fn ensure_out(&mut self, rows: usize, bw: usize) {
+        self.tile_out.clear();
+        self.tile_out.resize(rows * bw, T::ZERO);
+    }
+
+    /// Transpose-scatter `tile_out` (rows × `bw` lanes) back to `bw`
+    /// consecutive lines of length `rows` starting at line `o0` of `dst`.
+    pub(crate) fn scatter_out(&self, dst: &mut [T], o0: usize, rows: usize, bw: usize) {
+        for b in 0..bw {
+            let line = &mut dst[(o0 + b) * rows..(o0 + b + 1) * rows];
+            for (i, slot) in line.iter_mut().enumerate() {
+                *slot = self.tile_out[i * bw + b];
+            }
+        }
+    }
+
+    /// Transpose-scatter `tile_in` (after an in-place solve) back to `bw`
+    /// consecutive lines of length `rows` starting at line `o0` of `dst`.
+    pub(crate) fn scatter_in(&self, dst: &mut [T], o0: usize, rows: usize, bw: usize) {
+        for b in 0..bw {
+            let line = &mut dst[(o0 + b) * rows..(o0 + b + 1) * rows];
+            for (i, slot) in line.iter_mut().enumerate() {
+                *slot = self.tile_in[i * bw + b];
+            }
+        }
+    }
+}
+
+impl<T: Scalar> Default for LinePanel<T> {
+    fn default() -> Self {
+        LinePanel::new()
     }
 }
 
@@ -336,6 +577,103 @@ mod tests {
                 );
             }
         }
+    }
+
+    /// Interleave `bw` lines of length `n` into the lane layout.
+    fn interleave(lines: &[Vec<f64>], n: usize) -> Vec<f64> {
+        let bw = lines.len();
+        let mut tile = vec![0.0; n * bw];
+        for (b, line) in lines.iter().enumerate() {
+            for i in 0..n {
+                tile[i * bw + b] = line[i];
+            }
+        }
+        tile
+    }
+
+    #[test]
+    fn panel_load_kernels_bit_identical_to_per_line() {
+        for &m in &[5usize, 9, 17, 33] {
+            for &bw in &[1usize, 2, 3, 7, 16] {
+                let lines: Vec<Vec<f64>> =
+                    (0..bw).map(|b| rand_line(m, 2000 + (m * 37 + b) as u64)).collect();
+                let tile = interleave(&lines, m);
+                let nc = m / 2 + 1;
+                for &h in &[1.0, 2.5] {
+                    // load_direct
+                    let mut panel_out = vec![0.0; nc * bw];
+                    load_direct_panel(&tile, &mut panel_out, bw, h);
+                    for (b, line) in lines.iter().enumerate() {
+                        let mut expect = vec![0.0; nc];
+                        load_direct(line, &mut expect, h);
+                        for i in 0..nc {
+                            assert_eq!(
+                                panel_out[i * bw + b].to_bits(),
+                                expect[i].to_bits(),
+                                "load_direct m={m} bw={bw} h={h} line {b} row {i}"
+                            );
+                        }
+                    }
+                    // load_mass_restrict
+                    let mut w = Vec::new();
+                    load_mass_restrict_panel(&tile, &mut panel_out, bw, h, &mut w);
+                    let mut scratch = Vec::new();
+                    for (b, line) in lines.iter().enumerate() {
+                        let mut expect = vec![0.0; nc];
+                        load_mass_restrict(line, &mut expect, h, &mut scratch);
+                        for i in 0..nc {
+                            assert_eq!(
+                                panel_out[i * bw + b].to_bits(),
+                                expect[i].to_bits(),
+                                "mass_restrict m={m} bw={bw} h={h} line {b} row {i}"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn blocked_batch_solve_bit_identical_to_scalar() {
+        let n = 17;
+        for &batch in &[1usize, 2, 5, 13, 64] {
+            // every panel width including 1 and wider than the batch
+            for &panel in &[0usize, 1, 2, 3, batch, batch + 9] {
+                let aux = ThomasAux::<f64>::new(n, 1.0);
+                let lines: Vec<Vec<f64>> =
+                    (0..batch).map(|b| rand_line(n, 3000 + b as u64)).collect();
+                let mut tile = interleave(&lines, n);
+                aux.solve_batch_blocked(&mut tile, batch, panel);
+                for (b, line) in lines.iter().enumerate() {
+                    let mut expect = line.clone();
+                    aux.solve(&mut expect);
+                    for i in 0..n {
+                        assert_eq!(
+                            tile[i * batch + b].to_bits(),
+                            expect[i].to_bits(),
+                            "batch={batch} panel={panel} line {b} row {i}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn line_panel_gather_scatter_round_trip() {
+        let (n, outer) = (9usize, 11usize);
+        let src: Vec<f64> = (0..n * outer).map(|i| i as f64 * 0.5 - 3.0).collect();
+        let mut panel = LinePanel::<f64>::new();
+        let mut dst = vec![0.0; n * outer];
+        let mut o0 = 0;
+        while o0 < outer {
+            let bw = 4.min(outer - o0);
+            panel.gather(&src, o0, n, bw);
+            panel.scatter_in(&mut dst, o0, n, bw);
+            o0 += bw;
+        }
+        assert_eq!(src, dst);
     }
 
     #[test]

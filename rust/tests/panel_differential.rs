@@ -1,0 +1,216 @@
+//! Panel-width differential suite: the line-batched, cache-blocked sweep
+//! engine (PR 6) must be **bit-identical** to the per-line engine for every
+//! panel width.
+//!
+//! `DecomposeScratch::panel_width` is a pure tuning knob: width 1 forces the
+//! per-line reference path, every other width (including widths beyond any
+//! line count) batches the same per-element arithmetic in the same
+//! association order. This suite pins that equivalence across
+//!
+//! * 1/2/3-D shapes, dyadic and non-dyadic (incl. 17×33×65),
+//! * f32 and f64,
+//! * every `OptFlags` ablation combination (pre-BCC combos must be inert
+//!   to the knob; batched combos must be value-transparent in it),
+//! * the staged and fused container paths through `CodecScratch`, and
+//! * block shapes matching what the chunked/streamed workers compress
+//!   (those workers construct default-width scratches internally, so
+//!   pw-transparency at block shapes + the existing chunked/streamed
+//!   byte-identity tests in `decompose_equivalence.rs` cover the full
+//!   container matrix transitively).
+//!
+//! Equality is exact (`assert_eq!` on the scalar slices and on container
+//! bytes), not tolerance-based: the batched kernels are bit-identical by
+//! construction, and this suite is the enforcement.
+
+use mgardp::compressors::{CodecScratch, Compressor, MgardPlus, MgardPlusConfig, Tolerance};
+use mgardp::data::rng::Rng;
+use mgardp::decompose::{DecomposeScratch, Decomposer, OptFlags, DEFAULT_PANEL_WIDTH};
+use mgardp::grid::Hierarchy;
+use mgardp::metrics::linf_error;
+use mgardp::tensor::{Scalar, Tensor};
+
+/// Panel widths under test: the per-line oracle (1), tiny odd widths that
+/// exercise ragged tail panels, the production default, and a width larger
+/// than every line count in the shape set.
+const WIDTHS: [usize; 6] = [1, 2, 3, 5, DEFAULT_PANEL_WIDTH, 4096];
+
+/// Shapes: 1/2/3-D, dyadic and non-dyadic, including the issue's 17×33×65.
+fn shapes() -> Vec<Vec<usize>> {
+    vec![
+        vec![33],
+        vec![16],
+        vec![65],
+        vec![17, 9],
+        vec![12, 10],
+        vec![33, 33],
+        vec![9, 9, 9],
+        vec![6, 10, 11],
+        vec![17, 33, 65],
+    ]
+}
+
+/// Flag combinations: the panel paths engage only with `batched`; pre-BCC
+/// combos pin that the knob is inert there.
+fn flag_combos() -> Vec<OptFlags> {
+    vec![
+        OptFlags::dr(),
+        OptFlags::dr_dlvc(),
+        OptFlags::dr_dlvc_bcc(),
+        OptFlags::all_staged(),
+        OptFlags::all(),
+    ]
+}
+
+fn rand_f64(shape: &[usize], seed: u64) -> Tensor<f64> {
+    let mut rng = Rng::new(seed);
+    Tensor::from_fn(shape, |_| rng.uniform_in(-1.0, 1.0))
+}
+
+fn rand_f32(shape: &[usize], seed: u64) -> Tensor<f32> {
+    let mut rng = Rng::new(seed);
+    Tensor::from_fn(shape, |_| rng.uniform_in(-1.0, 1.0) as f32)
+}
+
+/// Decompose + recompose `u` at every panel width and assert exact equality
+/// with the width-1 (per-line) result.
+fn assert_panel_transparent<T: Scalar>(u: &Tensor<T>, flags: OptFlags, what: &str) {
+    let h = Hierarchy::new(u.shape(), None).unwrap();
+    let dec = Decomposer::new(h, flags).unwrap();
+    let mut s1 = DecomposeScratch::<T>::with_panel_width(1);
+    let reference = dec.decompose_scratch(u, &mut s1).unwrap();
+    let back_ref = dec.recompose_scratch(&reference, &mut s1).unwrap();
+    for pw in WIDTHS {
+        if pw == 1 {
+            continue;
+        }
+        let mut s = DecomposeScratch::<T>::with_panel_width(pw);
+        let d = dec.decompose_scratch(u, &mut s).unwrap();
+        assert_eq!(
+            reference.coarse.data(),
+            d.coarse.data(),
+            "{what} pw={pw}: coarse"
+        );
+        assert_eq!(reference.coeffs, d.coeffs, "{what} pw={pw}: coefficient streams");
+        let back = dec.recompose_scratch(&d, &mut s).unwrap();
+        // exact bit comparison of the reconstructions via the LE encoding
+        for (i, (a, b)) in back_ref.data().iter().zip(back.data()).enumerate() {
+            let (mut xa, mut xb) = (Vec::new(), Vec::new());
+            a.write_le(&mut xa);
+            b.write_le(&mut xb);
+            assert_eq!(xa, xb, "{what} pw={pw}: reconstruction bit {i}");
+        }
+    }
+}
+
+#[test]
+fn panel_widths_bit_identical_f64_all_flags() {
+    for (si, shape) in shapes().iter().enumerate() {
+        let u = rand_f64(shape, 6000 + si as u64);
+        for flags in flag_combos() {
+            assert_panel_transparent(&u, flags, &format!("{shape:?} {flags:?} f64"));
+        }
+    }
+}
+
+#[test]
+fn panel_widths_bit_identical_f32() {
+    // single precision on the full shape set with the production flags
+    // (batched paths engaged) plus one pre-BCC combo (knob inert)
+    for (si, shape) in shapes().iter().enumerate() {
+        let u = rand_f32(shape, 7000 + si as u64);
+        for flags in [OptFlags::dr_dlvc(), OptFlags::all()] {
+            assert_panel_transparent(&u, flags, &format!("{shape:?} {flags:?} f32"));
+        }
+    }
+}
+
+/// The container paths: compressing through a `CodecScratch` whose
+/// `decompose.panel_width` is 1, the default, or over-wide must produce the
+/// container bytes of the plain `compress` entry point — for the staged and
+/// the fused engine, at field shapes and at worker block shapes.
+#[test]
+fn containers_byte_identical_across_panel_widths() {
+    let tau = 1e-3;
+    let cases: Vec<Vec<usize>> = vec![
+        vec![33],
+        vec![17, 33, 65],
+        // worker block shapes (what the chunked/streamed pool compresses)
+        vec![16, 16, 16],
+        vec![16],
+        vec![8, 12, 10],
+    ];
+    for (si, shape) in cases.iter().enumerate() {
+        let u = rand_f32(shape, 8000 + si as u64);
+        for (flags, adaptive) in [
+            (OptFlags::all(), false),
+            (OptFlags::all_staged(), false),
+            (OptFlags::all(), true),
+        ] {
+            let m = MgardPlus::new(MgardPlusConfig {
+                adaptive,
+                flags,
+                ..MgardPlusConfig::default()
+            });
+            let want = m.compress(&u, Tolerance::Abs(tau)).unwrap();
+            for pw in [1usize, DEFAULT_PANEL_WIDTH, 4096] {
+                let mut ws = CodecScratch::<f32>::new();
+                ws.decompose.panel_width = pw;
+                // twice through the same scratch: reuse must stay transparent
+                for round in 0..2 {
+                    let got = m.compress_scratch(&u, Tolerance::Abs(tau), &mut ws).unwrap();
+                    assert_eq!(
+                        want, got,
+                        "{shape:?} {flags:?} adaptive={adaptive} pw={pw} round={round}"
+                    );
+                }
+            }
+            let back: Tensor<f32> = m.decompress(&want).unwrap();
+            assert!(linf_error(u.data(), back.data()) <= tau * (1.0 + 1e-6));
+        }
+    }
+}
+
+/// Chunked and streamed containers of the same field must be byte-identical
+/// regardless of the panel width the *plain* oracle used — pinning that the
+/// worker pool's internal (default-width) scratches agree with the
+/// per-line engine block by block.
+#[test]
+fn chunked_container_matches_per_line_oracle_blocks() {
+    use mgardp::chunk::{ChunkedConfig, Tiling};
+    let t = rand_f32(&[17, 33, 65], 9001);
+    let tau = 1e-3;
+    let cfg = MgardPlusConfig {
+        adaptive: false,
+        flags: OptFlags::all(),
+        ..MgardPlusConfig::default()
+    };
+    let chunked = MgardPlus::new(cfg).chunked(ChunkedConfig {
+        block_shape: vec![16],
+        threads: 2,
+        tiling: Tiling::Fixed,
+    });
+    let container = chunked.compress(&t, Tolerance::Abs(tau)).unwrap();
+    // every block the pool compressed (default panel width) must equal the
+    // per-line (pw = 1) compression of that block
+    let m = MgardPlus::new(cfg);
+    let mut ws = CodecScratch::<f32>::new();
+    ws.decompose.panel_width = 1;
+    for bz in (0..17).step_by(16) {
+        for by in (0..33).step_by(16) {
+            for bx in (0..65).step_by(16) {
+                let bshape = [16.min(17 - bz), 16.min(33 - by), 16.min(65 - bx)];
+                let block = t.block(&[bz, by, bx], &bshape).unwrap();
+                let per_line = m
+                    .compress_scratch(&block, Tolerance::Abs(tau), &mut ws)
+                    .unwrap();
+                let batched = m.compress(&block, Tolerance::Abs(tau)).unwrap();
+                assert_eq!(
+                    per_line, batched,
+                    "block at [{bz},{by},{bx}]: per-line vs batched bytes"
+                );
+            }
+        }
+    }
+    let back: Tensor<f32> = chunked.decompress(&container).unwrap();
+    assert!(linf_error(t.data(), back.data()) <= tau * (1.0 + 1e-6));
+}

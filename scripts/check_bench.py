@@ -1,29 +1,44 @@
 #!/usr/bin/env python3
-"""Validate a BENCH_PR5.json performance-trajectory file.
+"""Validate the committed performance trajectory (BENCH_*.json files).
 
 Usage:
-    python3 scripts/check_bench.py [PATH] [--fresh]
+    python3 scripts/check_bench.py                 # trajectory mode
+    python3 scripts/check_bench.py PATH [--fresh]  # single-file mode
 
-Checks (no toolchain needed):
-  * the schema tag is `mgardp-bench-pr5-v1` and the provenance/smoke
-    fields are present and well-typed;
-  * `hot_path` is non-empty and every point carries a valid shape and
-    finite, positive staged/fused throughputs whose recorded speedup
-    matches fused/staged;
-  * fused throughput is >= staged on every measured shape — the PR-5
-    acceptance bar. For the committed baseline this is exact; with
-    `--fresh` (a just-measured smoke run on shared CI hardware, where a
-    single scheduler preemption can skew a tiny median) only a
-    catastrophic-regression floor (0.5x) is enforced — the acceptance
-    bar itself is gated deterministically on the committed file;
-  * `chunked_scaling` entries (if any) are finite and positive.
+Trajectory mode (no PATH) validates **every** `BENCH_*.json` at the repo
+root: each file must parse, carry a known schema tag, and meet its
+schema's performance floor. The trajectory is the point of the exercise —
+each PR that lands a performance claim commits a baseline file, and this
+gate keeps every past claim (not just the newest) schema-valid and
+honoured as the code evolves.
+
+Schemas (auto-detected from the `schema` tag; both need no toolchain):
+  * `mgardp-bench-pr5-v1` — staged-vs-fused decompose+quantize `hot_path`
+    points plus the `chunked_scaling` curve. Floor: fused >= staged on
+    every measured shape.
+  * `mgardp-bench-pr6-v1` — per-line-vs-line-batched sweep-engine `panel`
+    points. Floor: batched >= per-line on every measured shape.
+
+Common checks: provenance/smoke fields present and well-typed, shapes
+valid, throughputs finite and positive, recorded speedups consistent with
+the two throughputs they summarize.
+
+For the committed baselines the floor is exact (1.0x); with `--fresh` (a
+just-measured smoke run on shared CI hardware, where a single scheduler
+preemption can skew a tiny median) only a catastrophic-regression floor
+(0.5x) is enforced — the acceptance bar itself is gated deterministically
+on the committed files.
 
 Exit code 0 on success; 1 with a diagnostic on the first violation.
 """
 
+import glob
 import json
 import math
+import os
 import sys
+
+KNOWN_SCHEMAS = ("mgardp-bench-pr5-v1", "mgardp-bench-pr6-v1")
 
 
 def fail(msg: str) -> None:
@@ -40,10 +55,81 @@ def finite_positive(x, what: str) -> float:
     return x
 
 
-def main() -> None:
-    args = [a for a in sys.argv[1:] if a != "--fresh"]
-    fresh = "--fresh" in sys.argv[1:]
-    path = args[0] if args else "BENCH_PR5.json"
+def check_common(doc: dict, path: str) -> str:
+    """Validate the shared envelope; returns the schema tag."""
+    schema = doc.get("schema")
+    if schema not in KNOWN_SCHEMAS:
+        fail(f"{path}: unexpected schema tag {schema!r} (known: {KNOWN_SCHEMAS})")
+    gen = doc.get("generator")
+    if not isinstance(gen, str) or not gen:
+        fail(f"{path}: generator must be a non-empty string, got {gen!r}")
+    if not isinstance(doc.get("smoke"), bool):
+        fail(f"{path}: smoke must be a boolean, got {doc.get('smoke')!r}")
+    return schema
+
+
+def check_point_pair(p: dict, what: str, slow_key: str, fast_key: str, floor: float) -> None:
+    """One measured point: a valid shape, two finite positive throughputs,
+    a consistent speedup, and fast >= slow * floor."""
+    shape = p.get("shape")
+    if (
+        not isinstance(shape, list)
+        or not shape
+        or not all(isinstance(s, int) and s >= 2 for s in shape)
+    ):
+        fail(f"{what}.shape invalid: {shape!r}")
+    slow = finite_positive(p.get(slow_key), f"{what}.{slow_key}")
+    fast = finite_positive(p.get(fast_key), f"{what}.{fast_key}")
+    speedup = finite_positive(p.get("speedup"), f"{what}.speedup")
+    if abs(speedup - fast / slow) > 0.01 * speedup:
+        fail(f"{what}.speedup {speedup} inconsistent with {fast_key}/{slow_key} = {fast / slow}")
+    if fast < slow * floor:
+        fail(
+            f"{what} ({p.get('label')}): {fast_key} {fast} MB/s below "
+            f"{slow_key} {slow} MB/s (floor {floor}) — the optimized path "
+            "must not be slower"
+        )
+
+
+def check_pr5(doc: dict, path: str, floor: float) -> str:
+    hot = doc.get("hot_path")
+    if not isinstance(hot, list) or not hot:
+        fail(f"{path}: hot_path must be a non-empty list")
+    for i, p in enumerate(hot):
+        if not isinstance(p, dict):
+            fail(f"{path}: hot_path[{i}] is not an object")
+        check_point_pair(p, f"{path}: hot_path[{i}]", "staged_mbs", "fused_mbs", floor)
+    scaling = doc.get("chunked_scaling")
+    if not isinstance(scaling, list):
+        fail(f"{path}: chunked_scaling must be a list")
+    for i, p in enumerate(scaling):
+        if not isinstance(p, dict):
+            fail(f"{path}: chunked_scaling[{i}] is not an object")
+        t = p.get("threads")
+        if not isinstance(t, int) or t < 1:
+            fail(f"{path}: chunked_scaling[{i}].threads invalid: {t!r}")
+        finite_positive(p.get("comp_mbs"), f"{path}: chunked_scaling[{i}].comp_mbs")
+        finite_positive(p.get("decomp_mbs"), f"{path}: chunked_scaling[{i}].decomp_mbs")
+        finite_positive(p.get("speedup"), f"{path}: chunked_scaling[{i}].speedup")
+    return f"{len(hot)} hot-path points, {len(scaling)} scaling points"
+
+
+def check_pr6(doc: dict, path: str, floor: float) -> str:
+    panel = doc.get("panel")
+    if not isinstance(panel, list) or not panel:
+        fail(f"{path}: panel must be a non-empty list")
+    for i, p in enumerate(panel):
+        if not isinstance(p, dict):
+            fail(f"{path}: panel[{i}] is not an object")
+        check_point_pair(p, f"{path}: panel[{i}]", "per_line_mbs", "batched_mbs", floor)
+        # the panel engine only batches multi-line sweeps, so every
+        # trajectory point must be 2-D or higher
+        if len(p.get("shape", [])) < 2:
+            fail(f"{path}: panel[{i}].shape must be 2-D or higher, got {p.get('shape')!r}")
+    return f"{len(panel)} panel points"
+
+
+def check_file(path: str, floor: float) -> None:
     try:
         with open(path, "r", encoding="utf-8") as f:
             doc = json.load(f)
@@ -51,65 +137,34 @@ def main() -> None:
         fail(f"{path} does not exist")
     except json.JSONDecodeError as e:
         fail(f"{path} is not valid JSON: {e}")
+    schema = check_common(doc, path)
+    if schema == "mgardp-bench-pr5-v1":
+        detail = check_pr5(doc, path, floor)
+    else:
+        detail = check_pr6(doc, path, floor)
+    print(f"check_bench: OK: {path} [{schema}] ({detail}, generator {doc['generator']!r})")
 
-    if doc.get("schema") != "mgardp-bench-pr5-v1":
-        fail(f"unexpected schema tag {doc.get('schema')!r}")
-    gen = doc.get("generator")
-    if not isinstance(gen, str) or not gen:
-        fail(f"generator must be a non-empty string, got {gen!r}")
-    if not isinstance(doc.get("smoke"), bool):
-        fail(f"smoke must be a boolean, got {doc.get('smoke')!r}")
 
-    hot = doc.get("hot_path")
-    if not isinstance(hot, list) or not hot:
-        fail("hot_path must be a non-empty list")
+def main() -> None:
+    args = [a for a in sys.argv[1:] if a != "--fresh"]
+    fresh = "--fresh" in sys.argv[1:]
     # freshly measured numbers on shared CI hardware jitter far beyond the
-    # few-percent effect under test, so the fresh gate only catches
-    # catastrophic regressions; the committed baseline must meet the
+    # few-percent effects under test, so the fresh gate only catches
+    # catastrophic regressions; the committed baselines must meet the
     # acceptance bar exactly
     floor = 0.5 if fresh else 1.0
-    for i, p in enumerate(hot):
-        if not isinstance(p, dict):
-            fail(f"hot_path[{i}] is not an object")
-        shape = p.get("shape")
-        if (
-            not isinstance(shape, list)
-            or not shape
-            or not all(isinstance(s, int) and s >= 2 for s in shape)
-        ):
-            fail(f"hot_path[{i}].shape invalid: {shape!r}")
-        staged = finite_positive(p.get("staged_mbs"), f"hot_path[{i}].staged_mbs")
-        fused = finite_positive(p.get("fused_mbs"), f"hot_path[{i}].fused_mbs")
-        speedup = finite_positive(p.get("speedup"), f"hot_path[{i}].speedup")
-        if abs(speedup - fused / staged) > 0.01 * speedup:
-            fail(
-                f"hot_path[{i}].speedup {speedup} inconsistent with "
-                f"fused/staged = {fused / staged}"
-            )
-        if fused < staged * floor:
-            fail(
-                f"hot_path[{i}] ({p.get('label')}): fused {fused} MB/s below "
-                f"staged {staged} MB/s (floor {floor}) — the fused hot path "
-                "must not be slower"
-            )
-
-    scaling = doc.get("chunked_scaling")
-    if not isinstance(scaling, list):
-        fail("chunked_scaling must be a list")
-    for i, p in enumerate(scaling):
-        if not isinstance(p, dict):
-            fail(f"chunked_scaling[{i}] is not an object")
-        t = p.get("threads")
-        if not isinstance(t, int) or t < 1:
-            fail(f"chunked_scaling[{i}].threads invalid: {t!r}")
-        finite_positive(p.get("comp_mbs"), f"chunked_scaling[{i}].comp_mbs")
-        finite_positive(p.get("decomp_mbs"), f"chunked_scaling[{i}].decomp_mbs")
-        finite_positive(p.get("speedup"), f"chunked_scaling[{i}].speedup")
-
-    print(
-        f"check_bench: OK: {path} ({len(hot)} hot-path points, "
-        f"{len(scaling)} scaling points, generator {gen!r})"
-    )
+    if args:
+        check_file(args[0], floor)
+        return
+    if fresh:
+        fail("--fresh needs an explicit PATH (trajectory mode gates committed baselines)")
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    files = sorted(glob.glob(os.path.join(root, "BENCH_*.json")))
+    if not files:
+        fail(f"no BENCH_*.json files found at repo root {root}")
+    for path in files:
+        check_file(os.path.relpath(path, os.getcwd()), floor)
+    print(f"check_bench: OK: trajectory of {len(files)} baseline file(s) validated")
 
 
 if __name__ == "__main__":

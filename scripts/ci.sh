@@ -22,13 +22,15 @@
 #                     versions) must match the source constants, and every
 #                     relative markdown link in README/ROADMAP/docs must
 #                     resolve (no toolchain needed)
-#   bench smoke       the committed BENCH_PR5.json baseline passes the
-#                     schema gate (scripts/check_bench.py, no toolchain
-#                     needed): keys present, finite positive numbers,
-#                     fused decompose+quantize >= staged on every shape.
-#                     Then the fig8 throughput bench runs on a small
-#                     synthetic field and the freshly emitted
-#                     bench_out/BENCH_PR5.json passes the same schema
+#   bench smoke       every committed BENCH_*.json baseline passes the
+#                     trajectory gate (scripts/check_bench.py, no
+#                     toolchain needed): keys present, finite positive
+#                     numbers, fused decompose+quantize >= staged
+#                     (PR 5) and line-batched sweeps >= per-line (PR 6)
+#                     on every shape. Then the fig8 throughput bench
+#                     runs on small synthetic fields and the freshly
+#                     emitted bench_out/BENCH_PR5.json and
+#                     bench_out/BENCH_PR6.json pass the same schema
 #                     checks (--fresh: ordering only guarded against
 #                     catastrophic regressions — smoke timings are noisy)
 #   examples smoke    quickstart, chunked_parallel (includes the
@@ -79,10 +81,11 @@ RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
 step "docs gate (FORMAT.md constants + markdown links)"
 python3 scripts/check_docs.py
 
-step "bench smoke (committed baseline + fresh BENCH_PR5.json)"
-python3 scripts/check_bench.py BENCH_PR5.json
+step "bench smoke (committed trajectory + fresh BENCH_PR5/PR6.json)"
+python3 scripts/check_bench.py
 MGARDP_BENCH_SMOKE=1 cargo bench --bench fig8_throughput
 python3 scripts/check_bench.py bench_out/BENCH_PR5.json --fresh
+python3 scripts/check_bench.py bench_out/BENCH_PR6.json --fresh
 
 step "examples smoke (tiny synthetic inputs)"
 MGARDP_SMOKE=1 cargo run --release --example quickstart
