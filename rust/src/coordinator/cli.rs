@@ -208,6 +208,19 @@ COMMANDS:
               (bitplane layout: fetch the minimal component set certified for the
               absolute L∞ tolerance T; --refine extends the retrieval recorded in
               FILE — default <output>.fetchstate — fetching only the delta)
+              --remote HOST:PORT --tolerance T --output F  (same, but from a running
+              `mgardp serve` daemon over TCP; the certificate is preserved end to end)
+  serve       --store DIR --field NAME [--addr HOST:PORT] [--cache-bytes N]
+              [--retries N] [--mock-latency-ms M] [--fail-every N]
+              [--addr-file F] [--config FILE]
+              (daemon: concurrent error-bounded retrieval over TCP. --addr defaults
+              to 127.0.0.1:0; the bound address is printed as `listening on ADDR`
+              and, with --addr-file, written to F. --mock-latency-ms/--fail-every
+              wrap the store in the simulated-remote backend. [serve] config keys:
+              store/field/addr/cache_bytes/retries/mock_latency_ms/fail_every;
+              flags override the file. Protocol: docs/SERVING.md)
+  serve-ctl   --addr HOST:PORT (--stats | --shutdown)  (print a running daemon's
+              cache/connection counters, or ask it to stop)
   reconstruct --store DIR --field NAME --level L --output F  (level layout)
   analyze     --input F --shape ZxYxX --iso V  (iso-surface area)
   penalties   (print the calibrated §4.2.2 penalty factors)
@@ -225,6 +238,8 @@ pub fn run(command: &str, argv: &[String]) -> Result<()> {
         "pipeline" => cmd_pipeline(&args),
         "refactor" => cmd_refactor(&args),
         "retrieve" => cmd_retrieve(&args),
+        "serve" => cmd_serve(&args),
+        "serve-ctl" => cmd_serve_ctl(&args),
         "reconstruct" => cmd_reconstruct(&args),
         "analyze" => cmd_analyze(&args),
         "penalties" => cmd_penalties(),
@@ -673,6 +688,9 @@ fn read_fetch_state(path: &Path, field: &str, nstreams: usize) -> Result<Vec<usi
 }
 
 fn cmd_retrieve(args: &Args) -> Result<()> {
+    if let Some(addr) = args.opt("remote") {
+        return cmd_retrieve_remote(args, addr);
+    }
     let store = RefactorStore::open(args.req("store")?)?;
     let name = args.req("field")?;
     let output = PathBuf::from(args.req("output")?);
@@ -723,6 +741,161 @@ fn cmd_retrieve(args: &Args) -> Result<()> {
         reader.current_bound(),
         if reader.is_lossless() { " [lossless]" } else { "" },
     );
+    Ok(())
+}
+
+/// `retrieve --remote`: error-bounded retrieval from a running serve
+/// daemon. The daemon keeps fetch state per connection, so the single
+/// connection this command opens transfers exactly the component prefix
+/// certified for the requested tolerance and nothing more.
+fn cmd_retrieve_remote(args: &Args, addr: &str) -> Result<()> {
+    for local_only in ["store", "refine", "state"] {
+        if args.opt(local_only).is_some() {
+            return Err(Error::Config(format!(
+                "--{local_only} applies to local stores and cannot combine with --remote"
+            )));
+        }
+    }
+    let output = PathBuf::from(args.req("output")?);
+    let tau = args.f64_opt("tolerance")?.ok_or_else(|| {
+        Error::Config("missing required flag --tolerance (absolute L∞ bound)".into())
+    })?;
+    let mut remote: crate::serve::RemoteField<f32> = crate::serve::RemoteField::open(addr)?;
+    let (data, plan) = remote.refine(tau)?;
+    io::write_raw(&output, &data)?;
+    println!(
+        "retrieved {:?} from {addr} at τ {tau:.3e}: {} of {} stored bytes \
+         ({:.1}%), certified L∞ ≤ {:.3e}{}",
+        data.shape(),
+        remote.bytes_fetched(),
+        plan.total_bytes,
+        remote.bytes_fetched() as f64 / plan.total_bytes as f64 * 100.0,
+        plan.certified_bound,
+        if plan.is_lossless() { " [lossless]" } else { "" },
+    );
+    Ok(())
+}
+
+/// Resolve a serve setting that may come from a flag or the `[serve]`
+/// config section (the flag wins).
+fn serve_setting<'a>(args: &'a Args, cfg: &'a Config, flag: &str, key: &str) -> Option<String> {
+    args.opt(flag)
+        .map(str::to_string)
+        .or_else(|| cfg.get("serve", key).and_then(|v| v.as_str()).map(str::to_string))
+}
+
+/// `mgardp serve`: bind, print (and optionally file away) the bound
+/// address, then block until a client sends the protocol `shutdown` op.
+fn cmd_serve(args: &Args) -> Result<()> {
+    use crate::serve::{ServeConfig, Server};
+    use crate::storage::{FileStorage, MockStorage, Storage};
+    use std::sync::Arc;
+
+    let cfg = match args.opt("config") {
+        Some(p) => Config::load(Path::new(p))?,
+        None => Config::default(),
+    };
+    let store_dir = serve_setting(args, &cfg, "store", "store").ok_or_else(|| {
+        Error::Config("serve needs --store DIR (or [serve] store in --config)".into())
+    })?;
+    let field_name = serve_setting(args, &cfg, "field", "field").ok_or_else(|| {
+        Error::Config("serve needs --field NAME (or [serve] field in --config)".into())
+    })?;
+    let defaults = ServeConfig::default();
+    let addr = serve_setting(args, &cfg, "addr", "addr").unwrap_or(defaults.addr);
+    // cache_bytes accepts an integer byte count or a K/M/G-suffixed string,
+    // in both the flag and the config file (the file also allows a bare int)
+    let cache_bytes = match serve_setting(args, &cfg, "cache-bytes", "cache_bytes") {
+        Some(s) => parse_byte_size(&s)? as u64,
+        None => match cfg.get("serve", "cache_bytes").and_then(|v| v.as_int()) {
+            Some(n) => n as u64,
+            None => defaults.cache_bytes,
+        },
+    };
+    let retries = match args.opt("retries") {
+        Some(_) => args.usize_or("retries", 0)?,
+        None => cfg.int_or("serve", "retries", defaults.retries as i64) as usize,
+    };
+    let latency_ms = match args.f64_opt("mock-latency-ms")? {
+        Some(v) => v,
+        None => cfg.float_or("serve", "mock_latency_ms", 0.0),
+    };
+    let fail_every = match args.opt("fail-every") {
+        Some(_) => args.usize_or("fail-every", 0)? as u64,
+        None => cfg.int_or("serve", "fail_every", 0) as u64,
+    };
+    if latency_ms < 0.0 {
+        return Err(Error::Config("--mock-latency-ms must be >= 0".into()));
+    }
+    let file = Arc::new(FileStorage::open(&store_dir)?);
+    let simulate_remote = latency_ms > 0.0 || fail_every > 0;
+    let backend: Arc<dyn Storage> = if simulate_remote {
+        Arc::new(MockStorage::new(
+            file,
+            std::time::Duration::from_secs_f64(latency_ms / 1e3),
+            fail_every,
+        ))
+    } else {
+        file
+    };
+    let store = RefactorStore::with_storage(backend);
+    let field = store.progressive(&field_name)?;
+    let serve_cfg = ServeConfig {
+        addr,
+        cache_bytes,
+        retries,
+    };
+    let mut server = Server::start(field, &serve_cfg)?;
+    if simulate_remote {
+        println!(
+            "simulated remote backend: {latency_ms} ms/round-trip, \
+             transient failure every {fail_every} reads, {retries} retries"
+        );
+    }
+    println!(
+        "serving field `{field_name}` from {store_dir}; listening on {}",
+        server.addr()
+    );
+    // smoke scripts parse the line above (or read --addr-file); make sure
+    // it is visible before we park in wait()
+    std::io::Write::flush(&mut std::io::stdout())?;
+    if let Some(f) = args.opt("addr-file") {
+        std::fs::write(f, format!("{}\n", server.addr()))?;
+    }
+    server.wait();
+    let stats = server.stats();
+    println!(
+        "serve stopped: {} connections, {} requests, cache {} hits / {} misses / {} evictions",
+        stats.connections, stats.requests, stats.hits, stats.misses, stats.evictions
+    );
+    Ok(())
+}
+
+/// `mgardp serve-ctl`: poke a running daemon.
+fn cmd_serve_ctl(args: &Args) -> Result<()> {
+    let addr = args.req("addr")?;
+    let stats = args.opt("stats").is_some();
+    let shutdown = args.opt("shutdown").is_some();
+    if stats == shutdown {
+        return Err(Error::Config(
+            "serve-ctl needs exactly one of --stats or --shutdown".into(),
+        ));
+    }
+    let mut client = crate::serve::ServeClient::connect(addr)?;
+    if shutdown {
+        client.shutdown()?;
+        println!("shutdown acknowledged by {addr}");
+        return Ok(());
+    }
+    let s = client.stats()?;
+    println!("connections       : {}", s.connections);
+    println!("requests          : {}", s.requests);
+    println!("cache hits        : {}", s.hits);
+    println!("cache misses      : {}", s.misses);
+    println!("cache evictions   : {}", s.evictions);
+    println!("cache bytes       : {} of {}", s.bytes_used, s.capacity);
+    println!("cache entries     : {}", s.entries);
+    println!("transient retries : {}", s.transient_retries);
     Ok(())
 }
 
@@ -1194,6 +1367,99 @@ mod tests {
         let back: Tensor<f32> = io::read_raw(&rec, &[12, 12, 12]).unwrap();
         let tau = 1e-3 * t.value_range();
         assert!(metrics::linf_error(t.data(), back.data()) <= tau);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn serve_daemon_cli_end_to_end() {
+        let dir = std::env::temp_dir().join(format!("mgardp_cli_serve_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let raw = dir.join("in.f32");
+        let t = crate::data::synth::smooth_test_field(&[17, 18]);
+        io::write_raw(&raw, &t).unwrap();
+        let store_dir = dir.join("store");
+        run(
+            "refactor",
+            &s(&[
+                "--input",
+                raw.to_str().unwrap(),
+                "--shape",
+                "17x18",
+                "--store",
+                store_dir.to_str().unwrap(),
+                "--field",
+                "T",
+                "--progressive",
+            ]),
+        )
+        .unwrap();
+        // daemon settings come from a [serve] config file; flags override
+        let cfg_path = dir.join("serve.toml");
+        std::fs::write(
+            &cfg_path,
+            format!(
+                "[serve]\nstore = \"{}\"\nfield = \"T\"\ncache_bytes = \"1M\"\nretries = 2\n",
+                store_dir.display()
+            ),
+        )
+        .unwrap();
+        let addr_file = dir.join("addr.txt");
+        let argv = s(&[
+            "--config",
+            cfg_path.to_str().unwrap(),
+            "--addr",
+            "127.0.0.1:0",
+            "--addr-file",
+            addr_file.to_str().unwrap(),
+        ]);
+        let daemon = std::thread::spawn(move || run("serve", &argv));
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
+        let addr = loop {
+            if let Ok(text) = std::fs::read_to_string(&addr_file) {
+                let a = text.trim().to_string();
+                if !a.is_empty() {
+                    break a;
+                }
+            }
+            assert!(std::time::Instant::now() < deadline, "daemon never published its address");
+            std::thread::sleep(std::time::Duration::from_millis(10));
+        };
+        // remote retrieval honours the bound
+        let out = dir.join("out.f32");
+        run(
+            "retrieve",
+            &s(&["--remote", &addr, "--tolerance", "0.05", "--output", out.to_str().unwrap()]),
+        )
+        .unwrap();
+        let back: Tensor<f32> = io::read_raw(&out, &[17, 18]).unwrap();
+        assert!(metrics::linf_error(t.data(), back.data()) <= 0.05);
+        // counters are queryable, then shutdown stops the daemon cleanly
+        run("serve-ctl", &s(&["--addr", &addr, "--stats"])).unwrap();
+        run("serve-ctl", &s(&["--addr", &addr, "--shutdown"])).unwrap();
+        daemon.join().unwrap().unwrap();
+        // flag validation
+        assert!(run("serve-ctl", &s(&["--addr", &addr])).is_err());
+        assert!(run(
+            "serve-ctl",
+            &s(&["--addr", &addr, "--stats", "--shutdown"])
+        )
+        .is_err());
+        assert!(run(
+            "retrieve",
+            &s(&[
+                "--remote",
+                &addr,
+                "--store",
+                store_dir.to_str().unwrap(),
+                "--tolerance",
+                "0.05",
+                "--output",
+                out.to_str().unwrap(),
+            ]),
+        )
+        .is_err());
+        // serve without a store (flag or config) is a config error
+        assert!(run("serve", &s(&["--field", "T"])).is_err());
         std::fs::remove_dir_all(&dir).ok();
     }
 }

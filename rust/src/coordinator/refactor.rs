@@ -23,10 +23,11 @@ use crate::grid::Hierarchy;
 use crate::progressive::{
     self, plan_with_floor, ComponentId, FetchPlan, ProgressiveManifest, ProgressiveReader,
 };
+use crate::storage::{with_retries, FileStorage, Storage};
 use crate::tensor::{numel, Scalar, Tensor};
-use std::fs;
-use std::io::{Read, Seek, SeekFrom};
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 
 /// Magic prefix of a versioned level-layout manifest (single definition
 /// shared with the cross-layout dispatch in [`crate::progressive`]).
@@ -34,9 +35,18 @@ pub use crate::progressive::manifest::LEVEL_MAGIC as LEVEL_MANIFEST_MAGIC;
 /// Current level-layout manifest version.
 pub const REFACTOR_MANIFEST_VERSION: u8 = 1;
 
-/// On-disk progressive store for refactored fields.
+/// Progressive store for refactored fields over any [`Storage`] backend.
+///
+/// [`RefactorStore::create`] / [`RefactorStore::open`] keep the historical
+/// directory-backed layout (object keys are relative paths, so the bytes
+/// on disk are unchanged); [`RefactorStore::with_storage`] mounts the same
+/// store over an arbitrary backend — in-memory, mock-remote, or anything
+/// else implementing the trait. All layouts and manifests are
+/// backend-agnostic: a store written through one backend reads back
+/// byte-identically through any other holding the same objects.
 pub struct RefactorStore {
-    root: PathBuf,
+    storage: Arc<dyn Storage>,
+    root: Option<PathBuf>,
 }
 
 /// Which layout a stored field uses.
@@ -204,14 +214,17 @@ impl Manifest {
 }
 
 impl RefactorStore {
-    /// Create (or open) a store rooted at `root`.
+    /// Create (or open) a filesystem-backed store rooted at `root`.
     pub fn create(root: impl Into<PathBuf>) -> Result<RefactorStore> {
         let root = root.into();
-        fs::create_dir_all(&root)?;
-        Ok(RefactorStore { root })
+        let storage = FileStorage::create(&root)?;
+        Ok(RefactorStore {
+            storage: Arc::new(storage),
+            root: Some(root),
+        })
     }
 
-    /// Open an existing store.
+    /// Open an existing filesystem-backed store.
     pub fn open(root: impl Into<PathBuf>) -> Result<RefactorStore> {
         let root = root.into();
         if !root.is_dir() {
@@ -220,16 +233,33 @@ impl RefactorStore {
                 root.display()
             )));
         }
-        Ok(RefactorStore { root })
+        let storage = FileStorage::open(&root)?;
+        Ok(RefactorStore {
+            storage: Arc::new(storage),
+            root: Some(root),
+        })
     }
 
-    fn field_dir(&self, field: &str) -> PathBuf {
-        self.root.join(field)
+    /// Mount a store over an arbitrary storage backend.
+    pub fn with_storage(storage: Arc<dyn Storage>) -> RefactorStore {
+        RefactorStore {
+            storage,
+            root: None,
+        }
+    }
+
+    /// The backing storage (shared; cheap to clone).
+    pub fn storage(&self) -> Arc<dyn Storage> {
+        Arc::clone(&self.storage)
+    }
+
+    fn key(field: &str, name: &str) -> String {
+        format!("{field}/{name}")
     }
 
     /// Which layout `field` was written with (reads the manifest magic).
     pub fn layout(&self, field: &str) -> Result<FieldLayout> {
-        let bytes = fs::read(self.field_dir(field).join("manifest.bin"))?;
+        let bytes = self.storage.read(&Self::key(field, "manifest.bin"))?;
         if bytes.len() >= 4 && &bytes[..4] == progressive::manifest::PROGRESSIVE_MAGIC {
             Ok(FieldLayout::Progressive)
         } else {
@@ -247,12 +277,10 @@ impl RefactorStore {
     ) -> Result<Manifest> {
         let hierarchy = Hierarchy::new(data.shape(), None)?;
         let dec = Decomposer::new(hierarchy.clone(), OptFlags::all())?.decompose(data)?;
-        let dir = self.field_dir(field);
-        fs::create_dir_all(&dir)?;
         let mut component_bytes = Vec::new();
         // component 0: coarse representation
         let coarse_z = lossless_compress(&dec.coarse.to_le_bytes(), zstd_level)?;
-        fs::write(dir.join("coarse.bin"), &coarse_z)?;
+        self.storage.write(&Self::key(field, "coarse.bin"), &coarse_z)?;
         component_bytes.push(coarse_z.len() as u64);
         // components 1..: per-level coefficient streams
         for (k, stream) in dec.coeffs.iter().enumerate() {
@@ -261,7 +289,8 @@ impl RefactorStore {
                 v.write_le(&mut raw);
             }
             let z = lossless_compress(&raw, zstd_level)?;
-            fs::write(dir.join(format!("level_{}.bin", dec.coeff_level(k))), &z)?;
+            let name = format!("level_{}.bin", dec.coeff_level(k));
+            self.storage.write(&Self::key(field, &name), &z)?;
             component_bytes.push(z.len() as u64);
         }
         let manifest = Manifest {
@@ -271,7 +300,8 @@ impl RefactorStore {
             max_level: hierarchy.nlevels(),
             component_bytes,
         };
-        fs::write(dir.join("manifest.bin"), manifest.to_bytes())?;
+        self.storage
+            .write(&Self::key(field, "manifest.bin"), &manifest.to_bytes())?;
         Ok(manifest)
     }
 
@@ -289,26 +319,25 @@ impl RefactorStore {
     ) -> Result<ProgressiveManifest> {
         let planes = planes.unwrap_or_else(progressive::default_planes::<T>);
         let (manifest, components) = progressive::refactor_streams(data, planes, zstd_level)?;
-        let dir = self.field_dir(field);
-        fs::create_dir_all(&dir)?;
         let mut blob = Vec::new();
         for comps in &components {
             for c in comps {
                 blob.extend_from_slice(c);
             }
         }
-        fs::write(dir.join("components.bin"), &blob)?;
-        fs::write(dir.join("manifest.bin"), manifest.to_bytes())?;
+        self.storage
+            .write(&Self::key(field, "components.bin"), &blob)?;
+        self.storage
+            .write(&Self::key(field, "manifest.bin"), &manifest.to_bytes())?;
         Ok(manifest)
     }
 
     /// Open a progressively refactored field for planning and retrieval.
     pub fn progressive(&self, field: &str) -> Result<ProgressiveField> {
-        let dir = self.field_dir(field);
-        let bytes = fs::read(dir.join("manifest.bin"))?;
+        let bytes = self.storage.read(&Self::key(field, "manifest.bin"))?;
         let manifest = ProgressiveManifest::from_bytes(&bytes)?;
-        let components = dir.join("components.bin");
-        let actual = fs::metadata(&components)?.len();
+        let components_key = Self::key(field, "components.bin");
+        let actual = self.storage.size(&components_key)?;
         if actual != manifest.total_bytes() {
             return Err(Error::corrupt(format!(
                 "components.bin has {actual} bytes; manifest says {}",
@@ -316,14 +345,17 @@ impl RefactorStore {
             )));
         }
         Ok(ProgressiveField {
-            components,
+            storage: Arc::clone(&self.storage),
+            components_key,
             manifest,
+            retries: 0,
+            retries_spent: AtomicU64::new(0),
         })
     }
 
     /// Read a field's (level-layout) manifest.
     pub fn manifest(&self, field: &str) -> Result<Manifest> {
-        let bytes = fs::read(self.field_dir(field).join("manifest.bin"))?;
+        let bytes = self.storage.read(&Self::key(field, "manifest.bin"))?;
         Manifest::from_bytes(&bytes)
     }
 
@@ -342,10 +374,9 @@ impl RefactorStore {
             )));
         }
         let hierarchy = Hierarchy::new(&m.shape, None)?;
-        let dir = self.field_dir(field);
         let coarse_shape = hierarchy.level_shape(m.start_level);
         let coarse_raw = lossless_decompress(
-            &fs::read(dir.join("coarse.bin"))?,
+            &self.storage.read(&Self::key(field, "coarse.bin"))?,
             numel(&coarse_shape) * T::BYTES,
         )?;
         let coarse = Tensor::<T>::from_le_bytes(&coarse_shape, &coarse_raw)?;
@@ -353,7 +384,7 @@ impl RefactorStore {
         for l in (m.start_level + 1)..=level {
             let n = hierarchy.num_coeff_nodes(l);
             let raw = lossless_decompress(
-                &fs::read(dir.join(format!("level_{l}.bin")))?,
+                &self.storage.read(&Self::key(field, &format!("level_{l}.bin")))?,
                 n * T::BYTES,
             )?;
             if raw.len() != n * T::BYTES {
@@ -386,37 +417,53 @@ impl RefactorStore {
         Ok(m.component_bytes[..=(level - m.start_level)].iter().sum())
     }
 
-    /// List stored fields.
+    /// List stored fields (object keys ending in `/manifest.bin`).
     pub fn fields(&self) -> Result<Vec<String>> {
-        let mut out = Vec::new();
-        for entry in fs::read_dir(&self.root)? {
-            let entry = entry?;
-            if entry.path().join("manifest.bin").is_file() {
-                out.push(entry.file_name().to_string_lossy().to_string());
-            }
-        }
+        let mut out: Vec<String> = self
+            .storage
+            .list("")?
+            .into_iter()
+            .filter_map(|k| k.strip_suffix("/manifest.bin").map(str::to_string))
+            .collect();
         out.sort();
         Ok(out)
     }
 
-    /// The store's root directory.
-    pub fn root(&self) -> &Path {
-        &self.root
+    /// The store's root directory, when filesystem-backed (`None` for
+    /// stores mounted with [`RefactorStore::with_storage`]).
+    pub fn root(&self) -> Option<&Path> {
+        self.root.as_deref()
     }
 }
 
 /// One progressively refactored field: the parsed manifest plus the
-/// component blob it indexes. Components are fetched by byte range, so a
-/// remote serving path maps 1:1 onto ranged reads.
+/// component blob it indexes. Components are fetched as ranged reads of
+/// the backing [`Storage`], so a remote serving path maps 1:1 onto ranged
+/// GETs; a retry budget ([`ProgressiveField::set_retry_budget`]) absorbs
+/// [transient](crate::error::Error::Transient) backend failures.
 pub struct ProgressiveField {
-    components: PathBuf,
+    storage: Arc<dyn Storage>,
+    components_key: String,
     manifest: ProgressiveManifest,
+    retries: usize,
+    retries_spent: AtomicU64,
 }
 
 impl ProgressiveField {
     /// The field's manifest.
     pub fn manifest(&self) -> &ProgressiveManifest {
         &self.manifest
+    }
+
+    /// Allow up to `retries` retries per component fetch on transient
+    /// backend failures (default: none).
+    pub fn set_retry_budget(&mut self, retries: usize) {
+        self.retries = retries;
+    }
+
+    /// Total transient-failure retries spent by this field's fetches.
+    pub fn retries_spent(&self) -> u64 {
+        self.retries_spent.load(Ordering::Relaxed)
     }
 
     /// Plan the minimal fetch for an absolute L∞ tolerance `tau`,
@@ -427,14 +474,16 @@ impl ProgressiveField {
     }
 
     /// Read one component's stored bytes (a ranged read of
-    /// `components.bin`).
+    /// `components.bin` through the backing storage, retried within the
+    /// configured budget on transient failures).
     pub fn fetch_component(&self, id: ComponentId) -> Result<Vec<u8>> {
         let (offset, len) = self.manifest.component_range(id.stream, id.comp)?;
-        let mut f = fs::File::open(&self.components)?;
-        f.seek(SeekFrom::Start(offset))?;
-        let mut buf = vec![0u8; len as usize];
-        f.read_exact(&mut buf)?;
-        Ok(buf)
+        let mut spent = 0;
+        let r = with_retries(self.retries, &mut spent, || {
+            self.storage.read_range(&self.components_key, offset, len)
+        });
+        self.retries_spent.fetch_add(spent, Ordering::Relaxed);
+        r
     }
 
     /// Start an empty incremental reader for this field.
@@ -470,6 +519,7 @@ impl ProgressiveField {
 mod tests {
     use super::*;
     use crate::metrics::linf_error;
+    use std::fs;
 
     fn temp_store(tag: &str) -> RefactorStore {
         let dir =
@@ -487,7 +537,7 @@ mod tests {
         assert_eq!(back.shape(), t.shape());
         let err = linf_error(t.data(), back.data());
         assert!(err < 1e-4, "refactoring should be near-lossless: {err}");
-        fs::remove_dir_all(store.root()).ok();
+        fs::remove_dir_all(store.root().unwrap()).ok();
     }
 
     #[test]
@@ -504,7 +554,7 @@ mod tests {
             let err = linf_error(from_store.data(), direct.data());
             assert!(err < 1e-5, "level {level}: {err}");
         }
-        fs::remove_dir_all(store.root()).ok();
+        fs::remove_dir_all(store.root().unwrap()).ok();
     }
 
     #[test]
@@ -518,7 +568,7 @@ mod tests {
             assert!(b > prev, "bytes must grow with level");
             prev = b;
         }
-        fs::remove_dir_all(store.root()).ok();
+        fs::remove_dir_all(store.root().unwrap()).ok();
     }
 
     #[test]
@@ -592,7 +642,7 @@ mod tests {
         assert_eq!(store.fields().unwrap(), vec!["alpha", "beta", "gamma"]);
         assert_eq!(store.layout("alpha").unwrap(), FieldLayout::Level);
         assert_eq!(store.layout("gamma").unwrap(), FieldLayout::Progressive);
-        fs::remove_dir_all(store.root()).ok();
+        fs::remove_dir_all(store.root().unwrap()).ok();
     }
 
     #[test]
@@ -601,7 +651,7 @@ mod tests {
         let t = crate::data::synth::smooth_test_field(&[9, 9]);
         let m = store.write_field("f", &t, 1).unwrap();
         assert!(store.reconstruct::<f32>("f", m.max_level + 1).is_err());
-        fs::remove_dir_all(store.root()).ok();
+        fs::remove_dir_all(store.root().unwrap()).ok();
     }
 
     #[test]
@@ -621,7 +671,7 @@ mod tests {
             Err(Error::UnsupportedFormat(_))
         ));
         assert!(store.reconstruct::<f32>("f", 0).is_err());
-        fs::remove_dir_all(store.root()).ok();
+        fs::remove_dir_all(store.root().unwrap()).ok();
     }
 
     #[test]
@@ -644,7 +694,7 @@ mod tests {
         let all = field.plan(f64::MIN_POSITIVE, Some(&reader.fetched())).unwrap();
         field.refine(&mut reader, &all).unwrap();
         assert!(reader.is_lossless());
-        fs::remove_dir_all(store.root()).ok();
+        fs::remove_dir_all(store.root().unwrap()).ok();
     }
 
     #[test]
@@ -652,11 +702,36 @@ mod tests {
         let store = temp_store("blobcheck");
         let t = crate::data::synth::smooth_test_field(&[9, 9]);
         store.write_field_progressive("f", &t, None, 1).unwrap();
-        let path = store.root().join("f").join("components.bin");
+        let path = store.root().unwrap().join("f").join("components.bin");
         let mut blob = fs::read(&path).unwrap();
         blob.truncate(blob.len() - 1);
         fs::write(&path, &blob).unwrap();
         assert!(store.progressive("f").is_err());
-        fs::remove_dir_all(store.root()).ok();
+        fs::remove_dir_all(store.root().unwrap()).ok();
+    }
+
+    #[test]
+    fn memory_backed_store_matches_file_backed() {
+        use crate::storage::MemoryStorage;
+        let t = crate::data::synth::smooth_test_field(&[17, 17]);
+        let mem = RefactorStore::with_storage(Arc::new(MemoryStorage::new()));
+        assert!(mem.root().is_none());
+        mem.write_field_progressive("f", &t, None, 3).unwrap();
+        let fs_store = temp_store("memdiff");
+        fs_store.write_field_progressive("f", &t, None, 3).unwrap();
+        // byte-identical objects through either backend
+        for key in ["f/manifest.bin", "f/components.bin"] {
+            assert_eq!(
+                mem.storage().read(key).unwrap(),
+                fs_store.storage().read(key).unwrap(),
+                "{key}"
+            );
+        }
+        assert_eq!(mem.fields().unwrap(), vec!["f"]);
+        let field = mem.progressive("f").unwrap();
+        let (back, plan): (Tensor<f32>, _) = field.retrieve(0.05).unwrap();
+        assert!(plan.certified_bound <= 0.05);
+        assert!(linf_error(t.data(), back.data()) <= 0.05);
+        fs::remove_dir_all(fs_store.root().unwrap()).ok();
     }
 }

@@ -33,6 +33,13 @@ pub enum Error {
     /// A worker in the coordinator pipeline panicked or failed.
     Pipeline(String),
 
+    /// A transient storage-backend failure (timeout, dropped connection,
+    /// injected fault): the same request may succeed if retried. Emitted by
+    /// remote-style [`crate::storage`] backends; the serving path retries
+    /// these (see [`crate::storage::with_retries`]) instead of failing the
+    /// client request outright.
+    Transient(String),
+
     /// A chunked container's index declares a blob region that falls outside
     /// the blob section (structured so callers can distinguish an index
     /// inconsistency — e.g. a truncated final block — from generic stream
@@ -61,6 +68,7 @@ impl std::fmt::Display for Error {
             Error::Xla(m) => write!(f, "xla runtime: {m}"),
             Error::Config(m) => write!(f, "config: {m}"),
             Error::Pipeline(m) => write!(f, "pipeline: {m}"),
+            Error::Transient(m) => write!(f, "transient storage failure: {m}"),
             Error::BlobOutOfRange {
                 block,
                 offset,
@@ -107,6 +115,17 @@ impl Error {
     /// Helper to build a [`Error::CorruptStream`].
     pub fn corrupt(msg: impl std::fmt::Display) -> Self {
         Error::CorruptStream(msg.to_string())
+    }
+
+    /// Helper to build a [`Error::Transient`].
+    pub fn transient(msg: impl std::fmt::Display) -> Self {
+        Error::Transient(msg.to_string())
+    }
+
+    /// Whether retrying the failed operation may succeed (used by the
+    /// serving path's bounded retry loop).
+    pub fn is_transient(&self) -> bool {
+        matches!(self, Error::Transient(_))
     }
 }
 

@@ -35,6 +35,8 @@ pub mod metrics;
 pub mod progressive;
 pub mod quant;
 pub mod runtime;
+pub mod serve;
+pub mod storage;
 pub mod stream;
 pub mod tensor;
 

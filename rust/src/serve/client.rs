@@ -1,0 +1,142 @@
+//! Client side of the serve protocol.
+//!
+//! [`ServeClient`] is one TCP connection speaking request/response frames;
+//! [`RemoteField`] layers a [`ProgressiveReader`] on top, so a consumer
+//! refines a remote field incrementally exactly like a local one — the
+//! server's per-connection fetch state means a `plan` with no explicit
+//! floor already accounts for everything this connection fetched.
+
+use super::protocol::{
+    decode_plan, parse_response, read_frame, write_frame, Request, ServeStats, WireReader,
+};
+use crate::error::{Error, Result};
+use crate::progressive::{ComponentId, FetchPlan, ProgressiveManifest, ProgressiveReader};
+use crate::tensor::{Scalar, Tensor};
+use std::net::{TcpStream, ToSocketAddrs};
+
+/// One connection to a serve daemon.
+pub struct ServeClient {
+    stream: TcpStream,
+}
+
+impl ServeClient {
+    /// Connect to a daemon.
+    pub fn connect(addr: impl ToSocketAddrs) -> Result<ServeClient> {
+        Ok(ServeClient {
+            stream: TcpStream::connect(addr)?,
+        })
+    }
+
+    fn call(&mut self, req: &Request) -> Result<Vec<u8>> {
+        write_frame(&mut self.stream, &req.encode())?;
+        let payload = read_frame(&mut self.stream)?
+            .ok_or_else(|| Error::corrupt("server closed the connection"))?;
+        parse_response(&payload).map(<[u8]>::to_vec)
+    }
+
+    /// The served field's manifest.
+    pub fn manifest(&mut self) -> Result<ProgressiveManifest> {
+        ProgressiveManifest::from_bytes(&self.call(&Request::Manifest)?)
+    }
+
+    /// Plan a fetch for `tau`. With `floor = None` the server plans from
+    /// this connection's fetch state.
+    pub fn plan(&mut self, tau: f64, floor: Option<&[usize]>) -> Result<FetchPlan> {
+        decode_plan(&self.call(&Request::Plan {
+            tau,
+            floor: floor.map(<[usize]>::to_vec),
+        })?)
+    }
+
+    /// Fetch one component's stored bytes.
+    pub fn fetch(&mut self, id: ComponentId) -> Result<Vec<u8>> {
+        self.call(&Request::Fetch {
+            stream: id.stream,
+            comp: id.comp,
+        })
+    }
+
+    /// Server-side error-bounded retrieval: the daemon plans, fetches and
+    /// reconstructs, returning the field (optionally cropped to `region`,
+    /// `(start, extent)` per axis) and the certified L∞ bound.
+    pub fn retrieve<T: Scalar>(
+        &mut self,
+        tau: f64,
+        region: Option<&[(usize, usize)]>,
+    ) -> Result<(Tensor<T>, f64)> {
+        let body = self.call(&Request::Retrieve {
+            tau,
+            region: region.map(<[(usize, usize)]>::to_vec),
+        })?;
+        let mut r = WireReader::new(&body);
+        let bound = r.f64()?;
+        let rank = r.u64()? as usize;
+        if rank == 0 || rank > 8 {
+            return Err(Error::corrupt(format!("implausible response rank {rank}")));
+        }
+        let mut shape = Vec::with_capacity(rank);
+        for _ in 0..rank {
+            shape.push(r.u64()? as usize);
+        }
+        let t = Tensor::from_le_bytes(&shape, r.rest())?;
+        Ok((t, bound))
+    }
+
+    /// Daemon counters.
+    pub fn stats(&mut self) -> Result<ServeStats> {
+        ServeStats::decode(&self.call(&Request::Stats)?)
+    }
+
+    /// Ask the daemon to stop accepting connections.
+    pub fn shutdown(&mut self) -> Result<()> {
+        self.call(&Request::Shutdown).map(|_| ())
+    }
+}
+
+/// A remote progressive field with client-side incremental state:
+/// [`RemoteField::refine`] transfers only components this connection has
+/// not yet fetched, refines them into the reader in place, and
+/// reconstructs.
+pub struct RemoteField<T: Scalar> {
+    client: ServeClient,
+    reader: ProgressiveReader<T>,
+}
+
+impl<T: Scalar> RemoteField<T> {
+    /// Connect and fetch the manifest, starting from nothing fetched.
+    pub fn open(addr: impl ToSocketAddrs) -> Result<RemoteField<T>> {
+        let mut client = ServeClient::connect(addr)?;
+        let manifest = client.manifest()?;
+        Ok(RemoteField {
+            client,
+            reader: ProgressiveReader::new(manifest)?,
+        })
+    }
+
+    /// Refine to tolerance `tau` and reconstruct. The plan comes from the
+    /// server's per-connection fetch state, so repeated calls with
+    /// tightening tolerances transfer only deltas.
+    pub fn refine(&mut self, tau: f64) -> Result<(Tensor<T>, FetchPlan)> {
+        let plan = self.client.plan(tau, None)?;
+        for id in plan.components_beyond(&self.reader.fetched()) {
+            let bytes = self.client.fetch(id)?;
+            self.reader.apply(id, &bytes)?;
+        }
+        Ok((self.reader.reconstruct()?, plan))
+    }
+
+    /// Certified L∞ bound of the current client-side state.
+    pub fn current_bound(&self) -> f64 {
+        self.reader.current_bound()
+    }
+
+    /// Stored bytes transferred so far.
+    pub fn bytes_fetched(&self) -> u64 {
+        self.reader.bytes_fetched()
+    }
+
+    /// The underlying connection (e.g. for `stats` or `shutdown`).
+    pub fn client_mut(&mut self) -> &mut ServeClient {
+        &mut self.client
+    }
+}

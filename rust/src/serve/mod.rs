@@ -1,0 +1,26 @@
+//! Error-bounded retrieval serving (`mgardp serve`).
+//!
+//! The refactor-once / retrieve-many workflow of MGARD+ (§6.2.2) ends at
+//! a *serving* problem: one refactored archive, many consumers, each with
+//! its own accuracy target. This module provides the whole path in-tree,
+//! with no external crates:
+//!
+//! * [`protocol`] — a length-prefixed TCP wire protocol: `plan τ` /
+//!   `fetch component` / `retrieve region` / `stats` / `shutdown`, with
+//!   versioned, validated frames (normative layout in `docs/SERVING.md`).
+//! * [`server`] — a thread-per-connection daemon over
+//!   [`std::net::TcpListener`], sharing one byte-capacity LRU component
+//!   cache across all clients and tracking per-connection fetch state.
+//! * [`client`] — [`ServeClient`] (one connection) and [`RemoteField`]
+//!   (incremental client-side refinement over that connection).
+//!
+//! Every retrieval carries its certified L∞ bound: the serving path
+//! preserves the planner's `‖u − ũ‖∞ ≤ τ` certificate end to end.
+
+pub mod client;
+pub mod protocol;
+pub mod server;
+
+pub use client::{RemoteField, ServeClient};
+pub use protocol::ServeStats;
+pub use server::{ServeConfig, Server};

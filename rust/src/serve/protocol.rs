@@ -1,0 +1,530 @@
+//! Wire protocol of the `mgardp serve` daemon.
+//!
+//! Transport is a plain TCP byte stream carrying **length-prefixed
+//! frames**: a little-endian `u32` payload length followed by the
+//! payload. Every *request* payload starts with the 4-byte magic
+//! [`SERVE_MAGIC`], the protocol version byte and an op byte, then an
+//! op-specific body. Every *response* payload starts with a status byte
+//! ([`SERVE_RESP_OK`] / [`SERVE_RESP_ERR`]) followed by the op-specific
+//! body (OK) or a UTF-8 error message (ERR). All integers on the wire are
+//! fixed-width little-endian; tolerances and bounds are `f64` bit
+//! patterns, little-endian.
+//!
+//! The normative frame layouts live in `docs/SERVING.md`; the constants
+//! below are covered by the `scripts/check_docs.py` drift gate.
+
+use crate::error::{Error, Result};
+use std::io::{Read, Write};
+
+/// Magic prefix of every request payload.
+pub const SERVE_MAGIC: &[u8; 4] = b"MGSV";
+/// Current serve protocol version.
+pub const SERVE_PROTOCOL_VERSION: u8 = 1;
+
+/// Request the field's progressive manifest (body: empty).
+pub const SERVE_OP_MANIFEST: u8 = 1;
+/// Plan an error-bounded fetch (body: `tau: f64`, `nfloor: u64`,
+/// `nfloor × u64` per-stream floor; `nfloor = 0` uses the connection's
+/// fetch state as the floor).
+pub const SERVE_OP_PLAN: u8 = 2;
+/// Fetch one component's stored bytes (body: `stream: u64`, `comp: u64`).
+pub const SERVE_OP_FETCH: u8 = 3;
+/// Server-side error-bounded retrieval (body: `tau: f64`, `rank: u64`,
+/// `rank × (start: u64, extent: u64)` region; `rank = 0` retrieves the
+/// whole field).
+pub const SERVE_OP_RETRIEVE: u8 = 4;
+/// Request daemon counters (body: empty).
+pub const SERVE_OP_STATS: u8 = 5;
+/// Stop the daemon after acknowledging (body: empty).
+pub const SERVE_OP_SHUTDOWN: u8 = 6;
+
+/// Response status: success, op-specific body follows.
+pub const SERVE_RESP_OK: u8 = 0;
+/// Response status: failure, UTF-8 error message follows.
+pub const SERVE_RESP_ERR: u8 = 1;
+
+/// Upper bound on a single frame's payload (1 GiB): refuses hostile
+/// length prefixes before allocating.
+pub const MAX_FRAME_BYTES: u32 = 1 << 30;
+
+/// Write one length-prefixed frame.
+pub fn write_frame(w: &mut impl Write, payload: &[u8]) -> Result<()> {
+    if payload.len() as u64 > MAX_FRAME_BYTES as u64 {
+        return Err(Error::invalid(format!(
+            "frame payload of {} bytes exceeds the {MAX_FRAME_BYTES}-byte cap",
+            payload.len()
+        )));
+    }
+    w.write_all(&(payload.len() as u32).to_le_bytes())?;
+    w.write_all(payload)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Read one length-prefixed frame. Returns `None` on a clean EOF at a
+/// frame boundary (the peer closed the connection); EOF mid-frame is an
+/// error.
+pub fn read_frame(r: &mut impl Read) -> Result<Option<Vec<u8>>> {
+    let mut len = [0u8; 4];
+    let mut got = 0;
+    while got < 4 {
+        match r.read(&mut len[got..])? {
+            0 if got == 0 => return Ok(None),
+            0 => return Err(Error::corrupt("connection closed mid-frame")),
+            n => got += n,
+        }
+    }
+    let len = u32::from_le_bytes(len);
+    if len > MAX_FRAME_BYTES {
+        return Err(Error::corrupt(format!(
+            "frame declares {len} bytes (cap {MAX_FRAME_BYTES})"
+        )));
+    }
+    let mut payload = vec![0u8; len as usize];
+    r.read_exact(&mut payload)?;
+    Ok(Some(payload))
+}
+
+/// Cursor over a frame body: fixed-width little-endian scalars.
+pub struct WireReader<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> WireReader<'a> {
+    /// Start reading `bytes` from the front.
+    pub fn new(bytes: &'a [u8]) -> WireReader<'a> {
+        WireReader { bytes, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        let end = self
+            .pos
+            .checked_add(n)
+            .filter(|&e| e <= self.bytes.len())
+            .ok_or_else(|| Error::corrupt("truncated protocol frame"))?;
+        let out = &self.bytes[self.pos..end];
+        self.pos = end;
+        Ok(out)
+    }
+
+    /// Next byte.
+    pub fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    /// Next little-endian `u64`.
+    pub fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    /// Next little-endian `f64`.
+    pub fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    /// Everything not yet consumed.
+    pub fn rest(self) -> &'a [u8] {
+        &self.bytes[self.pos..]
+    }
+
+    /// Bytes not yet consumed.
+    pub fn remaining(&self) -> usize {
+        self.bytes.len() - self.pos
+    }
+}
+
+/// Append a little-endian `u64`.
+pub fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Append a little-endian `f64`.
+pub fn put_f64(out: &mut Vec<u8>, v: f64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+/// A decoded request.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Request {
+    /// Send the field's manifest bytes.
+    Manifest,
+    /// Plan a fetch for tolerance `tau`; `floor = None` plans from the
+    /// connection's fetch state.
+    Plan {
+        /// Requested L∞ tolerance.
+        tau: f64,
+        /// Explicit per-stream floor, or `None` for the connection floor.
+        floor: Option<Vec<usize>>,
+    },
+    /// Send one component's stored bytes.
+    Fetch {
+        /// Stream index.
+        stream: usize,
+        /// Component index within the stream.
+        comp: usize,
+    },
+    /// Reconstruct server-side within `tau`, optionally cropped.
+    Retrieve {
+        /// Requested L∞ tolerance.
+        tau: f64,
+        /// `(start, extent)` per axis, or `None` for the whole field.
+        region: Option<Vec<(usize, usize)>>,
+    },
+    /// Send daemon counters.
+    Stats,
+    /// Acknowledge, then stop the daemon.
+    Shutdown,
+}
+
+impl Request {
+    /// Serialize into a request payload (magic + version + op + body).
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend_from_slice(SERVE_MAGIC);
+        out.push(SERVE_PROTOCOL_VERSION);
+        match self {
+            Request::Manifest => out.push(SERVE_OP_MANIFEST),
+            Request::Plan { tau, floor } => {
+                out.push(SERVE_OP_PLAN);
+                put_f64(&mut out, *tau);
+                let floor = floor.as_deref().unwrap_or(&[]);
+                put_u64(&mut out, floor.len() as u64);
+                for &c in floor {
+                    put_u64(&mut out, c as u64);
+                }
+            }
+            Request::Fetch { stream, comp } => {
+                out.push(SERVE_OP_FETCH);
+                put_u64(&mut out, *stream as u64);
+                put_u64(&mut out, *comp as u64);
+            }
+            Request::Retrieve { tau, region } => {
+                out.push(SERVE_OP_RETRIEVE);
+                put_f64(&mut out, *tau);
+                let region = region.as_deref().unwrap_or(&[]);
+                put_u64(&mut out, region.len() as u64);
+                for &(start, extent) in region {
+                    put_u64(&mut out, start as u64);
+                    put_u64(&mut out, extent as u64);
+                }
+            }
+            Request::Stats => out.push(SERVE_OP_STATS),
+            Request::Shutdown => out.push(SERVE_OP_SHUTDOWN),
+        }
+        out
+    }
+
+    /// Parse a request payload. Foreign magic, unknown versions or ops,
+    /// and truncated or over-long bodies are refused with structured
+    /// errors.
+    pub fn decode(payload: &[u8]) -> Result<Request> {
+        if payload.len() < 6 || &payload[..4] != SERVE_MAGIC {
+            return Err(Error::UnsupportedFormat(
+                "not a serve protocol request (bad magic)".into(),
+            ));
+        }
+        let mut r = WireReader::new(&payload[4..]);
+        let version = r.u8()?;
+        if version != SERVE_PROTOCOL_VERSION {
+            return Err(Error::UnsupportedFormat(format!(
+                "serve protocol version {version} (supported: {SERVE_PROTOCOL_VERSION})"
+            )));
+        }
+        let op = r.u8()?;
+        let req = match op {
+            SERVE_OP_MANIFEST => Request::Manifest,
+            SERVE_OP_PLAN => {
+                let tau = r.f64()?;
+                let n = r.u64()? as usize;
+                if n > 64 {
+                    return Err(Error::corrupt(format!("implausible floor length {n}")));
+                }
+                let mut floor = Vec::with_capacity(n);
+                for _ in 0..n {
+                    floor.push(r.u64()? as usize);
+                }
+                Request::Plan {
+                    tau,
+                    floor: (n > 0).then_some(floor),
+                }
+            }
+            SERVE_OP_FETCH => Request::Fetch {
+                stream: r.u64()? as usize,
+                comp: r.u64()? as usize,
+            },
+            SERVE_OP_RETRIEVE => {
+                let tau = r.f64()?;
+                let rank = r.u64()? as usize;
+                if rank > 8 {
+                    return Err(Error::corrupt(format!("implausible region rank {rank}")));
+                }
+                let mut region = Vec::with_capacity(rank);
+                for _ in 0..rank {
+                    region.push((r.u64()? as usize, r.u64()? as usize));
+                }
+                Request::Retrieve {
+                    tau,
+                    region: (rank > 0).then_some(region),
+                }
+            }
+            SERVE_OP_STATS => Request::Stats,
+            SERVE_OP_SHUTDOWN => Request::Shutdown,
+            other => {
+                return Err(Error::UnsupportedFormat(format!(
+                    "unknown serve op {other}"
+                )))
+            }
+        };
+        if r.remaining() != 0 {
+            return Err(Error::corrupt(format!(
+                "{} trailing bytes after the request body",
+                r.remaining()
+            )));
+        }
+        Ok(req)
+    }
+}
+
+/// Daemon counters, as returned by the `stats` request (nine `u64`s on
+/// the wire, in declaration order).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ServeStats {
+    /// Component-cache hits.
+    pub hits: u64,
+    /// Component-cache misses.
+    pub misses: u64,
+    /// Component-cache evictions.
+    pub evictions: u64,
+    /// Bytes currently cached.
+    pub bytes_used: u64,
+    /// Entries currently cached.
+    pub entries: u64,
+    /// Cache capacity in bytes.
+    pub capacity: u64,
+    /// Requests handled since startup.
+    pub requests: u64,
+    /// Connections accepted since startup.
+    pub connections: u64,
+    /// Transient storage failures absorbed by retries.
+    pub transient_retries: u64,
+}
+
+impl ServeStats {
+    /// Serialize for the wire.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        for v in [
+            self.hits,
+            self.misses,
+            self.evictions,
+            self.bytes_used,
+            self.entries,
+            self.capacity,
+            self.requests,
+            self.connections,
+            self.transient_retries,
+        ] {
+            put_u64(&mut out, v);
+        }
+        out
+    }
+
+    /// Parse from the wire.
+    pub fn decode(bytes: &[u8]) -> Result<ServeStats> {
+        let mut r = WireReader::new(bytes);
+        let s = ServeStats {
+            hits: r.u64()?,
+            misses: r.u64()?,
+            evictions: r.u64()?,
+            bytes_used: r.u64()?,
+            entries: r.u64()?,
+            capacity: r.u64()?,
+            requests: r.u64()?,
+            connections: r.u64()?,
+            transient_retries: r.u64()?,
+        };
+        if r.remaining() != 0 {
+            return Err(Error::corrupt("trailing bytes after stats"));
+        }
+        Ok(s)
+    }
+}
+
+/// Serialize a [`FetchPlan`] for the wire: `nstreams: u64`,
+/// `nstreams × u64` per-stream component counts, then `tau`,
+/// `certified_bound` (`f64`) and `bytes`, `total_bytes` (`u64`).
+pub fn encode_plan(plan: &crate::progressive::FetchPlan) -> Vec<u8> {
+    let mut out = Vec::new();
+    put_u64(&mut out, plan.per_stream.len() as u64);
+    for &c in &plan.per_stream {
+        put_u64(&mut out, c as u64);
+    }
+    put_f64(&mut out, plan.tau);
+    put_f64(&mut out, plan.certified_bound);
+    put_u64(&mut out, plan.bytes);
+    put_u64(&mut out, plan.total_bytes);
+    out
+}
+
+/// Parse a [`FetchPlan`] from the wire.
+pub fn decode_plan(bytes: &[u8]) -> Result<crate::progressive::FetchPlan> {
+    let mut r = WireReader::new(bytes);
+    let n = r.u64()? as usize;
+    if n > 64 {
+        return Err(Error::corrupt(format!("implausible stream count {n}")));
+    }
+    let mut per_stream = Vec::with_capacity(n);
+    for _ in 0..n {
+        per_stream.push(r.u64()? as usize);
+    }
+    let plan = crate::progressive::FetchPlan {
+        tau: r.f64()?,
+        per_stream,
+        certified_bound: r.f64()?,
+        bytes: r.u64()?,
+        total_bytes: r.u64()?,
+    };
+    if r.remaining() != 0 {
+        return Err(Error::corrupt("trailing bytes after the plan"));
+    }
+    Ok(plan)
+}
+
+/// Encode an OK response: status byte + body.
+pub fn ok_response(body: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(1 + body.len());
+    out.push(SERVE_RESP_OK);
+    out.extend_from_slice(body);
+    out
+}
+
+/// Encode an ERR response: status byte + UTF-8 message.
+pub fn err_response(msg: &str) -> Vec<u8> {
+    let mut out = Vec::with_capacity(1 + msg.len());
+    out.push(SERVE_RESP_ERR);
+    out.extend_from_slice(msg.as_bytes());
+    out
+}
+
+/// Split a response payload into its body, surfacing ERR responses as
+/// structured errors.
+pub fn parse_response(payload: &[u8]) -> Result<&[u8]> {
+    match payload.first() {
+        Some(&SERVE_RESP_OK) => Ok(&payload[1..]),
+        Some(&SERVE_RESP_ERR) => Err(Error::invalid(format!(
+            "server error: {}",
+            String::from_utf8_lossy(&payload[1..])
+        ))),
+        _ => Err(Error::corrupt("empty response payload")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frames_round_trip() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, b"hello").unwrap();
+        write_frame(&mut buf, b"").unwrap();
+        let mut r = &buf[..];
+        assert_eq!(read_frame(&mut r).unwrap().unwrap(), b"hello");
+        assert_eq!(read_frame(&mut r).unwrap().unwrap(), b"");
+        assert!(read_frame(&mut r).unwrap().is_none());
+        // EOF mid-frame is an error, not a clean close
+        let mut cut = &buf[..3];
+        assert!(read_frame(&mut cut).is_err());
+        let mut cut = &buf[..6];
+        assert!(read_frame(&mut cut).is_err());
+        // hostile length prefix refused before allocation
+        let mut hostile = &u32::MAX.to_le_bytes()[..];
+        assert!(read_frame(&mut hostile).is_err());
+    }
+
+    #[test]
+    fn requests_round_trip() {
+        let reqs = [
+            Request::Manifest,
+            Request::Plan {
+                tau: 0.25,
+                floor: None,
+            },
+            Request::Plan {
+                tau: 1e-3,
+                floor: Some(vec![2, 0, 5]),
+            },
+            Request::Fetch { stream: 3, comp: 7 },
+            Request::Retrieve {
+                tau: 0.5,
+                region: None,
+            },
+            Request::Retrieve {
+                tau: 0.5,
+                region: Some(vec![(0, 8), (4, 4)]),
+            },
+            Request::Stats,
+            Request::Shutdown,
+        ];
+        for req in reqs {
+            let payload = req.encode();
+            assert_eq!(&payload[..4], SERVE_MAGIC);
+            assert_eq!(payload[4], SERVE_PROTOCOL_VERSION);
+            assert_eq!(Request::decode(&payload).unwrap(), req, "{req:?}");
+        }
+    }
+
+    #[test]
+    fn hostile_requests_refused() {
+        assert!(Request::decode(b"").is_err());
+        assert!(Request::decode(b"JUNK\x01\x01").is_err());
+        // unknown version
+        let mut p = Request::Stats.encode();
+        p[4] = 9;
+        assert!(matches!(
+            Request::decode(&p),
+            Err(Error::UnsupportedFormat(_))
+        ));
+        // unknown op
+        let mut p = Request::Stats.encode();
+        p[5] = 99;
+        assert!(Request::decode(&p).is_err());
+        // truncated body
+        let p = Request::Fetch { stream: 1, comp: 2 }.encode();
+        assert!(Request::decode(&p[..p.len() - 1]).is_err());
+        // trailing garbage
+        let mut p = Request::Manifest.encode();
+        p.push(0);
+        assert!(Request::decode(&p).is_err());
+        // implausible floor length refused before allocation
+        let mut p = Request::Plan {
+            tau: 1.0,
+            floor: None,
+        }
+        .encode();
+        let n = p.len();
+        p[n - 8..].copy_from_slice(&u64::MAX.to_le_bytes());
+        assert!(Request::decode(&p).is_err());
+    }
+
+    #[test]
+    fn responses_and_stats_round_trip() {
+        assert_eq!(parse_response(&ok_response(b"body")).unwrap(), b"body");
+        assert!(parse_response(&err_response("boom")).is_err());
+        assert!(parse_response(&[]).is_err());
+        let s = ServeStats {
+            hits: 1,
+            misses: 2,
+            evictions: 3,
+            bytes_used: 4,
+            entries: 5,
+            capacity: 6,
+            requests: 7,
+            connections: 8,
+            transient_retries: 9,
+        };
+        assert_eq!(ServeStats::decode(&s.encode()).unwrap(), s);
+        assert!(ServeStats::decode(&s.encode()[..8]).is_err());
+    }
+}

@@ -1,0 +1,355 @@
+//! The `mgardp serve` daemon: concurrent error-bounded retrieval.
+//!
+//! One [`Server`] owns one progressively refactored field (over any
+//! [`crate::storage::Storage`] backend) and answers simultaneous clients
+//! over plain TCP — a hand-rolled thread-per-connection loop on
+//! [`std::net::TcpListener`], no external crates. All connections share
+//! one byte-capacity [`ComponentCache`], so the hot prefix components
+//! (sign planes, high bitplanes) are fetched from the backend once and
+//! then served from memory to every client; per-connection **fetch
+//! state** (components already served on that connection) lets a `plan`
+//! request with no explicit floor return exactly the delta the client
+//! still needs.
+//!
+//! Shutdown is cooperative: the `shutdown` op (or [`Server::stop`]) sets
+//! a flag and wakes the accept loop with a loopback connection, so the
+//! daemon exits without killing in-flight connections mid-frame.
+
+use super::protocol::{
+    encode_plan, err_response, ok_response, put_f64, put_u64, read_frame, write_frame, Request,
+    ServeStats,
+};
+use crate::coordinator::refactor::ProgressiveField;
+use crate::error::{Error, Result};
+use crate::progressive::ComponentId;
+use crate::storage::ComponentCache;
+use crate::tensor::Scalar;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+/// Daemon configuration.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Bind address (`"127.0.0.1:0"` picks an ephemeral port; the bound
+    /// address is available from [`Server::addr`]).
+    pub addr: String,
+    /// Shared component-cache capacity in bytes.
+    pub cache_bytes: u64,
+    /// Retry budget per component fetch on transient backend failures.
+    pub retries: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> ServeConfig {
+        ServeConfig {
+            addr: "127.0.0.1:0".into(),
+            cache_bytes: 64 << 20,
+            retries: 3,
+        }
+    }
+}
+
+struct Shared {
+    field: ProgressiveField,
+    cache: ComponentCache,
+    requests: AtomicU64,
+    connections: AtomicU64,
+    stop: AtomicBool,
+}
+
+impl Shared {
+    /// One component through the shared cache (backend fetch on a miss,
+    /// with the field's retry budget).
+    fn fetch_cached(&self, id: ComponentId) -> Result<Arc<Vec<u8>>> {
+        let key = format!("{}/{}", id.stream, id.comp);
+        self.cache
+            .get_or_fetch(&key, || self.field.fetch_component(id))
+    }
+
+    fn stats(&self) -> ServeStats {
+        let c = self.cache.stats();
+        ServeStats {
+            hits: c.hits,
+            misses: c.misses,
+            evictions: c.evictions,
+            bytes_used: c.bytes_used,
+            entries: c.entries,
+            capacity: c.capacity,
+            requests: self.requests.load(Ordering::Relaxed),
+            connections: self.connections.load(Ordering::Relaxed),
+            transient_retries: self.field.retries_spent(),
+        }
+    }
+}
+
+/// A running serve daemon. Dropping the server stops it.
+pub struct Server {
+    addr: SocketAddr,
+    shared: Arc<Shared>,
+    accept: Option<JoinHandle<()>>,
+}
+
+impl Server {
+    /// Bind `cfg.addr` and start serving `field`.
+    pub fn start(mut field: ProgressiveField, cfg: &ServeConfig) -> Result<Server> {
+        field.set_retry_budget(cfg.retries);
+        let listener = TcpListener::bind(cfg.addr.as_str())?;
+        let addr = listener.local_addr()?;
+        let shared = Arc::new(Shared {
+            field,
+            cache: ComponentCache::new(cfg.cache_bytes),
+            requests: AtomicU64::new(0),
+            connections: AtomicU64::new(0),
+            stop: AtomicBool::new(false),
+        });
+        let accept_shared = Arc::clone(&shared);
+        let accept = std::thread::spawn(move || {
+            for conn in listener.incoming() {
+                if accept_shared.stop.load(Ordering::SeqCst) {
+                    break;
+                }
+                let Ok(stream) = conn else { continue };
+                accept_shared.connections.fetch_add(1, Ordering::Relaxed);
+                let conn_shared = Arc::clone(&accept_shared);
+                std::thread::spawn(move || handle_connection(&conn_shared, addr, stream));
+            }
+        });
+        Ok(Server {
+            addr,
+            shared,
+            accept: Some(accept),
+        })
+    }
+
+    /// The bound address (resolves an ephemeral-port bind).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Current daemon counters.
+    pub fn stats(&self) -> ServeStats {
+        self.shared.stats()
+    }
+
+    /// Block until the accept loop exits — i.e. until a client sends the
+    /// protocol `shutdown` op or another thread flips the stop flag. This
+    /// is what `mgardp serve` parks on after printing the bound address.
+    pub fn wait(&mut self) {
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+
+    /// Stop accepting connections and join the accept loop. In-flight
+    /// connections finish their current frame; idempotent.
+    pub fn stop(&mut self) {
+        self.shared.stop.store(true, Ordering::SeqCst);
+        // wake the accept loop so it observes the flag
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+enum Outcome {
+    Body(Vec<u8>),
+    Shutdown,
+}
+
+fn handle_connection(shared: &Arc<Shared>, addr: SocketAddr, mut stream: TcpStream) {
+    // per-connection fetch state: components already served, per stream
+    let mut floor = vec![0usize; shared.field.manifest().streams.len()];
+    loop {
+        let payload = match read_frame(&mut stream) {
+            Ok(Some(p)) => p,
+            // clean close, or a connection-level failure we can't answer
+            Ok(None) | Err(_) => return,
+        };
+        shared.requests.fetch_add(1, Ordering::Relaxed);
+        let outcome = Request::decode(&payload).and_then(|req| handle_request(shared, &mut floor, req));
+        let (resp, stop_after) = match outcome {
+            Ok(Outcome::Body(body)) => (ok_response(&body), false),
+            Ok(Outcome::Shutdown) => (ok_response(&[]), true),
+            Err(e) => (err_response(&e.to_string()), false),
+        };
+        if write_frame(&mut stream, &resp).is_err() {
+            return;
+        }
+        if stop_after {
+            shared.stop.store(true, Ordering::SeqCst);
+            // wake the accept loop so it observes the flag
+            let _ = TcpStream::connect(addr);
+            return;
+        }
+    }
+}
+
+fn handle_request(shared: &Shared, floor: &mut [usize], req: Request) -> Result<Outcome> {
+    match req {
+        Request::Manifest => Ok(Outcome::Body(shared.field.manifest().to_bytes())),
+        Request::Plan { tau, floor: explicit } => {
+            let base = match &explicit {
+                Some(f) => f.as_slice(),
+                None => floor,
+            };
+            let plan = shared.field.plan(tau, Some(base))?;
+            Ok(Outcome::Body(encode_plan(&plan)))
+        }
+        Request::Fetch { stream, comp } => {
+            let id = ComponentId { stream, comp };
+            let bytes = shared.fetch_cached(id)?;
+            // advance the connection floor only on in-order fetches, so it
+            // always describes a contiguous prefix (a valid planner floor)
+            if stream < floor.len() && comp == floor[stream] {
+                floor[stream] += 1;
+            }
+            Ok(Outcome::Body(bytes.to_vec()))
+        }
+        Request::Retrieve { tau, region } => {
+            let body = match shared.field.manifest().dtype {
+                1 => retrieve_body::<f32>(shared, tau, region.as_deref()),
+                2 => retrieve_body::<f64>(shared, tau, region.as_deref()),
+                t => Err(Error::corrupt(format!("unknown dtype tag {t}"))),
+            }?;
+            Ok(Outcome::Body(body))
+        }
+        Request::Stats => Ok(Outcome::Body(shared.stats().encode())),
+        Request::Shutdown => Ok(Outcome::Shutdown),
+    }
+}
+
+/// Server-side retrieval: plan for `tau`, pull the planned components
+/// through the shared cache, reconstruct, optionally crop. Body layout:
+/// `certified_bound: f64`, `rank: u64`, `rank × u64` shape, then the raw
+/// little-endian scalars.
+fn retrieve_body<T: Scalar>(
+    shared: &Shared,
+    tau: f64,
+    region: Option<&[(usize, usize)]>,
+) -> Result<Vec<u8>> {
+    let plan = shared.field.plan(tau, None)?;
+    let mut reader = shared.field.reader::<T>()?;
+    for id in plan.components() {
+        reader.apply(id, &shared.fetch_cached(id)?)?;
+    }
+    let full = reader.reconstruct()?;
+    let out = match region {
+        Some(reg) => {
+            if reg.len() != full.shape().len() {
+                return Err(Error::invalid(format!(
+                    "region rank {} for a rank-{} field",
+                    reg.len(),
+                    full.shape().len()
+                )));
+            }
+            let start: Vec<usize> = reg.iter().map(|&(s, _)| s).collect();
+            let size: Vec<usize> = reg.iter().map(|&(_, e)| e).collect();
+            full.block(&start, &size)?
+        }
+        None => full,
+    };
+    let mut body = Vec::new();
+    put_f64(&mut body, plan.certified_bound);
+    put_u64(&mut body, out.shape().len() as u64);
+    for &d in out.shape() {
+        put_u64(&mut body, d as u64);
+    }
+    body.extend_from_slice(&out.to_le_bytes());
+    Ok(body)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::refactor::RefactorStore;
+    use crate::metrics::linf_error;
+    use crate::serve::client::{RemoteField, ServeClient};
+    use crate::storage::{MemoryStorage, MockStorage, Storage};
+    use std::time::Duration;
+
+    fn memory_field(shape: &[usize]) -> (ProgressiveField, crate::tensor::Tensor<f32>) {
+        let t = crate::data::synth::smooth_test_field(shape);
+        let store = RefactorStore::with_storage(Arc::new(MemoryStorage::new()));
+        store.write_field_progressive("u", &t, None, 3).unwrap();
+        (store.progressive("u").unwrap(), t)
+    }
+
+    #[test]
+    fn serves_plan_fetch_retrieve_and_stats() {
+        let (field, t) = memory_field(&[17, 18]);
+        let mut server = Server::start(field, &ServeConfig::default()).unwrap();
+        let addr = server.addr();
+        // client-side reconstruction via plan + fetch
+        let mut remote: RemoteField<f32> = RemoteField::open(addr).unwrap();
+        let (back, plan) = remote.refine(0.05).unwrap();
+        assert!(plan.certified_bound <= 0.05);
+        assert!(linf_error(t.data(), back.data()) <= 0.05);
+        // tightening reuses the connection floor: only the delta transfers
+        let (tight, plan2) = remote.refine(1e-3).unwrap();
+        assert!(plan2.bytes >= plan.bytes);
+        assert!(linf_error(t.data(), tight.data()) <= 1e-3);
+        // server-side retrieval, whole field and a cropped region
+        let mut client = ServeClient::connect(addr).unwrap();
+        let (full, bound) = client.retrieve::<f32>(0.05, None).unwrap();
+        assert!(bound <= 0.05);
+        assert_eq!(full.shape(), t.shape());
+        assert!(linf_error(t.data(), full.data()) <= 0.05);
+        let (block, _) = client.retrieve::<f32>(0.05, Some(&[(2, 8), (3, 9)])).unwrap();
+        assert_eq!(block.shape(), &[8, 9]);
+        let direct = t.block(&[2, 3], &[8, 9]).unwrap();
+        for (a, b) in direct.data().iter().zip(block.data()) {
+            assert!((a - b).abs() as f64 <= 0.05);
+        }
+        // the second retrieval hit the shared cache
+        let stats = client.stats().unwrap();
+        assert!(stats.hits > 0, "{stats:?}");
+        assert!(stats.connections >= 2);
+        server.stop();
+    }
+
+    #[test]
+    fn protocol_shutdown_stops_the_daemon() {
+        let (field, _) = memory_field(&[9, 9]);
+        let mut server = Server::start(field, &ServeConfig::default()).unwrap();
+        let mut client = ServeClient::connect(server.addr()).unwrap();
+        client.shutdown().unwrap();
+        // the accept loop has exited (or is about to); joining must not hang
+        server.stop();
+    }
+
+    #[test]
+    fn survives_mock_latency_and_transient_failures() {
+        let t = crate::data::synth::smooth_test_field(&[17, 17]);
+        let mem = Arc::new(MemoryStorage::new());
+        let writer = RefactorStore::with_storage(Arc::clone(&mem) as Arc<dyn Storage>);
+        writer.write_field_progressive("u", &t, None, 3).unwrap();
+        let mock = Arc::new(MockStorage::new(
+            mem,
+            Duration::from_micros(200),
+            5, // every 5th read fails transiently
+        ));
+        let store = RefactorStore::with_storage(mock);
+        let field = store.progressive("u").unwrap();
+        let cfg = ServeConfig {
+            retries: 4,
+            ..ServeConfig::default()
+        };
+        let mut server = Server::start(field, &cfg).unwrap();
+        let mut remote: RemoteField<f32> = RemoteField::open(server.addr()).unwrap();
+        let (back, plan) = remote.refine(0.01).unwrap();
+        assert!(plan.certified_bound <= 0.01);
+        assert!(linf_error(t.data(), back.data()) <= 0.01);
+        let stats = server.stats();
+        assert!(stats.transient_retries > 0, "{stats:?}");
+        server.stop();
+    }
+}

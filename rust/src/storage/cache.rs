@@ -1,0 +1,285 @@
+//! Shared LRU component cache for the serving path.
+//!
+//! One archive serves many clients at many tolerances, and every plan's
+//! fetch set is a *prefix* per stream — so the same leading components
+//! (sign planes, high bitplanes) are requested over and over. The daemon
+//! puts this cache between the wire and the [`super::Storage`] backend:
+//! capacity is in **bytes** of cached payload, eviction is strict
+//! least-recently-used, and hit/miss/eviction counters are surfaced to
+//! clients through the `stats` request.
+
+use crate::error::Result;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+/// Counters and occupancy of a [`ComponentCache`], as returned by
+/// [`ComponentCache::stats`] (and serialized by the serve protocol).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    /// Lookups answered from the cache.
+    pub hits: u64,
+    /// Lookups that had to go to the backend.
+    pub misses: u64,
+    /// Entries evicted to make room.
+    pub evictions: u64,
+    /// Bytes currently cached.
+    pub bytes_used: u64,
+    /// Entries currently cached.
+    pub entries: u64,
+    /// Configured capacity in bytes.
+    pub capacity: u64,
+}
+
+struct Inner {
+    /// key -> (payload, last-use stamp)
+    map: HashMap<String, (Arc<Vec<u8>>, u64)>,
+    /// stamp -> key, the recency order (stamps are unique: the clock only
+    /// moves forward and every touch re-stamps).
+    order: std::collections::BTreeMap<u64, String>,
+    clock: u64,
+    bytes_used: u64,
+    hits: u64,
+    misses: u64,
+    evictions: u64,
+}
+
+/// Thread-safe byte-capacity LRU over opaque payloads.
+///
+/// Invariants:
+/// * `bytes_used <= capacity` after every operation.
+/// * An object larger than the whole capacity is returned to the caller
+///   but never cached (it would evict everything for no reuse).
+/// * Eviction order is strict LRU over *completed* lookups; a `get` (hit)
+///   refreshes recency exactly like an insert.
+pub struct ComponentCache {
+    inner: Mutex<Inner>,
+    capacity: u64,
+}
+
+impl ComponentCache {
+    /// An empty cache holding at most `capacity` payload bytes.
+    pub fn new(capacity: u64) -> ComponentCache {
+        ComponentCache {
+            inner: Mutex::new(Inner {
+                map: HashMap::new(),
+                order: std::collections::BTreeMap::new(),
+                clock: 0,
+                bytes_used: 0,
+                hits: 0,
+                misses: 0,
+                evictions: 0,
+            }),
+            capacity,
+        }
+    }
+
+    /// Look up `key`, counting a hit or miss and refreshing recency on a
+    /// hit.
+    pub fn get(&self, key: &str) -> Option<Arc<Vec<u8>>> {
+        let mut g = self.inner.lock().unwrap();
+        g.clock += 1;
+        let stamp = g.clock;
+        let hit = match g.map.get_mut(key) {
+            Some((payload, old)) => {
+                let prev = std::mem::replace(old, stamp);
+                Some((Arc::clone(payload), prev))
+            }
+            None => None,
+        };
+        match hit {
+            Some((payload, prev)) => {
+                g.order.remove(&prev);
+                g.order.insert(stamp, key.to_string());
+                g.hits += 1;
+                Some(payload)
+            }
+            None => {
+                g.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Insert `payload` under `key`, evicting least-recently-used entries
+    /// until it fits. Oversized payloads (larger than the whole capacity)
+    /// are not cached. Re-inserting an existing key replaces the payload
+    /// and refreshes recency.
+    pub fn insert(&self, key: &str, payload: Arc<Vec<u8>>) {
+        let len = payload.len() as u64;
+        if len > self.capacity {
+            return;
+        }
+        let mut g = self.inner.lock().unwrap();
+        if let Some((old_payload, old_stamp)) = g.map.remove(key) {
+            g.order.remove(&old_stamp);
+            g.bytes_used -= old_payload.len() as u64;
+        }
+        while g.bytes_used + len > self.capacity {
+            // non-empty by the capacity check: bytes_used > 0 here
+            let (&oldest, _) = g.order.iter().next().unwrap();
+            let victim = g.order.remove(&oldest).unwrap();
+            let (gone, _) = g.map.remove(&victim).unwrap();
+            g.bytes_used -= gone.len() as u64;
+            g.evictions += 1;
+        }
+        g.clock += 1;
+        let stamp = g.clock;
+        g.order.insert(stamp, key.to_string());
+        g.map.insert(key.to_string(), (payload, stamp));
+        g.bytes_used += len;
+    }
+
+    /// `get`, falling back to `fetch` on a miss and caching the result.
+    /// `fetch` runs *outside* the lock, so slow backend reads never block
+    /// other clients' cache traffic (two concurrent misses on one key may
+    /// both fetch; the second insert wins — payloads are immutable, so
+    /// this is benign).
+    pub fn get_or_fetch(
+        &self,
+        key: &str,
+        fetch: impl FnOnce() -> Result<Vec<u8>>,
+    ) -> Result<Arc<Vec<u8>>> {
+        if let Some(hit) = self.get(key) {
+            return Ok(hit);
+        }
+        let payload = Arc::new(fetch()?);
+        self.insert(key, Arc::clone(&payload));
+        Ok(payload)
+    }
+
+    /// Current counters and occupancy.
+    pub fn stats(&self) -> CacheStats {
+        let g = self.inner.lock().unwrap();
+        CacheStats {
+            hits: g.hits,
+            misses: g.misses,
+            evictions: g.evictions,
+            bytes_used: g.bytes_used,
+            entries: g.map.len() as u64,
+            capacity: self.capacity,
+        }
+    }
+
+    /// Keys currently cached, most recently used last (test/diagnostic
+    /// aid; the serving path never needs it).
+    pub fn keys_by_recency(&self) -> Vec<String> {
+        self.inner.lock().unwrap().order.values().cloned().collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn payload(n: usize, fill: u8) -> Arc<Vec<u8>> {
+        Arc::new(vec![fill; n])
+    }
+
+    #[test]
+    fn evicts_in_lru_order_under_byte_capacity() {
+        let c = ComponentCache::new(10);
+        c.insert("a", payload(4, 1));
+        c.insert("b", payload(4, 2));
+        // touch `a`, making `b` the LRU entry
+        assert!(c.get("a").is_some());
+        c.insert("c", payload(4, 3)); // 12 > 10: evicts `b`, not `a`
+        assert!(c.get("b").is_none());
+        assert!(c.get("a").is_some());
+        assert!(c.get("c").is_some());
+        let s = c.stats();
+        assert_eq!(s.evictions, 1);
+        assert_eq!(s.bytes_used, 8);
+        assert_eq!(s.entries, 2);
+        assert_eq!(c.keys_by_recency(), vec!["a", "c"]);
+    }
+
+    #[test]
+    fn capacity_is_bytes_not_entries() {
+        let c = ComponentCache::new(100);
+        for i in 0..10 {
+            c.insert(&format!("k{i}"), payload(10, i));
+        }
+        assert_eq!(c.stats().bytes_used, 100);
+        // one more 10-byte entry evicts exactly one (the oldest)
+        c.insert("fresh", payload(10, 99));
+        let s = c.stats();
+        assert_eq!((s.bytes_used, s.entries, s.evictions), (100, 10, 1));
+        assert!(c.get("k0").is_none());
+        assert!(c.get("k1").is_some());
+        // a single entry bigger than everything evicts all it needs
+        c.insert("big", payload(95, 7));
+        assert!(c.stats().bytes_used <= 100);
+        assert!(c.get("big").is_some());
+    }
+
+    #[test]
+    fn oversized_payloads_bypass_the_cache() {
+        let c = ComponentCache::new(8);
+        c.insert("huge", payload(9, 1));
+        assert!(c.get("huge").is_none());
+        assert_eq!(c.stats().bytes_used, 0);
+        // via get_or_fetch the caller still receives the bytes
+        let got = c.get_or_fetch("huge", || Ok(vec![5; 9])).unwrap();
+        assert_eq!(got.len(), 9);
+        assert_eq!(c.stats().bytes_used, 0);
+    }
+
+    #[test]
+    fn reinsert_replaces_and_restamps() {
+        let c = ComponentCache::new(10);
+        c.insert("a", payload(4, 1));
+        c.insert("b", payload(4, 2));
+        c.insert("a", payload(6, 3)); // replaces: 6 + 4 = 10, no eviction
+        let s = c.stats();
+        assert_eq!((s.bytes_used, s.entries, s.evictions), (10, 2, 0));
+        // `b` is now LRU
+        c.insert("c", payload(4, 4));
+        assert!(c.get("b").is_none());
+        assert_eq!(c.get("a").unwrap()[0], 3);
+    }
+
+    #[test]
+    fn get_or_fetch_counts_and_caches() {
+        let c = ComponentCache::new(100);
+        let mut fetches = 0;
+        for _ in 0..3 {
+            let v = c
+                .get_or_fetch("k", || {
+                    fetches += 1;
+                    Ok(vec![1, 2, 3])
+                })
+                .unwrap();
+            assert_eq!(*v, vec![1, 2, 3]);
+        }
+        assert_eq!(fetches, 1);
+        let s = c.stats();
+        assert_eq!((s.hits, s.misses), (2, 1));
+        // fetch errors propagate and cache nothing
+        let r = c.get_or_fetch("bad", || Err(crate::error::Error::transient("down")));
+        assert!(r.is_err());
+        assert!(c.get("bad").is_none());
+    }
+
+    #[test]
+    fn concurrent_access_is_consistent() {
+        let c = Arc::new(ComponentCache::new(1 << 16));
+        let handles: Vec<_> = (0..8u8)
+            .map(|t| {
+                let c = Arc::clone(&c);
+                std::thread::spawn(move || {
+                    for i in 0..64u8 {
+                        let key = format!("k{}", i % 16);
+                        let v = c.get_or_fetch(&key, || Ok(vec![i % 16; 32])).unwrap();
+                        assert_eq!(v[0], i % 16, "thread {t}");
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let s = c.stats();
+        assert_eq!(s.hits + s.misses, 8 * 64);
+        assert_eq!(s.entries, 16);
+    }
+}

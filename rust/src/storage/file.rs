@@ -1,0 +1,164 @@
+//! Filesystem-backed storage: keys are relative paths under a root.
+
+use super::{validate_key, Storage};
+use crate::error::{Error, Result};
+use std::fs;
+use std::io::{Read, Seek, SeekFrom};
+use std::path::{Path, PathBuf};
+
+/// Keys map 1:1 onto files under `root`, so a store written through this
+/// backend is byte-identical to (and interchangeable with) the historical
+/// direct-`File` layout.
+pub struct FileStorage {
+    root: PathBuf,
+}
+
+impl FileStorage {
+    /// Open (and create if missing) a store rooted at `root`.
+    pub fn create(root: impl Into<PathBuf>) -> Result<FileStorage> {
+        let root = root.into();
+        fs::create_dir_all(&root)?;
+        Ok(FileStorage { root })
+    }
+
+    /// Open an existing root directory.
+    pub fn open(root: impl Into<PathBuf>) -> Result<FileStorage> {
+        let root = root.into();
+        if !root.is_dir() {
+            return Err(Error::invalid(format!(
+                "storage root {} does not exist",
+                root.display()
+            )));
+        }
+        Ok(FileStorage { root })
+    }
+
+    /// The backing directory.
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    fn path_of(&self, key: &str) -> Result<PathBuf> {
+        validate_key(key)?;
+        Ok(self.root.join(key))
+    }
+
+    fn walk(&self, dir: &Path, rel: &str, out: &mut Vec<String>) -> Result<()> {
+        for entry in fs::read_dir(dir)? {
+            let entry = entry?;
+            let name = entry.file_name().to_string_lossy().to_string();
+            let key = if rel.is_empty() {
+                name
+            } else {
+                format!("{rel}/{name}")
+            };
+            let ty = entry.file_type()?;
+            if ty.is_dir() {
+                self.walk(&entry.path(), &key, out)?;
+            } else if ty.is_file() {
+                out.push(key);
+            }
+        }
+        Ok(())
+    }
+}
+
+impl Storage for FileStorage {
+    fn size(&self, key: &str) -> Result<u64> {
+        Ok(fs::metadata(self.path_of(key)?)?.len())
+    }
+
+    fn read_range(&self, key: &str, offset: u64, len: u64) -> Result<Vec<u8>> {
+        let path = self.path_of(key)?;
+        let mut f = fs::File::open(&path)?;
+        let size = f.metadata()?.len();
+        let end = offset
+            .checked_add(len)
+            .filter(|&e| e <= size)
+            .ok_or_else(|| {
+                Error::invalid(format!(
+                    "range [{offset}, {offset} + {len}) outside `{key}` ({size} bytes)"
+                ))
+            })?;
+        debug_assert!(end <= size);
+        f.seek(SeekFrom::Start(offset))?;
+        let mut buf = vec![0u8; len as usize];
+        f.read_exact(&mut buf)?;
+        Ok(buf)
+    }
+
+    fn read(&self, key: &str) -> Result<Vec<u8>> {
+        Ok(fs::read(self.path_of(key)?)?)
+    }
+
+    fn write(&self, key: &str, bytes: &[u8]) -> Result<()> {
+        let path = self.path_of(key)?;
+        if let Some(parent) = path.parent() {
+            fs::create_dir_all(parent)?;
+        }
+        Ok(fs::write(path, bytes)?)
+    }
+
+    fn exists(&self, key: &str) -> Result<bool> {
+        Ok(self.path_of(key)?.is_file())
+    }
+
+    fn list(&self, prefix: &str) -> Result<Vec<String>> {
+        let mut out = Vec::new();
+        self.walk(&self.root, "", &mut out)?;
+        out.retain(|k| k.starts_with(prefix));
+        out.sort();
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn temp_root(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("mgardp_fstore_{tag}_{}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        dir
+    }
+
+    #[test]
+    fn write_read_range_list() {
+        let root = temp_root("basic");
+        let s = FileStorage::create(&root).unwrap();
+        s.write("a/one.bin", &[1, 2, 3, 4, 5]).unwrap();
+        s.write("a/two.bin", &[9]).unwrap();
+        s.write("top.bin", &[7, 8]).unwrap();
+        assert_eq!(s.size("a/one.bin").unwrap(), 5);
+        assert_eq!(s.read("a/one.bin").unwrap(), vec![1, 2, 3, 4, 5]);
+        assert_eq!(s.read_range("a/one.bin", 1, 3).unwrap(), vec![2, 3, 4]);
+        assert_eq!(s.read_range("a/one.bin", 5, 0).unwrap(), Vec::<u8>::new());
+        assert!(s.read_range("a/one.bin", 3, 3).is_err());
+        assert!(s.exists("top.bin").unwrap());
+        assert!(!s.exists("missing").unwrap());
+        assert_eq!(
+            s.list("").unwrap(),
+            vec!["a/one.bin", "a/two.bin", "top.bin"]
+        );
+        assert_eq!(s.list("a/").unwrap(), vec!["a/one.bin", "a/two.bin"]);
+        // overwrite replaces
+        s.write("top.bin", &[0]).unwrap();
+        assert_eq!(s.read("top.bin").unwrap(), vec![0]);
+        fs::remove_dir_all(&root).ok();
+    }
+
+    #[test]
+    fn hostile_keys_refused() {
+        let root = temp_root("hostile");
+        let s = FileStorage::create(&root).unwrap();
+        assert!(s.write("../escape", &[1]).is_err());
+        assert!(s.read("/etc/passwd").is_err());
+        assert!(s.size("").is_err());
+        fs::remove_dir_all(&root).ok();
+    }
+
+    #[test]
+    fn open_requires_existing_root() {
+        assert!(FileStorage::open(temp_root("absent")).is_err());
+    }
+}

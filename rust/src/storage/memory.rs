@@ -1,0 +1,143 @@
+//! In-memory storage: a shared, thread-safe object map.
+
+use super::{validate_key, Storage};
+use crate::error::{Error, Result};
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+
+/// Objects live in a `BTreeMap` behind one mutex (lookups copy the
+/// requested range out, so the lock is held only for the copy). Payloads
+/// are `Arc`-shared: cloning the map entry for a read never duplicates
+/// the bytes.
+#[derive(Default)]
+pub struct MemoryStorage {
+    objects: Mutex<BTreeMap<String, Arc<Vec<u8>>>>,
+}
+
+impl MemoryStorage {
+    /// An empty store.
+    pub fn new() -> MemoryStorage {
+        MemoryStorage::default()
+    }
+
+    /// Total bytes stored across all objects.
+    pub fn total_bytes(&self) -> u64 {
+        self.objects
+            .lock()
+            .unwrap()
+            .values()
+            .map(|v| v.len() as u64)
+            .sum()
+    }
+
+    fn get(&self, key: &str) -> Result<Arc<Vec<u8>>> {
+        validate_key(key)?;
+        self.objects
+            .lock()
+            .unwrap()
+            .get(key)
+            .cloned()
+            .ok_or_else(|| {
+                Error::Io(std::io::Error::new(
+                    std::io::ErrorKind::NotFound,
+                    format!("no object `{key}` in memory store"),
+                ))
+            })
+    }
+}
+
+impl Storage for MemoryStorage {
+    fn size(&self, key: &str) -> Result<u64> {
+        Ok(self.get(key)?.len() as u64)
+    }
+
+    fn read_range(&self, key: &str, offset: u64, len: u64) -> Result<Vec<u8>> {
+        let obj = self.get(key)?;
+        let end = offset
+            .checked_add(len)
+            .filter(|&e| e <= obj.len() as u64)
+            .ok_or_else(|| {
+                Error::invalid(format!(
+                    "range [{offset}, {offset} + {len}) outside `{key}` ({} bytes)",
+                    obj.len()
+                ))
+            })?;
+        Ok(obj[offset as usize..end as usize].to_vec())
+    }
+
+    fn read(&self, key: &str) -> Result<Vec<u8>> {
+        Ok(self.get(key)?.as_ref().clone())
+    }
+
+    fn write(&self, key: &str, bytes: &[u8]) -> Result<()> {
+        validate_key(key)?;
+        self.objects
+            .lock()
+            .unwrap()
+            .insert(key.to_string(), Arc::new(bytes.to_vec()));
+        Ok(())
+    }
+
+    fn exists(&self, key: &str) -> Result<bool> {
+        validate_key(key)?;
+        Ok(self.objects.lock().unwrap().contains_key(key))
+    }
+
+    fn list(&self, prefix: &str) -> Result<Vec<String>> {
+        Ok(self
+            .objects
+            .lock()
+            .unwrap()
+            .keys()
+            .filter(|k| k.starts_with(prefix))
+            .cloned()
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_trip_and_ranges() {
+        let s = MemoryStorage::new();
+        s.write("f/x", &[10, 20, 30, 40]).unwrap();
+        assert_eq!(s.size("f/x").unwrap(), 4);
+        assert_eq!(s.read("f/x").unwrap(), vec![10, 20, 30, 40]);
+        assert_eq!(s.read_range("f/x", 2, 2).unwrap(), vec![30, 40]);
+        assert!(s.read_range("f/x", 2, 3).is_err());
+        assert!(s.read("missing").is_err());
+        assert!(s.exists("f/x").unwrap());
+        assert_eq!(s.total_bytes(), 4);
+        s.write("f/x", &[1]).unwrap();
+        assert_eq!(s.total_bytes(), 1);
+    }
+
+    #[test]
+    fn listing_is_sorted_and_prefixed() {
+        let s = MemoryStorage::new();
+        for k in ["b/2", "a/1", "a/0", "c"] {
+            s.write(k, &[0]).unwrap();
+        }
+        assert_eq!(s.list("").unwrap(), vec!["a/0", "a/1", "b/2", "c"]);
+        assert_eq!(s.list("a/").unwrap(), vec!["a/0", "a/1"]);
+        assert!(s.list("zz").unwrap().is_empty());
+    }
+
+    #[test]
+    fn shared_across_threads() {
+        let s = Arc::new(MemoryStorage::new());
+        s.write("k", &(0u8..=255).collect::<Vec<u8>>()).unwrap();
+        let handles: Vec<_> = (0..4u64)
+            .map(|i| {
+                let s = Arc::clone(&s);
+                std::thread::spawn(move || s.read_range("k", i * 8, 8).unwrap())
+            })
+            .collect();
+        for (i, h) in handles.into_iter().enumerate() {
+            let got = h.join().unwrap();
+            assert_eq!(got[0] as usize, i * 8);
+        }
+    }
+}

@@ -1,0 +1,135 @@
+//! Remote-store simulator: latency + injected transient failures.
+
+use super::Storage;
+use crate::error::{Error, Result};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Wraps any backend and makes every *read-side* operation (`size`,
+/// `read`, `read_range`, `exists`, `list`) behave like a remote
+/// round-trip: an optional fixed latency per request, plus — when
+/// `fail_every = n > 0` — every `n`-th read operation fails with
+/// [`Error::Transient`] *before* touching the inner backend, exactly like
+/// a dropped connection. Writes pass through untouched (the producer path
+/// is local; the serving problem is read-side).
+///
+/// The operation counter is global across threads, so a concurrent
+/// workload sees failures interleaved unpredictably — which is the point:
+/// callers must be correct under retry ([`super::with_retries`]), not
+/// under a failure schedule they can predict.
+pub struct MockStorage {
+    inner: Arc<dyn Storage>,
+    latency: Duration,
+    fail_every: u64,
+    ops: AtomicU64,
+    injected: AtomicU64,
+}
+
+impl MockStorage {
+    /// Wrap `inner` with `latency` per read request and a transient
+    /// failure every `fail_every`-th read (`0` = never fail).
+    pub fn new(inner: Arc<dyn Storage>, latency: Duration, fail_every: u64) -> MockStorage {
+        MockStorage {
+            inner,
+            latency,
+            fail_every,
+            ops: AtomicU64::new(0),
+            injected: AtomicU64::new(0),
+        }
+    }
+
+    /// Read operations issued so far (including failed ones).
+    pub fn ops(&self) -> u64 {
+        self.ops.load(Ordering::Relaxed)
+    }
+
+    /// Transient failures injected so far.
+    pub fn injected_failures(&self) -> u64 {
+        self.injected.load(Ordering::Relaxed)
+    }
+
+    /// Count one read round-trip: sleep the configured latency, then
+    /// either inject a transient failure or let the operation through.
+    fn round_trip(&self, what: &str) -> Result<()> {
+        if !self.latency.is_zero() {
+            std::thread::sleep(self.latency);
+        }
+        let n = self.ops.fetch_add(1, Ordering::Relaxed) + 1;
+        if self.fail_every > 0 && n % self.fail_every == 0 {
+            self.injected.fetch_add(1, Ordering::Relaxed);
+            return Err(Error::transient(format!(
+                "injected failure on read op {n} ({what})"
+            )));
+        }
+        Ok(())
+    }
+}
+
+impl Storage for MockStorage {
+    fn size(&self, key: &str) -> Result<u64> {
+        self.round_trip("size")?;
+        self.inner.size(key)
+    }
+
+    fn read_range(&self, key: &str, offset: u64, len: u64) -> Result<Vec<u8>> {
+        self.round_trip("read_range")?;
+        self.inner.read_range(key, offset, len)
+    }
+
+    fn read(&self, key: &str) -> Result<Vec<u8>> {
+        self.round_trip("read")?;
+        self.inner.read(key)
+    }
+
+    fn write(&self, key: &str, bytes: &[u8]) -> Result<()> {
+        self.inner.write(key, bytes)
+    }
+
+    fn exists(&self, key: &str) -> Result<bool> {
+        self.round_trip("exists")?;
+        self.inner.exists(key)
+    }
+
+    fn list(&self, prefix: &str) -> Result<Vec<String>> {
+        self.round_trip("list")?;
+        self.inner.list(prefix)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{with_retries, MemoryStorage};
+    use super::*;
+
+    #[test]
+    fn fails_every_nth_read_and_counts() {
+        let mem = Arc::new(MemoryStorage::new());
+        mem.write("k", &[1, 2, 3]).unwrap();
+        let mock = MockStorage::new(mem, Duration::ZERO, 3);
+        let mut outcomes = Vec::new();
+        for _ in 0..6 {
+            outcomes.push(mock.read("k").is_ok());
+        }
+        assert_eq!(outcomes, [true, true, false, true, true, false]);
+        assert_eq!(mock.ops(), 6);
+        assert_eq!(mock.injected_failures(), 2);
+        // injected failures are transient, so a retry budget absorbs them
+        let mut spent = 0;
+        let v = with_retries(2, &mut spent, || mock.read_range("k", 0, 2)).unwrap();
+        assert_eq!(v, vec![1, 2]);
+    }
+
+    #[test]
+    fn zero_fail_every_never_fails_and_writes_pass_through() {
+        let mem = Arc::new(MemoryStorage::new());
+        let mock = MockStorage::new(Arc::clone(&mem) as Arc<dyn Storage>, Duration::ZERO, 0);
+        mock.write("k", &[9]).unwrap();
+        for _ in 0..32 {
+            assert_eq!(mock.read("k").unwrap(), vec![9]);
+        }
+        assert_eq!(mock.injected_failures(), 0);
+        // the write landed in the wrapped backend
+        assert_eq!(mem.read("k").unwrap(), vec![9]);
+    }
+}

@@ -1,0 +1,253 @@
+//! Object-keyed storage abstraction (the refactor-once / retrieve-many
+//! I/O seam).
+//!
+//! Every consumer-facing read path in the crate — the progressive
+//! refactor store ([`crate::coordinator::refactor::RefactorStore`]), its
+//! ranged component fetches ([`ProgressiveField`]), and the streaming
+//! container decoder ([`crate::stream::StreamingDecompressor`]) — bottoms
+//! out in the same three operations: *how big is this object*, *give me
+//! bytes `[offset, offset+len)` of it*, and (on the producer side) *write
+//! this object*. That is exactly the contract of an object store's ranged
+//! GET, so this module abstracts it behind the [`Storage`] trait (modeled
+//! on zarrs' storage layer) with three in-tree backends:
+//!
+//! * [`FileStorage`] — keys are relative paths under a root directory
+//!   (the historical on-disk layout, byte-identical to direct `File` I/O).
+//! * [`MemoryStorage`] — a shared in-memory map; the backend of choice for
+//!   tests and for serving a hot archive entirely from RAM.
+//! * [`MockStorage`] — wraps any backend with a configurable per-request
+//!   latency and injected transient failures, simulating a remote object
+//!   store so retry/caching behaviour is testable offline.
+//!
+//! Invariants all backends must uphold (enforced by the differential
+//! suite in `rust/tests/storage_serve.rs`):
+//!
+//! * **Byte identity** — `read`/`read_range` return exactly the bytes
+//!   written, for identical keys and ranges, on every backend.
+//! * **Exact ranges** — `read_range` returns exactly `len` bytes or an
+//!   error; a range that leaves the object is refused, never truncated.
+//! * **Structured transience** — recoverable faults surface as
+//!   [`Error::Transient`] so callers can retry ([`with_retries`]);
+//!   anything else is definitive.
+//!
+//! [`ProgressiveField`]: crate::coordinator::refactor::ProgressiveField
+
+pub mod cache;
+pub mod file;
+pub mod memory;
+pub mod mock;
+
+pub use cache::{CacheStats, ComponentCache};
+pub use file::FileStorage;
+pub use memory::MemoryStorage;
+pub use mock::MockStorage;
+
+use crate::error::{Error, Result};
+use std::io::{Read, Seek, SeekFrom};
+use std::sync::Arc;
+
+/// Sync, object-key addressed storage: the minimal contract shared by a
+/// local filesystem, an in-memory map and a remote object store.
+///
+/// Keys are `/`-separated relative paths (`"field/components.bin"`),
+/// validated by [`validate_key`]. Implementations are used behind
+/// `Arc<dyn Storage>` from many threads at once, hence `Send + Sync` and
+/// `&self` methods (interior mutability where needed).
+pub trait Storage: Send + Sync {
+    /// Size of the object at `key` in bytes.
+    fn size(&self, key: &str) -> Result<u64>;
+
+    /// Read exactly `[offset, offset + len)` of the object at `key`.
+    /// A range extending past the object's end is an error.
+    fn read_range(&self, key: &str, offset: u64, len: u64) -> Result<Vec<u8>>;
+
+    /// Read the whole object at `key`.
+    fn read(&self, key: &str) -> Result<Vec<u8>> {
+        let n = self.size(key)?;
+        self.read_range(key, 0, n)
+    }
+
+    /// Create or replace the object at `key`.
+    fn write(&self, key: &str, bytes: &[u8]) -> Result<()>;
+
+    /// Whether an object exists at `key`.
+    fn exists(&self, key: &str) -> Result<bool>;
+
+    /// All object keys starting with `prefix`, sorted. An empty prefix
+    /// lists the whole store.
+    fn list(&self, prefix: &str) -> Result<Vec<String>>;
+}
+
+/// Validate an object key: non-empty, relative, `/`-separated, with no
+/// empty, `.` or `..` components (a hostile key must never escape a
+/// [`FileStorage`] root).
+pub fn validate_key(key: &str) -> Result<()> {
+    if key.is_empty() {
+        return Err(Error::invalid("empty storage key"));
+    }
+    if key.starts_with('/') || key.ends_with('/') || key.contains('\\') {
+        return Err(Error::invalid(format!(
+            "storage key `{key}` must be a relative `/`-separated path"
+        )));
+    }
+    for comp in key.split('/') {
+        if comp.is_empty() || comp == "." || comp == ".." {
+            return Err(Error::invalid(format!(
+                "storage key `{key}` contains an illegal component `{comp}`"
+            )));
+        }
+    }
+    Ok(())
+}
+
+/// Run `op` up to `1 + retries` times, retrying only
+/// [transient](Error::is_transient) failures. Returns the first success,
+/// the first definitive error, or the last transient error once the
+/// budget is exhausted. The retry count actually spent is added to
+/// `*spent` (the serving daemon surfaces it in its stats).
+pub fn with_retries<T>(
+    retries: usize,
+    spent: &mut u64,
+    mut op: impl FnMut() -> Result<T>,
+) -> Result<T> {
+    let mut attempt = 0;
+    loop {
+        match op() {
+            Ok(v) => return Ok(v),
+            Err(e) if e.is_transient() && attempt < retries => {
+                attempt += 1;
+                *spent += 1;
+            }
+            Err(e) => return Err(e),
+        }
+    }
+}
+
+/// A positioned, seekable view of one stored object: adapts any
+/// [`Storage`] object to `Read + Seek`, so stream consumers built on
+/// ordinary file handles (notably
+/// [`crate::stream::StreamingDecompressor`]) run unchanged over any
+/// backend. Every `read` becomes one ranged GET at the current position.
+pub struct StorageObject {
+    storage: Arc<dyn Storage>,
+    key: String,
+    size: u64,
+    pos: u64,
+}
+
+impl StorageObject {
+    /// Open the object at `key` (its size is resolved once, here).
+    pub fn open(storage: Arc<dyn Storage>, key: &str) -> Result<StorageObject> {
+        validate_key(key)?;
+        let size = storage.size(key)?;
+        Ok(StorageObject {
+            storage,
+            key: key.to_string(),
+            size,
+            pos: 0,
+        })
+    }
+
+    /// The object's size in bytes, as resolved at open.
+    pub fn size(&self) -> u64 {
+        self.size
+    }
+}
+
+impl Read for StorageObject {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        let left = self.size.saturating_sub(self.pos);
+        let n = (buf.len() as u64).min(left);
+        if n == 0 {
+            return Ok(0);
+        }
+        let bytes = self
+            .storage
+            .read_range(&self.key, self.pos, n)
+            .map_err(|e| std::io::Error::new(std::io::ErrorKind::Other, e.to_string()))?;
+        buf[..bytes.len()].copy_from_slice(&bytes);
+        self.pos += bytes.len() as u64;
+        Ok(bytes.len())
+    }
+}
+
+impl Seek for StorageObject {
+    fn seek(&mut self, pos: SeekFrom) -> std::io::Result<u64> {
+        let target = match pos {
+            SeekFrom::Start(o) => Some(o),
+            SeekFrom::End(d) => self.size.checked_add_signed(d),
+            SeekFrom::Current(d) => self.pos.checked_add_signed(d),
+        };
+        match target {
+            Some(t) => {
+                self.pos = t;
+                Ok(t)
+            }
+            None => Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidInput,
+                "seek before start of object",
+            )),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn key_validation() {
+        assert!(validate_key("a").is_ok());
+        assert!(validate_key("field/components.bin").is_ok());
+        assert!(validate_key("").is_err());
+        assert!(validate_key("/abs").is_err());
+        assert!(validate_key("trailing/").is_err());
+        assert!(validate_key("a//b").is_err());
+        assert!(validate_key("a/../b").is_err());
+        assert!(validate_key("./a").is_err());
+        assert!(validate_key("a\\b").is_err());
+    }
+
+    #[test]
+    fn retries_only_transient_failures() {
+        let mut spent = 0;
+        let mut left = 2;
+        let v = with_retries(3, &mut spent, || {
+            if left > 0 {
+                left -= 1;
+                Err(Error::transient("flaky"))
+            } else {
+                Ok(7)
+            }
+        })
+        .unwrap();
+        assert_eq!((v, spent), (7, 2));
+        // budget exhausted: the last transient error surfaces
+        let mut spent = 0;
+        let r: Result<()> = with_retries(1, &mut spent, || Err(Error::transient("always")));
+        assert!(matches!(r, Err(Error::Transient(_))) && spent == 1);
+        // definitive errors are never retried
+        let mut spent = 0;
+        let r: Result<()> = with_retries(5, &mut spent, || Err(Error::invalid("no")));
+        assert!(matches!(r, Err(Error::InvalidArgument(_))) && spent == 0);
+    }
+
+    #[test]
+    fn storage_object_reads_and_seeks() {
+        let mem = Arc::new(MemoryStorage::new());
+        mem.write("obj", &(0u8..100).collect::<Vec<u8>>()).unwrap();
+        let mut o = StorageObject::open(mem, "obj").unwrap();
+        assert_eq!(o.size(), 100);
+        let mut buf = [0u8; 10];
+        o.read_exact(&mut buf).unwrap();
+        assert_eq!(buf, [0, 1, 2, 3, 4, 5, 6, 7, 8, 9]);
+        o.seek(SeekFrom::End(-5)).unwrap();
+        let mut tail = Vec::new();
+        o.read_to_end(&mut tail).unwrap();
+        assert_eq!(tail, vec![95, 96, 97, 98, 99]);
+        // reading past the end is a clean EOF, not an error
+        assert_eq!(o.read(&mut buf).unwrap(), 0);
+        o.seek(SeekFrom::Start(98)).unwrap();
+        assert_eq!(o.read(&mut buf).unwrap(), 2);
+    }
+}

@@ -21,6 +21,19 @@ use std::io::{Read, Seek, SeekFrom, Write};
 /// entries, far beyond any partition the compressor emits.
 const MAX_INDEX_PREFIX: u64 = 1 << 24;
 
+impl StreamingDecompressor<crate::storage::StorageObject> {
+    /// Open a container stored as object `key` of `storage`: every blob
+    /// access becomes a ranged GET, so streaming decompression runs
+    /// unchanged over any [`crate::storage::Storage`] backend (local
+    /// directory, memory, or a simulated remote store).
+    pub fn open_storage(
+        storage: std::sync::Arc<dyn crate::storage::Storage>,
+        key: &str,
+    ) -> Result<Self> {
+        Self::open(crate::storage::StorageObject::open(storage, key)?)
+    }
+}
+
 /// Decodes a chunked container block-at-a-time from a seekable stream.
 pub struct StreamingDecompressor<R: Read + Seek> {
     src: R,

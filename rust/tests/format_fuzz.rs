@@ -307,7 +307,7 @@ fn progressive_store() -> (mgardp::coordinator::refactor::RefactorStore, Tensor<
 #[test]
 fn truncated_bitplane_components_error_cleanly() {
     let (store, _) = progressive_store();
-    let path = store.root().join("u").join("components.bin");
+    let path = store.root().unwrap().join("u").join("components.bin");
     let blob = std::fs::read(&path).unwrap();
     // any truncation is refused at open (size vs manifest accounting)
     for cut in [0, 1, blob.len() / 2, blob.len() - 1] {
@@ -316,13 +316,13 @@ fn truncated_bitplane_components_error_cleanly() {
     }
     std::fs::write(&path, &blob).unwrap();
     assert!(store.progressive("u").is_ok());
-    std::fs::remove_dir_all(store.root()).ok();
+    std::fs::remove_dir_all(store.root().unwrap()).ok();
 }
 
 #[test]
 fn corrupted_bitplane_components_never_panic() {
     let (store, _) = progressive_store();
-    let path = store.root().join("u").join("components.bin");
+    let path = store.root().unwrap().join("u").join("components.bin");
     let blob = std::fs::read(&path).unwrap();
     let mut rng = Rng::new(0xB17F);
     for _ in 0..200 {
@@ -338,13 +338,13 @@ fn corrupted_bitplane_components_never_panic() {
             let _: mgardp::Result<(Tensor<f32>, _)> = field.retrieve(f64::MIN_POSITIVE);
         }
     }
-    std::fs::remove_dir_all(store.root()).ok();
+    std::fs::remove_dir_all(store.root().unwrap()).ok();
 }
 
 #[test]
 fn corrupted_progressive_store_manifest_never_panics() {
     let (store, _) = progressive_store();
-    let path = store.root().join("u").join("manifest.bin");
+    let path = store.root().unwrap().join("u").join("manifest.bin");
     let bytes = std::fs::read(&path).unwrap();
     let mut rng = Rng::new(0x5106);
     for _ in 0..300 {
@@ -358,7 +358,7 @@ fn corrupted_progressive_store_manifest_never_panics() {
             let _: mgardp::Result<(Tensor<f32>, _)> = field.retrieve(1e-2);
         }
     }
-    std::fs::remove_dir_all(store.root()).ok();
+    std::fs::remove_dir_all(store.root().unwrap()).ok();
 }
 
 #[test]

@@ -72,7 +72,7 @@ fn planner_bound_sweep(shape: &[usize], tag: &str) {
             );
         }
     }
-    std::fs::remove_dir_all(store.root()).ok();
+    std::fs::remove_dir_all(store.root().unwrap()).ok();
 }
 
 #[test]
@@ -152,7 +152,7 @@ fn refinement_to_all_planes_is_bit_exact_lossless() {
         for (a, b) in exact.data().iter().zip(back.data()) {
             assert_eq!(a.to_bits(), b.to_bits(), "lossless must be bit-exact");
         }
-        std::fs::remove_dir_all(store.root()).ok();
+        std::fs::remove_dir_all(store.root().unwrap()).ok();
     }
 }
 
@@ -168,7 +168,7 @@ fn f64_progressive_round_trip() {
     assert!(linf_error(t.data(), back.data()) <= 1e-6);
     // f32 readers are refused on an f64 field
     assert!(field.reader::<f32>().is_err());
-    std::fs::remove_dir_all(store.root()).ok();
+    std::fs::remove_dir_all(store.root().unwrap()).ok();
 }
 
 #[test]
@@ -178,7 +178,7 @@ fn pr_era_level_store_remains_readable() {
     let m = store.write_field("u", &t, 3).unwrap();
     // rewrite the manifest in the PR-era encoding: body only, no
     // magic/version header (what stores created before this PR contain)
-    let manifest_path = store.root().join("u").join("manifest.bin");
+    let manifest_path = store.root().unwrap().join("u").join("manifest.bin");
     let versioned = std::fs::read(&manifest_path).unwrap();
     assert_eq!(&versioned[..4], b"MGRF");
     std::fs::write(&manifest_path, &versioned[5..]).unwrap();
@@ -186,7 +186,7 @@ fn pr_era_level_store_remains_readable() {
     assert_eq!(store.manifest("u").unwrap(), m);
     let back: Tensor<f32> = store.reconstruct("u", m.max_level).unwrap();
     assert!(linf_error(t.data(), back.data()) < 1e-4);
-    std::fs::remove_dir_all(store.root()).ok();
+    std::fs::remove_dir_all(store.root().unwrap()).ok();
 }
 
 #[test]
@@ -381,7 +381,7 @@ fn stored_bytes_match_manifest_accounting() {
     let t = synth::smooth_test_field(&[17, 18]);
     let manifest = store.write_field_progressive("u", &t, Some(16), 3).unwrap();
     assert_eq!(manifest.planes, 16);
-    let blob = std::fs::read(store.root().join("u").join("components.bin")).unwrap();
+    let blob = std::fs::read(store.root().unwrap().join("u").join("components.bin")).unwrap();
     assert_eq!(blob.len() as u64, manifest.total_bytes());
     // every component range slices the blob exactly
     let field = store.progressive("u").unwrap();
@@ -396,5 +396,5 @@ fn stored_bytes_match_manifest_accounting() {
         }
         assert_eq!(meta.comp_lens.len(), manifest.comps_per_stream());
     }
-    std::fs::remove_dir_all(store.root()).ok();
+    std::fs::remove_dir_all(store.root().unwrap()).ok();
 }

@@ -1,0 +1,282 @@
+//! Tier-1 contract of the storage seam and the serving daemon:
+//!
+//! * the filesystem, in-memory and mock-latency backends hold
+//!   **byte-identical** objects for the same refactored field, and every
+//!   retrieval path (planner, streaming decompressor) is
+//!   backend-agnostic;
+//! * the shared component cache is a real byte-capacity LRU — eviction
+//!   order, restamping on hit, oversize bypass — and stays coherent when
+//!   many threads fetch through it at once;
+//! * `N` concurrent clients at distinct tolerances each get their
+//!   certified `‖u − ũ‖_∞ ≤ τ` bound from one daemon, with and without
+//!   simulated remote latency and injected transient failures.
+
+use mgardp::chunk::{ChunkedCompressor, ChunkedConfig};
+use mgardp::compressors::{Compressor, MgardPlus, Tolerance};
+use mgardp::coordinator::refactor::RefactorStore;
+use mgardp::data::synth;
+use mgardp::metrics::linf_error;
+use mgardp::serve::{RemoteField, ServeClient, ServeConfig, Server};
+use mgardp::storage::{
+    ComponentCache, FileStorage, MemoryStorage, MockStorage, Storage, StorageObject,
+};
+use mgardp::stream::StreamingDecompressor;
+use mgardp::tensor::Tensor;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn temp_dir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("mgardp_storage_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// A fast mock: zero latency, no injected failures — pure pass-through
+/// accounting, so differential checks stay cheap.
+fn passthrough_mock(inner: Arc<dyn Storage>) -> Arc<MockStorage> {
+    Arc::new(MockStorage::new(inner, Duration::ZERO, 0))
+}
+
+#[test]
+fn backends_hold_byte_identical_objects() {
+    let t = synth::smooth_test_field(&[19, 17]);
+    let dir = temp_dir("diff");
+    let file_store = RefactorStore::create(&dir).unwrap();
+    let mem: Arc<dyn Storage> = Arc::new(MemoryStorage::new());
+    let mem_store = RefactorStore::with_storage(Arc::clone(&mem));
+    file_store.write_field_progressive("u", &t, None, 3).unwrap();
+    mem_store.write_field_progressive("u", &t, None, 3).unwrap();
+
+    let file_backend: Arc<dyn Storage> = Arc::new(FileStorage::open(&dir).unwrap());
+    let mock_backend: Arc<dyn Storage> = passthrough_mock(Arc::clone(&mem));
+
+    // identical key sets, identical bytes, on every backend
+    let keys = file_backend.list("").unwrap();
+    assert_eq!(keys, mem.list("").unwrap());
+    assert_eq!(keys, mock_backend.list("").unwrap());
+    assert!(keys.contains(&"u/manifest.bin".to_string()), "{keys:?}");
+    assert!(keys.contains(&"u/components.bin".to_string()));
+    for key in &keys {
+        let reference = file_backend.read(key).unwrap();
+        assert_eq!(reference, mem.read(key).unwrap(), "{key} differs in memory");
+        assert_eq!(
+            reference,
+            mock_backend.read(key).unwrap(),
+            "{key} differs through the mock"
+        );
+        // ranged reads agree with whole-object reads
+        let n = file_backend.size(key).unwrap();
+        assert_eq!(n as usize, reference.len());
+        let mid = n / 2;
+        assert_eq!(
+            file_backend.read_range(key, mid, n - mid).unwrap(),
+            mem.read_range(key, mid, n - mid).unwrap(),
+            "{key} tail range differs"
+        );
+    }
+
+    // retrieval is backend-agnostic: same certificate, same reconstruction
+    let tau = 0.02;
+    let (from_file, plan_file) = file_store.progressive("u").unwrap().retrieve::<f32>(tau).unwrap();
+    let (from_mem, plan_mem) = mem_store.progressive("u").unwrap().retrieve::<f32>(tau).unwrap();
+    let mock_store = RefactorStore::with_storage(passthrough_mock(Arc::clone(&mem)));
+    let (from_mock, plan_mock) = mock_store.progressive("u").unwrap().retrieve::<f32>(tau).unwrap();
+    assert_eq!(plan_file.certified_bound, plan_mem.certified_bound);
+    assert_eq!(plan_file.certified_bound, plan_mock.certified_bound);
+    assert_eq!(from_file.data(), from_mem.data());
+    assert_eq!(from_file.data(), from_mock.data());
+    assert!(linf_error(t.data(), from_file.data()) <= tau);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn streaming_decompressor_runs_over_any_backend() {
+    let t = synth::smooth_test_field(&[20, 21, 11]);
+    let comp = ChunkedCompressor::new(
+        MgardPlus::default(),
+        ChunkedConfig {
+            block_shape: vec![8, 8, 8],
+            threads: 2,
+            ..ChunkedConfig::default()
+        },
+    );
+    let bytes = comp.compress(&t, Tolerance::Abs(1e-3)).unwrap();
+
+    let mem: Arc<dyn Storage> = Arc::new(MemoryStorage::new());
+    mem.write("fields/u.mgrp", &bytes).unwrap();
+    let dir = temp_dir("streamobj");
+    let file: Arc<dyn Storage> = Arc::new(FileStorage::create(&dir).unwrap());
+    file.write("fields/u.mgrp", &bytes).unwrap();
+
+    let reference: Tensor<f32> = StreamingDecompressor::open(std::io::Cursor::new(&bytes))
+        .unwrap()
+        .decompress()
+        .unwrap();
+    for (name, backend) in [
+        ("memory", Arc::clone(&mem)),
+        ("file", Arc::clone(&file)),
+        ("mock", passthrough_mock(Arc::clone(&mem)) as Arc<dyn Storage>),
+    ] {
+        let mut d = StreamingDecompressor::open_storage(Arc::clone(&backend), "fields/u.mgrp")
+            .unwrap();
+        let full: Tensor<f32> = d.decompress().unwrap();
+        assert_eq!(reference.data(), full.data(), "{name} full decode differs");
+        let region: Tensor<f32> = d.decompress_region(&[3, 5, 2], &[9, 9, 7]).unwrap();
+        let direct = reference.block(&[3, 5, 2], &[9, 9, 7]).unwrap();
+        assert_eq!(direct.data(), region.data(), "{name} region decode differs");
+        assert!(linf_error(t.data(), full.data()) <= 1e-3 * (1.0 + 1e-6));
+    }
+
+    // the adapter is a faithful Read + Seek view of the object
+    let mut obj = StorageObject::open(Arc::clone(&mem), "fields/u.mgrp").unwrap();
+    assert_eq!(obj.size() as usize, bytes.len());
+    let mut round = Vec::new();
+    std::io::Read::read_to_end(&mut obj, &mut round).unwrap();
+    assert_eq!(round, bytes);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn component_cache_is_a_byte_capacity_lru() {
+    let payload = |n: usize| Arc::new(vec![0u8; n]);
+    let cache = ComponentCache::new(100);
+    cache.insert("a", payload(40));
+    cache.insert("b", payload(40));
+    assert!(cache.get("a").is_some()); // restamp: a is now most recent
+    cache.insert("c", payload(40)); // over capacity -> evict LRU = b
+    assert!(cache.get("b").is_none(), "b should have been evicted");
+    assert!(cache.get("a").is_some());
+    assert!(cache.get("c").is_some());
+    let s = cache.stats();
+    assert_eq!(s.evictions, 1);
+    assert_eq!(s.entries, 2);
+    assert_eq!(s.bytes_used, 80);
+    assert!(s.bytes_used <= s.capacity);
+
+    // an oversize payload bypasses the cache instead of flushing it
+    cache.insert("huge", payload(1000));
+    assert!(cache.get("huge").is_none());
+    assert!(cache.get("a").is_some());
+    assert!(cache.get("c").is_some());
+
+    // recency order is observable: most recently used last
+    assert_eq!(cache.keys_by_recency(), vec!["a", "c"]);
+}
+
+#[test]
+fn shared_cache_is_coherent_under_contention() {
+    // 8 threads × 50 get_or_fetch over 10 keys through a cache that can
+    // hold only 4 payloads: every fetch must return the right payload,
+    // and the accounting must stay exact
+    let cache = Arc::new(ComponentCache::new(4 * 64));
+    let mut handles = Vec::new();
+    for thread in 0..8u64 {
+        let cache = Arc::clone(&cache);
+        handles.push(std::thread::spawn(move || {
+            for i in 0..50u64 {
+                let k = (thread + i) % 10;
+                let key = format!("comp/{k}");
+                let got = cache
+                    .get_or_fetch(&key, || Ok(vec![k as u8; 64]))
+                    .unwrap();
+                assert_eq!(got.len(), 64);
+                assert!(got.iter().all(|&b| b == k as u8), "wrong payload for {key}");
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    let s = cache.stats();
+    assert_eq!(s.hits + s.misses, 8 * 50);
+    assert!(s.misses >= 10, "every key misses at least once");
+    assert!(s.bytes_used <= s.capacity);
+    assert!(s.entries <= 4);
+}
+
+/// The acceptance scenario: one daemon, ≥ 4 concurrent clients at
+/// distinct tolerances, every certificate satisfied.
+fn concurrent_clients_against(field_store: RefactorStore, t: &Tensor<f32>, cfg: &ServeConfig) {
+    let field = field_store.progressive("u").unwrap();
+    let mut server = Server::start(field, cfg).unwrap();
+    let addr = server.addr();
+    let taus = [0.25, 0.05, 0.01, 0.002];
+    let mut handles = Vec::new();
+    for &tau in &taus {
+        let reference = t.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut remote: RemoteField<f32> = RemoteField::open(addr).unwrap();
+            let (back, plan) = remote.refine(tau).unwrap();
+            assert!(
+                plan.certified_bound <= tau,
+                "τ {tau}: certificate {}",
+                plan.certified_bound
+            );
+            let err = linf_error(reference.data(), back.data());
+            assert!(err <= tau, "τ {tau}: L∞ {err} exceeds the bound");
+            // tightening on the same connection transfers only a delta
+            let before = remote.bytes_fetched();
+            let (tight, plan2) = remote.refine(tau / 2.0).unwrap();
+            assert!(plan2.certified_bound <= tau / 2.0);
+            assert!(linf_error(reference.data(), tight.data()) <= tau / 2.0);
+            assert!(remote.bytes_fetched() >= before);
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    let stats = server.stats();
+    assert!(stats.connections >= taus.len() as u64, "{stats:?}");
+    assert!(
+        stats.hits > 0,
+        "concurrent clients over one cache must share fetches: {stats:?}"
+    );
+    server.stop();
+}
+
+#[test]
+fn four_concurrent_clients_distinct_tolerances() {
+    let t = synth::smooth_test_field(&[23, 19]);
+    let store = RefactorStore::with_storage(Arc::new(MemoryStorage::new()));
+    store.write_field_progressive("u", &t, None, 3).unwrap();
+    concurrent_clients_against(store, &t, &ServeConfig::default());
+}
+
+#[test]
+fn four_concurrent_clients_with_latency_and_failures() {
+    let t = synth::smooth_test_field(&[23, 19]);
+    let mem = Arc::new(MemoryStorage::new());
+    let writer = RefactorStore::with_storage(Arc::clone(&mem) as Arc<dyn Storage>);
+    writer.write_field_progressive("u", &t, None, 3).unwrap();
+    let mock = Arc::new(MockStorage::new(
+        Arc::clone(&mem) as Arc<dyn Storage>,
+        Duration::from_micros(100),
+        7, // every 7th read op fails transiently
+    ));
+    let store = RefactorStore::with_storage(Arc::clone(&mock) as Arc<dyn Storage>);
+    let cfg = ServeConfig {
+        retries: 6,
+        ..ServeConfig::default()
+    };
+    concurrent_clients_against(store, &t, &cfg);
+    assert!(mock.injected_failures() > 0, "the fault injector never fired");
+}
+
+#[test]
+fn stats_and_shutdown_over_the_wire() {
+    let t = synth::smooth_test_field(&[15, 14]);
+    let store = RefactorStore::with_storage(Arc::new(MemoryStorage::new()));
+    store.write_field_progressive("u", &t, None, 3).unwrap();
+    let field = store.progressive("u").unwrap();
+    let mut server = Server::start(field, &ServeConfig::default()).unwrap();
+    let mut client = ServeClient::connect(server.addr()).unwrap();
+    let (back, bound) = client.retrieve::<f32>(0.05, None).unwrap();
+    assert!(bound <= 0.05);
+    assert!(linf_error(t.data(), back.data()) <= 0.05);
+    let stats = client.stats().unwrap();
+    assert!(stats.requests >= 2);
+    assert_eq!(stats.capacity, ServeConfig::default().cache_bytes);
+    client.shutdown().unwrap();
+    server.stop(); // must join promptly after the protocol shutdown
+}

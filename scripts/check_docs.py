@@ -3,13 +3,17 @@
 
 Two checks, both dependency-free (stdlib only):
 
-1. **Constant table drift** — every format constant listed in
-   CONST_SOURCES (chunked sub-versions and tiling policies in
-   rust/src/chunk/container.rs, refactor/progressive manifest versions in
-   rust/src/coordinator/refactor.rs and rust/src/progressive/manifest.rs)
-   must appear in docs/FORMAT.md's tables with the same numeric value, and
-   every such constant named in docs/FORMAT.md must exist in the source. A
-   format bump that edits only one side fails here.
+1. **Constant table drift** — every format/protocol constant listed in
+   CONST_GROUPS must appear in its normative document's tables with the
+   same numeric value, and every such constant named in the document must
+   exist in the source. A version bump that edits only one side fails
+   here. Groups:
+     * docs/FORMAT.md — chunked sub-versions and tiling policies
+       (rust/src/chunk/container.rs), refactor/progressive manifest
+       versions (rust/src/coordinator/refactor.rs,
+       rust/src/progressive/manifest.rs);
+     * docs/SERVING.md — serve wire-protocol version, op and status
+       bytes (rust/src/serve/protocol.rs).
 2. **Markdown link check** — every relative link target in README.md,
    ROADMAP.md and docs/*.md must exist on disk (http(s)/mailto and
    in-page #anchors are skipped).
@@ -23,58 +27,75 @@ from pathlib import Path
 
 ROOT = Path(__file__).resolve().parent.parent
 FORMAT_MD = ROOT / "docs" / "FORMAT.md"
+SERVING_MD = ROOT / "docs" / "SERVING.md"
 LINK_DOCS = [ROOT / "README.md", ROOT / "ROADMAP.md", *sorted((ROOT / "docs").glob("*.md"))]
 
-# every (file, constant-name pattern) pair whose `pub const NAME: u8 = N;`
-# values FORMAT.md's tables must mirror
-CONST_SOURCES = [
+# each normative document, with the (file, constant-name pattern) pairs
+# whose `pub const NAME: u8 = N;` values its tables must mirror
+CONST_GROUPS = [
     (
-        ROOT / "rust" / "src" / "chunk" / "container.rs",
-        r"CHUNK_CONTAINER_\w+|TILING_POLICY_\w+",
+        FORMAT_MD,
+        [
+            (
+                ROOT / "rust" / "src" / "chunk" / "container.rs",
+                r"CHUNK_CONTAINER_\w+|TILING_POLICY_\w+",
+            ),
+            (
+                ROOT / "rust" / "src" / "coordinator" / "refactor.rs",
+                r"REFACTOR_MANIFEST_\w+",
+            ),
+            (
+                ROOT / "rust" / "src" / "progressive" / "manifest.rs",
+                r"PROGRESSIVE_MANIFEST_\w+",
+            ),
+        ],
     ),
     (
-        ROOT / "rust" / "src" / "coordinator" / "refactor.rs",
-        r"REFACTOR_MANIFEST_\w+",
-    ),
-    (
-        ROOT / "rust" / "src" / "progressive" / "manifest.rs",
-        r"PROGRESSIVE_MANIFEST_\w+",
+        SERVING_MD,
+        [
+            (
+                ROOT / "rust" / "src" / "serve" / "protocol.rs",
+                r"SERVE_PROTOCOL_VERSION|SERVE_OP_\w+|SERVE_RESP_\w+",
+            ),
+        ],
     ),
 ]
-ALL_NAMES = "|".join(pat for _, pat in CONST_SOURCES)
-# a table row naming a constant: | `1` | `CHUNK_CONTAINER_VERSION` | ...
-ROW_RE = re.compile(r"\|\s*`(\d+)`\s*\|\s*`(" + ALL_NAMES + r")`\s*\|")
 LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
 
 
-def check_subversion_tables() -> list:
+def check_constant_tables(doc_path: Path, sources) -> list:
     errors = []
-    doc = FORMAT_MD.read_text(encoding="utf-8")
+    if not doc_path.exists():
+        return [f"{doc_path}: normative document is missing"]
+    doc = doc_path.read_text(encoding="utf-8")
     src_consts = {}
-    for path, pattern in CONST_SOURCES:
+    for path, pattern in sources:
         source = path.read_text(encoding="utf-8")
         found = re.findall(r"pub const (" + pattern + r"): u8 = (\d+);", source)
         if not found:
             errors.append(f"{path}: no format constants found (regex drift?)")
         src_consts.update({name: int(val) for name, val in found})
-    doc_consts = {name: int(val) for val, name in ROW_RE.findall(doc)}
+    all_names = "|".join(pat for _, pat in sources)
+    # a table row naming a constant: | `1` | `CHUNK_CONTAINER_VERSION` | ...
+    row_re = re.compile(r"\|\s*`(\d+)`\s*\|\s*`(" + all_names + r")`\s*\|")
+    doc_consts = {name: int(val) for val, name in row_re.findall(doc)}
     if not doc_consts:
-        errors.append(f"{FORMAT_MD}: no constant table rows found (regex drift?)")
+        errors.append(f"{doc_path}: no constant table rows found (regex drift?)")
     for name, val in sorted(src_consts.items()):
         if name not in doc_consts:
             errors.append(
-                f"{FORMAT_MD}: constant `{name}` (= {val}) from the source "
+                f"{doc_path}: constant `{name}` (= {val}) from the source "
                 "is missing from the constant tables"
             )
         elif doc_consts[name] != val:
             errors.append(
-                f"{FORMAT_MD}: `{name}` documented as {doc_consts[name]}, "
+                f"{doc_path}: `{name}` documented as {doc_consts[name]}, "
                 f"the source says {val}"
             )
     for name, val in sorted(doc_consts.items()):
         if name not in src_consts:
             errors.append(
-                f"{FORMAT_MD}: documents `{name}` (= {val}) which does not "
+                f"{doc_path}: documents `{name}` (= {val}) which does not "
                 "exist in the source"
             )
     return errors
@@ -97,7 +118,10 @@ def check_links() -> list:
 
 
 def main() -> int:
-    errors = check_subversion_tables() + check_links()
+    errors = []
+    for doc_path, sources in CONST_GROUPS:
+        errors += check_constant_tables(doc_path, sources)
+    errors += check_links()
     for e in errors:
         print(f"docs gate: {e}", file=sys.stderr)
     if errors:

@@ -37,6 +37,13 @@
 #                     fixed-vs-adaptive tiling comparison), streaming and
 #                     progressive (error-bounded retrieval down to
 #                     bit-exact lossless) run end-to-end on tiny inputs
+#   serve smoke       scripts/serve_smoke.sh — refactor a small field,
+#                     start `mgardp serve` on an ephemeral loopback port,
+#                     retrieve from 4 concurrent clients at distinct
+#                     tolerances asserting every certified L∞ bound, then
+#                     repeat over the mock-latency backend with transient
+#                     failure injection; clean protocol shutdown under a
+#                     hard timeout
 set -euo pipefail
 
 cd "$(dirname "$0")/.."
@@ -92,6 +99,9 @@ MGARDP_SMOKE=1 cargo run --release --example quickstart
 MGARDP_SMOKE=1 MGARDP_THREADS=2 cargo run --release --example chunked_parallel
 MGARDP_SMOKE=1 cargo run --release --example streaming
 MGARDP_SMOKE=1 cargo run --release --example progressive
+
+step "serve smoke (concurrent error-bounded retrieval daemon)"
+bash scripts/serve_smoke.sh
 
 if [ "$run_msrv" = 1 ]; then
   step "MSRV build + test ($MSRV)"

@@ -1,0 +1,158 @@
+#!/usr/bin/env bash
+# Serve smoke: the acceptance scenario for `mgardp serve`, end to end and
+# against the real binary.
+#
+#   1. generate a small deterministic f32 field and refactor it
+#      progressively into a store;
+#   2. start the daemon on an ephemeral loopback port (the bound address
+#      is published through --addr-file);
+#   3. hit it with 4 *concurrent* clients at distinct tolerances and
+#      assert each reconstruction satisfies its certified `‖u−ũ‖∞ ≤ τ`
+#      bound bit-for-bit against the original raw field;
+#   4. query counters over the wire, then shut the daemon down via
+#      `serve-ctl --shutdown` under a hard timeout;
+#   5. repeat a shortened run over the mock-latency backend with
+#      transient-failure injection (--mock-latency-ms / --fail-every), so
+#      the retry path is exercised against the real wire protocol.
+#
+# Every wait in this script is bounded; nothing can hang CI.
+set -euo pipefail
+
+cd "$(dirname "$0")/.."
+
+BIN=${MGARDP_BIN:-target/release/mgardp}
+if [ ! -x "$BIN" ]; then
+  echo "==> building release binary for the serve smoke"
+  cargo build --release
+fi
+
+WORK=$(mktemp -d "${TMPDIR:-/tmp}/mgardp_serve_smoke.XXXXXX")
+SERVE_PID=""
+cleanup() {
+  [ -n "$SERVE_PID" ] && kill "$SERVE_PID" 2>/dev/null || true
+  rm -rf "$WORK"
+}
+trap cleanup EXIT
+
+SHAPE=33x29
+RAW="$WORK/u.f32"
+
+echo "==> synthesizing a $SHAPE test field"
+python3 - "$RAW" <<'PY'
+import math, struct, sys
+nz, ny = 33, 29
+vals = [
+    math.sin(i / 4.0) * math.cos(j / 5.0) + 0.3 * math.sin((i + 2 * j) / 7.0)
+    for i in range(nz)
+    for j in range(ny)
+]
+with open(sys.argv[1], "wb") as f:
+    f.write(struct.pack(f"<{len(vals)}f", *vals))
+PY
+
+echo "==> refactoring into a progressive store"
+"$BIN" refactor --input "$RAW" --shape "$SHAPE" --store "$WORK/store" \
+  --field u --progressive
+
+# Wait for the daemon to publish its ephemeral address (bounded), then
+# echo it. $1 = addr file, $2 = daemon log.
+await_addr() {
+  for _ in $(seq 1 200); do
+    if [ -s "$1" ]; then cat "$1"; return 0; fi
+    sleep 0.1
+  done
+  echo "FAIL: daemon never published its address" >&2
+  cat "$2" >&2
+  return 1
+}
+
+# Bounded wait for the daemon to exit after a protocol shutdown.
+await_exit() {
+  for _ in $(seq 1 150); do
+    kill -0 "$SERVE_PID" 2>/dev/null || { SERVE_PID=""; return 0; }
+    sleep 0.1
+  done
+  echo "FAIL: daemon still alive after shutdown; killing it" >&2
+  kill -9 "$SERVE_PID" 2>/dev/null || true
+  return 1
+}
+
+# $1 = reconstruction, $2 = tolerance: assert ‖u − ũ‖∞ ≤ τ.
+check_linf() {
+  python3 - "$RAW" "$1" "$2" <<'PY'
+import struct, sys
+ref_path, got_path, tau = sys.argv[1], sys.argv[2], float(sys.argv[3])
+def load(p):
+    b = open(p, "rb").read()
+    return struct.unpack(f"<{len(b) // 4}f", b)
+ref, got = load(ref_path), load(got_path)
+assert len(ref) == len(got), f"size mismatch: {len(ref)} vs {len(got)}"
+err = max(abs(a - b) for a, b in zip(ref, got))
+assert err <= tau, f"L∞ {err:.6g} exceeds τ {tau:.6g}"
+print(f"    τ {tau:<8g} L∞ {err:.3e}  OK")
+PY
+}
+
+echo "==> run 1: plain filesystem backend, 4 concurrent clients"
+"$BIN" serve --store "$WORK/store" --field u --addr 127.0.0.1:0 \
+  --addr-file "$WORK/addr" --cache-bytes 4M >"$WORK/serve.log" 2>&1 &
+SERVE_PID=$!
+ADDR=$(await_addr "$WORK/addr" "$WORK/serve.log")
+echo "    daemon at $ADDR"
+
+TAUS="0.25 0.05 0.01 0.002"
+declare -a CLIENT_PIDS=()
+for TAU in $TAUS; do
+  "$BIN" retrieve --remote "$ADDR" --tolerance "$TAU" \
+    --output "$WORK/out_$TAU.f32" >"$WORK/client_$TAU.log" 2>&1 &
+  CLIENT_PIDS+=($!)
+done
+for pid in "${CLIENT_PIDS[@]}"; do
+  wait "$pid" || { echo "FAIL: a client errored"; cat "$WORK"/client_*.log; exit 1; }
+done
+for TAU in $TAUS; do
+  check_linf "$WORK/out_$TAU.f32" "$TAU"
+done
+
+echo "==> daemon counters"
+"$BIN" serve-ctl --addr "$ADDR" --stats
+"$BIN" serve-ctl --addr "$ADDR" --shutdown
+await_exit
+grep -q "listening on" "$WORK/serve.log" || {
+  echo "FAIL: daemon log is missing the listening line" >&2
+  cat "$WORK/serve.log" >&2
+  exit 1
+}
+
+echo "==> run 2: mock-latency backend with transient-failure injection"
+rm -f "$WORK/addr"
+"$BIN" serve --store "$WORK/store" --field u --addr 127.0.0.1:0 \
+  --addr-file "$WORK/addr" --mock-latency-ms 1 --fail-every 5 --retries 6 \
+  >"$WORK/serve_mock.log" 2>&1 &
+SERVE_PID=$!
+ADDR=$(await_addr "$WORK/addr" "$WORK/serve_mock.log")
+echo "    daemon at $ADDR"
+
+CLIENT_PIDS=()
+for TAU in 0.05 0.005; do
+  "$BIN" retrieve --remote "$ADDR" --tolerance "$TAU" \
+    --output "$WORK/mock_$TAU.f32" >"$WORK/mock_client_$TAU.log" 2>&1 &
+  CLIENT_PIDS+=($!)
+done
+for pid in "${CLIENT_PIDS[@]}"; do
+  wait "$pid" || { echo "FAIL: a mock-run client errored"; cat "$WORK"/mock_client_*.log; exit 1; }
+done
+for TAU in 0.05 0.005; do
+  check_linf "$WORK/mock_$TAU.f32" "$TAU"
+done
+# the injected faults must have actually exercised the retry path
+"$BIN" serve-ctl --addr "$ADDR" --stats | tee "$WORK/mock_stats.txt"
+RETRIES=$(awk -F: '/transient retries/ {gsub(/ /,"",$2); print $2}' "$WORK/mock_stats.txt")
+if [ -z "$RETRIES" ] || [ "$RETRIES" -eq 0 ]; then
+  echo "FAIL: fault injection never triggered a retry (transient retries = ${RETRIES:-missing})" >&2
+  exit 1
+fi
+"$BIN" serve-ctl --addr "$ADDR" --shutdown
+await_exit
+
+echo "==> serve smoke passed"

@@ -1,0 +1,682 @@
+#!/usr/bin/env python3
+"""PR-7 validation harness: faithful Python mirror of the serving seams.
+
+The container has no Rust toolchain, so — following the protocol of PRs
+2–6 — the algorithmic surface PR 7 *added* is transliterated and tested
+here:
+
+  * the stamp-based byte-capacity LRU (`rust/src/storage/cache.rs`:
+    HashMap + BTreeMap recency order), differentially against an
+    OrderedDict reference implementation under randomized workloads,
+    plus the exact unit scenarios the Rust tests pin;
+  * the mock-remote failure schedule + bounded retry budget
+    (`rust/src/storage/mock.rs::round_trip`,
+    `rust/src/storage/mod.rs::with_retries`);
+  * the planner-over-storage ranged-read path: the manifest's
+    `component_range` offset arithmetic against a concatenated
+    `components.bin` blob, fetched through the LRU via exact ranged
+    reads (`rust/src/progressive/manifest.rs::component_range`);
+  * the wire protocol (`rust/src/serve/protocol.rs`): length-prefixed
+    framing (clean-EOF / mid-frame-EOF / hostile length prefix),
+    request encode/decode round-trips, every refusal path (foreign
+    magic, unknown version/op, truncation, trailing bytes, implausible
+    floor/rank), stats and plan bodies;
+  * the worked frame example in docs/SERVING.md: the mirror encodes
+    `plan τ=0.5, nfloor=0` and the resulting bytes must equal the
+    documented hex, byte for byte;
+  * cache coherence under threads: N workers through one shared mirror
+    cache, counters and occupancy invariants checked after the storm.
+
+Every mirror preserves the Rust control flow (same branch order, same
+counter updates) so a logic bug in the never-compiled Rust source has a
+concrete chance of reproducing here.
+
+Run:  python3 scripts/validate_pr7.py
+"""
+
+import random
+import re
+import struct
+import sys
+import threading
+from collections import OrderedDict
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+
+# ---------------------------------------------------------------------------
+# error model mirror (error.rs): transient vs definitive
+# ---------------------------------------------------------------------------
+
+
+class Transient(Exception):
+    pass
+
+
+class Definitive(Exception):
+    pass
+
+
+def with_retries(retries, spent, op):
+    """Mirror of storage/mod.rs::with_retries; `spent` is a 1-element list."""
+    attempt = 0
+    while True:
+        try:
+            return op()
+        except Transient:
+            if attempt < retries:
+                attempt += 1
+                spent[0] += 1
+            else:
+                raise
+
+
+# ---------------------------------------------------------------------------
+# ComponentCache mirror (storage/cache.rs) + OrderedDict reference
+# ---------------------------------------------------------------------------
+
+
+class CacheMirror:
+    """Line-for-line mirror of the stamp-based Rust cache: a key map to
+    (payload, stamp) plus a sorted stamp->key order map (a plain dict is
+    enough — stamps only grow, so insertion order == stamp order)."""
+
+    def __init__(self, capacity):
+        self.capacity = capacity
+        self.map = {}  # key -> [payload, stamp]
+        self.order = {}  # stamp -> key, ascending by construction
+        self.clock = 0
+        self.bytes_used = 0
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+        self.lock = threading.Lock()
+
+    def get(self, key):
+        with self.lock:
+            self.clock += 1
+            stamp = self.clock
+            entry = self.map.get(key)
+            if entry is not None:
+                prev = entry[1]
+                entry[1] = stamp
+                del self.order[prev]
+                self.order[stamp] = key
+                self.hits += 1
+                return entry[0]
+            self.misses += 1
+            return None
+
+    def insert(self, key, payload):
+        n = len(payload)
+        if n > self.capacity:
+            return
+        with self.lock:
+            old = self.map.pop(key, None)
+            if old is not None:
+                del self.order[old[1]]
+                self.bytes_used -= len(old[0])
+            while self.bytes_used + n > self.capacity:
+                oldest = min(self.order)  # BTreeMap::iter().next()
+                victim = self.order.pop(oldest)
+                gone, _ = self.map.pop(victim)
+                self.bytes_used -= len(gone)
+                self.evictions += 1
+            self.clock += 1
+            stamp = self.clock
+            self.order[stamp] = key
+            self.map[key] = [payload, stamp]
+            self.bytes_used += n
+
+    def get_or_fetch(self, key, fetch):
+        hit = self.get(key)
+        if hit is not None:
+            return hit
+        payload = fetch()  # outside the lock, like the Rust code
+        self.insert(key, payload)
+        return payload
+
+    def stats(self):
+        with self.lock:
+            return {
+                "hits": self.hits,
+                "misses": self.misses,
+                "evictions": self.evictions,
+                "bytes_used": self.bytes_used,
+                "entries": len(self.map),
+                "capacity": self.capacity,
+            }
+
+    def keys_by_recency(self):
+        with self.lock:
+            return [self.order[s] for s in sorted(self.order)]
+
+
+class CacheReference:
+    """Independent LRU built on OrderedDict.move_to_end — the oracle."""
+
+    def __init__(self, capacity):
+        self.capacity = capacity
+        self.d = OrderedDict()  # key -> payload, least-recent first
+        self.bytes_used = 0
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    def get(self, key):
+        if key in self.d:
+            self.d.move_to_end(key)
+            self.hits += 1
+            return self.d[key]
+        self.misses += 1
+        return None
+
+    def insert(self, key, payload):
+        if len(payload) > self.capacity:
+            return
+        if key in self.d:
+            self.bytes_used -= len(self.d.pop(key))
+        while self.bytes_used + len(payload) > self.capacity:
+            _, gone = self.d.popitem(last=False)
+            self.bytes_used -= len(gone)
+            self.evictions += 1
+        self.d[key] = payload
+        self.bytes_used += len(payload)
+
+    def keys_by_recency(self):
+        return list(self.d)
+
+
+def check_cache_differential():
+    rng = random.Random(0x7E57)
+    for trial in range(200):
+        cap = rng.choice([1, 7, 16, 100, 1000])
+        mirror, ref = CacheMirror(cap), CacheReference(cap)
+        for _ in range(300):
+            key = f"k{rng.randrange(12)}"
+            if rng.random() < 0.5:
+                got_m = mirror.get(key)
+                got_r = ref.get(key)
+                assert (got_m is None) == (got_r is None), (trial, key)
+                if got_m is not None:
+                    assert got_m == got_r, (trial, key)
+            else:
+                payload = bytes([rng.randrange(256)]) * rng.randrange(
+                    0, cap + 3
+                )
+                mirror.insert(key, payload)
+                ref.insert(key, payload)
+            assert mirror.keys_by_recency() == ref.keys_by_recency(), trial
+            s = mirror.stats()
+            assert s["bytes_used"] == ref.bytes_used <= cap, trial
+            assert s["evictions"] == ref.evictions, trial
+        s = mirror.stats()
+        assert (s["hits"], s["misses"]) == (ref.hits, ref.misses), trial
+    print("PASS  cache mirror == OrderedDict reference (200 random trials)")
+
+
+def check_cache_unit_scenarios():
+    # evicts_in_lru_order_under_byte_capacity
+    c = CacheMirror(10)
+    c.insert("a", b"\x01" * 4)
+    c.insert("b", b"\x02" * 4)
+    assert c.get("a") is not None
+    c.insert("c", b"\x03" * 4)  # 12 > 10: evicts b, not a
+    assert c.get("b") is None
+    assert c.get("a") is not None and c.get("c") is not None
+    s = c.stats()
+    assert (s["evictions"], s["bytes_used"], s["entries"]) == (1, 8, 2)
+    assert c.keys_by_recency() == ["a", "c"]
+
+    # oversized payloads bypass the cache but reach the caller
+    c = CacheMirror(8)
+    c.insert("huge", b"\x01" * 9)
+    assert c.get("huge") is None and c.stats()["bytes_used"] == 0
+    got = c.get_or_fetch("huge", lambda: b"\x05" * 9)
+    assert len(got) == 9 and c.stats()["bytes_used"] == 0
+
+    # reinsert replaces and restamps
+    c = CacheMirror(10)
+    c.insert("a", b"\x01" * 4)
+    c.insert("b", b"\x02" * 4)
+    c.insert("a", b"\x03" * 6)  # replace: 6 + 4 = 10, no eviction
+    s = c.stats()
+    assert (s["bytes_used"], s["entries"], s["evictions"]) == (10, 2, 0)
+    c.insert("c", b"\x04" * 4)  # b is now LRU
+    assert c.get("b") is None
+    assert c.get("a")[0] == 3
+    print("PASS  cache unit scenarios (eviction order, oversize bypass, restamp)")
+
+
+def check_cache_concurrency():
+    cache = CacheMirror(4 * 64)
+    errors = []
+
+    def worker(t):
+        try:
+            for i in range(50):
+                key = f"comp{(i * 7 + t) % 10}"
+                payload = key.encode().ljust(64, b"_")
+                v = cache.get_or_fetch(key, lambda p=payload: p)
+                assert v == payload
+        except Exception as e:  # pragma: no cover - only on failure
+            errors.append((t, e))
+
+    threads = [threading.Thread(target=worker, args=(t,)) for t in range(8)]
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join()
+    assert not errors, errors
+    s = cache.stats()
+    assert s["hits"] + s["misses"] == 8 * 50
+    assert s["misses"] >= 10  # at least one real fetch per key
+    assert s["bytes_used"] <= s["capacity"]
+    assert s["entries"] <= 4  # 10 keys x 64B through a 256B cache
+    print("PASS  shared cache coherent under 8-thread contention")
+
+
+# ---------------------------------------------------------------------------
+# MockStorage failure schedule + retries (storage/mock.rs)
+# ---------------------------------------------------------------------------
+
+
+class MockMirror:
+    def __init__(self, objects, fail_every):
+        self.objects = objects
+        self.fail_every = fail_every
+        self.ops = 0
+        self.injected = 0
+
+    def _round_trip(self):
+        self.ops += 1
+        if self.fail_every > 0 and self.ops % self.fail_every == 0:
+            self.injected += 1
+            raise Transient(f"injected failure on read op {self.ops}")
+
+    def read(self, key):
+        self._round_trip()
+        if key not in self.objects:
+            raise Definitive(f"no such object {key}")
+        return self.objects[key]
+
+    def read_range(self, key, offset, length):
+        self._round_trip()
+        blob = self.objects.get(key)
+        if blob is None:
+            raise Definitive(f"no such object {key}")
+        if offset + length > len(blob):
+            raise Definitive("range past end")  # exact ranges only
+        return blob[offset : offset + length]
+
+
+def check_mock_failure_schedule():
+    mock = MockMirror({"k": b"\x01\x02\x03"}, fail_every=3)
+    outcomes = []
+    for _ in range(6):
+        try:
+            mock.read("k")
+            outcomes.append(True)
+        except Transient:
+            outcomes.append(False)
+    assert outcomes == [True, True, False, True, True, False]
+    assert (mock.ops, mock.injected) == (6, 2)
+
+    # a retry budget absorbs transient failures and counts what it spent
+    spent = [0]
+    v = with_retries(2, spent, lambda: mock.read_range("k", 0, 2))
+    assert v == b"\x01\x02"
+
+    # budget exhaustion re-raises the transient error
+    always = MockMirror({"k": b"\x00"}, fail_every=1)
+    spent = [0]
+    try:
+        with_retries(3, spent, lambda: always.read("k"))
+        raise AssertionError("expected Transient")
+    except Transient:
+        pass
+    assert spent[0] == 3 and always.injected == 4  # 1 attempt + 3 retries
+
+    # definitive errors are never retried
+    healthy = MockMirror({"k": b"\x00"}, fail_every=0)
+    spent = [0]
+    try:
+        with_retries(5, spent, lambda: healthy.read("missing"))
+        raise AssertionError("expected Definitive")
+    except Definitive:
+        pass
+    assert spent[0] == 0 and healthy.ops == 1
+    print("PASS  mock failure schedule + bounded retry budget")
+
+
+# ---------------------------------------------------------------------------
+# planner-over-storage: component_range arithmetic against a blob
+# ---------------------------------------------------------------------------
+
+
+def component_range(streams, stream, comp):
+    """Mirror of ProgressiveManifest::component_range. `streams` is a
+    list of per-stream component-length lists (comp_lens)."""
+    if stream >= len(streams) or comp >= len(streams[stream]):
+        raise Definitive(f"component ({stream}, {comp}) out of range")
+    off = sum(sum(s) for s in streams[:stream])
+    off += sum(streams[stream][:comp])
+    return off, streams[stream][comp]
+
+
+def check_planner_over_storage():
+    rng = random.Random(0xC0FFEE)
+    for trial in range(50):
+        nstreams = rng.randrange(1, 6)
+        streams = [
+            [rng.randrange(0, 40) for _ in range(rng.randrange(1, 8))]
+            for _ in range(nstreams)
+        ]
+        # components.bin: stream-major concatenation, each component a
+        # distinct recognizable fill
+        parts, blob = {}, bytearray()
+        for s, lens in enumerate(streams):
+            for c, n in enumerate(lens):
+                payload = bytes([(s * 17 + c * 3 + 1) % 256]) * n
+                parts[(s, c)] = payload
+                blob.extend(payload)
+        blob = bytes(blob)
+        assert len(blob) == sum(sum(s) for s in streams)
+
+        store = MockMirror({"f/components.bin": blob}, fail_every=0)
+        cache = CacheMirror(1 << 20)
+        retries_spent = [0]
+        for s in range(nstreams):
+            for c in range(len(streams[s])):
+                off, ln = component_range(streams, s, c)
+                got = cache.get_or_fetch(
+                    f"f/{s}/{c}",
+                    lambda o=off, n=ln: with_retries(
+                        3,
+                        retries_spent,
+                        lambda: store.read_range("f/components.bin", o, n),
+                    ),
+                )
+                assert got == parts[(s, c)], (trial, s, c)
+        # contiguity: ranges tile the blob exactly, in order
+        pos = 0
+        for s in range(nstreams):
+            for c in range(len(streams[s])):
+                off, ln = component_range(streams, s, c)
+                assert off == pos, (trial, s, c)
+                pos += ln
+        assert pos == len(blob)
+        # out-of-range indices are structured errors
+        for bad in [(nstreams, 0), (0, len(streams[0]))]:
+            try:
+                component_range(streams, *bad)
+                raise AssertionError("expected out-of-range error")
+            except Definitive:
+                pass
+        # a second pass is all cache hits: the backend sees no new ops
+        ops_before = store.ops
+        for s in range(nstreams):
+            for c in range(len(streams[s])):
+                assert cache.get(f"f/{s}/{c}") == parts[(s, c)]
+        assert store.ops == ops_before
+    print("PASS  component_range tiles components.bin; ranged reads via cache")
+
+
+# ---------------------------------------------------------------------------
+# wire protocol mirror (serve/protocol.rs)
+# ---------------------------------------------------------------------------
+
+SERVE_MAGIC = b"MGSV"
+SERVE_PROTOCOL_VERSION = 1
+SERVE_OP_MANIFEST = 1
+SERVE_OP_PLAN = 2
+SERVE_OP_FETCH = 3
+SERVE_OP_RETRIEVE = 4
+SERVE_OP_STATS = 5
+SERVE_OP_SHUTDOWN = 6
+SERVE_RESP_OK = 0
+SERVE_RESP_ERR = 1
+MAX_FRAME_BYTES = 1 << 30
+
+
+def u64(v):
+    return struct.pack("<Q", v)
+
+
+def f64(v):
+    return struct.pack("<d", v)
+
+
+def write_frame(buf, payload):
+    if len(payload) > MAX_FRAME_BYTES:
+        raise Definitive("frame payload exceeds the cap")
+    buf.extend(struct.pack("<I", len(payload)))
+    buf.extend(payload)
+
+
+def read_frame(buf, pos):
+    """Returns (payload | None, new_pos); None = clean EOF."""
+    if pos == len(buf):
+        return None, pos
+    if pos + 4 > len(buf):
+        raise Definitive("connection closed mid-frame")
+    (n,) = struct.unpack_from("<I", buf, pos)
+    if n > MAX_FRAME_BYTES:
+        raise Definitive(f"frame declares {n} bytes")
+    if pos + 4 + n > len(buf):
+        raise Definitive("connection closed mid-frame")
+    return bytes(buf[pos + 4 : pos + 4 + n]), pos + 4 + n
+
+
+def encode_request(op, tau=None, floor=None, stream=None, comp=None, region=None):
+    out = bytearray(SERVE_MAGIC)
+    out.append(SERVE_PROTOCOL_VERSION)
+    out.append(op)
+    if op == SERVE_OP_PLAN:
+        out.extend(f64(tau))
+        floor = floor or []
+        out.extend(u64(len(floor)))
+        for c in floor:
+            out.extend(u64(c))
+    elif op == SERVE_OP_FETCH:
+        out.extend(u64(stream))
+        out.extend(u64(comp))
+    elif op == SERVE_OP_RETRIEVE:
+        out.extend(f64(tau))
+        region = region or []
+        out.extend(u64(len(region)))
+        for start, extent in region:
+            out.extend(u64(start))
+            out.extend(u64(extent))
+    return bytes(out)
+
+
+class WireReader:
+    def __init__(self, data):
+        self.data, self.pos = data, 0
+
+    def take(self, n):
+        if self.pos + n > len(self.data):
+            raise Definitive("truncated protocol frame")
+        out = self.data[self.pos : self.pos + n]
+        self.pos += n
+        return out
+
+    def u8(self):
+        return self.take(1)[0]
+
+    def u64(self):
+        return struct.unpack("<Q", self.take(8))[0]
+
+    def f64(self):
+        return struct.unpack("<d", self.take(8))[0]
+
+    def remaining(self):
+        return len(self.data) - self.pos
+
+
+def decode_request(payload):
+    if len(payload) < 6 or payload[:4] != SERVE_MAGIC:
+        raise Definitive("not a serve protocol request (bad magic)")
+    r = WireReader(payload[4:])
+    version = r.u8()
+    if version != SERVE_PROTOCOL_VERSION:
+        raise Definitive(f"serve protocol version {version}")
+    op = r.u8()
+    if op == SERVE_OP_MANIFEST:
+        req = ("manifest",)
+    elif op == SERVE_OP_PLAN:
+        tau = r.f64()
+        n = r.u64()
+        if n > 64:
+            raise Definitive(f"implausible floor length {n}")
+        floor = [r.u64() for _ in range(n)]
+        req = ("plan", tau, floor if n > 0 else None)
+    elif op == SERVE_OP_FETCH:
+        req = ("fetch", r.u64(), r.u64())
+    elif op == SERVE_OP_RETRIEVE:
+        tau = r.f64()
+        rank = r.u64()
+        if rank > 8:
+            raise Definitive(f"implausible region rank {rank}")
+        region = [(r.u64(), r.u64()) for _ in range(rank)]
+        req = ("retrieve", tau, region if rank > 0 else None)
+    elif op == SERVE_OP_STATS:
+        req = ("stats",)
+    elif op == SERVE_OP_SHUTDOWN:
+        req = ("shutdown",)
+    else:
+        raise Definitive(f"unknown serve op {op}")
+    if r.remaining() != 0:
+        raise Definitive("trailing bytes after the request body")
+    return req
+
+
+def refused(payload):
+    try:
+        decode_request(payload)
+        return False
+    except Definitive:
+        return True
+
+
+def check_protocol_roundtrip():
+    cases = [
+        (encode_request(SERVE_OP_MANIFEST), ("manifest",)),
+        (encode_request(SERVE_OP_PLAN, tau=0.25), ("plan", 0.25, None)),
+        (
+            encode_request(SERVE_OP_PLAN, tau=1e-3, floor=[2, 0, 5]),
+            ("plan", 1e-3, [2, 0, 5]),
+        ),
+        (encode_request(SERVE_OP_FETCH, stream=3, comp=7), ("fetch", 3, 7)),
+        (encode_request(SERVE_OP_RETRIEVE, tau=0.5), ("retrieve", 0.5, None)),
+        (
+            encode_request(SERVE_OP_RETRIEVE, tau=0.5, region=[(0, 8), (4, 4)]),
+            ("retrieve", 0.5, [(0, 8), (4, 4)]),
+        ),
+        (encode_request(SERVE_OP_STATS), ("stats",)),
+        (encode_request(SERVE_OP_SHUTDOWN), ("shutdown",)),
+    ]
+    for payload, expect in cases:
+        assert payload[:4] == SERVE_MAGIC and payload[4] == SERVE_PROTOCOL_VERSION
+        assert decode_request(payload) == expect, expect
+
+    # framing: round-trip, clean EOF, mid-frame EOF, hostile prefix
+    buf = bytearray()
+    write_frame(buf, b"hello")
+    write_frame(buf, b"")
+    p, pos = read_frame(buf, 0)
+    assert p == b"hello"
+    p, pos = read_frame(buf, pos)
+    assert p == b""
+    p, pos = read_frame(buf, pos)
+    assert p is None
+    for cut in (3, 6):
+        try:
+            read_frame(buf[:cut], 0)
+            raise AssertionError("expected mid-frame EOF error")
+        except Definitive:
+            pass
+    try:
+        read_frame(struct.pack("<I", 0xFFFFFFFF), 0)
+        raise AssertionError("expected hostile-prefix refusal")
+    except Definitive:
+        pass
+
+    # refusal paths
+    assert refused(b"")
+    assert refused(b"JUNK\x01\x01")
+    bad_version = bytearray(encode_request(SERVE_OP_STATS))
+    bad_version[4] = 9
+    assert refused(bytes(bad_version))
+    bad_op = bytearray(encode_request(SERVE_OP_STATS))
+    bad_op[5] = 99
+    assert refused(bytes(bad_op))
+    fetch = encode_request(SERVE_OP_FETCH, stream=1, comp=2)
+    assert refused(fetch[:-1])  # truncated body
+    assert refused(encode_request(SERVE_OP_MANIFEST) + b"\x00")  # trailing
+    hostile_floor = bytearray(encode_request(SERVE_OP_PLAN, tau=1.0))
+    hostile_floor[-8:] = u64(2**64 - 1)
+    assert refused(bytes(hostile_floor))
+    hostile_rank = bytearray(encode_request(SERVE_OP_RETRIEVE, tau=1.0))
+    hostile_rank[-8:] = u64(9)
+    assert refused(bytes(hostile_rank))
+
+    # responses + stats + plan bodies
+    assert (SERVE_RESP_OK.to_bytes(1, "little") + b"body")[1:] == b"body"
+    stats_vals = list(range(1, 10))
+    stats_wire = b"".join(u64(v) for v in stats_vals)
+    r = WireReader(stats_wire)
+    assert [r.u64() for _ in range(9)] == stats_vals and r.remaining() == 0
+    plan_wire = (
+        u64(2) + u64(3) + u64(5) + f64(0.5) + f64(0.25) + u64(100) + u64(400)
+    )
+    r = WireReader(plan_wire)
+    n = r.u64()
+    per_stream = [r.u64() for _ in range(n)]
+    assert per_stream == [3, 5]
+    assert (r.f64(), r.f64(), r.u64(), r.u64()) == (0.5, 0.25, 100, 400)
+    assert r.remaining() == 0
+    print("PASS  wire protocol round-trips; all refusal paths refuse")
+
+
+def check_worked_example_matches_docs():
+    payload = encode_request(SERVE_OP_PLAN, tau=0.5)
+    frame = bytearray()
+    write_frame(frame, payload)
+    assert len(payload) == 22 and len(frame) == 26
+    expected = bytes.fromhex(
+        "16000000" + "4d475356" + "01" + "02" + "000000000000e03f"
+        + "0000000000000000"
+    )
+    assert bytes(frame) == expected, bytes(frame).hex()
+
+    doc = (ROOT / "docs" / "SERVING.md").read_text(encoding="utf-8")
+    m = re.search(r"### Worked example.*?```\n(.*?)```", doc, re.S)
+    assert m, "docs/SERVING.md: worked example block missing"
+    doc_hex = "".join(
+        b
+        for line in m.group(1).splitlines()
+        for b in re.findall(r"\b[0-9a-f]{2}\b", line.split(":")[0])
+    )
+    assert doc_hex == bytes(frame).hex(), (
+        f"docs/SERVING.md worked example drifted: doc={doc_hex} "
+        f"mirror={bytes(frame).hex()}"
+    )
+    print("PASS  worked frame example in docs/SERVING.md matches the mirror")
+
+
+def main():
+    check_cache_differential()
+    check_cache_unit_scenarios()
+    check_cache_concurrency()
+    check_mock_failure_schedule()
+    check_planner_over_storage()
+    check_protocol_roundtrip()
+    check_worked_example_matches_docs()
+    print("validate_pr7: all serving-seam mirrors PASS")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
