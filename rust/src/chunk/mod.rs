@@ -63,7 +63,7 @@ pub use container::{
 pub use partition::{intersect, partition, resolve_block_shape, Block};
 pub use pool::{
     effective_threads, parallel_map, parallel_map_ordered, parallel_map_ordered_with,
-    parallel_map_with,
+    parallel_map_with, WorkerPool,
 };
 
 use crate::compressors::{peek_method, Compressor, Method, Tolerance};

@@ -275,6 +275,128 @@ where
     }
 }
 
+/// Queue state shared between [`WorkerPool`] submitters and workers.
+struct PoolQueue<T> {
+    items: std::collections::VecDeque<T>,
+    /// Workers currently parked waiting for an item (a submit may hand
+    /// its item to one of these immediately, so `queue_depth = 0` still
+    /// admits work while a worker is idle).
+    idle: usize,
+    closed: bool,
+}
+
+/// A long-lived bounded worker pool over a stream of tasks — the serving
+/// counterpart of [`parallel_map`], which maps a *fixed* set of jobs.
+///
+/// `workers` threads are spawned once and live until [`WorkerPool::shutdown`]
+/// (or drop). [`WorkerPool::try_submit`] never blocks: a task is admitted
+/// while an idle worker or one of `queue_depth` waiting slots can take it,
+/// and is otherwise returned to the caller (the daemon answers those with a
+/// structured `Busy` frame instead of queueing unboundedly). A task that
+/// panics is contained to that task — the worker thread survives and keeps
+/// draining the queue. Shutdown drains every task already admitted before
+/// joining the workers, so an admitted task is never silently dropped.
+pub struct WorkerPool<T: Send + 'static> {
+    shared: std::sync::Arc<(Mutex<PoolQueue<T>>, Condvar)>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    queue_depth: usize,
+}
+
+impl<T: Send + 'static> WorkerPool<T> {
+    /// Spawn `workers.max(1)` threads running `run` on each admitted task,
+    /// with at most `queue_depth` tasks waiting beyond the ones in service.
+    pub fn new<F>(workers: usize, queue_depth: usize, run: F) -> WorkerPool<T>
+    where
+        F: Fn(T) + Send + Sync + 'static,
+    {
+        let shared = std::sync::Arc::new((
+            Mutex::new(PoolQueue {
+                items: std::collections::VecDeque::new(),
+                idle: 0,
+                closed: false,
+            }),
+            Condvar::new(),
+        ));
+        let run = std::sync::Arc::new(run);
+        let handles = (0..workers.max(1))
+            .map(|_| {
+                let shared = std::sync::Arc::clone(&shared);
+                let run = std::sync::Arc::clone(&run);
+                std::thread::spawn(move || loop {
+                    let item = {
+                        let (lock, cvar) = &*shared;
+                        let mut q = lock.lock().expect("worker pool poisoned");
+                        q.idle += 1;
+                        let item = loop {
+                            if let Some(item) = q.items.pop_front() {
+                                break Some(item);
+                            }
+                            if q.closed {
+                                break None;
+                            }
+                            q = cvar.wait(q).expect("worker pool poisoned");
+                        };
+                        q.idle -= 1;
+                        item
+                    };
+                    match item {
+                        // a panicking task must not take the worker with it
+                        Some(item) => {
+                            let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+                                || run(item),
+                            ));
+                        }
+                        None => return,
+                    }
+                })
+            })
+            .collect();
+        WorkerPool {
+            shared,
+            workers: handles,
+            queue_depth,
+        }
+    }
+
+    /// Admit `item` if an idle worker or a queue slot can take it; on
+    /// overload (or after shutdown) the item is handed back unprocessed.
+    pub fn try_submit(&self, item: T) -> std::result::Result<(), T> {
+        let (lock, cvar) = &*self.shared;
+        let mut q = lock.lock().expect("worker pool poisoned");
+        if q.closed || q.items.len() >= q.idle + self.queue_depth {
+            return Err(item);
+        }
+        q.items.push_back(item);
+        cvar.notify_one();
+        Ok(())
+    }
+
+    /// Tasks admitted but not yet picked up by a worker (a gauge, racy by
+    /// nature — diagnostic only).
+    pub fn queued(&self) -> usize {
+        self.shared.0.lock().expect("worker pool poisoned").items.len()
+    }
+
+    /// Stop admitting tasks, drain everything already admitted, and join
+    /// the workers. Idempotent; also runs on drop.
+    pub fn shutdown(&mut self) {
+        {
+            let (lock, cvar) = &*self.shared;
+            lock.lock().expect("worker pool poisoned").closed = true;
+            cvar.notify_all();
+        }
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl<T: Send + 'static> Drop for WorkerPool<T> {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -488,5 +610,120 @@ mod tests {
         assert_eq!(effective_threads(8, 3), 3);
         assert_eq!(effective_threads(2, 100), 2);
         assert!(effective_threads(0, 100) >= 1);
+    }
+
+    #[test]
+    fn worker_pool_processes_every_admitted_task() {
+        let done = std::sync::Arc::new(AtomicUsize::new(0));
+        let mut pool = {
+            let done = std::sync::Arc::clone(&done);
+            WorkerPool::new(4, 64, move |v: usize| {
+                done.fetch_add(v, Ordering::SeqCst);
+            })
+        };
+        let mut admitted_sum = 0usize;
+        for i in 1..=100 {
+            if pool.try_submit(i).is_ok() {
+                admitted_sum += i;
+            }
+        }
+        pool.shutdown();
+        // shutdown drains: everything admitted ran exactly once
+        assert_eq!(done.load(Ordering::SeqCst), admitted_sum);
+        // after shutdown nothing is admitted
+        assert!(pool.try_submit(1).is_err());
+    }
+
+    #[test]
+    fn worker_pool_refuses_beyond_queue_depth() {
+        // one worker blocked on a gate: with queue_depth 2, at most
+        // 1 (in service) + 2 (queued) tasks are admitted at a time
+        let gate = std::sync::Arc::new((Mutex::new(false), Condvar::new()));
+        let mut pool = {
+            let gate = std::sync::Arc::clone(&gate);
+            WorkerPool::new(1, 2, move |_: usize| {
+                let (lock, cvar) = &*gate;
+                let mut open = lock.lock().unwrap();
+                while !*open {
+                    open = cvar.wait(open).unwrap();
+                }
+            })
+        };
+        // wait for the worker to pick up the first task
+        assert!(pool.try_submit(0).is_ok());
+        for _ in 0..200 {
+            if pool.queued() == 0 {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
+        assert!(pool.try_submit(1).is_ok());
+        assert!(pool.try_submit(2).is_ok());
+        let refused = pool.try_submit(3);
+        assert!(refused.is_err(), "fourth task should be refused");
+        assert_eq!(refused.unwrap_err(), 3, "refused task is handed back");
+        assert_eq!(pool.queued(), 2);
+        // open the gate so shutdown can drain the queue
+        let (lock, cvar) = &*gate;
+        *lock.lock().unwrap() = true;
+        cvar.notify_all();
+        drop(lock);
+        pool.shutdown();
+    }
+
+    #[test]
+    fn worker_pool_zero_depth_admits_only_idle_workers() {
+        // with queue_depth 0, tasks are admitted only while a worker is
+        // parked; once both workers are busy every submit is refused
+        let gate = std::sync::Arc::new((Mutex::new(false), Condvar::new()));
+        let started = std::sync::Arc::new(AtomicUsize::new(0));
+        let mut pool = {
+            let gate = std::sync::Arc::clone(&gate);
+            let started = std::sync::Arc::clone(&started);
+            WorkerPool::new(2, 0, move |_: usize| {
+                started.fetch_add(1, Ordering::SeqCst);
+                let (lock, cvar) = &*gate;
+                let mut open = lock.lock().unwrap();
+                while !*open {
+                    open = cvar.wait(open).unwrap();
+                }
+            })
+        };
+        assert!(pool.try_submit(0).is_ok());
+        assert!(pool.try_submit(1).is_ok());
+        // both tasks in service (not queued) before asserting refusal
+        for _ in 0..200 {
+            if started.load(Ordering::SeqCst) == 2 {
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
+        assert_eq!(started.load(Ordering::SeqCst), 2);
+        assert!(pool.try_submit(2).is_err());
+        let (lock, cvar) = &*gate;
+        *lock.lock().unwrap() = true;
+        cvar.notify_all();
+        drop(lock);
+        pool.shutdown();
+    }
+
+    #[test]
+    fn worker_pool_survives_panicking_tasks() {
+        let done = std::sync::Arc::new(AtomicUsize::new(0));
+        let mut pool = {
+            let done = std::sync::Arc::clone(&done);
+            WorkerPool::new(1, 64, move |v: usize| {
+                if v == 0 {
+                    panic!("task blew up");
+                }
+                done.fetch_add(1, Ordering::SeqCst);
+            })
+        };
+        assert!(pool.try_submit(0).is_ok()); // panics
+        for v in 1..=5 {
+            assert!(pool.try_submit(v).is_ok());
+        }
+        pool.shutdown();
+        assert_eq!(done.load(Ordering::SeqCst), 5, "worker died with the panic");
     }
 }

@@ -211,14 +211,19 @@ COMMANDS:
               --remote HOST:PORT --tolerance T --output F  (same, but from a running
               `mgardp serve` daemon over TCP; the certificate is preserved end to end)
   serve       --store DIR --field NAME [--addr HOST:PORT] [--cache-bytes N]
-              [--retries N] [--mock-latency-ms M] [--fail-every N]
+              [--retries N] [--max-connections N] [--queue-depth N]
+              [--request-timeout-ms M] [--mock-latency-ms M] [--fail-every N]
               [--addr-file F] [--config FILE]
               (daemon: concurrent error-bounded retrieval over TCP. --addr defaults
               to 127.0.0.1:0; the bound address is printed as `listening on ADDR`
-              and, with --addr-file, written to F. --mock-latency-ms/--fail-every
-              wrap the store in the simulated-remote backend. [serve] config keys:
-              store/field/addr/cache_bytes/retries/mock_latency_ms/fail_every;
-              flags override the file. Protocol: docs/SERVING.md)
+              and, with --addr-file, written to F. --max-connections bounds the
+              worker pool, --queue-depth the connections waiting beyond it (excess
+              is refused with a Busy frame), --request-timeout-ms the per-request
+              deadline (0 disables). --mock-latency-ms/--fail-every wrap the store
+              in the simulated-remote backend. [serve] config keys: store/field/
+              addr/cache_bytes/retries/max_connections/queue_depth/
+              request_timeout_ms/mock_latency_ms/fail_every; flags override the
+              file. Protocol: docs/SERVING.md)
   serve-ctl   --addr HOST:PORT (--stats | --shutdown)  (print a running daemon's
               cache/connection counters, or ask it to stop)
   reconstruct --store DIR --field NAME --level L --output F  (level layout)
@@ -816,6 +821,23 @@ fn cmd_serve(args: &Args) -> Result<()> {
         Some(_) => args.usize_or("retries", 0)?,
         None => cfg.int_or("serve", "retries", defaults.retries as i64) as usize,
     };
+    let max_connections = match args.opt("max-connections") {
+        Some(_) => args.usize_or("max-connections", 0)?,
+        None => cfg.int_or("serve", "max_connections", defaults.max_connections as i64) as usize,
+    };
+    if max_connections == 0 {
+        return Err(Error::Config("--max-connections must be >= 1".into()));
+    }
+    let queue_depth = match args.opt("queue-depth") {
+        Some(_) => args.usize_or("queue-depth", 0)?,
+        None => cfg.int_or("serve", "queue_depth", defaults.queue_depth as i64) as usize,
+    };
+    let request_timeout_ms = match args.opt("request-timeout-ms") {
+        Some(_) => args.usize_or("request-timeout-ms", 0)? as u64,
+        None => {
+            cfg.int_or("serve", "request_timeout_ms", defaults.request_timeout_ms as i64) as u64
+        }
+    };
     let latency_ms = match args.f64_opt("mock-latency-ms")? {
         Some(v) => v,
         None => cfg.float_or("serve", "mock_latency_ms", 0.0),
@@ -844,6 +866,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
         addr,
         cache_bytes,
         retries,
+        max_connections,
+        queue_depth,
+        request_timeout_ms,
     };
     let mut server = Server::start(field, &serve_cfg)?;
     if simulate_remote {
@@ -865,8 +890,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
     server.wait();
     let stats = server.stats();
     println!(
-        "serve stopped: {} connections, {} requests, cache {} hits / {} misses / {} evictions",
-        stats.connections, stats.requests, stats.hits, stats.misses, stats.evictions
+        "serve stopped: {} connections ({} refused), {} requests, cache {} hits / {} misses \
+         / {} evictions / {} coalesced",
+        stats.connections,
+        stats.refused,
+        stats.requests,
+        stats.hits,
+        stats.misses,
+        stats.evictions,
+        stats.coalesced
     );
     Ok(())
 }
@@ -896,6 +928,10 @@ fn cmd_serve_ctl(args: &Args) -> Result<()> {
     println!("cache bytes       : {} of {}", s.bytes_used, s.capacity);
     println!("cache entries     : {}", s.entries);
     println!("transient retries : {}", s.transient_retries);
+    println!("queued            : {}", s.queued);
+    println!("refused           : {}", s.refused);
+    println!("coalesced         : {}", s.coalesced);
+    println!("deadline expired  : {}", s.deadline_expired);
     Ok(())
 }
 
@@ -1398,7 +1434,8 @@ mod tests {
         std::fs::write(
             &cfg_path,
             format!(
-                "[serve]\nstore = \"{}\"\nfield = \"T\"\ncache_bytes = \"1M\"\nretries = 2\n",
+                "[serve]\nstore = \"{}\"\nfield = \"T\"\ncache_bytes = \"1M\"\nretries = 2\n\
+                 max_connections = 2\nqueue_depth = 8\nrequest_timeout_ms = 5000\n",
                 store_dir.display()
             ),
         )
@@ -1411,6 +1448,11 @@ mod tests {
             "127.0.0.1:0",
             "--addr-file",
             addr_file.to_str().unwrap(),
+            // flags override the [serve] section
+            "--max-connections",
+            "4",
+            "--request-timeout-ms",
+            "10000",
         ]);
         let daemon = std::thread::spawn(move || run("serve", &argv));
         let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
@@ -1460,6 +1502,17 @@ mod tests {
         .is_err());
         // serve without a store (flag or config) is a config error
         assert!(run("serve", &s(&["--field", "T"])).is_err());
+        // a worker pool of zero connections is refused up front
+        assert!(run(
+            "serve",
+            &s(&[
+                "--config",
+                cfg_path.to_str().unwrap(),
+                "--max-connections",
+                "0",
+            ]),
+        )
+        .is_err());
         std::fs::remove_dir_all(&dir).ok();
     }
 }

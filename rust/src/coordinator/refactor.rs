@@ -23,7 +23,7 @@ use crate::grid::Hierarchy;
 use crate::progressive::{
     self, plan_with_floor, ComponentId, FetchPlan, ProgressiveManifest, ProgressiveReader,
 };
-use crate::storage::{with_retries, FileStorage, Storage};
+use crate::storage::{FileStorage, Storage};
 use crate::tensor::{numel, Scalar, Tensor};
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -477,9 +477,23 @@ impl ProgressiveField {
     /// `components.bin` through the backing storage, retried within the
     /// configured budget on transient failures).
     pub fn fetch_component(&self, id: ComponentId) -> Result<Vec<u8>> {
+        self.fetch_component_until(id, None)
+    }
+
+    /// [`Self::fetch_component`] with a per-request deadline: once
+    /// `deadline` passes, the retry loop gives up with
+    /// [`Error::Deadline`](crate::error::Error::Deadline) instead of
+    /// burning the rest of its transient-retry budget (the serving daemon
+    /// threads its `request_timeout_ms` through here so a slow backend
+    /// cannot wedge a worker).
+    pub fn fetch_component_until(
+        &self,
+        id: ComponentId,
+        deadline: Option<std::time::Instant>,
+    ) -> Result<Vec<u8>> {
         let (offset, len) = self.manifest.component_range(id.stream, id.comp)?;
         let mut spent = 0;
-        let r = with_retries(self.retries, &mut spent, || {
+        let r = crate::storage::with_retries_until(self.retries, deadline, &mut spent, || {
             self.storage.read_range(&self.components_key, offset, len)
         });
         self.retries_spent.fetch_add(spent, Ordering::Relaxed);

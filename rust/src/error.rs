@@ -40,6 +40,18 @@ pub enum Error {
     /// client request outright.
     Transient(String),
 
+    /// The serving daemon refused a connection because its bounded
+    /// accept queue is full (`SERVE_RESP_BUSY` on the wire). Like
+    /// [`Error::Transient`], the same connection may succeed later, but it
+    /// is surfaced separately so clients can distinguish overload from
+    /// backend faults.
+    Busy(String),
+
+    /// A per-request deadline expired before the request completed
+    /// (`SERVE_RESP_DEADLINE` on the wire, or a storage read that ran out
+    /// of time inside [`crate::storage::with_retries_until`]).
+    Deadline(String),
+
     /// A chunked container's index declares a blob region that falls outside
     /// the blob section (structured so callers can distinguish an index
     /// inconsistency — e.g. a truncated final block — from generic stream
@@ -69,6 +81,8 @@ impl std::fmt::Display for Error {
             Error::Config(m) => write!(f, "config: {m}"),
             Error::Pipeline(m) => write!(f, "pipeline: {m}"),
             Error::Transient(m) => write!(f, "transient storage failure: {m}"),
+            Error::Busy(m) => write!(f, "server busy: {m}"),
+            Error::Deadline(m) => write!(f, "deadline expired: {m}"),
             Error::BlobOutOfRange {
                 block,
                 offset,
@@ -122,10 +136,29 @@ impl Error {
         Error::Transient(msg.to_string())
     }
 
+    /// Helper to build a [`Error::Busy`].
+    pub fn busy(msg: impl std::fmt::Display) -> Self {
+        Error::Busy(msg.to_string())
+    }
+
+    /// Helper to build a [`Error::Deadline`].
+    pub fn deadline(msg: impl std::fmt::Display) -> Self {
+        Error::Deadline(msg.to_string())
+    }
+
     /// Whether retrying the failed operation may succeed (used by the
-    /// serving path's bounded retry loop).
+    /// serving path's bounded retry loop). Deliberately excludes
+    /// [`Error::Busy`] and [`Error::Deadline`]: a retry loop must not
+    /// spin against an overloaded daemon or an already-blown deadline.
     pub fn is_transient(&self) -> bool {
         matches!(self, Error::Transient(_))
+    }
+
+    /// Whether this is a per-request deadline expiry (the serving daemon
+    /// answers these with a structured `Deadline` frame instead of a
+    /// generic error).
+    pub fn is_deadline(&self) -> bool {
+        matches!(self, Error::Deadline(_))
     }
 }
 

@@ -7,10 +7,14 @@
 //!
 //! * [`protocol`] — a length-prefixed TCP wire protocol: `plan τ` /
 //!   `fetch component` / `retrieve region` / `stats` / `shutdown`, with
-//!   versioned, validated frames (normative layout in `docs/SERVING.md`).
-//! * [`server`] — a thread-per-connection daemon over
-//!   [`std::net::TcpListener`], sharing one byte-capacity LRU component
-//!   cache across all clients and tracking per-connection fetch state.
+//!   versioned, validated frames (normative layout in `docs/SERVING.md`)
+//!   and structured `Busy`/`Deadline` refusal statuses since version 2.
+//! * [`server`] — a daemon over [`std::net::TcpListener`] with a bounded
+//!   worker pool (overload answered by `Busy` frames, not queues that
+//!   grow without bound), per-request deadlines, and one byte-capacity
+//!   LRU component cache shared across all clients with single-flight
+//!   miss de-duplication; per-connection fetch state makes floorless
+//!   `plan` requests delta-exact.
 //! * [`client`] — [`ServeClient`] (one connection) and [`RemoteField`]
 //!   (incremental client-side refinement over that connection).
 //!

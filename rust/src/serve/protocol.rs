@@ -18,8 +18,12 @@ use std::io::{Read, Write};
 
 /// Magic prefix of every request payload.
 pub const SERVE_MAGIC: &[u8; 4] = b"MGSV";
-/// Current serve protocol version.
-pub const SERVE_PROTOCOL_VERSION: u8 = 1;
+/// Current serve protocol version. Version 2 added the `Busy`/`Deadline`
+/// refusal statuses and the queue/single-flight/deadline stats counters.
+pub const SERVE_PROTOCOL_VERSION: u8 = 2;
+/// Oldest request version the daemon still answers. Version-1 clients
+/// get version-1-shaped responses (nine-field stats bodies).
+pub const SERVE_PROTOCOL_VERSION_MIN: u8 = 1;
 
 /// Request the field's progressive manifest (body: empty).
 pub const SERVE_OP_MANIFEST: u8 = 1;
@@ -42,6 +46,13 @@ pub const SERVE_OP_SHUTDOWN: u8 = 6;
 pub const SERVE_RESP_OK: u8 = 0;
 /// Response status: failure, UTF-8 error message follows.
 pub const SERVE_RESP_ERR: u8 = 1;
+/// Response status: the daemon's bounded accept queue is full and this
+/// connection was refused before any request was read; UTF-8 message
+/// follows. Sent with the *connection*, not a request — retry later.
+pub const SERVE_RESP_BUSY: u8 = 2;
+/// Response status: the per-request deadline expired before the request
+/// completed; UTF-8 message follows. The connection stays usable.
+pub const SERVE_RESP_DEADLINE: u8 = 3;
 
 /// Upper bound on a single frame's payload (1 GiB): refuses hostile
 /// length prefixes before allocating.
@@ -217,8 +228,19 @@ impl Request {
 
     /// Parse a request payload. Foreign magic, unknown versions or ops,
     /// and truncated or over-long bodies are refused with structured
-    /// errors.
+    /// errors. Discards the negotiated version; the daemon uses
+    /// [`Request::decode_versioned`] so it can shape version-dependent
+    /// responses.
     pub fn decode(payload: &[u8]) -> Result<Request> {
+        Request::decode_versioned(payload).map(|(_, req)| req)
+    }
+
+    /// [`Request::decode`], also returning the request's protocol version
+    /// (any version in `SERVE_PROTOCOL_VERSION_MIN ..=
+    /// SERVE_PROTOCOL_VERSION` is accepted; the request grammar is
+    /// identical across them, but response bodies — notably `stats` —
+    /// are shaped to the client's version).
+    pub fn decode_versioned(payload: &[u8]) -> Result<(u8, Request)> {
         if payload.len() < 6 || &payload[..4] != SERVE_MAGIC {
             return Err(Error::UnsupportedFormat(
                 "not a serve protocol request (bad magic)".into(),
@@ -226,9 +248,10 @@ impl Request {
         }
         let mut r = WireReader::new(&payload[4..]);
         let version = r.u8()?;
-        if version != SERVE_PROTOCOL_VERSION {
+        if !(SERVE_PROTOCOL_VERSION_MIN..=SERVE_PROTOCOL_VERSION).contains(&version) {
             return Err(Error::UnsupportedFormat(format!(
-                "serve protocol version {version} (supported: {SERVE_PROTOCOL_VERSION})"
+                "serve protocol version {version} (supported: \
+                 {SERVE_PROTOCOL_VERSION_MIN}..={SERVE_PROTOCOL_VERSION})"
             )));
         }
         let op = r.u8()?;
@@ -282,17 +305,19 @@ impl Request {
                 r.remaining()
             )));
         }
-        Ok(req)
+        Ok((version, req))
     }
 }
 
-/// Daemon counters, as returned by the `stats` request (nine `u64`s on
-/// the wire, in declaration order).
+/// Daemon counters, as returned by the `stats` request (thirteen `u64`s
+/// on the wire, in declaration order; version-1 clients receive only the
+/// first nine — the version-2 counters are strictly appended).
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct ServeStats {
     /// Component-cache hits.
     pub hits: u64,
-    /// Component-cache misses.
+    /// Component-cache misses (== backend fetches issued, under
+    /// single-flight).
     pub misses: u64,
     /// Component-cache evictions.
     pub evictions: u64,
@@ -308,13 +333,22 @@ pub struct ServeStats {
     pub connections: u64,
     /// Transient storage failures absorbed by retries.
     pub transient_retries: u64,
+    /// Connections currently admitted but waiting for a worker (a gauge,
+    /// not a counter).
+    pub queued: u64,
+    /// Connections refused with a `Busy` frame because the accept queue
+    /// was full.
+    pub refused: u64,
+    /// Cache lookups coalesced onto another client's in-flight fetch.
+    pub coalesced: u64,
+    /// Requests answered with a `Deadline` frame because their
+    /// per-request budget expired.
+    pub deadline_expired: u64,
 }
 
 impl ServeStats {
-    /// Serialize for the wire.
-    pub fn encode(&self) -> Vec<u8> {
-        let mut out = Vec::new();
-        for v in [
+    fn fields(&self) -> [u64; 13] {
+        [
             self.hits,
             self.misses,
             self.evictions,
@@ -324,16 +358,35 @@ impl ServeStats {
             self.requests,
             self.connections,
             self.transient_retries,
-        ] {
+            self.queued,
+            self.refused,
+            self.coalesced,
+            self.deadline_expired,
+        ]
+    }
+
+    /// Serialize for the wire at the current protocol version.
+    pub fn encode(&self) -> Vec<u8> {
+        self.encode_for(SERVE_PROTOCOL_VERSION)
+    }
+
+    /// Serialize for a client speaking protocol `version`: version 1
+    /// bodies carry only the first nine counters, version 2 all thirteen.
+    pub fn encode_for(&self, version: u8) -> Vec<u8> {
+        let fields = self.fields();
+        let n = if version <= 1 { 9 } else { fields.len() };
+        let mut out = Vec::with_capacity(8 * n);
+        for &v in &fields[..n] {
             put_u64(&mut out, v);
         }
         out
     }
 
-    /// Parse from the wire.
+    /// Parse from the wire: accepts a version-1 (nine-`u64`) or
+    /// version-2 (thirteen-`u64`) body; absent counters decode as zero.
     pub fn decode(bytes: &[u8]) -> Result<ServeStats> {
         let mut r = WireReader::new(bytes);
-        let s = ServeStats {
+        let mut s = ServeStats {
             hits: r.u64()?,
             misses: r.u64()?,
             evictions: r.u64()?,
@@ -343,7 +396,14 @@ impl ServeStats {
             requests: r.u64()?,
             connections: r.u64()?,
             transient_retries: r.u64()?,
+            ..ServeStats::default()
         };
+        if r.remaining() != 0 {
+            s.queued = r.u64()?;
+            s.refused = r.u64()?;
+            s.coalesced = r.u64()?;
+            s.deadline_expired = r.u64()?;
+        }
         if r.remaining() != 0 {
             return Err(Error::corrupt("trailing bytes after stats"));
         }
@@ -407,8 +467,28 @@ pub fn err_response(msg: &str) -> Vec<u8> {
     out
 }
 
+/// Encode a BUSY refusal: status byte + UTF-8 message. Written once to a
+/// connection the accept queue cannot hold, before any request is read.
+pub fn busy_response(msg: &str) -> Vec<u8> {
+    let mut out = Vec::with_capacity(1 + msg.len());
+    out.push(SERVE_RESP_BUSY);
+    out.extend_from_slice(msg.as_bytes());
+    out
+}
+
+/// Encode a DEADLINE refusal: status byte + UTF-8 message. Answers a
+/// request whose per-request time budget expired; the connection stays
+/// usable.
+pub fn deadline_response(msg: &str) -> Vec<u8> {
+    let mut out = Vec::with_capacity(1 + msg.len());
+    out.push(SERVE_RESP_DEADLINE);
+    out.extend_from_slice(msg.as_bytes());
+    out
+}
+
 /// Split a response payload into its body, surfacing ERR responses as
-/// structured errors.
+/// structured errors and the version-2 refusal statuses as
+/// [`Error::Busy`] / [`Error::Deadline`].
 pub fn parse_response(payload: &[u8]) -> Result<&[u8]> {
     match payload.first() {
         Some(&SERVE_RESP_OK) => Ok(&payload[1..]),
@@ -416,7 +496,12 @@ pub fn parse_response(payload: &[u8]) -> Result<&[u8]> {
             "server error: {}",
             String::from_utf8_lossy(&payload[1..])
         ))),
-        _ => Err(Error::corrupt("empty response payload")),
+        Some(&SERVE_RESP_BUSY) => Err(Error::busy(String::from_utf8_lossy(&payload[1..]))),
+        Some(&SERVE_RESP_DEADLINE) => {
+            Err(Error::deadline(String::from_utf8_lossy(&payload[1..])))
+        }
+        Some(other) => Err(Error::corrupt(format!("unknown response status {other}"))),
+        None => Err(Error::corrupt("empty response payload")),
     }
 }
 
@@ -523,8 +608,73 @@ mod tests {
             requests: 7,
             connections: 8,
             transient_retries: 9,
+            queued: 10,
+            refused: 11,
+            coalesced: 12,
+            deadline_expired: 13,
         };
+        assert_eq!(s.encode().len(), 13 * 8);
         assert_eq!(ServeStats::decode(&s.encode()).unwrap(), s);
         assert!(ServeStats::decode(&s.encode()[..8]).is_err());
+        // a partial v2 tail is refused, not misparsed
+        assert!(ServeStats::decode(&s.encode()[..10 * 8]).is_err());
+    }
+
+    #[test]
+    fn busy_and_deadline_statuses_are_structured() {
+        assert!(matches!(
+            parse_response(&busy_response("queue full")),
+            Err(Error::Busy(m)) if m == "queue full"
+        ));
+        assert!(matches!(
+            parse_response(&deadline_response("out of time")),
+            Err(Error::Deadline(m)) if m == "out of time"
+        ));
+        // an unknown status byte is corruption, not a silent OK
+        assert!(matches!(
+            parse_response(&[77, 1, 2]),
+            Err(Error::CorruptStream(_))
+        ));
+    }
+
+    #[test]
+    fn version_1_requests_and_stats_still_parse() {
+        // a v1 client's request: identical grammar, version byte 1
+        let mut p = Request::Fetch { stream: 3, comp: 7 }.encode();
+        p[4] = 1;
+        let (version, req) = Request::decode_versioned(&p).unwrap();
+        assert_eq!(version, 1);
+        assert_eq!(req, Request::Fetch { stream: 3, comp: 7 });
+        // current-version requests report the current version
+        let (version, _) = Request::decode_versioned(&Request::Stats.encode()).unwrap();
+        assert_eq!(version, SERVE_PROTOCOL_VERSION);
+        // versions below MIN or above CURRENT are refused
+        let mut p = Request::Stats.encode();
+        p[4] = 0;
+        assert!(matches!(
+            Request::decode_versioned(&p),
+            Err(Error::UnsupportedFormat(_))
+        ));
+        // a v1-shaped stats body (nine u64s) decodes with zeroed v2 fields
+        let s = ServeStats {
+            hits: 1,
+            misses: 2,
+            evictions: 3,
+            bytes_used: 4,
+            entries: 5,
+            capacity: 6,
+            requests: 7,
+            connections: 8,
+            transient_retries: 9,
+            queued: 10,
+            refused: 11,
+            coalesced: 12,
+            deadline_expired: 13,
+        };
+        let v1 = s.encode_for(1);
+        assert_eq!(v1.len(), 9 * 8);
+        let d = ServeStats::decode(&v1).unwrap();
+        assert_eq!((d.hits, d.transient_retries), (1, 9));
+        assert_eq!((d.queued, d.refused, d.coalesced, d.deadline_expired), (0, 0, 0, 0));
     }
 }

@@ -2,32 +2,54 @@
 //!
 //! One [`Server`] owns one progressively refactored field (over any
 //! [`crate::storage::Storage`] backend) and answers simultaneous clients
-//! over plain TCP — a hand-rolled thread-per-connection loop on
-//! [`std::net::TcpListener`], no external crates. All connections share
-//! one byte-capacity [`ComponentCache`], so the hot prefix components
-//! (sign planes, high bitplanes) are fetched from the backend once and
-//! then served from memory to every client; per-connection **fetch
-//! state** (components already served on that connection) lets a `plan`
-//! request with no explicit floor return exactly the delta the client
-//! still needs.
+//! over plain TCP — no external crates. Connections are serviced by a
+//! **bounded worker pool** ([`crate::chunk::WorkerPool`]): at most
+//! `max_connections` are in service at once, at most `queue_depth` more
+//! wait for a worker, and anything beyond that is refused immediately
+//! with a structured `Busy` frame instead of hanging or resetting. All
+//! connections share one byte-capacity [`ComponentCache`] with
+//! single-flight miss de-duplication, so the hot prefix components (sign
+//! planes, high bitplanes) are fetched from the backend once — even
+//! under a stampede of concurrent cold clients — and then served from
+//! memory; per-connection **fetch state** (components already served on
+//! that connection) lets a `plan` request with no explicit floor return
+//! exactly the delta the client still needs.
+//!
+//! Every request gets a deadline of `request_timeout_ms` from the moment
+//! its frame arrives, threaded through the storage retry loop
+//! ([`crate::storage::with_retries_until`]) and checked between
+//! component fetches — a slow backend cannot wedge a worker for longer
+//! than one backend operation past the deadline. An expired request is
+//! answered with a `Deadline` frame and the connection stays usable.
 //!
 //! Shutdown is cooperative: the `shutdown` op (or [`Server::stop`]) sets
-//! a flag and wakes the accept loop with a loopback connection, so the
-//! daemon exits without killing in-flight connections mid-frame.
+//! a flag and wakes the accept loop with a loopback connection. Workers
+//! poll the flag while waiting for frames (50 ms granularity), so every
+//! worker drains even when clients sit idle on open connections.
 
 use super::protocol::{
-    encode_plan, err_response, ok_response, put_f64, put_u64, read_frame, write_frame, Request,
-    ServeStats,
+    busy_response, deadline_response, encode_plan, err_response, ok_response, put_f64, put_u64,
+    write_frame, Request, ServeStats, MAX_FRAME_BYTES,
 };
+use crate::chunk::WorkerPool;
 use crate::coordinator::refactor::ProgressiveField;
 use crate::error::{Error, Result};
 use crate::progressive::ComponentId;
 use crate::storage::ComponentCache;
 use crate::tensor::Scalar;
+use std::io::Read;
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
 use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// How often a worker waiting on a socket re-checks the stop flag.
+const STOP_POLL: Duration = Duration::from_millis(50);
+
+/// Frame payloads are read in chunks of at most this many bytes, so a
+/// hostile length prefix cannot force a large up-front allocation.
+const READ_CHUNK: usize = 64 << 10;
 
 /// Daemon configuration.
 #[derive(Clone, Debug)]
@@ -39,6 +61,15 @@ pub struct ServeConfig {
     pub cache_bytes: u64,
     /// Retry budget per component fetch on transient backend failures.
     pub retries: usize,
+    /// Connections serviced concurrently (worker threads). Minimum 1.
+    pub max_connections: usize,
+    /// Admitted connections that may wait for a worker beyond the ones in
+    /// service; anything past that is refused with a `Busy` frame
+    /// (`queue_depth = 0` still admits while a worker is idle).
+    pub queue_depth: usize,
+    /// Per-request deadline in milliseconds, measured from the arrival of
+    /// the request frame; `0` disables deadlines.
+    pub request_timeout_ms: u64,
 }
 
 impl Default for ServeConfig {
@@ -47,6 +78,9 @@ impl Default for ServeConfig {
             addr: "127.0.0.1:0".into(),
             cache_bytes: 64 << 20,
             retries: 3,
+            max_connections: 16,
+            queue_depth: 64,
+            request_timeout_ms: 30_000,
         }
     }
 }
@@ -54,18 +88,23 @@ impl Default for ServeConfig {
 struct Shared {
     field: ProgressiveField,
     cache: ComponentCache,
+    timeout: Option<Duration>,
     requests: AtomicU64,
     connections: AtomicU64,
+    queued: AtomicU64,
+    refused: AtomicU64,
+    deadline_expired: AtomicU64,
     stop: AtomicBool,
 }
 
 impl Shared {
-    /// One component through the shared cache (backend fetch on a miss,
-    /// with the field's retry budget).
-    fn fetch_cached(&self, id: ComponentId) -> Result<Arc<Vec<u8>>> {
+    /// One component through the shared cache (single-flight backend
+    /// fetch on a miss, with the field's retry budget bounded by the
+    /// request deadline).
+    fn fetch_cached(&self, id: ComponentId, deadline: Option<Instant>) -> Result<Arc<Vec<u8>>> {
         let key = format!("{}/{}", id.stream, id.comp);
         self.cache
-            .get_or_fetch(&key, || self.field.fetch_component(id))
+            .get_or_fetch(&key, || self.field.fetch_component_until(id, deadline))
     }
 
     fn stats(&self) -> ServeStats {
@@ -80,6 +119,10 @@ impl Shared {
             requests: self.requests.load(Ordering::Relaxed),
             connections: self.connections.load(Ordering::Relaxed),
             transient_retries: self.field.retries_spent(),
+            queued: self.queued.load(Ordering::SeqCst),
+            refused: self.refused.load(Ordering::Relaxed),
+            coalesced: c.coalesced,
+            deadline_expired: self.deadline_expired.load(Ordering::Relaxed),
         }
     }
 }
@@ -100,21 +143,66 @@ impl Server {
         let shared = Arc::new(Shared {
             field,
             cache: ComponentCache::new(cfg.cache_bytes),
+            timeout: (cfg.request_timeout_ms > 0)
+                .then(|| Duration::from_millis(cfg.request_timeout_ms)),
             requests: AtomicU64::new(0),
             connections: AtomicU64::new(0),
+            queued: AtomicU64::new(0),
+            refused: AtomicU64::new(0),
+            deadline_expired: AtomicU64::new(0),
             stop: AtomicBool::new(false),
         });
         let accept_shared = Arc::clone(&shared);
+        let (max_connections, queue_depth) = (cfg.max_connections.max(1), cfg.queue_depth);
         let accept = std::thread::spawn(move || {
+            let pool_shared = Arc::clone(&accept_shared);
+            let mut pool = WorkerPool::new(max_connections, queue_depth, move |stream: TcpStream| {
+                pool_shared.queued.fetch_sub(1, Ordering::SeqCst);
+                handle_connection(&pool_shared, addr, stream);
+            });
             for conn in listener.incoming() {
                 if accept_shared.stop.load(Ordering::SeqCst) {
                     break;
                 }
                 let Ok(stream) = conn else { continue };
-                accept_shared.connections.fetch_add(1, Ordering::Relaxed);
-                let conn_shared = Arc::clone(&accept_shared);
-                std::thread::spawn(move || handle_connection(&conn_shared, addr, stream));
+                // count the admission *before* submitting so the gauge
+                // never underflows when the worker decrements first
+                accept_shared.queued.fetch_add(1, Ordering::SeqCst);
+                match pool.try_submit(stream) {
+                    Ok(()) => {
+                        accept_shared.connections.fetch_add(1, Ordering::Relaxed);
+                    }
+                    Err(mut stream) => {
+                        accept_shared.queued.fetch_sub(1, Ordering::SeqCst);
+                        accept_shared.refused.fetch_add(1, Ordering::Relaxed);
+                        // refuse with a structured frame, never a hang or
+                        // reset; a dead peer must not stall the accept loop
+                        let _ = stream.set_write_timeout(Some(Duration::from_millis(500)));
+                        let _ = write_frame(
+                            &mut stream,
+                            &busy_response("accept queue full, retry later"),
+                        );
+                        // closing with the peer's request still unread
+                        // would RST the busy frame out of its receive
+                        // buffer — drain (bounded) until the peer closes
+                        let _ = stream.shutdown(std::net::Shutdown::Write);
+                        let _ = stream.set_read_timeout(Some(STOP_POLL));
+                        let drain_until = Instant::now() + Duration::from_millis(250);
+                        let mut sink = [0u8; 1024];
+                        while Instant::now() < drain_until {
+                            match stream.read(&mut sink) {
+                                Ok(0) => break,
+                                Ok(_) => continue,
+                                Err(e) if polls(&e) => continue,
+                                Err(_) => break,
+                            }
+                        }
+                    }
+                }
             }
+            // drains admitted connections, then joins the workers (they
+            // observe the stop flag while polling their sockets)
+            pool.shutdown();
         });
         Ok(Server {
             addr,
@@ -165,20 +253,97 @@ enum Outcome {
     Shutdown,
 }
 
+/// [`super::protocol::read_frame`] for a worker: waits with a short read
+/// timeout so the stop flag is observed within [`STOP_POLL`] even while a
+/// client sits idle, reads payloads in [`READ_CHUNK`]-byte steps (a
+/// hostile length prefix never forces a large up-front allocation), and
+/// bounds *mid-frame* stalls by the request timeout so a slow-loris
+/// client cannot hold a worker forever. Returns `Ok(None)` to drop the
+/// connection (clean close or shutdown), `Err` on anything that cannot
+/// be answered reliably.
+fn read_frame_cancellable(stream: &mut TcpStream, shared: &Shared) -> Result<Option<Vec<u8>>> {
+    stream.set_read_timeout(Some(STOP_POLL))?;
+    let mut frame_start: Option<Instant> = None;
+    let check_stall = |frame_start: &Option<Instant>| -> Result<()> {
+        if shared.stop.load(Ordering::SeqCst) {
+            return Err(Error::corrupt("daemon stopping"));
+        }
+        if let (Some(t0), Some(timeout)) = (frame_start, shared.timeout) {
+            if t0.elapsed() > timeout {
+                return Err(Error::corrupt("peer stalled mid-frame"));
+            }
+        }
+        Ok(())
+    };
+    let mut len = [0u8; 4];
+    let mut got = 0;
+    while got < 4 {
+        match stream.read(&mut len[got..]) {
+            Ok(0) if got == 0 => return Ok(None),
+            Ok(0) => return Err(Error::corrupt("connection closed mid-frame")),
+            Ok(n) => {
+                got += n;
+                frame_start.get_or_insert_with(Instant::now);
+            }
+            Err(e) if polls(&e) => {
+                if check_stall(&frame_start).is_err() {
+                    return Ok(None);
+                }
+            }
+            Err(e) => return Err(e.into()),
+        }
+    }
+    let total = u32::from_le_bytes(len);
+    if total > MAX_FRAME_BYTES {
+        return Err(Error::corrupt(format!(
+            "frame declares {total} bytes (cap {MAX_FRAME_BYTES})"
+        )));
+    }
+    let total = total as usize;
+    let mut payload = Vec::with_capacity(total.min(READ_CHUNK));
+    let mut buf = vec![0u8; READ_CHUNK.min(total.max(1))];
+    while payload.len() < total {
+        let want = (total - payload.len()).min(buf.len());
+        match stream.read(&mut buf[..want]) {
+            Ok(0) => return Err(Error::corrupt("connection closed mid-frame")),
+            Ok(n) => payload.extend_from_slice(&buf[..n]),
+            Err(e) if polls(&e) => check_stall(&frame_start)?,
+            Err(e) => return Err(e.into()),
+        }
+    }
+    Ok(Some(payload))
+}
+
+/// Whether a socket error is the poll timeout (keep waiting) rather than
+/// a real failure.
+fn polls(e: &std::io::Error) -> bool {
+    matches!(
+        e.kind(),
+        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+    )
+}
+
 fn handle_connection(shared: &Arc<Shared>, addr: SocketAddr, mut stream: TcpStream) {
     // per-connection fetch state: components already served, per stream
     let mut floor = vec![0usize; shared.field.manifest().streams.len()];
     loop {
-        let payload = match read_frame(&mut stream) {
+        let payload = match read_frame_cancellable(&mut stream, shared) {
             Ok(Some(p)) => p,
-            // clean close, or a connection-level failure we can't answer
+            // clean close, shutdown, or a failure we can't answer
             Ok(None) | Err(_) => return,
         };
         shared.requests.fetch_add(1, Ordering::Relaxed);
-        let outcome = Request::decode(&payload).and_then(|req| handle_request(shared, &mut floor, req));
+        // the deadline covers request handling, measured from frame arrival
+        let deadline = shared.timeout.map(|t| Instant::now() + t);
+        let outcome = Request::decode_versioned(&payload)
+            .and_then(|(version, req)| handle_request(shared, &mut floor, version, req, deadline));
         let (resp, stop_after) = match outcome {
             Ok(Outcome::Body(body)) => (ok_response(&body), false),
             Ok(Outcome::Shutdown) => (ok_response(&[]), true),
+            Err(e) if e.is_deadline() => {
+                shared.deadline_expired.fetch_add(1, Ordering::Relaxed);
+                (deadline_response(&e.to_string()), false)
+            }
             Err(e) => (err_response(&e.to_string()), false),
         };
         if write_frame(&mut stream, &resp).is_err() {
@@ -193,7 +358,13 @@ fn handle_connection(shared: &Arc<Shared>, addr: SocketAddr, mut stream: TcpStre
     }
 }
 
-fn handle_request(shared: &Shared, floor: &mut [usize], req: Request) -> Result<Outcome> {
+fn handle_request(
+    shared: &Shared,
+    floor: &mut [usize],
+    version: u8,
+    req: Request,
+    deadline: Option<Instant>,
+) -> Result<Outcome> {
     match req {
         Request::Manifest => Ok(Outcome::Body(shared.field.manifest().to_bytes())),
         Request::Plan { tau, floor: explicit } => {
@@ -206,7 +377,7 @@ fn handle_request(shared: &Shared, floor: &mut [usize], req: Request) -> Result<
         }
         Request::Fetch { stream, comp } => {
             let id = ComponentId { stream, comp };
-            let bytes = shared.fetch_cached(id)?;
+            let bytes = shared.fetch_cached(id, deadline)?;
             // advance the connection floor only on in-order fetches, so it
             // always describes a contiguous prefix (a valid planner floor)
             if stream < floor.len() && comp == floor[stream] {
@@ -216,13 +387,14 @@ fn handle_request(shared: &Shared, floor: &mut [usize], req: Request) -> Result<
         }
         Request::Retrieve { tau, region } => {
             let body = match shared.field.manifest().dtype {
-                1 => retrieve_body::<f32>(shared, tau, region.as_deref()),
-                2 => retrieve_body::<f64>(shared, tau, region.as_deref()),
+                1 => retrieve_body::<f32>(shared, tau, region.as_deref(), deadline),
+                2 => retrieve_body::<f64>(shared, tau, region.as_deref(), deadline),
                 t => Err(Error::corrupt(format!("unknown dtype tag {t}"))),
             }?;
             Ok(Outcome::Body(body))
         }
-        Request::Stats => Ok(Outcome::Body(shared.stats().encode())),
+        // stats bodies are shaped to the client's protocol version
+        Request::Stats => Ok(Outcome::Body(shared.stats().encode_for(version))),
         Request::Shutdown => Ok(Outcome::Shutdown),
     }
 }
@@ -230,16 +402,23 @@ fn handle_request(shared: &Shared, floor: &mut [usize], req: Request) -> Result<
 /// Server-side retrieval: plan for `tau`, pull the planned components
 /// through the shared cache, reconstruct, optionally crop. Body layout:
 /// `certified_bound: f64`, `rank: u64`, `rank × u64` shape, then the raw
-/// little-endian scalars.
+/// little-endian scalars. The deadline is re-checked between component
+/// fetches, so an expired request stops fetching promptly.
 fn retrieve_body<T: Scalar>(
     shared: &Shared,
     tau: f64,
     region: Option<&[(usize, usize)]>,
+    deadline: Option<Instant>,
 ) -> Result<Vec<u8>> {
     let plan = shared.field.plan(tau, None)?;
     let mut reader = shared.field.reader::<T>()?;
     for id in plan.components() {
-        reader.apply(id, &shared.fetch_cached(id)?)?;
+        if let Some(d) = deadline {
+            if Instant::now() >= d {
+                return Err(Error::deadline("retrieve ran out of time mid-fetch"));
+            }
+        }
+        reader.apply(id, &shared.fetch_cached(id, deadline)?)?;
     }
     let full = reader.reconstruct()?;
     let out = match region {
@@ -351,5 +530,137 @@ mod tests {
         let stats = server.stats();
         assert!(stats.transient_retries > 0, "{stats:?}");
         server.stop();
+    }
+
+    #[test]
+    fn overload_refuses_with_a_structured_busy_frame() {
+        use super::super::protocol::{parse_response, read_frame};
+        let (field, _) = memory_field(&[9, 9]);
+        let cfg = ServeConfig {
+            max_connections: 1,
+            queue_depth: 0,
+            ..ServeConfig::default()
+        };
+        let mut server = Server::start(field, &cfg).unwrap();
+        let addr = server.addr();
+        // occupy the single worker and prove it is in service
+        let mut holder = ServeClient::connect(addr).unwrap();
+        holder.stats().unwrap();
+        // the next connection must be refused with a Busy frame — read it
+        // without writing anything (the frame is sent at accept time)
+        let mut refused = std::net::TcpStream::connect(addr).unwrap();
+        refused
+            .set_read_timeout(Some(Duration::from_secs(5)))
+            .unwrap();
+        let frame = read_frame(&mut refused).unwrap().expect("a busy frame, not a close");
+        match parse_response(&frame) {
+            Err(Error::Busy(msg)) => assert!(msg.contains("queue full"), "{msg}"),
+            other => panic!("expected Busy, got {other:?}"),
+        }
+        drop(refused);
+        // a full client sees the refusal as Error::Busy too
+        let mut client = ServeClient::connect(addr).unwrap();
+        match client.stats() {
+            Err(Error::Busy(_)) => {}
+            other => panic!("expected Busy, got {other:?}"),
+        }
+        // the admitted connection is unaffected and the counter advanced
+        let stats = holder.stats().unwrap();
+        assert!(stats.refused >= 2, "{stats:?}");
+        assert_eq!(stats.connections, 1, "{stats:?}");
+        drop(holder);
+        server.stop();
+    }
+
+    #[test]
+    fn queued_connections_are_served_once_a_worker_frees() {
+        let (field, t) = memory_field(&[9, 9]);
+        let cfg = ServeConfig {
+            max_connections: 1,
+            queue_depth: 4,
+            ..ServeConfig::default()
+        };
+        let mut server = Server::start(field, &cfg).unwrap();
+        let addr = server.addr();
+        let holder = ServeClient::connect(addr).unwrap();
+        // second connection is admitted into the queue, parks until the
+        // holder disconnects, then gets the worker and full service
+        let waiter = std::thread::spawn(move || {
+            let mut client = ServeClient::connect(addr).unwrap();
+            let (back, bound) = client.retrieve::<f32>(0.05, None).unwrap();
+            (back, bound)
+        });
+        std::thread::sleep(Duration::from_millis(100));
+        drop(holder); // frees the worker
+        let (back, bound) = waiter.join().unwrap();
+        assert!(bound <= 0.05);
+        assert!(linf_error(t.data(), back.data()) <= 0.05);
+        server.stop();
+    }
+
+    #[test]
+    fn expired_deadlines_answer_with_a_deadline_frame() {
+        let t = crate::data::synth::smooth_test_field(&[17, 17]);
+        let mem = Arc::new(MemoryStorage::new());
+        let writer = RefactorStore::with_storage(Arc::clone(&mem) as Arc<dyn Storage>);
+        writer.write_field_progressive("u", &t, None, 3).unwrap();
+        // slow enough that a ~1ms budget dies between component fetches
+        let mock = Arc::new(MockStorage::new(mem, Duration::from_millis(20), 0));
+        let store = RefactorStore::with_storage(mock);
+        let field = store.progressive("u").unwrap();
+        let cfg = ServeConfig {
+            request_timeout_ms: 1,
+            ..ServeConfig::default()
+        };
+        let mut server = Server::start(field, &cfg).unwrap();
+        let mut client = ServeClient::connect(server.addr()).unwrap();
+        match client.retrieve::<f32>(1e-3, None) {
+            Err(Error::Deadline(_)) => {}
+            other => panic!("expected Deadline, got {other:?}"),
+        }
+        // the connection stays usable: manifest needs no backend reads
+        client.manifest().unwrap();
+        let stats = client.stats().unwrap();
+        assert!(stats.deadline_expired >= 1, "{stats:?}");
+        server.stop();
+    }
+
+    #[test]
+    fn version_1_clients_get_version_1_stats_bodies() {
+        use super::super::protocol::{parse_response, read_frame, SERVE_PROTOCOL_VERSION};
+        let (field, _) = memory_field(&[9, 9]);
+        let mut server = Server::start(field, &ServeConfig::default()).unwrap();
+        let mut raw = std::net::TcpStream::connect(server.addr()).unwrap();
+        raw.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        // a stats request with the version byte rewritten to 1
+        let mut req = Request::Stats.encode();
+        assert_eq!(req[4], SERVE_PROTOCOL_VERSION);
+        req[4] = 1;
+        write_frame(&mut raw, &req).unwrap();
+        let resp = read_frame(&mut raw).unwrap().unwrap();
+        let body = parse_response(&resp).unwrap();
+        assert_eq!(body.len(), 9 * 8, "v1 stats body is nine u64s");
+        // the same connection answers a current-version request in full
+        write_frame(&mut raw, &Request::Stats.encode()).unwrap();
+        let resp = read_frame(&mut raw).unwrap().unwrap();
+        let body = parse_response(&resp).unwrap();
+        assert_eq!(body.len(), 13 * 8, "v2 stats body is thirteen u64s");
+        drop(raw);
+        server.stop();
+    }
+
+    #[test]
+    fn stop_drains_workers_with_idle_connections_open() {
+        let (field, _) = memory_field(&[9, 9]);
+        let mut server = Server::start(field, &ServeConfig::default()).unwrap();
+        // open connections and leave them idle — no frames at all
+        let idle: Vec<_> = (0..4)
+            .map(|_| ServeClient::connect(server.addr()).unwrap())
+            .collect();
+        std::thread::sleep(Duration::from_millis(60));
+        // stop() joins the accept thread, which drains the worker pool;
+        // returning at all proves no worker is wedged on an idle socket
+        server.stop();
+        drop(idle);
     }
 }

@@ -10,15 +10,17 @@
 
 use crate::error::Result;
 use std::collections::HashMap;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 
 /// Counters and occupancy of a [`ComponentCache`], as returned by
 /// [`ComponentCache::stats`] (and serialized by the serve protocol).
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct CacheStats {
-    /// Lookups answered from the cache.
+    /// Lookups answered from the cache (including single-flight waiters
+    /// that shared a leader's fetch — see `coalesced`).
     pub hits: u64,
-    /// Lookups that had to go to the backend.
+    /// Lookups that had to go to the backend. Under single-flight this
+    /// equals the number of backend fetches *issued*.
     pub misses: u64,
     /// Entries evicted to make room.
     pub evictions: u64,
@@ -28,6 +30,26 @@ pub struct CacheStats {
     pub entries: u64,
     /// Configured capacity in bytes.
     pub capacity: u64,
+    /// Lookups that found another client's fetch of the same key already
+    /// in flight and shared its result instead of issuing their own
+    /// backend read (each is also counted as a hit).
+    pub coalesced: u64,
+}
+
+/// Publication slot for one in-flight backend fetch: the single-flight
+/// leader resolves it exactly once; waiters park on the condvar.
+enum FlightState {
+    Pending,
+    Done(Arc<Vec<u8>>),
+    /// The leader's fetch failed. Waiters do **not** inherit the error
+    /// (errors are not clonable and may be waiter-specific); they loop
+    /// back, and one of them becomes the new leader.
+    Failed,
+}
+
+struct Flight {
+    state: Mutex<FlightState>,
+    cvar: Condvar,
 }
 
 struct Inner {
@@ -36,11 +58,14 @@ struct Inner {
     /// stamp -> key, the recency order (stamps are unique: the clock only
     /// moves forward and every touch re-stamps).
     order: std::collections::BTreeMap<u64, String>,
+    /// key -> the single-flight fetch currently running for it, if any.
+    inflight: HashMap<String, Arc<Flight>>,
     clock: u64,
     bytes_used: u64,
     hits: u64,
     misses: u64,
     evictions: u64,
+    coalesced: u64,
 }
 
 /// Thread-safe byte-capacity LRU over opaque payloads.
@@ -63,11 +88,13 @@ impl ComponentCache {
             inner: Mutex::new(Inner {
                 map: HashMap::new(),
                 order: std::collections::BTreeMap::new(),
+                inflight: HashMap::new(),
                 clock: 0,
                 bytes_used: 0,
                 hits: 0,
                 misses: 0,
                 evictions: 0,
+                coalesced: 0,
             }),
             capacity,
         }
@@ -129,22 +156,92 @@ impl ComponentCache {
         g.bytes_used += len;
     }
 
-    /// `get`, falling back to `fetch` on a miss and caching the result.
-    /// `fetch` runs *outside* the lock, so slow backend reads never block
-    /// other clients' cache traffic (two concurrent misses on one key may
-    /// both fetch; the second insert wins — payloads are immutable, so
-    /// this is benign).
+    /// `get`, falling back to `fetch` on a miss and caching the result —
+    /// with **single-flight de-duplication**: concurrent misses on one
+    /// key elect exactly one leader, whose fetch runs while every other
+    /// caller parks as a waiter and shares the leader's result (counted
+    /// as a hit plus a `coalesced`). `fetch` runs *outside* every lock,
+    /// so a slow backend read never blocks other keys' cache traffic —
+    /// warm clients keep hitting while a cold key is in flight.
+    ///
+    /// If the leader's fetch fails, its own error is returned to it;
+    /// waiters wake, loop back, and one becomes the new leader (each
+    /// invocation runs its own `fetch` at most once), so error categories
+    /// propagate to every caller without cloning errors. Exactly one
+    /// hit-or-miss is counted per call; `misses` therefore equals the
+    /// number of backend fetches issued.
     pub fn get_or_fetch(
         &self,
         key: &str,
         fetch: impl FnOnce() -> Result<Vec<u8>>,
     ) -> Result<Arc<Vec<u8>>> {
-        if let Some(hit) = self.get(key) {
-            return Ok(hit);
+        let mut fetch = Some(fetch);
+        loop {
+            // fast path + leader election under one lock acquisition
+            let flight = {
+                let mut g = self.inner.lock().unwrap();
+                g.clock += 1;
+                let stamp = g.clock;
+                if let Some((payload, old)) = g.map.get_mut(key) {
+                    let prev = std::mem::replace(old, stamp);
+                    let hit = Arc::clone(payload);
+                    g.order.remove(&prev);
+                    g.order.insert(stamp, key.to_string());
+                    g.hits += 1;
+                    return Ok(hit);
+                }
+                match g.inflight.get(key) {
+                    Some(f) => Some(Arc::clone(f)), // waiter
+                    None => {
+                        g.misses += 1;
+                        let f = Arc::new(Flight {
+                            state: Mutex::new(FlightState::Pending),
+                            cvar: Condvar::new(),
+                        });
+                        g.inflight.insert(key.to_string(), Arc::clone(&f));
+                        drop(g);
+                        // leader: fetch outside all locks
+                        let result = (fetch.take().expect("leader fetches once"))();
+                        let published = match result {
+                            Ok(bytes) => {
+                                let payload = Arc::new(bytes);
+                                self.insert(key, Arc::clone(&payload));
+                                Ok(payload)
+                            }
+                            Err(e) => Err(e),
+                        };
+                        // retire the flight *before* publishing so late
+                        // arrivals see the cached entry (or elect a new
+                        // leader on failure) instead of a stale flight
+                        self.inner.lock().unwrap().inflight.remove(key);
+                        let mut st = f.state.lock().unwrap();
+                        *st = match &published {
+                            Ok(payload) => FlightState::Done(Arc::clone(payload)),
+                            Err(_) => FlightState::Failed,
+                        };
+                        drop(st);
+                        f.cvar.notify_all();
+                        return published;
+                    }
+                }
+            };
+            if let Some(f) = flight {
+                let mut st = f.state.lock().unwrap();
+                while matches!(*st, FlightState::Pending) {
+                    st = f.cvar.wait(st).unwrap();
+                }
+                if let FlightState::Done(payload) = &*st {
+                    let shared = Arc::clone(payload);
+                    drop(st);
+                    let mut g = self.inner.lock().unwrap();
+                    g.hits += 1;
+                    g.coalesced += 1;
+                    return Ok(shared);
+                }
+                // leader failed: loop back; this caller may hit the cache
+                // (another leader succeeded meanwhile) or become leader
+            }
         }
-        let payload = Arc::new(fetch()?);
-        self.insert(key, Arc::clone(&payload));
-        Ok(payload)
     }
 
     /// Current counters and occupancy.
@@ -157,6 +254,7 @@ impl ComponentCache {
             bytes_used: g.bytes_used,
             entries: g.map.len() as u64,
             capacity: self.capacity,
+            coalesced: g.coalesced,
         }
     }
 
@@ -281,5 +379,115 @@ mod tests {
         let s = c.stats();
         assert_eq!(s.hits + s.misses, 8 * 64);
         assert_eq!(s.entries, 16);
+    }
+
+    #[test]
+    fn concurrent_misses_coalesce_into_one_fetch() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        use std::sync::Barrier;
+        const N: usize = 8;
+        let c = Arc::new(ComponentCache::new(1 << 16));
+        let fetches = Arc::new(AtomicUsize::new(0));
+        let barrier = Arc::new(Barrier::new(N));
+        let handles: Vec<_> = (0..N)
+            .map(|_| {
+                let c = Arc::clone(&c);
+                let fetches = Arc::clone(&fetches);
+                let barrier = Arc::clone(&barrier);
+                std::thread::spawn(move || {
+                    barrier.wait();
+                    let v = c
+                        .get_or_fetch("cold", || {
+                            fetches.fetch_add(1, Ordering::SeqCst);
+                            // hold the flight open long enough that the
+                            // other threads arrive while it is pending
+                            std::thread::sleep(std::time::Duration::from_millis(30));
+                            Ok(vec![42; 16])
+                        })
+                        .unwrap();
+                    assert_eq!(*v, vec![42; 16]);
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(fetches.load(Ordering::SeqCst), 1, "single-flight");
+        let s = c.stats();
+        assert_eq!(s.misses, 1);
+        assert_eq!(s.hits, (N - 1) as u64);
+        assert_eq!(s.coalesced, (N - 1) as u64);
+    }
+
+    #[test]
+    fn waiters_retry_after_a_failed_leader() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        use std::sync::Barrier;
+        const N: usize = 4;
+        let c = Arc::new(ComponentCache::new(1 << 16));
+        let attempts = Arc::new(AtomicUsize::new(0));
+        let barrier = Arc::new(Barrier::new(N));
+        let handles: Vec<_> = (0..N)
+            .map(|_| {
+                let c = Arc::clone(&c);
+                let attempts = Arc::clone(&attempts);
+                let barrier = Arc::clone(&barrier);
+                std::thread::spawn(move || {
+                    barrier.wait();
+                    c.get_or_fetch("flaky", || {
+                        let n = attempts.fetch_add(1, Ordering::SeqCst);
+                        std::thread::sleep(std::time::Duration::from_millis(10));
+                        if n == 0 {
+                            Err(crate::error::Error::transient("first leader dies"))
+                        } else {
+                            Ok(vec![7; 8])
+                        }
+                    })
+                })
+            })
+            .collect();
+        let results: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        // exactly one caller (the first leader) sees the error; everyone
+        // else is served by a successor leader's fetch
+        let failures = results.iter().filter(|r| r.is_err()).count();
+        assert_eq!(failures, 1);
+        for r in results.iter().filter(|r| r.is_ok()) {
+            assert_eq!(**r.as_ref().unwrap(), vec![7; 8]);
+        }
+        // attempts: the failed leader plus exactly one successful leader
+        assert_eq!(attempts.load(Ordering::SeqCst), 2);
+        let s = c.stats();
+        assert_eq!(s.misses, 2, "misses == fetches issued");
+        assert_eq!(s.hits + s.misses, N as u64, "one count per invocation");
+    }
+
+    #[test]
+    fn warm_hits_are_not_blocked_by_a_cold_fetch() {
+        use std::sync::Barrier;
+        use std::time::{Duration, Instant};
+        let c = Arc::new(ComponentCache::new(1 << 16));
+        c.insert("warm", payload(16, 1));
+        let gate = Arc::new(Barrier::new(2));
+        let cold = {
+            let c = Arc::clone(&c);
+            let gate = Arc::clone(&gate);
+            std::thread::spawn(move || {
+                c.get_or_fetch("cold", || {
+                    gate.wait(); // cold fetch is now definitely in flight
+                    std::thread::sleep(Duration::from_millis(100));
+                    Ok(vec![2; 16])
+                })
+                .unwrap();
+            })
+        };
+        gate.wait();
+        let t0 = Instant::now();
+        let v = c.get_or_fetch("warm", || unreachable!("warm key must hit")).unwrap();
+        assert_eq!(v[0], 1);
+        assert!(
+            t0.elapsed() < Duration::from_millis(50),
+            "warm hit waited on the cold flight"
+        );
+        cold.join().unwrap();
     }
 }

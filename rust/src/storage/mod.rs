@@ -27,8 +27,9 @@
 //! * **Exact ranges** — `read_range` returns exactly `len` bytes or an
 //!   error; a range that leaves the object is refused, never truncated.
 //! * **Structured transience** — recoverable faults surface as
-//!   [`Error::Transient`] so callers can retry ([`with_retries`]);
-//!   anything else is definitive.
+//!   [`Error::Transient`] so callers can retry ([`with_retries`], or
+//!   [`with_retries_until`] when the caller carries a per-request
+//!   deadline); anything else is definitive.
 //!
 //! [`ProgressiveField`]: crate::coordinator::refactor::ProgressiveField
 
@@ -108,10 +109,33 @@ pub fn validate_key(key: &str) -> Result<()> {
 pub fn with_retries<T>(
     retries: usize,
     spent: &mut u64,
+    op: impl FnMut() -> Result<T>,
+) -> Result<T> {
+    with_retries_until(retries, None, spent, op)
+}
+
+/// Deadline-aware sibling of [`with_retries`]: identical retry semantics,
+/// but before *every* attempt (including the first) the deadline is
+/// checked and an [`Error::Deadline`] returned once it has passed. The
+/// check is between attempts only — a backend operation already in
+/// flight is never interrupted, so the worst-case overrun is one
+/// operation's latency. `deadline: None` disables the check entirely.
+pub fn with_retries_until<T>(
+    retries: usize,
+    deadline: Option<std::time::Instant>,
+    spent: &mut u64,
     mut op: impl FnMut() -> Result<T>,
 ) -> Result<T> {
     let mut attempt = 0;
     loop {
+        if let Some(d) = deadline {
+            if std::time::Instant::now() >= d {
+                return Err(Error::deadline(format!(
+                    "storage read gave up after {attempt} retr{}",
+                    if attempt == 1 { "y" } else { "ies" }
+                )));
+            }
+        }
         match op() {
             Ok(v) => return Ok(v),
             Err(e) if e.is_transient() && attempt < retries => {
@@ -230,6 +254,45 @@ mod tests {
         let mut spent = 0;
         let r: Result<()> = with_retries(5, &mut spent, || Err(Error::invalid("no")));
         assert!(matches!(r, Err(Error::InvalidArgument(_))) && spent == 0);
+    }
+
+    #[test]
+    fn retries_respect_a_deadline() {
+        use std::time::{Duration, Instant};
+        // an already-expired deadline refuses before the first attempt
+        let mut spent = 0;
+        let mut calls = 0;
+        let r: Result<()> =
+            with_retries_until(5, Some(Instant::now() - Duration::from_millis(1)), &mut spent, || {
+                calls += 1;
+                Ok(())
+            });
+        assert!(matches!(r, Err(Error::Deadline(_))));
+        assert_eq!((calls, spent), (0, 0));
+        // a generous deadline changes nothing
+        let mut spent = 0;
+        let mut left = 2;
+        let far = Some(Instant::now() + Duration::from_secs(60));
+        let v = with_retries_until(3, far, &mut spent, || {
+            if left > 0 {
+                left -= 1;
+                Err(Error::transient("flaky"))
+            } else {
+                Ok(7)
+            }
+        })
+        .unwrap();
+        assert_eq!((v, spent), (7, 2));
+        // an expiring deadline cuts a transient-retry loop short with
+        // Error::Deadline (not the transient error), mid-budget
+        let mut spent = 0;
+        let near = Some(Instant::now() + Duration::from_millis(20));
+        let r: Result<()> = with_retries_until(1_000_000, near, &mut spent, || {
+            std::thread::sleep(Duration::from_millis(5));
+            Err(Error::transient("always"))
+        });
+        assert!(matches!(r, Err(Error::Deadline(_))), "{r:?}");
+        assert!(spent >= 1);
     }
 
     #[test]

@@ -1,0 +1,310 @@
+//! Differential property suite for the shared component cache — the
+//! in-tree port of the `validate_pr7.py` stamp-LRU oracle. A randomized
+//! op sequence runs against `ComponentCache` and an ordered-map
+//! reference model in lockstep; every divergence in hit/miss outcome,
+//! eviction count, occupancy or recency order is a failure. On top of
+//! the sequential oracle, targeted races pin the single-flight
+//! invariants: exactly one backend fetch per concurrent miss stampede,
+//! eviction racing an in-flight fetch, the oversize bypass under
+//! concurrency, and leader-failure fallback.
+
+use mgardp::data::rng::Rng;
+use mgardp::error::Error;
+use mgardp::storage::ComponentCache;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Barrier};
+use std::time::Duration;
+
+/// Ordered-map reference model of a byte-capacity stamp-LRU: a list of
+/// `(key, len)` in recency order (least recent first) plus counters.
+struct Reference {
+    capacity: u64,
+    /// key -> payload length; recency tracked in `order`.
+    entries: BTreeMap<String, u64>,
+    /// least-recently-used first.
+    order: Vec<String>,
+    bytes_used: u64,
+    hits: u64,
+    misses: u64,
+    evictions: u64,
+}
+
+impl Reference {
+    fn new(capacity: u64) -> Reference {
+        Reference {
+            capacity,
+            entries: BTreeMap::new(),
+            order: Vec::new(),
+            bytes_used: 0,
+            hits: 0,
+            misses: 0,
+            evictions: 0,
+        }
+    }
+
+    fn touch(&mut self, key: &str) {
+        if let Some(i) = self.order.iter().position(|k| k == key) {
+            let k = self.order.remove(i);
+            self.order.push(k);
+        }
+    }
+
+    fn get(&mut self, key: &str) -> bool {
+        if self.entries.contains_key(key) {
+            self.hits += 1;
+            self.touch(key);
+            true
+        } else {
+            self.misses += 1;
+            false
+        }
+    }
+
+    fn insert(&mut self, key: &str, len: u64) {
+        if len > self.capacity {
+            return; // oversize bypass
+        }
+        if let Some(old) = self.entries.remove(key) {
+            self.bytes_used -= old;
+            self.order.retain(|k| k != key);
+        }
+        while self.bytes_used + len > self.capacity {
+            let victim = self.order.remove(0);
+            let gone = self.entries.remove(&victim).unwrap();
+            self.bytes_used -= gone;
+            self.evictions += 1;
+        }
+        self.entries.insert(key.to_string(), len);
+        self.order.push(key.to_string());
+        self.bytes_used += len;
+    }
+}
+
+/// Payload for `key` of length `len`, content derived from both so a
+/// wrong payload is caught by value, not just by length.
+fn payload(key: &str, len: usize) -> Vec<u8> {
+    let tag = key.bytes().fold(0u8, u8::wrapping_add);
+    vec![tag ^ (len as u8); len]
+}
+
+#[test]
+fn randomized_ops_match_the_reference_model() {
+    for seed in [0x1A7E_u64, 0xC0DE, 0x5109] {
+        let mut rng = Rng::new(seed);
+        let capacity = 64 + rng.below(192) as u64;
+        let cache = ComponentCache::new(capacity);
+        let mut reference = Reference::new(capacity);
+        for step in 0..3000 {
+            let key = format!("k{}", rng.below(24));
+            match rng.below(10) {
+                // plain lookup: outcome must match the model exactly
+                0..=3 => {
+                    let expect = reference.get(&key);
+                    let got = cache.get(&key);
+                    assert_eq!(got.is_some(), expect, "seed {seed:#x} step {step} get {key}");
+                }
+                // insert: sizes cross the capacity (oversize bypass) and
+                // force evictions
+                4..=6 => {
+                    let len = 1 + rng.below(capacity as usize + capacity as usize / 4);
+                    cache.insert(&key, Arc::new(payload(&key, len)));
+                    reference.insert(&key, len as u64);
+                }
+                // get_or_fetch: counts one hit or one miss like get+insert
+                _ => {
+                    let len = 1 + rng.below(capacity as usize / 2);
+                    let expect_hit = reference.get(&key);
+                    if !expect_hit {
+                        reference.insert(&key, len as u64);
+                    }
+                    let v = cache
+                        .get_or_fetch(&key, || Ok(payload(&key, len)))
+                        .unwrap();
+                    if !expect_hit {
+                        assert_eq!(*v, payload(&key, len), "seed {seed:#x} step {step}");
+                    }
+                }
+            }
+            // invariants + full state equivalence after every op
+            let s = cache.stats();
+            assert!(s.bytes_used <= capacity);
+            assert_eq!(s.hits, reference.hits, "seed {seed:#x} step {step}");
+            assert_eq!(s.misses, reference.misses, "seed {seed:#x} step {step}");
+            assert_eq!(s.evictions, reference.evictions, "seed {seed:#x} step {step}");
+            assert_eq!(s.bytes_used, reference.bytes_used, "seed {seed:#x} step {step}");
+            assert_eq!(s.entries as usize, reference.entries.len());
+            assert_eq!(
+                cache.keys_by_recency(),
+                reference.order,
+                "seed {seed:#x} step {step}: recency order diverged"
+            );
+        }
+    }
+}
+
+#[test]
+fn stampede_on_one_key_issues_exactly_one_fetch() {
+    const CLIENTS: usize = 12;
+    let cache = Arc::new(ComponentCache::new(1 << 16));
+    let fetches = Arc::new(AtomicUsize::new(0));
+    let barrier = Arc::new(Barrier::new(CLIENTS));
+    let handles: Vec<_> = (0..CLIENTS)
+        .map(|_| {
+            let cache = Arc::clone(&cache);
+            let fetches = Arc::clone(&fetches);
+            let barrier = Arc::clone(&barrier);
+            std::thread::spawn(move || {
+                barrier.wait();
+                let v = cache
+                    .get_or_fetch("hot", || {
+                        fetches.fetch_add(1, Ordering::SeqCst);
+                        std::thread::sleep(Duration::from_millis(40));
+                        Ok(payload("hot", 64))
+                    })
+                    .unwrap();
+                assert_eq!(*v, payload("hot", 64));
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    assert_eq!(fetches.load(Ordering::SeqCst), 1, "single-flight violated");
+    let s = cache.stats();
+    assert_eq!(s.misses, 1);
+    assert_eq!(s.hits, (CLIENTS - 1) as u64);
+    assert_eq!(s.coalesced, (CLIENTS - 1) as u64);
+}
+
+#[test]
+fn eviction_during_inflight_fetch_is_safe() {
+    // capacity of 100 bytes; a slow fetch of `cold` (60 bytes) runs while
+    // another thread churns the cache hard enough to evict everything
+    // repeatedly — the waiter must still get the right payload, and the
+    // cache must stay within capacity throughout
+    let cache = Arc::new(ComponentCache::new(100));
+    cache.insert("seed0", Arc::new(payload("seed0", 40)));
+    let gate = Arc::new(Barrier::new(3));
+    let cold_leader = {
+        let cache = Arc::clone(&cache);
+        let gate = Arc::clone(&gate);
+        std::thread::spawn(move || {
+            let v = cache
+                .get_or_fetch("cold", || {
+                    gate.wait(); // churn + waiter start only once in flight
+                    std::thread::sleep(Duration::from_millis(60));
+                    Ok(payload("cold", 60))
+                })
+                .unwrap();
+            assert_eq!(*v, payload("cold", 60));
+        })
+    };
+    let churn = {
+        let cache = Arc::clone(&cache);
+        let gate = Arc::clone(&gate);
+        std::thread::spawn(move || {
+            gate.wait();
+            for i in 0..200 {
+                let key = format!("churn{}", i % 5);
+                cache.insert(&key, Arc::new(payload(&key, 30)));
+                assert!(cache.stats().bytes_used <= 100);
+            }
+        })
+    };
+    // a waiter that joins the in-flight fetch mid-churn
+    gate.wait();
+    let v = cache
+        .get_or_fetch("cold", || {
+            panic!("waiter must coalesce onto the in-flight fetch")
+        })
+        .unwrap();
+    assert_eq!(*v, payload("cold", 60));
+    cold_leader.join().unwrap();
+    churn.join().unwrap();
+    let s = cache.stats();
+    assert!(s.coalesced >= 1, "{s:?}");
+    assert!(s.bytes_used <= 100);
+}
+
+#[test]
+fn oversize_bypass_race_serves_waiters_but_caches_nothing() {
+    // payload larger than the whole capacity: the leader and every waiter
+    // receive the bytes, but nothing is inserted and nothing is evicted
+    const CLIENTS: usize = 6;
+    let cache = Arc::new(ComponentCache::new(32));
+    cache.insert("resident", Arc::new(payload("resident", 16)));
+    let fetches = Arc::new(AtomicUsize::new(0));
+    let barrier = Arc::new(Barrier::new(CLIENTS));
+    let handles: Vec<_> = (0..CLIENTS)
+        .map(|_| {
+            let cache = Arc::clone(&cache);
+            let fetches = Arc::clone(&fetches);
+            let barrier = Arc::clone(&barrier);
+            std::thread::spawn(move || {
+                barrier.wait();
+                let v = cache
+                    .get_or_fetch("huge", || {
+                        fetches.fetch_add(1, Ordering::SeqCst);
+                        std::thread::sleep(Duration::from_millis(20));
+                        Ok(payload("huge", 64))
+                    })
+                    .unwrap();
+                assert_eq!(v.len(), 64);
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    // single-flight still coalesces the stampede itself; the payload is
+    // handed to all waiters without ever entering the cache
+    assert_eq!(fetches.load(Ordering::SeqCst), 1);
+    let s = cache.stats();
+    assert_eq!(s.evictions, 0, "oversize payload must not evict: {s:?}");
+    assert!(cache.get("huge").is_none());
+    assert!(cache.get("resident").is_some(), "resident entry survived");
+}
+
+#[test]
+fn failed_leader_does_not_poison_the_key() {
+    let cache = Arc::new(ComponentCache::new(1 << 12));
+    let attempts = Arc::new(AtomicUsize::new(0));
+    // serial: a failed fetch leaves the key fetchable
+    let r = cache.get_or_fetch("k", || {
+        Err::<Vec<u8>, _>(Error::transient("backend down"))
+    });
+    assert!(matches!(r, Err(Error::Transient(_))));
+    let v = cache.get_or_fetch("k", || Ok(payload("k", 8))).unwrap();
+    assert_eq!(*v, payload("k", 8));
+    // concurrent: leader fails while waiters are parked; every waiter is
+    // eventually served by a successor leader
+    const CLIENTS: usize = 8;
+    let barrier = Arc::new(Barrier::new(CLIENTS));
+    let handles: Vec<_> = (0..CLIENTS)
+        .map(|_| {
+            let cache = Arc::clone(&cache);
+            let attempts = Arc::clone(&attempts);
+            let barrier = Arc::clone(&barrier);
+            std::thread::spawn(move || {
+                barrier.wait();
+                cache.get_or_fetch("flaky", || {
+                    let n = attempts.fetch_add(1, Ordering::SeqCst);
+                    std::thread::sleep(Duration::from_millis(15));
+                    if n == 0 {
+                        Err(Error::transient("first leader dies"))
+                    } else {
+                        Ok(payload("flaky", 16))
+                    }
+                })
+            })
+        })
+        .collect();
+    let results: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    assert_eq!(results.iter().filter(|r| r.is_err()).count(), 1);
+    assert_eq!(results.iter().filter(|r| r.is_ok()).count(), CLIENTS - 1);
+    for r in results.into_iter().flatten() {
+        assert_eq!(*r, payload("flaky", 16));
+    }
+    assert_eq!(attempts.load(Ordering::SeqCst), 2, "failed + successful leader");
+}

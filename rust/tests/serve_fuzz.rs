@@ -1,0 +1,299 @@
+//! Fuzz/property suite for the serve wire protocol — the adversarial
+//! companion of `storage_serve.rs`. Two layers:
+//!
+//! * **decode fuzz** — randomized truncation, byte corruption, foreign
+//!   magic, oversize length prefixes and trailing garbage against
+//!   `protocol.rs` decoding: every case returns a structured error,
+//!   never a panic, never an unbounded allocation.
+//! * **live-daemon fuzz** — the same hostile inputs written to a real
+//!   in-process server socket: every case is answered with a structured
+//!   error frame or a clean close, never a hang (each case runs under a
+//!   hard socket timeout) and never a daemon crash — the daemon must
+//!   still serve a well-formed request afterwards.
+
+use mgardp::coordinator::refactor::RefactorStore;
+use mgardp::data::rng::Rng;
+use mgardp::data::synth;
+use mgardp::serve::protocol::{
+    parse_response, read_frame, write_frame, Request, ServeStats, MAX_FRAME_BYTES, SERVE_MAGIC,
+    SERVE_RESP_ERR, SERVE_RESP_OK,
+};
+use mgardp::serve::{ServeClient, ServeConfig, Server};
+use mgardp::storage::MemoryStorage;
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Hard per-case timeout on every socket wait: a hostile input may be
+/// answered or dropped, but it must never hang the harness.
+const CASE_TIMEOUT: Duration = Duration::from_secs(10);
+
+fn all_requests() -> Vec<Request> {
+    vec![
+        Request::Manifest,
+        Request::Plan {
+            tau: 0.25,
+            floor: None,
+        },
+        Request::Plan {
+            tau: 1e-4,
+            floor: Some(vec![3, 1, 0, 2]),
+        },
+        Request::Fetch { stream: 2, comp: 5 },
+        Request::Retrieve {
+            tau: 0.5,
+            region: None,
+        },
+        Request::Retrieve {
+            tau: 0.01,
+            region: Some(vec![(1, 7), (0, 9)]),
+        },
+        Request::Stats,
+        Request::Shutdown,
+    ]
+}
+
+// ---------------------------------------------------------------- decode
+
+#[test]
+fn every_truncation_of_every_request_errors() {
+    for req in all_requests() {
+        let p = req.encode();
+        for cut in 0..p.len() {
+            assert!(Request::decode(&p[..cut]).is_err(), "{req:?} cut at {cut}");
+        }
+        // and the full payload still round-trips
+        assert_eq!(Request::decode(&p).unwrap(), req);
+    }
+}
+
+#[test]
+fn randomized_corruption_never_panics() {
+    let mut rng = Rng::new(0x5EAF_00D5);
+    let reqs = all_requests();
+    for trial in 0..4000 {
+        let mut p = reqs[rng.below(reqs.len())].encode();
+        // flip 1..4 random bytes
+        for _ in 0..(1 + rng.below(4)) {
+            let i = rng.below(p.len());
+            p[i] ^= (1 + rng.below(255)) as u8;
+        }
+        // decoding must return — Ok for a benign flip (e.g. inside tau's
+        // bit pattern) or a structured Err — and must never panic
+        let _ = Request::decode(&p);
+        let _ = Request::decode_versioned(&p);
+        if trial % 4 == 0 {
+            // response-side parsing under the same corruption
+            let _ = parse_response(&p);
+            let _ = ServeStats::decode(&p);
+        }
+    }
+}
+
+#[test]
+fn foreign_magic_and_garbage_rejected() {
+    let mut rng = Rng::new(0xBAD_CAFE);
+    for _ in 0..500 {
+        let n = rng.below(64);
+        let garbage: Vec<u8> = (0..n).map(|_| rng.below(256) as u8).collect();
+        if garbage.len() >= 4 && &garbage[..4] == SERVE_MAGIC {
+            continue; // astronomically unlikely; skip rather than assert
+        }
+        assert!(Request::decode(&garbage).is_err());
+    }
+    for magic in [b"MGRP", b"HTTP", b"\0\0\0\0", b"MGSW"] {
+        let mut p = Request::Stats.encode();
+        p[..4].copy_from_slice(magic);
+        assert!(Request::decode(&p).is_err(), "{magic:?}");
+    }
+}
+
+#[test]
+fn oversize_declarations_refused_before_allocation() {
+    // a frame length past the cap is refused by read_frame
+    let mut framed = Vec::new();
+    framed.extend_from_slice(&(MAX_FRAME_BYTES + 1).to_le_bytes());
+    assert!(read_frame(&mut &framed[..]).is_err());
+    // interior length fields (floor len, region rank) past their caps are
+    // refused by decode without allocating the declared amount
+    for (req, tail_patch) in [
+        (
+            Request::Plan {
+                tau: 1.0,
+                floor: None,
+            },
+            u64::MAX,
+        ),
+        (
+            Request::Retrieve {
+                tau: 1.0,
+                region: None,
+            },
+            u64::MAX / 2,
+        ),
+    ] {
+        let mut p = req.encode();
+        let n = p.len();
+        p[n - 8..].copy_from_slice(&tail_patch.to_le_bytes());
+        assert!(Request::decode(&p).is_err(), "{req:?}");
+    }
+}
+
+#[test]
+fn trailing_garbage_rejected_on_every_op() {
+    let mut rng = Rng::new(0x7A11);
+    for req in all_requests() {
+        let mut p = req.encode();
+        for _ in 0..(1 + rng.below(9)) {
+            p.push(rng.below(256) as u8);
+        }
+        assert!(Request::decode(&p).is_err(), "{req:?}");
+    }
+}
+
+// ----------------------------------------------------------- live daemon
+
+fn start_server() -> Server {
+    let t = synth::smooth_test_field(&[17, 18]);
+    let store = RefactorStore::with_storage(Arc::new(MemoryStorage::new()));
+    store.write_field_progressive("u", &t, None, 3).unwrap();
+    let field = store.progressive("u").unwrap();
+    Server::start(
+        field,
+        &ServeConfig {
+            // tight mid-frame stall bound so slow-loris cases resolve fast
+            request_timeout_ms: 500,
+            ..ServeConfig::default()
+        },
+    )
+    .unwrap()
+}
+
+fn connect(server: &Server) -> TcpStream {
+    let s = TcpStream::connect(server.addr()).unwrap();
+    s.set_read_timeout(Some(CASE_TIMEOUT)).unwrap();
+    s.set_write_timeout(Some(CASE_TIMEOUT)).unwrap();
+    s
+}
+
+/// The daemon still answers a well-formed request — the proof that a
+/// hostile case neither crashed nor wedged it.
+fn assert_still_serving(server: &Server) {
+    let mut client = ServeClient::connect(server.addr()).unwrap();
+    let stats = client.stats().unwrap();
+    assert!(stats.requests > 0 || stats.connections > 0, "{stats:?}");
+}
+
+#[test]
+fn live_daemon_survives_corrupt_frames() {
+    let server = start_server();
+    let mut rng = Rng::new(0xD00D);
+    let reqs = all_requests();
+    for trial in 0..40 {
+        let mut stream = connect(&server);
+        // a corrupted (but complete) frame must be answered with a
+        // structured ERR frame on the same connection
+        let mut p = reqs[rng.below(reqs.len() - 1)].encode(); // never Shutdown
+        match trial % 3 {
+            0 => p[rng.below(4)] ^= (1 + rng.below(255)) as u8, // break the magic
+            1 => p[4] = 3 + rng.below(253) as u8,               // unknown version
+            _ => p[5] = 7 + rng.below(249) as u8,               // unknown op
+        }
+        write_frame(&mut stream, &p).unwrap();
+        match read_frame(&mut stream).unwrap() {
+            Some(resp) => {
+                assert_eq!(resp[0], SERVE_RESP_ERR, "trial {trial}: {resp:?}");
+                assert!(parse_response(&resp).is_err());
+            }
+            None => panic!("trial {trial}: daemon closed instead of answering"),
+        }
+        // the same connection still serves a good request afterwards
+        write_frame(&mut stream, &Request::Stats.encode()).unwrap();
+        let resp = read_frame(&mut stream).unwrap().expect("stats after err");
+        assert_eq!(resp[0], SERVE_RESP_OK);
+    }
+    assert_still_serving(&server);
+}
+
+#[test]
+fn live_daemon_survives_truncated_frames_and_garbage() {
+    let server = start_server();
+    let mut rng = Rng::new(0xFEED);
+    for trial in 0..30 {
+        let mut stream = connect(&server);
+        match trial % 3 {
+            0 => {
+                // a frame header promising more than we send, then close:
+                // the daemon must drop the connection, not hang
+                let p = Request::Stats.encode();
+                let mut framed = Vec::new();
+                framed.extend_from_slice(&(p.len() as u32 + 7).to_le_bytes());
+                framed.extend_from_slice(&p);
+                stream.write_all(&framed).unwrap();
+            }
+            1 => {
+                // raw garbage that never forms a complete frame header
+                let n = 1 + rng.below(3);
+                let garbage: Vec<u8> = (0..n).map(|_| rng.below(256) as u8).collect();
+                stream.write_all(&garbage).unwrap();
+            }
+            _ => {
+                // a plausible frame full of garbage: answered with ERR or
+                // dropped — either is structured, neither may hang
+                let n = 6 + rng.below(32);
+                let garbage: Vec<u8> = (0..n).map(|_| rng.below(256) as u8).collect();
+                write_frame(&mut stream, &garbage).unwrap();
+            }
+        }
+        // reading must resolve (frame, clean close, or reset) within the
+        // case timeout — a hang here fails the whole test binary
+        let mut buf = [0u8; 256];
+        let _ = stream.read(&mut buf);
+        drop(stream);
+    }
+    assert_still_serving(&server);
+}
+
+#[test]
+fn live_daemon_refuses_oversize_length_prefix() {
+    let server = start_server();
+    let mut stream = connect(&server);
+    // declare just past the frame cap; send nothing else
+    stream
+        .write_all(&(MAX_FRAME_BYTES + 1).to_le_bytes())
+        .unwrap();
+    // the daemon drops the connection (it cannot answer reliably): the
+    // read must resolve to EOF/reset within the timeout, never hang
+    let mut buf = [0u8; 64];
+    let n = stream.read(&mut buf).unwrap_or(0);
+    assert_eq!(n, 0, "expected a close, got {n} bytes");
+    assert_still_serving(&server);
+}
+
+#[test]
+fn live_daemon_rejects_trailing_garbage_in_frame() {
+    let server = start_server();
+    let mut stream = connect(&server);
+    let mut p = Request::Manifest.encode();
+    p.extend_from_slice(&[1, 2, 3]);
+    write_frame(&mut stream, &p).unwrap();
+    let resp = read_frame(&mut stream).unwrap().expect("an ERR frame");
+    assert_eq!(resp[0], SERVE_RESP_ERR);
+    assert_still_serving(&server);
+}
+
+#[test]
+fn live_daemon_answers_version_1_clients() {
+    let server = start_server();
+    let mut stream = connect(&server);
+    let mut p = Request::Stats.encode();
+    p[4] = 1; // downgrade to protocol version 1
+    write_frame(&mut stream, &p).unwrap();
+    let resp = read_frame(&mut stream).unwrap().unwrap();
+    let body = parse_response(&resp).unwrap();
+    assert_eq!(body.len(), 9 * 8, "v1 stats body");
+    let stats = ServeStats::decode(body).unwrap();
+    assert_eq!(stats.refused, 0);
+    assert_still_serving(&server);
+}

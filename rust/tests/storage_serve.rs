@@ -263,6 +263,176 @@ fn four_concurrent_clients_with_latency_and_failures() {
     assert!(mock.injected_failures() > 0, "the fault injector never fired");
 }
 
+/// The production soak: 16 clients hammer one daemon through a
+/// latency-and-fault-injecting backend, in three phases.
+///
+/// * **Stampede** — a barrier releases every client into the same cold
+///   retrieve at once: the cache's misses (== backend fetches issued)
+///   must grow by *exactly* the plan's component count — concurrent
+///   misses on one component issue exactly one backend fetch — and at
+///   least one waiter must have coalesced onto another's flight.
+/// * **Mixed rounds** — each client runs randomized
+///   manifest/plan/fetch/retrieve/stats rounds at its own randomized τ;
+///   every retrieve must satisfy `‖u − ũ‖∞ ≤ τ` *and* be byte-identical
+///   to a sequential oracle over the bare backend.
+/// * **Refinement** — each client reconnects as a [`RemoteField`] and
+///   tightens τ monotonically: bytes fetched never decrease, and
+///   re-asking for a looser τ transfers zero new bytes (the
+///   per-connection fetch floor never regresses).
+///
+/// Afterwards the daemon must be clean: no deadline expiries, no
+/// refusals, an empty accept queue, and `stop()` returning proves every
+/// worker drained.
+#[test]
+fn sixteen_client_soak_with_faults_and_latency() {
+    use mgardp::data::rng::Rng;
+    use std::sync::Barrier;
+
+    const CLIENTS: usize = 16;
+    const TAU_STAMPEDE: f64 = 0.01;
+
+    let t = synth::smooth_test_field(&[23, 19]);
+    let mem = Arc::new(MemoryStorage::new());
+    let writer = RefactorStore::with_storage(Arc::clone(&mem) as Arc<dyn Storage>);
+    writer.write_field_progressive("u", &t, None, 3).unwrap();
+    let mock = Arc::new(MockStorage::new(
+        Arc::clone(&mem) as Arc<dyn Storage>,
+        Duration::from_millis(1),
+        9, // every 9th read op fails transiently
+    ));
+    let store = RefactorStore::with_storage(Arc::clone(&mock) as Arc<dyn Storage>);
+    let cfg = ServeConfig {
+        max_connections: 20, // 16 soak clients + the harness's own probes
+        queue_depth: 16,
+        retries: 8,
+        request_timeout_ms: 10_000,
+        ..ServeConfig::default()
+    };
+    let mut server = Server::start(store.progressive("u").unwrap(), &cfg).unwrap();
+    let addr = server.addr();
+
+    // fresh connection -> zero floor -> the full plan the stampede fetches
+    let (baseline, stampede_components) = {
+        let mut probe = ServeClient::connect(addr).unwrap();
+        let plan = probe.plan(TAU_STAMPEDE, None).unwrap();
+        (probe.stats().unwrap(), plan.components().len())
+    };
+    assert!(stampede_components >= 2, "stampede needs a multi-component plan");
+
+    let start = Arc::new(Barrier::new(CLIENTS + 1));
+    let stampeded = Arc::new(Barrier::new(CLIENTS + 1));
+    let measured = Arc::new(Barrier::new(CLIENTS + 1));
+    let handles: Vec<_> = (0..CLIENTS)
+        .map(|client_id| {
+            let reference = t.clone();
+            let mem = Arc::clone(&mem) as Arc<dyn Storage>;
+            let start = Arc::clone(&start);
+            let stampeded = Arc::clone(&stampeded);
+            let measured = Arc::clone(&measured);
+            std::thread::spawn(move || {
+                let oracle = RefactorStore::with_storage(mem).progressive("u").unwrap();
+                let mut rng = Rng::new(0x50AC + client_id as u64);
+                let mut client = ServeClient::connect(addr).unwrap();
+
+                // phase 1: barrier-released identical cold retrieve
+                start.wait();
+                let (back, bound) = client.retrieve::<f32>(TAU_STAMPEDE, None).unwrap();
+                assert!(bound <= TAU_STAMPEDE, "client {client_id}: bound {bound}");
+                let err = linf_error(reference.data(), back.data());
+                assert!(err <= TAU_STAMPEDE, "client {client_id}: L∞ {err}");
+                let (expect, _) = oracle.retrieve::<f32>(TAU_STAMPEDE).unwrap();
+                assert_eq!(
+                    back.data(),
+                    expect.data(),
+                    "client {client_id}: stampede result diverged from the oracle"
+                );
+                stampeded.wait();
+                measured.wait(); // let the harness read the stampede stats
+
+                // phase 2: mixed rounds at randomized tolerances
+                for round in 0..3 {
+                    let tau = 10f64.powf(rng.uniform_in(-2.4, -0.5));
+                    let manifest = client.manifest().unwrap();
+                    assert_eq!(manifest.shape, vec![23, 19]);
+                    let plan = client
+                        .plan(tau, None)
+                        .unwrap_or_else(|e| panic!("client {client_id} round {round}: {e}"));
+                    assert!(plan.certified_bound <= tau);
+                    if let Some(&id) = plan.components().first() {
+                        client.fetch(id).unwrap();
+                    }
+                    let (back, bound) = client.retrieve::<f32>(tau, None).unwrap();
+                    assert!(bound <= tau, "client {client_id} round {round}");
+                    let err = linf_error(reference.data(), back.data());
+                    assert!(err <= tau, "client {client_id} round {round}: L∞ {err} > τ {tau}");
+                    let (expect, oracle_plan) = oracle.retrieve::<f32>(tau).unwrap();
+                    assert_eq!(bound, oracle_plan.certified_bound, "client {client_id}");
+                    assert_eq!(
+                        back.data(),
+                        expect.data(),
+                        "client {client_id} round {round}: τ {tau} diverged from the oracle"
+                    );
+                    client.stats().unwrap();
+                }
+                drop(client);
+
+                // phase 3: monotone refinement on a fresh connection
+                let mut remote: RemoteField<f32> = RemoteField::open(addr).unwrap();
+                let mut fetched_floor = 0;
+                for tau in [0.3, 0.05, 0.01] {
+                    let (back, plan) = remote.refine(tau).unwrap();
+                    assert!(plan.certified_bound <= tau);
+                    let err = linf_error(reference.data(), back.data());
+                    assert!(err <= tau, "client {client_id}: refine L∞ {err} > τ {tau}");
+                    assert!(
+                        remote.bytes_fetched() >= fetched_floor,
+                        "client {client_id}: fetch floor regressed"
+                    );
+                    fetched_floor = remote.bytes_fetched();
+                }
+                // loosening back transfers nothing: the floor is monotone
+                let (_, relax) = remote.refine(0.3).unwrap();
+                assert!(relax.certified_bound <= 0.3);
+                assert_eq!(
+                    remote.bytes_fetched(),
+                    fetched_floor,
+                    "client {client_id}: a looser τ re-fetched data"
+                );
+            })
+        })
+        .collect();
+
+    // exactly one backend fetch per component, no matter how many
+    // concurrent misses: misses == fetches issued by construction
+    start.wait();
+    stampeded.wait();
+    {
+        let mut probe = ServeClient::connect(addr).unwrap();
+        let after = probe.stats().unwrap();
+        assert_eq!(
+            after.misses - baseline.misses,
+            stampede_components as u64,
+            "stampede issued duplicate backend fetches: {after:?}"
+        );
+        assert!(
+            after.coalesced > baseline.coalesced,
+            "no client ever coalesced onto another's fetch: {after:?}"
+        );
+    }
+    measured.wait();
+
+    for h in handles {
+        h.join().unwrap();
+    }
+    let stats = server.stats();
+    assert_eq!(stats.deadline_expired, 0, "deadline leak: {stats:?}");
+    assert_eq!(stats.refused, 0, "admission refused a soak client: {stats:?}");
+    assert_eq!(stats.queued, 0, "accept queue did not drain: {stats:?}");
+    assert!(stats.connections >= 2 * CLIENTS as u64 + 2, "{stats:?}");
+    assert!(mock.injected_failures() > 0, "the fault injector never fired");
+    server.stop(); // returning at all proves every worker drained
+}
+
 #[test]
 fn stats_and_shutdown_over_the_wire() {
     let t = synth::smooth_test_field(&[15, 14]);

@@ -55,7 +55,7 @@ CONST_GROUPS = [
         [
             (
                 ROOT / "rust" / "src" / "serve" / "protocol.rs",
-                r"SERVE_PROTOCOL_VERSION|SERVE_OP_\w+|SERVE_RESP_\w+",
+                r"SERVE_PROTOCOL_\w+|SERVE_OP_\w+|SERVE_RESP_\w+",
             ),
         ],
     ),

@@ -13,7 +13,12 @@
 #      `serve-ctl --shutdown` under a hard timeout;
 #   5. repeat a shortened run over the mock-latency backend with
 #      transient-failure injection (--mock-latency-ms / --fail-every), so
-#      the retry path is exercised against the real wire protocol.
+#      the retry path is exercised against the real wire protocol;
+#   6. overload a deliberately tiny daemon (--max-connections 2
+#      --queue-depth 0) with 10 concurrent clients: refused clients must
+#      receive a structured "server busy" refusal (never a hang or a bare
+#      reset), admitted clients must still meet their τ certificate, and
+#      the daemon's `refused` counter must show the overload.
 #
 # Every wait in this script is bounded; nothing can hang CI.
 set -euo pipefail
@@ -151,6 +156,57 @@ RETRIES=$(awk -F: '/transient retries/ {gsub(/ /,"",$2); print $2}' "$WORK/mock_
 if [ -z "$RETRIES" ] || [ "$RETRIES" -eq 0 ]; then
   echo "FAIL: fault injection never triggered a retry (transient retries = ${RETRIES:-missing})" >&2
   exit 1
+fi
+"$BIN" serve-ctl --addr "$ADDR" --shutdown
+await_exit
+
+echo "==> run 3: overload against a bounded worker pool"
+rm -f "$WORK/addr"
+"$BIN" serve --store "$WORK/store" --field u --addr 127.0.0.1:0 \
+  --addr-file "$WORK/addr" --max-connections 2 --queue-depth 0 \
+  --mock-latency-ms 3 >"$WORK/serve_load.log" 2>&1 &
+SERVE_PID=$!
+ADDR=$(await_addr "$WORK/addr" "$WORK/serve_load.log")
+echo "    daemon at $ADDR"
+
+CLIENT_PIDS=()
+for i in $(seq 1 10); do
+  "$BIN" retrieve --remote "$ADDR" --tolerance 0.05 \
+    --output "$WORK/load_$i.f32" >"$WORK/load_client_$i.log" 2>&1 &
+  CLIENT_PIDS+=($!)
+done
+OK_COUNT=0
+BUSY_COUNT=0
+for i in $(seq 1 10); do
+  if wait "${CLIENT_PIDS[$((i - 1))]}"; then
+    # an admitted client must still deliver its certified bound
+    check_linf "$WORK/load_$i.f32" 0.05
+    OK_COUNT=$((OK_COUNT + 1))
+  else
+    # a refused client must have seen the structured Busy frame — a
+    # hang would have tripped the client's own socket handling, and a
+    # bare TCP reset would not carry the message
+    grep -qi "server busy" "$WORK/load_client_$i.log" || {
+      echo "FAIL: refused client $i died without a Busy frame" >&2
+      cat "$WORK/load_client_$i.log" >&2
+      exit 1
+    }
+    BUSY_COUNT=$((BUSY_COUNT + 1))
+  fi
+done
+echo "    $OK_COUNT served, $BUSY_COUNT refused with a Busy frame"
+if [ "$OK_COUNT" -eq 0 ]; then
+  echo "FAIL: the overloaded daemon served no client at all" >&2
+  exit 1
+fi
+"$BIN" serve-ctl --addr "$ADDR" --stats | tee "$WORK/load_stats.txt"
+REFUSED=$(awk -F: '/^refused/ {gsub(/ /,"",$2); print $2}' "$WORK/load_stats.txt")
+if [ -z "$REFUSED" ] || [ "$REFUSED" -eq 0 ]; then
+  echo "FAIL: overload never tripped the admission bound (refused = ${REFUSED:-missing})" >&2
+  exit 1
+fi
+if [ "$REFUSED" -ne "$BUSY_COUNT" ]; then
+  echo "    note: daemon refused $REFUSED vs $BUSY_COUNT busy clients (retries by serve-ctl itself are possible)"
 fi
 "$BIN" serve-ctl --addr "$ADDR" --shutdown
 await_exit

@@ -427,7 +427,8 @@ def check_planner_over_storage():
 # ---------------------------------------------------------------------------
 
 SERVE_MAGIC = b"MGSV"
-SERVE_PROTOCOL_VERSION = 1
+SERVE_PROTOCOL_VERSION = 2  # PR 8: Busy/Deadline statuses, 13-field stats
+SERVE_PROTOCOL_VERSION_MIN = 1
 SERVE_OP_MANIFEST = 1
 SERVE_OP_PLAN = 2
 SERVE_OP_FETCH = 3
@@ -520,7 +521,7 @@ def decode_request(payload):
         raise Definitive("not a serve protocol request (bad magic)")
     r = WireReader(payload[4:])
     version = r.u8()
-    if version != SERVE_PROTOCOL_VERSION:
+    if not (SERVE_PROTOCOL_VERSION_MIN <= version <= SERVE_PROTOCOL_VERSION):
         raise Definitive(f"serve protocol version {version}")
     op = r.u8()
     if op == SERVE_OP_MANIFEST:
@@ -646,7 +647,7 @@ def check_worked_example_matches_docs():
     write_frame(frame, payload)
     assert len(payload) == 22 and len(frame) == 26
     expected = bytes.fromhex(
-        "16000000" + "4d475356" + "01" + "02" + "000000000000e03f"
+        "16000000" + "4d475356" + "02" + "02" + "000000000000e03f"
         + "0000000000000000"
     )
     assert bytes(frame) == expected, bytes(frame).hex()

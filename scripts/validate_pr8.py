@@ -1,0 +1,779 @@
+#!/usr/bin/env python3
+"""PR-8 validation harness: faithful Python mirror of the serving
+hardening layer.
+
+The container has no Rust toolchain, so — following the protocol of PRs
+2–7 — the algorithmic surface PR 8 *added* is transliterated and tested
+here, preserving the Rust control flow (same branch order, same counter
+updates) so a logic bug in the never-compiled Rust source has a concrete
+chance of reproducing:
+
+  * single-flight miss de-duplication in the component cache
+    (`rust/src/storage/cache.rs::get_or_fetch`): leader election under
+    one lock, fetch outside all locks, flight retirement *before*
+    publication, waiter loop-back after a failed leader — checked under
+    real thread stampedes (exactly one fetch, coalesced == waiters,
+    hits + misses == lookups) and for warm-hit fairness while a cold
+    fetch is in flight;
+  * the bounded worker pool's admission arithmetic
+    (`rust/src/chunk/pool.rs::try_submit`): refusal when
+    `queued >= idle + queue_depth`, zero-depth semantics, drain of
+    admitted items on shutdown, survival of a panicking task;
+  * deadline-aware retries
+    (`rust/src/storage/mod.rs::with_retries_until`): expiry checked
+    before *every* attempt including the first, overrun bounded by one
+    in-flight op, `Busy`/`Deadline` never retried as transient;
+  * the accept loop's `queued` gauge discipline (increment before
+    try_submit, decrement on refusal and at worker start): no interleaving
+    of admissions and refusals can underflow it;
+  * wire protocol v2 (`rust/src/serve/protocol.rs`): version window
+    `MIN ..= CURRENT`, `Busy`/`Deadline` status frames, the 13-field
+    stats body, version-1 answers carrying only the 9-field prefix, and
+    a v2 decoder accepting both body sizes;
+  * both worked frame examples in docs/SERVING.md (the v2 plan request
+    and the Busy refusal), byte for byte against the mirror.
+
+Run:  python3 scripts/validate_pr8.py
+"""
+
+import random
+import re
+import struct
+import sys
+import threading
+import time
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+
+# ---------------------------------------------------------------------------
+# error model mirror (error.rs)
+# ---------------------------------------------------------------------------
+
+
+class Transient(Exception):
+    pass
+
+
+class Definitive(Exception):
+    pass
+
+
+class Busy(Exception):
+    pass
+
+
+class Deadline(Exception):
+    pass
+
+
+def is_transient(e):
+    """Mirror of Error::is_transient: Busy/Deadline are deliberately NOT
+    transient — retrying them inside a fetch would fight the admission
+    and deadline layers."""
+    return isinstance(e, Transient)
+
+
+def with_retries_until(retries, deadline, spent, op):
+    """Mirror of storage/mod.rs::with_retries_until; `spent` is a
+    1-element list, `deadline` a monotonic timestamp or None."""
+    attempt = 0
+    while True:
+        if deadline is not None and time.monotonic() >= deadline:
+            raise Deadline(f"storage read gave up after {attempt} retries")
+        try:
+            return op()
+        except Exception as e:
+            if is_transient(e) and attempt < retries:
+                attempt += 1
+                spent[0] += 1
+            else:
+                raise
+
+
+def check_with_retries_until():
+    # an already-expired deadline refuses before the first attempt
+    calls = [0]
+
+    def op():
+        calls[0] += 1
+        return 42
+
+    spent = [0]
+    try:
+        with_retries_until(5, time.monotonic() - 1.0, spent, op)
+        raise AssertionError("expected Deadline")
+    except Deadline:
+        pass
+    assert calls[0] == 0 and spent[0] == 0
+
+    # no deadline: behaves exactly like the old with_retries
+    flaky = [0]
+
+    def flaky_op():
+        flaky[0] += 1
+        if flaky[0] < 3:
+            raise Transient("warming up")
+        return "ok"
+
+    spent = [0]
+    assert with_retries_until(5, None, spent, flaky_op) == "ok"
+    assert spent[0] == 2 and flaky[0] == 3
+
+    # an expiring deadline cuts a transient-retry loop with Deadline
+    spent = [0]
+
+    def always_transient():
+        time.sleep(0.02)
+        raise Transient("down")
+
+    try:
+        with_retries_until(
+            10_000, time.monotonic() + 0.05, spent, always_transient
+        )
+        raise AssertionError("expected Deadline")
+    except Deadline:
+        pass
+    assert 1 <= spent[0] < 10_000, spent
+
+    # overrun is bounded by one in-flight op: the last attempt started
+    # before expiry, nothing starts after
+    start = time.monotonic()
+    spent = [0]
+    try:
+        with_retries_until(
+            10_000, start + 0.04, spent, always_transient
+        )
+    except Deadline:
+        pass
+    assert time.monotonic() - start < 0.04 + 0.02 + 0.05  # deadline + 1 op + slack
+
+    # Busy / Deadline from the op are NOT retried as transient
+    for exc in (Busy("full"), Deadline("late"), Definitive("gone")):
+        count = [0]
+
+        def failing(exc=exc):
+            count[0] += 1
+            raise exc
+
+        spent = [0]
+        try:
+            with_retries_until(5, None, spent, failing)
+            raise AssertionError("expected the error to propagate")
+        except type(exc):
+            pass
+        assert count[0] == 1 and spent[0] == 0, type(exc).__name__
+    print("PASS  with_retries_until: deadline before every attempt, bounded overrun")
+
+
+# ---------------------------------------------------------------------------
+# single-flight cache mirror (storage/cache.rs::get_or_fetch)
+# ---------------------------------------------------------------------------
+
+PENDING, DONE, FAILED = 0, 1, 2
+
+
+class Flight:
+    def __init__(self):
+        self.state = PENDING
+        self.payload = None
+        self.cond = threading.Condition()
+
+
+class SingleFlightCache:
+    """Mirror of the PR-8 cache: the PR-7 stamp-LRU plus an `inflight`
+    map of single-flight fetches, with the Rust branch order."""
+
+    def __init__(self, capacity):
+        self.capacity = capacity
+        self.map = {}  # key -> [payload, stamp]
+        self.order = {}  # stamp -> key (ascending by construction)
+        self.inflight = {}  # key -> Flight
+        self.clock = 0
+        self.bytes_used = 0
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+        self.coalesced = 0
+        self.lock = threading.Lock()
+
+    def _get_locked(self, key, stamp):
+        entry = self.map.get(key)
+        if entry is None:
+            return None
+        prev = entry[1]
+        entry[1] = stamp
+        del self.order[prev]
+        self.order[stamp] = key
+        return entry[0]
+
+    def get(self, key):
+        with self.lock:
+            self.clock += 1
+            hit = self._get_locked(key, self.clock)
+            if hit is not None:
+                self.hits += 1
+                return hit
+            self.misses += 1
+            return None
+
+    def insert(self, key, payload):
+        n = len(payload)
+        if n > self.capacity:
+            return
+        with self.lock:
+            old = self.map.pop(key, None)
+            if old is not None:
+                del self.order[old[1]]
+                self.bytes_used -= len(old[0])
+            while self.bytes_used + n > self.capacity:
+                oldest = min(self.order)
+                victim = self.order.pop(oldest)
+                gone, _ = self.map.pop(victim)
+                self.bytes_used -= len(gone)
+                self.evictions += 1
+            self.clock += 1
+            self.order[self.clock] = key
+            self.map[key] = [payload, self.clock]
+            self.bytes_used += n
+
+    def get_or_fetch(self, key, fetch):
+        fetch_once = [fetch]  # Option<FnOnce>: the leader takes it
+        while True:
+            flight = None
+            with self.lock:
+                self.clock += 1
+                hit = self._get_locked(key, self.clock)
+                if hit is not None:
+                    self.hits += 1
+                    return hit
+                flight = self.inflight.get(key)
+                if flight is None:
+                    self.misses += 1
+                    flight = Flight()
+                    self.inflight[key] = flight
+                    leader = True
+                else:
+                    leader = False
+            if leader:
+                f = fetch_once[0]
+                fetch_once[0] = None
+                assert f is not None, "leader fetches once"
+                try:
+                    payload = f()  # outside all locks
+                    err = None
+                except Exception as e:
+                    payload, err = None, e
+                if err is None:
+                    self.insert(key, payload)
+                # retire the flight BEFORE publishing, like the Rust code
+                with self.lock:
+                    del self.inflight[key]
+                with flight.cond:
+                    flight.state = FAILED if err is not None else DONE
+                    flight.payload = payload
+                    flight.cond.notify_all()
+                if err is not None:
+                    raise err
+                return payload
+            with flight.cond:
+                while flight.state == PENDING:
+                    flight.cond.wait()
+                if flight.state == DONE:
+                    payload = flight.payload
+                    with self.lock:
+                        self.hits += 1
+                        self.coalesced += 1
+                    return payload
+            # leader failed: loop back — maybe hit, maybe become leader
+
+    def stats(self):
+        with self.lock:
+            return {
+                "hits": self.hits,
+                "misses": self.misses,
+                "evictions": self.evictions,
+                "bytes_used": self.bytes_used,
+                "entries": len(self.map),
+                "capacity": self.capacity,
+                "coalesced": self.coalesced,
+            }
+
+
+def run_threads(n, body):
+    errors = []
+    barrier = threading.Barrier(n)
+
+    def runner(i):
+        try:
+            barrier.wait()
+            body(i)
+        except Exception as e:  # pragma: no cover - only on failure
+            errors.append((i, repr(e)))
+
+    ts = [threading.Thread(target=runner, args=(i,)) for i in range(n)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    assert not errors, errors
+
+
+def check_single_flight_stampede():
+    n = 12
+    cache = SingleFlightCache(1 << 16)
+    fetches = [0]
+    flock = threading.Lock()
+
+    def fetch():
+        with flock:
+            fetches[0] += 1
+        time.sleep(0.05)
+        return b"\x2a" * 64
+
+    def body(i):
+        assert cache.get_or_fetch("hot", fetch) == b"\x2a" * 64
+
+    run_threads(n, body)
+    s = cache.stats()
+    assert fetches[0] == 1, f"single-flight issued {fetches[0]} fetches"
+    assert s["misses"] == 1 and s["hits"] == n - 1
+    assert s["coalesced"] == n - 1
+    assert s["hits"] + s["misses"] == n  # one count per invocation
+    print("PASS  stampede: 12 concurrent misses -> exactly 1 backend fetch")
+
+
+def check_single_flight_failed_leader():
+    n = 8
+    cache = SingleFlightCache(1 << 16)
+    attempts = [0]
+    alock = threading.Lock()
+    results = [None] * n
+
+    def fetch():
+        with alock:
+            attempts[0] += 1
+            mine = attempts[0]
+        time.sleep(0.03)
+        if mine == 1:
+            raise Transient("first leader dies")
+        return b"\x07" * 8
+
+    def body(i):
+        try:
+            results[i] = ("ok", cache.get_or_fetch("flaky", fetch))
+        except Transient:
+            results[i] = ("err", None)
+
+    run_threads(n, body)
+    oks = [r for r in results if r[0] == "ok"]
+    errs = [r for r in results if r[0] == "err"]
+    assert len(errs) == 1, "exactly the failed leader sees its error"
+    assert len(oks) == n - 1 and all(p == b"\x07" * 8 for _, p in oks)
+    assert attempts[0] == 2, "failed leader + one successor, no stampede"
+    s = cache.stats()
+    assert s["misses"] == 2, "misses == fetches issued"
+    assert s["hits"] + s["misses"] == n
+    print("PASS  failed leader: waiters re-elect, error not inherited")
+
+
+def check_single_flight_warm_fairness():
+    cache = SingleFlightCache(1 << 16)
+    cache.insert("warm", b"\x01" * 16)
+    gate = threading.Barrier(2)
+
+    def cold_fetch():
+        gate.wait()
+        time.sleep(0.2)
+        return b"\x02" * 16
+
+    t = threading.Thread(target=lambda: cache.get_or_fetch("cold", cold_fetch))
+    t.start()
+    gate.wait()  # the cold fetch is now definitely in flight
+    t0 = time.monotonic()
+    got = cache.get_or_fetch(
+        "warm", lambda: (_ for _ in ()).throw(AssertionError("must hit"))
+    )
+    waited = time.monotonic() - t0
+    t.join()
+    assert got == b"\x01" * 16
+    assert waited < 0.1, f"warm hit blocked {waited:.3f}s behind the cold flight"
+    print("PASS  warm hits are not blocked by a cold in-flight fetch")
+
+
+def check_single_flight_oversize_and_random():
+    # oversize payloads: served to every stampeder, never cached/evicting
+    cache = SingleFlightCache(32)
+    cache.insert("resident", b"\x09" * 16)
+    fetches = [0]
+    flock = threading.Lock()
+
+    def fetch():
+        with flock:
+            fetches[0] += 1
+        time.sleep(0.05)
+        return b"\x0c" * 64
+
+    run_threads(6, lambda i: cache.get_or_fetch("huge", fetch))
+    s = cache.stats()
+    assert fetches[0] == 1 and s["evictions"] == 0
+    assert cache.get("huge") is None and cache.get("resident") is not None
+
+    # randomized mixed load: global accounting invariants survive
+    rng = random.Random(0x51F8)
+    cache = SingleFlightCache(256)
+    lookups = [0]
+    llock = threading.Lock()
+
+    def body(i):
+        r = random.Random(0x9E37 + i)
+        for _ in range(120):
+            key = f"k{r.randrange(16)}"
+            n = 1 + r.randrange(48)
+            got = cache.get_or_fetch(key, lambda n=n: bytes([len(key)]) * n)
+            assert got[0] == len(key)
+            with llock:
+                lookups[0] += 1
+
+    run_threads(8, body)
+    s = cache.stats()
+    assert s["hits"] + s["misses"] == lookups[0]
+    assert s["coalesced"] <= s["hits"]
+    assert s["bytes_used"] <= s["capacity"]
+    del rng
+    print("PASS  oversize bypass under stampede; randomized accounting exact")
+
+
+# ---------------------------------------------------------------------------
+# bounded worker pool mirror (chunk/pool.rs)
+# ---------------------------------------------------------------------------
+
+
+class WorkerPoolMirror:
+    """Mirror of WorkerPool: a condvar-guarded deque, an `idle` gauge
+    maintained by the workers, and try_submit's admission arithmetic."""
+
+    def __init__(self, workers, queue_depth, run):
+        self.queue_depth = queue_depth
+        self.items = []
+        self.idle = 0
+        self.closed = False
+        self.cond = threading.Condition()
+        self.run = run
+        self.threads = [
+            threading.Thread(target=self._worker) for _ in range(max(workers, 1))
+        ]
+        for t in self.threads:
+            t.start()
+
+    def _worker(self):
+        while True:
+            with self.cond:
+                self.idle += 1
+                self.cond.notify_all()
+                while not self.items and not self.closed:
+                    self.cond.wait()
+                if not self.items and self.closed:
+                    self.idle -= 1
+                    return
+                item = self.items.pop(0)
+                self.idle -= 1
+            try:
+                self.run(item)  # catch_unwind(AssertUnwindSafe(..))
+            except Exception:
+                pass
+
+    def try_submit(self, item):
+        with self.cond:
+            if self.closed or len(self.items) >= self.idle + self.queue_depth:
+                return False  # Err(item): refused, handed back
+            self.items.append(item)
+            self.cond.notify_all()
+            return True
+
+    def queued(self):
+        with self.cond:
+            return len(self.items)
+
+    def shutdown(self):
+        with self.cond:
+            self.closed = True
+            self.cond.notify_all()
+        for t in self.threads:
+            t.join()
+
+
+def check_worker_pool_admission():
+    # every admitted task runs exactly once; post-shutdown submits refuse
+    done = []
+    dlock = threading.Lock()
+
+    def run(item):
+        with dlock:
+            done.append(item)
+
+    pool = WorkerPoolMirror(3, 8, run)
+    admitted = [i for i in range(40) if pool.try_submit(i)]
+    pool.shutdown()  # drains everything admitted
+    assert sorted(done) == admitted
+    assert not pool.try_submit(99)
+
+    # a gated single worker: depth-2 queue refuses the 4th task
+    gate = threading.Semaphore(0)
+    started = threading.Event()
+
+    def gated(item):
+        started.set()
+        gate.acquire()
+
+    pool = WorkerPoolMirror(1, 2, gated)
+    assert pool.try_submit("a")
+    started.wait(timeout=5)
+    # give the worker a beat to leave the idle set after taking "a"
+    deadline = time.monotonic() + 5
+    while pool.queued() > 0 and time.monotonic() < deadline:
+        time.sleep(0.001)
+    assert pool.try_submit("b") and pool.try_submit("c")
+    assert not pool.try_submit("d"), "4th task must be refused"
+    assert pool.queued() == 2
+    for _ in range(3):
+        gate.release()
+    pool.shutdown()
+
+    # zero queue depth admits only while a worker is idle
+    block = threading.Semaphore(0)
+    pool = WorkerPoolMirror(2, 0, lambda item: block.acquire())
+    assert pool.try_submit(1) and pool.try_submit(2)
+    deadline = time.monotonic() + 5
+    while pool.queued() > 0 and time.monotonic() < deadline:
+        time.sleep(0.001)
+    assert not pool.try_submit(3), "no idle worker, depth 0 -> refuse"
+    block.release()
+    block.release()
+    pool.shutdown()
+
+    # a panicking task does not kill its worker
+    survived = []
+
+    def maybe_panic(item):
+        if item == 0:
+            raise RuntimeError("task panic")
+        survived.append(item)
+
+    pool = WorkerPoolMirror(1, 16, maybe_panic)
+    for i in range(6):
+        assert pool.try_submit(i)
+    pool.shutdown()
+    assert sorted(survived) == [1, 2, 3, 4, 5]
+    print("PASS  worker pool: admission arithmetic, drain, panic survival")
+
+
+def check_queued_gauge_discipline():
+    """The accept loop's ordering — inc BEFORE try_submit, dec on refusal
+    and at worker start — can never underflow, under any interleaving."""
+    rng = random.Random(0xACCE97)
+    for _ in range(2000):
+        queued = 0
+        low_water = 0
+        # a random interleaving of accept outcomes and worker starts
+        pending = 0
+        for _ in range(rng.randrange(1, 40)):
+            action = rng.random()
+            if action < 0.5:
+                queued += 1  # fetch_add before try_submit
+                if rng.random() < 0.3:
+                    queued -= 1  # refusal path decrements immediately
+                else:
+                    pending += 1  # admitted: a worker will decrement later
+            elif pending > 0:
+                queued -= 1  # worker-closure start
+                pending -= 1
+            low_water = min(low_water, queued)
+        assert low_water >= 0, "queued gauge underflowed"
+        assert queued == pending
+    print("PASS  queued gauge: no interleaving underflows (2000 random traces)")
+
+
+# ---------------------------------------------------------------------------
+# wire protocol v2 mirror (serve/protocol.rs)
+# ---------------------------------------------------------------------------
+
+SERVE_MAGIC = b"MGSV"
+SERVE_PROTOCOL_VERSION = 2
+SERVE_PROTOCOL_VERSION_MIN = 1
+SERVE_RESP_OK = 0
+SERVE_RESP_ERR = 1
+SERVE_RESP_BUSY = 2
+SERVE_RESP_DEADLINE = 3
+
+STATS_FIELDS_V1 = 9
+STATS_FIELDS_V2 = 13
+
+
+def u64(v):
+    return struct.pack("<Q", v)
+
+
+def encode_stats_for(version, fields):
+    """Mirror of ServeStats::encode_for: v<=1 emits the 9-field prefix,
+    v2 all 13 — the new counters are a pure suffix."""
+    assert len(fields) == STATS_FIELDS_V2
+    n = STATS_FIELDS_V1 if version <= 1 else STATS_FIELDS_V2
+    return b"".join(u64(v) for v in fields[:n])
+
+
+def decode_stats(body):
+    """Mirror of ServeStats::decode: 9 fields, then optionally the 4
+    v2 counters; any other trailing size is an error."""
+    if len(body) < 8 * STATS_FIELDS_V1:
+        raise Definitive("truncated stats body")
+    vals = list(struct.unpack("<9Q", body[: 8 * STATS_FIELDS_V1]))
+    rest = body[8 * STATS_FIELDS_V1 :]
+    if len(rest) == 0:
+        vals += [0, 0, 0, 0]
+    elif len(rest) == 8 * (STATS_FIELDS_V2 - STATS_FIELDS_V1):
+        vals += list(struct.unpack("<4Q", rest))
+    else:
+        raise Definitive("trailing bytes after the stats body")
+    return vals
+
+
+def busy_response(msg):
+    return bytes([SERVE_RESP_BUSY]) + msg.encode()
+
+
+def deadline_response(msg):
+    return bytes([SERVE_RESP_DEADLINE]) + msg.encode()
+
+
+def parse_response(payload):
+    if not payload:
+        raise Definitive("empty response payload")
+    status, body = payload[0], payload[1:]
+    if status == SERVE_RESP_OK:
+        return body
+    if status == SERVE_RESP_ERR:
+        raise Definitive(body.decode(errors="replace"))
+    if status == SERVE_RESP_BUSY:
+        raise Busy(body.decode(errors="replace"))
+    if status == SERVE_RESP_DEADLINE:
+        raise Deadline(body.decode(errors="replace"))
+    raise Definitive(f"unknown response status {status}")
+
+
+def decode_versioned(payload):
+    """Mirror of Request::decode_versioned's version window (body
+    decoding itself is pinned by validate_pr7)."""
+    if len(payload) < 6 or payload[:4] != SERVE_MAGIC:
+        raise Definitive("bad magic")
+    version = payload[4]
+    if not (SERVE_PROTOCOL_VERSION_MIN <= version <= SERVE_PROTOCOL_VERSION):
+        raise Definitive(f"serve protocol version {version}")
+    return version
+
+
+def check_protocol_v2():
+    fields = list(range(101, 101 + STATS_FIELDS_V2))
+    v2 = encode_stats_for(2, fields)
+    v1 = encode_stats_for(1, fields)
+    assert len(v2) == 8 * STATS_FIELDS_V2 == 104
+    assert len(v1) == 8 * STATS_FIELDS_V1 == 72
+    assert v2[: len(v1)] == v1, "v2 must be a pure suffix extension"
+    assert decode_stats(v2) == fields
+    assert decode_stats(v1) == fields[:STATS_FIELDS_V1] + [0, 0, 0, 0]
+    for bad in (v2 + b"\x00" * 8, v1[:-1], v2[:-3], b""):
+        try:
+            decode_stats(bad)
+            raise AssertionError("expected a structured stats refusal")
+        except Definitive:
+            pass
+
+    # status frames: OK passes the body through, the rest are typed
+    assert parse_response(bytes([SERVE_RESP_OK]) + b"body") == b"body"
+    for payload, exc, msg in [
+        (bytes([SERVE_RESP_ERR]) + b"nope", Definitive, "nope"),
+        (busy_response("accept queue full, retry later"), Busy,
+         "accept queue full, retry later"),
+        (deadline_response("retrieve ran out of time mid-fetch"), Deadline,
+         "retrieve ran out of time mid-fetch"),
+    ]:
+        try:
+            parse_response(payload)
+            raise AssertionError("expected a typed refusal")
+        except exc as e:
+            assert str(e) == msg
+    for hostile in (b"", bytes([7]) + b"x"):
+        try:
+            parse_response(hostile)
+            raise AssertionError("expected a refusal")
+        except Definitive:
+            pass
+
+    # version window: 1 and 2 accepted, 0 and 3.. refused
+    head = SERVE_MAGIC + bytes([SERVE_PROTOCOL_VERSION, 5])
+    assert decode_versioned(head) == 2
+    assert decode_versioned(SERVE_MAGIC + bytes([1, 5])) == 1
+    for v in (0, 3, 9, 255):
+        try:
+            decode_versioned(SERVE_MAGIC + bytes([v, 5]))
+            raise AssertionError(f"version {v} must be refused")
+        except Definitive:
+            pass
+
+    # a version-1 request is answered with a version-1 stats body: the
+    # daemon echoes the request's version into encode_for
+    req_version = decode_versioned(SERVE_MAGIC + bytes([1, 5]))
+    assert len(encode_stats_for(req_version, fields)) == 72
+    print("PASS  protocol v2: version window, Busy/Deadline, stats compat")
+
+
+def check_worked_examples_match_docs():
+    doc = (ROOT / "docs" / "SERVING.md").read_text(encoding="utf-8")
+    blocks = re.findall(r"```\n((?:[0-9a-f]{2}[ ]?.*\n)+?)```", doc)
+
+    def doc_hex(block):
+        return "".join(
+            b
+            for line in block.splitlines()
+            for b in re.findall(r"\b[0-9a-f]{2}\b", line.split(":")[0])
+        )
+
+    hexes = [doc_hex(b) for b in blocks if doc_hex(b)]
+    # the v2 plan request frame
+    plan_payload = (
+        SERVE_MAGIC
+        + bytes([SERVE_PROTOCOL_VERSION, 2])
+        + struct.pack("<d", 0.5)
+        + u64(0)
+    )
+    plan_frame = struct.pack("<I", len(plan_payload)) + plan_payload
+    assert plan_frame.hex() in hexes, (
+        f"docs/SERVING.md: v2 plan worked example drifted "
+        f"(mirror={plan_frame.hex()})"
+    )
+    # the Busy refusal frame, exactly as the server writes it
+    busy_payload = busy_response("accept queue full, retry later")
+    busy_frame = struct.pack("<I", len(busy_payload)) + busy_payload
+    assert busy_frame.hex() in hexes, (
+        f"docs/SERVING.md: Busy worked example drifted "
+        f"(mirror={busy_frame.hex()})"
+    )
+    print("PASS  both worked frame examples in docs/SERVING.md match the mirror")
+
+
+def main():
+    check_with_retries_until()
+    check_single_flight_stampede()
+    check_single_flight_failed_leader()
+    check_single_flight_warm_fairness()
+    check_single_flight_oversize_and_random()
+    check_worker_pool_admission()
+    check_queued_gauge_discipline()
+    check_protocol_v2()
+    check_worked_examples_match_docs()
+    print("validate_pr8: all serving-hardening mirrors PASS")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
