@@ -8,9 +8,11 @@
 //! which thread ran what.
 
 use crate::error::{Error, Result};
+use crate::obs::{self, Ctr, Gg, Hist};
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Condvar, Mutex};
+use std::time::Instant;
 
 /// Resolve a requested thread count: 0 means "use available parallelism",
 /// and the count is capped at the job count.
@@ -197,13 +199,26 @@ where
                 loop {
                     let i = {
                         let mut s = state.lock().expect("ordered pool poisoned");
+                        // how long this worker sat blocked on the window
+                        // (consumer backpressure); clock read only when
+                        // telemetry is on, so the disabled path is bare
+                        let mut waited: Option<Instant> = None;
                         loop {
                             if s.error.is_some() || s.next >= n {
                                 return;
                             }
                             if s.next < s.consumed + window {
                                 s.next += 1;
+                                if let Some(t0) = waited {
+                                    obs::observe(
+                                        Hist::PoolWindowWait,
+                                        t0.elapsed().as_nanos().min(u64::MAX as u128) as u64,
+                                    );
+                                }
                                 break s.next - 1;
+                            }
+                            if obs::enabled() {
+                                waited.get_or_insert_with(Instant::now);
                             }
                             s = cvar.wait(s).expect("ordered pool poisoned");
                         }
@@ -276,8 +291,11 @@ where
 }
 
 /// Queue state shared between [`WorkerPool`] submitters and workers.
+/// Each queued item carries its admission instant (`None` when telemetry
+/// was off at submit time) so pickup can record the queue-wait histogram
+/// without a clock read on the disabled path.
 struct PoolQueue<T> {
-    items: std::collections::VecDeque<T>,
+    items: std::collections::VecDeque<(T, Option<Instant>)>,
     /// Workers currently parked waiting for an item (a submit may hand
     /// its item to one of these immediately, so `queue_depth = 0` still
     /// admits work while a worker is idle).
@@ -337,11 +355,19 @@ impl<T: Send + 'static> WorkerPool<T> {
                             q = cvar.wait(q).expect("worker pool poisoned");
                         };
                         q.idle -= 1;
+                        obs::set_gauge(Gg::PoolQueued, q.items.len() as u64);
                         item
                     };
                     match item {
                         // a panicking task must not take the worker with it
-                        Some(item) => {
+                        Some((item, submitted)) => {
+                            if let Some(t0) = submitted {
+                                obs::observe(
+                                    Hist::PoolQueueWait,
+                                    t0.elapsed().as_nanos().min(u64::MAX as u128) as u64,
+                                );
+                            }
+                            let _s = obs::span::enter(Hist::PoolExecute);
                             let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
                                 || run(item),
                             ));
@@ -364,9 +390,13 @@ impl<T: Send + 'static> WorkerPool<T> {
         let (lock, cvar) = &*self.shared;
         let mut q = lock.lock().expect("worker pool poisoned");
         if q.closed || q.items.len() >= q.idle + self.queue_depth {
+            obs::inc(Ctr::PoolRefused);
             return Err(item);
         }
-        q.items.push_back(item);
+        let stamp = obs::enabled().then(Instant::now);
+        q.items.push_back((item, stamp));
+        obs::inc(Ctr::PoolSubmitted);
+        obs::set_gauge(Gg::PoolQueued, q.items.len() as u64);
         cvar.notify_one();
         Ok(())
     }

@@ -199,14 +199,21 @@ fn finish_container<T: Scalar>(
     payload.push(cfg.external as u8);
     payload.push(cfg.levelwise as u8);
     write_section(&mut payload, external_bytes);
-    write_section(&mut payload, &huffman_encode(&qs.symbols));
+    let encoded = {
+        let _s = crate::obs::span::enter(crate::obs::Hist::CompressHuffman);
+        huffman_encode(&qs.symbols)
+    };
+    write_section(&mut payload, &encoded);
     write_section(&mut payload, &qs.escapes_to_bytes());
     // schedule trailer (PR 6): appended *after* the sections so readers
     // that predate it — including `decompress` below — never look at it.
     // Must be a function of the config, never of the engine that ran, so
     // staged/fused differential pairs stay byte-identical.
     payload.push(if cfg.adaptive { 0 } else { 1 });
-    let compressed = lossless_compress(&payload, cfg.zstd_level)?;
+    let compressed = {
+        let _s = crate::obs::span::enter(crate::obs::Hist::CompressLossless);
+        lossless_compress(&payload, cfg.zstd_level)?
+    };
 
     let mut out = Vec::with_capacity(compressed.len() + 64);
     Header {
@@ -284,12 +291,15 @@ impl<T: Scalar> Compressor<T> for MgardPlus {
         // input and skip the dummy-node overhead entirely.
         if self.cfg.adaptive {
             let tau0 = tau / self.cfg.c_linf; // remaining = 1 tier at l = L
-            let est = estimate_predictors(
-                data.data(),
-                data.shape(),
-                tau0,
-                self.cfg.sample_stride.max(1),
-            );
+            let est = {
+                let _s = crate::obs::span::enter(crate::obs::Hist::CompressEstimate);
+                estimate_predictors(
+                    data.data(),
+                    data.shape(),
+                    tau0,
+                    self.cfg.sample_stride.max(1),
+                )
+            };
             // The multilevel path pays for every *padded* node (dummy-node
             // handling of non-dyadic dims), the external path only for the
             // original ones; weight the per-sample estimates by the point
@@ -319,14 +329,17 @@ impl<T: Scalar> Compressor<T> for MgardPlus {
         if self.cfg.flags.fused && !self.cfg.adaptive {
             let tiers = self.tiers(ll + 1, d, tau);
             let padded = hierarchy.pad(data)?;
-            let coarse = fused::decompose_quantize(
-                &hierarchy,
-                self.cfg.flags,
-                padded,
-                &tiers,
-                &mut ws.decompose,
-                &mut ws.fused,
-            );
+            let coarse = {
+                let _s = crate::obs::span::enter(crate::obs::Hist::CompressFused);
+                fused::decompose_quantize(
+                    &hierarchy,
+                    self.cfg.flags,
+                    padded,
+                    &tiers,
+                    &mut ws.decompose,
+                    &mut ws.fused,
+                )
+            };
             let external_bytes = self.cfg.external.compress(&coarse, tiers[0])?;
             return finish_container::<T>(
                 data.shape(),
@@ -355,8 +368,10 @@ impl<T: Scalar> Compressor<T> for MgardPlus {
                 // stopped here (Alg. 1 line 3)
                 let remaining = ll + 1 - l;
                 let tau0 = (1.0 - k) / (1.0 - k.powi(remaining as i32)) * tau / self.cfg.c_linf;
-                let est =
-                    estimate_predictors(&cur, &shape, tau0, self.cfg.sample_stride.max(1));
+                let est = {
+                    let _s = crate::obs::span::enter(crate::obs::Hist::CompressEstimate);
+                    estimate_predictors(&cur, &shape, tau0, self.cfg.sample_stride.max(1))
+                };
                 if est.should_terminate() {
                     stop = l;
                     break;
@@ -364,6 +379,7 @@ impl<T: Scalar> Compressor<T> for MgardPlus {
             }
             let sink = &mut ws.streams[nsteps];
             sink.clear();
+            let _s = crate::obs::span::enter(crate::obs::Hist::CompressDecompose);
             shape = contiguous::step_decompose_into(
                 &mut cur,
                 &shape,
@@ -372,6 +388,7 @@ impl<T: Scalar> Compressor<T> for MgardPlus {
                 &mut ws.decompose,
                 sink,
             );
+            drop(_s);
             nsteps += 1;
         }
         let coarse = Tensor::from_vec(&shape, cur)?;
@@ -383,8 +400,11 @@ impl<T: Scalar> Compressor<T> for MgardPlus {
         ws.qs.escapes.clear();
         // streams were collected finest-first; the container stores them
         // coarsest level first
-        for (i, idx) in (0..nsteps).rev().enumerate() {
-            quantize(&ws.streams[idx], tiers[i + 1], &mut ws.qs);
+        {
+            let _s = crate::obs::span::enter(crate::obs::Hist::CompressQuantize);
+            for (i, idx) in (0..nsteps).rev().enumerate() {
+                quantize(&ws.streams[idx], tiers[i + 1], &mut ws.qs);
+            }
         }
         finish_container::<T>(data.shape(), tau, &self.cfg, stop, &external_bytes, &ws.qs)
     }
@@ -393,7 +413,10 @@ impl<T: Scalar> Compressor<T> for MgardPlus {
         let (header, mut r) = Header::read(bytes)?;
         header.expect::<T>(Method::MgardPlus)?;
         let payload_len = r.usize()?;
-        let payload = lossless_decompress(r.bytes(r.remaining())?, payload_len)?;
+        let payload = {
+            let _s = crate::obs::span::enter(crate::obs::Hist::DecompressLossless);
+            lossless_decompress(r.bytes(r.remaining())?, payload_len)?
+        };
         let mut pr = ByteReader::new(&payload);
         let stop = pr.usize()?;
         let max_levels_enc = pr.usize()?;
@@ -405,7 +428,10 @@ impl<T: Scalar> Compressor<T> for MgardPlus {
         let external = ExternalChoice::from_u8(pr.u8()?)?;
         let levelwise = pr.u8()? == 1;
         let external_bytes = pr.section()?;
-        let symbols = huffman_decode(pr.section()?)?;
+        let symbols = {
+            let _s = crate::obs::span::enter(crate::obs::Hist::DecompressHuffman);
+            huffman_decode(pr.section()?)?
+        };
         let escapes = QuantStream::escapes_from_bytes(pr.section()?)?;
 
         let hierarchy = Hierarchy::new(&header.shape, max_levels)?;
@@ -439,6 +465,7 @@ impl<T: Scalar> Compressor<T> for MgardPlus {
         let mut cursor = 0usize;
         let mut esc_cursor = 0usize;
         let mut coeffs = Vec::with_capacity(ll - stop);
+        let dequant_span = crate::obs::span::enter(crate::obs::Hist::DecompressDequantize);
         for l in (stop + 1)..=ll {
             let n = hierarchy.num_coeff_nodes(l);
             if cursor + n > symbols.len() {
@@ -455,6 +482,7 @@ impl<T: Scalar> Compressor<T> for MgardPlus {
             cursor += n;
             coeffs.push(vals);
         }
+        drop(dequant_span);
 
         let dec = Decomposition {
             hierarchy: hierarchy.clone(),
@@ -462,6 +490,7 @@ impl<T: Scalar> Compressor<T> for MgardPlus {
             coarse,
             coeffs,
         };
+        let _s = crate::obs::span::enter(crate::obs::Hist::DecompressRecompose);
         Decomposer::new(hierarchy, OptFlags::all())?.recompose(&dec)
     }
 }

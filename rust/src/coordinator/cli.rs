@@ -224,31 +224,100 @@ COMMANDS:
               addr/cache_bytes/retries/max_connections/queue_depth/
               request_timeout_ms/mock_latency_ms/fail_every; flags override the
               file. Protocol: docs/SERVING.md)
-  serve-ctl   --addr HOST:PORT (--stats | --shutdown)  (print a running daemon's
-              cache/connection counters, or ask it to stop)
+  serve-ctl   --addr HOST:PORT (--stats | --metrics | --shutdown)  (print a running
+              daemon's cache/connection counters, dump its full metrics registry
+              — counters, gauges and latency histograms with p50/p95/p99, see
+              docs/OBSERVABILITY.md — or ask it to stop)
   reconstruct --store DIR --field NAME --level L --output F  (level layout)
   analyze     --input F --shape ZxYxX --iso V  (iso-surface area)
   penalties   (print the calibrated §4.2.2 penalty factors)
   xla-smoke   [--artifacts DIR] [--n 33]  (load + run the AOT level-step artifact)
+
+GLOBAL FLAGS (any command):
+  --log-level off|error|warn|info|debug|trace  (structured stderr logging;
+              overrides MGARDP_LOG, default warn)
+  --telemetry true|false  (force the metrics registry on or off; overrides
+              MGARDP_TELEMETRY, default on — container bytes are identical
+              either way)
+  --profile / --profile-json PATH  (compress, decompress, retrieve: per-stage
+              trace of the operation — span counts, total/mean latency and
+              wall-clock share — as text on stderr or JSON written to PATH)
 ";
 
 /// Run a subcommand; returns the process exit code.
+///
+/// Global flags handled here, before dispatch:
+///
+/// * `--log-level LVL` — override the `MGARDP_LOG` logger level;
+/// * `--telemetry true|false` — force the metrics registry on or off
+///   (overrides `MGARDP_TELEMETRY`);
+/// * `--profile` / `--profile-json PATH` — on `compress`, `decompress`
+///   and `retrieve`: snapshot the registry around the operation and
+///   print (text, stderr) or write (JSON, PATH) the per-stage trace.
 pub fn run(command: &str, argv: &[String]) -> Result<()> {
     let args = Args::parse(argv)?;
+    if let Some(s) = args.opt("log-level") {
+        let lvl = crate::obs::log::Level::parse(s).ok_or_else(|| {
+            Error::Config(format!(
+                "--log-level expects off|error|warn|info|debug|trace, got `{s}`"
+            ))
+        })?;
+        crate::obs::log::set_level(lvl);
+    }
+    if let Some(on) = args.bool_opt("telemetry")? {
+        crate::obs::set_enabled(on);
+    }
+    let profile_text = args.opt("profile").is_some();
+    let profile_json = args.opt("profile-json").map(PathBuf::from);
+    if !profile_text && profile_json.is_none() {
+        return dispatch(command, &args);
+    }
+    if !matches!(command, "compress" | "decompress" | "retrieve") {
+        return Err(Error::Config(format!(
+            "--profile / --profile-json apply to compress, decompress and \
+             retrieve, not `{command}`"
+        )));
+    }
+    // profiling reads the registry, so it must record; an explicit
+    // --telemetry false still wins (and yields an empty trace)
+    if args.bool_opt("telemetry")? != Some(false) {
+        crate::obs::set_enabled(true);
+    }
+    let before = crate::obs::registry::snapshot();
+    let t0 = std::time::Instant::now();
+    let result = dispatch(command, &args);
+    let wall_ns = t0.elapsed().as_nanos().min(u64::MAX as u128) as u64;
+    let profile = crate::obs::Profile {
+        op: command.to_string(),
+        delta: crate::obs::registry::snapshot().delta(&before),
+        wall_ns,
+    };
+    // the trace is still useful when the operation failed, so render it
+    // either way, on stderr / to the side file — never mixed into stdout
+    if profile_text {
+        eprint!("{}", profile.render_text());
+    }
+    if let Some(path) = &profile_json {
+        std::fs::write(path, profile.render_json() + "\n")?;
+    }
+    result
+}
+
+fn dispatch(command: &str, args: &Args) -> Result<()> {
     match command {
-        "compress" => cmd_compress(&args),
-        "decompress" => cmd_decompress(&args),
-        "info" => cmd_info(&args),
-        "synth" => cmd_synth(&args),
-        "pipeline" => cmd_pipeline(&args),
-        "refactor" => cmd_refactor(&args),
-        "retrieve" => cmd_retrieve(&args),
-        "serve" => cmd_serve(&args),
-        "serve-ctl" => cmd_serve_ctl(&args),
-        "reconstruct" => cmd_reconstruct(&args),
-        "analyze" => cmd_analyze(&args),
+        "compress" => cmd_compress(args),
+        "decompress" => cmd_decompress(args),
+        "info" => cmd_info(args),
+        "synth" => cmd_synth(args),
+        "pipeline" => cmd_pipeline(args),
+        "refactor" => cmd_refactor(args),
+        "retrieve" => cmd_retrieve(args),
+        "serve" => cmd_serve(args),
+        "serve-ctl" => cmd_serve_ctl(args),
+        "reconstruct" => cmd_reconstruct(args),
+        "analyze" => cmd_analyze(args),
         "penalties" => cmd_penalties(),
-        "xla-smoke" => cmd_xla_smoke(&args),
+        "xla-smoke" => cmd_xla_smoke(args),
         other => Err(Error::Config(format!("unknown command `{other}`\n\n{USAGE}"))),
     }
 }
@@ -262,7 +331,10 @@ fn cmd_compress(args: &Args) -> Result<()> {
     if args.opt("stream").is_some() {
         return cmd_compress_stream(args, &shape, &input, &output, method, tol);
     }
-    let data: Tensor<f32> = io::read_raw(&input, &shape)?;
+    let data: Tensor<f32> = {
+        let _s = crate::obs::span::enter(crate::obs::Hist::CliReadInput);
+        io::read_raw(&input, &shape)?
+    };
     let tiling = tiling_from(args)?;
     let fused = fused_from(args)?;
     // --adaptive-tiling implies the chunked path (with the default nominal
@@ -289,7 +361,10 @@ fn cmd_compress(args: &Args) -> Result<()> {
     let t0 = std::time::Instant::now();
     let bytes = compressor.compress(&data, tol)?;
     let secs = t0.elapsed().as_secs_f64();
-    std::fs::write(&output, &bytes)?;
+    {
+        let _s = crate::obs::span::enter(crate::obs::Hist::CliWriteOutput);
+        std::fs::write(&output, &bytes)?;
+    }
     println!(
         "{method}: {} -> {} bytes (CR {:.2}) in {:.3}s ({:.1} MB/s)",
         data.nbytes(),
@@ -380,11 +455,17 @@ fn cmd_decompress(args: &Args) -> Result<()> {
     if args.opt("stream").is_some() {
         return cmd_decompress_stream(&input, &output, args.usize_or("threads", 0)?);
     }
-    let bytes = std::fs::read(&input)?;
+    let bytes = {
+        let _s = crate::obs::span::enter(crate::obs::Hist::CliReadInput);
+        std::fs::read(&input)?
+    };
     let t0 = std::time::Instant::now();
     let data: Tensor<f32> = decompress_any(&bytes)?;
     let secs = t0.elapsed().as_secs_f64();
-    io::write_raw(&output, &data)?;
+    {
+        let _s = crate::obs::span::enter(crate::obs::Hist::CliWriteOutput);
+        io::write_raw(&output, &data)?;
+    }
     println!(
         "decompressed {:?} in {:.3}s ({:.1} MB/s)",
         data.shape(),
@@ -729,7 +810,10 @@ fn cmd_retrieve(args: &Args) -> Result<()> {
     let plan = field.plan(tau, Some(&reader.fetched()))?;
     let new_bytes = field.refine(&mut reader, &plan)?;
     let data = reader.reconstruct()?;
-    io::write_raw(&output, &data)?;
+    {
+        let _s = crate::obs::span::enter(crate::obs::Hist::CliWriteOutput);
+        io::write_raw(&output, &data)?;
+    }
     write_fetch_state(&state_path, name, &reader.fetched())?;
     let total = field.manifest().total_bytes();
     println!(
@@ -767,7 +851,10 @@ fn cmd_retrieve_remote(args: &Args, addr: &str) -> Result<()> {
     })?;
     let mut remote: crate::serve::RemoteField<f32> = crate::serve::RemoteField::open(addr)?;
     let (data, plan) = remote.refine(tau)?;
-    io::write_raw(&output, &data)?;
+    {
+        let _s = crate::obs::span::enter(crate::obs::Hist::CliWriteOutput);
+        io::write_raw(&output, &data)?;
+    }
     println!(
         "retrieved {:?} from {addr} at τ {tau:.3e}: {} of {} stored bytes \
          ({:.1}%), certified L∞ ≤ {:.3e}{}",
@@ -905,12 +992,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
 
 /// `mgardp serve-ctl`: poke a running daemon.
 fn cmd_serve_ctl(args: &Args) -> Result<()> {
+    use crate::obs::stat_names as sn;
     let addr = args.req("addr")?;
     let stats = args.opt("stats").is_some();
+    let metrics_flag = args.opt("metrics").is_some();
     let shutdown = args.opt("shutdown").is_some();
-    if stats == shutdown {
+    if stats as u8 + metrics_flag as u8 + shutdown as u8 != 1 {
         return Err(Error::Config(
-            "serve-ctl needs exactly one of --stats or --shutdown".into(),
+            "serve-ctl needs exactly one of --stats, --metrics or --shutdown".into(),
         ));
     }
     let mut client = crate::serve::ServeClient::connect(addr)?;
@@ -919,19 +1008,27 @@ fn cmd_serve_ctl(args: &Args) -> Result<()> {
         println!("shutdown acknowledged by {addr}");
         return Ok(());
     }
+    if metrics_flag {
+        // the daemon's full registry exposition, verbatim
+        print!("{}", client.metrics()?);
+        return Ok(());
+    }
     let s = client.stats()?;
-    println!("connections       : {}", s.connections);
-    println!("requests          : {}", s.requests);
-    println!("cache hits        : {}", s.hits);
-    println!("cache misses      : {}", s.misses);
-    println!("cache evictions   : {}", s.evictions);
-    println!("cache bytes       : {} of {}", s.bytes_used, s.capacity);
-    println!("cache entries     : {}", s.entries);
-    println!("transient retries : {}", s.transient_retries);
-    println!("queued            : {}", s.queued);
-    println!("refused           : {}", s.refused);
-    println!("coalesced         : {}", s.coalesced);
-    println!("deadline expired  : {}", s.deadline_expired);
+    println!("{}", sn::row(sn::CONNECTIONS, s.connections));
+    println!("{}", sn::row(sn::REQUESTS, s.requests));
+    println!("{}", sn::row(sn::CACHE_HITS, s.hits));
+    println!("{}", sn::row(sn::CACHE_MISSES, s.misses));
+    println!("{}", sn::row(sn::CACHE_EVICTIONS, s.evictions));
+    println!(
+        "{}",
+        sn::row(sn::CACHE_BYTES, format!("{} of {}", s.bytes_used, s.capacity))
+    );
+    println!("{}", sn::row(sn::CACHE_ENTRIES, s.entries));
+    println!("{}", sn::row(sn::TRANSIENT_RETRIES, s.transient_retries));
+    println!("{}", sn::row(sn::QUEUED, s.queued));
+    println!("{}", sn::row(sn::REFUSED, s.refused));
+    println!("{}", sn::row(sn::COALESCED, s.coalesced));
+    println!("{}", sn::row(sn::DEADLINE_EXPIRED, s.deadline_expired));
     Ok(())
 }
 
@@ -1407,6 +1504,67 @@ mod tests {
     }
 
     #[test]
+    fn profile_flags_trace_an_operation() {
+        // the profile wrapper force-enables telemetry, so serialize with
+        // the other tests that toggle the global flag
+        let _guard = crate::obs::test_lock();
+        let was = crate::obs::enabled();
+        let dir = std::env::temp_dir().join(format!("mgardp_cli_prof_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let raw = dir.join("in.f32");
+        let t = crate::data::synth::smooth_test_field(&[12, 12, 12]);
+        io::write_raw(&raw, &t).unwrap();
+        let comp = dir.join("out.mgrp");
+        let trace = dir.join("trace.json");
+        run(
+            "compress",
+            &s(&[
+                "--input",
+                raw.to_str().unwrap(),
+                "--shape",
+                "12x12x12",
+                "--output",
+                comp.to_str().unwrap(),
+                "--rel",
+                "1e-3",
+                "--profile",
+                "--profile-json",
+                trace.to_str().unwrap(),
+            ]),
+        )
+        .unwrap();
+        let json = std::fs::read_to_string(&trace).unwrap();
+        assert!(json.contains("\"schema\":\"mgardp-profile-v1\""), "{json}");
+        assert!(json.contains("\"op\":\"compress\""), "{json}");
+        assert!(json.contains("\"cli.read_input\""), "{json}");
+        assert!(json.contains("\"compress.quantize\""), "{json}");
+        // a profiled container is byte-identical to an unprofiled one
+        crate::obs::set_enabled(false);
+        let plain = dir.join("plain.mgrp");
+        run(
+            "compress",
+            &s(&[
+                "--input",
+                raw.to_str().unwrap(),
+                "--shape",
+                "12x12x12",
+                "--output",
+                plain.to_str().unwrap(),
+                "--rel",
+                "1e-3",
+            ]),
+        )
+        .unwrap();
+        assert_eq!(std::fs::read(&comp).unwrap(), std::fs::read(&plain).unwrap());
+        // --profile outside compress/decompress/retrieve is a config error
+        assert!(run("penalties", &s(&["--profile"])).is_err());
+        // a bad --log-level spelling is rejected up front
+        assert!(run("penalties", &s(&["--log-level", "loud"])).is_err());
+        crate::obs::set_enabled(was);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
     fn serve_daemon_cli_end_to_end() {
         let dir = std::env::temp_dir().join(format!("mgardp_cli_serve_{}", std::process::id()));
         std::fs::create_dir_all(&dir).unwrap();
@@ -1475,8 +1633,10 @@ mod tests {
         .unwrap();
         let back: Tensor<f32> = io::read_raw(&out, &[17, 18]).unwrap();
         assert!(metrics::linf_error(t.data(), back.data()) <= 0.05);
-        // counters are queryable, then shutdown stops the daemon cleanly
+        // counters and the metrics exposition are queryable, then
+        // shutdown stops the daemon cleanly
         run("serve-ctl", &s(&["--addr", &addr, "--stats"])).unwrap();
+        run("serve-ctl", &s(&["--addr", &addr, "--metrics"])).unwrap();
         run("serve-ctl", &s(&["--addr", &addr, "--shutdown"])).unwrap();
         daemon.join().unwrap().unwrap();
         // flag validation
@@ -1484,6 +1644,11 @@ mod tests {
         assert!(run(
             "serve-ctl",
             &s(&["--addr", &addr, "--stats", "--shutdown"])
+        )
+        .is_err());
+        assert!(run(
+            "serve-ctl",
+            &s(&["--addr", &addr, "--stats", "--metrics"])
         )
         .is_err());
         assert!(run(

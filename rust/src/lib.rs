@@ -32,6 +32,7 @@ pub mod encode;
 pub mod error;
 pub mod grid;
 pub mod metrics;
+pub mod obs;
 pub mod progressive;
 pub mod quant;
 pub mod runtime;

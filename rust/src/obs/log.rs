@@ -1,0 +1,210 @@
+//! Leveled structured logger (`key=value` lines on stderr).
+//!
+//! The active level comes from the `MGARDP_LOG` environment variable
+//! (`off|error|warn|info|debug|trace`, default `warn`) and can be
+//! overridden programmatically ([`set_level`], what the CLI's
+//! `--log-level` flag calls). The level check is one relaxed atomic
+//! load; the [`crate::obs_info!`]-family macros perform it *before*
+//! building any `format_args`, so a suppressed line costs no formatting
+//! at all.
+//!
+//! Line format (normative in `docs/OBSERVABILITY.md`):
+//!
+//! ```text
+//! ts=<seconds-since-first-log> level=<level> target=<subsystem> <message>
+//! ```
+//!
+//! where `<message>` is itself `key=value`-structured by convention
+//! (e.g. `event=listening addr=127.0.0.1:4000`).
+
+use std::io::Write as _;
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+use std::time::Instant;
+
+/// Log severities, ordered so that `Error < Warn < … < Trace`; a line is
+/// emitted when its level is `<=` the active level. The `u8` values are
+/// the documented `LOG_LEVEL_*` constants in `crate::obs`.
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Debug)]
+#[repr(u8)]
+pub enum Level {
+    /// Logging disabled entirely.
+    Off = 0,
+    /// Unrecoverable subsystem failures.
+    Error = 1,
+    /// Degraded-but-continuing conditions (refusals, retries).
+    Warn = 2,
+    /// Lifecycle events (daemon startup/shutdown, admissions).
+    Info = 3,
+    /// Per-request detail.
+    Debug = 4,
+    /// Per-span detail (span entry context).
+    Trace = 5,
+}
+
+impl Level {
+    /// Parse a level name as `MGARDP_LOG` / `--log-level` accept it.
+    pub fn parse(s: &str) -> Option<Level> {
+        match s.to_ascii_lowercase().as_str() {
+            "off" | "none" => Some(Level::Off),
+            "error" => Some(Level::Error),
+            "warn" | "warning" => Some(Level::Warn),
+            "info" => Some(Level::Info),
+            "debug" => Some(Level::Debug),
+            "trace" => Some(Level::Trace),
+            _ => None,
+        }
+    }
+
+    /// The lowercase name used on the wire format's `level=` key.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Level::Off => "off",
+            Level::Error => "error",
+            Level::Warn => "warn",
+            Level::Info => "info",
+            Level::Debug => "debug",
+            Level::Trace => "trace",
+        }
+    }
+
+    fn from_u8(v: u8) -> Level {
+        match v {
+            0 => Level::Off,
+            1 => Level::Error,
+            2 => Level::Warn,
+            3 => Level::Info,
+            4 => Level::Debug,
+            _ => Level::Trace,
+        }
+    }
+}
+
+/// `u8::MAX` = not yet initialized from the environment.
+static ACTIVE: AtomicU8 = AtomicU8::new(u8::MAX);
+
+fn init_from_env() -> u8 {
+    let lvl = std::env::var("MGARDP_LOG")
+        .ok()
+        .as_deref()
+        .and_then(Level::parse)
+        .unwrap_or(Level::Warn) as u8;
+    // racing initializers compute the same value; last store wins
+    ACTIVE.store(lvl, Ordering::Relaxed);
+    lvl
+}
+
+/// The active level.
+pub fn level() -> Level {
+    let raw = ACTIVE.load(Ordering::Relaxed);
+    Level::from_u8(if raw == u8::MAX { init_from_env() } else { raw })
+}
+
+/// Override the active level (the CLI's `--log-level` flag).
+pub fn set_level(lvl: Level) {
+    ACTIVE.store(lvl as u8, Ordering::Relaxed);
+}
+
+/// Whether a line at `lvl` would be emitted — the macros call this
+/// before building any format arguments.
+pub fn enabled(lvl: Level) -> bool {
+    lvl != Level::Off && lvl <= level()
+}
+
+fn start_instant() -> &'static Instant {
+    static START: OnceLock<Instant> = OnceLock::new();
+    START.get_or_init(Instant::now)
+}
+
+/// Emit one structured line to stderr. Not called directly — use the
+/// `obs_error!`/`obs_warn!`/`obs_info!`/`obs_debug!`/`obs_trace!`
+/// macros, which gate on [`enabled`] first.
+pub fn write_line(lvl: Level, target: &str, args: std::fmt::Arguments<'_>) {
+    let ts = start_instant().elapsed();
+    // one write_all per line so concurrent threads cannot interleave
+    let line = format!(
+        "ts={}.{:03} level={} target={} {}\n",
+        ts.as_secs(),
+        ts.subsec_millis(),
+        lvl.as_str(),
+        target,
+        args
+    );
+    let _ = std::io::stderr().write_all(line.as_bytes());
+}
+
+/// Emit at an explicit level; the level check happens before formatting.
+#[macro_export]
+macro_rules! obs_log {
+    ($lvl:expr, $target:expr, $($arg:tt)*) => {
+        if $crate::obs::log::enabled($lvl) {
+            $crate::obs::log::write_line($lvl, $target, ::core::format_args!($($arg)*));
+        }
+    };
+}
+
+/// `obs_error!("serve", "event=... k=v")` — unrecoverable failures.
+#[macro_export]
+macro_rules! obs_error {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::obs_log!($crate::obs::log::Level::Error, $target, $($arg)*)
+    };
+}
+
+/// `obs_warn!(...)` — degraded-but-continuing conditions.
+#[macro_export]
+macro_rules! obs_warn {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::obs_log!($crate::obs::log::Level::Warn, $target, $($arg)*)
+    };
+}
+
+/// `obs_info!(...)` — lifecycle events.
+#[macro_export]
+macro_rules! obs_info {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::obs_log!($crate::obs::log::Level::Info, $target, $($arg)*)
+    };
+}
+
+/// `obs_debug!(...)` — per-request detail.
+#[macro_export]
+macro_rules! obs_debug {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::obs_log!($crate::obs::log::Level::Debug, $target, $($arg)*)
+    };
+}
+
+/// `obs_trace!(...)` — per-span detail.
+#[macro_export]
+macro_rules! obs_trace {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::obs_log!($crate::obs::log::Level::Trace, $target, $($arg)*)
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_and_ordering() {
+        assert_eq!(Level::parse("info"), Some(Level::Info));
+        assert_eq!(Level::parse("WARN"), Some(Level::Warn));
+        assert_eq!(Level::parse("none"), Some(Level::Off));
+        assert_eq!(Level::parse("verbose"), None);
+        assert!(Level::Error < Level::Trace);
+    }
+
+    #[test]
+    fn set_level_controls_enabled() {
+        let prev = level();
+        set_level(Level::Info);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Info));
+        assert!(!enabled(Level::Debug));
+        set_level(Level::Off);
+        assert!(!enabled(Level::Error));
+        set_level(prev);
+    }
+}

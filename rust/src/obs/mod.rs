@@ -1,0 +1,333 @@
+//! In-tree observability: metrics registry, tracing spans, structured
+//! logging (zero external crates, per the offline vendor policy).
+//!
+//! Three pieces, wired through every layer of the pipeline and the
+//! serving daemon:
+//!
+//! * [`registry`] — a global, lock-free catalog of atomic counters,
+//!   gauges and log2-bucket latency histograms with p50/p95/p99
+//!   derivation, snapshotable without stopping writers;
+//! * [`span`] — RAII stage timers (`span!("compress.decompose")`)
+//!   recording per-stage durations into those histograms;
+//! * [`log`] — a leveled `key=value` logger (`MGARDP_LOG` env,
+//!   `--log-level` flag) with zero formatting cost when suppressed.
+//!
+//! The whole subsystem is **value-transparent**: it reads clocks and
+//! bumps atomics but never touches data, so container bytes are
+//! bit-identical with telemetry enabled or disabled (pinned by
+//! `rust/tests/obs.rs`), and near-free when disabled (every entry point
+//! checks [`enabled`] first; the disabled-path overhead is gated by
+//! `BENCH_PR9.json`).
+//!
+//! The text exposition ([`registry::Snapshot::render`]) is served over
+//! the wire by the `SERVE_OP_METRICS` protocol op (protocol version 3,
+//! see `docs/SERVING.md`) and printed by `serve-ctl --metrics`; the
+//! format and the metric catalog are normative in
+//! `docs/OBSERVABILITY.md`.
+
+pub mod log;
+pub mod registry;
+pub mod span;
+
+pub use registry::{Ctr, Gg, Hist, HistSnapshot, Snapshot};
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Version byte of the text exposition format (served by
+/// `SERVE_OP_METRICS`; a format change bumps this and
+/// `docs/OBSERVABILITY.md` together — drift fails `scripts/check_docs.py`).
+pub const OBS_EXPOSITION_VERSION: u8 = 1;
+
+/// Number of log2 histogram buckets (bucket 0 holds the value 0; bucket
+/// `b` holds `2^(b-1) ≤ v < 2^b`; the top bucket absorbs the rest).
+pub const OBS_HIST_BUCKETS: u8 = 64;
+
+/// Log level `off` — logging disabled.
+pub const LOG_LEVEL_OFF: u8 = 0;
+/// Log level `error`.
+pub const LOG_LEVEL_ERROR: u8 = 1;
+/// Log level `warn` (the default).
+pub const LOG_LEVEL_WARN: u8 = 2;
+/// Log level `info`.
+pub const LOG_LEVEL_INFO: u8 = 3;
+/// Log level `debug`.
+pub const LOG_LEVEL_DEBUG: u8 = 4;
+/// Log level `trace`.
+pub const LOG_LEVEL_TRACE: u8 = 5;
+
+/// `u8::MAX` = not yet initialized from the environment.
+static ENABLED: AtomicU8 = AtomicU8::new(u8::MAX);
+
+fn init_enabled_from_env() -> u8 {
+    let on = match std::env::var("MGARDP_TELEMETRY").ok().as_deref() {
+        Some("0") | Some("off") | Some("false") => 0,
+        _ => 1,
+    };
+    ENABLED.store(on, Ordering::Relaxed);
+    on
+}
+
+/// Whether telemetry (spans, counters, gauges, histograms) records at
+/// all. Defaults to on; `MGARDP_TELEMETRY=0` or [`set_enabled`] turn it
+/// off. One relaxed load on every instrumented path.
+pub fn enabled() -> bool {
+    let raw = ENABLED.load(Ordering::Relaxed);
+    (if raw == u8::MAX {
+        init_enabled_from_env()
+    } else {
+        raw
+    }) != 0
+}
+
+/// Turn telemetry on or off at runtime (the differential tests and the
+/// CLI's `--telemetry` gate use this).
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on as u8, Ordering::Relaxed);
+}
+
+/// Bump a counter by 1 (no-op when telemetry is disabled).
+pub fn inc(id: Ctr) {
+    if enabled() {
+        registry::counter(id).add(1);
+    }
+}
+
+/// Bump a counter by `n` (no-op when telemetry is disabled).
+pub fn add(id: Ctr, n: u64) {
+    if enabled() {
+        registry::counter(id).add(n);
+    }
+}
+
+/// Overwrite a gauge (no-op when telemetry is disabled).
+pub fn set_gauge(id: Gg, v: u64) {
+    if enabled() {
+        registry::gauge(id).set(v);
+    }
+}
+
+/// Record one histogram observation (no-op when telemetry is disabled).
+pub fn observe(id: Hist, v: u64) {
+    if enabled() {
+        registry::hist(id).record(v);
+    }
+}
+
+/// The canonical display labels of the serve daemon's `stats` counters,
+/// in wire order. `serve-ctl` prints both `--stats` and `--metrics`
+/// from this one table (columns are awk-stable: label padded to 18
+/// columns, then `: value`), and tests/docs reference the same names —
+/// previously these strings were duplicated informally across all
+/// three.
+pub mod stat_names {
+    /// Connections accepted.
+    pub const CONNECTIONS: &str = "connections";
+    /// Requests answered.
+    pub const REQUESTS: &str = "requests";
+    /// Component-cache hits.
+    pub const CACHE_HITS: &str = "cache hits";
+    /// Component-cache misses (backend fetches issued).
+    pub const CACHE_MISSES: &str = "cache misses";
+    /// Component-cache evictions.
+    pub const CACHE_EVICTIONS: &str = "cache evictions";
+    /// Component-cache occupancy, bytes.
+    pub const CACHE_BYTES: &str = "cache bytes";
+    /// Component-cache occupancy, entries.
+    pub const CACHE_ENTRIES: &str = "cache entries";
+    /// Transient storage retries spent.
+    pub const TRANSIENT_RETRIES: &str = "transient retries";
+    /// Connections currently waiting for a worker.
+    pub const QUEUED: &str = "queued";
+    /// Connections refused with a Busy frame.
+    pub const REFUSED: &str = "refused";
+    /// Cache lookups that shared another client's in-flight fetch.
+    pub const COALESCED: &str = "coalesced";
+    /// Requests answered with a Deadline frame.
+    pub const DEADLINE_EXPIRED: &str = "deadline expired";
+
+    /// Format one stats/metrics row exactly as `serve-ctl` prints it.
+    pub fn row(label: &str, value: impl std::fmt::Display) -> String {
+        format!("{label:<18}: {value}")
+    }
+}
+
+/// A per-operation profile: the registry delta across one CLI operation
+/// plus the measured wall clock (what `--profile` / `--profile-json`
+/// print). Because the CLI runs one operation per process, the global
+/// delta *is* the per-operation trace.
+pub struct Profile {
+    /// The operation name (`compress`, `decompress`, `retrieve`).
+    pub op: String,
+    /// Registry delta across the operation.
+    pub delta: Snapshot,
+    /// Wall-clock nanoseconds of the whole operation.
+    pub wall_ns: u64,
+}
+
+impl Profile {
+    /// Per-stage rows `(name, count, total_ns)` for every span that
+    /// fired during the operation, in catalog order.
+    pub fn stages(&self) -> Vec<(&'static str, u64, u64)> {
+        Hist::ALL
+            .iter()
+            .filter_map(|id| {
+                let h = self.delta.hist(*id);
+                let count = h.count();
+                if count == 0 {
+                    None
+                } else {
+                    Some((id.name(), count, h.sum_ns))
+                }
+            })
+            .collect()
+    }
+
+    /// Sum of all stage times (spans are non-nested on the CLI paths,
+    /// so this approximates the wall clock; the profile prints both).
+    pub fn stages_total_ns(&self) -> u64 {
+        self.stages().iter().map(|(_, _, ns)| ns).sum()
+    }
+
+    /// The human-readable breakdown `--profile` prints.
+    pub fn render_text(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::new();
+        let wall_ms = self.wall_ns as f64 / 1e6;
+        let _ = writeln!(out, "profile: {} (wall {:.3} ms)", self.op, wall_ms);
+        let _ = writeln!(
+            out,
+            "  {:<22} {:>8} {:>12} {:>10} {:>7}",
+            "stage", "count", "total_ms", "mean_us", "share"
+        );
+        for (name, count, ns) in self.stages() {
+            let _ = writeln!(
+                out,
+                "  {:<22} {:>8} {:>12.3} {:>10.1} {:>6.1}%",
+                name,
+                count,
+                ns as f64 / 1e6,
+                ns as f64 / 1e3 / count as f64,
+                100.0 * ns as f64 / self.wall_ns.max(1) as f64,
+            );
+        }
+        let sum = self.stages_total_ns();
+        let _ = writeln!(
+            out,
+            "  stages sum {:.3} ms, wall {:.3} ms, coverage {:.1}%",
+            sum as f64 / 1e6,
+            wall_ms,
+            100.0 * sum as f64 / self.wall_ns.max(1) as f64,
+        );
+        out
+    }
+
+    /// The machine-readable profile `--profile-json PATH` writes: one
+    /// JSON object (hand-serialized; the offline vendor set has no
+    /// serde) with per-stage totals and any counters that moved.
+    pub fn render_json(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::from("{");
+        let _ = write!(
+            out,
+            "\"schema\":\"mgardp-profile-v1\",\"op\":\"{}\",\"wall_ns\":{},\"stages_total_ns\":{},\"stages\":[",
+            self.op,
+            self.wall_ns,
+            self.stages_total_ns()
+        );
+        for (i, (name, count, ns)) in self.stages().iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            let _ = write!(
+                out,
+                "{{\"name\":\"{name}\",\"count\":{count},\"total_ns\":{ns}}}"
+            );
+        }
+        out.push_str("],\"counters\":{");
+        let mut first = true;
+        for id in Ctr::ALL {
+            let v = self.delta.counter(*id);
+            if v > 0 {
+                if !first {
+                    out.push(',');
+                }
+                first = false;
+                let _ = write!(out, "\"{}\":{v}", id.name());
+            }
+        }
+        out.push_str("}}");
+        out
+    }
+}
+
+#[cfg(test)]
+pub(crate) fn test_lock() -> std::sync::MutexGuard<'static, ()> {
+    // tests that toggle the global enabled flag serialize on this so
+    // concurrently running unit tests never observe a surprise toggle
+    static LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn enable_toggle_gates_recording() {
+        let _guard = test_lock();
+        let was = enabled();
+        set_enabled(false);
+        let before = registry::snapshot();
+        inc(Ctr::StreamBlocks);
+        observe(Hist::PoolExecute, 99);
+        set_gauge(Gg::PoolQueued, 42);
+        let mid = registry::snapshot();
+        assert_eq!(
+            mid.counter(Ctr::StreamBlocks),
+            before.counter(Ctr::StreamBlocks)
+        );
+        set_enabled(true);
+        inc(Ctr::StreamBlocks);
+        let after = registry::snapshot();
+        // `>=`: tests outside this lock may bump the counter concurrently
+        // while telemetry is enabled
+        assert!(
+            after.counter(Ctr::StreamBlocks) >= before.counter(Ctr::StreamBlocks) + 1
+        );
+        set_enabled(was);
+    }
+
+    #[test]
+    fn profile_renders_stages_and_json() {
+        let _guard = test_lock();
+        let was = enabled();
+        set_enabled(true);
+        let before = registry::snapshot();
+        observe(Hist::CompressHuffman, 2_000_000);
+        observe(Hist::CompressLossless, 1_000_000);
+        inc(Ctr::StreamBlocks);
+        let after = registry::snapshot();
+        let p = Profile {
+            op: "compress".into(),
+            delta: after.delta(&before),
+            wall_ns: 3_500_000,
+        };
+        assert!(p.stages_total_ns() >= 3_000_000);
+        let text = p.render_text();
+        assert!(text.contains("compress.huffman"), "{text}");
+        assert!(text.contains("stages sum"), "{text}");
+        let json = p.render_json();
+        assert!(json.contains("\"schema\":\"mgardp-profile-v1\""), "{json}");
+        assert!(json.contains("\"compress.lossless\""), "{json}");
+        assert!(json.contains("\"stream.blocks\":"), "{json}");
+        set_enabled(was);
+    }
+
+    #[test]
+    fn stat_rows_are_awk_stable() {
+        let row = stat_names::row(stat_names::CONNECTIONS, 7);
+        assert_eq!(row, "connections       : 7");
+        let row = stat_names::row(stat_names::DEADLINE_EXPIRED, 0);
+        assert_eq!(row, "deadline expired  : 0");
+    }
+}

@@ -1,0 +1,483 @@
+//! Lock-free global metrics registry.
+//!
+//! A *fixed* catalog of atomic counters, gauges and log2-bucket latency
+//! histograms, declared once at compile time and shared process-wide.
+//! Writers touch nothing but relaxed atomics — no locks, no allocation,
+//! no branches beyond the [`crate::obs::enabled`] gate — so a snapshot
+//! ([`snapshot`]) never stops them; it simply reads every atomic once.
+//!
+//! Histograms deliberately carry **no separate count field**: the count
+//! is the sum of the bucket cells, so a snapshot taken mid-flight is
+//! per-bucket consistent (each cell is a single atomic read) and the
+//! derived quantiles can never report a rank beyond the observations the
+//! snapshot actually saw. `sum_ns` rides alongside for exact totals —
+//! per-stage profile breakdowns use the sum, not bucket midpoints.
+//!
+//! Bucketing: bucket `0` holds the value `0`; bucket `b ≥ 1` holds
+//! `2^(b-1) ≤ v < 2^b`, with the top bucket absorbing everything from
+//! `2^62` up. A quantile estimate is the inclusive *upper bound* of the
+//! bucket containing the quantile rank, so it always over-reports:
+//! `estimate ≥ v*` and `estimate < 2·max(v*, 1)` for the true order
+//! statistic `v*` (pinned by `rust/tests/obs.rs` against a sorted-vector
+//! oracle).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Number of histogram buckets (also exported as the documented
+/// [`crate::obs::OBS_HIST_BUCKETS`] constant).
+pub const NUM_BUCKETS: usize = 64;
+
+/// A monotonically increasing counter.
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    /// A zeroed counter (const so catalogs can live in statics).
+    pub const fn new() -> Counter {
+        Counter(AtomicU64::new(0))
+    }
+
+    /// Add `n`.
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// A gauge: a value that can move both ways (occupancy, queue length).
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    /// A zeroed gauge.
+    pub const fn new() -> Gauge {
+        Gauge(AtomicU64::new(0))
+    }
+
+    /// Overwrite the value.
+    pub fn set(&self, v: u64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// The bucket a value lands in: 0 for 0, else `64 - leading_zeros`,
+/// clamped so `2^62..` shares the top bucket.
+pub fn bucket_index(v: u64) -> usize {
+    if v == 0 {
+        0
+    } else {
+        (64 - v.leading_zeros() as usize).min(NUM_BUCKETS - 1)
+    }
+}
+
+/// The inclusive upper bound of bucket `b` (what quantiles report).
+pub fn bucket_upper_bound(b: usize) -> u64 {
+    if b == 0 {
+        0
+    } else if b >= NUM_BUCKETS - 1 {
+        u64::MAX
+    } else {
+        (1u64 << b) - 1
+    }
+}
+
+/// A fixed-bucket log2 latency histogram. All cells are relaxed atomics;
+/// recording is two `fetch_add`s, snapshotting is 65 loads.
+pub struct Histogram {
+    buckets: [AtomicU64; NUM_BUCKETS],
+    sum_ns: AtomicU64,
+}
+
+impl Histogram {
+    /// A zeroed histogram.
+    pub const fn new() -> Histogram {
+        const ZERO: AtomicU64 = AtomicU64::new(0);
+        Histogram {
+            buckets: [ZERO; NUM_BUCKETS],
+            sum_ns: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one observation (nanoseconds for latency histograms).
+    pub fn record(&self, v: u64) {
+        self.buckets[bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+        self.sum_ns.fetch_add(v, Ordering::Relaxed);
+    }
+
+    /// A point-in-time copy of the cells.
+    pub fn snapshot(&self) -> HistSnapshot {
+        let mut buckets = [0u64; NUM_BUCKETS];
+        for (out, cell) in buckets.iter_mut().zip(self.buckets.iter()) {
+            *out = cell.load(Ordering::Relaxed);
+        }
+        HistSnapshot {
+            buckets,
+            sum_ns: self.sum_ns.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// A frozen histogram: bucket counts plus the exact sum.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct HistSnapshot {
+    /// Per-bucket observation counts.
+    pub buckets: [u64; NUM_BUCKETS],
+    /// Exact sum of every recorded value.
+    pub sum_ns: u64,
+}
+
+impl HistSnapshot {
+    /// An empty snapshot.
+    pub fn empty() -> HistSnapshot {
+        HistSnapshot {
+            buckets: [0; NUM_BUCKETS],
+            sum_ns: 0,
+        }
+    }
+
+    /// Total observations (the sum of the buckets — there is no separate
+    /// count cell, see the module docs).
+    pub fn count(&self) -> u64 {
+        self.buckets.iter().sum()
+    }
+
+    /// The quantile estimate for `q ∈ [0, 1]`: the upper bound of the
+    /// bucket holding rank `ceil(q · count)` (clamped to `[1, count]`).
+    /// Returns 0 on an empty histogram.
+    pub fn quantile(&self, q: f64) -> u64 {
+        let count = self.count();
+        if count == 0 {
+            return 0;
+        }
+        let rank = ((q * count as f64).ceil() as u64).clamp(1, count);
+        let mut cum = 0u64;
+        for (b, &n) in self.buckets.iter().enumerate() {
+            cum += n;
+            if cum >= rank {
+                return bucket_upper_bound(b);
+            }
+        }
+        bucket_upper_bound(NUM_BUCKETS - 1)
+    }
+
+    /// Exact mean of the recorded values (0 when empty).
+    pub fn mean(&self) -> u64 {
+        let count = self.count();
+        if count == 0 {
+            0
+        } else {
+            self.sum_ns / count
+        }
+    }
+
+    /// This snapshot minus an `earlier` one, cell-wise (saturating, so a
+    /// stale "earlier" can never underflow). Profiles are snapshot
+    /// deltas around one operation.
+    pub fn delta(&self, earlier: &HistSnapshot) -> HistSnapshot {
+        let mut buckets = [0u64; NUM_BUCKETS];
+        for (i, out) in buckets.iter_mut().enumerate() {
+            *out = self.buckets[i].saturating_sub(earlier.buckets[i]);
+        }
+        HistSnapshot {
+            buckets,
+            sum_ns: self.sum_ns.saturating_sub(earlier.sum_ns),
+        }
+    }
+}
+
+/// Declares the enum of metric ids, its name table and its storage cell
+/// array in one place so they cannot drift apart.
+macro_rules! catalog {
+    ($(#[$meta:meta])* $id:ident, $names:ident, $cells:ident, $cell_ty:ty:
+     $($variant:ident => $name:literal,)+) => {
+        $(#[$meta])*
+        #[derive(Clone, Copy, PartialEq, Eq, Debug)]
+        pub enum $id {
+            $(#[doc = $name] $variant,)+
+        }
+
+        impl $id {
+            /// Every id, in catalog (exposition) order.
+            pub const ALL: &'static [$id] = &[$($id::$variant,)+];
+
+            /// The exposition name of this metric.
+            pub fn name(self) -> &'static str {
+                $names[self as usize]
+            }
+        }
+
+        /// Exposition names, indexed by the id's discriminant.
+        pub static $names: [&str; $id::ALL.len()] = [$($name,)+];
+
+        static $cells: [$cell_ty; $id::ALL.len()] = {
+            const INIT: $cell_ty = <$cell_ty>::new();
+            [INIT; $id::ALL.len()]
+        };
+    };
+}
+
+catalog! {
+    /// Every counter in the registry.
+    Ctr, COUNTER_NAMES, COUNTERS, Counter:
+    CacheHits => "cache.hits",
+    CacheMisses => "cache.misses",
+    CacheEvictions => "cache.evictions",
+    CacheCoalesced => "cache.coalesced",
+    StorageRetries => "storage.retries",
+    ServeConnections => "serve.connections",
+    ServeRequests => "serve.requests",
+    ServeRefused => "serve.refused",
+    ServeDeadlineExpired => "serve.deadline_expired",
+    PoolSubmitted => "pool.submitted",
+    PoolRefused => "pool.refused",
+    StreamBlocks => "stream.blocks",
+}
+
+catalog! {
+    /// Every gauge in the registry.
+    Gg, GAUGE_NAMES, GAUGES, Gauge:
+    CacheBytesUsed => "cache.bytes_used",
+    CacheEntries => "cache.entries",
+    ServeQueued => "serve.queued",
+    PoolQueued => "pool.queued",
+}
+
+catalog! {
+    /// Every latency histogram (equivalently: the span taxonomy — a
+    /// span named `"compress.decompose"` records into
+    /// [`Hist::CompressDecompose`]).
+    Hist, HIST_NAMES, HISTS, Histogram:
+    CliReadInput => "cli.read_input",
+    CliWriteOutput => "cli.write_output",
+    CompressEstimate => "compress.estimate",
+    CompressDecompose => "compress.decompose",
+    CompressFused => "compress.fused",
+    CompressQuantize => "compress.quantize",
+    CompressHuffman => "compress.huffman",
+    CompressLossless => "compress.lossless",
+    DecompressLossless => "decompress.lossless",
+    DecompressHuffman => "decompress.huffman",
+    DecompressDequantize => "decompress.dequantize",
+    DecompressRecompose => "decompress.recompose",
+    PoolQueueWait => "pool.queue_wait",
+    PoolExecute => "pool.execute",
+    PoolWindowWait => "pool.window_wait",
+    StorageRead => "storage.read",
+    StorageWrite => "storage.write",
+    CacheFetch => "cache.fetch",
+    ServeRequest => "serve.request",
+    ServeDecode => "serve.decode",
+    ServeHandle => "serve.handle",
+    ServeRespond => "serve.respond",
+}
+
+/// The storage cell of a counter.
+pub fn counter(id: Ctr) -> &'static Counter {
+    &COUNTERS[id as usize]
+}
+
+/// The storage cell of a gauge.
+pub fn gauge(id: Gg) -> &'static Gauge {
+    &GAUGES[id as usize]
+}
+
+/// The storage cell of a histogram.
+pub fn hist(id: Hist) -> &'static Histogram {
+    &HISTS[id as usize]
+}
+
+/// Resolve a span/histogram name (`"compress.decompose"`) to its id.
+pub fn hist_by_name(name: &str) -> Option<Hist> {
+    Hist::ALL
+        .iter()
+        .copied()
+        .find(|h| HIST_NAMES[*h as usize] == name)
+}
+
+/// One point-in-time copy of the whole registry. Taken with plain
+/// relaxed loads — writers are never stopped — so the counters are
+/// individually (not mutually) consistent; each histogram's derived
+/// count can only count observations the snapshot actually saw.
+#[derive(Clone, Debug)]
+pub struct Snapshot {
+    /// Counter values, indexed like [`Ctr::ALL`].
+    pub counters: Vec<u64>,
+    /// Gauge values, indexed like [`Gg::ALL`].
+    pub gauges: Vec<u64>,
+    /// Histogram cells, indexed like [`Hist::ALL`].
+    pub hists: Vec<HistSnapshot>,
+}
+
+impl Snapshot {
+    /// The value of one counter.
+    pub fn counter(&self, id: Ctr) -> u64 {
+        self.counters[id as usize]
+    }
+
+    /// The value of one gauge.
+    pub fn gauge(&self, id: Gg) -> u64 {
+        self.gauges[id as usize]
+    }
+
+    /// One histogram's cells.
+    pub fn hist(&self, id: Hist) -> &HistSnapshot {
+        &self.hists[id as usize]
+    }
+
+    /// This snapshot minus an `earlier` one (counters and histogram
+    /// cells saturating-subtract; gauges keep their current value —
+    /// a gauge delta is meaningless).
+    pub fn delta(&self, earlier: &Snapshot) -> Snapshot {
+        Snapshot {
+            counters: self
+                .counters
+                .iter()
+                .zip(earlier.counters.iter())
+                .map(|(a, b)| a.saturating_sub(*b))
+                .collect(),
+            gauges: self.gauges.clone(),
+            hists: self
+                .hists
+                .iter()
+                .zip(earlier.hists.iter())
+                .map(|(a, b)| a.delta(b))
+                .collect(),
+        }
+    }
+
+    /// Render the text exposition (format documented in
+    /// `docs/OBSERVABILITY.md` and served by the `SERVE_OP_METRICS`
+    /// protocol op): one line per metric, space-separated,
+    ///
+    /// ```text
+    /// counter <name> <value>
+    /// gauge <name> <value>
+    /// hist <name> <count> <sum_ns> <p50_ns> <p95_ns> <p99_ns>
+    /// ```
+    pub fn render(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::with_capacity(1024);
+        for id in Ctr::ALL {
+            let _ = writeln!(out, "counter {} {}", id.name(), self.counter(*id));
+        }
+        for id in Gg::ALL {
+            let _ = writeln!(out, "gauge {} {}", id.name(), self.gauge(*id));
+        }
+        for id in Hist::ALL {
+            let h = self.hist(*id);
+            let _ = writeln!(
+                out,
+                "hist {} {} {} {} {} {}",
+                id.name(),
+                h.count(),
+                h.sum_ns,
+                h.quantile(0.50),
+                h.quantile(0.95),
+                h.quantile(0.99),
+            );
+        }
+        out
+    }
+}
+
+/// Snapshot the whole registry without stopping writers.
+pub fn snapshot() -> Snapshot {
+    Snapshot {
+        counters: COUNTERS.iter().map(Counter::get).collect(),
+        gauges: GAUGES.iter().map(Gauge::get).collect(),
+        hists: HISTS.iter().map(Histogram::snapshot).collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_index_boundaries() {
+        assert_eq!(bucket_index(0), 0);
+        assert_eq!(bucket_index(1), 1);
+        assert_eq!(bucket_index(2), 2);
+        assert_eq!(bucket_index(3), 2);
+        assert_eq!(bucket_index(4), 3);
+        assert_eq!(bucket_index((1 << 20) - 1), 20);
+        assert_eq!(bucket_index(1 << 20), 21);
+        assert_eq!(bucket_index(u64::MAX), NUM_BUCKETS - 1);
+        // every value sits at or below its bucket's upper bound
+        for v in [0u64, 1, 2, 3, 5, 1000, 1 << 30, u64::MAX] {
+            assert!(v <= bucket_upper_bound(bucket_index(v)), "{v}");
+        }
+    }
+
+    #[test]
+    fn quantile_overestimates_by_less_than_2x() {
+        let h = Histogram::new();
+        let values = [3u64, 17, 17, 90, 1200, 1201, 40_000];
+        for v in values {
+            h.record(v);
+        }
+        let snap = h.snapshot();
+        assert_eq!(snap.count(), values.len() as u64);
+        assert_eq!(snap.sum_ns, values.iter().sum::<u64>());
+        let mut sorted = values.to_vec();
+        sorted.sort_unstable();
+        for (q, _) in [(0.5, ()), (0.95, ()), (0.99, ())] {
+            let rank = ((q * sorted.len() as f64).ceil() as usize).clamp(1, sorted.len());
+            let oracle = sorted[rank - 1];
+            let est = snap.quantile(q);
+            assert!(est >= oracle, "q={q}: {est} < {oracle}");
+            assert!(est < 2 * oracle.max(1), "q={q}: {est} >= 2*{oracle}");
+        }
+    }
+
+    #[test]
+    fn names_resolve_and_are_unique() {
+        for id in Hist::ALL {
+            assert_eq!(hist_by_name(id.name()), Some(*id));
+        }
+        assert_eq!(hist_by_name("no.such.span"), None);
+        let mut names: Vec<&str> = COUNTER_NAMES
+            .iter()
+            .chain(GAUGE_NAMES.iter())
+            .chain(HIST_NAMES.iter())
+            .copied()
+            .collect();
+        let n = names.len();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), n, "duplicate metric name in the catalog");
+    }
+
+    #[test]
+    fn snapshot_delta_and_render_shape() {
+        let before = snapshot();
+        counter(Ctr::StreamBlocks).add(2);
+        hist(Hist::PoolExecute).record(1500);
+        let after = snapshot();
+        let d = after.delta(&before);
+        assert!(d.counter(Ctr::StreamBlocks) >= 2);
+        assert!(d.hist(Hist::PoolExecute).count() >= 1);
+        let text = after.render();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(
+            lines.len(),
+            Ctr::ALL.len() + Gg::ALL.len() + Hist::ALL.len()
+        );
+        for line in lines {
+            let mut parts = line.split(' ');
+            let kind = parts.next().unwrap();
+            match kind {
+                "counter" | "gauge" => assert_eq!(parts.count(), 2, "{line}"),
+                "hist" => assert_eq!(parts.count(), 6, "{line}"),
+                other => panic!("unknown exposition kind {other}"),
+            }
+        }
+    }
+}

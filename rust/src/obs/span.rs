@@ -1,0 +1,143 @@
+//! Lightweight tracing spans.
+//!
+//! A span is a guard that, on drop, records its elapsed nanoseconds into
+//! one of the registry's latency histograms — the histogram catalog
+//! ([`crate::obs::registry::Hist`]) *is* the span taxonomy. When
+//! telemetry is disabled ([`crate::obs::enabled`] false) entering a span
+//! takes no clock reading and dropping it does nothing: the guard is a
+//! pair of `None`s, which is what keeps the instrumented hot paths
+//! near-free when observability is off (gated by `BENCH_PR9.json`).
+//!
+//! Spans are value-transparent by construction: they read clocks and
+//! bump atomics, never touching the data path — container bytes are
+//! bit-identical with telemetry on or off (pinned by
+//! `rust/tests/obs.rs`).
+
+use super::registry::{hist, hist_by_name, Hist};
+use std::time::Instant;
+
+/// An RAII stage timer; see the module docs.
+#[must_use = "a span records on drop; binding it to _ ends it immediately"]
+pub struct Span {
+    hist: Option<Hist>,
+    start: Option<Instant>,
+}
+
+impl Span {
+    /// A span that records nothing (the disabled path).
+    pub fn noop() -> Span {
+        Span {
+            hist: None,
+            start: None,
+        }
+    }
+
+    /// Nanoseconds since entry (0 for a noop span) — for callers that
+    /// want the duration without waiting for the drop.
+    pub fn elapsed_ns(&self) -> u64 {
+        self.start
+            .map(|t| t.elapsed().as_nanos().min(u64::MAX as u128) as u64)
+            .unwrap_or(0)
+    }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        if let (Some(id), Some(start)) = (self.hist, self.start) {
+            let ns = start.elapsed().as_nanos().min(u64::MAX as u128) as u64;
+            hist(id).record(ns);
+        }
+    }
+}
+
+/// Enter a span by histogram id (the zero-lookup form for hot paths).
+pub fn enter(id: Hist) -> Span {
+    if !super::enabled() {
+        return Span::noop();
+    }
+    Span {
+        hist: Some(id),
+        start: Some(Instant::now()),
+    }
+}
+
+/// Enter a span by taxonomy name (`"compress.decompose"`). An unknown
+/// name yields a noop span — instrumentation must never turn into a
+/// failure path.
+pub fn enter_named(name: &str) -> Span {
+    if !super::enabled() {
+        return Span::noop();
+    }
+    match hist_by_name(name) {
+        Some(id) => enter(id),
+        None => Span::noop(),
+    }
+}
+
+/// `span!("compress.decompose")` enters the named span; extra
+/// `key = value` context is emitted as one `obs_trace!` line (and costs
+/// nothing unless the log level is `trace`):
+/// `span!("compress.decompose", level = l)`.
+#[macro_export]
+macro_rules! span {
+    ($name:literal) => {
+        $crate::obs::span::enter_named($name)
+    };
+    ($name:literal, $($key:ident = $val:expr),+ $(,)?) => {{
+        $crate::obs_trace!(
+            "span",
+            concat!("span=", $name $(, " ", stringify!($key), "={}")+),
+            $($val),+
+        );
+        $crate::obs::span::enter_named($name)
+    }};
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs;
+
+    #[test]
+    fn span_records_into_its_histogram() {
+        let _guard = obs::test_lock();
+        let was = obs::enabled();
+        obs::set_enabled(true);
+        let before = hist(Hist::CliReadInput).snapshot();
+        {
+            let _s = enter(Hist::CliReadInput);
+            std::hint::black_box(0u64);
+        }
+        let after = hist(Hist::CliReadInput).snapshot();
+        assert_eq!(after.delta(&before).count(), 1);
+        obs::set_enabled(was);
+    }
+
+    #[test]
+    fn named_and_unknown_spans() {
+        let _guard = obs::test_lock();
+        let was = obs::enabled();
+        obs::set_enabled(true);
+        let before = hist(Hist::CompressFused).snapshot();
+        drop(span!("compress.fused"));
+        drop(span!("not.a.span"));
+        let after = hist(Hist::CompressFused).snapshot();
+        assert_eq!(after.delta(&before).count(), 1);
+        obs::set_enabled(was);
+    }
+
+    #[test]
+    fn disabled_span_is_inert() {
+        let _guard = obs::test_lock();
+        let was = obs::enabled();
+        obs::set_enabled(false);
+        let before = hist(Hist::ServeRequest).snapshot();
+        {
+            let s = enter(Hist::ServeRequest);
+            assert_eq!(s.elapsed_ns(), 0);
+        }
+        let after = hist(Hist::ServeRequest).snapshot();
+        assert_eq!(after.delta(&before).count(), 0);
+        obs::set_enabled(was);
+    }
+}

@@ -87,6 +87,13 @@ impl ServeClient {
         ServeStats::decode(&self.call(&Request::Stats)?)
     }
 
+    /// The daemon's metrics registry in the text exposition format
+    /// (protocol v3+; an older daemon answers with an unknown-op error).
+    pub fn metrics(&mut self) -> Result<String> {
+        String::from_utf8(self.call(&Request::Metrics)?)
+            .map_err(|_| Error::corrupt("metrics body is not UTF-8"))
+    }
+
     /// Ask the daemon to stop accepting connections.
     pub fn shutdown(&mut self) -> Result<()> {
         self.call(&Request::Shutdown).map(|_| ())

@@ -19,8 +19,12 @@ use std::io::{Read, Write};
 /// Magic prefix of every request payload.
 pub const SERVE_MAGIC: &[u8; 4] = b"MGSV";
 /// Current serve protocol version. Version 2 added the `Busy`/`Deadline`
-/// refusal statuses and the queue/single-flight/deadline stats counters.
-pub const SERVE_PROTOCOL_VERSION: u8 = 2;
+/// refusal statuses and the queue/single-flight/deadline stats counters;
+/// version 3 added the `metrics` op (the text exposition of the global
+/// telemetry registry). The request grammar is otherwise unchanged, so
+/// version-1 and version-2 clients keep working against a version-3
+/// daemon — they simply cannot name the `metrics` op.
+pub const SERVE_PROTOCOL_VERSION: u8 = 3;
 /// Oldest request version the daemon still answers. Version-1 clients
 /// get version-1-shaped responses (nine-field stats bodies).
 pub const SERVE_PROTOCOL_VERSION_MIN: u8 = 1;
@@ -41,6 +45,13 @@ pub const SERVE_OP_RETRIEVE: u8 = 4;
 pub const SERVE_OP_STATS: u8 = 5;
 /// Stop the daemon after acknowledging (body: empty).
 pub const SERVE_OP_SHUTDOWN: u8 = 6;
+/// Request the daemon's telemetry exposition (body: empty; response
+/// body: the UTF-8 text rendering of the global metrics registry, see
+/// `docs/OBSERVABILITY.md`). Version-windowed: only protocol version 3
+/// and later may name this op — a version-1/2 request carrying op byte 7
+/// is refused as an unknown op, exactly as a version-2 daemon would
+/// refuse it.
+pub const SERVE_OP_METRICS: u8 = 7;
 
 /// Response status: success, op-specific body follows.
 pub const SERVE_RESP_OK: u8 = 0;
@@ -184,6 +195,8 @@ pub enum Request {
     },
     /// Send daemon counters.
     Stats,
+    /// Send the telemetry exposition text (protocol version ≥ 3).
+    Metrics,
     /// Acknowledge, then stop the daemon.
     Shutdown,
 }
@@ -221,6 +234,7 @@ impl Request {
                 }
             }
             Request::Stats => out.push(SERVE_OP_STATS),
+            Request::Metrics => out.push(SERVE_OP_METRICS),
             Request::Shutdown => out.push(SERVE_OP_SHUTDOWN),
         }
         out
@@ -292,7 +306,11 @@ impl Request {
                 }
             }
             SERVE_OP_STATS => Request::Stats,
+            SERVE_OP_METRICS if version >= 3 => Request::Metrics,
             SERVE_OP_SHUTDOWN => Request::Shutdown,
+            // op 7 below version 3 falls through here on purpose: a
+            // version-2 request must see exactly what a version-2 daemon
+            // would have answered
             other => {
                 return Err(Error::UnsupportedFormat(format!(
                     "unknown serve op {other}"
@@ -371,7 +389,8 @@ impl ServeStats {
     }
 
     /// Serialize for a client speaking protocol `version`: version 1
-    /// bodies carry only the first nine counters, version 2 all thirteen.
+    /// bodies carry only the first nine counters, versions 2 and 3 all
+    /// thirteen.
     pub fn encode_for(&self, version: u8) -> Vec<u8> {
         let fields = self.fields();
         let n = if version <= 1 { 9 } else { fields.len() };
@@ -550,6 +569,7 @@ mod tests {
                 region: Some(vec![(0, 8), (4, 4)]),
             },
             Request::Stats,
+            Request::Metrics,
             Request::Shutdown,
         ];
         for req in reqs {
@@ -676,5 +696,32 @@ mod tests {
         let d = ServeStats::decode(&v1).unwrap();
         assert_eq!((d.hits, d.transient_retries), (1, 9));
         assert_eq!((d.queued, d.refused, d.coalesced, d.deadline_expired), (0, 0, 0, 0));
+    }
+
+    #[test]
+    fn metrics_op_is_version_windowed() {
+        // a current client names the op and round-trips
+        let p = Request::Metrics.encode();
+        assert_eq!(p[4], SERVE_PROTOCOL_VERSION);
+        assert_eq!(p[5], SERVE_OP_METRICS);
+        let (version, req) = Request::decode_versioned(&p).unwrap();
+        assert_eq!((version, req), (SERVE_PROTOCOL_VERSION, Request::Metrics));
+        // the same op byte under version 1 or 2 is an unknown op — a
+        // pre-v3 client is answered exactly as a pre-v3 daemon would
+        for old in [1u8, 2] {
+            let mut p = Request::Metrics.encode();
+            p[4] = old;
+            assert!(
+                matches!(Request::decode_versioned(&p), Err(Error::UnsupportedFormat(_))),
+                "version {old}"
+            );
+        }
+        // v1/v2 clients are otherwise unaffected: every pre-existing op
+        // still parses under the old version bytes
+        for old in [1u8, 2] {
+            let mut p = Request::Stats.encode();
+            p[4] = old;
+            assert_eq!(Request::decode_versioned(&p).unwrap().0, old);
+        }
     }
 }

@@ -34,8 +34,10 @@ use super::protocol::{
 use crate::chunk::WorkerPool;
 use crate::coordinator::refactor::ProgressiveField;
 use crate::error::{Error, Result};
+use crate::obs::{self, Ctr, Gg, Hist};
 use crate::progressive::ComponentId;
 use crate::storage::ComponentCache;
+use crate::{obs_info, obs_warn};
 use crate::tensor::Scalar;
 use std::io::Read;
 use std::net::{SocketAddr, TcpListener, TcpStream};
@@ -152,12 +154,20 @@ impl Server {
             deadline_expired: AtomicU64::new(0),
             stop: AtomicBool::new(false),
         });
+        obs_info!(
+            "serve",
+            "event=listening addr={addr} max_connections={} queue_depth={} timeout_ms={}",
+            cfg.max_connections.max(1),
+            cfg.queue_depth,
+            cfg.request_timeout_ms
+        );
         let accept_shared = Arc::clone(&shared);
         let (max_connections, queue_depth) = (cfg.max_connections.max(1), cfg.queue_depth);
         let accept = std::thread::spawn(move || {
             let pool_shared = Arc::clone(&accept_shared);
             let mut pool = WorkerPool::new(max_connections, queue_depth, move |stream: TcpStream| {
-                pool_shared.queued.fetch_sub(1, Ordering::SeqCst);
+                let q = pool_shared.queued.fetch_sub(1, Ordering::SeqCst) - 1;
+                obs::set_gauge(Gg::ServeQueued, q);
                 handle_connection(&pool_shared, addr, stream);
             });
             for conn in listener.incoming() {
@@ -167,14 +177,19 @@ impl Server {
                 let Ok(stream) = conn else { continue };
                 // count the admission *before* submitting so the gauge
                 // never underflows when the worker decrements first
-                accept_shared.queued.fetch_add(1, Ordering::SeqCst);
+                let q = accept_shared.queued.fetch_add(1, Ordering::SeqCst) + 1;
+                obs::set_gauge(Gg::ServeQueued, q);
                 match pool.try_submit(stream) {
                     Ok(()) => {
                         accept_shared.connections.fetch_add(1, Ordering::Relaxed);
+                        obs::inc(Ctr::ServeConnections);
                     }
                     Err(mut stream) => {
-                        accept_shared.queued.fetch_sub(1, Ordering::SeqCst);
+                        let q = accept_shared.queued.fetch_sub(1, Ordering::SeqCst) - 1;
+                        obs::set_gauge(Gg::ServeQueued, q);
                         accept_shared.refused.fetch_add(1, Ordering::Relaxed);
+                        obs::inc(Ctr::ServeRefused);
+                        obs_warn!("serve", "event=refused reason=queue_full");
                         // refuse with a structured frame, never a hang or
                         // reset; a dead peer must not stall the accept loop
                         let _ = stream.set_write_timeout(Some(Duration::from_millis(500)));
@@ -203,6 +218,7 @@ impl Server {
             // drains admitted connections, then joins the workers (they
             // observe the stop flag while polling their sockets)
             pool.shutdown();
+            obs_info!("serve", "event=stopped addr={addr}");
         });
         Ok(Server {
             addr,
@@ -333,20 +349,36 @@ fn handle_connection(shared: &Arc<Shared>, addr: SocketAddr, mut stream: TcpStre
             Ok(None) | Err(_) => return,
         };
         shared.requests.fetch_add(1, Ordering::Relaxed);
-        // the deadline covers request handling, measured from frame arrival
+        obs::inc(Ctr::ServeRequests);
+        // the request span covers decode + handle + respond, the same
+        // window the deadline measures (from frame arrival)
+        let request_span = obs::span::enter(Hist::ServeRequest);
         let deadline = shared.timeout.map(|t| Instant::now() + t);
-        let outcome = Request::decode_versioned(&payload)
-            .and_then(|(version, req)| handle_request(shared, &mut floor, version, req, deadline));
+        let decoded = {
+            let _s = obs::span::enter(Hist::ServeDecode);
+            Request::decode_versioned(&payload)
+        };
+        let outcome = decoded.and_then(|(version, req)| {
+            let _s = obs::span::enter(Hist::ServeHandle);
+            handle_request(shared, &mut floor, version, req, deadline)
+        });
         let (resp, stop_after) = match outcome {
             Ok(Outcome::Body(body)) => (ok_response(&body), false),
             Ok(Outcome::Shutdown) => (ok_response(&[]), true),
             Err(e) if e.is_deadline() => {
                 shared.deadline_expired.fetch_add(1, Ordering::Relaxed);
+                obs::inc(Ctr::ServeDeadlineExpired);
+                obs_warn!("serve", "event=deadline_expired detail={e}");
                 (deadline_response(&e.to_string()), false)
             }
             Err(e) => (err_response(&e.to_string()), false),
         };
-        if write_frame(&mut stream, &resp).is_err() {
+        let wrote = {
+            let _s = obs::span::enter(Hist::ServeRespond);
+            write_frame(&mut stream, &resp)
+        };
+        drop(request_span);
+        if wrote.is_err() {
             return;
         }
         if stop_after {
@@ -395,6 +427,11 @@ fn handle_request(
         }
         // stats bodies are shaped to the client's protocol version
         Request::Stats => Ok(Outcome::Body(shared.stats().encode_for(version))),
+        // the text exposition of the whole process-wide registry; the op
+        // itself is version-windowed at decode (v3+), so no shaping here
+        Request::Metrics => Ok(Outcome::Body(
+            crate::obs::registry::snapshot().render().into_bytes(),
+        )),
         Request::Shutdown => Ok(Outcome::Shutdown),
     }
 }
@@ -492,6 +529,24 @@ mod tests {
         let stats = client.stats().unwrap();
         assert!(stats.hits > 0, "{stats:?}");
         assert!(stats.connections >= 2);
+        // live metrics exposition over the wire (v3 op): after at least
+        // one request with telemetry on, the request histogram has
+        // samples (the lock serializes against tests toggling the flag)
+        {
+            let _guard = crate::obs::test_lock();
+            let was = obs::enabled();
+            obs::set_enabled(true);
+            client.stats().unwrap();
+            let text = client.metrics().unwrap();
+            obs::set_enabled(was);
+            let line = text
+                .lines()
+                .find(|l| l.starts_with("hist serve.request "))
+                .unwrap_or_else(|| panic!("no serve.request line in {text}"));
+            let count: u64 = line.split_whitespace().nth(2).unwrap().parse().unwrap();
+            assert!(count >= 1, "{line}");
+            assert!(text.contains("counter serve.requests "), "{text}");
+        }
         server.stop();
     }
 

@@ -9,6 +9,7 @@
 //! clients through the `stats` request.
 
 use crate::error::Result;
+use crate::obs::{self, Ctr, Gg, Hist};
 use std::collections::HashMap;
 use std::sync::{Arc, Condvar, Mutex};
 
@@ -118,10 +119,12 @@ impl ComponentCache {
                 g.order.remove(&prev);
                 g.order.insert(stamp, key.to_string());
                 g.hits += 1;
+                obs::inc(Ctr::CacheHits);
                 Some(payload)
             }
             None => {
                 g.misses += 1;
+                obs::inc(Ctr::CacheMisses);
                 None
             }
         }
@@ -148,12 +151,15 @@ impl ComponentCache {
             let (gone, _) = g.map.remove(&victim).unwrap();
             g.bytes_used -= gone.len() as u64;
             g.evictions += 1;
+            obs::inc(Ctr::CacheEvictions);
         }
         g.clock += 1;
         let stamp = g.clock;
         g.order.insert(stamp, key.to_string());
         g.map.insert(key.to_string(), (payload, stamp));
         g.bytes_used += len;
+        obs::set_gauge(Gg::CacheBytesUsed, g.bytes_used);
+        obs::set_gauge(Gg::CacheEntries, g.map.len() as u64);
     }
 
     /// `get`, falling back to `fetch` on a miss and caching the result —
@@ -188,20 +194,25 @@ impl ComponentCache {
                     g.order.remove(&prev);
                     g.order.insert(stamp, key.to_string());
                     g.hits += 1;
+                    obs::inc(Ctr::CacheHits);
                     return Ok(hit);
                 }
                 match g.inflight.get(key) {
                     Some(f) => Some(Arc::clone(f)), // waiter
                     None => {
                         g.misses += 1;
+                        obs::inc(Ctr::CacheMisses);
                         let f = Arc::new(Flight {
                             state: Mutex::new(FlightState::Pending),
                             cvar: Condvar::new(),
                         });
                         g.inflight.insert(key.to_string(), Arc::clone(&f));
                         drop(g);
-                        // leader: fetch outside all locks
+                        // leader: fetch outside all locks (timed — the
+                        // cache.fetch histogram is the cold-miss latency)
+                        let fetch_span = obs::span::enter(Hist::CacheFetch);
                         let result = (fetch.take().expect("leader fetches once"))();
+                        drop(fetch_span);
                         let published = match result {
                             Ok(bytes) => {
                                 let payload = Arc::new(bytes);
@@ -236,6 +247,8 @@ impl ComponentCache {
                     let mut g = self.inner.lock().unwrap();
                     g.hits += 1;
                     g.coalesced += 1;
+                    obs::inc(Ctr::CacheHits);
+                    obs::inc(Ctr::CacheCoalesced);
                     return Ok(shared);
                 }
                 // leader failed: loop back; this caller may hit the cache

@@ -69,6 +69,7 @@ impl Storage for FileStorage {
     }
 
     fn read_range(&self, key: &str, offset: u64, len: u64) -> Result<Vec<u8>> {
+        let _s = crate::obs::span::enter(crate::obs::Hist::StorageRead);
         let path = self.path_of(key)?;
         let mut f = fs::File::open(&path)?;
         let size = f.metadata()?.len();
@@ -88,10 +89,12 @@ impl Storage for FileStorage {
     }
 
     fn read(&self, key: &str) -> Result<Vec<u8>> {
+        let _s = crate::obs::span::enter(crate::obs::Hist::StorageRead);
         Ok(fs::read(self.path_of(key)?)?)
     }
 
     fn write(&self, key: &str, bytes: &[u8]) -> Result<()> {
+        let _s = crate::obs::span::enter(crate::obs::Hist::StorageWrite);
         let path = self.path_of(key)?;
         if let Some(parent) = path.parent() {
             fs::create_dir_all(parent)?;

@@ -52,6 +52,7 @@ impl Storage for MemoryStorage {
     }
 
     fn read_range(&self, key: &str, offset: u64, len: u64) -> Result<Vec<u8>> {
+        let _s = crate::obs::span::enter(crate::obs::Hist::StorageRead);
         let obj = self.get(key)?;
         let end = offset
             .checked_add(len)
@@ -66,10 +67,12 @@ impl Storage for MemoryStorage {
     }
 
     fn read(&self, key: &str) -> Result<Vec<u8>> {
+        let _s = crate::obs::span::enter(crate::obs::Hist::StorageRead);
         Ok(self.get(key)?.as_ref().clone())
     }
 
     fn write(&self, key: &str, bytes: &[u8]) -> Result<()> {
+        let _s = crate::obs::span::enter(crate::obs::Hist::StorageWrite);
         validate_key(key)?;
         self.objects
             .lock()

@@ -141,6 +141,7 @@ pub fn with_retries_until<T>(
             Err(e) if e.is_transient() && attempt < retries => {
                 attempt += 1;
                 *spent += 1;
+                crate::obs::inc(crate::obs::Ctr::StorageRetries);
             }
             Err(e) => return Err(e),
         }

@@ -182,6 +182,7 @@ impl<W: Write> ContainerWriter<W> {
         });
         self.spool.write_all(blob)?;
         self.spooled_bytes += blob.len();
+        crate::obs::inc(crate::obs::Ctr::StreamBlocks);
         Ok(())
     }
 

@@ -1,0 +1,263 @@
+//! Integration suite for the in-tree observability layer (PR 9).
+//!
+//! Three properties pinned here are load-bearing for the whole design:
+//!
+//! * **Lock-free snapshot consistency** — `registry::snapshot()` taken
+//!   while writer threads hammer the cells is monotone and internally
+//!   consistent (a histogram's derived count only ever counts
+//!   observations the snapshot actually saw), and the final delta is
+//!   exact once the writers join.
+//! * **Quantile bounds** — the log2-bucket estimate always brackets the
+//!   sorted-vector oracle: `oracle ≤ estimate < 2·max(oracle, 1)`.
+//! * **Value transparency** — compressed containers (in-core, chunked,
+//!   streamed) and progressive store objects are byte-identical with
+//!   telemetry enabled or disabled: the subsystem reads clocks and bumps
+//!   atomics but never touches data.
+
+use mgardp::coordinator::cli::run;
+use mgardp::data::rng::Rng;
+use mgardp::obs::{self, registry, Ctr, Gg, Hist};
+use std::path::{Path, PathBuf};
+
+fn s(v: &[&str]) -> Vec<String> {
+    v.iter().map(|x| x.to_string()).collect()
+}
+
+// ------------------------------------------------------------- registry
+
+#[test]
+fn snapshot_is_consistent_under_concurrent_writers() {
+    // record straight into the cells (bypassing the enabled gate) so the
+    // test needs no coordination with the global telemetry flag
+    let before = registry::snapshot();
+    const WRITERS: u64 = 4;
+    const PER_WRITER: u64 = 50_000;
+    let handles: Vec<_> = (0..WRITERS)
+        .map(|w| {
+            std::thread::spawn(move || {
+                for i in 0..PER_WRITER {
+                    registry::counter(Ctr::ServeRefused).add(1);
+                    registry::hist(Hist::ServeDecode).record((w * 31 + i) % 10_000);
+                }
+            })
+        })
+        .collect();
+    // snapshot continuously while the writers run: counts are monotone
+    // and every mid-flight snapshot supports quantile derivation
+    let mut last_count = before.hist(Hist::ServeDecode).count();
+    let mut last_ctr = before.counter(Ctr::ServeRefused);
+    while handles.iter().any(|h| !h.is_finished()) {
+        let snap = registry::snapshot();
+        let count = snap.hist(Hist::ServeDecode).count();
+        let ctr = snap.counter(Ctr::ServeRefused);
+        assert!(count >= last_count, "{count} < {last_count}");
+        assert!(ctr >= last_ctr, "{ctr} < {last_ctr}");
+        let p99 = snap.hist(Hist::ServeDecode).quantile(0.99);
+        assert!(count == 0 || p99 <= registry::bucket_upper_bound(registry::NUM_BUCKETS - 1));
+        last_count = count;
+        last_ctr = ctr;
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    // once the writers join, the delta is exact — no lost updates
+    let d = registry::snapshot().delta(&before);
+    assert_eq!(d.counter(Ctr::ServeRefused), WRITERS * PER_WRITER);
+    assert_eq!(d.hist(Hist::ServeDecode).count(), WRITERS * PER_WRITER);
+}
+
+#[test]
+fn quantile_estimates_bracket_the_sorted_oracle() {
+    let mut rng = Rng::new(0x0B5E_55ED);
+    for trial in 0..60 {
+        let h = registry::Histogram::new();
+        let n = 1 + rng.below(400);
+        let mut values = Vec::with_capacity(n);
+        for _ in 0..n {
+            // span many magnitudes, hitting 0 and the bucket edges hard
+            let exp = rng.below(40) as u32;
+            let v = match rng.below(4) {
+                0 => 0u64,
+                1 => 1u64 << exp,
+                2 => (1u64 << exp) - 1,
+                _ => (1u64 << exp) + rng.below(1 << 16) as u64,
+            };
+            values.push(v);
+            h.record(v);
+        }
+        let snap = h.snapshot();
+        assert_eq!(snap.count(), n as u64);
+        assert_eq!(snap.sum_ns, values.iter().sum::<u64>());
+        values.sort_unstable();
+        for q in [0.5, 0.9, 0.95, 0.99] {
+            let rank = ((q * n as f64).ceil() as usize).clamp(1, n);
+            let oracle = values[rank - 1];
+            let est = snap.quantile(q);
+            assert!(est >= oracle, "trial {trial} q={q}: {est} < {oracle}");
+            assert!(
+                est < 2 * oracle.max(1),
+                "trial {trial} q={q}: {est} >= 2·max({oracle}, 1)"
+            );
+        }
+    }
+}
+
+#[test]
+fn exposition_covers_the_whole_catalog() {
+    let text = registry::snapshot().render();
+    let lines: Vec<&str> = text.lines().collect();
+    assert_eq!(
+        lines.len(),
+        Ctr::ALL.len() + Gg::ALL.len() + Hist::ALL.len(),
+        "one line per catalog entry"
+    );
+    // catalog order: counters, then gauges, then histograms
+    for (i, id) in Ctr::ALL.iter().enumerate() {
+        assert!(lines[i].starts_with(&format!("counter {} ", id.name())), "{}", lines[i]);
+    }
+    for (i, id) in Gg::ALL.iter().enumerate() {
+        let line = lines[Ctr::ALL.len() + i];
+        assert!(line.starts_with(&format!("gauge {} ", id.name())), "{line}");
+    }
+    for (i, id) in Hist::ALL.iter().enumerate() {
+        let line = lines[Ctr::ALL.len() + Gg::ALL.len() + i];
+        assert!(line.starts_with(&format!("hist {} ", id.name())), "{line}");
+        assert_eq!(line.split(' ').count(), 7, "{line}");
+        // every span name resolves back to its histogram id
+        assert_eq!(registry::hist_by_name(id.name()), Some(*id));
+    }
+}
+
+// ----------------------------------------------------- value transparency
+
+/// Every file under `root`, as sorted (relative-path, bytes) pairs.
+fn dir_bytes(root: &Path) -> Vec<(String, Vec<u8>)> {
+    fn walk(dir: &Path, rel: &str, out: &mut Vec<(String, Vec<u8>)>) {
+        for e in std::fs::read_dir(dir).unwrap() {
+            let e = e.unwrap();
+            let name = e.file_name().to_string_lossy().to_string();
+            let key = if rel.is_empty() {
+                name
+            } else {
+                format!("{rel}/{name}")
+            };
+            if e.file_type().unwrap().is_dir() {
+                walk(&e.path(), &key, out);
+            } else {
+                out.push((key, std::fs::read(e.path()).unwrap()));
+            }
+        }
+    }
+    let mut out = Vec::new();
+    walk(root, "", &mut out);
+    out.sort();
+    out
+}
+
+#[test]
+fn containers_are_byte_identical_with_telemetry_on_and_off() {
+    let was = obs::enabled();
+    let dir = std::env::temp_dir().join(format!("mgardp_obs_ident_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let raw = dir.join("in.f32");
+    let t = mgardp::data::synth::smooth_test_field(&[17, 18, 19]);
+    mgardp::data::io::write_raw(&raw, &t).unwrap();
+
+    // one compress run per (path, telemetry) cell, all through the real
+    // CLI so the --telemetry flag itself is exercised
+    let compress = |tag: &str, on: bool, extra: &[&str]| -> Vec<u8> {
+        let out = dir.join(format!("{tag}_{on}.mgrp"));
+        let mut argv = s(&[
+            "--input",
+            raw.to_str().unwrap(),
+            "--shape",
+            "17x18x19",
+            "--output",
+            out.to_str().unwrap(),
+            "--rel",
+            "1e-3",
+            "--telemetry",
+            if on { "true" } else { "false" },
+        ]);
+        argv.extend(s(extra));
+        run("compress", &argv).unwrap();
+        std::fs::read(&out).unwrap()
+    };
+    // in-core single-tensor path
+    assert_eq!(
+        compress("incore", true, &[]),
+        compress("incore", false, &[]),
+        "in-core container differs under telemetry"
+    );
+    // chunked parallel path (worker pool + per-block spans active)
+    let chunked = ["--block-shape", "8x8x8", "--threads", "2"];
+    assert_eq!(
+        compress("chunked", true, &chunked),
+        compress("chunked", false, &chunked),
+        "chunked container differs under telemetry"
+    );
+    // out-of-core streamed path (stream writer + spool + backpressure)
+    let streamed = [
+        "--block-shape",
+        "8x8x8",
+        "--threads",
+        "2",
+        "--stream",
+        "--memory-budget",
+        "16K",
+    ];
+    let on_bytes = compress("streamed", true, &streamed);
+    assert_eq!(
+        on_bytes,
+        compress("streamed", false, &streamed),
+        "streamed container differs under telemetry"
+    );
+
+    // decompressed raw output is likewise identical either way
+    let rec_of = |on: bool| -> Vec<u8> {
+        let cont = dir.join(format!("streamed_{on}.mgrp"));
+        let rec = dir.join(format!("rec_{on}.f32"));
+        run(
+            "decompress",
+            &s(&[
+                "--input",
+                cont.to_str().unwrap(),
+                "--output",
+                rec.to_str().unwrap(),
+                "--stream",
+                "--telemetry",
+                if on { "true" } else { "false" },
+            ]),
+        )
+        .unwrap();
+        std::fs::read(&rec).unwrap()
+    };
+    assert_eq!(rec_of(true), rec_of(false));
+
+    // progressive refactor store: every stored object byte-identical
+    let store_of = |on: bool| -> Vec<(String, Vec<u8>)> {
+        let store = dir.join(format!("store_{on}"));
+        run(
+            "refactor",
+            &s(&[
+                "--input",
+                raw.to_str().unwrap(),
+                "--shape",
+                "17x18x19",
+                "--store",
+                store.to_str().unwrap(),
+                "--field",
+                "T",
+                "--progressive",
+                "--telemetry",
+                if on { "true" } else { "false" },
+            ]),
+        )
+        .unwrap();
+        dir_bytes(&store)
+    };
+    assert_eq!(store_of(true), store_of(false), "progressive store differs");
+
+    obs::set_enabled(was);
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -50,6 +50,7 @@ fn all_requests() -> Vec<Request> {
             region: Some(vec![(1, 7), (0, 9)]),
         },
         Request::Stats,
+        Request::Metrics,
         Request::Shutdown,
     ]
 }
@@ -197,8 +198,8 @@ fn live_daemon_survives_corrupt_frames() {
         let mut p = reqs[rng.below(reqs.len() - 1)].encode(); // never Shutdown
         match trial % 3 {
             0 => p[rng.below(4)] ^= (1 + rng.below(255)) as u8, // break the magic
-            1 => p[4] = 3 + rng.below(253) as u8,               // unknown version
-            _ => p[5] = 7 + rng.below(249) as u8,               // unknown op
+            1 => p[4] = 4 + rng.below(252) as u8,               // unknown version
+            _ => p[5] = 8 + rng.below(248) as u8,               // unknown op
         }
         write_frame(&mut stream, &p).unwrap();
         match read_frame(&mut stream).unwrap() {
@@ -280,6 +281,56 @@ fn live_daemon_rejects_trailing_garbage_in_frame() {
     write_frame(&mut stream, &p).unwrap();
     let resp = read_frame(&mut stream).unwrap().expect("an ERR frame");
     assert_eq!(resp[0], SERVE_RESP_ERR);
+    assert_still_serving(&server);
+}
+
+#[test]
+fn metrics_op_is_refused_below_version_3() {
+    // SERVE_OP_METRICS is version-windowed: the same frame with the
+    // version byte downgraded to 2 (or 1) must decode-fail, and a live
+    // daemon must answer it with a structured ERR frame, not a hang
+    for version in [1u8, 2] {
+        let mut p = Request::Metrics.encode();
+        p[4] = version;
+        assert!(Request::decode(&p).is_err(), "v{version}");
+        assert!(Request::decode_versioned(&p).is_err(), "v{version}");
+    }
+    let server = start_server();
+    let mut stream = connect(&server);
+    let mut p = Request::Metrics.encode();
+    p[4] = 2;
+    write_frame(&mut stream, &p).unwrap();
+    let resp = read_frame(&mut stream).unwrap().expect("an ERR frame");
+    assert_eq!(resp[0], SERVE_RESP_ERR);
+    assert!(parse_response(&resp).is_err());
+    assert_still_serving(&server);
+}
+
+#[test]
+fn live_daemon_rejects_malformed_metrics_frames_but_answers_v3() {
+    let server = start_server();
+    // trailing garbage on a metrics frame is refused
+    let mut stream = connect(&server);
+    let mut p = Request::Metrics.encode();
+    p.extend_from_slice(&[0xAA, 0x55]);
+    write_frame(&mut stream, &p).unwrap();
+    let resp = read_frame(&mut stream).unwrap().expect("an ERR frame");
+    assert_eq!(resp[0], SERVE_RESP_ERR);
+    // a truncated metrics frame (header only, op byte cut off) is refused
+    let mut stream = connect(&server);
+    let p = Request::Metrics.encode();
+    write_frame(&mut stream, &p[..5]).unwrap();
+    let resp = read_frame(&mut stream).unwrap().expect("an ERR frame");
+    assert_eq!(resp[0], SERVE_RESP_ERR);
+    // and the well-formed v3 request is answered with the exposition text
+    let mut stream = connect(&server);
+    write_frame(&mut stream, &Request::Metrics.encode()).unwrap();
+    let resp = read_frame(&mut stream).unwrap().expect("an OK frame");
+    assert_eq!(resp[0], SERVE_RESP_OK);
+    let body = parse_response(&resp).unwrap();
+    let text = std::str::from_utf8(body).expect("metrics body is UTF-8");
+    assert!(text.lines().any(|l| l.starts_with("counter serve.requests ")), "{text}");
+    assert!(text.lines().any(|l| l.starts_with("hist serve.request ")), "{text}");
     assert_still_serving(&server);
 }
 

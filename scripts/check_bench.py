@@ -18,6 +18,11 @@ Schemas (auto-detected from the `schema` tag; both need no toolchain):
     every measured shape.
   * `mgardp-bench-pr6-v1` — per-line-vs-line-batched sweep-engine `panel`
     points. Floor: batched >= per-line on every measured shape.
+  * `mgardp-bench-pr9-v1` — telemetry `overhead` points: compress
+    throughput with telemetry absent (`plain_mbs`), compiled-in but
+    disabled (`disabled_mbs`) and actively recording (`enabled_mbs`).
+    Floor: disabled >= 0.9x plain on every shape (telemetry must be
+    near-free when off); enabled must stay finite and positive.
 
 Common checks: provenance/smoke fields present and well-typed, shapes
 valid, throughputs finite and positive, recorded speedups consistent with
@@ -38,7 +43,7 @@ import math
 import os
 import sys
 
-KNOWN_SCHEMAS = ("mgardp-bench-pr5-v1", "mgardp-bench-pr6-v1")
+KNOWN_SCHEMAS = ("mgardp-bench-pr5-v1", "mgardp-bench-pr6-v1", "mgardp-bench-pr9-v1")
 
 
 def fail(msg: str) -> None:
@@ -129,6 +134,37 @@ def check_pr6(doc: dict, path: str, floor: float) -> str:
     return f"{len(panel)} panel points"
 
 
+def check_pr9(doc: dict, path: str, floor: float) -> str:
+    points = doc.get("overhead")
+    if not isinstance(points, list) or not points:
+        fail(f"{path}: overhead must be a non-empty list")
+    # the PR-9 claim is "near-free when disabled", not "faster": the
+    # committed floor tolerates 10% noise, the fresh floor only
+    # catastrophic regressions
+    off_floor = 0.9 if floor >= 1.0 else floor
+    for i, p in enumerate(points):
+        if not isinstance(p, dict):
+            fail(f"{path}: overhead[{i}] is not an object")
+        what = f"{path}: overhead[{i}]"
+        shape = p.get("shape")
+        if (
+            not isinstance(shape, list)
+            or not shape
+            or not all(isinstance(s, int) and s >= 2 for s in shape)
+        ):
+            fail(f"{what}.shape invalid: {shape!r}")
+        plain = finite_positive(p.get("plain_mbs"), f"{what}.plain_mbs")
+        disabled = finite_positive(p.get("disabled_mbs"), f"{what}.disabled_mbs")
+        finite_positive(p.get("enabled_mbs"), f"{what}.enabled_mbs")
+        if disabled < plain * off_floor:
+            fail(
+                f"{what} ({p.get('label')}): disabled_mbs {disabled} MB/s below "
+                f"plain_mbs {plain} MB/s (floor {off_floor}) — disabled "
+                "telemetry must be near-free"
+            )
+    return f"{len(points)} overhead points"
+
+
 def check_file(path: str, floor: float) -> None:
     try:
         with open(path, "r", encoding="utf-8") as f:
@@ -140,8 +176,10 @@ def check_file(path: str, floor: float) -> None:
     schema = check_common(doc, path)
     if schema == "mgardp-bench-pr5-v1":
         detail = check_pr5(doc, path, floor)
-    else:
+    elif schema == "mgardp-bench-pr6-v1":
         detail = check_pr6(doc, path, floor)
+    else:
+        detail = check_pr9(doc, path, floor)
     print(f"check_bench: OK: {path} [{schema}] ({detail}, generator {doc['generator']!r})")
 
 

@@ -13,7 +13,9 @@ Two checks, both dependency-free (stdlib only):
        versions (rust/src/coordinator/refactor.rs,
        rust/src/progressive/manifest.rs);
      * docs/SERVING.md — serve wire-protocol version, op and status
-       bytes (rust/src/serve/protocol.rs).
+       bytes (rust/src/serve/protocol.rs);
+     * docs/OBSERVABILITY.md — exposition format version, histogram
+       bucket count and log levels (rust/src/obs/mod.rs).
 2. **Markdown link check** — every relative link target in README.md,
    ROADMAP.md and docs/*.md must exist on disk (http(s)/mailto and
    in-page #anchors are skipped).
@@ -28,6 +30,7 @@ from pathlib import Path
 ROOT = Path(__file__).resolve().parent.parent
 FORMAT_MD = ROOT / "docs" / "FORMAT.md"
 SERVING_MD = ROOT / "docs" / "SERVING.md"
+OBSERVABILITY_MD = ROOT / "docs" / "OBSERVABILITY.md"
 LINK_DOCS = [ROOT / "README.md", ROOT / "ROADMAP.md", *sorted((ROOT / "docs").glob("*.md"))]
 
 # each normative document, with the (file, constant-name pattern) pairs
@@ -56,6 +59,15 @@ CONST_GROUPS = [
             (
                 ROOT / "rust" / "src" / "serve" / "protocol.rs",
                 r"SERVE_PROTOCOL_\w+|SERVE_OP_\w+|SERVE_RESP_\w+",
+            ),
+        ],
+    ),
+    (
+        OBSERVABILITY_MD,
+        [
+            (
+                ROOT / "rust" / "src" / "obs" / "mod.rs",
+                r"OBS_\w+|LOG_LEVEL_\w+",
             ),
         ],
     ),

@@ -17,22 +17,32 @@
 #   clippy            lints are clean at -D warnings (correctness smells)
 #   rustdoc           docs build at -D warnings: every intra-doc link in the
 #                     chunk/stream/data rustdoc pass must resolve
-#   docs gate         scripts/check_docs.py — docs/FORMAT.md constant
-#                     tables (chunked sub-versions + refactor manifest
-#                     versions) must match the source constants, and every
-#                     relative markdown link in README/ROADMAP/docs must
-#                     resolve (no toolchain needed)
+#   docs gate         scripts/check_docs.py — docs/FORMAT.md, SERVING.md
+#                     and OBSERVABILITY.md constant tables must match the
+#                     source constants, and every relative markdown link
+#                     in README/ROADMAP/docs must resolve (no toolchain
+#                     needed)
+#   obs mirror        scripts/validate_pr9.py --quick — the toolchain-free
+#                     Python mirror of the observability layer (histogram
+#                     quantiles vs a sorted oracle, catalog/doc sync, the
+#                     worked SERVE_OP_METRICS wire frames, protocol-v3 op
+#                     gating, stat rows, profile JSON schema)
 #   bench smoke       every committed BENCH_*.json baseline passes the
 #                     trajectory gate (scripts/check_bench.py, no
 #                     toolchain needed): keys present, finite positive
 #                     numbers, fused decompose+quantize >= staged
-#                     (PR 5) and line-batched sweeps >= per-line (PR 6)
-#                     on every shape. Then the fig8 throughput bench
-#                     runs on small synthetic fields and the freshly
-#                     emitted bench_out/BENCH_PR5.json and
+#                     (PR 5), line-batched sweeps >= per-line (PR 6) and
+#                     disabled telemetry >= 0.9x plain (PR 9) on every
+#                     shape. Then the fig8 throughput bench runs on small
+#                     synthetic fields and the freshly emitted
+#                     bench_out/BENCH_PR5.json and
 #                     bench_out/BENCH_PR6.json pass the same schema
 #                     checks (--fresh: ordering only guarded against
 #                     catastrophic regressions — smoke timings are noisy)
+#   profile smoke     scripts/profile_smoke.sh — compress + decompress a
+#                     small field with --profile/--profile-json, assert
+#                     the mgardp-profile-v1 trace covers >= 80% of wall
+#                     clock and that profiling is value-transparent
 #   examples smoke    quickstart, chunked_parallel (includes the
 #                     fixed-vs-adaptive tiling comparison), streaming and
 #                     progressive (error-bounded retrieval down to
@@ -85,8 +95,11 @@ fi
 step "rustdoc (-D warnings)"
 RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
 
-step "docs gate (FORMAT.md constants + markdown links)"
+step "docs gate (FORMAT.md/SERVING.md/OBSERVABILITY.md constants + markdown links)"
 python3 scripts/check_docs.py
+
+step "observability mirror (toolchain-free PR-9 validation)"
+python3 scripts/validate_pr9.py --quick
 
 step "bench smoke (committed trajectory + fresh BENCH_PR5/PR6.json)"
 python3 scripts/check_bench.py
@@ -99,6 +112,9 @@ MGARDP_SMOKE=1 cargo run --release --example quickstart
 MGARDP_SMOKE=1 MGARDP_THREADS=2 cargo run --release --example chunked_parallel
 MGARDP_SMOKE=1 cargo run --release --example streaming
 MGARDP_SMOKE=1 cargo run --release --example progressive
+
+step "profile smoke (per-stage traces from the real binary)"
+bash scripts/profile_smoke.sh
 
 step "serve smoke (concurrent error-bounded retrieval daemon)"
 bash scripts/serve_smoke.sh

@@ -1,0 +1,97 @@
+#!/usr/bin/env bash
+# Profile smoke: the acceptance scenario for the PR-9 profiling CLI,
+# against the real binary.
+#
+#   1. compress a small synthetic 3-D field with `--profile
+#      --profile-json`: the stderr table must render and the JSON trace
+#      must carry the `mgardp-profile-v1` schema with per-stage totals
+#      whose sum covers at least 80% of the measured wall clock (the
+#      in-core single-threaded path is a chain of leaf spans);
+#   2. decompress the container the same way and validate its trace;
+#   3. re-run compress with `--telemetry false` and assert the container
+#      bytes are identical — profiling is value-transparent.
+#
+# Every step is bounded; nothing can hang CI.
+set -euo pipefail
+
+cd "$(dirname "$0")/.."
+
+BIN=${MGARDP_BIN:-target/release/mgardp}
+if [ ! -x "$BIN" ]; then
+  echo "==> building release binary for the profile smoke"
+  cargo build --release
+fi
+
+WORK=$(mktemp -d "${TMPDIR:-/tmp}/mgardp_profile_smoke.XXXXXX")
+trap 'rm -rf "$WORK"' EXIT
+
+SHAPE=65x65x65
+RAW="$WORK/u.f32"
+
+echo "==> synthesizing a $SHAPE test field"
+python3 - "$RAW" <<'PY'
+import math, struct, sys
+n = 65
+vals = [
+    math.sin(i / 6.0) * math.cos(j / 7.0) + 0.4 * math.sin((j + 2 * k) / 9.0)
+    for i in range(n)
+    for j in range(n)
+    for k in range(n)
+]
+with open(sys.argv[1], "wb") as f:
+    f.write(struct.pack(f"<{len(vals)}f", *vals))
+PY
+
+# $1 = trace path, $2 = expected op: validate one profile JSON.
+check_trace() {
+  python3 - "$1" "$2" <<'PY'
+import json, sys
+doc = json.load(open(sys.argv[1], encoding="utf-8"))
+op = sys.argv[2]
+assert doc["schema"] == "mgardp-profile-v1", doc.get("schema")
+assert doc["op"] == op, doc["op"]
+assert isinstance(doc["wall_ns"], int) and doc["wall_ns"] > 0
+stages = doc["stages"]
+assert stages, "profile recorded no stages"
+for s in stages:
+    assert s["count"] >= 1 and s["total_ns"] >= 0, s
+names = [s["name"] for s in stages]
+assert len(set(names)) == len(names), "duplicate stage"
+assert "cli.read_input" in names, names
+total = doc["stages_total_ns"]
+assert total == sum(s["total_ns"] for s in stages), "stages_total_ns inconsistent"
+# the in-core path is sequential leaf spans: the stage sum must cover
+# the wall clock to within 20% (and can never exceed it)
+coverage = total / doc["wall_ns"]
+assert 0.8 <= coverage <= 1.0, f"stage coverage {coverage:.2%} outside [80%, 100%]"
+print(f"    {op}: {len(stages)} stages, coverage {coverage:.1%}  OK")
+PY
+}
+
+echo "==> compress with --profile --profile-json"
+"$BIN" compress --input "$RAW" --shape "$SHAPE" --output "$WORK/u.mgrp" \
+  --rel 1e-3 --profile --profile-json "$WORK/compress_trace.json" \
+  2>"$WORK/compress_profile.txt"
+grep -q "^profile: compress" "$WORK/compress_profile.txt" || {
+  echo "FAIL: --profile printed no stage table" >&2
+  cat "$WORK/compress_profile.txt" >&2
+  exit 1
+}
+sed 's/^/    /' "$WORK/compress_profile.txt"
+check_trace "$WORK/compress_trace.json" compress
+
+echo "==> decompress with --profile-json"
+"$BIN" decompress --input "$WORK/u.mgrp" --output "$WORK/rec.f32" \
+  --profile-json "$WORK/decompress_trace.json"
+check_trace "$WORK/decompress_trace.json" decompress
+
+echo "==> profiling is value-transparent"
+"$BIN" compress --input "$RAW" --shape "$SHAPE" --output "$WORK/u_off.mgrp" \
+  --rel 1e-3 --telemetry false
+cmp "$WORK/u.mgrp" "$WORK/u_off.mgrp" || {
+  echo "FAIL: container bytes differ between profiled and telemetry-off runs" >&2
+  exit 1
+}
+echo "    container bytes identical with profiling on and telemetry off"
+
+echo "==> profile smoke passed"

@@ -9,8 +9,11 @@
 #   3. hit it with 4 *concurrent* clients at distinct tolerances and
 #      assert each reconstruction satisfies its certified `‖u−ũ‖∞ ≤ τ`
 #      bound bit-for-bit against the original raw field;
-#   4. query counters over the wire, then shut the daemon down via
-#      `serve-ctl --shutdown` under a hard timeout;
+#   4. query counters (`serve-ctl --stats`) and the telemetry exposition
+#      (`serve-ctl --metrics`, protocol v3) over the wire — the live
+#      daemon must report latency quantiles for the request span — then
+#      shut the daemon down via `serve-ctl --shutdown` under a hard
+#      timeout;
 #   5. repeat a shortened run over the mock-latency backend with
 #      transient-failure injection (--mock-latency-ms / --fail-every), so
 #      the retry path is exercised against the real wire protocol;
@@ -120,7 +123,31 @@ for TAU in $TAUS; do
 done
 
 echo "==> daemon counters"
-"$BIN" serve-ctl --addr "$ADDR" --stats
+"$BIN" serve-ctl --addr "$ADDR" --stats | tee "$WORK/stats.txt"
+
+echo "==> daemon telemetry exposition (serve-ctl --metrics)"
+"$BIN" serve-ctl --addr "$ADDR" --metrics >"$WORK/metrics.txt"
+# the exposition must carry a live latency histogram for the request
+# span: hist <name> <count> <sum_ns> <p50> <p95> <p99>, count >= the 4
+# clients served above
+awk '$1 == "hist" && $2 == "serve.request"' "$WORK/metrics.txt" | tee "$WORK/req_hist.txt"
+REQ_FIELDS=$(awk 'NF {print NF; exit}' "$WORK/req_hist.txt")
+REQ_COUNT=$(awk 'NF {print $3; exit}' "$WORK/req_hist.txt")
+if [ "${REQ_FIELDS:-0}" -ne 7 ] || [ "${REQ_COUNT:-0}" -lt 4 ]; then
+  echo "FAIL: metrics exposition lacks a live serve.request histogram" >&2
+  cat "$WORK/metrics.txt" >&2
+  exit 1
+fi
+# --metrics and --stats read the same registry: the requests counter in
+# the (later) exposition can only be >= the stats row
+STATS_REQS=$(awk -F: '/^requests/ {gsub(/ /,"",$2); print $2}' "$WORK/stats.txt")
+METRICS_REQS=$(awk '$1 == "counter" && $2 == "serve.requests" {print $3}' "$WORK/metrics.txt")
+if [ -z "$STATS_REQS" ] || [ -z "$METRICS_REQS" ] || [ "$METRICS_REQS" -lt "$STATS_REQS" ]; then
+  echo "FAIL: stats/metrics disagree on requests ($STATS_REQS vs $METRICS_REQS)" >&2
+  exit 1
+fi
+echo "    serve.request histogram live (count $REQ_COUNT), counters consistent"
+
 "$BIN" serve-ctl --addr "$ADDR" --shutdown
 await_exit
 grep -q "listening on" "$WORK/serve.log" || {
