@@ -204,12 +204,19 @@ COMMANDS:
   refactor    --input F --shape ZxYxX --store DIR --field NAME [--progressive [--planes P]]
               (--progressive writes the bitplane layout: sign/bitplane/residual
               components per level plus an error-bound manifest; see docs/FORMAT.md)
+              [--shard-size SIZE]  (with --progressive: pack the components into
+              MGSH shard objects of at most SIZE bytes — K/M/G suffixes — instead
+              of one components.bin; retrieval reads only the shard ranges the
+              tolerance needs, coalesced; see docs/FORMAT.md §MGSH)
   retrieve    --store DIR --field NAME --tolerance T --output F [--refine] [--state FILE]
               (bitplane layout: fetch the minimal component set certified for the
               absolute L∞ tolerance T; --refine extends the retrieval recorded in
               FILE — default <output>.fetchstate — fetching only the delta)
+              [--region ZxYxX --region-shape ZxYxX]  (write only the requested
+              sub-box; the pointwise certificate is preserved by the crop)
               --remote HOST:PORT --tolerance T --output F  (same, but from a running
-              `mgardp serve` daemon over TCP; the certificate is preserved end to end)
+              `mgardp serve` daemon over TCP; the certificate is preserved end to
+              end; with --region the daemon reconstructs and ships the crop only)
   serve       --store DIR --field NAME [--addr HOST:PORT] [--cache-bytes N]
               [--retries N] [--max-connections N] [--queue-depth N]
               [--request-timeout-ms M] [--mock-latency-ms M] [--fail-every N]
@@ -694,8 +701,12 @@ fn cmd_refactor(args: &Args) -> Result<()> {
     let data: Tensor<f32> = io::read_raw(Path::new(args.req("input")?), &shape)?;
     let store = RefactorStore::create(args.req("store")?)?;
     if args.opt("progressive").is_none() {
-        if args.opt("planes").is_some() {
-            return Err(Error::Config("--planes requires --progressive".into()));
+        for dependent in ["planes", "shard-size"] {
+            if args.opt(dependent).is_some() {
+                return Err(Error::Config(format!(
+                    "--{dependent} requires --progressive"
+                )));
+            }
         }
         let manifest = store.write_field(args.req("field")?, &data, 3)?;
         println!(
@@ -711,7 +722,14 @@ fn cmd_refactor(args: &Args) -> Result<()> {
         Some(_) => Some(args.usize_or("planes", 0)?),
         None => None,
     };
-    let manifest = store.write_field_progressive(args.req("field")?, &data, planes, 3)?;
+    let name = args.req("field")?;
+    let manifest = match args.opt("shard-size") {
+        Some(s) => {
+            let shard_bytes = parse_byte_size(s)? as u64;
+            store.write_field_progressive_sharded(name, &data, planes, 3, shard_bytes)?
+        }
+        None => store.write_field_progressive(name, &data, planes, 3)?,
+    };
     println!(
         "progressively refactored into {} streams × {} components \
          ({} bitplanes + sign + residual), {} stored bytes",
@@ -720,6 +738,10 @@ fn cmd_refactor(args: &Args) -> Result<()> {
         manifest.planes,
         manifest.total_bytes()
     );
+    if args.opt("shard-size").is_some() {
+        let sharded = crate::shard::ShardedComponents::open(store.storage(), name, &manifest)?;
+        println!("sharded layout: {} MGSH object(s)", sharded.nshards());
+    }
     Ok(())
 }
 
@@ -773,6 +795,27 @@ fn read_fetch_state(path: &Path, field: &str, nstreams: usize) -> Result<Vec<usi
     Ok(counts)
 }
 
+/// Resolve `--region ZxYxX --region-shape ZxYxX` into per-axis
+/// `(start, extent)` pairs (both flags or neither).
+fn region_from(args: &Args) -> Result<Option<Vec<(usize, usize)>>> {
+    match (args.opt("region"), args.opt("region-shape")) {
+        (Some(rs), Some(rss)) => {
+            let start = parse_shape(rs)?;
+            let extent = parse_shape(rss)?;
+            if start.len() != extent.len() {
+                return Err(Error::Config(
+                    "--region and --region-shape must have the same rank".into(),
+                ));
+            }
+            Ok(Some(start.into_iter().zip(extent).collect()))
+        }
+        (None, None) => Ok(None),
+        _ => Err(Error::Config(
+            "--region and --region-shape must be passed together".into(),
+        )),
+    }
+}
+
 fn cmd_retrieve(args: &Args) -> Result<()> {
     if let Some(addr) = args.opt("remote") {
         return cmd_retrieve_remote(args, addr);
@@ -809,7 +852,16 @@ fn cmd_retrieve(args: &Args) -> Result<()> {
     let replayed = reader.bytes_fetched();
     let plan = field.plan(tau, Some(&reader.fetched()))?;
     let new_bytes = field.refine(&mut reader, &plan)?;
-    let data = reader.reconstruct()?;
+    let full = reader.reconstruct()?;
+    // the certificate is a pointwise L∞ bound, so cropping to the
+    // requested region preserves it
+    let data = match region_from(args)? {
+        Some(pairs) => {
+            let (start, extent): (Vec<usize>, Vec<usize>) = pairs.into_iter().unzip();
+            full.block(&start, &extent)?
+        }
+        None => full,
+    };
     {
         let _s = crate::obs::span::enter(crate::obs::Hist::CliWriteOutput);
         io::write_raw(&output, &data)?;
@@ -849,6 +901,22 @@ fn cmd_retrieve_remote(args: &Args, addr: &str) -> Result<()> {
     let tau = args.f64_opt("tolerance")?.ok_or_else(|| {
         Error::Config("missing required flag --tolerance (absolute L∞ bound)".into())
     })?;
+    // --region uses the server-side retrieve op: the daemon plans,
+    // fetches and reconstructs, and only the cropped region plus the
+    // certified bound crosses the wire
+    if let Some(pairs) = region_from(args)? {
+        let mut client = crate::serve::ServeClient::connect(addr)?;
+        let (data, bound): (Tensor<f32>, f64) = client.retrieve(tau, Some(&pairs))?;
+        {
+            let _s = crate::obs::span::enter(crate::obs::Hist::CliWriteOutput);
+            io::write_raw(&output, &data)?;
+        }
+        println!(
+            "retrieved region {:?} from {addr} at τ {tau:.3e}, certified L∞ ≤ {bound:.3e}",
+            data.shape(),
+        );
+        return Ok(());
+    }
     let mut remote: crate::serve::RemoteField<f32> = crate::serve::RemoteField::open(addr)?;
     let (data, plan) = remote.refine(tau)?;
     {
@@ -1380,6 +1448,94 @@ mod tests {
                 "T2",
                 "--planes",
                 "8",
+            ]),
+        )
+        .is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn sharded_refactor_and_region_retrieve_cycle() {
+        let dir = std::env::temp_dir().join(format!("mgardp_cli_shard_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let raw = dir.join("in.f32");
+        let t = crate::data::synth::smooth_test_field(&[12, 13, 14]);
+        io::write_raw(&raw, &t).unwrap();
+        let store_dir = dir.join("store");
+        run(
+            "refactor",
+            &s(&[
+                "--input",
+                raw.to_str().unwrap(),
+                "--shape",
+                "12x13x14",
+                "--store",
+                store_dir.to_str().unwrap(),
+                "--field",
+                "T",
+                "--progressive",
+                "--shard-size",
+                "4K",
+            ]),
+        )
+        .unwrap();
+        // the sharded layout replaces components.bin with MGSH objects
+        assert!(!store_dir.join("T").join("components.bin").exists());
+        assert!(store_dir.join("T").join("shard_00000.mgsh").exists());
+        // region retrieval honours the bound on the crop
+        let out = dir.join("out.f32");
+        run(
+            "retrieve",
+            &s(&[
+                "--store",
+                store_dir.to_str().unwrap(),
+                "--field",
+                "T",
+                "--tolerance",
+                "0.05",
+                "--output",
+                out.to_str().unwrap(),
+                "--region",
+                "3x4x5",
+                "--region-shape",
+                "6x5x4",
+            ]),
+        )
+        .unwrap();
+        let back: Tensor<f32> = io::read_raw(&out, &[6, 5, 4]).unwrap();
+        let direct = t.block(&[3, 4, 5], &[6, 5, 4]).unwrap();
+        assert!(metrics::linf_error(direct.data(), back.data()) <= 0.05);
+        // --shard-size without --progressive is rejected
+        assert!(run(
+            "refactor",
+            &s(&[
+                "--input",
+                raw.to_str().unwrap(),
+                "--shape",
+                "12x13x14",
+                "--store",
+                store_dir.to_str().unwrap(),
+                "--field",
+                "T2",
+                "--shard-size",
+                "4K",
+            ]),
+        )
+        .is_err());
+        // --region without --region-shape is rejected
+        assert!(run(
+            "retrieve",
+            &s(&[
+                "--store",
+                store_dir.to_str().unwrap(),
+                "--field",
+                "T",
+                "--tolerance",
+                "0.05",
+                "--output",
+                out.to_str().unwrap(),
+                "--region",
+                "1x1x1",
             ]),
         )
         .is_err());

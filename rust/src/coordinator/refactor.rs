@@ -57,6 +57,10 @@ pub enum FieldLayout {
     /// Bitplane components with an error-bound manifest
     /// ([`RefactorStore::progressive`]).
     Progressive,
+    /// Bitplane components packed into `MGSH` shard objects instead of
+    /// one `components.bin` ([`RefactorStore::write_field_progressive_sharded`]);
+    /// opened through the same [`RefactorStore::progressive`] path.
+    ShardedProgressive,
 }
 
 /// Per-field manifest of the level layout: what's needed to interpret the
@@ -257,11 +261,17 @@ impl RefactorStore {
         format!("{field}/{name}")
     }
 
-    /// Which layout `field` was written with (reads the manifest magic).
+    /// Which layout `field` was written with (reads the manifest magic;
+    /// a progressive field without a `components.bin` blob is the
+    /// sharded variant).
     pub fn layout(&self, field: &str) -> Result<FieldLayout> {
         let bytes = self.storage.read(&Self::key(field, "manifest.bin"))?;
         if bytes.len() >= 4 && &bytes[..4] == progressive::manifest::PROGRESSIVE_MAGIC {
-            Ok(FieldLayout::Progressive)
+            if self.storage.exists(&Self::key(field, "components.bin"))? {
+                Ok(FieldLayout::Progressive)
+            } else {
+                Ok(FieldLayout::ShardedProgressive)
+            }
         } else {
             Ok(FieldLayout::Level)
         }
@@ -332,21 +342,64 @@ impl RefactorStore {
         Ok(manifest)
     }
 
-    /// Open a progressively refactored field for planning and retrieval.
+    /// [`Self::write_field_progressive`] with the sharded layout: the
+    /// per-component payloads (byte-identical to the blob layout's
+    /// `components.bin` pieces) are packed stream-major into `MGSH`
+    /// shard objects of at most `shard_bytes` payload bytes each
+    /// (`0` picks [`crate::shard::SHARD_DEFAULT_BYTES`]), plus the same
+    /// versioned manifest. Error-bounded retrieval then needs one
+    /// coalesced ranged read per run of adjacent planned components
+    /// instead of one read per component.
+    pub fn write_field_progressive_sharded<T: Scalar>(
+        &self,
+        field: &str,
+        data: &Tensor<T>,
+        planes: Option<usize>,
+        zstd_level: i32,
+        shard_bytes: u64,
+    ) -> Result<ProgressiveManifest> {
+        let planes = planes.unwrap_or_else(progressive::default_planes::<T>);
+        let (manifest, components) = progressive::refactor_streams(data, planes, zstd_level)?;
+        crate::shard::write_progressive_sharded(
+            &*self.storage,
+            field,
+            &manifest,
+            &components,
+            shard_bytes,
+        )?;
+        self.storage
+            .write(&Self::key(field, "manifest.bin"), &manifest.to_bytes())?;
+        Ok(manifest)
+    }
+
+    /// Open a progressively refactored field for planning and retrieval
+    /// (either component source: the `components.bin` blob, or the
+    /// sharded layout when no blob exists).
     pub fn progressive(&self, field: &str) -> Result<ProgressiveField> {
         let bytes = self.storage.read(&Self::key(field, "manifest.bin"))?;
         let manifest = ProgressiveManifest::from_bytes(&bytes)?;
         let components_key = Self::key(field, "components.bin");
-        let actual = self.storage.size(&components_key)?;
-        if actual != manifest.total_bytes() {
-            return Err(Error::corrupt(format!(
-                "components.bin has {actual} bytes; manifest says {}",
-                manifest.total_bytes()
-            )));
-        }
+        let source = if self.storage.exists(&components_key)? {
+            let actual = self.storage.size(&components_key)?;
+            if actual != manifest.total_bytes() {
+                return Err(Error::corrupt(format!(
+                    "components.bin has {actual} bytes; manifest says {}",
+                    manifest.total_bytes()
+                )));
+            }
+            ComponentSource::Blob {
+                key: components_key,
+            }
+        } else {
+            ComponentSource::Sharded(crate::shard::ShardedComponents::open(
+                Arc::clone(&self.storage),
+                field,
+                &manifest,
+            )?)
+        };
         Ok(ProgressiveField {
             storage: Arc::clone(&self.storage),
-            components_key,
+            source,
             manifest,
             retries: 0,
             retries_spent: AtomicU64::new(0),
@@ -436,14 +489,29 @@ impl RefactorStore {
     }
 }
 
+/// Where a progressive field's component bytes physically live.
+enum ComponentSource {
+    /// The historical single-blob layout: ranged reads of
+    /// `components.bin` at manifest-computed offsets.
+    Blob {
+        /// Object key of the component blob.
+        key: String,
+    },
+    /// The sharded layout: components packed into `MGSH` objects,
+    /// fetched with coalesced ranged reads.
+    Sharded(crate::shard::ShardedComponents),
+}
+
 /// One progressively refactored field: the parsed manifest plus the
-/// component blob it indexes. Components are fetched as ranged reads of
-/// the backing [`Storage`], so a remote serving path maps 1:1 onto ranged
-/// GETs; a retry budget ([`ProgressiveField::set_retry_budget`]) absorbs
+/// component bytes it indexes (a single blob or a shard run; the bytes
+/// of each component are identical either way). Components are fetched
+/// as ranged reads of the backing [`Storage`], so a remote serving path
+/// maps 1:1 onto ranged GETs; a retry budget
+/// ([`ProgressiveField::set_retry_budget`]) absorbs
 /// [transient](crate::error::Error::Transient) backend failures.
 pub struct ProgressiveField {
     storage: Arc<dyn Storage>,
-    components_key: String,
+    source: ComponentSource,
     manifest: ProgressiveManifest,
     retries: usize,
     retries_spent: AtomicU64,
@@ -491,13 +559,40 @@ impl ProgressiveField {
         id: ComponentId,
         deadline: Option<std::time::Instant>,
     ) -> Result<Vec<u8>> {
-        let (offset, len) = self.manifest.component_range(id.stream, id.comp)?;
         let mut spent = 0;
-        let r = crate::storage::with_retries_until(self.retries, deadline, &mut spent, || {
-            self.storage.read_range(&self.components_key, offset, len)
-        });
+        let r = match &self.source {
+            ComponentSource::Blob { key } => {
+                let (offset, len) = self.manifest.component_range(id.stream, id.comp)?;
+                crate::storage::with_retries_until(self.retries, deadline, &mut spent, || {
+                    self.storage.read_range(key, offset, len)
+                })
+            }
+            ComponentSource::Sharded(sc) => sc
+                .fetch_until(&[(id.stream, id.comp)], self.retries, deadline, &mut spent)
+                .map(|mut v| v.pop().expect("one pick yields one payload")),
+        };
         self.retries_spent.fetch_add(spent, Ordering::Relaxed);
         r
+    }
+
+    /// Whether the field's components live in the sharded layout.
+    pub fn is_sharded(&self) -> bool {
+        matches!(self.source, ComponentSource::Sharded(_))
+    }
+
+    /// A key naming the *physical* bytes behind component `id` — stable
+    /// across requests, distinct across components, and tied to the
+    /// layout (blob offsets for the blob layout, `(shard object,
+    /// inner range)` for the sharded one). The serve daemon keys its
+    /// single-flight component cache on this.
+    pub fn cache_key(&self, id: ComponentId) -> Result<String> {
+        match &self.source {
+            ComponentSource::Blob { key } => {
+                let (offset, len) = self.manifest.component_range(id.stream, id.comp)?;
+                Ok(format!("{key}@{offset}+{len}"))
+            }
+            ComponentSource::Sharded(sc) => sc.cache_key(id.stream, id.comp),
+        }
     }
 
     /// Start an empty incremental reader for this field.
@@ -506,15 +601,33 @@ impl ProgressiveField {
     }
 
     /// Fetch everything `plan` requires that `reader` does not already
-    /// hold, applying it in place. Returns the bytes transferred.
+    /// hold, applying it in place. Returns the bytes transferred. Over
+    /// the sharded layout the whole delta is fetched up front with
+    /// coalesced ranged reads (one read per run of payload-adjacent
+    /// components), then applied in plan order.
     pub fn refine<T: Scalar>(
         &self,
         reader: &mut ProgressiveReader<T>,
         plan: &FetchPlan,
     ) -> Result<u64> {
         let before = reader.bytes_fetched();
-        for id in plan.components_beyond(&reader.fetched()) {
-            reader.apply(id, &self.fetch_component(id)?)?;
+        let ids = plan.components_beyond(&reader.fetched());
+        match &self.source {
+            ComponentSource::Blob { .. } => {
+                for id in ids {
+                    reader.apply(id, &self.fetch_component(id)?)?;
+                }
+            }
+            ComponentSource::Sharded(sc) => {
+                let picks: Vec<(usize, usize)> =
+                    ids.iter().map(|id| (id.stream, id.comp)).collect();
+                let mut spent = 0;
+                let payloads = sc.fetch_until(&picks, self.retries, None, &mut spent)?;
+                self.retries_spent.fetch_add(spent, Ordering::Relaxed);
+                for (id, bytes) in ids.into_iter().zip(payloads) {
+                    reader.apply(id, &bytes)?;
+                }
+            }
         }
         Ok(reader.bytes_fetched() - before)
     }
@@ -722,6 +835,40 @@ mod tests {
         fs::write(&path, &blob).unwrap();
         assert!(store.progressive("f").is_err());
         fs::remove_dir_all(store.root().unwrap()).ok();
+    }
+
+    #[test]
+    fn sharded_progressive_layout_matches_blob_layout() {
+        use crate::storage::MemoryStorage;
+        let t = crate::data::synth::smooth_test_field(&[17, 18]);
+        let blob = RefactorStore::with_storage(Arc::new(MemoryStorage::new()));
+        blob.write_field_progressive("f", &t, None, 3).unwrap();
+        let sharded = RefactorStore::with_storage(Arc::new(MemoryStorage::new()));
+        sharded
+            .write_field_progressive_sharded("f", &t, None, 3, 4096)
+            .unwrap();
+        assert_eq!(blob.layout("f").unwrap(), FieldLayout::Progressive);
+        assert_eq!(
+            sharded.layout("f").unwrap(),
+            FieldLayout::ShardedProgressive
+        );
+        // same manifest bytes, either way
+        assert_eq!(
+            blob.storage().read("f/manifest.bin").unwrap(),
+            sharded.storage().read("f/manifest.bin").unwrap()
+        );
+        let a = blob.progressive("f").unwrap();
+        let b = sharded.progressive("f").unwrap();
+        assert!(!a.is_sharded() && b.is_sharded());
+        for tau in [0.1, 1e-3, f64::MIN_POSITIVE] {
+            let (xa, pa): (Tensor<f32>, _) = a.retrieve(tau).unwrap();
+            let (xb, pb): (Tensor<f32>, _) = b.retrieve(tau).unwrap();
+            assert_eq!(pa, pb, "tau {tau}: plans diverge");
+            assert_eq!(xa.data(), xb.data(), "tau {tau}: outputs diverge");
+        }
+        // cache keys name physical ranges and differ between layouts
+        let id = ComponentId { stream: 0, comp: 0 };
+        assert_ne!(a.cache_key(id).unwrap(), b.cache_key(id).unwrap());
     }
 
     #[test]

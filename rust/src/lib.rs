@@ -37,6 +37,7 @@ pub mod progressive;
 pub mod quant;
 pub mod runtime;
 pub mod serve;
+pub mod shard;
 pub mod storage;
 pub mod stream;
 pub mod tensor;

@@ -70,13 +70,13 @@ impl ServeClient {
         })?;
         let mut r = WireReader::new(&body);
         let bound = r.f64()?;
-        let rank = r.u64()? as usize;
+        let rank = r.usize()?;
         if rank == 0 || rank > 8 {
             return Err(Error::corrupt(format!("implausible response rank {rank}")));
         }
         let mut shape = Vec::with_capacity(rank);
         for _ in 0..rank {
-            shape.push(r.u64()? as usize);
+            shape.push(r.usize()?);
         }
         let t = Tensor::from_le_bytes(&shape, r.rest())?;
         Ok((t, bound))

@@ -140,6 +140,17 @@ impl<'a> WireReader<'a> {
         Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
     }
 
+    /// Next little-endian `u64`, checked into `usize`: a declared value
+    /// the host cannot address (possible on 32-bit targets, where a
+    /// plain `as usize` cast would silently truncate to a *small*,
+    /// plausible-looking index) is refused as a structured frame error
+    /// instead.
+    pub fn usize(&mut self) -> Result<usize> {
+        let v = self.u64()?;
+        usize::try_from(v)
+            .map_err(|_| Error::corrupt(format!("declared value {v} exceeds the address space")))
+    }
+
     /// Next little-endian `f64`.
     pub fn f64(&mut self) -> Result<f64> {
         Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
@@ -273,13 +284,13 @@ impl Request {
             SERVE_OP_MANIFEST => Request::Manifest,
             SERVE_OP_PLAN => {
                 let tau = r.f64()?;
-                let n = r.u64()? as usize;
+                let n = r.usize()?;
                 if n > 64 {
                     return Err(Error::corrupt(format!("implausible floor length {n}")));
                 }
                 let mut floor = Vec::with_capacity(n);
                 for _ in 0..n {
-                    floor.push(r.u64()? as usize);
+                    floor.push(r.usize()?);
                 }
                 Request::Plan {
                     tau,
@@ -287,18 +298,18 @@ impl Request {
                 }
             }
             SERVE_OP_FETCH => Request::Fetch {
-                stream: r.u64()? as usize,
-                comp: r.u64()? as usize,
+                stream: r.usize()?,
+                comp: r.usize()?,
             },
             SERVE_OP_RETRIEVE => {
                 let tau = r.f64()?;
-                let rank = r.u64()? as usize;
+                let rank = r.usize()?;
                 if rank > 8 {
                     return Err(Error::corrupt(format!("implausible region rank {rank}")));
                 }
                 let mut region = Vec::with_capacity(rank);
                 for _ in 0..rank {
-                    region.push((r.u64()? as usize, r.u64()? as usize));
+                    region.push((r.usize()?, r.usize()?));
                 }
                 Request::Retrieve {
                     tau,
@@ -449,13 +460,13 @@ pub fn encode_plan(plan: &crate::progressive::FetchPlan) -> Vec<u8> {
 /// Parse a [`FetchPlan`] from the wire.
 pub fn decode_plan(bytes: &[u8]) -> Result<crate::progressive::FetchPlan> {
     let mut r = WireReader::new(bytes);
-    let n = r.u64()? as usize;
+    let n = r.usize()?;
     if n > 64 {
         return Err(Error::corrupt(format!("implausible stream count {n}")));
     }
     let mut per_stream = Vec::with_capacity(n);
     for _ in 0..n {
-        per_stream.push(r.u64()? as usize);
+        per_stream.push(r.usize()?);
     }
     let plan = crate::progressive::FetchPlan {
         tau: r.f64()?,

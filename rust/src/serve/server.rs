@@ -102,9 +102,12 @@ struct Shared {
 impl Shared {
     /// One component through the shared cache (single-flight backend
     /// fetch on a miss, with the field's retry budget bounded by the
-    /// request deadline).
+    /// request deadline). Cache keys name the component's *physical*
+    /// bytes — blob offsets, or `(shard object, inner range)` for
+    /// sharded fields — so single-flight semantics hold per stored
+    /// range regardless of layout.
     fn fetch_cached(&self, id: ComponentId, deadline: Option<Instant>) -> Result<Arc<Vec<u8>>> {
-        let key = format!("{}/{}", id.stream, id.comp);
+        let key = self.field.cache_key(id)?;
         self.cache
             .get_or_fetch(&key, || self.field.fetch_component_until(id, deadline))
     }

@@ -1,0 +1,289 @@
+//! Partial decode of shard objects: minimal coalesced ranged reads.
+//!
+//! [`ShardPartialDecoder`] opens a shard with exactly three storage
+//! operations — `size`, the fixed footer tail, the inner index — and
+//! then answers arbitrary subsets of inner entries by coalescing their
+//! payload ranges into maximal runs, one
+//! [`crate::storage::Storage::read_range`] per run. Selection logic
+//! (which blocks intersect a region, which components a tolerance plan
+//! needs) lives with the caller; this type only guarantees that the
+//! bytes come back validated, complete, and in as few round trips as
+//! the layout permits.
+
+use super::{
+    coalesce_ranges, read_footer, read_index, BlockRef, ComponentRef, ShardIndex,
+    SHARD_FOOTER_BYTES,
+};
+use crate::error::{Error, Result};
+use crate::storage::{validate_key, with_retries_until, Storage};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// A shard opened for partial decode: the parsed inner index plus the
+/// storage handle needed to fetch payload ranges on demand.
+pub struct ShardPartialDecoder {
+    storage: Arc<dyn Storage>,
+    key: String,
+    index: ShardIndex,
+    payload_len: u64,
+}
+
+impl ShardPartialDecoder {
+    /// Open the shard at `key`: resolve its size, fetch and validate
+    /// the trailing footer, then fetch and validate the inner index.
+    /// No payload bytes are read.
+    pub fn open(storage: Arc<dyn Storage>, key: &str) -> Result<ShardPartialDecoder> {
+        validate_key(key)?;
+        let size = storage.size(key)?;
+        let flen = SHARD_FOOTER_BYTES as u64;
+        if size < flen {
+            return Err(Error::corrupt(format!(
+                "shard object `{key}`: {size} bytes, smaller than the {flen}-byte footer"
+            )));
+        }
+        let tail = storage.read_range(key, size - flen, flen)?;
+        let footer = read_footer(&tail, size)?;
+        let index_bytes = storage.read_range(key, footer.index_off, footer.index_len)?;
+        let index = read_index(&index_bytes, footer.index_off)?;
+        Ok(ShardPartialDecoder {
+            storage,
+            key: key.to_string(),
+            index,
+            payload_len: footer.index_off,
+        })
+    }
+
+    /// The storage key this decoder reads from.
+    pub fn key(&self) -> &str {
+        &self.key
+    }
+
+    /// The validated inner index.
+    pub fn index(&self) -> &ShardIndex {
+        &self.index
+    }
+
+    /// Payload length in bytes (every inner range lies inside it).
+    pub fn payload_len(&self) -> u64 {
+        self.payload_len
+    }
+
+    /// The components-kind entries, or an error for a blocks shard.
+    pub fn components(&self) -> Result<&[ComponentRef]> {
+        match &self.index {
+            ShardIndex::Components { entries } => Ok(entries),
+            ShardIndex::Blocks { .. } => Err(Error::invalid(format!(
+                "shard `{}` holds blocks, not progressive components",
+                self.key
+            ))),
+        }
+    }
+
+    /// The blocks-kind entries, or an error for a components shard.
+    pub fn blocks(&self) -> Result<&[BlockRef]> {
+        match &self.index {
+            ShardIndex::Blocks { entries, .. } => Ok(entries),
+            ShardIndex::Components { .. } => Err(Error::invalid(format!(
+                "shard `{}` holds progressive components, not blocks",
+                self.key
+            ))),
+        }
+    }
+
+    /// The blocks whose extents intersect the half-open region box
+    /// `[start, start + shape)`, in payload order.
+    pub fn blocks_intersecting(&self, start: &[usize], shape: &[usize]) -> Result<Vec<&BlockRef>> {
+        let entries = self.blocks()?;
+        let ndim = match &self.index {
+            ShardIndex::Blocks { ndim, .. } => *ndim,
+            ShardIndex::Components { .. } => unreachable!(),
+        };
+        if start.len() != ndim || shape.len() != ndim {
+            return Err(Error::shape(format!(
+                "rank-{} region query against a rank-{ndim} shard",
+                start.len()
+            )));
+        }
+        Ok(entries
+            .iter()
+            .filter(|b| {
+                (0..ndim).all(|d| {
+                    b.start[d] < start[d] + shape[d] && start[d] < b.start[d] + b.shape[d]
+                })
+            })
+            .collect())
+    }
+
+    /// Fetch the payload ranges `picks` (each an `(offset, len)` of an
+    /// inner entry), coalescing ranges whose gap is at most `max_gap`
+    /// bytes into single ranged reads. Returns one byte vector per
+    /// pick, in input order. Every pick is validated against the shard
+    /// payload extent *before* any read is issued; transient storage
+    /// failures are retried up to `retries` times per run under
+    /// `deadline`, adding spent retries to `*spent`.
+    pub fn read_ranges_until(
+        &self,
+        picks: &[(u64, u64)],
+        max_gap: u64,
+        retries: usize,
+        deadline: Option<Instant>,
+        spent: &mut u64,
+    ) -> Result<Vec<Vec<u8>>> {
+        for &(offset, len) in picks {
+            let end = offset
+                .checked_add(len)
+                .ok_or_else(|| Error::corrupt("shard range overflow"))?;
+            if end > self.payload_len {
+                return Err(Error::corrupt(format!(
+                    "shard `{}`: range [{offset}, {end}) outside the {}-byte payload",
+                    self.key, self.payload_len
+                )));
+            }
+        }
+        let runs = coalesce_ranges(picks.to_vec(), max_gap);
+        let mut data = Vec::with_capacity(runs.len());
+        for &(offset, len) in &runs {
+            data.push(with_retries_until(retries, deadline, spent, || {
+                self.storage.read_range(&self.key, offset, len)
+            })?);
+        }
+        // slice each pick back out of the run that covers it
+        picks
+            .iter()
+            .map(|&(offset, len)| {
+                let i = match runs.binary_search_by(|r| r.0.cmp(&offset)) {
+                    Ok(i) => i,
+                    Err(0) => {
+                        return Err(Error::corrupt("shard range not covered by any run"))
+                    }
+                    Err(i) => i - 1,
+                };
+                let (run_off, run_len) = runs[i];
+                debug_assert!(offset >= run_off && offset + len <= run_off + run_len);
+                let lo = (offset - run_off) as usize;
+                Ok(data[i][lo..lo + len as usize].to_vec())
+            })
+            .collect()
+    }
+
+    /// Convenience wrapper of [`Self::read_ranges_until`] without retry
+    /// or deadline plumbing.
+    pub fn read_ranges(&self, picks: &[(u64, u64)], max_gap: u64) -> Result<Vec<Vec<u8>>> {
+        let mut spent = 0;
+        self.read_ranges_until(picks, max_gap, 0, None, &mut spent)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::ShardWriter;
+    use super::*;
+    use crate::storage::{MemoryStorage, MockStorage};
+    use std::time::Duration;
+
+    fn store_with_shard() -> (Arc<MemoryStorage>, Vec<Vec<u8>>) {
+        let mem = Arc::new(MemoryStorage::new());
+        let blobs: Vec<Vec<u8>> = (0..6u8).map(|i| vec![i; (i as usize + 1) * 3]).collect();
+        let mut w = ShardWriter::components();
+        for (i, b) in blobs.iter().enumerate() {
+            w.push_component(i / 3, i % 3, 1.0 / (i + 1) as f64, b).unwrap();
+        }
+        mem.write("f/shard_00000.mgsh", &w.finish().unwrap()).unwrap();
+        (mem, blobs)
+    }
+
+    #[test]
+    fn open_issues_three_storage_ops_and_no_payload_reads() {
+        let (mem, blobs) = store_with_shard();
+        let mock = Arc::new(MockStorage::new(mem, Duration::ZERO, 0));
+        let d =
+            ShardPartialDecoder::open(Arc::clone(&mock) as Arc<dyn Storage>, "f/shard_00000.mgsh")
+                .unwrap();
+        assert_eq!(mock.ops(), 3, "size + footer + index");
+        assert_eq!(d.index().len(), blobs.len());
+        assert_eq!(d.payload_len(), blobs.iter().map(|b| b.len() as u64).sum::<u64>());
+    }
+
+    #[test]
+    fn adjacent_picks_coalesce_into_one_read() {
+        let (mem, blobs) = store_with_shard();
+        let mock = Arc::new(MockStorage::new(mem, Duration::ZERO, 0));
+        let d =
+            ShardPartialDecoder::open(Arc::clone(&mock) as Arc<dyn Storage>, "f/shard_00000.mgsh")
+                .unwrap();
+        let picks: Vec<(u64, u64)> = (0..3).map(|i| d.index().range(i)).collect();
+        let before = mock.ops();
+        let got = d.read_ranges(&picks, 0).unwrap();
+        assert_eq!(mock.ops() - before, 1, "three adjacent entries, one read");
+        for (g, want) in got.iter().zip(&blobs) {
+            assert_eq!(g, want);
+        }
+    }
+
+    #[test]
+    fn disjoint_picks_fetch_one_run_each_in_input_order() {
+        let (mem, blobs) = store_with_shard();
+        let mock = Arc::new(MockStorage::new(mem, Duration::ZERO, 0));
+        let d =
+            ShardPartialDecoder::open(Arc::clone(&mock) as Arc<dyn Storage>, "f/shard_00000.mgsh")
+                .unwrap();
+        // entries 4 and 1, deliberately out of payload order
+        let picks = vec![d.index().range(4), d.index().range(1)];
+        let before = mock.ops();
+        let got = d.read_ranges(&picks, 0).unwrap();
+        assert_eq!(mock.ops() - before, 2);
+        assert_eq!(got[0], blobs[4]);
+        assert_eq!(got[1], blobs[1]);
+    }
+
+    #[test]
+    fn out_of_extent_pick_refused_before_any_read() {
+        let (mem, _) = store_with_shard();
+        let mock = Arc::new(MockStorage::new(mem, Duration::ZERO, 0));
+        let d =
+            ShardPartialDecoder::open(Arc::clone(&mock) as Arc<dyn Storage>, "f/shard_00000.mgsh")
+                .unwrap();
+        let before = mock.ops();
+        assert!(d.read_ranges(&[(0, d.payload_len() + 1)], 0).is_err());
+        assert!(d.read_ranges(&[(u64::MAX, 2)], 0).is_err());
+        assert_eq!(mock.ops(), before, "validation must precede reads");
+    }
+
+    #[test]
+    fn transient_failures_retried_within_budget() {
+        let (mem, blobs) = store_with_shard();
+        // every 2nd read op fails; open alone needs 3 ops
+        let mock = Arc::new(MockStorage::new(mem, Duration::ZERO, 2));
+        let storage = Arc::clone(&mock) as Arc<dyn Storage>;
+        let d = loop {
+            if let Ok(d) = ShardPartialDecoder::open(Arc::clone(&storage), "f/shard_00000.mgsh") {
+                break d;
+            }
+        };
+        let mut spent = 0;
+        let got = d
+            .read_ranges_until(&[d.index().range(0)], 0, 4, None, &mut spent)
+            .unwrap();
+        assert_eq!(got[0], blobs[0]);
+    }
+
+    #[test]
+    fn region_intersection_selects_only_touching_blocks() {
+        let mem = Arc::new(MemoryStorage::new());
+        let mut w = ShardWriter::blocks(2);
+        w.push_block(0, &[0, 0], &[4, 4], 0.5, &[1]).unwrap();
+        w.push_block(1, &[0, 4], &[4, 4], 0.5, &[2]).unwrap();
+        w.push_block(2, &[4, 0], &[4, 4], 0.5, &[3]).unwrap();
+        w.push_block(3, &[4, 4], &[4, 4], 0.5, &[4]).unwrap();
+        mem.write("s", &w.finish().unwrap()).unwrap();
+        let d = ShardPartialDecoder::open(mem as Arc<dyn Storage>, "s").unwrap();
+        let hit = d.blocks_intersecting(&[1, 1], &[2, 2]).unwrap();
+        assert_eq!(hit.len(), 1);
+        assert_eq!(hit[0].block_id, 0);
+        let hit = d.blocks_intersecting(&[3, 3], &[2, 2]).unwrap();
+        assert_eq!(hit.iter().map(|b| b.block_id).collect::<Vec<_>>(), vec![0, 1, 2, 3]);
+        // rank mismatch is a shape error, components() a kind error
+        assert!(d.blocks_intersecting(&[0], &[2]).is_err());
+        assert!(d.components().is_err());
+    }
+}

@@ -1,0 +1,794 @@
+//! The versioned `MGSH` shard object: many inner blobs in one storage
+//! object, addressable by ranged reads.
+//!
+//! Adaptive tiling can emit thousands of small blocks and progressive
+//! refactoring multiplies each field by its sign/bitplane/residual
+//! components; stored one object per blob, a campaign-scale archive
+//! becomes millions of tiny objects and every retrieval pays one ranged
+//! read per piece. A shard packs many of those pieces into a single
+//! object with a *trailing* inner index, so a reader can resolve any
+//! (region, tolerance) query to a handful of inner ranges and coalesce
+//! adjacent ones into single [`crate::storage::Storage::read_range`]
+//! calls — the zarrs sharding layout, specialized to this crate's two
+//! payload kinds.
+//!
+//! The normative byte-level specification lives in `docs/FORMAT.md`;
+//! this module is its single implementation. Layout:
+//!
+//! ```text
+//! bytes                      payload: the inner blobs, concatenated in
+//!                            index order with no padding (entry 0 at
+//!                            offset 0, each entry at the previous
+//!                            entry's end)
+//! -- inner index --
+//! u8                         index kind (1 = blocks, 2 = components)
+//! -- kind 1 (blocks) --
+//! varint                     ndim (1..=8)
+//! varint                     number of entries N (>= 1)
+//! N × {
+//!   varint block_id            block index in the owning chunk index
+//!   varint offset              byte offset of the blob in the payload
+//!   varint len                 blob length in bytes
+//!   varint × ndim start        block origin in the field
+//!   varint × ndim shape        block extent (every entry >= 2)
+//!   f64    tau_abs             absolute L∞ tolerance of the blob
+//! }
+//! -- kind 2 (components) --
+//! varint                     number of entries N (>= 1)
+//! N × {
+//!   varint stream              owning bitplane stream
+//!   varint comp                component index within the stream
+//!   varint offset              byte offset of the bytes in the payload
+//!   varint len                 length in bytes
+//!   f64    err_after           certified L∞ bound once applied
+//! }
+//! -- footer (fixed 21 bytes, always the object tail) --
+//! u64 LE                     index_off: payload length = index offset
+//! u64 LE                     index_len: inner index length in bytes
+//! u8                         shard format version (1)
+//! 4 bytes                    magic "MGSH" (4d 47 53 48)
+//! ```
+//!
+//! The footer sits at the *end* so writers spool payload bytes straight
+//! to the object (`ContainerWriter` style) and append the index last;
+//! readers fetch `size`, then the 21-byte tail, then the index — three
+//! small reads regardless of how many blobs the shard holds.
+//!
+//! Validation is structural: entries must tile the payload contiguously
+//! from offset 0 (each entry starts where the previous ended, the last
+//! ends exactly at `index_off`), so overlapping, out-of-range or gapped
+//! inner ranges are refused at parse time — before any payload read is
+//! issued.
+
+pub mod decoder;
+pub mod store;
+
+pub use decoder::ShardPartialDecoder;
+pub use store::{
+    shard_container, write_progressive_sharded, ShardedChunkStore, ShardedComponents,
+};
+
+use crate::encode::varint::{write_f64, write_u64, ByteReader};
+use crate::error::{Error, Result};
+
+/// Magic trailer identifying a shard object (`"MGSH"`).
+pub const SHARD_MAGIC: &[u8; 4] = b"MGSH";
+
+/// Shard format version this build reads and writes.
+pub const SHARD_VERSION: u8 = 1;
+
+/// Inner-index kind: per-block blobs of a chunked container.
+pub const SHARD_KIND_BLOCKS: u8 = 1;
+
+/// Inner-index kind: per-component byte ranges of a progressive layout.
+pub const SHARD_KIND_COMPONENTS: u8 = 2;
+
+/// Fixed byte length of the trailing footer (index_off + index_len +
+/// version + magic).
+pub const SHARD_FOOTER_BYTES: u8 = 21;
+
+/// Default target shard payload size for writers (4 MiB): large enough
+/// to amortize per-object overhead, small enough that a shard is a
+/// reasonable retry/caching unit.
+pub const SHARD_DEFAULT_BYTES: u64 = 4 << 20;
+
+/// Upper bound on the field rank a blocks-kind shard may declare,
+/// matching the rank cap of the serve protocol's region requests.
+pub const SHARD_MAX_NDIM: usize = 8;
+
+/// One blocks-kind inner-index entry: a per-block blob plus enough
+/// spatial + error metadata to answer region × tolerance queries from
+/// the index alone.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BlockRef {
+    /// Index of the block in the owning container's chunk index.
+    pub block_id: usize,
+    /// Byte offset of the blob inside the shard payload.
+    pub offset: u64,
+    /// Blob length in bytes.
+    pub len: u64,
+    /// Block origin in the field.
+    pub start: Vec<usize>,
+    /// Block extent (every entry >= 2).
+    pub shape: Vec<usize>,
+    /// Absolute L∞ tolerance the blob was encoded at.
+    pub tau_abs: f64,
+}
+
+/// One components-kind inner-index entry: a progressive component's
+/// byte range plus its position in the error schedule.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ComponentRef {
+    /// Owning bitplane stream.
+    pub stream: usize,
+    /// Component index within the stream.
+    pub comp: usize,
+    /// Byte offset inside the shard payload.
+    pub offset: u64,
+    /// Length in bytes.
+    pub len: u64,
+    /// Certified L∞ bound once this component is applied (the error
+    /// schedule entry `err_after[comp + 1]` of the owning stream).
+    pub err_after: f64,
+}
+
+/// Parsed inner index of a shard object.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ShardIndex {
+    /// Per-block blobs of a chunked container.
+    Blocks {
+        /// Field rank every entry's start/shape is expressed in.
+        ndim: usize,
+        /// Entries in payload order.
+        entries: Vec<BlockRef>,
+    },
+    /// Per-component ranges of a progressive layout.
+    Components {
+        /// Entries in payload order.
+        entries: Vec<ComponentRef>,
+    },
+}
+
+impl ShardIndex {
+    /// Number of inner entries.
+    pub fn len(&self) -> usize {
+        match self {
+            ShardIndex::Blocks { entries, .. } => entries.len(),
+            ShardIndex::Components { entries } => entries.len(),
+        }
+    }
+
+    /// Whether the index holds no entries (never true for a valid
+    /// shard; provided for clippy's `len_without_is_empty`).
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// The `(offset, len)` payload range of entry `i`.
+    pub fn range(&self, i: usize) -> (u64, u64) {
+        match self {
+            ShardIndex::Blocks { entries, .. } => (entries[i].offset, entries[i].len),
+            ShardIndex::Components { entries } => (entries[i].offset, entries[i].len),
+        }
+    }
+
+    fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        match self {
+            ShardIndex::Blocks { ndim, entries } => {
+                out.push(SHARD_KIND_BLOCKS);
+                write_u64(&mut out, *ndim as u64);
+                write_u64(&mut out, entries.len() as u64);
+                for e in entries {
+                    write_u64(&mut out, e.block_id as u64);
+                    write_u64(&mut out, e.offset);
+                    write_u64(&mut out, e.len);
+                    for &s in &e.start {
+                        write_u64(&mut out, s as u64);
+                    }
+                    for &s in &e.shape {
+                        write_u64(&mut out, s as u64);
+                    }
+                    write_f64(&mut out, e.tau_abs);
+                }
+            }
+            ShardIndex::Components { entries } => {
+                out.push(SHARD_KIND_COMPONENTS);
+                write_u64(&mut out, entries.len() as u64);
+                for e in entries {
+                    write_u64(&mut out, e.stream as u64);
+                    write_u64(&mut out, e.comp as u64);
+                    write_u64(&mut out, e.offset);
+                    write_u64(&mut out, e.len);
+                    write_f64(&mut out, e.err_after);
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Decoded trailing footer of a shard object.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ShardFooter {
+    /// Payload length == byte offset where the inner index starts.
+    pub index_off: u64,
+    /// Inner index length in bytes.
+    pub index_len: u64,
+}
+
+/// Parse and validate the fixed-size footer from the last
+/// [`SHARD_FOOTER_BYTES`] bytes of an object of `object_size` total
+/// bytes. Checks magic, version, and that payload + index + footer
+/// exactly account for the object size.
+pub fn read_footer(tail: &[u8], object_size: u64) -> Result<ShardFooter> {
+    let flen = SHARD_FOOTER_BYTES as usize;
+    if tail.len() != flen {
+        return Err(Error::corrupt(format!(
+            "shard footer: want {flen} bytes, have {}",
+            tail.len()
+        )));
+    }
+    if &tail[flen - 4..] != SHARD_MAGIC {
+        return Err(Error::UnsupportedFormat(format!(
+            "not a shard object: trailing magic {:02x?}, want {:02x?}",
+            &tail[flen - 4..],
+            SHARD_MAGIC
+        )));
+    }
+    let version = tail[flen - 5];
+    if version != SHARD_VERSION {
+        return Err(Error::UnsupportedFormat(format!(
+            "shard version {version}, expected {SHARD_VERSION}"
+        )));
+    }
+    let index_off = u64::from_le_bytes(tail[0..8].try_into().unwrap());
+    let index_len = u64::from_le_bytes(tail[8..16].try_into().unwrap());
+    let accounted = index_off
+        .checked_add(index_len)
+        .and_then(|v| v.checked_add(flen as u64));
+    if accounted != Some(object_size) {
+        return Err(Error::corrupt(format!(
+            "shard footer: payload {index_off} + index {index_len} + footer {flen} \
+             != object size {object_size}"
+        )));
+    }
+    Ok(ShardFooter {
+        index_off,
+        index_len,
+    })
+}
+
+/// Parse and validate an inner index section against the payload it
+/// describes. `payload_len` is the shard's payload length (the footer's
+/// `index_off`).
+///
+/// Structural rules (each refused with a structured
+/// [`Error::CorruptStream`] / [`Error::UnsupportedFormat`], never a
+/// panic):
+///
+/// 1. the kind byte is known;
+/// 2. at least one entry; the declared count is plausible for the
+///    index size (pre-allocation stays proportional to the input);
+/// 3. entries tile the payload **contiguously from offset 0**: entry 0
+///    at offset 0, every entry starting exactly where the previous
+///    ended, the last ending exactly at `payload_len` — overlaps, gaps
+///    and out-of-extent ranges are all structurally impossible in an
+///    index that passes;
+/// 4. blocks kind: `1 <= ndim <=` [`SHARD_MAX_NDIM`], every extent
+///    >= 2, `tau_abs` finite and > 0;
+/// 5. components kind: `err_after` finite and >= 0;
+/// 6. no trailing bytes after the last entry.
+pub fn read_index(index: &[u8], payload_len: u64) -> Result<ShardIndex> {
+    let mut r = ByteReader::new(index);
+    let kind = r.u8()?;
+    let parsed = match kind {
+        SHARD_KIND_BLOCKS => {
+            let ndim = r.usize()?;
+            if ndim == 0 || ndim > SHARD_MAX_NDIM {
+                return Err(Error::corrupt(format!(
+                    "shard index: ndim {ndim} outside 1..={SHARD_MAX_NDIM}"
+                )));
+            }
+            let n = r.usize()?;
+            // block_id + offset + len + ndim starts + ndim shapes, one
+            // byte each at minimum, plus the 8-byte tau
+            let min_entry = 3 + 2 * ndim + 8;
+            if n == 0 || n > r.remaining() / min_entry {
+                return Err(Error::corrupt(format!(
+                    "shard index: implausible entry count {n}"
+                )));
+            }
+            let mut entries = Vec::with_capacity(n);
+            for _ in 0..n {
+                let block_id = r.usize()?;
+                let offset = r.u64()?;
+                let len = r.u64()?;
+                let mut start = Vec::with_capacity(ndim);
+                for _ in 0..ndim {
+                    start.push(r.usize()?);
+                }
+                let mut shape = Vec::with_capacity(ndim);
+                for d in 0..ndim {
+                    let s = r.usize()?;
+                    if s < 2 {
+                        return Err(Error::corrupt(format!(
+                            "shard index: block extent {s} < 2 in dim {d}"
+                        )));
+                    }
+                    shape.push(s);
+                }
+                let tau_abs = r.f64()?;
+                if !tau_abs.is_finite() || tau_abs <= 0.0 {
+                    return Err(Error::corrupt(format!(
+                        "shard index: implausible block tolerance {tau_abs}"
+                    )));
+                }
+                entries.push(BlockRef {
+                    block_id,
+                    offset,
+                    len,
+                    start,
+                    shape,
+                    tau_abs,
+                });
+            }
+            ShardIndex::Blocks { ndim, entries }
+        }
+        SHARD_KIND_COMPONENTS => {
+            let n = r.usize()?;
+            // stream + comp + offset + len varints plus the 8-byte bound
+            let min_entry = 4 + 8;
+            if n == 0 || n > r.remaining() / min_entry {
+                return Err(Error::corrupt(format!(
+                    "shard index: implausible entry count {n}"
+                )));
+            }
+            let mut entries = Vec::with_capacity(n);
+            for _ in 0..n {
+                let stream = r.usize()?;
+                let comp = r.usize()?;
+                let offset = r.u64()?;
+                let len = r.u64()?;
+                let err_after = r.f64()?;
+                if !err_after.is_finite() || err_after < 0.0 {
+                    return Err(Error::corrupt(format!(
+                        "shard index: implausible error bound {err_after}"
+                    )));
+                }
+                entries.push(ComponentRef {
+                    stream,
+                    comp,
+                    offset,
+                    len,
+                    err_after,
+                });
+            }
+            ShardIndex::Components { entries }
+        }
+        other => {
+            return Err(Error::UnsupportedFormat(format!(
+                "shard index kind {other}, expected {SHARD_KIND_BLOCKS} (blocks) \
+                 or {SHARD_KIND_COMPONENTS} (components)"
+            )))
+        }
+    };
+    if r.remaining() != 0 {
+        return Err(Error::corrupt(format!(
+            "shard index: {} trailing bytes after the last entry",
+            r.remaining()
+        )));
+    }
+    // contiguity: entries tile [0, payload_len) exactly, in order —
+    // this single pass refuses overlap, gap, and out-of-extent ranges
+    let mut expect = 0u64;
+    for i in 0..parsed.len() {
+        let (offset, len) = parsed.range(i);
+        if offset != expect {
+            return Err(Error::corrupt(format!(
+                "shard index: entry {i} at offset {offset}, expected {expect} \
+                 (entries must tile the payload contiguously)"
+            )));
+        }
+        expect = offset
+            .checked_add(len)
+            .ok_or_else(|| Error::corrupt("shard index: entry range overflow"))?;
+    }
+    if expect != payload_len {
+        return Err(Error::corrupt(format!(
+            "shard index: entries cover {expect} bytes, payload holds {payload_len}"
+        )));
+    }
+    Ok(parsed)
+}
+
+/// Parse a complete in-memory shard object (footer, index, contiguity
+/// validation). Returns the index and the payload slice.
+pub fn read_shard(bytes: &[u8]) -> Result<(ShardIndex, &[u8])> {
+    let flen = SHARD_FOOTER_BYTES as usize;
+    if bytes.len() < flen {
+        return Err(Error::corrupt(format!(
+            "shard object: {} bytes, smaller than the {flen}-byte footer",
+            bytes.len()
+        )));
+    }
+    let footer = read_footer(&bytes[bytes.len() - flen..], bytes.len() as u64)?;
+    let payload_end = footer.index_off as usize;
+    let index_end = payload_end + footer.index_len as usize;
+    let index = read_index(&bytes[payload_end..index_end], footer.index_off)?;
+    Ok((index, &bytes[..payload_end]))
+}
+
+/// Incremental shard writer: blobs are appended to a spooled payload
+/// (the `ContainerWriter` pattern — payload first, metadata at the
+/// end), and [`ShardWriter::finish`] seals the object by appending the
+/// inner index and footer.
+pub struct ShardWriter {
+    payload: Vec<u8>,
+    index: ShardIndex,
+}
+
+impl ShardWriter {
+    /// Start a blocks-kind shard for a rank-`ndim` field.
+    pub fn blocks(ndim: usize) -> Self {
+        ShardWriter {
+            payload: Vec::new(),
+            index: ShardIndex::Blocks {
+                ndim,
+                entries: Vec::new(),
+            },
+        }
+    }
+
+    /// Start a components-kind shard.
+    pub fn components() -> Self {
+        ShardWriter {
+            payload: Vec::new(),
+            index: ShardIndex::Components {
+                entries: Vec::new(),
+            },
+        }
+    }
+
+    /// Payload bytes spooled so far.
+    pub fn payload_len(&self) -> u64 {
+        self.payload.len() as u64
+    }
+
+    /// Number of blobs appended so far.
+    pub fn entries(&self) -> usize {
+        self.index.len()
+    }
+
+    /// Append one per-block blob (blocks-kind shards only).
+    pub fn push_block(
+        &mut self,
+        block_id: usize,
+        start: &[usize],
+        shape: &[usize],
+        tau_abs: f64,
+        blob: &[u8],
+    ) -> Result<()> {
+        match &mut self.index {
+            ShardIndex::Blocks { ndim, entries } => {
+                if start.len() != *ndim || shape.len() != *ndim {
+                    return Err(Error::shape(format!(
+                        "shard writer: rank-{} block in a rank-{ndim} shard",
+                        start.len()
+                    )));
+                }
+                entries.push(BlockRef {
+                    block_id,
+                    offset: self.payload.len() as u64,
+                    len: blob.len() as u64,
+                    start: start.to_vec(),
+                    shape: shape.to_vec(),
+                    tau_abs,
+                });
+            }
+            ShardIndex::Components { .. } => {
+                return Err(Error::invalid(
+                    "shard writer: push_block on a components-kind shard",
+                ))
+            }
+        }
+        self.payload.extend_from_slice(blob);
+        Ok(())
+    }
+
+    /// Append one progressive component (components-kind shards only).
+    pub fn push_component(
+        &mut self,
+        stream: usize,
+        comp: usize,
+        err_after: f64,
+        bytes: &[u8],
+    ) -> Result<()> {
+        match &mut self.index {
+            ShardIndex::Components { entries } => {
+                entries.push(ComponentRef {
+                    stream,
+                    comp,
+                    offset: self.payload.len() as u64,
+                    len: bytes.len() as u64,
+                    err_after,
+                });
+            }
+            ShardIndex::Blocks { .. } => {
+                return Err(Error::invalid(
+                    "shard writer: push_component on a blocks-kind shard",
+                ))
+            }
+        }
+        self.payload.extend_from_slice(bytes);
+        Ok(())
+    }
+
+    /// Seal the shard: append the inner index and the fixed footer.
+    /// Errors if no blobs were appended (a valid shard holds at least
+    /// one entry).
+    pub fn finish(self) -> Result<Vec<u8>> {
+        if self.index.is_empty() {
+            return Err(Error::invalid("shard writer: finish with no entries"));
+        }
+        let mut out = self.payload;
+        let index_off = out.len() as u64;
+        let index = self.index.encode();
+        let index_len = index.len() as u64;
+        out.extend_from_slice(&index);
+        out.extend_from_slice(&index_off.to_le_bytes());
+        out.extend_from_slice(&index_len.to_le_bytes());
+        out.push(SHARD_VERSION);
+        out.extend_from_slice(SHARD_MAGIC);
+        Ok(out)
+    }
+}
+
+/// Coalesce inner ranges into maximal runs: sort by offset and merge
+/// every range that starts within `max_gap` bytes of the current run's
+/// end. With `max_gap = 0` only touching/overlapping ranges merge; a
+/// small positive gap trades a few wasted bytes for fewer ranged
+/// reads. Returns the merged `(offset, len)` runs in offset order.
+pub fn coalesce_ranges(mut ranges: Vec<(u64, u64)>, max_gap: u64) -> Vec<(u64, u64)> {
+    ranges.retain(|&(_, len)| len > 0);
+    if ranges.is_empty() {
+        return ranges;
+    }
+    ranges.sort_unstable();
+    let mut out: Vec<(u64, u64)> = Vec::with_capacity(ranges.len());
+    for (offset, len) in ranges {
+        if let Some(last) = out.last_mut() {
+            let run_end = last.0 + last.1;
+            if offset <= run_end.saturating_add(max_gap) {
+                let end = offset + len;
+                if end > run_end {
+                    last.1 = end - last.0;
+                }
+                continue;
+            }
+        }
+        out.push((offset, len));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_components() -> Vec<u8> {
+        let mut w = ShardWriter::components();
+        w.push_component(0, 0, 0.5, &[1, 2, 3]).unwrap();
+        w.push_component(0, 1, 0.25, &[4, 5]).unwrap();
+        w.push_component(1, 0, 0.5, &[6, 7, 8, 9]).unwrap();
+        w.finish().unwrap()
+    }
+
+    fn sample_blocks() -> Vec<u8> {
+        let mut w = ShardWriter::blocks(2);
+        w.push_block(0, &[0, 0], &[8, 8], 0.5, &[10, 11]).unwrap();
+        w.push_block(3, &[8, 0], &[9, 8], 0.5, &[12, 13, 14]).unwrap();
+        w.finish().unwrap()
+    }
+
+    #[test]
+    fn components_round_trip() {
+        let bytes = sample_components();
+        let (index, payload) = read_shard(&bytes).unwrap();
+        assert_eq!(payload, &[1, 2, 3, 4, 5, 6, 7, 8, 9]);
+        match index {
+            ShardIndex::Components { entries } => {
+                assert_eq!(entries.len(), 3);
+                assert_eq!(entries[0], ComponentRef {
+                    stream: 0,
+                    comp: 0,
+                    offset: 0,
+                    len: 3,
+                    err_after: 0.5,
+                });
+                assert_eq!((entries[2].stream, entries[2].comp), (1, 0));
+                assert_eq!((entries[2].offset, entries[2].len), (5, 4));
+            }
+            other => panic!("wrong kind: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn blocks_round_trip() {
+        let bytes = sample_blocks();
+        let (index, payload) = read_shard(&bytes).unwrap();
+        assert_eq!(payload, &[10, 11, 12, 13, 14]);
+        match index {
+            ShardIndex::Blocks { ndim, entries } => {
+                assert_eq!(ndim, 2);
+                assert_eq!(entries[1].block_id, 3);
+                assert_eq!(entries[1].start, vec![8, 0]);
+                assert_eq!(entries[1].shape, vec![9, 8]);
+                assert_eq!((entries[1].offset, entries[1].len), (2, 3));
+            }
+            other => panic!("wrong kind: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn footer_is_the_documented_21_bytes() {
+        let bytes = sample_components();
+        let flen = SHARD_FOOTER_BYTES as usize;
+        assert_eq!(flen, 21);
+        let tail = &bytes[bytes.len() - flen..];
+        assert_eq!(&tail[17..], b"MGSH");
+        assert_eq!(tail[16], SHARD_VERSION);
+        // payload is 9 bytes, so index_off = 9 LE
+        assert_eq!(&tail[0..8], &9u64.to_le_bytes());
+    }
+
+    #[test]
+    fn empty_writer_refused() {
+        assert!(ShardWriter::components().finish().is_err());
+        assert!(ShardWriter::blocks(3).finish().is_err());
+    }
+
+    #[test]
+    fn kind_mismatch_refused() {
+        let mut w = ShardWriter::components();
+        assert!(w.push_block(0, &[0], &[4], 0.5, &[1]).is_err());
+        let mut w = ShardWriter::blocks(1);
+        assert!(w.push_component(0, 0, 0.5, &[1]).is_err());
+        let mut w = ShardWriter::blocks(2);
+        assert!(w.push_block(0, &[0, 0, 0], &[4, 4, 4], 0.5, &[1]).is_err());
+    }
+
+    #[test]
+    fn truncations_rejected() {
+        for bytes in [sample_components(), sample_blocks()] {
+            for cut in 0..bytes.len() {
+                assert!(read_shard(&bytes[..cut]).is_err(), "cut at {cut}");
+            }
+        }
+    }
+
+    #[test]
+    fn bad_magic_and_version_rejected() {
+        let good = sample_components();
+        let mut bad = good.clone();
+        let n = bad.len();
+        bad[n - 1] ^= 0xFF;
+        assert!(matches!(
+            read_shard(&bad),
+            Err(Error::UnsupportedFormat(_))
+        ));
+        let mut bad = good.clone();
+        bad[n - 5] = SHARD_VERSION + 1;
+        assert!(matches!(
+            read_shard(&bad),
+            Err(Error::UnsupportedFormat(_))
+        ));
+    }
+
+    #[test]
+    fn footer_accounting_rejected() {
+        let good = sample_components();
+        let n = good.len();
+        // index_off one too large: payload + index + footer overruns
+        let mut bad = good.clone();
+        bad[n - 21..n - 13].copy_from_slice(&10u64.to_le_bytes());
+        assert!(read_shard(&bad).is_err());
+        // index_off one too small: trailing slack
+        let mut bad = good;
+        bad[n - 21..n - 13].copy_from_slice(&8u64.to_le_bytes());
+        assert!(read_shard(&bad).is_err());
+    }
+
+    #[test]
+    fn overlap_gap_and_overrun_rejected() {
+        // hand-build indexes that violate contiguity against a 5-byte
+        // payload and check each structural refusal
+        let cases: [(&str, Vec<ComponentRef>); 4] = [
+            (
+                "overlap",
+                vec![
+                    ComponentRef { stream: 0, comp: 0, offset: 0, len: 3, err_after: 0.5 },
+                    ComponentRef { stream: 0, comp: 1, offset: 2, len: 3, err_after: 0.25 },
+                ],
+            ),
+            (
+                "gap",
+                vec![
+                    ComponentRef { stream: 0, comp: 0, offset: 0, len: 2, err_after: 0.5 },
+                    ComponentRef { stream: 0, comp: 1, offset: 3, len: 2, err_after: 0.25 },
+                ],
+            ),
+            (
+                "nonzero first offset",
+                vec![ComponentRef { stream: 0, comp: 0, offset: 1, len: 4, err_after: 0.5 }],
+            ),
+            (
+                "short coverage",
+                vec![ComponentRef { stream: 0, comp: 0, offset: 0, len: 4, err_after: 0.5 }],
+            ),
+        ];
+        for (what, entries) in cases {
+            let index = ShardIndex::Components { entries }.encode();
+            assert!(read_index(&index, 5).is_err(), "{what} accepted");
+        }
+    }
+
+    #[test]
+    fn implausible_index_fields_rejected() {
+        // non-finite error bound
+        let index = ShardIndex::Components {
+            entries: vec![ComponentRef {
+                stream: 0,
+                comp: 0,
+                offset: 0,
+                len: 5,
+                err_after: f64::NAN,
+            }],
+        }
+        .encode();
+        assert!(read_index(&index, 5).is_err());
+        // extent < 2
+        let index = ShardIndex::Blocks {
+            ndim: 1,
+            entries: vec![BlockRef {
+                block_id: 0,
+                offset: 0,
+                len: 5,
+                start: vec![0],
+                shape: vec![1],
+                tau_abs: 0.5,
+            }],
+        }
+        .encode();
+        assert!(read_index(&index, 5).is_err());
+        // unknown kind byte
+        assert!(matches!(
+            read_index(&[3, 1], 0),
+            Err(Error::UnsupportedFormat(_))
+        ));
+        // trailing bytes
+        let mut index = ShardIndex::Components {
+            entries: vec![ComponentRef {
+                stream: 0,
+                comp: 0,
+                offset: 0,
+                len: 5,
+                err_after: 0.5,
+            }],
+        }
+        .encode();
+        index.push(0);
+        assert!(read_index(&index, 5).is_err());
+    }
+
+    #[test]
+    fn coalescing_merges_touching_and_gapped_runs() {
+        // unordered, with touching neighbours and a 2-byte gap
+        let ranges = vec![(10, 5), (0, 4), (4, 6), (17, 3), (30, 2)];
+        assert_eq!(coalesce_ranges(ranges.clone(), 0), vec![(0, 15), (17, 3), (30, 2)]);
+        assert_eq!(coalesce_ranges(ranges, 2), vec![(0, 20), (30, 2)]);
+        assert_eq!(coalesce_ranges(vec![], 0), Vec::<(u64, u64)>::new());
+        // zero-length ranges drop out
+        assert_eq!(coalesce_ranges(vec![(5, 0), (1, 2)], 0), vec![(1, 2)]);
+    }
+}

@@ -390,6 +390,132 @@ fn legacy_level_manifest_fuzz_never_panics() {
     std::fs::remove_dir_all(&dir).ok();
 }
 
+// ------------------------------------------------------------ MGSH shards
+
+/// A realistic components-kind shard: 12 variable-length components
+/// across 3 streams.
+fn sample_shard() -> Vec<u8> {
+    let mut w = mgardp::shard::ShardWriter::components();
+    let mut rng = Rng::new(0x5AAD);
+    for comp in 0..12usize {
+        let n = 1 + rng.below(40);
+        let bytes: Vec<u8> = (0..n).map(|_| rng.below(256) as u8).collect();
+        w.push_component(comp / 4, comp % 4, 1.0 / (comp as f64 + 1.0), &bytes)
+            .unwrap();
+    }
+    w.finish().unwrap()
+}
+
+#[test]
+fn truncated_shard_objects_rejected() {
+    use mgardp::shard::read_shard;
+    let bytes = sample_shard();
+    assert!(read_shard(&bytes).is_ok());
+    // every possible truncation point must error, never panic
+    for cut in 0..bytes.len() {
+        assert!(read_shard(&bytes[..cut]).is_err(), "cut at {cut}");
+    }
+}
+
+#[test]
+fn corrupted_shard_objects_never_panic_or_pass_with_bad_geometry() {
+    use mgardp::shard::read_shard;
+    let bytes = sample_shard();
+    let mut rng = Rng::new(0x5D0C);
+    for _ in 0..2000 {
+        let mut bad = bytes.clone();
+        let pos = rng.below(bad.len());
+        bad[pos] ^= 1 << rng.below(8);
+        // Err or a shard whose index still tiles the payload: a parse
+        // that succeeds structurally cannot contain overlapping, gapped
+        // or out-of-extent inner ranges
+        if let Ok((index, payload)) = read_shard(&bad) {
+            let mut expect = 0u64;
+            for i in 0..index.len() {
+                let (offset, len) = index.range(i);
+                assert_eq!(offset, expect, "surviving index overlaps or gaps");
+                expect = offset + len;
+            }
+            assert_eq!(expect, payload.len() as u64);
+        }
+    }
+}
+
+#[test]
+fn random_inner_index_geometries_must_tile_or_be_rejected() {
+    // hand-encoded components indexes with randomized (offset, len)
+    // geometry: `read_index` accepts exactly the contiguous tilings of
+    // the declared payload and refuses everything else — overlap, gap,
+    // nonzero first offset, short or long coverage
+    use mgardp::shard::read_index;
+    let mut rng = Rng::new(0x6E0D);
+    for trial in 0..800 {
+        let n = 1 + rng.below(6);
+        let mut index = vec![2u8, n as u8]; // kind = components, N (< 128)
+        let mut ranges = Vec::new();
+        for i in 0..n {
+            let offset = rng.below(100) as u64;
+            let len = rng.below(60) as u64;
+            // all fields < 128, so each is a single varint byte
+            index.extend_from_slice(&[i as u8, i as u8, offset as u8, len as u8]);
+            index.extend_from_slice(&0.5f64.to_le_bytes());
+            ranges.push((offset, len));
+        }
+        let payload_len = (80 + rng.below(60)) as u64;
+        let tiles = {
+            let mut expect = 0u64;
+            let mut ok = true;
+            for &(o, l) in &ranges {
+                if o != expect {
+                    ok = false;
+                    break;
+                }
+                expect = o + l;
+            }
+            ok && expect == payload_len
+        };
+        assert_eq!(
+            read_index(&index, payload_len).is_ok(),
+            tiles,
+            "trial {trial}: ranges {ranges:?} over payload {payload_len}"
+        );
+    }
+}
+
+#[test]
+fn hostile_shard_refused_at_open_with_no_payload_reads() {
+    // an overlapping inner index sealed with a perfectly well-formed
+    // footer: the partial decoder must refuse it at open time, after
+    // exactly its three metadata reads (size, footer tail, index) and
+    // zero payload reads
+    use mgardp::shard::{ShardPartialDecoder, SHARD_MAGIC, SHARD_VERSION};
+    use mgardp::storage::{MemoryStorage, MockStorage, Storage};
+    use std::sync::Arc;
+    let payload = vec![0u8; 10];
+    let mut index = vec![2u8, 2]; // kind = components, N = 2
+    // entry 0 covers [0, 6), entry 1 [4, 10): overlap, yet total = 10
+    for &(s, c, o, l) in &[(0u8, 0u8, 0u8, 6u8), (0, 1, 4, 6)] {
+        index.extend_from_slice(&[s, c, o, l]);
+        index.extend_from_slice(&0.5f64.to_le_bytes());
+    }
+    let mut object = payload;
+    let index_off = object.len() as u64;
+    object.extend_from_slice(&index);
+    object.extend_from_slice(&index_off.to_le_bytes());
+    object.extend_from_slice(&(index.len() as u64).to_le_bytes());
+    object.push(SHARD_VERSION);
+    object.extend_from_slice(SHARD_MAGIC);
+    let mem = Arc::new(MemoryStorage::new());
+    mem.write("s/shard_00000.mgsh", &object).unwrap();
+    let mock = Arc::new(MockStorage::new(mem, std::time::Duration::ZERO, 0));
+    let opened = ShardPartialDecoder::open(
+        Arc::clone(&mock) as Arc<dyn Storage>,
+        "s/shard_00000.mgsh",
+    );
+    assert!(opened.is_err(), "overlapping inner index accepted");
+    assert_eq!(mock.ops(), 3, "hostile payload was read");
+}
+
 #[test]
 fn oversized_counts_do_not_allocate() {
     // a chunked container whose block count field claims 2^40 blocks must be

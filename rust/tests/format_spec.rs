@@ -11,6 +11,7 @@ use mgardp::coordinator::refactor::{Manifest, REFACTOR_MANIFEST_VERSION};
 use mgardp::progressive::{
     ProgressiveManifest, StreamMeta, PROGRESSIVE_MANIFEST_VERSION,
 };
+use mgardp::shard::{read_shard, ShardIndex, ShardWriter, SHARD_VERSION};
 
 /// The adaptive worked example of docs/FORMAT.md, 105 bytes.
 const ADAPTIVE_EXAMPLE_HEX: &str = "\
@@ -223,6 +224,81 @@ fn level_manifest_worked_example_matches_emitter() {
     assert_eq!(Manifest::from_bytes(&bytes[5..]).unwrap(), m);
 }
 
+/// The MGSH components-kind worked example of docs/FORMAT.md, 50 bytes:
+/// two components (stream 0, comps 0 and 1) of 2 and 1 payload bytes
+/// with err_after 0.5 and 0.25.
+const SHARD_COMPONENTS_EXAMPLE_HEX: &str = "\
+aa bb cc 02 02 00 00 00 02 00 00 00 00 00 00 e0
+3f 00 01 02 01 00 00 00 00 00 00 d0 3f 03 00 00
+00 00 00 00 00 1a 00 00 00 00 00 00 00 01 4d 47
+53 48";
+
+/// The MGSH blocks-kind worked example of docs/FORMAT.md, 39 bytes: one
+/// rank-1 block (id 0, start [4], shape [5], tau 0.5) with a 2-byte blob.
+const SHARD_BLOCKS_EXAMPLE_HEX: &str = "\
+ab cd 01 01 01 00 00 02 04 05 00 00 00 00 00 00
+e0 3f 02 00 00 00 00 00 00 00 10 00 00 00 00 00
+00 00 01 4d 47 53 48";
+
+#[test]
+fn shard_components_worked_example_matches_emitter() {
+    let mut w = ShardWriter::components();
+    w.push_component(0, 0, 0.5, &[0xAA, 0xBB]).unwrap();
+    w.push_component(0, 1, 0.25, &[0xCC]).unwrap();
+    let bytes = w.finish().unwrap();
+    assert_eq!(
+        bytes,
+        parse_hex(SHARD_COMPONENTS_EXAMPLE_HEX),
+        "spec hex drifted from the shard emitter"
+    );
+    // the documented bytes parse back to the documented entries
+    let (index, payload) = read_shard(&bytes).unwrap();
+    assert_eq!(payload, &[0xAA, 0xBB, 0xCC]);
+    match index {
+        ShardIndex::Components { entries } => {
+            assert_eq!(entries.len(), 2);
+            assert_eq!((entries[0].offset, entries[0].len), (0, 2));
+            assert_eq!(entries[0].err_after, 0.5);
+            assert_eq!((entries[1].stream, entries[1].comp), (0, 1));
+            assert_eq!((entries[1].offset, entries[1].len), (2, 1));
+            assert_eq!(entries[1].err_after, 0.25);
+        }
+        other => panic!("wrong index kind: {other:?}"),
+    }
+    // footer fields sit where the spec says: trailing magic, version
+    // before it, index_off/index_len LE at the footer start
+    let n = bytes.len();
+    assert_eq!(&bytes[n - 4..], b"MGSH");
+    assert_eq!(bytes[n - 5], SHARD_VERSION);
+    assert_eq!(&bytes[n - 21..n - 13], &3u64.to_le_bytes());
+    assert_eq!(&bytes[n - 13..n - 5], &26u64.to_le_bytes());
+}
+
+#[test]
+fn shard_blocks_worked_example_matches_emitter() {
+    let mut w = ShardWriter::blocks(1);
+    w.push_block(0, &[4], &[5], 0.5, &[0xAB, 0xCD]).unwrap();
+    let bytes = w.finish().unwrap();
+    assert_eq!(
+        bytes,
+        parse_hex(SHARD_BLOCKS_EXAMPLE_HEX),
+        "spec hex drifted from the shard emitter"
+    );
+    let (index, payload) = read_shard(&bytes).unwrap();
+    assert_eq!(payload, &[0xAB, 0xCD]);
+    match index {
+        ShardIndex::Blocks { ndim, entries } => {
+            assert_eq!(ndim, 1);
+            assert_eq!(entries.len(), 1);
+            assert_eq!(entries[0].block_id, 0);
+            assert_eq!(entries[0].start, vec![4]);
+            assert_eq!(entries[0].shape, vec![5]);
+            assert_eq!(entries[0].tau_abs, 0.5);
+        }
+        other => panic!("wrong index kind: {other:?}"),
+    }
+}
+
 #[test]
 fn format_md_contains_exactly_these_bytes() {
     let doc = include_str!(concat!(env!("CARGO_MANIFEST_DIR"), "/docs/FORMAT.md"));
@@ -236,6 +312,8 @@ fn format_md_contains_exactly_these_bytes() {
         ("fixed", FIXED_EXAMPLE_HEX),
         ("progressive manifest", PROGRESSIVE_MANIFEST_EXAMPLE_HEX),
         ("level manifest", LEVEL_MANIFEST_EXAMPLE_HEX),
+        ("shard components", SHARD_COMPONENTS_EXAMPLE_HEX),
+        ("shard blocks", SHARD_BLOCKS_EXAMPLE_HEX),
     ] {
         let needle: String = hex.split_whitespace().collect();
         assert!(

@@ -142,6 +142,55 @@ fn oversize_declarations_refused_before_allocation() {
 }
 
 #[test]
+fn huge_declared_indices_never_silently_truncate() {
+    // decode uses checked u64 → usize conversion (`WireReader::usize`):
+    // a declared index above u32::MAX must either round-trip to exactly
+    // the declared value (64-bit targets) or fail with a structured
+    // error (32-bit targets) — never alias a small index via `as usize`
+    // truncation. The frame is patched at the byte level so the test is
+    // meaningful even where `usize` cannot represent the value.
+    let stream_decl = (1u64 << 40) | 0x1234;
+    let comp_decl = (1u64 << 41) | 0x5678;
+    let mut p = Request::Fetch { stream: 0, comp: 0 }.encode();
+    let n = p.len();
+    p[n - 16..n - 8].copy_from_slice(&stream_decl.to_le_bytes());
+    p[n - 8..].copy_from_slice(&comp_decl.to_le_bytes());
+    match Request::decode(&p) {
+        Ok(Request::Fetch { stream, comp }) => {
+            assert_eq!(stream as u64, stream_decl, "stream index truncated");
+            assert_eq!(comp as u64, comp_decl, "comp index truncated");
+        }
+        Ok(other) => panic!("decoded the patched Fetch as {other:?}"),
+        Err(_) => assert!(
+            usize::try_from(stream_decl).is_err(),
+            "a target whose usize holds the value must decode it"
+        ),
+    }
+}
+
+#[test]
+fn live_daemon_answers_out_of_range_fetch_with_err() {
+    // a Fetch whose (checked-decoded) indices are far outside the
+    // manifest is answered with a structured ERR frame — the huge index
+    // must reach the range check intact, not wrap into a valid one
+    let server = start_server();
+    let mut stream = connect(&server);
+    let mut p = Request::Fetch { stream: 0, comp: 0 }.encode();
+    let n = p.len();
+    p[n - 16..n - 8].copy_from_slice(&((1u64 << 40) + 2).to_le_bytes());
+    p[n - 8..].copy_from_slice(&((1u64 << 41) + 5).to_le_bytes());
+    write_frame(&mut stream, &p).unwrap();
+    let resp = read_frame(&mut stream).unwrap().expect("an ERR frame");
+    assert_eq!(resp[0], SERVE_RESP_ERR);
+    assert!(parse_response(&resp).is_err());
+    // the same connection still serves a good request afterwards
+    write_frame(&mut stream, &Request::Stats.encode()).unwrap();
+    let resp = read_frame(&mut stream).unwrap().expect("stats after err");
+    assert_eq!(resp[0], SERVE_RESP_OK);
+    assert_still_serving(&server);
+}
+
+#[test]
 fn trailing_garbage_rejected_on_every_op() {
     let mut rng = Rng::new(0x7A11);
     for req in all_requests() {

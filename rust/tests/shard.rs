@@ -1,0 +1,236 @@
+//! Differential suite for the MGSH sharded layouts: a sharded store must
+//! be indistinguishable from the unsharded one — byte-identical outputs
+//! and identical plans at every tolerance, over every storage backend —
+//! while issuing provably fewer ranged reads for (region, τ) queries
+//! than the one-read-per-piece layout it replaces.
+
+use mgardp::chunk::ChunkedConfig;
+use mgardp::compressors::{decompress_any, Compressor, MgardPlus, Tolerance};
+use mgardp::coordinator::refactor::RefactorStore;
+use mgardp::data::synth;
+use mgardp::metrics::linf_error;
+use mgardp::serve::{RemoteField, ServeClient, ServeConfig, Server};
+use mgardp::shard::ShardedChunkStore;
+use mgardp::storage::{MemoryStorage, MockStorage, Storage};
+use mgardp::stream::StreamingDecompressor;
+use mgardp::tensor::Tensor;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn temp_dir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("mgardp_shard_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// Sharded vs blob layout of the same 3-D refactoring: identical plans
+/// and byte-identical reconstructions at every tolerance, over the
+/// file, memory and simulated-remote backends.
+#[test]
+fn sharded_layout_is_byte_identical_to_blob_layout_across_backends() {
+    let t = synth::smooth_test_field(&[12, 13, 14]);
+    let taus = [0.5, 0.05, 1e-3, f64::MIN_POSITIVE];
+    let dir = temp_dir("diff");
+    let mut pairs: Vec<(&str, RefactorStore, RefactorStore)> = vec![
+        (
+            "memory",
+            RefactorStore::with_storage(Arc::new(MemoryStorage::new())),
+            RefactorStore::with_storage(Arc::new(MemoryStorage::new())),
+        ),
+        (
+            "mock",
+            RefactorStore::with_storage(Arc::new(MockStorage::new(
+                Arc::new(MemoryStorage::new()),
+                Duration::ZERO,
+                0,
+            ))),
+            RefactorStore::with_storage(Arc::new(MockStorage::new(
+                Arc::new(MemoryStorage::new()),
+                Duration::ZERO,
+                0,
+            ))),
+        ),
+    ];
+    pairs.push((
+        "file",
+        RefactorStore::create(dir.join("blob")).unwrap(),
+        RefactorStore::create(dir.join("sharded")).unwrap(),
+    ));
+    for (backend, blob, sharded) in &pairs {
+        blob.write_field_progressive("u", &t, None, 3).unwrap();
+        sharded
+            .write_field_progressive_sharded("u", &t, None, 3, 2048)
+            .unwrap();
+        // the manifest is layout-independent
+        assert_eq!(
+            blob.storage().read("u/manifest.bin").unwrap(),
+            sharded.storage().read("u/manifest.bin").unwrap(),
+            "{backend}: manifests diverge"
+        );
+        let a = blob.progressive("u").unwrap();
+        let b = sharded.progressive("u").unwrap();
+        assert!(!a.is_sharded() && b.is_sharded(), "{backend}");
+        for tau in taus {
+            let (xa, pa): (Tensor<f32>, _) = a.retrieve(tau).unwrap();
+            let (xb, pb): (Tensor<f32>, _) = b.retrieve(tau).unwrap();
+            assert_eq!(pa, pb, "{backend} τ {tau:.3e}: plans diverge");
+            assert_eq!(
+                xa.data(),
+                xb.data(),
+                "{backend} τ {tau:.3e}: outputs diverge"
+            );
+            assert!(
+                linf_error(t.data(), xb.data()) <= tau,
+                "{backend} τ {tau:.3e}: certificate violated"
+            );
+        }
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The read-count claim for the progressive layout: the blob layout
+/// pays one ranged read per planned component; the sharded layout
+/// coalesces each stream's plan prefix into a single run.
+#[test]
+fn sharded_tolerance_retrieval_reads_fewer_ranges_than_per_component() {
+    let t = synth::smooth_test_field(&[12, 13, 14]);
+    let mock_blob = Arc::new(MockStorage::new(
+        Arc::new(MemoryStorage::new()),
+        Duration::ZERO,
+        0,
+    ));
+    let blob = RefactorStore::with_storage(Arc::clone(&mock_blob) as Arc<dyn Storage>);
+    blob.write_field_progressive("u", &t, None, 3).unwrap();
+    let mock_sh = Arc::new(MockStorage::new(
+        Arc::new(MemoryStorage::new()),
+        Duration::ZERO,
+        0,
+    ));
+    let sharded = RefactorStore::with_storage(Arc::clone(&mock_sh) as Arc<dyn Storage>);
+    sharded
+        .write_field_progressive_sharded("u", &t, None, 3, 1 << 20)
+        .unwrap();
+    let fa = blob.progressive("u").unwrap();
+    let fb = sharded.progressive("u").unwrap();
+    let nstreams = fa.manifest().streams.len();
+    let tau = 1e-3;
+
+    let mut ra = fa.reader::<f32>().unwrap();
+    let plan_a = fa.plan(tau, None).unwrap();
+    let ncomps = plan_a.components_beyond(&ra.fetched()).len();
+    assert!(
+        ncomps > nstreams,
+        "fixture too small: plan covers {ncomps} components over {nstreams} streams"
+    );
+    let before = mock_blob.ops();
+    fa.refine(&mut ra, &plan_a).unwrap();
+    let blob_reads = mock_blob.ops() - before;
+    assert_eq!(
+        blob_reads, ncomps as u64,
+        "blob layout must pay one ranged read per component"
+    );
+
+    let mut rb = fb.reader::<f32>().unwrap();
+    let plan_b = fb.plan(tau, None).unwrap();
+    assert_eq!(plan_a, plan_b);
+    let before = mock_sh.ops();
+    fb.refine(&mut rb, &plan_b).unwrap();
+    let sharded_reads = mock_sh.ops() - before;
+    assert!(
+        sharded_reads < blob_reads,
+        "sharded retrieval issued {sharded_reads} reads, blob layout {blob_reads}"
+    );
+    assert!(
+        sharded_reads <= nstreams as u64,
+        "expected at most one coalesced run per stream prefix, got {sharded_reads}"
+    );
+    // and the cheaper fetch reconstructs the identical field
+    assert_eq!(
+        ra.reconstruct().unwrap().data(),
+        rb.reconstruct().unwrap().data()
+    );
+}
+
+/// Region decode over a sharded 3-D chunked container: byte-identical
+/// to the streaming region decoder, with fewer ranged reads than the
+/// one-read-per-block lower bound of a per-object layout, and shards
+/// holding no intersecting block never touched.
+#[test]
+fn sharded_chunk_region_decode_matches_streaming_with_fewer_reads() {
+    let t = synth::smooth_test_field(&[24, 20, 16]);
+    let codec = MgardPlus::default().chunked(ChunkedConfig {
+        block_shape: vec![8, 8, 8],
+        threads: 1,
+        ..Default::default()
+    });
+    let container = codec.compress(&t, Tolerance::Rel(1e-3)).unwrap();
+    let mem = Arc::new(MemoryStorage::new());
+    let nshards = ShardedChunkStore::write(&*mem, "c", &container, 2048).unwrap();
+    assert!(nshards > 1, "fixture too small: one shard defeats the test");
+    let mock = Arc::new(MockStorage::new(mem, Duration::ZERO, 0));
+    let store = ShardedChunkStore::open(Arc::clone(&mock) as Arc<dyn Storage>, "c").unwrap();
+    assert_eq!(store.nshards(), nshards);
+
+    // a seam-crossing region intersecting a 3×2×2 sub-grid of blocks
+    let (start, shape) = ([5usize, 3, 2], [14usize, 12, 10]);
+    let nhit = store
+        .index()
+        .entries
+        .iter()
+        .filter(|e| {
+            (0..3).all(|d| {
+                start[d] < e.start[d] + e.shape[d] && e.start[d] < start[d] + shape[d]
+            })
+        })
+        .count();
+    assert!(nhit >= 8, "region only hits {nhit} blocks");
+    let before = mock.ops();
+    let region: Tensor<f32> = store.decompress_region(&start, &shape).unwrap();
+    let reads = mock.ops() - before;
+    assert!(
+        reads < nhit as u64,
+        "sharded region decode issued {reads} reads over {nhit} intersecting blocks \
+         — no better than one object per block"
+    );
+
+    // byte-identical to the streaming decoder over the unsharded container
+    let mut d = StreamingDecompressor::open(std::io::Cursor::new(container.clone())).unwrap();
+    let direct: Tensor<f32> = d.decompress_region(&start, &shape).unwrap();
+    assert_eq!(region.data(), direct.data());
+    // the crop honours the container tolerance pointwise
+    let tau = 1e-3 * t.value_range();
+    let truth = t.block(&start, &shape).unwrap();
+    assert!(linf_error(truth.data(), region.data()) <= tau * (1.0 + 1e-6));
+    // and the full-field decode matches the in-core decoder byte for byte
+    let full: Tensor<f32> = store.decompress().unwrap();
+    let base: Tensor<f32> = decompress_any(&container).unwrap();
+    assert_eq!(full.data(), base.data());
+}
+
+/// The serve daemon over a sharded field: the cache keys name physical
+/// shard ranges, plans and certificates are preserved end to end, and
+/// server-side region retrieval works unchanged.
+#[test]
+fn serve_daemon_over_a_sharded_field_preserves_certificates() {
+    let t = synth::smooth_test_field(&[17, 18]);
+    let store = RefactorStore::with_storage(Arc::new(MemoryStorage::new()));
+    store
+        .write_field_progressive_sharded("u", &t, None, 3, 1024)
+        .unwrap();
+    let field = store.progressive("u").unwrap();
+    assert!(field.is_sharded());
+    let server = Server::start(field, &ServeConfig::default()).unwrap();
+
+    let mut remote: RemoteField<f32> = RemoteField::open(server.addr()).unwrap();
+    let (back, plan) = remote.refine(1e-3).unwrap();
+    assert!(plan.certified_bound <= 1e-3);
+    assert!(linf_error(t.data(), back.data()) <= 1e-3);
+
+    // server-side region retrieve over the sharded layout
+    let mut client = ServeClient::connect(server.addr()).unwrap();
+    let (crop, bound): (Tensor<f32>, f64) = client.retrieve(0.05, Some(&[(3, 9), (4, 8)])).unwrap();
+    assert!(bound <= 0.05);
+    assert_eq!(crop.shape(), &[9, 8]);
+    let truth = t.block(&[3, 4], &[9, 8]).unwrap();
+    assert!(linf_error(truth.data(), crop.data()) <= 0.05);
+}

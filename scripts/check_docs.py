@@ -11,7 +11,8 @@ Two checks, both dependency-free (stdlib only):
      * docs/FORMAT.md — chunked sub-versions and tiling policies
        (rust/src/chunk/container.rs), refactor/progressive manifest
        versions (rust/src/coordinator/refactor.rs,
-       rust/src/progressive/manifest.rs);
+       rust/src/progressive/manifest.rs), shard object constants
+       (rust/src/shard/mod.rs);
      * docs/SERVING.md — serve wire-protocol version, op and status
        bytes (rust/src/serve/protocol.rs);
      * docs/OBSERVABILITY.md — exposition format version, histogram
@@ -50,6 +51,10 @@ CONST_GROUPS = [
             (
                 ROOT / "rust" / "src" / "progressive" / "manifest.rs",
                 r"PROGRESSIVE_MANIFEST_\w+",
+            ),
+            (
+                ROOT / "rust" / "src" / "shard" / "mod.rs",
+                r"SHARD_\w+",
             ),
         ],
     ),

@@ -54,6 +54,12 @@
 #                     repeat over the mock-latency backend with transient
 #                     failure injection; clean protocol shutdown under a
 #                     hard timeout
+#   shard smoke       scripts/shard_smoke.sh — refactor a 3-D field into
+#                     the per-object and the MGSH sharded layout, assert
+#                     byte-identical tolerance retrieval with strictly
+#                     fewer storage reads (counted via --profile-json),
+#                     region retrieval certificates local and over the
+#                     serve daemon
 set -euo pipefail
 
 cd "$(dirname "$0")/.."
@@ -118,6 +124,12 @@ bash scripts/profile_smoke.sh
 
 step "serve smoke (concurrent error-bounded retrieval daemon)"
 bash scripts/serve_smoke.sh
+
+step "shard smoke (MGSH sharded layout: fewer reads, same bytes)"
+bash scripts/shard_smoke.sh
+
+step "shard mirror (toolchain-free PR-10 validation)"
+python3 scripts/validate_pr10.py
 
 if [ "$run_msrv" = 1 ]; then
   step "MSRV build + test ($MSRV)"

@@ -1,0 +1,173 @@
+#!/usr/bin/env bash
+# Shard smoke: the acceptance scenario for the MGSH sharded layout, end to
+# end and against the real binary.
+#
+#   1. generate a small deterministic 3-D f32 field and refactor it twice:
+#      once into the per-object (components.bin) progressive layout, once
+#      into the sharded layout (`refactor --shard-size`);
+#   2. retrieve at the same tolerance from both stores: the outputs must
+#      be byte-identical, satisfy the certified `‖u−ũ‖∞ ≤ τ` bound
+#      against the raw input, and — counted via the `--profile-json`
+#      storage.read span — the sharded store must issue strictly fewer
+#      storage reads than the per-object store (the point of the layout);
+#   3. region retrieval (`--region`/`--region-shape`) from the sharded
+#      store: the crop must satisfy the same pointwise bound against the
+#      cropped raw field;
+#   4. serve the sharded store with `mgardp serve`: a remote client's
+#      full retrieve and a remote region retrieve must both meet their
+#      certificates — the wire protocol is layout-blind.
+#
+# Every wait in this script is bounded; nothing can hang CI.
+set -euo pipefail
+
+cd "$(dirname "$0")/.."
+
+BIN=${MGARDP_BIN:-target/release/mgardp}
+if [ ! -x "$BIN" ]; then
+  echo "==> building release binary for the shard smoke"
+  cargo build --release
+fi
+
+WORK=$(mktemp -d "${TMPDIR:-/tmp}/mgardp_shard_smoke.XXXXXX")
+SERVE_PID=""
+cleanup() {
+  [ -n "$SERVE_PID" ] && kill "$SERVE_PID" 2>/dev/null || true
+  rm -rf "$WORK"
+}
+trap cleanup EXIT
+
+SHAPE=20x18x16
+RAW="$WORK/u.f32"
+
+echo "==> synthesizing a $SHAPE test field"
+python3 - "$RAW" <<'PY'
+import math, struct, sys
+nz, ny, nx = 20, 18, 16
+vals = [
+    math.sin(i / 3.0) * math.cos(j / 4.0) + 0.4 * math.sin((i + j + 2 * k) / 6.0)
+    for i in range(nz)
+    for j in range(ny)
+    for k in range(nx)
+]
+with open(sys.argv[1], "wb") as f:
+    f.write(struct.pack(f"<{len(vals)}f", *vals))
+PY
+
+echo "==> refactoring into per-object and sharded progressive stores"
+"$BIN" refactor --input "$RAW" --shape "$SHAPE" --store "$WORK/blob" \
+  --field u --progressive
+"$BIN" refactor --input "$RAW" --shape "$SHAPE" --store "$WORK/shard" \
+  --field u --progressive --shard-size 16K
+
+# layout: the sharded store has MGSH objects and no components.bin
+[ -f "$WORK/blob/u/components.bin" ] || {
+  echo "FAIL: per-object store is missing components.bin" >&2; exit 1; }
+[ ! -e "$WORK/shard/u/components.bin" ] || {
+  echo "FAIL: sharded store still has a components.bin" >&2; exit 1; }
+ls "$WORK/shard/u/"shard_*.mgsh >/dev/null 2>&1 || {
+  echo "FAIL: sharded store has no shard_*.mgsh objects" >&2
+  ls -la "$WORK/shard/u" >&2; exit 1; }
+NSHARDS=$(ls "$WORK/shard/u/"shard_*.mgsh | wc -l)
+echo "    sharded layout: $NSHARDS MGSH object(s)"
+
+# $1 = reconstruction, $2 = tolerance, $3 = reference (default: full raw)
+check_linf() {
+  python3 - "${3:-$RAW}" "$1" "$2" <<'PY'
+import struct, sys
+ref_path, got_path, tau = sys.argv[1], sys.argv[2], float(sys.argv[3])
+def load(p):
+    b = open(p, "rb").read()
+    return struct.unpack(f"<{len(b) // 4}f", b)
+ref, got = load(ref_path), load(got_path)
+assert len(ref) == len(got), f"size mismatch: {len(ref)} vs {len(got)}"
+err = max(abs(a - b) for a, b in zip(ref, got))
+assert err <= tau, f"L∞ {err:.6g} exceeds τ {tau:.6g}"
+print(f"    τ {tau:<8g} L∞ {err:.3e}  OK")
+PY
+}
+
+# $1 = profile json: print the storage.read span count
+read_count() {
+  python3 - "$1" <<'PY'
+import json, sys
+doc = json.load(open(sys.argv[1]))
+counts = [s["count"] for s in doc["stages"] if s["name"] == "storage.read"]
+assert counts, f"no storage.read span in {sys.argv[1]}: {doc['stages']}"
+print(counts[0])
+PY
+}
+
+TAU=0.01
+echo "==> tolerance retrieval from both layouts (τ = $TAU)"
+"$BIN" retrieve --store "$WORK/blob" --field u --tolerance "$TAU" \
+  --output "$WORK/out_blob.f32" --profile-json "$WORK/prof_blob.json"
+"$BIN" retrieve --store "$WORK/shard" --field u --tolerance "$TAU" \
+  --output "$WORK/out_shard.f32" --profile-json "$WORK/prof_shard.json"
+cmp "$WORK/out_blob.f32" "$WORK/out_shard.f32" || {
+  echo "FAIL: sharded retrieval is not byte-identical to per-object" >&2; exit 1; }
+check_linf "$WORK/out_shard.f32" "$TAU"
+
+BLOB_READS=$(read_count "$WORK/prof_blob.json")
+SHARD_READS=$(read_count "$WORK/prof_shard.json")
+echo "    storage reads: per-object $BLOB_READS, sharded $SHARD_READS"
+if [ "$SHARD_READS" -ge "$BLOB_READS" ]; then
+  echo "FAIL: sharded retrieval did not issue fewer storage reads" >&2
+  exit 1
+fi
+
+echo "==> region retrieval from the sharded store"
+# crop [3,4,5] + [10,8,6] out of the 20x18x16 field
+"$BIN" retrieve --store "$WORK/shard" --field u --tolerance 0.02 \
+  --region 3x4x5 --region-shape 10x8x6 --output "$WORK/crop.f32"
+python3 - "$RAW" "$WORK/crop_ref.f32" <<'PY'
+import struct, sys
+nz, ny, nx = 20, 18, 16
+b = open(sys.argv[1], "rb").read()
+v = struct.unpack(f"<{len(b) // 4}f", b)
+crop = [
+    v[(3 + i) * ny * nx + (4 + j) * nx + (5 + k)]
+    for i in range(10)
+    for j in range(8)
+    for k in range(6)
+]
+with open(sys.argv[2], "wb") as f:
+    f.write(struct.pack(f"<{len(crop)}f", *crop))
+PY
+check_linf "$WORK/crop.f32" 0.02 "$WORK/crop_ref.f32"
+
+echo "==> serving the sharded store"
+await_addr() {
+  for _ in $(seq 1 200); do
+    if [ -s "$1" ]; then cat "$1"; return 0; fi
+    sleep 0.1
+  done
+  echo "FAIL: daemon never published its address" >&2
+  cat "$2" >&2
+  return 1
+}
+"$BIN" serve --store "$WORK/shard" --field u --addr 127.0.0.1:0 \
+  --addr-file "$WORK/addr" >"$WORK/serve.log" 2>&1 &
+SERVE_PID=$!
+ADDR=$(await_addr "$WORK/addr" "$WORK/serve.log")
+echo "    daemon at $ADDR"
+
+"$BIN" retrieve --remote "$ADDR" --tolerance "$TAU" --output "$WORK/remote.f32"
+cmp "$WORK/out_blob.f32" "$WORK/remote.f32" || {
+  echo "FAIL: remote sharded retrieval diverges from the local one" >&2; exit 1; }
+check_linf "$WORK/remote.f32" "$TAU"
+"$BIN" retrieve --remote "$ADDR" --tolerance 0.02 \
+  --region 3x4x5 --region-shape 10x8x6 --output "$WORK/remote_crop.f32"
+check_linf "$WORK/remote_crop.f32" 0.02 "$WORK/crop_ref.f32"
+
+"$BIN" serve-ctl --addr "$ADDR" --shutdown
+for _ in $(seq 1 150); do
+  kill -0 "$SERVE_PID" 2>/dev/null || { SERVE_PID=""; break; }
+  sleep 0.1
+done
+[ -z "$SERVE_PID" ] || {
+  echo "FAIL: daemon still alive after shutdown; killing it" >&2
+  kill -9 "$SERVE_PID" 2>/dev/null || true
+  exit 1
+}
+
+echo "==> shard smoke passed"
